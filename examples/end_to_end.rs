@@ -1,0 +1,137 @@
+//! END-TO-END DRIVER: exercises every layer of the system on a real
+//! small workload and reports the paper's headline metrics.
+//!
+//! 1. L1/L2 artifacts (JAX + Pallas, AOT) are loaded through the PJRT
+//!    runtime and cross-checked against the native rust NFFT engine;
+//! 2. the coordinator schedules eigensolve / SSL-solve / hybrid-Nystrom
+//!    jobs over the engine;
+//! 3. the headline comparison — NFFT-Lanczos vs direct dense Lanczos vs
+//!    both Nystrom variants — runs on a 2000-point spiral graph with
+//!    eigenvalue errors and timings (the paper's Fig 3 story at one n).
+//!
+//!     cargo run --release --example end_to_end
+
+use nfft_krylov::bench_harness::harness::max_eigenvalue_error;
+use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
+use nfft_krylov::coordinator::jobs::{Job, JobResult};
+use nfft_krylov::coordinator::Coordinator;
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::data::spiral::{generate, SpiralParams};
+use nfft_krylov::fastsum::{FastsumParams, Kernel};
+use nfft_krylov::graph::LinearOperator;
+use nfft_krylov::krylov::cg::CgOptions;
+use nfft_krylov::krylov::lanczos::{lanczos_eigs, LanczosOptions};
+use nfft_krylov::nystrom::hybrid::HybridNystromOptions;
+use nfft_krylov::nystrom::traditional::{traditional_nystrom, TraditionalNystromOptions};
+use std::time::Instant;
+
+fn main() {
+    let n = 2000;
+    let sigma = 3.5;
+    let mut rng = Rng::seed_from(42);
+    let ds = generate(SpiralParams { per_class: n / 5, ..Default::default() }, &mut rng);
+    println!("=== end-to-end: spiral n = {n}, sigma = {sigma} ===\n");
+    let kernel = Kernel::Gaussian { sigma };
+    let mut reg = EngineRegistry::new("artifacts");
+    let spec = |engine| OperatorSpec {
+        points: ds.points.clone(),
+        d: 3,
+        kernel,
+        params: FastsumParams::setup2(),
+        engine,
+    };
+
+    // --- 1. three-layer cross-check: HLO artifact vs native engine ---
+    println!("[1] PJRT artifact engine vs native rust engine");
+    match reg.build_normalized(&spec(EngineKind::Hlo)) {
+        Ok(hlo) => {
+            let native = reg.build_normalized(&spec(EngineKind::Native)).unwrap();
+            let x = Rng::seed_from(1).normal_vec(n);
+            let ya = native.apply_vec(&x);
+            let yb = hlo.apply_vec(&x);
+            let err = ya
+                .iter()
+                .zip(&yb)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            println!("    max |native - hlo| on A*x: {err:.3e}  (layers L1+L2 == L3)\n");
+        }
+        Err(e) => println!("    [skipped: {e}]\n"),
+    }
+
+    // --- 2. coordinator-run jobs ---
+    println!("[2] coordinator: eig + SSL-solve + hybrid-Nystrom jobs");
+    let op = reg.build_normalized(&spec(EngineKind::Native)).unwrap();
+    let mut coord = Coordinator::new(op.clone(), 1);
+    let h_eig = coord.submit(Job::Eig(LanczosOptions { k: 10, tol: 1e-10, ..Default::default() }));
+    let mut rhs = vec![0.0; n];
+    rhs[0] = 1.0;
+    rhs[n - 1] = -1.0;
+    let h_solve = coord.submit(Job::SslSolve {
+        beta: 10.0,
+        rhs,
+        opts: CgOptions { tol: 1e-8, ..Default::default() },
+    });
+    let h_nys = coord.submit(Job::HybridNystrom(HybridNystromOptions { l: 50, m: 10, k: 10, seed: 5 }));
+    let nfft_eigs = match h_eig.wait() {
+        JobResult::Eig(r) => {
+            println!("    eig: lambda_1..3 = {:.8}, {:.8}, {:.8}", r.eigenvalues[0], r.eigenvalues[1], r.eigenvalues[2]);
+            r
+        }
+        _ => unreachable!(),
+    };
+    if let JobResult::Solve(r) = h_solve.wait() {
+        println!("    ssl-solve: {} CG iterations, converged = {}", r.iterations, r.converged);
+    }
+    let hybrid = match h_nys.wait() {
+        JobResult::HybridNystrom(Ok(r)) => Some(r),
+        _ => None,
+    };
+    println!("    {}\n", coord.metrics().report());
+    coord.shutdown();
+
+    // --- 3. headline comparison ---
+    println!("[3] headline: NFFT-Lanczos vs direct vs Nystrom (k = 10)");
+    let t = Instant::now();
+    let dense = nfft_krylov::graph::dense::DenseKernelOperator::new(
+        &ds.points,
+        3,
+        kernel,
+        nfft_krylov::graph::dense::DenseMode::Normalized,
+    );
+    let direct = lanczos_eigs(&dense, LanczosOptions { k: 10, tol: 1e-10, ..Default::default() });
+    let t_direct = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let nfft2 = lanczos_eigs(op.as_ref(), LanczosOptions { k: 10, tol: 1e-10, ..Default::default() });
+    let t_nfft = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let trad = traditional_nystrom(
+        &ds.points,
+        3,
+        kernel,
+        TraditionalNystromOptions { l: n / 10, k: 10, seed: 5 },
+    );
+    let t_trad = t.elapsed().as_secs_f64();
+    println!(
+        "    direct dense Lanczos : {t_direct:>7.2}s   (reference)"
+    );
+    println!(
+        "    NFFT-Lanczos setup#2 : {t_nfft:>7.2}s   max eig err {:.2e}",
+        max_eigenvalue_error(&nfft2.eigenvalues, &direct.eigenvalues)
+    );
+    if let Ok(tr) = trad {
+        println!(
+            "    trad. Nystrom L=n/10 : {t_trad:>7.2}s   max eig err {:.2e}",
+            max_eigenvalue_error(&tr.eigenvalues, &direct.eigenvalues)
+        );
+    }
+    if let Some(hy) = hybrid {
+        println!(
+            "    hybrid NFFT L=50     :    (job)   max eig err {:.2e}",
+            max_eigenvalue_error(&hy.eigenvalues, &direct.eigenvalues)
+        );
+    }
+    println!("\n    paper claim check: NFFT error ~1e-9..1e-10 at setup#2, Nystrom >1e-2,");
+    println!("    hybrid in between, NFFT faster than direct at n = 2000.");
+    let _ = nfft_eigs;
+}

@@ -1,0 +1,17 @@
+//! Kernel ridge regression with NFFT-accelerated Gram products (paper
+//! §6.3): fit two-moons with a Gaussian and an inverse multiquadric
+//! kernel and print ASCII decision boundaries.
+//!
+//!     cargo run --release --example kernel_ridge_regression
+
+use nfft_krylov::bench_harness::fig9;
+use nfft_krylov::fastsum::Kernel;
+
+fn main() {
+    std::fs::create_dir_all("results").ok();
+    let cfg = fig9::Fig9Config { n_train: 1000, grid: 30, ..Default::default() };
+    for kernel in [Kernel::Gaussian { sigma: 0.4 }, Kernel::InverseMultiquadric { c: 0.5 }] {
+        let r = fig9::run(kernel, &cfg);
+        fig9::report(&r, "results").expect("report");
+    }
+}

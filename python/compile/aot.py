@@ -1,0 +1,116 @@
+"""AOT lowering: trace each artifact config, convert to HLO **text**
+(NOT ``.serialize()`` — the image's xla_extension 0.5.1 rejects
+jax ≥ 0.5 protos with 64-bit instruction ids; the text parser reassigns
+ids — see /opt/xla-example/README.md), and write
+``artifacts/<name>.hlo.txt`` plus ``artifacts/manifest.json``.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import make_dense_fn, make_fastsum_fn  # noqa: E402
+
+# Artifact catalogue. Shapes are fixed per artifact (PJRT executables
+# are shape-specialised); n values are padded sizes the coordinator
+# rounds requests up to (BLOCK_POINTS-aligned for the Pallas kernels).
+FASTSUM_CONFIGS = [
+    # (n, d, N, m) — paper setup #1/#2 shapes used by tests + examples.
+    (512, 3, 16, 2),
+    (512, 3, 32, 4),
+    (2048, 3, 16, 2),
+    (2048, 3, 32, 4),
+    (512, 2, 32, 4),
+    (2048, 2, 32, 4),
+]
+DENSE_CONFIGS = [
+    # (n, d, sigma)
+    (512, 3, 3.5),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="only the smallest artifact per family")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "dtype": "f64", "artifacts": []}
+
+    fastsum_cfgs = FASTSUM_CONFIGS[:1] if args.quick else FASTSUM_CONFIGS
+    dense_cfgs = DENSE_CONFIGS[:1] if args.quick else DENSE_CONFIGS
+
+    for n, d, n_band, m in fastsum_cfgs:
+        name = f"fastsum_n{n}_d{d}_N{n_band}_m{m}"
+        fn = make_fastsum_fn(n_band, m)
+        spec_pts = jax.ShapeDtypeStruct((n, d), jnp.float64)
+        spec_x = jax.ShapeDtypeStruct((n,), jnp.float64)
+        spec_b = jax.ShapeDtypeStruct((n_band**d,), jnp.float64)
+        lowered = jax.jit(fn).lower(spec_pts, spec_x, spec_b)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "family": "fastsum",
+                "n": n,
+                "d": d,
+                "N": n_band,
+                "m": m,
+                "inputs": ["points_scaled[n,d]", "x[n]", "b_hat[N^d]"],
+                "path": f"{name}.hlo.txt",
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for n, d, sigma in dense_cfgs:
+        name = f"dense_n{n}_d{d}_s{sigma:g}"
+        fn = make_dense_fn(sigma)
+        spec_pts = jax.ShapeDtypeStruct((n, d), jnp.float64)
+        spec_x = jax.ShapeDtypeStruct((n,), jnp.float64)
+        lowered = jax.jit(fn).lower(spec_pts, spec_x)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "family": "dense",
+                "n": n,
+                "d": d,
+                "sigma": sigma,
+                "inputs": ["points[n,d]", "x[n]"],
+                "path": f"{name}.hlo.txt",
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

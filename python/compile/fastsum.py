@@ -1,0 +1,34 @@
+"""L2: Algorithm 3.1 as a single jax graph — the function that gets
+AOT-lowered to the ``fastsum_*`` HLO artifacts.
+
+Inputs are runtime data (shapes fixed at trace time):
+  * ``points_scaled`` (n, d) — ρ-scaled nodes in [−1/4, 1/4]^d,
+  * ``x`` (n,) — the vector to multiply,
+  * ``b_hat`` (N^d,) — real Fourier coefficients of the regularised
+    kernel in flattened mod-N layout (the rust runtime feeds its own
+    coefficients, so one artifact serves every kernel of a given shape).
+
+Output: ``y ≈ (W̃ x)`` (n,), real.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .nfft import nfft_adjoint, nfft_forward
+
+__all__ = ["fastsum_w_tilde", "fastsum_jit"]
+
+
+def fastsum_w_tilde(points_scaled, x, b_hat, *, n_band, m):
+    n, d = points_scaled.shape
+    xhat = nfft_adjoint(points_scaled, x, n_band=n_band, m=m)
+    fhat = xhat * b_hat.reshape((n_band,) * d)
+    y = nfft_forward(points_scaled, fhat, m=m)
+    return jnp.real(y)
+
+
+@functools.partial(jax.jit, static_argnames=("n_band", "m"))
+def fastsum_jit(points_scaled, x, b_hat, *, n_band, m):
+    return fastsum_w_tilde(points_scaled, x, b_hat, n_band=n_band, m=m)

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: tiled dense Gaussian kernel matvec (the paper's
+"direct method" baseline, eq. 3.1, as a first-class kernel).
+
+TPU formulation (DESIGN.md §Hardware-Adaptation): the n×n Gram matrix is
+never materialised in HBM. The grid is (row_tiles × col_tiles); each
+step loads a (TILE, d) row-block and col-block of coordinates into
+VMEM, forms pairwise squared distances via the MXU-friendly identity
+‖a−b‖² = ‖a‖² + ‖b‖² − 2a·b (one (TILE,d)×(d,TILE) matmul), applies
+exp on the VPU, multiplies the x-tile and accumulates into the output
+row-block across the column dimension of the grid (output revisiting).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dense_w_tilde_matvec_pallas", "TILE"]
+
+TILE = 256  # (TILE,TILE) f64 distance tile = 512 KiB VMEM — comfortable.
+
+
+def _kernel(pr_ref, pc_ref, x_ref, o_ref, *, inv_sigma_sq):
+    j = pl.program_id(1)  # column-tile index (reduction dimension)
+    pr = pr_ref[...]  # (TILE, d) row coordinates
+    pc = pc_ref[...]  # (TILE, d) col coordinates
+    x = x_ref[...]  # (TILE,)
+    # ‖a−b‖² = ‖a‖² + ‖b‖² − 2 a·b  (the MXU does the a·b matmul).
+    rr = jnp.sum(pr * pr, axis=1)[:, None]
+    cc = jnp.sum(pc * pc, axis=1)[None, :]
+    cross = pr @ pc.T
+    r2 = jnp.maximum(rr + cc - 2.0 * cross, 0.0)
+    w = jnp.exp(-r2 * inv_sigma_sq)
+    part = w @ x
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def dense_w_tilde_matvec_pallas(points, x, *, sigma):
+    """(W̃ x)_j = Σ_i x_i exp(−‖v_j − v_i‖²/σ²), tiled.
+
+    points: (n, d) with n a multiple of TILE (or n ≤ TILE); x: (n,).
+    """
+    n, d = points.shape
+    if n <= TILE:
+        tile, grid = n, 1
+    else:
+        assert n % TILE == 0, f"n={n} not a multiple of {TILE}"
+        tile, grid = TILE, n // TILE
+    kernel = functools.partial(_kernel, inv_sigma_sq=1.0 / (sigma * sigma))
+    return pl.pallas_call(
+        kernel,
+        grid=(grid, grid),  # (row tiles, col tiles); cols = reduction
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(points, points, x)

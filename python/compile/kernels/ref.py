@@ -1,0 +1,136 @@
+"""Pure-jnp correctness oracles (L1 reference implementations).
+
+Everything in this file is deliberately naive/dense: these functions
+define the semantics the Pallas kernels and the jax NFFT pipeline are
+tested against (pytest + hypothesis sweeps in ``python/tests``).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "gauss_kernel_matrix",
+    "dense_w_tilde_matvec",
+    "kb_window_phi",
+    "kb_window_phi_hat",
+    "window_footprint_ref",
+    "ndft_adjoint",
+    "ndft_forward",
+    "kernel_coefficients",
+    "fastsum_ref",
+]
+
+
+def gauss_kernel_matrix(points, sigma):
+    """W̃ entries K(v_j - v_i) = exp(-||v_j - v_i||²/σ²) INCLUDING the
+    diagonal K(0) = 1 (the paper's W̃ = W + K(0)I)."""
+    diff = points[:, None, :] - points[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(-r2 / (sigma * sigma))
+
+
+def dense_w_tilde_matvec(points, x, sigma):
+    """(W̃ x)_j = Σ_i x_i exp(-||v_j - v_i||²/σ²)  (eq. 3.1)."""
+    return gauss_kernel_matrix(points, sigma) @ x
+
+
+def kb_window_phi(t, n_os, m):
+    """Kaiser-Bessel window φ(x) at grid-units t = n_os·x (vectorised,
+    both branches). Matches rust/src/nfft/window.rs exactly."""
+    sigma = 2.0  # oversampling factor (n_os = 2N everywhere)
+    b = np.pi * (2.0 - 1.0 / sigma)
+    arg = m * m - t * t
+    s_in = np.sqrt(np.maximum(arg, 1e-300))
+    s_out = np.sqrt(np.maximum(-arg, 1e-300))
+    inside = np.sinh(b * s_in) / (np.pi * s_in)
+    outside = np.sin(b * s_out) / (np.pi * s_out)
+    at_edge = b / np.pi
+    out = np.where(arg > 0, inside, np.where(arg < 0, outside, at_edge))
+    return out
+
+
+def _bessel_i0(x):
+    """Series I₀ — no cancellation, term ratio x²/(4k²)."""
+    x = np.asarray(x, dtype=np.float64)
+    q = x * x / 4.0
+    total = np.ones_like(q)
+    term = np.ones_like(q)
+    for k in range(1, 200):
+        term = term * q / (k * k)
+        total = total + term
+        if np.all(term < 1e-17 * total):
+            break
+    return total
+
+
+def kb_window_phi_hat(k, n_os, m):
+    """φ̂(k) of the Kaiser-Bessel window (see rust window.rs)."""
+    sigma = 2.0
+    b = np.pi * (2.0 - 1.0 / sigma)
+    w = 2.0 * np.pi * np.asarray(k, dtype=np.float64) / n_os
+    arg = b * b - w * w
+    return np.where(arg > 0, _bessel_i0(m * np.sqrt(np.maximum(arg, 0.0))), 1.0) / n_os
+
+
+def window_footprint_ref(points_axis, n_os, m):
+    """Reference for the Pallas window kernel: for 1-d coordinates
+    ``points_axis`` (n,), return (u0 (n,) int32, vals (n, 2m+2))
+    with vals[i, t] = φ(v_i − (u0_i + t)/n_os)."""
+    v = np.asarray(points_axis, dtype=np.float64)
+    c = v * n_os
+    u0 = np.floor(c).astype(np.int64) - m
+    t_idx = np.arange(2 * m + 2)[None, :]
+    tt = c[:, None] - (u0[:, None] + t_idx)
+    vals = kb_window_phi(tt, n_os, m)
+    return u0, vals
+
+
+def ndft_adjoint(points, x, n_band):
+    """x̂_l = Σ_i x_i e^{-2πi l·v_i} for l ∈ I_N^d, returned as an array
+    of shape (N,)*d in mod-N (FFT) layout."""
+    points = np.asarray(points, dtype=np.float64)
+    x = np.asarray(x)
+    n, d = points.shape
+    grids = np.meshgrid(*[_freqs(n_band) for _ in range(d)], indexing="ij")
+    out = np.zeros((n_band,) * d, dtype=np.complex128)
+    for i in range(n):
+        phase = sum(grids[a] * points[i, a] for a in range(d))
+        out += x[i] * np.exp(-2j * np.pi * phase)
+    return out
+
+
+def ndft_forward(points, f_hat, n_band):
+    """f_j = Σ_l f̂_l e^{+2πi l·v_j}; f_hat in mod-N layout."""
+    points = np.asarray(points, dtype=np.float64)
+    n, d = points.shape
+    grids = np.meshgrid(*[_freqs(n_band) for _ in range(d)], indexing="ij")
+    out = np.zeros(n, dtype=np.complex128)
+    for j in range(n):
+        phase = sum(grids[a] * points[j, a] for a in range(d))
+        out[j] = np.sum(f_hat * np.exp(2j * np.pi * phase))
+    return out
+
+
+def _freqs(n_band):
+    """Mod-N layout signed frequencies: [0..N/2-1, -N/2..-1]."""
+    return np.concatenate([np.arange(n_band // 2), np.arange(-n_band // 2, 0)])
+
+
+def kernel_coefficients(sigma_scaled, n_band, d):
+    """Paper eq. 3.4 for the Gaussian with ε_B = 0: sample the clamped
+    kernel on the I_N^d lattice and FFT. Identical to the rust
+    implementation (fastsum/coeffs.rs) for the Gaussian/ε_B=0 case used
+    by all artifacts."""
+    f = _freqs(n_band) / n_band
+    grids = np.meshgrid(*[f] * d, indexing="ij")
+    r = np.sqrt(sum(g * g for g in grids))
+    samples = np.exp(-np.minimum(r, 0.5) ** 2 / (sigma_scaled * sigma_scaled))
+    b_hat = np.fft.fftn(samples).real / (n_band**d)
+    return b_hat
+
+
+def fastsum_ref(points_scaled, x, b_hat, n_band):
+    """Alg 3.1 with exact NDFTs — the oracle for the jax NFFT pipeline."""
+    adj = ndft_adjoint(points_scaled, x, n_band)
+    f_hat = adj * b_hat
+    return ndft_forward(points_scaled, f_hat, n_band).real

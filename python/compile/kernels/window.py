@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: Kaiser-Bessel window footprint evaluation.
+
+This is the transcendental hot-spot of the NFFT spread/gather stages:
+for every nonequispaced node and axis, evaluate the window at the
+2m+2 surrounding grid offsets. On a real TPU this kernel is tiled so a
+block of nodes lives in VMEM and the (block, 2m+2) footprint tensor is
+produced by the VPU (sinh/sin via exp); the BlockSpec below expresses
+exactly that schedule. Under ``interpret=True`` the same kernel runs on
+CPU for correctness (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["window_footprint", "BLOCK_POINTS"]
+
+# Node block per VMEM tile. footprint ≤ 16 ⇒ tile ≤ 512×16 f64 = 64 KiB.
+BLOCK_POINTS = 512
+
+
+def _kernel(v_ref, u0_ref, vals_ref, *, n_os, m):
+    """One block of nodes: emit u0 = floor(v·n_os) − m and the window
+    values at offsets 0..2m+1."""
+    v = v_ref[...]  # (block,)
+    c = v * n_os
+    u0 = jnp.floor(c) - m
+    u0_ref[...] = u0.astype(jnp.int32)
+    sigma = 2.0
+    b = jnp.pi * (2.0 - 1.0 / sigma)
+    t_idx = jnp.arange(2 * m + 2, dtype=v.dtype)[None, :]
+    t = c[:, None] - (u0[:, None] + t_idx)  # grid-unit offsets, (block, 2m+2)
+    arg = m * m - t * t
+    s_in = jnp.sqrt(jnp.maximum(arg, 1e-300))
+    s_out = jnp.sqrt(jnp.maximum(-arg, 1e-300))
+    inside = jnp.sinh(b * s_in) / (jnp.pi * s_in)
+    outside = jnp.sin(b * s_out) / (jnp.pi * s_out)
+    vals = jnp.where(arg > 0, inside, jnp.where(arg < 0, outside, b / jnp.pi))
+    vals_ref[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("n_os", "m"))
+def window_footprint(points_axis, *, n_os, m):
+    """Per-axis window footprints for 1-d coordinates (n,)
+    → (u0 (n,) int32, vals (n, 2m+2)).
+
+    n must be a multiple of BLOCK_POINTS or small enough for one block
+    (the caller pads; aot.py always emits padded shapes).
+    """
+    n = points_axis.shape[0]
+    fp = 2 * m + 2
+    if n <= BLOCK_POINTS:
+        block, grid = n, 1
+    else:
+        assert n % BLOCK_POINTS == 0, f"n={n} not a multiple of {BLOCK_POINTS}"
+        block, grid = BLOCK_POINTS, n // BLOCK_POINTS
+    kernel = functools.partial(_kernel, n_os=n_os, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, fp), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n, fp), points_axis.dtype),
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(points_axis)

@@ -1,0 +1,50 @@
+"""L2 model entry points — the computations that become AOT artifacts.
+
+Two artifact families:
+
+* ``fastsum``  — Alg 3.1 ``W̃x`` via the NFFT pipeline (fastsum.py);
+* ``dense``    — the direct tiled Pallas baseline (kernels/dense_matvec).
+
+Both are pure, fixed-shape jax functions of runtime arrays only, so the
+lowered HLO is self-contained; the rust runtime supplies points,
+vectors and Fourier coefficients per request. Python never runs at
+serve time.
+"""
+
+import jax.numpy as jnp
+
+from .fastsum import fastsum_w_tilde
+from .kernels.dense_matvec import dense_w_tilde_matvec_pallas
+
+__all__ = ["make_fastsum_fn", "make_dense_fn"]
+
+
+def make_fastsum_fn(n_band, m):
+    """Returns f(points_scaled (n,d), x (n,), b_hat (N^d,)) → y (n,)."""
+
+    def fn(points_scaled, x, b_hat):
+        return (fastsum_w_tilde(points_scaled, x, b_hat, n_band=n_band, m=m),)
+
+    return fn
+
+
+def make_dense_fn(sigma):
+    """Returns f(points (n,d), x (n,)) → (W̃x (n,),) with the Gaussian
+    kernel baked in at σ = ``sigma`` (the direct baseline)."""
+
+    def fn(points, x):
+        return (dense_w_tilde_matvec_pallas(points, x, sigma=sigma),)
+
+    return fn
+
+
+def normalized_apply_reference(points, x, sigma):
+    """Dense reference for A·x (used by python tests only; the rust
+    coordinator performs the same normalisation around the artifact)."""
+    from .kernels.ref import gauss_kernel_matrix
+
+    w = gauss_kernel_matrix(points, sigma)
+    w = w - jnp.eye(points.shape[0], dtype=w.dtype)  # zero diagonal
+    deg = w @ jnp.ones(points.shape[0], dtype=w.dtype)
+    dinv = 1.0 / jnp.sqrt(deg)
+    return dinv * (w @ (dinv * x))

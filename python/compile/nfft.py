@@ -1,0 +1,117 @@
+"""L2: the d-dimensional NFFT in jax, built on the L1 Pallas window
+kernel plus XLA's native FFT and scatter/gather.
+
+Same conventions as the rust engine (rust/src/nfft):
+
+* adjoint:  x̂_l = Σ_i x_i e^{−2πi l·v_i},  l ∈ I_N^d (mod-N layout);
+* forward:  f_j = Σ_l f̂_l e^{+2πi l·v_j};
+* oversampled grid 2N per axis, Kaiser-Bessel window, footprint 2m+2.
+
+The spread (scatter-add) and gather are expressed with XLA scatter /
+take ops: on TPU these become the VMEM-blocked loops the L1 kernel's
+BlockSpec describes; the window *evaluation* — the FLOP hot-spot — is
+the Pallas kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.window import window_footprint
+
+__all__ = ["nfft_adjoint", "nfft_forward", "deconv_factors"]
+
+
+def deconv_factors(n_band, n_os, m):
+    """Per-axis 1/(n_os·φ̂(l)) in mod-N layout (numpy, build-time)."""
+    from .kernels.ref import kb_window_phi_hat
+
+    l = np.concatenate([np.arange(n_band // 2), np.arange(-n_band // 2, 0)])
+    return 1.0 / (n_os * kb_window_phi_hat(l, n_os, m))
+
+
+def _footprints(points, n_os, m):
+    """Per-axis window values and flat grid offsets for all nodes.
+
+    Returns (flat_idx (n, fp^d) int32 into the flattened oversampled
+    grid, weights (n, fp^d))."""
+    n, d = points.shape
+    fp = 2 * m + 2
+    u0s, vals = [], []
+    for a in range(d):
+        u0_a, vals_a = window_footprint(points[:, a], n_os=n_os, m=m)
+        u0s.append(u0_a)
+        vals.append(vals_a)
+    # Tensor-product combine across axes.
+    flat_idx = jnp.zeros((n, 1), dtype=jnp.int32)
+    weights = jnp.ones((n, 1), dtype=points.dtype)
+    t_off = jnp.arange(fp, dtype=jnp.int32)
+    for a in range(d):
+        idx_a = jnp.mod(u0s[a][:, None] + t_off[None, :], n_os)  # (n, fp)
+        flat_idx = flat_idx[:, :, None] * n_os + idx_a[:, None, :]
+        weights = weights[:, :, None] * vals[a][:, None, :]
+        flat_idx = flat_idx.reshape(n, -1)
+        weights = weights.reshape(n, -1)
+    return flat_idx, weights
+
+
+def nfft_adjoint(points, x, *, n_band, m):
+    """x̂ = adjoint NFFT of weights x at nodes (n, d) → complex (N,)*d."""
+    n, d = points.shape
+    n_os = 2 * n_band
+    flat_idx, weights = _footprints(points, n_os, m)
+    grid = jnp.zeros((n_os**d,), dtype=x.dtype)
+    grid = grid.at[flat_idx.reshape(-1)].add(
+        (weights * x[:, None]).reshape(-1)
+    )
+    grid = grid.reshape((n_os,) * d)
+    ghat = jnp.fft.fftn(grid)
+    # Extract the band and deconvolve (mod-N layout throughout).
+    # NOTE: slices + concatenate instead of jnp.take — take lowers to a
+    # gather with a select-NaN out-of-bounds guard whose predicate
+    # miscompiles on the pinned xla_extension 0.5.1 runtime (see
+    # DESIGN.md §Runtime-Gotchas); the band extraction is two slices
+    # anyway (frequencies 0..N/2-1 and n_os-N/2..n_os-1).
+    dec = [jnp.asarray(deconv_factors(n_band, n_os, m)) for _ in range(d)]
+    out = ghat
+    for a in range(d):
+        lo = jax.lax.slice_in_dim(out, 0, n_band // 2, axis=a)
+        hi = jax.lax.slice_in_dim(out, n_os - n_band // 2, n_os, axis=a)
+        out = jnp.concatenate([lo, hi], axis=a)
+        shape = [1] * d
+        shape[a] = n_band
+        out = out * dec[a].reshape(shape)
+    return out
+
+
+def nfft_forward(points, f_hat, *, m):
+    """f_j = Σ_l f̂_l e^{2πi l·v_j} for f_hat of shape (N,)*d."""
+    n, d = points.shape
+    n_band = f_hat.shape[0]
+    n_os = 2 * n_band
+    dec = [jnp.asarray(deconv_factors(n_band, n_os, m)) for _ in range(d)]
+    g = f_hat
+    for a in range(d):
+        shape = [1] * d
+        shape[a] = n_band
+        g = g * dec[a].reshape(shape)
+    # Embed the band into the oversampled grid (mod-N positions) by
+    # zero-padding between the positive and negative frequency halves
+    # (pure slices/concat — see the take() note in nfft_adjoint).
+    grid = g
+    for a in range(d):
+        lo = jax.lax.slice_in_dim(grid, 0, n_band // 2, axis=a)
+        hi = jax.lax.slice_in_dim(grid, n_band // 2, None, axis=a)
+        pad_shape = list(grid.shape)
+        pad_shape[a] = n_os - n_band
+        zeros = jnp.zeros(pad_shape, dtype=grid.dtype)
+        grid = jnp.concatenate([lo, zeros, hi], axis=a)
+    # Unnormalised backward FFT: ifftn × n_os^d.
+    gspat = jnp.fft.ifftn(grid) * (n_os**d)
+    flat_idx, weights = _footprints(points, n_os, m)
+    # mode="clip" skips the select-NaN OOB guard (indices are already
+    # reduced mod n_os, so clipping is the identity).
+    vals = jnp.take(gspat.reshape(-1), flat_idx.reshape(-1), mode="clip").reshape(n, -1)
+    return jnp.sum(vals * weights.astype(vals.dtype), axis=1)

@@ -1,0 +1,4 @@
+import jax
+
+# All numerics in this repo are f64 (matching the rust engine).
+jax.config.update("jax_enable_x64", True)

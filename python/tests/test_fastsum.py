@@ -1,0 +1,74 @@
+"""Full Alg 3.1 pipeline (L2) vs the dense Gaussian oracle — the core
+correctness signal for the AOT artifacts."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.fastsum import fastsum_jit
+from compile.kernels import ref
+
+
+def _scaled_cloud(n, d, seed):
+    """Random cloud scaled the same way the rust engine does
+    (ρ = 1/4 / max‖v‖, ε_B = 0)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, d)) * [2.0, 2.0, 4.0][:d]
+    rho = 0.25 / np.linalg.norm(pts, axis=1).max()
+    sigma = 3.5  # original scale
+    return pts * rho, sigma * rho
+
+
+@pytest.mark.parametrize("n_band,m,tol", [(16, 2, 5e-3), (32, 4, 1e-7)])
+def test_fastsum_matches_dense(n_band, m, tol):
+    n, d = 128, 3
+    pts_s, sigma_s = _scaled_cloud(n, d, 0)
+    x = np.random.default_rng(1).normal(size=n)
+    b_hat = ref.kernel_coefficients(sigma_s, n_band, d).reshape(-1)
+    got = np.asarray(
+        fastsum_jit(jnp.asarray(pts_s), jnp.asarray(x), jnp.asarray(b_hat), n_band=n_band, m=m)
+    )
+    want = np.asarray(ref.dense_w_tilde_matvec(jnp.asarray(pts_s), jnp.asarray(x), sigma_s))
+    err = np.abs(got - want).max() / np.abs(x).sum()
+    assert err < tol, f"relative error {err}"
+
+
+def test_fastsum_matches_exact_ndft_pipeline():
+    # Isolate the NFFT error: compare against the exact-NDFT fastsum.
+    n, d, n_band, m = 40, 2, 16, 7
+    pts_s, sigma_s = _scaled_cloud(n, d, 2)
+    x = np.random.default_rng(3).normal(size=n)
+    b_hat = ref.kernel_coefficients(sigma_s, n_band, d)
+    got = np.asarray(
+        fastsum_jit(
+            jnp.asarray(pts_s), jnp.asarray(x), jnp.asarray(b_hat.reshape(-1)),
+            n_band=n_band, m=m,
+        )
+    )
+    want = ref.fastsum_ref(pts_s, x, b_hat, n_band)
+    assert np.abs(got - want).max() < 1e-10 * np.abs(x).sum()
+
+
+def test_fastsum_linear_and_deterministic():
+    n, d, n_band, m = 64, 3, 16, 4
+    pts_s, sigma_s = _scaled_cloud(n, d, 4)
+    b_hat = jnp.asarray(ref.kernel_coefficients(sigma_s, n_band, d).reshape(-1))
+    pts_j = jnp.asarray(pts_s)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=n))
+    y1 = fastsum_jit(pts_j, x, b_hat, n_band=n_band, m=m)
+    y2 = fastsum_jit(pts_j, x, b_hat, n_band=n_band, m=m)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    y3 = fastsum_jit(pts_j, 3.0 * x, b_hat, n_band=n_band, m=m)
+    np.testing.assert_allclose(np.asarray(y3), 3.0 * np.asarray(y1), rtol=1e-11)
+
+
+def test_degree_computation_positive():
+    # d = W̃1 − K(0)1 must be positive for a connected Gaussian graph.
+    n, d, n_band, m = 128, 3, 32, 4
+    pts_s, sigma_s = _scaled_cloud(n, d, 6)
+    b_hat = jnp.asarray(ref.kernel_coefficients(sigma_s, n_band, d).reshape(-1))
+    ones = jnp.ones(n)
+    wt1 = fastsum_jit(jnp.asarray(pts_s), ones, b_hat, n_band=n_band, m=m)
+    deg = np.asarray(wt1) - 1.0  # K(0) = 1 for the Gaussian
+    assert (deg > 0).all()

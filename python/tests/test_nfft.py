@@ -1,0 +1,87 @@
+"""jax NFFT (L2) vs the exact NDFT oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import nfft
+from compile.kernels import ref
+
+
+def _rand_points(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-0.25, 0.25, size=(n, d))
+
+
+@pytest.mark.parametrize("d", [1, 2])
+def test_adjoint_matches_ndft(d):
+    n, n_band, m = 40, 16, 7
+    pts = _rand_points(n, d, 0)
+    x = np.random.default_rng(1).normal(size=n)
+    got = np.asarray(nfft.nfft_adjoint(jnp.asarray(pts), jnp.asarray(x), n_band=n_band, m=m))
+    want = ref.ndft_adjoint(pts, x, n_band)
+    scale = np.abs(x).sum()
+    assert np.abs(got - want).max() < 1e-10 * scale
+
+
+def test_adjoint_3d():
+    n, n_band, m = 30, 8, 3
+    pts = _rand_points(n, 3, 2)
+    x = np.random.default_rng(3).normal(size=n)
+    got = np.asarray(nfft.nfft_adjoint(jnp.asarray(pts), jnp.asarray(x), n_band=n_band, m=m))
+    want = ref.ndft_adjoint(pts, x, n_band)
+    assert np.abs(got - want).max() < 1e-4 * np.abs(x).sum()
+
+
+def test_forward_matches_ndft():
+    n, n_band, m, d = 25, 16, 7, 2
+    pts = _rand_points(n, d, 4)
+    rng = np.random.default_rng(5)
+    f_hat = rng.normal(size=(n_band,) * d) + 1j * rng.normal(size=(n_band,) * d)
+    got = np.asarray(nfft.nfft_forward(jnp.asarray(pts), jnp.asarray(f_hat), m=m))
+    want = ref.ndft_forward(pts, f_hat, n_band)
+    scale = np.abs(f_hat).sum()
+    assert np.abs(got - want).max() < 1e-10 * scale
+
+
+def test_accuracy_improves_with_m():
+    n, n_band, d = 50, 32, 1
+    pts = _rand_points(n, d, 6)
+    x = np.random.default_rng(7).normal(size=n)
+    want = ref.ndft_adjoint(pts, x, n_band)
+    errs = []
+    for m in (2, 4, 7):
+        got = np.asarray(
+            nfft.nfft_adjoint(jnp.asarray(pts), jnp.asarray(x), n_band=n_band, m=m)
+        )
+        errs.append(np.abs(got - want).max())
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-9 * np.abs(x).sum()
+
+
+def test_adjoint_linear():
+    n, n_band, m = 20, 16, 4
+    pts = jnp.asarray(_rand_points(n, 2, 8))
+    rng = np.random.default_rng(9)
+    x1, x2 = (jnp.asarray(rng.normal(size=n)) for _ in range(2))
+    a = nfft.nfft_adjoint(pts, x1, n_band=n_band, m=m)
+    b = nfft.nfft_adjoint(pts, x2, n_band=n_band, m=m)
+    ab = nfft.nfft_adjoint(pts, x1 + 2.5 * x2, n_band=n_band, m=m)
+    np.testing.assert_allclose(np.asarray(ab), np.asarray(a + 2.5 * b), rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(5, 60),
+    n_band=st.sampled_from([8, 16]),
+    m=st.sampled_from([3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_adjoint_1d(n, n_band, m, seed):
+    pts = _rand_points(n, 1, seed)
+    x = np.random.default_rng(seed + 1).normal(size=n)
+    got = np.asarray(nfft.nfft_adjoint(jnp.asarray(pts), jnp.asarray(x), n_band=n_band, m=m))
+    want = ref.ndft_adjoint(pts, x, n_band)
+    tol = {3: 1e-3, 5: 1e-6}[m] * max(np.abs(x).sum(), 1.0)
+    assert np.abs(got - want).max() < tol

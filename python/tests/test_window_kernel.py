@@ -1,0 +1,60 @@
+"""L1 Pallas window kernel vs the pure-numpy reference, including
+hypothesis sweeps over shapes and coordinate ranges."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.window import window_footprint
+
+
+def _check(points_axis, n_os, m):
+    u0_ref, vals_ref = ref.window_footprint_ref(points_axis, n_os, m)
+    u0, vals = window_footprint(points_axis, n_os=n_os, m=m)
+    np.testing.assert_array_equal(np.asarray(u0), u0_ref.astype(np.int32))
+    np.testing.assert_allclose(np.asarray(vals), vals_ref, rtol=1e-10, atol=1e-300)
+
+
+@pytest.mark.parametrize("m", [2, 4, 7])
+@pytest.mark.parametrize("n_os", [32, 64])
+def test_matches_reference_grid(m, n_os):
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(-0.25, 0.25, size=64)
+    _check(pts, n_os, m)
+
+
+def test_single_block_small_n():
+    rng = np.random.default_rng(1)
+    _check(rng.uniform(-0.25, 0.25, size=17), 32, 2)
+
+
+def test_multiple_blocks():
+    rng = np.random.default_rng(2)
+    _check(rng.uniform(-0.25, 0.25, size=1024), 64, 4)
+
+
+def test_boundary_coordinates():
+    # Nodes at the torus edge and exactly on grid points.
+    pts = np.array([-0.4999, 0.4999, 0.0, 0.25, -0.25, 1.0 / 64, -1.0 / 64, 0.124999])
+    _check(pts, 32, 4)
+
+
+def test_window_positive_in_main_lobe():
+    _, vals = window_footprint(np.array([0.0, 0.1, -0.2]), n_os=32, m=4)
+    v = np.asarray(vals)
+    # Central footprint entries are positive.
+    assert (v[:, 1 : 2 * 4 + 1] > 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 512]),
+    m=st.sampled_from([2, 3, 4, 7]),
+    n_os=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(n, m, n_os, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-0.5, 0.4999, size=n)
+    _check(pts, n_os, m)

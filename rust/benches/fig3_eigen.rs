@@ -1,0 +1,23 @@
+//! `cargo bench --bench fig3_eigen [-- --full --sizes 500,2000]`
+//! Regenerates Figure 3 (a–d) and the Fig 2a scatter sample.
+
+use nfft_krylov::bench_harness::fig3;
+use nfft_krylov::bench_harness::harness::BenchArgs;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let mut cfg = if args.full { fig3::Fig3Config::full() } else { fig3::Fig3Config::default_ci() };
+    if let Some(sizes) = args.sizes {
+        cfg.sizes = sizes;
+    }
+    if let Some(r) = args.repeats {
+        cfg.data_repeats = r;
+    }
+    cfg.seed = args.seed;
+    std::fs::create_dir_all("results").ok();
+    fig3::dump_fig2a("results", cfg.seed).expect("fig2a dump");
+    println!("Figure 3 sweep: sizes {:?} (direct <= {}, trad-Nystrom <= {})", cfg.sizes, cfg.direct_max, cfg.trad_nystrom_max);
+    let results = fig3::run(&cfg);
+    fig3::report(&results, "results").expect("report");
+    println!("\nCSV series written to results/fig3*.csv and results/fig2a_spiral.csv");
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig4_image_eigs [-- --full]`
+//! First ten eigenvalues of the image graph (Figure 4).
+
+use nfft_krylov::bench_harness::fig4;
+use nfft_krylov::bench_harness::harness::BenchArgs;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    std::fs::create_dir_all("results").ok();
+    let r = fig4::run(args.full, args.seed);
+    fig4::report(&r, "results").expect("report");
+}

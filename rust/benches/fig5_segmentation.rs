@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig5_segmentation [-- --full --repeats 100]`
+//! Image segmentation: NFFT-Lanczos vs traditional Nystrom (Figure 5).
+
+use nfft_krylov::bench_harness::fig5;
+use nfft_krylov::bench_harness::harness::BenchArgs;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let runs = args.repeats.unwrap_or(if args.full { 100 } else { 10 });
+    std::fs::create_dir_all("results").ok();
+    let r = fig5::run(args.full, runs, args.seed);
+    fig5::report(&r, "results").expect("report");
+}

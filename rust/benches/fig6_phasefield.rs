@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig6_phasefield [-- --full]`
+//! Phase-field SSL classification rates (Figure 6).
+
+use nfft_krylov::bench_harness::fig6;
+use nfft_krylov::bench_harness::harness::BenchArgs;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let mut cfg = if args.full { fig6::Fig6Config::full() } else { fig6::Fig6Config::default_ci() };
+    cfg.seed = args.seed;
+    if let Some(r) = args.repeats {
+        cfg.instances = r;
+    }
+    std::fs::create_dir_all("results").ok();
+    let r = fig6::run(&cfg);
+    fig6::report(&r, "results").expect("report");
+}

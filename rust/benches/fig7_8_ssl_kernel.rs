@@ -1,0 +1,37 @@
+//! `cargo bench --bench fig7_8_ssl_kernel [-- --full]`
+//! Kernel-SSL misclassification sweeps: Figure 7 (Gaussian) and
+//! Figure 8 (Laplacian RBF), plus the Fig 2b scatter sample.
+
+use nfft_krylov::bench_harness::fig7::{self, Fig7Kernel};
+use nfft_krylov::bench_harness::harness::BenchArgs;
+use nfft_krylov::util::csv::CsvWriter;
+
+fn dump_fig2b(seed: u64) -> std::io::Result<()> {
+    let mut rng = nfft_krylov::data::rng::Rng::seed_from(seed);
+    let ds = nfft_krylov::data::crescent::generate(4000, Default::default(), &mut rng);
+    let mut w = CsvWriter::create("results/fig2b_crescent.csv", &["x", "y", "label"])?;
+    for j in 0..ds.n {
+        let p = ds.point(j);
+        w.row(&[format!("{:.5}", p[0]), format!("{:.5}", p[1]), ds.labels[j].to_string()])?;
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    std::fs::create_dir_all("results").ok();
+    dump_fig2b(args.seed).expect("fig2b dump");
+    for kernel in [Fig7Kernel::Gaussian, Fig7Kernel::LaplacianRbf] {
+        let mut cfg = if args.full {
+            fig7::Fig7Config::full(kernel)
+        } else {
+            fig7::Fig7Config::default_ci(kernel)
+        };
+        cfg.seed = args.seed;
+        if let Some(r) = args.repeats {
+            cfg.repeats = r;
+        }
+        let r = fig7::run(&cfg);
+        fig7::report(&r, kernel, "results").expect("report");
+    }
+}

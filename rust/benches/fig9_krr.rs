@@ -1,0 +1,20 @@
+//! `cargo bench --bench fig9_krr`
+//! Kernel ridge regression decision boundaries (Figure 9).
+
+use nfft_krylov::bench_harness::fig9;
+use nfft_krylov::bench_harness::harness::BenchArgs;
+use nfft_krylov::fastsum::Kernel;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    std::fs::create_dir_all("results").ok();
+    let cfg = fig9::Fig9Config {
+        n_train: if args.full { 10_000 } else { 2_000 },
+        seed: args.seed,
+        ..Default::default()
+    };
+    for kernel in [Kernel::Gaussian { sigma: 0.4 }, Kernel::InverseMultiquadric { c: 0.5 }] {
+        let r = fig9::run(kernel, &cfg);
+        fig9::report(&r, "results").expect("report");
+    }
+}

@@ -1,0 +1,58 @@
+//! `cargo bench --bench matvec_micro [-- --sizes 2000,10000]`
+//! Microbenchmarks of the request-path hot spot: one fastsum matvec
+//! per engine/setup, with the per-phase breakdown used by the §Perf
+//! iteration log, plus the PJRT artifact engine when available.
+
+use nfft_krylov::bench_harness::harness::{bench, BenchArgs};
+use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel};
+use nfft_krylov::graph::LinearOperator;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let sizes = args.sizes.unwrap_or_else(|| vec![2000, 10000, 50000]);
+    for &n in &sizes {
+        println!("== fastsum matvec, n = {n} ==");
+        let mut rng = Rng::seed_from(args.seed);
+        let ds = nfft_krylov::data::spiral::generate(
+            nfft_krylov::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+            &mut rng,
+        );
+        let x = rng.normal_vec(ds.n);
+        let mut y = vec![0.0; ds.n];
+        for (name, params) in [
+            ("setup1 (N=16,m=2)", FastsumParams::setup1()),
+            ("setup2 (N=32,m=4)", FastsumParams::setup2()),
+            ("setup3 (N=64,m=7)", FastsumParams::setup3()),
+        ] {
+            let op = FastsumOperator::new(&ds.points, 3, Kernel::Gaussian { sigma: 3.5 }, params);
+            bench(&format!("native {name}"), 1, 5, || op.apply_w(&x, &mut y));
+            let t = op.timings();
+            print!("{}", t.report());
+        }
+        if n <= 3000 {
+            // Dense direct baseline for context.
+            let dense = nfft_krylov::graph::dense::DenseKernelOperator::new(
+                &ds.points,
+                3,
+                Kernel::Gaussian { sigma: 3.5 },
+                nfft_krylov::graph::dense::DenseMode::Adjacency,
+            );
+            bench("dense direct", 0, 2, || dense.apply(&x, &mut y));
+        }
+        if n <= 2048 && std::path::Path::new("artifacts/manifest.json").exists() {
+            let mut reg = EngineRegistry::new("artifacts");
+            let spec = OperatorSpec {
+                points: ds.points.clone(),
+                d: 3,
+                kernel: Kernel::Gaussian { sigma: 3.5 },
+                params: FastsumParams::setup2(),
+                engine: EngineKind::Hlo,
+            };
+            if let Ok(op) = reg.build_adjacency(&spec) {
+                bench("hlo artifact setup2", 1, 5, || op.apply(&x, &mut y));
+            }
+        }
+    }
+}

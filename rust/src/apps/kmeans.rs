@@ -1,0 +1,207 @@
+//! k-means with k-means++ seeding and Lloyd iterations — the clustering
+//! back end of spectral segmentation (§6.2.1).
+
+use crate::data::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// Cluster index per row.
+    pub labels: Vec<usize>,
+    /// Row-major k×d centroids.
+    pub centroids: Vec<f64>,
+    pub iterations: usize,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+}
+
+/// Cluster `n` rows of dimension `d` (row-major `data`) into `k`
+/// clusters.
+pub fn kmeans(data: &[f64], d: usize, k: usize, max_iter: usize, rng: &mut Rng) -> KmeansResult {
+    assert!(d > 0 && data.len() % d == 0);
+    let n = data.len() / d;
+    assert!(k >= 1 && k <= n, "need 1 <= k <= n");
+    let row = |i: usize| &data[i * d..(i + 1) * d];
+    let dist2 = |a: &[f64], b: &[f64]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    };
+
+    // k-means++ seeding.
+    let mut centroids = vec![0.0; k * d];
+    let first = rng.below(n);
+    centroids[..d].copy_from_slice(row(first));
+    let mut min_d2: Vec<f64> = (0..n).map(|i| dist2(row(i), &centroids[..d])).collect();
+    for c in 1..k {
+        let total: f64 = min_d2.iter().sum();
+        let chosen = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut pick = n - 1;
+            for (i, &w) in min_d2.iter().enumerate() {
+                if target < w {
+                    pick = i;
+                    break;
+                }
+                target -= w;
+            }
+            pick
+        };
+        centroids[c * d..(c + 1) * d].copy_from_slice(row(chosen));
+        for i in 0..n {
+            let dd = dist2(row(i), &centroids[c * d..(c + 1) * d]);
+            if dd < min_d2[i] {
+                min_d2[i] = dd;
+            }
+        }
+    }
+
+    // Lloyd iterations.
+    let mut labels = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        let mut changed = false;
+        for i in 0..n {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let dd = dist2(row(i), &centroids[c * d..(c + 1) * d]);
+                if dd < best_d {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            if labels[i] != best {
+                labels[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // Update centroids.
+        let mut sums = vec![0.0; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = labels[i];
+            counts[c] += 1;
+            for a in 0..d {
+                sums[c * d + a] += data[i * d + a];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed an empty cluster at the point farthest from
+                // its centroid.
+                let far = (0..n)
+                    .max_by(|&i, &j| {
+                        let di = dist2(row(i), &centroids[labels[i] * d..(labels[i] + 1) * d]);
+                        let dj = dist2(row(j), &centroids[labels[j] * d..(labels[j] + 1) * d]);
+                        di.partial_cmp(&dj).unwrap()
+                    })
+                    .unwrap();
+                centroids[c * d..(c + 1) * d].copy_from_slice(row(far));
+            } else {
+                for a in 0..d {
+                    centroids[c * d + a] = sums[c * d + a] / counts[c] as f64;
+                }
+            }
+        }
+    }
+    let inertia: f64 = (0..n)
+        .map(|i| dist2(row(i), &centroids[labels[i] * d..(labels[i] + 1) * d]))
+        .sum();
+    KmeansResult { labels, centroids, iterations, inertia }
+}
+
+/// Best label-permutation agreement between two clusterings (used to
+/// score segmentations against ground truth; exhaustive over k! for the
+/// small k of the experiments).
+pub fn clustering_agreement(a: &[usize], b: &[usize], k: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(k <= 8, "exhaustive permutation matching only for small k");
+    let n = a.len();
+    let mut perm: Vec<usize> = (0..k).collect();
+    let mut best = 0usize;
+    permute(&mut perm, 0, &mut |p: &[usize]| {
+        let matches = a
+            .iter()
+            .zip(b)
+            .filter(|&(&ai, &bi)| ai < k && p[ai] == bi)
+            .count();
+        if matches > best {
+            best = matches;
+        }
+    });
+    best as f64 / n as f64
+}
+
+fn permute(p: &mut Vec<usize>, start: usize, f: &mut impl FnMut(&[usize])) {
+    if start == p.len() {
+        f(p);
+        return;
+    }
+    for i in start..p.len() {
+        p.swap(start, i);
+        permute(p, start + 1, f);
+        p.swap(start, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Rng::seed_from(1);
+        let ds = crate::data::blobs::generate(
+            &[vec![0.0, 0.0], vec![10.0, 10.0]],
+            &[50, 50],
+            0.3,
+            &mut rng,
+        );
+        let r = kmeans(&ds.points, 2, 2, 100, &mut rng);
+        let acc = clustering_agreement(&r.labels, &ds.labels, 2);
+        assert!(acc > 0.99, "accuracy {acc}");
+        assert!(r.inertia < 100.0);
+    }
+
+    #[test]
+    fn five_blobs() {
+        let mut rng = Rng::seed_from(2);
+        let centers: Vec<Vec<f64>> =
+            (0..5).map(|i| vec![10.0 * i as f64, -5.0 * i as f64]).collect();
+        let ds = crate::data::blobs::generate(&centers, &[40; 5], 0.4, &mut rng);
+        let r = kmeans(&ds.points, 2, 5, 200, &mut rng);
+        let acc = clustering_agreement(&r.labels, &ds.labels, 5);
+        assert!(acc > 0.98, "accuracy {acc}");
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let mut rng = Rng::seed_from(3);
+        let data = rng.normal_vec(30);
+        let r = kmeans(&data, 1, 1, 10, &mut rng);
+        assert!(r.labels.iter().all(|&l| l == 0));
+        let mean: f64 = data.iter().sum::<f64>() / 30.0;
+        assert!((r.centroids[0] - mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn agreement_is_permutation_invariant() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert_eq!(clustering_agreement(&a, &b, 3), 1.0);
+        let c = vec![2, 2, 0, 0, 1, 0];
+        assert!((clustering_agreement(&a, &c, 3) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let data: Vec<f64> = (0..60).map(|i| (i % 10) as f64).collect();
+        let r1 = kmeans(&data, 2, 3, 50, &mut Rng::seed_from(7));
+        let r2 = kmeans(&data, 2, 3, 50, &mut Rng::seed_from(7));
+        assert_eq!(r1.labels, r2.labels);
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's application layer (§6.2–§6.3), each driving the
+//! engine-agnostic operator stack:
+//!
+//! * [`kmeans`] — k-means++ / Lloyd (substrate for spectral clustering);
+//! * [`spectral`] — Ng-Jordan-Weiss spectral clustering (§6.2.1, image
+//!   segmentation);
+//! * [`phasefield`] — Allen-Cahn / convexity-splitting semi-supervised
+//!   learning on graphs (§6.2.2, Bertozzi-Flenner);
+//! * [`ssl_kernel`] — kernel SSL via the regularised solve
+//!   `(I + β L_s) u = f` with CG (§6.2.3);
+//! * [`krr`] — kernel ridge regression `(K + β I) α = f` (§6.3).
+
+pub mod kmeans;
+pub mod krr;
+pub mod phasefield;
+pub mod spectral;
+pub mod ssl_kernel;

@@ -1,0 +1,301 @@
+//! Semi-supervised learning by the graph Allen-Cahn phase-field method
+//! (§6.2.2, Bertozzi-Flenner [5]): evolve
+//!
+//! ```text
+//! u_t = −ε L_s u − (1/ε) ψ'(u) + Ω (f − u),   ψ(u) = (u² − 1)²
+//! ```
+//!
+//! with convexity splitting, projected onto the span of the k smallest
+//! eigenvectors of `L_s` (= the k largest of `A`, shifted):
+//!
+//! ```text
+//! (1/τ + ε λ_j + c) u_j = (1/τ + c) ū_j − (1/ε) v_jᵀ ψ'(ū) + v_jᵀ Ω (f − ū)
+//! ```
+//!
+//! Paper parameters: τ = 0.1, ε = 10, ω₀ = 10⁴, c = 2/ε + ω₀, stop when
+//! the squared relative change < 1e-10.
+
+use crate::linalg::dense::DenseMatrix;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseFieldParams {
+    pub tau: f64,
+    pub epsilon: f64,
+    pub omega0: f64,
+    pub c: f64,
+    pub tol: f64,
+    pub max_steps: usize,
+}
+
+impl Default for PhaseFieldParams {
+    fn default() -> Self {
+        let epsilon = 10.0;
+        let omega0 = 1e4;
+        PhaseFieldParams {
+            tau: 0.1,
+            epsilon,
+            omega0,
+            c: 2.0 / epsilon + omega0,
+            tol: 1e-10,
+            max_steps: 500,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PhaseFieldResult {
+    /// Final state u (classification by sign for 2 classes).
+    pub u: Vec<f64>,
+    pub steps: usize,
+    pub converged: bool,
+}
+
+/// Binary phase-field SSL.
+///
+/// * `ls_eigenvalues[j]` are eigenvalues of `L_s` (ascending, the k
+///   smallest) with eigenvectors in the columns of `vectors` (n×k) —
+///   obtained from the `A`-eigenpairs as `λ(L_s) = 1 − λ(A)`.
+/// * `training`: +1 / −1 for labelled nodes, 0 for unlabelled.
+pub fn phase_field_ssl(
+    ls_eigenvalues: &[f64],
+    vectors: &DenseMatrix,
+    training: &[f64],
+    params: PhaseFieldParams,
+) -> PhaseFieldResult {
+    let n = vectors.rows;
+    let k = vectors.cols;
+    assert_eq!(ls_eigenvalues.len(), k);
+    assert_eq!(training.len(), n);
+    let PhaseFieldParams { tau, epsilon, omega0, c, tol, max_steps } = params;
+
+    // Initial condition u(0) = f; spectral coefficients a_j = v_jᵀ u.
+    let mut u = training.to_vec();
+    let mut coeffs = vec![0.0; k];
+    let project = |u: &[f64], coeffs: &mut [f64]| {
+        for j in 0..k {
+            let mut acc = 0.0;
+            for i in 0..n {
+                acc += vectors[(i, j)] * u[i];
+            }
+            coeffs[j] = acc;
+        }
+    };
+    let reconstruct = |coeffs: &[f64], u: &mut [f64]| {
+        for v in u.iter_mut() {
+            *v = 0.0;
+        }
+        for j in 0..k {
+            let cj = coeffs[j];
+            if cj == 0.0 {
+                continue;
+            }
+            for i in 0..n {
+                u[i] += cj * vectors[(i, j)];
+            }
+        }
+    };
+    project(&u, &mut coeffs);
+    reconstruct(&coeffs, &mut u);
+
+    let mut steps = 0;
+    let mut converged = false;
+    let mut rhs_vec = vec![0.0; n];
+    for _ in 0..max_steps {
+        steps += 1;
+        let u_old = u.clone();
+        // rhs in node space: −(1/ε) ψ'(ū) + Ω(f − ū), with the (1/τ+c) ū
+        // term handled in coefficient space.
+        for i in 0..n {
+            let ub = u_old[i];
+            let psi_prime = 4.0 * ub * (ub * ub - 1.0);
+            let omega = if training[i] != 0.0 { omega0 } else { 0.0 };
+            rhs_vec[i] = -psi_prime / epsilon + omega * (training[i] - ub);
+        }
+        let mut rhs_coeffs = vec![0.0; k];
+        project(&rhs_vec, &mut rhs_coeffs);
+        let mut old_coeffs = vec![0.0; k];
+        project(&u_old, &mut old_coeffs);
+        for j in 0..k {
+            let denom = 1.0 / tau + epsilon * ls_eigenvalues[j] + c;
+            coeffs[j] = ((1.0 / tau + c) * old_coeffs[j] + rhs_coeffs[j]) / denom;
+        }
+        reconstruct(&coeffs, &mut u);
+        // Squared relative change.
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..n {
+            num += (u[i] - u_old[i]) * (u[i] - u_old[i]);
+            den += u[i] * u[i];
+        }
+        if num / den.max(1e-300) < tol {
+            converged = true;
+            break;
+        }
+    }
+    PhaseFieldResult { u, steps, converged }
+}
+
+/// Multi-class one-vs-rest wrapper (the paper's Fig 6 uses C = 5
+/// classes): runs the binary scheme per class and assigns argmax.
+pub fn phase_field_ssl_multiclass(
+    ls_eigenvalues: &[f64],
+    vectors: &DenseMatrix,
+    labels: &[Option<usize>],
+    num_classes: usize,
+    params: PhaseFieldParams,
+) -> Vec<usize> {
+    let n = vectors.rows;
+    let mut scores = vec![f64::NEG_INFINITY; n * num_classes];
+    for c in 0..num_classes {
+        let training: Vec<f64> = labels
+            .iter()
+            .map(|l| match l {
+                Some(li) if *li == c => 1.0,
+                Some(_) => -1.0,
+                None => 0.0,
+            })
+            .collect();
+        let res = phase_field_ssl(ls_eigenvalues, vectors, &training, params);
+        for i in 0..n {
+            scores[i * num_classes + c] = res.u[i];
+        }
+    }
+    (0..n)
+        .map(|i| {
+            (0..num_classes)
+                .max_by(|&a, &b| {
+                    scores[i * num_classes + a]
+                        .partial_cmp(&scores[i * num_classes + b])
+                        .unwrap()
+                })
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastsum::{FastsumParams, Kernel, NormalizedAdjacency};
+    use crate::krylov::lanczos::{lanczos_eigs, LanczosOptions};
+
+    fn eig_setup(points: &[f64], d: usize, sigma: f64, k: usize) -> (Vec<f64>, DenseMatrix) {
+        let a = NormalizedAdjacency::new(
+            points,
+            d,
+            Kernel::Gaussian { sigma },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let r = lanczos_eigs(&a, LanczosOptions { k, tol: 1e-8, ..Default::default() });
+        // λ(L_s) = 1 − λ(A); Lanczos returns λ(A) descending ⇒ ascending L_s.
+        let ls: Vec<f64> = r.eigenvalues.iter().map(|l| 1.0 - l).collect();
+        (ls, r.eigenvectors)
+    }
+
+    #[test]
+    fn binary_labels_two_blobs() {
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let ds = crate::data::blobs::generate(
+            &[vec![0.0, 0.0], vec![8.0, 8.0]],
+            &[60, 60],
+            0.7,
+            &mut rng,
+        );
+        let (ls, v) = eig_setup(&ds.points, 2, 2.0, 3);
+        // 3 labelled samples per class.
+        let mut training = vec![0.0; ds.n];
+        for t in 0..3 {
+            training[t] = 1.0;
+            training[60 + t] = -1.0;
+        }
+        let res = phase_field_ssl(&ls, &v, &training, PhaseFieldParams::default());
+        let mut correct = 0;
+        for i in 0..ds.n {
+            let predicted = if res.u[i] >= 0.0 { 0 } else { 1 };
+            if predicted == ds.labels[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.n as f64;
+        assert!(acc > 0.9, "accuracy {acc}");
+    }
+
+    #[test]
+    fn sign_pattern_stabilizes_early() {
+        // The paper reports convergence "after only three time steps";
+        // with our convexity-splitting constants the *state* keeps
+        // creeping towards the double-well minima for a long time, but
+        // the classification (sign pattern) freezes within a few steps
+        // — which is what the experiment consumes.
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        let (ds, _) = crate::data::spiral::generate_relabeled_blobs(300, 0.5, &mut rng);
+        let (ls, v) = eig_setup(&ds.points, 3, 3.5, 5);
+        let mut training = vec![0.0; ds.n];
+        for c in 0..5 {
+            let idx = ds.labels.iter().position(|&l| l == c).unwrap();
+            training[idx] = if c == 0 { 1.0 } else { -1.0 };
+        }
+        let run = |steps: usize| {
+            let res = phase_field_ssl(
+                &ls,
+                &v,
+                &training,
+                PhaseFieldParams { max_steps: steps, ..Default::default() },
+            );
+            res.u.iter().map(|&x| x >= 0.0).collect::<Vec<bool>>()
+        };
+        let a10 = run(10);
+        let a100 = run(100);
+        let flips = a10.iter().zip(&a100).filter(|(x, y)| x != y).count();
+        assert!(
+            flips <= ds.n / 50,
+            "sign pattern moved on {flips}/{} nodes between steps 10 and 100",
+            ds.n
+        );
+    }
+
+    #[test]
+    fn multiclass_five_blobs() {
+        let mut rng = crate::data::rng::Rng::seed_from(3);
+        let (ds, _) = crate::data::spiral::generate_relabeled_blobs(400, 0.35, &mut rng);
+        let (ls, v) = eig_setup(&ds.points, 3, 3.5, 5);
+        // 3 samples per class.
+        let mut labels: Vec<Option<usize>> = vec![None; ds.n];
+        for c in 0..5 {
+            let mut count = 0;
+            for i in 0..ds.n {
+                if ds.labels[i] == c {
+                    labels[i] = Some(c);
+                    count += 1;
+                    if count == 3 {
+                        break;
+                    }
+                }
+            }
+        }
+        let pred = phase_field_ssl_multiclass(&ls, &v, &labels, 5, PhaseFieldParams::default());
+        let correct = pred.iter().zip(&ds.labels).filter(|(a, b)| a == b).count();
+        let acc = correct as f64 / ds.n as f64;
+        assert!(acc > 0.9, "multiclass accuracy {acc}");
+    }
+
+    #[test]
+    fn training_points_stay_labelled() {
+        // ω₀ = 1e4 pins training nodes to their labels.
+        let mut rng = crate::data::rng::Rng::seed_from(4);
+        let ds = crate::data::blobs::generate(
+            &[vec![0.0, 0.0], vec![6.0, 6.0]],
+            &[40, 40],
+            0.5,
+            &mut rng,
+        );
+        let (ls, v) = eig_setup(&ds.points, 2, 2.0, 4);
+        let mut training = vec![0.0; ds.n];
+        training[0] = 1.0;
+        training[40] = -1.0;
+        let res = phase_field_ssl(&ls, &v, &training, PhaseFieldParams::default());
+        assert!(res.u[0] > 0.5, "training node drifted: {}", res.u[0]);
+        assert!(res.u[40] < -0.5, "training node drifted: {}", res.u[40]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Spectral clustering (§6.2.1) after Ng-Jordan-Weiss [28]: compute the
+//! k largest eigenvectors of `A = D^{-1/2} W D^{-1/2}` (equivalently
+//! the smallest of `L_s`), normalise the rows of `V_k`, and k-means the
+//! rows.
+
+use super::kmeans::{kmeans, KmeansResult};
+use crate::data::rng::Rng;
+use crate::graph::operator::LinearOperator;
+use crate::krylov::lanczos::{lanczos_eigs, EigResult, LanczosOptions};
+use crate::linalg::dense::DenseMatrix;
+
+#[derive(Debug, Clone)]
+pub struct SpectralResult {
+    pub labels: Vec<usize>,
+    pub eigenvalues: Vec<f64>,
+    pub kmeans_iterations: usize,
+}
+
+/// Cluster using a precomputed eigenvector matrix (n×k columns =
+/// eigenvectors) — lets callers reuse eigenpairs across k.
+pub fn cluster_from_eigenvectors(
+    vectors: &DenseMatrix,
+    classes: usize,
+    rng: &mut Rng,
+) -> KmeansResult {
+    let n = vectors.rows;
+    let k = vectors.cols;
+    // Row-normalise (Y matrix of [28]).
+    let mut y = vec![0.0; n * k];
+    for i in 0..n {
+        let mut norm = 0.0;
+        for j in 0..k {
+            norm += vectors[(i, j)] * vectors[(i, j)];
+        }
+        let norm = norm.sqrt().max(1e-300);
+        for j in 0..k {
+            y[i * k + j] = vectors[(i, j)] / norm;
+        }
+    }
+    kmeans(&y, k, classes, 300, rng)
+}
+
+/// Full pipeline: Lanczos eigensolve on the given engine + NJW k-means.
+pub fn spectral_clustering(
+    a: &dyn LinearOperator,
+    k_eigs: usize,
+    classes: usize,
+    lanczos: LanczosOptions,
+    rng: &mut Rng,
+) -> (SpectralResult, EigResult) {
+    let eig = lanczos_eigs(a, LanczosOptions { k: k_eigs, ..lanczos });
+    let km = cluster_from_eigenvectors(&eig.eigenvectors, classes, rng);
+    (
+        SpectralResult {
+            labels: km.labels,
+            eigenvalues: eig.eigenvalues.clone(),
+            kmeans_iterations: km.iterations,
+        },
+        eig,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastsum::{FastsumParams, Kernel, NormalizedAdjacency};
+    use crate::apps::kmeans::clustering_agreement;
+
+    #[test]
+    fn separates_well_separated_blobs() {
+        let mut rng = Rng::seed_from(1);
+        let centers: Vec<Vec<f64>> =
+            vec![vec![0.0, 0.0], vec![20.0, 0.0], vec![0.0, 20.0]];
+        let ds = crate::data::blobs::generate(&centers, &[60, 60, 60], 0.8, &mut rng);
+        // σ relative to the cloud diameter (~30) is small here, so the
+        // rescaled kernel is localized and needs a larger bandwidth
+        // than the paper's spiral setups (cf. §6.2.3's N = 512).
+        let a = NormalizedAdjacency::new(
+            &ds.points,
+            2,
+            Kernel::Gaussian { sigma: 6.0 },
+            FastsumParams { n_band: 64, m: 5, p: 5, ..FastsumParams::setup2() },
+        )
+        .unwrap();
+        let (res, _) = spectral_clustering(
+            &a,
+            3,
+            3,
+            LanczosOptions { tol: 1e-8, ..Default::default() },
+            &mut rng,
+        );
+        let acc = clustering_agreement(&res.labels, &ds.labels, 3);
+        assert!(acc > 0.98, "accuracy {acc}");
+        // Three well-separated clusters ⇒ three eigenvalues near 1.
+        assert!((res.eigenvalues[0] - 1.0).abs() < 1e-6);
+        assert!(res.eigenvalues[2] > 0.9);
+    }
+
+    #[test]
+    fn color_clusters_in_synthetic_image() {
+        // A tiny version of the §6.2.1 setup: pixels as 3-d colour
+        // vectors, fully connected Gaussian graph.
+        let mut rng = Rng::seed_from(2);
+        let img = crate::data::image::generate_scene(24, 16, 4.0, &mut rng);
+        let ds = img.to_dataset();
+        let a = NormalizedAdjacency::new(
+            &ds.points,
+            3,
+            Kernel::Gaussian { sigma: 90.0 },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let (res, _) = spectral_clustering(
+            &a,
+            4,
+            4,
+            LanczosOptions { tol: 1e-6, max_iter: 120, ..Default::default() },
+            &mut rng,
+        );
+        // Compare against the scene's ground-truth regions.
+        let truth: Vec<usize> = (0..16)
+            .flat_map(|y| {
+                (0..24).map(move |x| {
+                    crate::data::image::scene_region(x as f64 / 24.0, y as f64 / 16.0)
+                })
+            })
+            .collect();
+        let acc = clustering_agreement(&res.labels, &truth, 4);
+        assert!(acc > 0.80, "segmentation agreement {acc}");
+    }
+
+    #[test]
+    fn row_normalization_handles_zero_rows() {
+        // Degenerate eigenvector matrix with a zero row must not NaN.
+        let mut v = DenseMatrix::zeros(4, 2);
+        v[(0, 0)] = 1.0;
+        v[(1, 1)] = 1.0;
+        v[(2, 0)] = 0.5;
+        // row 3 all zeros
+        let mut rng = Rng::seed_from(3);
+        let km = cluster_from_eigenvectors(&v, 2, &mut rng);
+        assert_eq!(km.labels.len(), 4);
+    }
+}

@@ -1,0 +1,422 @@
+//! Figure 3 (§6.1) — THE headline experiment: accuracy and runtime of
+//! eigenvalue computations on spiral data, comparing
+//!
+//! * NFFT-based Lanczos (setups #1/#2/#3),
+//! * traditional Nyström (L ∈ {n/10, n/4}),
+//! * hybrid Nyström-Gaussian-NFFT (L ∈ {20, 50}, M = 10),
+//! * direct dense Lanczos (the reference).
+//!
+//! Emits Fig 3a (max eigenvalue error), 3b (max residual norm), 3c
+//! (residual per eigenvalue index at the largest direct size), 3d
+//! (runtimes) and the Fig 2a scatter sample, plus the P1 log-log slope
+//! fits.
+
+use super::harness::{max_eigenvalue_error, residual_norms};
+use crate::data::rng::Rng;
+use crate::data::spiral::{generate, SpiralParams};
+use crate::fastsum::{FastsumParams, Kernel, NormalizedAdjacency};
+use crate::graph::dense::{DenseKernelOperator, DenseMode};
+use crate::krylov::lanczos::{lanczos_eigs, LanczosOptions};
+use crate::nystrom::hybrid::{hybrid_nystrom, HybridNystromOptions};
+use crate::nystrom::traditional::{traditional_nystrom, TraditionalNystromOptions};
+use crate::util::csv::CsvWriter;
+use crate::util::stats::{loglog_slope, Summary};
+use crate::util::timer::Timer;
+
+pub const SIGMA: f64 = 3.5;
+pub const K_EIGS: usize = 10;
+
+#[derive(Debug, Clone)]
+pub struct Fig3Config {
+    pub sizes: Vec<usize>,
+    /// Random spiral instances per n (paper: 5).
+    pub data_repeats: usize,
+    /// Repetitions of each randomized method per instance (paper: 10).
+    pub method_repeats: usize,
+    /// Largest n for the O(n²)-per-matvec direct reference.
+    pub direct_max: usize,
+    /// Largest n for the traditional Nyström baseline (O(nL²) with
+    /// L ~ n/4 ⇒ effectively O(n³)).
+    pub trad_nystrom_max: usize,
+    pub seed: u64,
+}
+
+impl Fig3Config {
+    pub fn default_ci() -> Self {
+        Fig3Config {
+            sizes: vec![500, 1000, 2000],
+            data_repeats: 1,
+            method_repeats: 3,
+            direct_max: 2000,
+            trad_nystrom_max: 2000,
+            seed: 42,
+        }
+    }
+
+    pub fn full() -> Self {
+        Fig3Config {
+            sizes: vec![2000, 5000, 10000, 20000, 50000, 100000],
+            data_repeats: 5,
+            method_repeats: 10,
+            direct_max: 20000,
+            trad_nystrom_max: 10000,
+            seed: 42,
+        }
+    }
+}
+
+/// One (method, n) cell: error/residual/runtime samples over repeats.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    pub eig_errors: Vec<f64>,
+    pub residuals: Vec<f64>,
+    pub runtimes: Vec<f64>,
+}
+
+pub struct Fig3Results {
+    /// method name → n → cell
+    pub cells: Vec<(String, Vec<(usize, Cell)>)>,
+    /// Fig 3c: per-eigenvalue residuals at the largest direct size.
+    pub per_eig_residuals: Vec<(String, Vec<f64>)>,
+}
+
+fn spiral_points(n: usize, rng: &mut Rng) -> Vec<f64> {
+    generate(SpiralParams { per_class: n / 5, ..Default::default() }, rng).points
+}
+
+pub fn run(cfg: &Fig3Config) -> Fig3Results {
+    let methods: Vec<String> = vec![
+        "nfft-lanczos-setup1".into(),
+        "nfft-lanczos-setup2".into(),
+        "nfft-lanczos-setup3".into(),
+        "nystrom-L=n/10".into(),
+        "nystrom-L=n/4".into(),
+        "hybrid-L=20".into(),
+        "hybrid-L=50".into(),
+        "direct".into(),
+    ];
+    let mut cells: Vec<(String, Vec<(usize, Cell)>)> =
+        methods.iter().map(|m| (m.clone(), Vec::new())).collect();
+    let mut per_eig_residuals: Vec<(String, Vec<f64>)> = Vec::new();
+    let largest_direct = cfg.sizes.iter().filter(|&&n| n <= cfg.direct_max).max().copied();
+
+    for &n in &cfg.sizes {
+        println!("== n = {n} ==");
+        let mut per_method: Vec<Cell> = vec![Cell::default(); methods.len()];
+        for rep in 0..cfg.data_repeats {
+            let mut rng = Rng::seed_from(cfg.seed + rep as u64 * 1000 + n as u64);
+            let points = spiral_points(n, &mut rng);
+            // High-accuracy operator for residual evaluation (O(n) per
+            // product; ~1e-13 accurate — the paper uses the exact A).
+            let ref_op = NormalizedAdjacency::new(
+                &points,
+                3,
+                Kernel::Gaussian { sigma: SIGMA },
+                FastsumParams::setup3(),
+            )
+            .expect("reference operator");
+            // Direct reference eigenvalues.
+            let direct = if n <= cfg.direct_max {
+                let dense = DenseKernelOperator::new(
+                    &points,
+                    3,
+                    Kernel::Gaussian { sigma: SIGMA },
+                    DenseMode::Normalized,
+                );
+                let t = Timer::start();
+                let r = lanczos_eigs(
+                    &dense,
+                    LanczosOptions { k: K_EIGS, tol: 1e-9, max_iter: 150, seed: 7, ..Default::default() },
+                );
+                let secs = t.elapsed_secs();
+                let res = residual_norms(&ref_op, &r.eigenvalues, &r.eigenvectors);
+                let cell = &mut per_method[7];
+                cell.runtimes.push(secs);
+                cell.eig_errors.push(0.0);
+                cell.residuals.push(res.iter().cloned().fold(0.0, f64::max));
+                if Some(n) == largest_direct && rep == 0 {
+                    per_eig_residuals.push(("direct".into(), res));
+                }
+                Some(r)
+            } else {
+                None
+            };
+            let reference_eigs: Option<Vec<f64>> = direct.as_ref().map(|r| r.eigenvalues.clone());
+
+            // NFFT-Lanczos, three setups.
+            for (mi, params) in [
+                (0usize, FastsumParams::setup1()),
+                (1, FastsumParams::setup2()),
+                (2, FastsumParams::setup3()),
+            ] {
+                let t = Timer::start();
+                let op = NormalizedAdjacency::new(
+                    &points,
+                    3,
+                    Kernel::Gaussian { sigma: SIGMA },
+                    params,
+                )
+                .expect("nfft operator");
+                let r = lanczos_eigs(
+                    &op,
+                    LanczosOptions { k: K_EIGS, tol: 1e-9, max_iter: 150, seed: 7, ..Default::default() },
+                );
+                let secs = t.elapsed_secs();
+                let res = residual_norms(&ref_op, &r.eigenvalues, &r.eigenvectors);
+                let cell = &mut per_method[mi];
+                cell.runtimes.push(secs);
+                cell.residuals.push(res.iter().cloned().fold(0.0, f64::max));
+                if let Some(ref re) = reference_eigs {
+                    cell.eig_errors.push(max_eigenvalue_error(&r.eigenvalues, re));
+                }
+                if Some(n) == largest_direct && rep == 0 {
+                    per_eig_residuals.push((methods[mi].clone(), res));
+                }
+            }
+
+            // Traditional Nyström.
+            if n <= cfg.trad_nystrom_max {
+                for (mi, l) in [(3usize, n / 10), (4, n / 4)] {
+                    for mrep in 0..cfg.method_repeats {
+                        let t = Timer::start();
+                        let out = traditional_nystrom(
+                            &points,
+                            3,
+                            Kernel::Gaussian { sigma: SIGMA },
+                            TraditionalNystromOptions {
+                                l: l.max(K_EIGS),
+                                k: K_EIGS,
+                                seed: cfg.seed + 77 * mrep as u64,
+                            },
+                        );
+                        let secs = t.elapsed_secs();
+                        let cell = &mut per_method[mi];
+                        match out {
+                            Ok(r) => {
+                                cell.runtimes.push(secs);
+                                let res = residual_norms(
+                                    &ref_op,
+                                    &r.eigenvalues,
+                                    &r.eigenvectors,
+                                );
+                                cell.residuals
+                                    .push(res.iter().cloned().fold(0.0, f64::max));
+                                if let Some(ref re) = reference_eigs {
+                                    cell.eig_errors
+                                        .push(max_eigenvalue_error(&r.eigenvalues, re));
+                                }
+                                if Some(n) == largest_direct && rep == 0 && mrep == 0 && mi == 3
+                                {
+                                    per_eig_residuals.push((methods[mi].clone(), res));
+                                }
+                            }
+                            Err(e) => {
+                                println!("  [nystrom L={l} failed: {e}]");
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Hybrid Nyström-Gaussian-NFFT (Alg 5.1; fastsum setup #2).
+            let hybrid_op = NormalizedAdjacency::new(
+                &points,
+                3,
+                Kernel::Gaussian { sigma: SIGMA },
+                FastsumParams::setup2(),
+            )
+            .expect("hybrid operator");
+            for (mi, l) in [(5usize, 20), (6, 50)] {
+                for mrep in 0..cfg.method_repeats {
+                    let t = Timer::start();
+                    let out = hybrid_nystrom(
+                        &hybrid_op,
+                        HybridNystromOptions {
+                            l,
+                            m: K_EIGS,
+                            k: K_EIGS,
+                            seed: cfg.seed + 131 * mrep as u64,
+                        },
+                    );
+                    let secs = t.elapsed_secs();
+                    if let Ok(r) = out {
+                        let cell = &mut per_method[mi];
+                        cell.runtimes.push(secs);
+                        let res = residual_norms(&ref_op, &r.eigenvalues, &r.eigenvectors);
+                        cell.residuals.push(res.iter().cloned().fold(0.0, f64::max));
+                        if let Some(ref re) = reference_eigs {
+                            cell.eig_errors.push(max_eigenvalue_error(
+                                &r.eigenvalues,
+                                &re[..r.eigenvalues.len().min(re.len())],
+                            ));
+                        }
+                        if Some(n) == largest_direct && rep == 0 && mrep == 0 && mi == 6 {
+                            per_eig_residuals.push((methods[mi].clone(), res));
+                        }
+                    }
+                }
+            }
+        }
+        for (mi, cell) in per_method.into_iter().enumerate() {
+            if !cell.runtimes.is_empty() {
+                cells[mi].1.push((n, cell));
+            }
+        }
+    }
+    Fig3Results { cells, per_eig_residuals }
+}
+
+fn fmt_stats(samples: &[f64]) -> String {
+    if samples.is_empty() {
+        return "     n/a".into();
+    }
+    let s = Summary::of(samples);
+    format!("{:9.2e}/{:9.2e}/{:9.2e}", s.min, s.mean, s.max)
+}
+
+/// Print the paper-style tables and write the CSVs.
+pub fn report(results: &Fig3Results, out_dir: &str) -> std::io::Result<()> {
+    // Fig 3a.
+    println!("\n-- Fig 3a: max eigenvalue error vs n (min/avg/max) --");
+    let mut w3a = CsvWriter::create(
+        format!("{out_dir}/fig3a_eig_error.csv"),
+        &["method", "n", "min", "mean", "max"],
+    )?;
+    for (method, series) in &results.cells {
+        for (n, cell) in series {
+            if !cell.eig_errors.is_empty() {
+                println!("  {method:<22} n={n:<7} {}", fmt_stats(&cell.eig_errors));
+                let s = Summary::of(&cell.eig_errors);
+                w3a.row(&[
+                    method.clone(),
+                    n.to_string(),
+                    format!("{:e}", s.min),
+                    format!("{:e}", s.mean),
+                    format!("{:e}", s.max),
+                ])?;
+            }
+        }
+    }
+    // Fig 3b.
+    println!("\n-- Fig 3b: max residual norm vs n (min/avg/max) --");
+    let mut w3b = CsvWriter::create(
+        format!("{out_dir}/fig3b_residual.csv"),
+        &["method", "n", "min", "mean", "max"],
+    )?;
+    for (method, series) in &results.cells {
+        for (n, cell) in series {
+            if !cell.residuals.is_empty() {
+                println!("  {method:<22} n={n:<7} {}", fmt_stats(&cell.residuals));
+                let s = Summary::of(&cell.residuals);
+                w3b.row(&[
+                    method.clone(),
+                    n.to_string(),
+                    format!("{:e}", s.min),
+                    format!("{:e}", s.mean),
+                    format!("{:e}", s.max),
+                ])?;
+            }
+        }
+    }
+    // Fig 3c.
+    println!("\n-- Fig 3c: residual per eigenvalue index (largest direct n) --");
+    let mut w3c = CsvWriter::create(
+        format!("{out_dir}/fig3c_residual_per_eig.csv"),
+        &["method", "eig_index", "residual"],
+    )?;
+    for (method, res) in &results.per_eig_residuals {
+        let line: Vec<String> = res.iter().map(|r| format!("{r:.2e}")).collect();
+        println!("  {method:<22} [{}]", line.join(", "));
+        for (j, r) in res.iter().enumerate() {
+            w3c.row(&[method.clone(), j.to_string(), format!("{r:e}")])?;
+        }
+    }
+    // Fig 3d + P1 slopes.
+    println!("\n-- Fig 3d: runtime vs n (mean seconds) + log-log slope --");
+    let mut w3d = CsvWriter::create(
+        format!("{out_dir}/fig3d_runtime.csv"),
+        &["method", "n", "mean_seconds", "max_seconds"],
+    )?;
+    for (method, series) in &results.cells {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for (n, cell) in series {
+            let s = Summary::of(&cell.runtimes);
+            println!("  {method:<22} n={n:<7} {:9.3}s", s.mean);
+            w3d.row(&[
+                method.clone(),
+                n.to_string(),
+                format!("{:.6}", s.mean),
+                format!("{:.6}", s.max),
+            ])?;
+            xs.push(*n as f64);
+            ys.push(s.mean.max(1e-9));
+        }
+        if xs.len() >= 2 {
+            println!("  {method:<22} slope ≈ {:.2}", loglog_slope(&xs, &ys));
+        }
+    }
+    Ok(())
+}
+
+/// Fig 2a: dump one spiral instance for plotting.
+pub fn dump_fig2a(out_dir: &str, seed: u64) -> std::io::Result<()> {
+    let mut rng = Rng::seed_from(seed);
+    let ds = generate(SpiralParams { per_class: 400, ..Default::default() }, &mut rng);
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/fig2a_spiral.csv"),
+        &["x", "y", "z", "label"],
+    )?;
+    for j in 0..ds.n {
+        let p = ds.point(j);
+        w.row(&[
+            format!("{:.6}", p[0]),
+            format!("{:.6}", p[1]),
+            format!("{:.6}", p[2]),
+            ds.labels[j].to_string(),
+        ])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_run_produces_all_methods() {
+        let cfg = Fig3Config {
+            sizes: vec![200],
+            data_repeats: 1,
+            method_repeats: 1,
+            direct_max: 200,
+            trad_nystrom_max: 200,
+            seed: 1,
+        };
+        let r = run(&cfg);
+        // The deterministic methods always produce data; the traditional
+        // Nyström baseline may legitimately fail at tiny n/L (negative
+        // approximate degrees, §5.1) — require the L = n/4 variant.
+        for (name, series) in &r.cells {
+            if name == "nystrom-L=n/10" {
+                continue;
+            }
+            assert!(!series.is_empty(), "method {name} produced no data");
+        }
+        // NFFT setup3 error ≤ setup1 error (mean).
+        let err_of = |name: &str| -> f64 {
+            let series = &r.cells.iter().find(|(m, _)| m == name).unwrap().1;
+            Summary::of(&series[0].1.eig_errors).mean
+        };
+        assert!(err_of("nfft-lanczos-setup3") <= err_of("nfft-lanczos-setup1"));
+        // Hybrid beats traditional Nyström on eigenvalue error (the
+        // paper's §5.2 claim).
+        assert!(err_of("hybrid-L=50") < err_of("nystrom-L=n/4"));
+        let dir = std::env::temp_dir().join("nfft_fig3_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        report(&r, dir.to_str().unwrap()).unwrap();
+        assert!(dir.join("fig3a_eig_error.csv").exists());
+        assert!(dir.join("fig3d_runtime.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

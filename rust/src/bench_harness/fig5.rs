@@ -1,0 +1,129 @@
+//! Figure 5 (§6.2.1): image segmentation via spectral clustering +
+//! k-means — NFFT-Lanczos vs the traditional Nyström extension (L =
+//! 250), reporting the % label disagreement against the NFFT reference
+//! segmentation and the count of "failed" Nyström runs (> 20%
+//! differences, the paper's criterion).
+
+use crate::apps::kmeans::clustering_agreement;
+use crate::apps::spectral::{cluster_from_eigenvectors, spectral_clustering};
+use crate::data::rng::Rng;
+use crate::fastsum::{Kernel, NormalizedAdjacency};
+use crate::krylov::lanczos::LanczosOptions;
+use crate::nystrom::traditional::{traditional_nystrom, TraditionalNystromOptions};
+use crate::util::csv::CsvWriter;
+use crate::util::timer::Timer;
+
+pub struct Fig5Result {
+    pub n_pixels: usize,
+    pub nfft_seconds: f64,
+    pub kmeans_seconds: f64,
+    /// Disagreement of each Nyström run vs the NFFT segmentation (k=4).
+    pub nystrom_diffs: Vec<f64>,
+    pub nystrom_failures: usize,
+    pub nystrom_runs: usize,
+    pub scene_agreement_k4: f64,
+}
+
+pub fn run(full: bool, nystrom_runs: usize, seed: u64) -> Fig5Result {
+    let mut rng = Rng::seed_from(seed);
+    let img = if full {
+        crate::data::image::paper_scale(&mut rng)
+    } else {
+        crate::data::image::ci_scale(&mut rng)
+    };
+    let (w, h) = (img.width, img.height);
+    let ds = img.to_dataset();
+    let kernel = Kernel::Gaussian { sigma: 90.0 };
+    let t = Timer::start();
+    let a = NormalizedAdjacency::new(&ds.points, 3, kernel, super::fig4::image_params())
+        .expect("image operator");
+    let (res_k4, eig) = spectral_clustering(
+        &a,
+        4,
+        4,
+        LanczosOptions { k: 4, tol: 1e-8, max_iter: 150, ..Default::default() },
+        &mut rng,
+    );
+    let nfft_seconds = t.elapsed_secs();
+    // k = 2 variant (paper Fig 5b) reuses the eigenvectors.
+    let t = Timer::start();
+    let _res_k2 = cluster_from_eigenvectors(&eig.eigenvectors, 2, &mut rng);
+    let kmeans_seconds = t.elapsed_secs();
+
+    // Ground-truth scene agreement for the k=4 segmentation.
+    let truth: Vec<usize> = (0..h)
+        .flat_map(|y| {
+            (0..w).map(move |x| {
+                crate::data::image::scene_region(x as f64 / w as f64, y as f64 / h as f64)
+            })
+        })
+        .collect();
+    let scene_agreement_k4 = clustering_agreement(&res_k4.labels, &truth, 4);
+
+    // Nyström runs (paper: 100 runs, L = 250).
+    let mut nystrom_diffs = Vec::new();
+    let mut failures = 0;
+    for run_idx in 0..nystrom_runs {
+        let out = traditional_nystrom(
+            &ds.points,
+            3,
+            kernel,
+            TraditionalNystromOptions { l: 250.min(ds.n / 2), k: 4, seed: seed + 13 * run_idx as u64 },
+        );
+        match out {
+            Ok(r) => {
+                let mut rng_k = Rng::seed_from(seed + 999 + run_idx as u64);
+                let km = cluster_from_eigenvectors(&r.eigenvectors, 4, &mut rng_k);
+                let agree = clustering_agreement(&km.labels, &res_k4.labels, 4);
+                let diff = 1.0 - agree;
+                if diff > 0.20 {
+                    failures += 1;
+                }
+                nystrom_diffs.push(diff);
+            }
+            Err(_) => {
+                failures += 1;
+                nystrom_diffs.push(1.0);
+            }
+        }
+    }
+    Fig5Result {
+        n_pixels: ds.n,
+        nfft_seconds,
+        kmeans_seconds,
+        nystrom_diffs,
+        nystrom_failures: failures,
+        nystrom_runs,
+        scene_agreement_k4,
+    }
+}
+
+pub fn report(r: &Fig5Result, out_dir: &str) -> std::io::Result<()> {
+    println!("\n-- Fig 5: segmentation ({} pixels) --", r.n_pixels);
+    println!("  NFFT-Lanczos eig+cluster: {:.1}s (+{:.1}s extra k-means)", r.nfft_seconds, r.kmeans_seconds);
+    println!("  scene-region agreement (k=4): {:.3}", r.scene_agreement_k4);
+    let close = r.nystrom_diffs.iter().filter(|&&d| d < 0.02).count();
+    println!(
+        "  Nyström (L=250, {} runs): {} runs <2% diff, {} failed runs (>20% diff)",
+        r.nystrom_runs, close, r.nystrom_failures
+    );
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/fig5_segmentation.csv"),
+        &["run", "diff_vs_nfft"],
+    )?;
+    for (i, d) in r.nystrom_diffs.iter().enumerate() {
+        w.row(&[i.to_string(), format!("{d:.6}")])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn mini_segmentation_runs() {
+        // Shrunken end-to-end check (the bench binary runs the CI scale).
+        let r = super::run(false, 0, 3);
+        assert!(r.n_pixels > 0);
+        assert!(r.scene_agreement_k4 > 0.7, "agreement {}", r.scene_agreement_k4);
+    }
+}

@@ -1,0 +1,157 @@
+//! Micro-bench substrate (offline replacement for criterion): warmup +
+//! repeated timing with summary statistics, plus shared helpers for the
+//! figure drivers.
+
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// Time `f` with `warmup` unmeasured runs and `reps` measured ones.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.elapsed_secs());
+    }
+    let s = Summary::of(&times);
+    println!(
+        "  {name:<44} mean {:>9.4}s  min {:>9.4}s  (x{reps})",
+        s.mean, s.min
+    );
+    s
+}
+
+/// Shared bench CLI: `cargo bench --bench X -- [--full] [--sizes a,b,c]`.
+#[derive(Debug, Clone)]
+pub struct BenchArgs {
+    pub full: bool,
+    pub sizes: Option<Vec<usize>>,
+    pub seed: u64,
+    pub repeats: Option<usize>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> BenchArgs {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut full = std::env::var("NFFT_BENCH_FULL").is_ok();
+        let mut sizes = None;
+        let mut seed = 42;
+        let mut repeats = None;
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--full" => full = true,
+                "--sizes" => {
+                    if let Some(v) = it.next() {
+                        sizes = Some(
+                            v.split(',')
+                                .filter_map(|s| s.trim().parse().ok())
+                                .collect(),
+                        );
+                    }
+                }
+                "--seed" => {
+                    if let Some(v) = it.next() {
+                        seed = v.parse().unwrap_or(42);
+                    }
+                }
+                "--repeats" => {
+                    if let Some(v) = it.next() {
+                        repeats = v.parse().ok();
+                    }
+                }
+                // `cargo bench` passes --bench; ignore unknown flags so
+                // harness filters don't break us.
+                _ => {}
+            }
+        }
+        BenchArgs { full, sizes, seed, repeats }
+    }
+}
+
+/// Max |λ_j − λ_j^{ref}| over the leading k pairs (paper eq. 6.1).
+pub fn max_eigenvalue_error(got: &[f64], reference: &[f64]) -> f64 {
+    got.iter()
+        .zip(reference)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Max residual ‖A v_j − λ_j v_j‖₂ over pairs (paper eq. 6.2),
+/// evaluated with the supplied (high-accuracy) operator.
+pub fn max_residual_norm(
+    op: &dyn crate::graph::operator::LinearOperator,
+    eigenvalues: &[f64],
+    vectors: &crate::linalg::dense::DenseMatrix,
+) -> f64 {
+    residual_norms(op, eigenvalues, vectors).into_iter().fold(0.0, f64::max)
+}
+
+/// Residual per eigenpair (Fig 3c).
+pub fn residual_norms(
+    op: &dyn crate::graph::operator::LinearOperator,
+    eigenvalues: &[f64],
+    vectors: &crate::linalg::dense::DenseMatrix,
+) -> Vec<f64> {
+    let n = vectors.rows;
+    let k = eigenvalues.len().min(vectors.cols);
+    let mut out = Vec::with_capacity(k);
+    let mut av = vec![0.0; n];
+    for (j, &lam) in eigenvalues.iter().take(k).enumerate() {
+        let v: Vec<f64> = (0..n).map(|i| vectors[(i, j)]).collect();
+        op.apply(&v, &mut av);
+        let mut r2 = 0.0;
+        for i in 0..n {
+            let r = av[i] - lam * v[i];
+            r2 += r * r;
+        }
+        out.push(r2.sqrt());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let s = bench("noop-ish", 1, 3, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.min >= 0.0 && s.mean >= s.min);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn eig_error_helper() {
+        assert!((max_eigenvalue_error(&[1.0, 0.5], &[1.0, 0.4]) - 0.1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn residual_of_exact_eigenpair_is_zero() {
+        use crate::graph::operator::FnOperator;
+        use crate::linalg::dense::DenseMatrix;
+        let op = FnOperator {
+            n: 3,
+            f: |x: &[f64], y: &mut [f64]| {
+                y[0] = 2.0 * x[0];
+                y[1] = 3.0 * x[1];
+                y[2] = 4.0 * x[2];
+            },
+        };
+        let mut v = DenseMatrix::zeros(3, 2);
+        v[(0, 0)] = 1.0;
+        v[(1, 1)] = 1.0;
+        let r = residual_norms(&op, &[2.0, 3.0], &v);
+        assert!(r[0].abs() < 1e-15 && r[1].abs() < 1e-15);
+        assert_eq!(max_residual_norm(&op, &[2.0, 3.0], &v), 0.0);
+    }
+}

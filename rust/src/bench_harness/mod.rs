@@ -1,0 +1,16 @@
+//! Benchmark harness — one driver per table/figure of the paper's
+//! evaluation section (§6). Each driver prints the same rows/series the
+//! paper reports and writes `results/figXX_*.csv`. The `rust/benches/*`
+//! binaries (`cargo bench`) are thin wrappers over these functions;
+//! EXPERIMENTS.md records paper-vs-measured for every entry.
+//!
+//! `criterion` is unavailable offline; [`harness`] provides the timing
+//! substrate (monotonic clock, warmup, repetition statistics).
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod harness;

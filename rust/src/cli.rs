@@ -1,0 +1,124 @@
+//! Hand-rolled CLI argument substrate (no `clap` in the offline crate
+//! set): subcommand + `--flag value` / `--switch` parsing with typed
+//! accessors and error messages listing valid options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|v| v.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["eig", "extra", "--n", "2000", "--engine=native", "--full"]);
+        assert_eq!(a.subcommand.as_deref(), Some("eig"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 2000);
+        assert_eq!(a.get("engine"), Some("native"));
+        assert!(a.has("full"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["--k", "ten"]);
+        assert!(a.subcommand.is_none());
+        assert!(a.get_usize("k", 5).is_err());
+        assert_eq!(a.get_f64("sigma", 3.5).unwrap(), 3.5);
+        assert_eq!(a.get_or("engine", "native"), "native");
+    }
+
+    #[test]
+    fn switch_before_flag_value_ambiguity() {
+        // --flag followed by another --x is a switch.
+        let a = parse(&["run", "--verbose", "--n", "10"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["run", "--shift", "-1.5"]);
+        // "-1.5" does not start with "--", so it is a value.
+        assert_eq!(a.get_f64("shift", 0.0).unwrap(), -1.5);
+    }
+}

@@ -1,0 +1,118 @@
+//! Typed run configuration shared by the CLI, examples and benches,
+//! with a parser for simple `key = value` config files (a TOML subset:
+//! comments, strings, numbers, booleans — enough for experiment
+//! presets without serde).
+
+use crate::coordinator::engine::EngineKind;
+use crate::fastsum::kernels::Kernel;
+use crate::fastsum::operator::FastsumParams;
+use std::collections::BTreeMap;
+
+/// Full experiment configuration with paper defaults (§6.1).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub n: usize,
+    pub sigma: f64,
+    pub k: usize,
+    pub setup: usize,
+    pub engine: EngineKind,
+    pub seed: u64,
+    pub tol: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            n: 2000,
+            sigma: 3.5,
+            k: 10,
+            setup: 2,
+            engine: EngineKind::Native,
+            seed: 42,
+            tol: 1e-10,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn fastsum_params(&self) -> FastsumParams {
+        match self.setup {
+            1 => FastsumParams::setup1(),
+            2 => FastsumParams::setup2(),
+            3 => FastsumParams::setup3(),
+            other => panic!("unknown NFFT parameter setup #{other} (1|2|3)"),
+        }
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        Kernel::Gaussian { sigma: self.sigma }
+    }
+
+    pub fn from_args(args: &crate::cli::Args) -> Result<RunConfig, String> {
+        let mut cfg = RunConfig::default();
+        cfg.n = args.get_usize("n", cfg.n)?;
+        cfg.sigma = args.get_f64("sigma", cfg.sigma)?;
+        cfg.k = args.get_usize("k", cfg.k)?;
+        cfg.setup = args.get_usize("setup", cfg.setup)?;
+        cfg.seed = args.get_u64("seed", cfg.seed)?;
+        cfg.tol = args.get_f64("tol", cfg.tol)?;
+        if let Some(e) = args.get("engine") {
+            cfg.engine = e.parse().map_err(|e| format!("{e}"))?;
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse a flat `key = value` file (TOML subset, no sections).
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+        let v = v.trim().trim_matches('"');
+        out.insert(k.trim().to_string(), v.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let c = RunConfig::default();
+        assert_eq!(c.sigma, 3.5);
+        assert_eq!(c.k, 10);
+        assert_eq!(c.fastsum_params().n_band, 32);
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let a = Args::parse(
+            ["eig", "--n", "500", "--setup", "3", "--engine", "dense"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = RunConfig::from_args(&a).unwrap();
+        assert_eq!(c.n, 500);
+        assert_eq!(c.fastsum_params().m, 7);
+        assert_eq!(c.engine, EngineKind::DenseDirect);
+    }
+
+    #[test]
+    fn kv_parser() {
+        let m = parse_kv("a = 1\n# comment\nname = \"x\"\n\nflag = true # t\n").unwrap();
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["name"], "x");
+        assert_eq!(m["flag"], "true");
+        assert!(parse_kv("garbage").is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Engine registry: build the normalised-adjacency operator for a
+//! point cloud with the requested backend.
+
+use crate::fastsum::kernels::Kernel;
+use crate::fastsum::operator::FastsumParams;
+use crate::fastsum::NormalizedAdjacency;
+use crate::graph::dense::{DenseKernelOperator, DenseMode};
+use crate::graph::normalized::NormalizedOperator;
+use crate::graph::operator::LinearOperator;
+use crate::runtime::{HloFastsumOperator, Manifest, PjrtContext};
+use std::sync::Arc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Native rust NFFT fastsum (the default production engine).
+    Native,
+    /// AOT JAX/Pallas artifact executed through PJRT.
+    Hlo,
+    /// O(n²) direct evaluation (the paper's baseline).
+    DenseDirect,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "native" | "nfft" => Ok(EngineKind::Native),
+            "hlo" | "pjrt" => Ok(EngineKind::Hlo),
+            "dense" | "direct" => Ok(EngineKind::DenseDirect),
+            other => anyhow::bail!("unknown engine '{other}' (native|hlo|dense)"),
+        }
+    }
+}
+
+/// Everything needed to build a normalised-adjacency operator.
+#[derive(Debug, Clone)]
+pub struct OperatorSpec {
+    pub points: Vec<f64>,
+    pub d: usize,
+    pub kernel: Kernel,
+    pub params: FastsumParams,
+    pub engine: EngineKind,
+}
+
+/// Holds the lazily-created PJRT context + artifact manifest.
+pub struct EngineRegistry {
+    pjrt: Option<Arc<PjrtContext>>,
+    manifest: Option<Manifest>,
+    artifacts_dir: std::path::PathBuf,
+}
+
+impl EngineRegistry {
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> EngineRegistry {
+        EngineRegistry { pjrt: None, manifest: None, artifacts_dir: artifacts_dir.into() }
+    }
+
+    fn ensure_pjrt(&mut self) -> anyhow::Result<(Arc<PjrtContext>, &Manifest)> {
+        if self.pjrt.is_none() {
+            self.pjrt = Some(Arc::new(PjrtContext::cpu()?));
+        }
+        if self.manifest.is_none() {
+            self.manifest = Some(Manifest::load(&self.artifacts_dir)?);
+        }
+        Ok((self.pjrt.clone().unwrap(), self.manifest.as_ref().unwrap()))
+    }
+
+    /// Build the `A = D^{-1/2} W D^{-1/2}` operator for a spec.
+    pub fn build_normalized(&mut self, spec: &OperatorSpec) -> anyhow::Result<Arc<dyn LinearOperator>> {
+        match spec.engine {
+            EngineKind::Native => {
+                let op = NormalizedAdjacency::new(&spec.points, spec.d, spec.kernel, spec.params)?;
+                Ok(Arc::new(op))
+            }
+            EngineKind::DenseDirect => Ok(Arc::new(DenseKernelOperator::new(
+                &spec.points,
+                spec.d,
+                spec.kernel,
+                DenseMode::Normalized,
+            ))),
+            EngineKind::Hlo => {
+                let (ctx, manifest) = self.ensure_pjrt()?;
+                let w = HloFastsumOperator::new(
+                    &ctx,
+                    manifest,
+                    &spec.points,
+                    spec.d,
+                    spec.kernel,
+                    spec.params,
+                )?;
+                Ok(Arc::new(NormalizedOperator::new(Arc::new(w))?))
+            }
+        }
+    }
+
+    /// Build the raw adjacency (`W x`) operator for a spec.
+    pub fn build_adjacency(&mut self, spec: &OperatorSpec) -> anyhow::Result<Arc<dyn LinearOperator>> {
+        match spec.engine {
+            EngineKind::Native => Ok(Arc::new(crate::fastsum::FastsumOperator::new(
+                &spec.points,
+                spec.d,
+                spec.kernel,
+                spec.params,
+            ))),
+            EngineKind::DenseDirect => Ok(Arc::new(DenseKernelOperator::new(
+                &spec.points,
+                spec.d,
+                spec.kernel,
+                DenseMode::Adjacency,
+            ))),
+            EngineKind::Hlo => {
+                let (ctx, manifest) = self.ensure_pjrt()?;
+                Ok(Arc::new(HloFastsumOperator::new(
+                    &ctx,
+                    manifest,
+                    &spec.points,
+                    spec.d,
+                    spec.kernel,
+                    spec.params,
+                )?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(engine: EngineKind) -> OperatorSpec {
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let ds = crate::data::spiral::generate(
+            crate::data::spiral::SpiralParams { per_class: 12, ..Default::default() },
+            &mut rng,
+        );
+        OperatorSpec {
+            points: ds.points,
+            d: 3,
+            kernel: Kernel::Gaussian { sigma: 3.5 },
+            params: FastsumParams::setup2(),
+            engine,
+        }
+    }
+
+    #[test]
+    fn engine_kind_parsing() {
+        assert_eq!("native".parse::<EngineKind>().unwrap(), EngineKind::Native);
+        assert_eq!("hlo".parse::<EngineKind>().unwrap(), EngineKind::Hlo);
+        assert_eq!("dense".parse::<EngineKind>().unwrap(), EngineKind::DenseDirect);
+        assert!("bogus".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn native_and_dense_engines_agree() {
+        let mut reg = EngineRegistry::new("artifacts");
+        let a = reg.build_normalized(&tiny_spec(EngineKind::Native)).unwrap();
+        let b = reg.build_normalized(&tiny_spec(EngineKind::DenseDirect)).unwrap();
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        let x = rng.normal_vec(a.dim());
+        let ya = a.apply_vec(&x);
+        let yb = b.apply_vec(&x);
+        for (u, v) in ya.iter().zip(&yb) {
+            assert!((u - v).abs() < 1e-7 * (1.0 + v.abs()));
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Job types the coordinator executes.
+
+use crate::krylov::cg::CgOptions;
+use crate::krylov::lanczos::LanczosOptions;
+use crate::nystrom::hybrid::HybridNystromOptions;
+
+/// A unit of work against a built operator.
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// k largest eigenpairs of A via NFFT-Lanczos.
+    Eig(LanczosOptions),
+    /// Solve (I + β L_s) u = f (the §6.2.3 SSL system).
+    SslSolve { beta: f64, rhs: Vec<f64>, opts: CgOptions },
+    /// Hybrid Nyström eigen-approximation (Alg 5.1).
+    HybridNystrom(HybridNystromOptions),
+    /// Raw matvec A·x (goes through the batcher).
+    Matvec { x: Vec<f64> },
+}
+
+/// Results, mirroring [`Job`].
+#[derive(Debug)]
+pub enum JobResult {
+    Eig(crate::krylov::lanczos::EigResult),
+    Solve(crate::krylov::cg::CgResult),
+    HybridNystrom(Result<crate::nystrom::NystromResult, crate::nystrom::NystromError>),
+    Matvec(Vec<f64>),
+}
+
+impl Job {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Job::Eig(_) => "eig",
+            Job::SslSolve { .. } => "ssl-solve",
+            Job::HybridNystrom(_) => "hybrid-nystrom",
+            Job::Matvec { .. } => "matvec",
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Lightweight, lock-free-ish metrics for the coordinator: atomic
+//! counters plus a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency buckets in microseconds (upper bounds).
+const BUCKETS_US: [u64; 14] = [
+    10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 10_000_000,
+    100_000_000, u64::MAX,
+];
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub matvecs: AtomicU64,
+    pub matvec_batches: AtomicU64,
+    /// Total vectors flushed through the batcher.
+    pub batched_vectors: AtomicU64,
+    latency_buckets: [AtomicU64; 14],
+    latency_total_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, micros: u64) {
+        let idx = BUCKETS_US.iter().position(|&b| micros <= b).unwrap_or(13);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_total_us.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    pub fn latency_count(&self) -> u64 {
+        self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.latency_count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_total_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile from the histogram (upper bucket bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total = self.latency_count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return BUCKETS_US[i];
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn report(&self) -> String {
+        let q = |p: f64| -> String {
+            let v = self.latency_quantile_us(p);
+            if v == u64::MAX {
+                ">100s".to_string()
+            } else {
+                format!("{v}us")
+            }
+        };
+        format!(
+            "jobs: {} submitted, {} completed, {} failed | matvecs: {} ({} batches, {} vectors) | latency: mean {:.0}us p50 <={} p99 <={}",
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.matvecs.load(Ordering::Relaxed),
+            self.matvec_batches.load(Ordering::Relaxed),
+            self.batched_vectors.load(Ordering::Relaxed),
+            self.mean_latency_us(),
+            q(0.5),
+            q(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histogram() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(5);
+        m.record_latency(50);
+        m.record_latency(500_000);
+        assert_eq!(m.latency_count(), 3);
+        assert!(m.mean_latency_us() > 0.0);
+        assert_eq!(m.latency_quantile_us(0.3), 10);
+        assert_eq!(m.latency_quantile_us(1.0), 1_000_000);
+        let r = m.report();
+        assert!(r.contains("3 submitted"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.latency_quantile_us(0.99), 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 coordinator — the service layer that owns the request path.
+//!
+//! The paper's contribution is numerical, so the coordinator is the
+//! *operational* shell around it: a typed job queue
+//! (eigensolve / linear-solve / raw matvec), a matvec **batcher** that
+//! coalesces single-vector requests into block applications (the
+//! hybrid Nyström method and multi-RHS solvers submit many columns;
+//! engines amortise setup across a block), a worker pool on std
+//! threads, per-engine metrics, and the engine registry that picks
+//! between the native NFFT engine, the PJRT artifact engine and the
+//! dense direct baseline.
+
+pub mod batcher;
+pub mod engine;
+pub mod jobs;
+pub mod metrics;
+pub mod service;
+
+pub use engine::{EngineKind, EngineRegistry, OperatorSpec};
+pub use jobs::{Job, JobResult};
+pub use metrics::Metrics;
+pub use service::Coordinator;

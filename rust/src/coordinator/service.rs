@@ -1,0 +1,258 @@
+//! The coordinator service: a worker pool consuming a typed job queue
+//! against one built operator. Single-producer API, multi-worker
+//! execution (matvec-heavy jobs run one per worker; the engines'
+//! internal workspaces are mutex-guarded, so wall-clock parallelism is
+//! bounded by the engine — on the 1-vCPU reference box the default is
+//! one worker, but the machinery is exercised with more in tests).
+
+use crate::coordinator::jobs::{Job, JobResult};
+use crate::coordinator::metrics::Metrics;
+use crate::graph::laplacian::ShiftedOperator;
+use crate::graph::operator::LinearOperator;
+use crate::krylov::cg::cg_solve;
+use crate::krylov::lanczos::lanczos_eigs;
+use crate::nystrom::hybrid::hybrid_nystrom;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum Envelope {
+    Work { id: u64, job: Job, reply: Sender<(u64, JobResult)> },
+    Shutdown,
+}
+
+pub struct Coordinator {
+    op: Arc<dyn LinearOperator>,
+    tx: Sender<Envelope>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: u64,
+}
+
+/// Handle to an in-flight job.
+pub struct JobHandle {
+    pub id: u64,
+    rx: Receiver<(u64, JobResult)>,
+}
+
+impl JobHandle {
+    /// Block until the result arrives.
+    pub fn wait(self) -> JobResult {
+        let (_, result) = self.rx.recv().expect("coordinator dropped reply channel");
+        result
+    }
+}
+
+impl Coordinator {
+    pub fn new(op: Arc<dyn LinearOperator>, workers: usize) -> Coordinator {
+        assert!(workers >= 1);
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = channel::<Envelope>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = shared_rx.clone();
+            let op = op.clone();
+            let metrics = metrics.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(Envelope::Work { id, job, reply }) => {
+                        let t = std::time::Instant::now();
+                        let result = run_job(op.as_ref(), &op, &job);
+                        metrics.record_latency(t.elapsed().as_micros() as u64);
+                        metrics
+                            .jobs_completed
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let _ = reply.send((id, result));
+                    }
+                    Ok(Envelope::Shutdown) | Err(_) => return,
+                }
+            }));
+        }
+        Coordinator { op, tx, workers: handles, metrics, next_id: 0 }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn operator(&self) -> &Arc<dyn LinearOperator> {
+        &self.op
+    }
+
+    /// Submit a job; returns a handle to wait on.
+    pub fn submit(&mut self, job: Job) -> JobHandle {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.metrics.jobs_submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply, rx) = channel();
+        self.tx
+            .send(Envelope::Work { id, job, reply })
+            .expect("worker pool is gone");
+        JobHandle { id, rx }
+    }
+
+    /// Graceful shutdown: drains queued work before stopping (workers
+    /// process FIFO; shutdown messages are queued after all work).
+    pub fn shutdown(mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Envelope::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Envelope::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_job(op: &dyn LinearOperator, op_arc: &Arc<dyn LinearOperator>, job: &Job) -> JobResult {
+    match job {
+        Job::Eig(opts) => JobResult::Eig(lanczos_eigs(op, *opts)),
+        Job::SslSolve { beta, rhs, opts } => {
+            let system = ShiftedOperator::ssl_system(op_arc.clone(), *beta);
+            JobResult::Solve(cg_solve(&system, rhs, opts))
+        }
+        Job::HybridNystrom(opts) => JobResult::HybridNystrom(hybrid_nystrom(op, *opts)),
+        Job::Matvec { x } => {
+            let mut y = vec![0.0; op.dim()];
+            op.apply(x, &mut y);
+            JobResult::Matvec(y)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastsum::{FastsumParams, Kernel, NormalizedAdjacency};
+    use crate::krylov::cg::CgOptions;
+    use crate::krylov::lanczos::LanczosOptions;
+
+    fn spiral_operator(n: usize) -> Arc<dyn LinearOperator> {
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let ds = crate::data::spiral::generate(
+            crate::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+            &mut rng,
+        );
+        Arc::new(
+            NormalizedAdjacency::new(
+                &ds.points,
+                3,
+                Kernel::Gaussian { sigma: 3.5 },
+                FastsumParams::setup1(),
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn eig_job_roundtrip() {
+        let op = spiral_operator(100);
+        let mut c = Coordinator::new(op, 1);
+        let h = c.submit(Job::Eig(LanczosOptions { k: 3, tol: 1e-8, ..Default::default() }));
+        match h.wait() {
+            JobResult::Eig(r) => {
+                assert!((r.eigenvalues[0] - 1.0).abs() < 1e-4);
+            }
+            _ => panic!("wrong result type"),
+        }
+        assert_eq!(c.metrics().jobs_completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn multiple_jobs_multiple_workers() {
+        let op = spiral_operator(50);
+        let mut c = Coordinator::new(op.clone(), 3);
+        let n = op.dim();
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        let xs: Vec<Vec<f64>> = (0..10).map(|_| rng.normal_vec(n)).collect();
+        let handles: Vec<_> =
+            xs.iter().map(|x| c.submit(Job::Matvec { x: x.clone() })).collect();
+        for (x, h) in xs.iter().zip(handles) {
+            match h.wait() {
+                JobResult::Matvec(y) => {
+                    let want = op.apply_vec(x);
+                    for (a, b) in y.iter().zip(&want) {
+                        assert!((a - b).abs() < 1e-12);
+                    }
+                }
+                _ => panic!("wrong result type"),
+            }
+        }
+        let m = c.metrics();
+        assert_eq!(m.jobs_submitted.load(std::sync::atomic::Ordering::Relaxed), 10);
+        assert_eq!(m.jobs_completed.load(std::sync::atomic::Ordering::Relaxed), 10);
+        c.shutdown();
+    }
+
+    #[test]
+    fn ssl_solve_job() {
+        let op = spiral_operator(50);
+        let n = op.dim();
+        let mut c = Coordinator::new(op, 1);
+        let mut rhs = vec![0.0; n];
+        rhs[0] = 1.0;
+        rhs[n - 1] = -1.0;
+        let h = c.submit(Job::SslSolve {
+            beta: 10.0,
+            rhs,
+            opts: CgOptions { tol: 1e-8, ..Default::default() },
+        });
+        match h.wait() {
+            JobResult::Solve(r) => assert!(r.converged, "rel res {}", r.rel_residual),
+            _ => panic!("wrong result type"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn jobs_complete_metric_matches_property() {
+        crate::util::proptest::check(
+            crate::util::proptest::Config { cases: 8, seed: 99 },
+            "coordinator drains all jobs",
+            |rng| {
+                let op = spiral_operator(50);
+                let n = op.dim();
+                let workers = 1 + rng.below(3);
+                let mut c = Coordinator::new(op, workers);
+                let jobs = 1 + rng.below(6);
+                let handles: Vec<_> = (0..jobs)
+                    .map(|_| c.submit(Job::Matvec { x: rng.normal_vec(n) }))
+                    .collect();
+                for h in handles {
+                    let _ = h.wait();
+                }
+                let done =
+                    c.metrics().jobs_completed.load(std::sync::atomic::Ordering::Relaxed);
+                crate::prop_assert!(
+                    done == jobs as u64,
+                    "completed {done} != submitted {jobs}"
+                );
+                c.shutdown();
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shutdown_after_drop_is_safe() {
+        let op = spiral_operator(50);
+        let c = Coordinator::new(op, 2);
+        drop(c); // Drop impl joins workers without deadlock.
+    }
+}

@@ -1,0 +1,87 @@
+//! Isotropic Gaussian blobs — the generic clustered test distribution
+//! used by unit tests and the KRR example (§6.3 uses a 2-class 2-d
+//! point set).
+
+use super::rng::Rng;
+use super::Dataset;
+
+/// `centers` are the blob means (all of dimension `d`); `sizes[i]`
+/// points are drawn N(center_i, spread² I) with label `i`.
+pub fn generate(centers: &[Vec<f64>], sizes: &[usize], spread: f64, rng: &mut Rng) -> Dataset {
+    assert_eq!(centers.len(), sizes.len());
+    assert!(!centers.is_empty());
+    let d = centers[0].len();
+    assert!(centers.iter().all(|c| c.len() == d));
+    let n: usize = sizes.iter().sum();
+    let mut points = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for (i, (c, &sz)) in centers.iter().zip(sizes).enumerate() {
+        for _ in 0..sz {
+            for k in 0..d {
+                points.push(c[k] + spread * rng.normal());
+            }
+            labels.push(i);
+        }
+    }
+    Dataset { points, labels, n, d }
+}
+
+/// Two interleaving half-circles ("two moons") in 2-d — the classic KRR
+/// / SSL demo geometry used for Fig 9-style decision boundaries.
+pub fn two_moons(n: usize, noise: f64, rng: &mut Rng) -> Dataset {
+    let half = n / 2;
+    let mut points = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..half {
+        let t = std::f64::consts::PI * i as f64 / (half.max(2) - 1) as f64;
+        points.push(t.cos() + noise * rng.normal());
+        points.push(t.sin() + noise * rng.normal());
+        labels.push(0);
+    }
+    for i in 0..(n - half) {
+        let t = std::f64::consts::PI * i as f64 / ((n - half).max(2) - 1) as f64;
+        points.push(1.0 - t.cos() + noise * rng.normal());
+        points.push(0.5 - t.sin() + noise * rng.normal());
+        labels.push(1);
+    }
+    Dataset { points, labels, n, d: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_counts_and_means() {
+        let mut rng = Rng::seed_from(1);
+        let centers = vec![vec![0.0, 0.0], vec![10.0, 10.0]];
+        let ds = generate(&centers, &[500, 300], 0.5, &mut rng);
+        assert_eq!(ds.n, 800);
+        assert_eq!(ds.labels.iter().filter(|&&l| l == 0).count(), 500);
+        // Empirical mean of blob 1 near (10, 10).
+        let mut mean = [0.0; 2];
+        let mut cnt = 0.0;
+        for j in 0..ds.n {
+            if ds.labels[j] == 1 {
+                mean[0] += ds.point(j)[0];
+                mean[1] += ds.point(j)[1];
+                cnt += 1.0;
+            }
+        }
+        assert!((mean[0] / cnt - 10.0).abs() < 0.2);
+        assert!((mean[1] / cnt - 10.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn two_moons_shapes() {
+        let mut rng = Rng::seed_from(2);
+        let ds = two_moons(200, 0.05, &mut rng);
+        assert_eq!(ds.n, 200);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.num_classes(), 2);
+        // Moon 0 sits above y≈0 on the unit circle; moon 1 is shifted.
+        let y0: f64 = (0..100).map(|j| ds.point(j)[1]).sum::<f64>() / 100.0;
+        let y1: f64 = (100..200).map(|j| ds.point(j)[1]).sum::<f64>() / 100.0;
+        assert!(y0 > y1, "moons should separate vertically on average");
+    }
+}

@@ -1,0 +1,111 @@
+//! 2-d crescent-fullmoon data — a port of the MATLAB `crescentfullmoon.m`
+//! generator referenced in §6.2.3 (Fig 2b): a disc ("full moon") of
+//! radius `r1` inside an annular crescent between radii `r2` and `r3`,
+//! with a 1-to-3 class size ratio (as in the paper).
+
+use super::rng::Rng;
+use super::Dataset;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CrescentParams {
+    /// Full-moon disc radius. Paper: r1 = 5.
+    pub r1: f64,
+    /// Crescent inner radius. Paper: r2 = 5.
+    pub r2: f64,
+    /// Crescent outer radius. Paper: r3 = 8.
+    pub r3: f64,
+}
+
+impl Default for CrescentParams {
+    fn default() -> Self {
+        CrescentParams { r1: 5.0, r2: 5.0, r3: 8.0 }
+    }
+}
+
+/// Generate `n` points: `n/4` in the full moon (label 0) and the rest in
+/// the crescent (label 1) — matching `crescentfullmoon.m`'s default
+/// 1-to-3 ratio.
+pub fn generate(n: usize, params: CrescentParams, rng: &mut Rng) -> Dataset {
+    let CrescentParams { r1, r2, r3 } = params;
+    assert!(r3 > r2, "outer radius must exceed inner radius");
+    let n_moon = n / 4;
+    let n_crescent = n - n_moon;
+    let mut points = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+
+    // Full moon: uniform on the disc of radius r1 centred at origin.
+    for _ in 0..n_moon {
+        let r = r1 * rng.uniform().sqrt();
+        let th = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+        points.push(r * th.cos());
+        points.push(r * th.sin());
+        labels.push(0);
+    }
+    // Crescent: uniform in the half-annulus r2..r3 (lower half-plane in
+    // the MATLAB original), shifted so it wraps the moon asymmetrically.
+    for _ in 0..n_crescent {
+        let r = (r2 * r2 + (r3 * r3 - r2 * r2) * rng.uniform()).sqrt();
+        let th = rng.uniform_in(std::f64::consts::PI, 2.0 * std::f64::consts::PI);
+        points.push(r * th.cos());
+        points.push(r * th.sin() + (r3 - r2) / 2.0);
+        labels.push(1);
+    }
+    Dataset { points, labels, n, d: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_ratio_one_to_three() {
+        let mut rng = Rng::seed_from(1);
+        let ds = generate(1000, CrescentParams::default(), &mut rng);
+        assert_eq!(ds.labels.iter().filter(|&&l| l == 0).count(), 250);
+        assert_eq!(ds.labels.iter().filter(|&&l| l == 1).count(), 750);
+    }
+
+    #[test]
+    fn moon_points_inside_r1() {
+        let mut rng = Rng::seed_from(2);
+        let p = CrescentParams::default();
+        let ds = generate(400, p, &mut rng);
+        for j in 0..ds.n {
+            let pt = ds.point(j);
+            let r = (pt[0] * pt[0] + pt[1] * pt[1]).sqrt();
+            if ds.labels[j] == 0 {
+                assert!(r <= p.r1 + 1e-9, "moon point escaped: r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn crescent_points_in_annulus() {
+        let mut rng = Rng::seed_from(3);
+        let p = CrescentParams::default();
+        let ds = generate(400, p, &mut rng);
+        let shift = (p.r3 - p.r2) / 2.0;
+        for j in 0..ds.n {
+            if ds.labels[j] == 1 {
+                let pt = ds.point(j);
+                let y = pt[1] - shift;
+                let r = (pt[0] * pt[0] + y * y).sqrt();
+                assert!(
+                    r >= p.r2 - 1e-9 && r <= p.r3 + 1e-9,
+                    "crescent point outside annulus: r={r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn classes_not_linearly_degenerate() {
+        // Sanity: the two classes overlap in y but are radially distinct,
+        // which is what makes the experiment non-trivial for SSL.
+        let mut rng = Rng::seed_from(4);
+        let ds = generate(2000, CrescentParams::default(), &mut rng);
+        let (lo, hi) = ds.bounding_box();
+        assert!(hi[0] - lo[0] > 10.0);
+        assert!(hi[1] - lo[1] > 10.0);
+    }
+}

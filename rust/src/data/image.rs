@@ -1,0 +1,210 @@
+//! Synthetic RGB test image for the §6.2.1 segmentation experiment.
+//!
+//! The paper segments a 533×800 photograph (TU Chemnitz campus) by
+//! building a fully connected graph over all 426 400 pixels with the
+//! colour-space Gaussian kernel (σ = 90, vertices in {0..255}³). The
+//! photo is not redistributable, so we synthesise a piecewise-smooth
+//! scene — sky gradient, sun disc, hill bands, and a textured foreground
+//! — that has the same *structural* property the experiment exercises:
+//! a handful of well-separated colour clusters plus smooth in-cluster
+//! variation and pixel noise.
+
+use super::rng::Rng;
+use super::Dataset;
+
+/// An RGB image stored row-major, one byte per channel.
+#[derive(Debug, Clone)]
+pub struct RgbImage {
+    pub width: usize,
+    pub height: usize,
+    /// `height * width * 3` bytes, row-major, RGB.
+    pub pixels: Vec<u8>,
+}
+
+impl RgbImage {
+    pub fn pixel(&self, y: usize, x: usize) -> [u8; 3] {
+        let i = (y * self.width + x) * 3;
+        [self.pixels[i], self.pixels[i + 1], self.pixels[i + 2]]
+    }
+
+    /// The paper's graph construction: every pixel becomes a vertex
+    /// `v_j ∈ {0..255}³` (colour channels only; spatial position is
+    /// deliberately ignored — that is what makes the graph fully
+    /// connected and dense).
+    pub fn to_dataset(&self) -> Dataset {
+        let n = self.width * self.height;
+        let mut points = Vec::with_capacity(n * 3);
+        for px in self.pixels.chunks_exact(3) {
+            points.push(px[0] as f64);
+            points.push(px[1] as f64);
+            points.push(px[2] as f64);
+        }
+        Dataset { points, labels: vec![0; n], n, d: 3 }
+    }
+
+    /// Write as binary PPM (P6) — viewable everywhere, zero deps.
+    pub fn write_ppm(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use std::io::Write;
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(f, "P6\n{} {}\n255\n", self.width, self.height)?;
+        f.write_all(&self.pixels)
+    }
+}
+
+fn clamp_u8(v: f64) -> u8 {
+    v.max(0.0).min(255.0) as u8
+}
+
+/// Ground-truth region id for a normalized coordinate (used by tests and
+/// the segmentation bench to score cluster agreement).
+pub fn scene_region(u: f64, v: f64) -> usize {
+    // u = x/width in [0,1), v = y/height in [0,1).
+    let sun = {
+        let dx = u - 0.78;
+        let dy = v - 0.18;
+        (dx * dx + dy * dy).sqrt() < 0.09
+    };
+    if sun {
+        3 // sun disc
+    } else if v < 0.45 {
+        0 // sky
+    } else if v < 0.70 {
+        1 // hills
+    } else {
+        2 // foreground meadow
+    }
+}
+
+/// Generate the synthetic scene at the requested resolution.
+///
+/// * region 0: sky — blue gradient darkening towards the top;
+/// * region 1: hills — green-brown horizontal bands;
+/// * region 2: meadow — bright green with high-frequency texture;
+/// * region 3: sun — saturated yellow disc.
+///
+/// `noise` is the per-channel uniform pixel noise amplitude (paper-scale
+/// images are photographs, so some noise is essential to make the
+/// colour clusters non-degenerate).
+pub fn generate_scene(width: usize, height: usize, noise: f64, rng: &mut Rng) -> RgbImage {
+    let mut pixels = Vec::with_capacity(width * height * 3);
+    for y in 0..height {
+        for x in 0..width {
+            let u = x as f64 / width as f64;
+            let v = y as f64 / height as f64;
+            let (mut r, mut g, mut b) = match scene_region(u, v) {
+                // Sky: gradient from deep to pale blue.
+                0 => (60.0 + 60.0 * v, 110.0 + 90.0 * v, 200.0 + 40.0 * v),
+                // Hills: banded green-brown.
+                1 => {
+                    let band = ((v * 40.0).sin() * 0.5 + 0.5) * 30.0;
+                    (90.0 + band, 120.0 + band, 60.0)
+                }
+                // Meadow: textured bright green.
+                2 => {
+                    let tex = ((u * 200.0).sin() * (v * 170.0).cos()) * 15.0;
+                    (70.0 + tex, 170.0 + tex, 60.0 + 0.5 * tex)
+                }
+                // Sun: saturated yellow.
+                _ => (245.0, 220.0, 60.0),
+            };
+            r += noise * (rng.uniform() - 0.5) * 2.0;
+            g += noise * (rng.uniform() - 0.5) * 2.0;
+            b += noise * (rng.uniform() - 0.5) * 2.0;
+            pixels.push(clamp_u8(r));
+            pixels.push(clamp_u8(g));
+            pixels.push(clamp_u8(b));
+        }
+    }
+    RgbImage { width, height, pixels }
+}
+
+/// Paper-scale scene: 800×533 (426 400 pixels).
+pub fn paper_scale(rng: &mut Rng) -> RgbImage {
+    generate_scene(800, 533, 8.0, rng)
+}
+
+/// CI-scale scene: 240×160 (38 400 pixels) — same structure, tractable
+/// on one core for the default bench run.
+pub fn ci_scale(rng: &mut Rng) -> RgbImage {
+    generate_scene(240, 160, 8.0, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_and_dataset() {
+        let mut rng = Rng::seed_from(1);
+        let img = generate_scene(32, 20, 4.0, &mut rng);
+        assert_eq!(img.pixels.len(), 32 * 20 * 3);
+        let ds = img.to_dataset();
+        assert_eq!(ds.n, 640);
+        assert_eq!(ds.d, 3);
+        let (lo, hi) = ds.bounding_box();
+        assert!(lo.iter().all(|&v| v >= 0.0));
+        assert!(hi.iter().all(|&v| v <= 255.0));
+    }
+
+    #[test]
+    fn regions_have_distinct_mean_colors() {
+        let mut rng = Rng::seed_from(2);
+        let img = generate_scene(80, 60, 4.0, &mut rng);
+        let mut sums = [[0.0f64; 3]; 4];
+        let mut counts = [0usize; 4];
+        for y in 0..img.height {
+            for x in 0..img.width {
+                let reg = scene_region(x as f64 / 80.0, y as f64 / 60.0);
+                let px = img.pixel(y, x);
+                for c in 0..3 {
+                    sums[reg][c] += px[c] as f64;
+                }
+                counts[reg] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c > 0), "every region present");
+        let means: Vec<[f64; 3]> = (0..4)
+            .map(|r| {
+                let k = counts[r] as f64;
+                [sums[r][0] / k, sums[r][1] / k, sums[r][2] / k]
+            })
+            .collect();
+        // Pairwise colour separation well above the noise floor.
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                let d2: f64 =
+                    (0..3).map(|c| (means[i][c] - means[j][c]).powi(2)).sum();
+                assert!(
+                    d2.sqrt() > 40.0,
+                    "regions {i},{j} too close: {:?} vs {:?}",
+                    means[i],
+                    means[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ppm_roundtrip_header() {
+        let mut rng = Rng::seed_from(3);
+        let img = generate_scene(8, 4, 0.0, &mut rng);
+        let dir = std::env::temp_dir().join("nfft_krylov_ppm_test");
+        let path = dir.join("t.ppm");
+        img.write_ppm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n8 4\n255\n"));
+        assert_eq!(bytes.len(), 11 + 8 * 4 * 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_scene(16, 16, 5.0, &mut Rng::seed_from(7)).pixels;
+        let b = generate_scene(16, 16, 5.0, &mut Rng::seed_from(7)).pixels;
+        assert_eq!(a, b);
+    }
+}

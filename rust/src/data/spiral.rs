@@ -1,0 +1,160 @@
+//! 3-d spiral data with labels — a port of the MATLAB helper
+//! `generateSpiralDataWithLabels.m` used by the paper (§6.1): `c`
+//! classes of points along interleaved helical arms with Gaussian
+//! jitter, parameters `h` (height) and `r` (radius) with paper defaults
+//! `h = 10`, `r = 2`.
+
+use super::rng::Rng;
+use super::Dataset;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SpiralParams {
+    /// Number of classes (spiral arms). Paper: 5.
+    pub classes: usize,
+    /// Points per class.
+    pub per_class: usize,
+    /// Helix height. Paper default h = 10.
+    pub h: f64,
+    /// Helix radius. Paper default r = 2.
+    pub r: f64,
+    /// Gaussian jitter amplitude on each coordinate.
+    pub noise: f64,
+}
+
+impl Default for SpiralParams {
+    fn default() -> Self {
+        SpiralParams { classes: 5, per_class: 400, h: 10.0, r: 2.0, noise: 0.1 }
+    }
+}
+
+/// Generate the spiral dataset. Total size `classes * per_class`;
+/// labels are the arm indices `0..classes`.
+pub fn generate(params: SpiralParams, rng: &mut Rng) -> Dataset {
+    let SpiralParams { classes, per_class, h, r, noise } = params;
+    assert!(classes >= 1 && per_class >= 1);
+    let n = classes * per_class;
+    let mut points = Vec::with_capacity(n * 3);
+    let mut labels = Vec::with_capacity(n);
+    for c in 0..classes {
+        let phase = 2.0 * std::f64::consts::PI * c as f64 / classes as f64;
+        for i in 0..per_class {
+            // Parameter t runs over two turns of the helix, like the
+            // MATLAB original's linspace over the arm.
+            let t = i as f64 / per_class as f64;
+            let angle = 4.0 * std::f64::consts::PI * t + phase;
+            let radius = r * (0.25 + 0.75 * t);
+            let x = radius * angle.cos() + noise * rng.normal();
+            let y = radius * angle.sin() + noise * rng.normal();
+            let z = h * t + noise * rng.normal();
+            points.extend_from_slice(&[x, y, z]);
+            labels.push(c);
+        }
+    }
+    Dataset { points, labels, n, d: 3 }
+}
+
+/// The Fig 6 variant (§6.2.2): same geometry, but the data are drawn as
+/// multivariate normals around 5 centre points placed on the spiral and
+/// the *true* label of each vertex is the nearest centre.
+pub fn generate_relabeled_blobs(
+    n_total: usize,
+    spread: f64,
+    rng: &mut Rng,
+) -> (Dataset, Vec<[f64; 3]>) {
+    let classes = 5usize;
+    // Centres on the helix of the default spiral parameters.
+    let params = SpiralParams::default();
+    let mut centers = Vec::with_capacity(classes);
+    for c in 0..classes {
+        let t = (c as f64 + 0.5) / classes as f64;
+        let angle = 4.0 * std::f64::consts::PI * t;
+        centers.push([
+            params.r * (0.25 + 0.75 * t) * angle.cos(),
+            params.r * (0.25 + 0.75 * t) * angle.sin(),
+            params.h * t,
+        ]);
+    }
+    let mut points = Vec::with_capacity(n_total * 3);
+    let mut labels = Vec::with_capacity(n_total);
+    for i in 0..n_total {
+        let c = i % classes;
+        let p = [
+            centers[c][0] + spread * rng.normal(),
+            centers[c][1] + spread * rng.normal(),
+            centers[c][2] + spread * rng.normal(),
+        ];
+        // True label = nearest centre (may differ from the generating
+        // centre when blobs overlap — exactly the paper's setup).
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (k, ctr) in centers.iter().enumerate() {
+            let d2 = (p[0] - ctr[0]).powi(2) + (p[1] - ctr[1]).powi(2) + (p[2] - ctr[2]).powi(2);
+            if d2 < best_d {
+                best_d = d2;
+                best = k;
+            }
+        }
+        points.extend_from_slice(&p);
+        labels.push(best);
+    }
+    (Dataset { points, labels, n: n_total, d: 3 }, centers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_labels() {
+        let mut rng = Rng::seed_from(1);
+        let ds = generate(SpiralParams { per_class: 40, ..Default::default() }, &mut rng);
+        assert_eq!(ds.n, 200);
+        assert_eq!(ds.d, 3);
+        assert_eq!(ds.points.len(), 600);
+        assert_eq!(ds.num_classes(), 5);
+        for c in 0..5 {
+            assert_eq!(ds.labels.iter().filter(|&&l| l == c).count(), 40);
+        }
+    }
+
+    #[test]
+    fn geometry_within_expected_bounds() {
+        let mut rng = Rng::seed_from(2);
+        let ds = generate(SpiralParams::default(), &mut rng);
+        let (lo, hi) = ds.bounding_box();
+        // x/y bounded by radius + noise, z by height + noise.
+        assert!(lo[0] > -3.0 && hi[0] < 3.0, "x range {lo:?} {hi:?}");
+        assert!(lo[1] > -3.0 && hi[1] < 3.0);
+        assert!(lo[2] > -1.0 && hi[2] < 11.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seed_from(3);
+        let mut b = Rng::seed_from(3);
+        let p = SpiralParams { per_class: 10, ..Default::default() };
+        assert_eq!(generate(p, &mut a).points, generate(p, &mut b).points);
+    }
+
+    #[test]
+    fn relabeled_blobs_labels_are_nearest_center() {
+        let mut rng = Rng::seed_from(4);
+        let (ds, centers) = generate_relabeled_blobs(500, 0.5, &mut rng);
+        assert_eq!(ds.n, 500);
+        assert_eq!(centers.len(), 5);
+        for j in 0..ds.n {
+            let p = ds.point(j);
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for (k, c) in centers.iter().enumerate() {
+                let d2: f64 =
+                    (0..3).map(|i| (p[i] - c[i]) * (p[i] - c[i])).sum();
+                if d2 < best_d {
+                    best_d = d2;
+                    best = k;
+                }
+            }
+            assert_eq!(ds.labels[j], best);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Fourier coefficients of the regularised kernel (paper eq. 3.4):
+//!
+//! ```text
+//! b̂_l = N^{−d} Σ_{j ∈ I_N^d} K_R(j/N) e^{−2πi j·l/N},   l ∈ I_N^d
+//! ```
+//!
+//! computed with one d-dimensional FFT over an N^d sampling of `K_R`.
+//! Because `K_R` is even, the coefficients are real; we keep them as
+//! `f64` in the same mod-N layout the NFFT uses, so step 2 of Alg 3.1
+//! is a single elementwise multiply.
+
+use super::regularize::RegularizedKernel;
+use crate::fft::{Complex, NdFftPlan};
+
+/// Radial evaluation cache: K_R sampled on the N^d lattice requires
+/// O(N^d) kernel evaluations; for large N (the Laplacian-RBF case uses
+/// N = 512 in d = 2) we pre-tabulate the radial profile on a dense grid
+/// of r² values and interpolate linearly. Exact evaluation is kept for
+/// tests via `exact = true`.
+pub fn kernel_coefficients(reg: &RegularizedKernel, n_band: &[usize]) -> Vec<f64> {
+    let d = n_band.len();
+    let total: usize = n_band.iter().product();
+    let mut samples = vec![Complex::ZERO; total];
+    // Row-major walk of the lattice j ∈ I_N^d (mod-N layout).
+    let mut idx = vec![0usize; d];
+    for s in samples.iter_mut() {
+        let mut r2 = 0.0;
+        for a in 0..d {
+            let na = n_band[a];
+            let pos = idx[a];
+            let j = if pos < na / 2 { pos as f64 } else { pos as f64 - na as f64 };
+            let x = j / na as f64;
+            r2 += x * x;
+        }
+        *s = Complex::from_re(reg.eval_radial(r2.sqrt()));
+        // Odometer.
+        let mut a = d;
+        loop {
+            if a == 0 {
+                break;
+            }
+            a -= 1;
+            idx[a] += 1;
+            if idx[a] < n_band[a] {
+                break;
+            }
+            idx[a] = 0;
+        }
+    }
+    let plan = NdFftPlan::new(n_band);
+    plan.forward(&mut samples);
+    let scale = 1.0 / total as f64;
+    samples.iter().map(|v| v.re * scale).collect()
+}
+
+/// Max |K(y) − K_RF(y)| over random samples in the ball ‖y‖ ≤ 1/2 − ε_B
+/// — the a-posteriori estimate of ‖K_ERR‖∞ from eq. 3.5 the paper
+/// suggests monitoring.
+pub fn estimate_kernel_error(
+    reg: &RegularizedKernel,
+    b_hat: &[f64],
+    n_band: &[usize],
+    samples: usize,
+    rng: &mut crate::data::rng::Rng,
+) -> f64 {
+    let d = n_band.len();
+    let rmax = 0.5 - reg.eps_b;
+    let mut worst = 0.0f64;
+    for _ in 0..samples {
+        // Random direction, random radius.
+        let dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let norm: f64 = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+        let r = rmax * rng.uniform();
+        let y: Vec<f64> = dir.iter().map(|v| v / norm * r).collect();
+        // K_RF(y) = Σ_l b̂_l e^{2πi l y} (real part; b̂ real, K even).
+        let mut krf = 0.0;
+        let mut idx = vec![0usize; d];
+        for &b in b_hat.iter() {
+            let mut phase = 0.0;
+            for a in 0..d {
+                let na = n_band[a];
+                let pos = idx[a];
+                let l = if pos < na / 2 { pos as f64 } else { pos as f64 - na as f64 };
+                phase += l * y[a];
+            }
+            krf += b * (2.0 * std::f64::consts::PI * phase).cos();
+            let mut a = d;
+            loop {
+                if a == 0 {
+                    break;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < n_band[a] {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+        let k = reg.kernel.eval_radial(r);
+        worst = worst.max((k - krf).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastsum::kernels::Kernel;
+
+    #[test]
+    fn coefficients_real_even_symmetric() {
+        // b̂_l = b̂_{−l} because K_R is even.
+        let reg = RegularizedKernel::new(Kernel::Gaussian { sigma: 0.2 }, 4, 0.0625);
+        let band = [16usize, 16];
+        let b = kernel_coefficients(&reg, &band);
+        assert_eq!(b.len(), 256);
+        for l0 in -8i64..8 {
+            for l1 in -8i64..8 {
+                if l0 == -8 || l1 == -8 {
+                    continue; // −N/2 has no mirrored partner in I_N
+                }
+                let i = crate::nfft::flatten_freq(&[l0, l1], &band);
+                let j = crate::nfft::flatten_freq(&[-l0, -l1], &band);
+                assert!(
+                    (b[i] - b[j]).abs() < 1e-12 * (1.0 + b[i].abs()),
+                    "b̂ not even at ({l0},{l1})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trig_poly_interpolates_lattice() {
+        // By construction K_RF(j/N) = K_R(j/N) exactly on the sampling
+        // lattice (discrete Fourier inversion).
+        let reg = RegularizedKernel::new(Kernel::Gaussian { sigma: 0.3 }, 4, 0.125);
+        let band = [32usize];
+        let b = kernel_coefficients(&reg, &band);
+        for jpos in 0..32usize {
+            let j = if jpos < 16 { jpos as f64 } else { jpos as f64 - 32.0 };
+            let x = j / 32.0;
+            let mut krf = 0.0;
+            for (pos, &bc) in b.iter().enumerate() {
+                let l = if pos < 16 { pos as f64 } else { pos as f64 - 32.0 };
+                krf += bc * (2.0 * std::f64::consts::PI * l * x).cos();
+            }
+            let want = reg.eval_radial(x.abs());
+            assert!((krf - want).abs() < 1e-12, "lattice point {x}: {krf} vs {want}");
+        }
+    }
+
+    #[test]
+    fn kernel_error_small_for_smooth_kernel() {
+        // A medium-σ Gaussian on [-1/2,1/2] is well approximated with
+        // N = 32 (the paper's setup #2 regime).
+        let reg = RegularizedKernel::new(Kernel::Gaussian { sigma: 0.1 }, 4, 0.0);
+        let band = [32usize];
+        let b = kernel_coefficients(&reg, &band);
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let err = estimate_kernel_error(&reg, &b, &band, 200, &mut rng);
+        assert!(err < 1e-8, "K_ERR = {err}");
+    }
+
+    #[test]
+    fn error_decreases_with_bandwidth() {
+        let reg = RegularizedKernel::new(Kernel::Gaussian { sigma: 0.15 }, 4, 0.0);
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        let mut errs = Vec::new();
+        for &n in &[8usize, 16, 32] {
+            let band = [n];
+            let b = kernel_coefficients(&reg, &band);
+            errs.push(estimate_kernel_error(&reg, &b, &band, 100, &mut rng));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "not decreasing: {errs:?}");
+    }
+
+    #[test]
+    fn dc_coefficient_is_mean() {
+        let reg = RegularizedKernel::new(Kernel::Gaussian { sigma: 0.3 }, 4, 0.0);
+        let band = [64usize];
+        let b = kernel_coefficients(&reg, &band);
+        // b̂_0 = mean of samples.
+        let mut mean = 0.0;
+        for jpos in 0..64usize {
+            let j = if jpos < 32 { jpos as f64 } else { jpos as f64 - 64.0 };
+            mean += reg.eval_radial((j / 64.0).abs());
+        }
+        mean /= 64.0;
+        let i0 = crate::nfft::flatten_freq(&[0], &band);
+        assert!((b[i0] - mean).abs() < 1e-12);
+    }
+}

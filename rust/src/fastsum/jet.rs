@@ -1,0 +1,221 @@
+//! Truncated Taylor-series ("jet") arithmetic — forward-mode AD of
+//! arbitrary order. The regulariser needs the first `p ≤ 16` derivatives
+//! of each radial kernel at the regularisation boundary; jets give them
+//! exactly for every kernel built from {+, −, ×, /, sqrt, exp, recip}
+//! without per-kernel derivative formulas.
+//!
+//! A `Jet` of order `p` stores Taylor coefficients `c_0..c_{p-1}` of a
+//! function around a point: `f(x₀+t) = Σ c_k t^k + O(t^p)`; the k-th
+//! derivative is `k! · c_k`.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Jet {
+    /// Taylor coefficients c_0 .. c_{order-1}.
+    pub c: Vec<f64>,
+}
+
+impl Jet {
+    /// The constant `v` as a jet of the given order.
+    pub fn constant(v: f64, order: usize) -> Jet {
+        assert!(order >= 1);
+        let mut c = vec![0.0; order];
+        c[0] = v;
+        Jet { c }
+    }
+
+    /// The identity function t ↦ x₀ + t (the AD "seed").
+    pub fn variable(x0: f64, order: usize) -> Jet {
+        assert!(order >= 1);
+        let mut c = vec![0.0; order];
+        c[0] = x0;
+        if order > 1 {
+            c[1] = 1.0;
+        }
+        Jet { c }
+    }
+
+    pub fn order(&self) -> usize {
+        self.c.len()
+    }
+
+    /// k-th derivative value: k! · c_k.
+    pub fn derivative(&self, k: usize) -> f64 {
+        assert!(k < self.order());
+        let mut fact = 1.0;
+        for i in 2..=k {
+            fact *= i as f64;
+        }
+        self.c[k] * fact
+    }
+
+    pub fn add(&self, o: &Jet) -> Jet {
+        self.zip(o, |a, b| a + b)
+    }
+
+    pub fn sub(&self, o: &Jet) -> Jet {
+        self.zip(o, |a, b| a - b)
+    }
+
+    fn zip(&self, o: &Jet, f: impl Fn(f64, f64) -> f64) -> Jet {
+        assert_eq!(self.order(), o.order());
+        Jet { c: self.c.iter().zip(&o.c).map(|(&a, &b)| f(a, b)).collect() }
+    }
+
+    pub fn scale(&self, s: f64) -> Jet {
+        Jet { c: self.c.iter().map(|&a| a * s).collect() }
+    }
+
+    pub fn add_const(&self, s: f64) -> Jet {
+        let mut c = self.c.clone();
+        c[0] += s;
+        Jet { c }
+    }
+
+    /// Cauchy product, truncated to the jet order.
+    pub fn mul(&self, o: &Jet) -> Jet {
+        let p = self.order();
+        assert_eq!(p, o.order());
+        let mut c = vec![0.0; p];
+        for i in 0..p {
+            if self.c[i] == 0.0 {
+                continue;
+            }
+            for j in 0..(p - i) {
+                c[i + j] += self.c[i] * o.c[j];
+            }
+        }
+        Jet { c }
+    }
+
+    pub fn square(&self) -> Jet {
+        self.mul(self)
+    }
+
+    /// exp(f): standard recurrence g₀ = e^{f₀},
+    /// g_k = (1/k) Σ_{j=1..k} j f_j g_{k−j}.
+    pub fn exp(&self) -> Jet {
+        let p = self.order();
+        let mut g = vec![0.0; p];
+        g[0] = self.c[0].exp();
+        for k in 1..p {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                acc += j as f64 * self.c[j] * g[k - j];
+            }
+            g[k] = acc / k as f64;
+        }
+        Jet { c: g }
+    }
+
+    /// sqrt(f), f₀ > 0: g₀ = √f₀,
+    /// g_k = (f_k − Σ_{j=1..k−1} g_j g_{k−j}) / (2 g₀).
+    pub fn sqrt(&self) -> Jet {
+        let p = self.order();
+        assert!(self.c[0] > 0.0, "jet sqrt at non-positive value");
+        let mut g = vec![0.0; p];
+        g[0] = self.c[0].sqrt();
+        for k in 1..p {
+            let mut acc = self.c[k];
+            for j in 1..k {
+                acc -= g[j] * g[k - j];
+            }
+            g[k] = acc / (2.0 * g[0]);
+        }
+        Jet { c: g }
+    }
+
+    /// 1/f, f₀ ≠ 0: g₀ = 1/f₀,
+    /// g_k = −(1/f₀) Σ_{j=1..k} f_j g_{k−j}.
+    pub fn recip(&self) -> Jet {
+        let p = self.order();
+        assert!(self.c[0] != 0.0, "jet recip at zero");
+        let mut g = vec![0.0; p];
+        g[0] = 1.0 / self.c[0];
+        for k in 1..p {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                acc += self.c[j] * g[k - j];
+            }
+            g[k] = -acc / self.c[0];
+        }
+        Jet { c: g }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polynomial_derivatives_exact() {
+        // f(x) = 3x² - 2x + 1 at x0 = 2: f=9, f'=10, f''=6, f'''=0.
+        let x = Jet::variable(2.0, 5);
+        let f = x.square().scale(3.0).sub(&x.scale(2.0)).add_const(1.0);
+        assert!((f.derivative(0) - 9.0).abs() < 1e-14);
+        assert!((f.derivative(1) - 10.0).abs() < 1e-14);
+        assert!((f.derivative(2) - 6.0).abs() < 1e-14);
+        assert!(f.derivative(3).abs() < 1e-14);
+        assert!(f.derivative(4).abs() < 1e-14);
+    }
+
+    #[test]
+    fn exp_derivatives() {
+        // d^k/dx^k e^{2x} = 2^k e^{2x}.
+        let x0 = 0.3;
+        let x = Jet::variable(x0, 8);
+        let f = x.scale(2.0).exp();
+        let base = (2.0 * x0).exp();
+        for k in 0..8 {
+            let want = 2.0f64.powi(k as i32) * base;
+            assert!(
+                (f.derivative(k) - want).abs() < 1e-12 * want.abs(),
+                "k={k}: {} vs {want}",
+                f.derivative(k)
+            );
+        }
+    }
+
+    #[test]
+    fn gaussian_kernel_derivatives_match_hermite() {
+        // k(r) = e^{-r²/σ²}: k'(r) = -2r/σ² k, k''(r) = (4r²/σ⁴ - 2/σ²) k.
+        let sigma = 1.7;
+        let r0 = 0.45;
+        let r = Jet::variable(r0, 4);
+        let f = r.square().scale(-1.0 / (sigma * sigma)).exp();
+        let k0 = (-(r0 * r0) / (sigma * sigma)).exp();
+        assert!((f.derivative(0) - k0).abs() < 1e-14);
+        let k1 = -2.0 * r0 / (sigma * sigma) * k0;
+        assert!((f.derivative(1) - k1).abs() < 1e-13);
+        let k2 = (4.0 * r0 * r0 / sigma.powi(4) - 2.0 / (sigma * sigma)) * k0;
+        assert!((f.derivative(2) - k2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqrt_and_recip_roundtrip() {
+        let x = Jet::variable(2.5, 6);
+        let s = x.sqrt();
+        let back = s.mul(&s);
+        for k in 0..6 {
+            assert!((back.c[k] - x.c[k]).abs() < 1e-13, "sqrt² ≠ id at k={k}");
+        }
+        let r = x.recip();
+        let one = r.mul(&x);
+        assert!((one.c[0] - 1.0).abs() < 1e-14);
+        for k in 1..6 {
+            assert!(one.c[k].abs() < 1e-13, "x·(1/x) not constant at k={k}");
+        }
+    }
+
+    #[test]
+    fn multiquadric_derivative_closed_form() {
+        // k(r) = sqrt(r² + c²): k'(r) = r / sqrt(r² + c²).
+        let c = 0.8;
+        let r0 = 0.6;
+        let r = Jet::variable(r0, 3);
+        let f = r.square().add_const(c * c).sqrt();
+        let want0 = (r0 * r0 + c * c).sqrt();
+        let want1 = r0 / want0;
+        assert!((f.derivative(0) - want0).abs() < 1e-14);
+        assert!((f.derivative(1) - want1).abs() < 1e-13);
+    }
+}

@@ -1,0 +1,188 @@
+//! The rotational-invariant kernel functions of §2/§6 (eq. 2.2, 2.3,
+//! 6.5): Gaussian, Laplacian RBF, multiquadric and inverse multiquadric.
+//!
+//! The fastsum pipeline rescales all points into the torus
+//! (`v ← ρ v`, Alg 3.2 steps 1–2); [`Kernel::rescaled`] returns the
+//! kernel with parameters adjusted so that kernel values over the
+//! scaled points reproduce the original ones up to the known factor
+//! [`Kernel::output_scale`]:
+//!
+//! * Gaussian / Laplacian RBF: `σ ← ρ σ`, output factor 1 (exact);
+//! * multiquadric: `c ← ρ c`, output factor `1/ρ`
+//!   (`((ρr)² + (ρc)²)^{1/2} = ρ (r² + c²)^{1/2}`);
+//! * inverse multiquadric: `c ← ρ c`, output factor `ρ`.
+
+/// A radial kernel `K(y) = k(‖y‖)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    /// `exp(-‖y‖²/σ²)` (eq. 2.2).
+    Gaussian { sigma: f64 },
+    /// `exp(-‖y‖/σ)` (eq. 6.5).
+    LaplacianRbf { sigma: f64 },
+    /// `(‖y‖² + c²)^{1/2}`.
+    Multiquadric { c: f64 },
+    /// `(‖y‖² + c²)^{-1/2}`.
+    InverseMultiquadric { c: f64 },
+}
+
+impl Kernel {
+    /// Radial profile k(r), r ≥ 0.
+    pub fn eval_radial(&self, r: f64) -> f64 {
+        match *self {
+            Kernel::Gaussian { sigma } => (-(r * r) / (sigma * sigma)).exp(),
+            Kernel::LaplacianRbf { sigma } => (-r / sigma).exp(),
+            Kernel::Multiquadric { c } => (r * r + c * c).sqrt(),
+            Kernel::InverseMultiquadric { c } => 1.0 / (r * r + c * c).sqrt(),
+        }
+    }
+
+    /// First derivative k'(r) — needed by the two-point Taylor
+    /// regularisation (`regularize.rs`).
+    pub fn deriv_radial(&self, r: f64) -> f64 {
+        match *self {
+            Kernel::Gaussian { sigma } => {
+                -2.0 * r / (sigma * sigma) * (-(r * r) / (sigma * sigma)).exp()
+            }
+            Kernel::LaplacianRbf { sigma } => -(-r / sigma).exp() / sigma,
+            Kernel::Multiquadric { c } => r / (r * r + c * c).sqrt(),
+            Kernel::InverseMultiquadric { c } => -r * (r * r + c * c).powf(-1.5),
+        }
+    }
+
+    /// Radial profile evaluated in truncated-Taylor (jet) arithmetic —
+    /// exact derivatives of every order for the regulariser.
+    pub fn eval_radial_jet(&self, r: &super::jet::Jet) -> super::jet::Jet {
+        match *self {
+            Kernel::Gaussian { sigma } => {
+                r.square().scale(-1.0 / (sigma * sigma)).exp()
+            }
+            Kernel::LaplacianRbf { sigma } => r.scale(-1.0 / sigma).exp(),
+            Kernel::Multiquadric { c } => r.square().add_const(c * c).sqrt(),
+            Kernel::InverseMultiquadric { c } => {
+                r.square().add_const(c * c).sqrt().recip()
+            }
+        }
+    }
+
+    /// K evaluated on a difference vector.
+    pub fn eval(&self, diff: &[f64]) -> f64 {
+        let r2: f64 = diff.iter().map(|v| v * v).sum();
+        self.eval_radial(r2.sqrt())
+    }
+
+    /// K(0) — the diagonal value of `W̃ = W + K(0) I` (§3).
+    pub fn at_zero(&self) -> f64 {
+        self.eval_radial(0.0)
+    }
+
+    /// Kernel with parameters adjusted for points scaled by `ρ`.
+    pub fn rescaled(&self, rho: f64) -> Kernel {
+        match *self {
+            Kernel::Gaussian { sigma } => Kernel::Gaussian { sigma: sigma * rho },
+            Kernel::LaplacianRbf { sigma } => Kernel::LaplacianRbf { sigma: sigma * rho },
+            Kernel::Multiquadric { c } => Kernel::Multiquadric { c: c * rho },
+            Kernel::InverseMultiquadric { c } => Kernel::InverseMultiquadric { c: c * rho },
+        }
+    }
+
+    /// Factor mapping kernel values over `ρ`-scaled points back to the
+    /// original: `K_orig(d) = output_scale(ρ) · K_rescaled(ρ d)`.
+    pub fn output_scale(&self, rho: f64) -> f64 {
+        match *self {
+            Kernel::Gaussian { .. } | Kernel::LaplacianRbf { .. } => 1.0,
+            Kernel::Multiquadric { .. } => 1.0 / rho,
+            Kernel::InverseMultiquadric { .. } => rho,
+        }
+    }
+
+    /// Is the kernel smooth at the origin? The Laplacian RBF has a kink
+    /// at r=0 (it still works with the fastsum but needs larger N for
+    /// the same accuracy — §6.2.3 uses N = 512).
+    pub fn smooth_at_origin(&self) -> bool {
+        !matches!(self, Kernel::LaplacianRbf { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Gaussian { .. } => "gaussian",
+            Kernel::LaplacianRbf { .. } => "laplacian_rbf",
+            Kernel::Multiquadric { .. } => "multiquadric",
+            Kernel::InverseMultiquadric { .. } => "inverse_multiquadric",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KERNELS: [Kernel; 4] = [
+        Kernel::Gaussian { sigma: 1.3 },
+        Kernel::LaplacianRbf { sigma: 0.7 },
+        Kernel::Multiquadric { c: 0.9 },
+        Kernel::InverseMultiquadric { c: 0.9 },
+    ];
+
+    #[test]
+    fn gaussian_values() {
+        let k = Kernel::Gaussian { sigma: 2.0 };
+        assert_eq!(k.at_zero(), 1.0);
+        assert!((k.eval_radial(2.0) - (-1.0f64).exp()).abs() < 1e-15);
+        assert!((k.eval(&[1.0, 1.0]) - (-0.5f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let h = 1e-6;
+        for k in KERNELS {
+            for &r in &[0.2, 0.5, 1.0, 2.0] {
+                let fd = (k.eval_radial(r + h) - k.eval_radial(r - h)) / (2.0 * h);
+                let an = k.deriv_radial(r);
+                assert!(
+                    (fd - an).abs() < 1e-6 * (1.0 + an.abs()),
+                    "{:?} at r={r}: fd={fd} an={an}",
+                    k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rescaling_identity() {
+        // K_orig(d) = output_scale(ρ) * K_rescaled(ρ d) for all kernels.
+        let rho = 0.137;
+        let d = [0.4, -0.3, 0.6];
+        let dr: Vec<f64> = d.iter().map(|v| v * rho).collect();
+        for k in KERNELS {
+            let orig = k.eval(&d);
+            let scaled = k.output_scale(rho) * k.rescaled(rho).eval(&dr);
+            assert!(
+                (orig - scaled).abs() < 1e-12 * (1.0 + orig.abs()),
+                "{:?}: {orig} vs {scaled}",
+                k
+            );
+        }
+    }
+
+    #[test]
+    fn monotonicity_properties() {
+        // RBF kernels decay; multiquadric grows.
+        let g = Kernel::Gaussian { sigma: 1.0 };
+        let l = Kernel::LaplacianRbf { sigma: 1.0 };
+        let m = Kernel::Multiquadric { c: 1.0 };
+        let im = Kernel::InverseMultiquadric { c: 1.0 };
+        for w in [0.1, 0.5, 1.0, 2.0].windows(2) {
+            assert!(g.eval_radial(w[0]) > g.eval_radial(w[1]));
+            assert!(l.eval_radial(w[0]) > l.eval_radial(w[1]));
+            assert!(m.eval_radial(w[0]) < m.eval_radial(w[1]));
+            assert!(im.eval_radial(w[0]) > im.eval_radial(w[1]));
+        }
+    }
+
+    #[test]
+    fn names_and_smoothness() {
+        assert_eq!(Kernel::Gaussian { sigma: 1.0 }.name(), "gaussian");
+        assert!(Kernel::Gaussian { sigma: 1.0 }.smooth_at_origin());
+        assert!(!Kernel::LaplacianRbf { sigma: 1.0 }.smooth_at_origin());
+    }
+}

@@ -1,0 +1,29 @@
+//! NFFT-based fast summation — the paper's Algorithms 3.1 and 3.2.
+//!
+//! Pipeline for one matvec `W̃x` (Alg 3.1):
+//!
+//! 1. adjoint NFFT of `x` at the (scaled) nodes → `x̂_l`;
+//! 2. multiply by the Fourier coefficients `b̂_l` of the regularised
+//!    kernel `K_R` → `f̂_l`;
+//! 3. forward NFFT → `f(v_j) ≈ (W̃x)_j`.
+//!
+//! `b̂` comes from sampling `K_R` on an N^d grid and one FFT (eq. 3.4);
+//! `K_R` is the two-point-Taylor regularisation of the radial kernel
+//! ([`regularize`]) built on truncated-Taylor (jet) automatic
+//! differentiation ([`jet`]) so every kernel of [`kernels::Kernel`]
+//! gets exact derivatives of any order.
+//!
+//! [`operator::FastsumOperator`] is `W̃`/`W`; [`normalized`] wraps it
+//! into `A = D^{−1/2} W D^{−1/2}` with NFFT-computed degrees (Alg 3.2),
+//! including the a-posteriori error monitoring of §3.1 (Lemma 3.1).
+
+pub mod coeffs;
+pub mod jet;
+pub mod kernels;
+pub mod normalized;
+pub mod operator;
+pub mod regularize;
+
+pub use kernels::Kernel;
+pub use normalized::NormalizedAdjacency;
+pub use operator::{FastsumOperator, FastsumParams};

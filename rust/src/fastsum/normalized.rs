@@ -1,0 +1,205 @@
+//! Algorithm 3.2: the normalised adjacency `A = D^{−1/2} W D^{−1/2}`
+//! as a [`LinearOperator`] over the fastsum engine, with the §3.1
+//! error-propagation machinery (Lemma 3.1) as queryable diagnostics.
+
+use super::operator::{FastsumOperator, FastsumParams};
+use super::kernels::Kernel;
+use crate::graph::operator::LinearOperator;
+
+pub struct NormalizedAdjacency {
+    pub(crate) fast: FastsumOperator,
+    /// NFFT-approximated degrees d_E (Alg 3.2 step 4).
+    degrees: Vec<f64>,
+    inv_sqrt_deg: Vec<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum NormalizeError {
+    /// A degree came out non-positive — the ε < η condition of
+    /// Lemma 3.1 is violated (fastsum accuracy too low for this data).
+    #[error("non-positive approximate degree {value:.3e} at node {index}; increase N/m (Lemma 3.1 requires eps < eta)")]
+    NonPositiveDegree { index: usize, value: f64 },
+}
+
+impl NormalizedAdjacency {
+    pub fn new(
+        points: &[f64],
+        d: usize,
+        kernel: Kernel,
+        params: FastsumParams,
+    ) -> Result<Self, NormalizeError> {
+        let fast = FastsumOperator::new(points, d, kernel, params);
+        Self::from_operator(fast)
+    }
+
+    pub fn from_operator(fast: FastsumOperator) -> Result<Self, NormalizeError> {
+        let degrees = fast.degrees();
+        let mut inv_sqrt_deg = Vec::with_capacity(degrees.len());
+        for (i, &v) in degrees.iter().enumerate() {
+            if v <= 0.0 {
+                return Err(NormalizeError::NonPositiveDegree { index: i, value: v });
+            }
+            inv_sqrt_deg.push(1.0 / v.sqrt());
+        }
+        Ok(NormalizedAdjacency { fast, degrees, inv_sqrt_deg })
+    }
+
+    pub fn degrees(&self) -> &[f64] {
+        &self.degrees
+    }
+
+    pub fn fastsum(&self) -> &FastsumOperator {
+        &self.fast
+    }
+
+    /// η = d_min / ‖W‖∞ ≈ d_min / max_j d_j — the Lemma 3.1 stability
+    /// margin (‖W‖∞ equals the max row sum of W, i.e. max degree).
+    pub fn eta(&self) -> f64 {
+        let dmin = self.degrees.iter().cloned().fold(f64::INFINITY, f64::min);
+        let dmax = self.degrees.iter().cloned().fold(0.0f64, f64::max);
+        dmin / dmax
+    }
+
+    /// Lemma 3.1 bound `ε(1+η)/(η(η−ε))` for a given relative fastsum
+    /// error ε; `None` when ε ≥ η (bound void — normalisation may
+    /// produce imaginary entries).
+    pub fn lemma31_bound(&self, eps: f64) -> Option<f64> {
+        let eta = self.eta();
+        if eps >= eta {
+            return None;
+        }
+        Some(eps * (1.0 + eta) / (eta * (eta - eps)))
+    }
+}
+
+impl LinearOperator for NormalizedAdjacency {
+    fn dim(&self) -> usize {
+        self.fast.dim()
+    }
+
+    /// Alg 3.2 step 5:
+    /// `y = D^{−1/2} ( W̃(D^{−1/2} x) − K(0) D^{−1/2} x )`.
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        assert_eq!(n, self.dim());
+        let xs: Vec<f64> = x.iter().zip(&self.inv_sqrt_deg).map(|(v, s)| v * s).collect();
+        self.fast.apply_w(&xs, y);
+        for (yi, s) in y.iter_mut().zip(&self.inv_sqrt_deg) {
+            *yi *= s;
+        }
+    }
+
+    fn name(&self) -> &str {
+        "nfft-A"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dense::{DenseKernelOperator, DenseMode};
+
+    fn spiral_points(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        crate::data::spiral::generate(
+            crate::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+            &mut rng,
+        )
+        .points
+    }
+
+    #[test]
+    fn matches_dense_normalized() {
+        let points = spiral_points(120, 1);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let a = NormalizedAdjacency::new(&points, 3, kernel, FastsumParams::setup2()).unwrap();
+        let dense = DenseKernelOperator::new(&points, 3, kernel, DenseMode::Normalized);
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        let x = rng.normal_vec(120);
+        let got = a.apply_vec(&x);
+        let want = dense.apply_vec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn perron_vector_preserved() {
+        // A (D^{1/2} 1) = D^{1/2} 1.
+        let points = spiral_points(100, 3);
+        let a = NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let v: Vec<f64> = a.degrees().iter().map(|&d| d.sqrt()).collect();
+        let av = a.apply_vec(&v);
+        for (x, y) in av.iter().zip(&v) {
+            assert!((x - y).abs() < 1e-7 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn eta_and_bound() {
+        let points = spiral_points(80, 4);
+        let a = NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let eta = a.eta();
+        assert!(eta > 0.0 && eta <= 1.0);
+        assert!(a.lemma31_bound(eta * 0.5).is_some());
+        assert!(a.lemma31_bound(eta).is_none());
+        assert!(a.lemma31_bound(eta * 2.0).is_none());
+        // Bound is increasing in eps.
+        let b1 = a.lemma31_bound(eta * 0.1).unwrap();
+        let b2 = a.lemma31_bound(eta * 0.5).unwrap();
+        assert!(b2 > b1);
+    }
+
+    #[test]
+    fn lemma31_bound_holds_empirically() {
+        // Measure the actual ‖A − A_E‖∞ (dense vs fastsum) and check it
+        // is below the Lemma 3.1 bound computed from the measured ε.
+        let points = spiral_points(60, 5);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        // Coarse setup so the error is visible.
+        let a_e = NormalizedAdjacency::new(&points, 3, kernel, FastsumParams::setup1()).unwrap();
+        let dense = DenseKernelOperator::new(&points, 3, kernel, DenseMode::Normalized);
+        let dense_w = DenseKernelOperator::new(&points, 3, kernel, DenseMode::Adjacency);
+        let n = 60;
+        // ‖E‖∞ and ‖W‖∞ column by column (eq. 3.7).
+        let mut e_rowsum = vec![0.0; n];
+        let mut a_diff_rowsum = vec![0.0; n];
+        let mut e_i = vec![0.0; n];
+        for i in 0..n {
+            e_i[i] = 1.0;
+            let w_fast = a_e.fastsum().apply_vec(&e_i);
+            let w_true = dense_w.apply_vec(&e_i);
+            let a_fast = a_e.apply_vec(&e_i);
+            let a_true = dense.apply_vec(&e_i);
+            for j in 0..n {
+                e_rowsum[j] += (w_fast[j] - w_true[j]).abs();
+                a_diff_rowsum[j] += (a_fast[j] - a_true[j]).abs();
+            }
+            e_i[i] = 0.0;
+        }
+        let e_inf = e_rowsum.iter().cloned().fold(0.0f64, f64::max);
+        let a_diff_inf = a_diff_rowsum.iter().cloned().fold(0.0f64, f64::max);
+        let w_inf = dense_w.degrees().iter().cloned().fold(0.0f64, f64::max);
+        let d_min = dense_w.degrees().iter().cloned().fold(f64::INFINITY, f64::min);
+        let eta = d_min / w_inf;
+        let eps = e_inf / w_inf;
+        assert!(eps < eta, "test setup: need eps < eta (eps={eps}, eta={eta})");
+        let bound = eps * (1.0 + eta) / (eta * (eta - eps));
+        assert!(
+            a_diff_inf <= bound * 1.000001,
+            "Lemma 3.1 violated: measured {a_diff_inf} > bound {bound}"
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! Kernel regularisation (paper §3, following [32 §2]): replace the
+//! radial kernel `k(r)` near the torus boundary by a two-point Taylor
+//! polynomial so that the periodisation of
+//!
+//! ```text
+//! K_R(y) = k(‖y‖)        ‖y‖ ≤ 1/2 − ε_B
+//!        = T_B(‖y‖)      1/2 − ε_B < ‖y‖ ≤ 1/2
+//!        = T_B(1/2)      otherwise (cube corners, d ≥ 2)
+//! ```
+//!
+//! is `p−1` times continuously differentiable, so its Fourier
+//! coefficients decay fast (eq. 3.3/3.4).
+//!
+//! `T_B` is the unique polynomial of degree `2p−2` matching
+//! `k, k', …, k^{(p−1)}` at `r₀ = 1/2 − ε_B` and with vanishing
+//! derivatives `T^{(j)}(1/2) = 0, j = 1..p−1` (so the constant
+//! continuation beyond 1/2 — and the even periodic reflection — is
+//! smooth). Kernel derivatives come from jet AD; the boundary
+//! conditions are solved in the normalised variable `t = (r−r₀)/ε_B`.
+
+use super::jet::Jet;
+use super::kernels::Kernel;
+use crate::linalg::dense::DenseMatrix;
+
+/// The regularised radial kernel `K_R`.
+#[derive(Debug, Clone)]
+pub struct RegularizedKernel {
+    pub kernel: Kernel,
+    /// Smoothness order p (number of matched derivatives). 0 or εB = 0
+    /// disables the Taylor region entirely.
+    pub p: usize,
+    /// Width of the regularisation region ε_B ∈ [0, 1/2).
+    pub eps_b: f64,
+    /// Polynomial coefficients of T_B in t = (r − r₀)/ε_B, t ∈ [0, 1];
+    /// empty when the Taylor region is disabled.
+    taylor: Vec<f64>,
+    r0: f64,
+}
+
+impl RegularizedKernel {
+    pub fn new(kernel: Kernel, p: usize, eps_b: f64) -> RegularizedKernel {
+        assert!((0.0..0.5).contains(&eps_b), "need 0 ≤ ε_B < 1/2");
+        let r0 = 0.5 - eps_b;
+        if eps_b == 0.0 || p == 0 {
+            return RegularizedKernel { kernel, p, eps_b, taylor: Vec::new(), r0 };
+        }
+        assert!(p >= 1, "regularisation smoothness p must be ≥ 1");
+        // Kernel derivatives at r0 via jets (scaled to t-units:
+        // d^j/dt^j = ε_B^j d^j/dr^j).
+        let jet = kernel.eval_radial_jet(&Jet::variable(r0, p));
+        // T(t) = Σ_{i=0}^{2p-2} a_i t^i. Conditions at t = 0 fix
+        // a_j = k^{(j)}(r0) ε_B^j / j!, i.e. a_j = jet.c[j]·ε_B^j.
+        let deg = 2 * p - 2;
+        let ncoef = deg + 1;
+        let mut a = vec![0.0; ncoef];
+        let mut eb_pow = 1.0;
+        for (j, aj) in a.iter_mut().take(p).enumerate() {
+            *aj = jet.c[j] * eb_pow;
+            let _ = j;
+            eb_pow *= eps_b;
+        }
+        // Conditions T^{(j)}(1) = 0 for j = 1..p-1 determine
+        // a_p..a_{2p-2} (p−1 unknowns, p−1 equations).
+        let nunk = ncoef - p;
+        if nunk > 0 {
+            // falling factorial i·(i−1)···(i−j+1)
+            let ff = |i: usize, j: usize| -> f64 {
+                let mut v = 1.0;
+                for t in 0..j {
+                    v *= (i - t) as f64;
+                }
+                v
+            };
+            let mut mat = DenseMatrix::zeros(nunk, nunk);
+            let mut rhs = vec![0.0; nunk];
+            for (row, j) in (1..p).enumerate() {
+                for (col, i) in (p..ncoef).enumerate() {
+                    mat[(row, col)] = ff(i, j);
+                }
+                let mut acc = 0.0;
+                for (i, &ai) in a.iter().enumerate().take(p).skip(j) {
+                    acc += ff(i, j) * ai;
+                }
+                rhs[row] = -acc;
+            }
+            let sol = mat.solve(&rhs).expect("two-point Taylor system is nonsingular");
+            a[p..ncoef].copy_from_slice(&sol);
+        }
+        RegularizedKernel { kernel, p, eps_b, taylor: a, r0 }
+    }
+
+    /// Is the Taylor region active?
+    pub fn regularized(&self) -> bool {
+        !self.taylor.is_empty()
+    }
+
+    /// Evaluate T_B at radius r ∈ [r₀, 1/2].
+    fn taylor_at(&self, r: f64) -> f64 {
+        let t = (r - self.r0) / self.eps_b;
+        // Horner.
+        let mut acc = 0.0;
+        for &c in self.taylor.iter().rev() {
+            acc = acc * t + c;
+        }
+        acc
+    }
+
+    /// K_R as a radial function. `r` may exceed 1/2 (cube corners).
+    pub fn eval_radial(&self, r: f64) -> f64 {
+        if r <= self.r0 {
+            self.kernel.eval_radial(r)
+        } else if self.regularized() {
+            self.taylor_at(r.min(0.5))
+        } else {
+            // ε_B = 0: clamp at the boundary value (constant corners).
+            self.kernel.eval_radial(r.min(0.5))
+        }
+    }
+
+    /// K_R on a d-dimensional offset within the torus cell [−1/2,1/2]^d.
+    pub fn eval(&self, y: &[f64]) -> f64 {
+        let r2: f64 = y.iter().map(|v| v * v).sum();
+        self.eval_radial(r2.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_kernel_inside() {
+        let k = Kernel::Gaussian { sigma: 0.4 };
+        let reg = RegularizedKernel::new(k, 6, 0.1);
+        for &r in &[0.0, 0.1, 0.25, 0.399] {
+            assert_eq!(reg.eval_radial(r), k.eval_radial(r));
+        }
+    }
+
+    #[test]
+    fn continuity_at_r0() {
+        for kernel in [
+            Kernel::Gaussian { sigma: 0.3 },
+            Kernel::LaplacianRbf { sigma: 0.2 },
+            Kernel::Multiquadric { c: 0.5 },
+            Kernel::InverseMultiquadric { c: 0.5 },
+        ] {
+            let reg = RegularizedKernel::new(kernel, 5, 0.125);
+            let r0 = 0.375;
+            let a = reg.eval_radial(r0 - 1e-10);
+            let b = reg.eval_radial(r0 + 1e-10);
+            assert!((a - b).abs() < 1e-7 * (1.0 + a.abs()), "{kernel:?}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn derivative_continuity_at_r0_finite_difference() {
+        let kernel = Kernel::Gaussian { sigma: 0.35 };
+        let p = 6;
+        let reg = RegularizedKernel::new(kernel, p, 0.125);
+        let r0 = 0.375;
+        let h = 1e-3;
+        // Central differences of K_R across r0 should match k's
+        // derivatives because T_B interpolates to order p-1.
+        let d1 = (reg.eval_radial(r0 + h) - reg.eval_radial(r0 - h)) / (2.0 * h);
+        let want = kernel.deriv_radial(r0);
+        assert!((d1 - want).abs() < 1e-5 * (1.0 + want.abs()), "{d1} vs {want}");
+    }
+
+    #[test]
+    fn flat_at_boundary() {
+        let kernel = Kernel::Gaussian { sigma: 0.35 };
+        let reg = RegularizedKernel::new(kernel, 6, 0.125);
+        // T' (1/2) = 0: finite difference around 1/2 from the left.
+        let h = 1e-5;
+        let d1 = (reg.taylor_at(0.5) - reg.taylor_at(0.5 - h)) / h;
+        assert!(d1.abs() < 1e-6, "T'(1/2) = {d1}");
+        // Constant continuation beyond 1/2.
+        assert_eq!(reg.eval_radial(0.6), reg.eval_radial(0.5));
+        assert_eq!(reg.eval_radial(0.8), reg.taylor_at(0.5));
+    }
+
+    #[test]
+    fn eps_zero_clamps() {
+        let kernel = Kernel::Gaussian { sigma: 0.1 };
+        let reg = RegularizedKernel::new(kernel, 4, 0.0);
+        assert!(!reg.regularized());
+        assert_eq!(reg.eval_radial(0.3), kernel.eval_radial(0.3));
+        assert_eq!(reg.eval_radial(0.7), kernel.eval_radial(0.5));
+    }
+
+    #[test]
+    fn p1_is_value_match_only() {
+        // p = 1: T_B is the constant k(r0).
+        let kernel = Kernel::Gaussian { sigma: 0.5 };
+        let reg = RegularizedKernel::new(kernel, 1, 0.25);
+        let v = kernel.eval_radial(0.25);
+        assert!((reg.eval_radial(0.3) - v).abs() < 1e-14);
+        assert!((reg.eval_radial(0.5) - v).abs() < 1e-14);
+    }
+
+    #[test]
+    fn periodization_smoothness_improves_with_p() {
+        // Fourier decay proxy: sample K_R on a fine 1-d grid, FFT, and
+        // compare tail mass for p=2 vs p=8 (same ε_B). Higher p ⇒ less
+        // tail energy.
+        use crate::fft::{Complex, FftPlan};
+        let kernel = Kernel::Multiquadric { c: 0.3 }; // slowly decaying
+        let n = 512usize;
+        let tail_mass = |p: usize| -> f64 {
+            let reg = RegularizedKernel::new(kernel, p, 0.125);
+            let mut buf: Vec<Complex> = (0..n)
+                .map(|j| {
+                    let x = if j < n / 2 { j as f64 } else { j as f64 - n as f64 } / n as f64;
+                    Complex::from_re(reg.eval_radial(x.abs()))
+                })
+                .collect();
+            FftPlan::new(n).forward(&mut buf);
+            // Tail = frequencies |l| in (n/8, n/2].
+            let mut tail = 0.0;
+            for (idx, v) in buf.iter().enumerate() {
+                let l = if idx < n / 2 { idx as i64 } else { idx as i64 - n as i64 };
+                if l.unsigned_abs() as usize > n / 8 {
+                    tail += v.norm_sq();
+                }
+            }
+            tail.sqrt()
+        };
+        let t2 = tail_mass(2);
+        let t8 = tail_mass(8);
+        assert!(t8 < t2 * 1e-2, "tail p=8 ({t8}) should be ≪ tail p=2 ({t2})");
+    }
+}

@@ -1,0 +1,117 @@
+//! Bluestein's chirp-z algorithm: an FFT of arbitrary length `n`
+//! expressed as a cyclic convolution of length `M ≥ 2n-1` (power of
+//! two), which runs on the radix-2 plan. Used whenever a caller asks
+//! for a non-power-of-two transform (e.g. odd kernel-sampling grids).
+
+use super::complex::Complex;
+use super::plan::FftPlan;
+use std::sync::Arc;
+
+pub struct Bluestein {
+    n: usize,
+    m: usize,
+    inner: Arc<FftPlan>,
+    /// Chirp a_j = e^{-iπ j²/n} (forward sign).
+    chirp: Vec<Complex>,
+    /// FFT of the zero-padded conjugate-chirp filter (forward sign).
+    filter_fwd: Vec<Complex>,
+    /// Same for the inverse transform.
+    filter_inv: Vec<Complex>,
+}
+
+impl Bluestein {
+    pub fn new(n: usize) -> Bluestein {
+        assert!(n >= 1);
+        let m = (2 * n - 1).next_power_of_two();
+        let inner = FftPlan::new(m);
+        // chirp[j] = e^{-iπ j² / n}; use modular arithmetic on 2n to keep
+        // the argument small and accurate for large j.
+        let chirp: Vec<Complex> = (0..n)
+            .map(|j| {
+                let jj = (j * j) % (2 * n);
+                Complex::cis(-std::f64::consts::PI * jj as f64 / n as f64)
+            })
+            .collect();
+        let build_filter = |conj: bool| -> Vec<Complex> {
+            let mut b = vec![Complex::ZERO; m];
+            for j in 0..n {
+                let c = if conj { chirp[j].conj() } else { chirp[j] };
+                b[j] = c;
+                if j != 0 {
+                    b[m - j] = c;
+                }
+            }
+            let mut fb = b;
+            inner.forward(&mut fb);
+            fb
+        };
+        // Forward transform convolves with conj(chirp); the inverse uses
+        // the chirp itself (sign flip of the exponent).
+        let filter_fwd = build_filter(true);
+        let filter_inv = build_filter(false);
+        Bluestein { n, m, inner, chirp, filter_fwd, filter_inv }
+    }
+
+    /// Unnormalised transform with sign -1 (forward=true) or +1.
+    pub fn transform(&self, x: &mut [Complex], forward: bool) {
+        assert_eq!(x.len(), self.n);
+        let mut a = vec![Complex::ZERO; self.m];
+        for j in 0..self.n {
+            let c = if forward { self.chirp[j] } else { self.chirp[j].conj() };
+            a[j] = x[j] * c;
+        }
+        self.inner.forward(&mut a);
+        let filter = if forward { &self.filter_fwd } else { &self.filter_inv };
+        for (v, f) in a.iter_mut().zip(filter) {
+            *v = *v * *f;
+        }
+        self.inner.inverse(&mut a);
+        for k in 0..self.n {
+            let c = if forward { self.chirp[k] } else { self.chirp[k].conj() };
+            x[k] = a[k] * c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+
+    #[test]
+    fn bluestein_matches_naive_both_directions() {
+        for &n in &[2usize, 3, 5, 11, 31, 50] {
+            let mut rng = crate::data::rng::Rng::seed_from(n as u64);
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let b = Bluestein::new(n);
+            for &fwd in &[true, false] {
+                let want = naive_dft(&x, if fwd { -1.0 } else { 1.0 });
+                let mut got = x.clone();
+                b.transform(&mut got, fwd);
+                let err = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(g, w)| (*g - *w).abs())
+                    .fold(0.0, f64::max);
+                assert!(err < 1e-9 * n as f64, "n={n} fwd={fwd} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn works_on_power_of_two_too() {
+        // Bluestein must agree with radix-2 even when not strictly needed.
+        let n = 8;
+        let mut rng = crate::data::rng::Rng::seed_from(99);
+        let x: Vec<Complex> =
+            (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+        let want = naive_dft(&x, -1.0);
+        let b = Bluestein::new(n);
+        let mut got = x;
+        b.transform(&mut got, true);
+        let err =
+            got.iter().zip(&want).map(|(g, w)| (*g - *w).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10);
+    }
+}

@@ -1,0 +1,65 @@
+//! From-scratch complex FFT substrate.
+//!
+//! The NFFT engine (and therefore every fastsum matvec on the request
+//! path) runs on these transforms, so they are written plan-based with
+//! precomputed twiddle factors:
+//!
+//! * [`complex::Complex`] — minimal complex arithmetic;
+//! * [`plan::FftPlan`] — iterative radix-2 decimation-in-time for power
+//!   of-two lengths (the NFFT oversampled grid is always a power of
+//!   two) with [`bluestein`] fallback for arbitrary lengths;
+//! * [`ndfft`] — d-dimensional transforms by axis sweeps over a strided
+//!   buffer.
+//!
+//! Conventions: `forward` computes `X_k = Σ_j x_j e^{-2πi jk/n}`
+//! (unnormalised); `inverse` computes `x_j = (1/n) Σ_k X_k e^{+2πi jk/n}`
+//! so that `inverse(forward(x)) = x`.
+
+pub mod bluestein;
+pub mod complex;
+pub mod ndfft;
+pub mod plan;
+
+pub use complex::Complex;
+pub use ndfft::NdFftPlan;
+pub use plan::FftPlan;
+
+/// Naive O(n²) DFT — the correctness oracle for all FFT tests.
+pub fn naive_dft(x: &[Complex], sign: f64) -> Vec<Complex> {
+    let n = x.len();
+    let mut out = vec![Complex::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex::ZERO;
+        for (j, &v) in x.iter().enumerate() {
+            let ang = sign * 2.0 * std::f64::consts::PI * (j as f64) * (k as f64) / n as f64;
+            acc += v * Complex::new(ang.cos(), ang.sin());
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_dft_of_impulse_is_flat() {
+        let mut x = vec![Complex::ZERO; 8];
+        x[0] = Complex::new(1.0, 0.0);
+        let y = naive_dft(&x, -1.0);
+        for v in y {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn naive_dft_parseval() {
+        let x: Vec<Complex> =
+            (0..16).map(|i| Complex::new((i as f64).sin(), (i as f64 * 0.3).cos())).collect();
+        let y = naive_dft(&x, -1.0);
+        let ex: f64 = x.iter().map(|v| v.norm_sq()).sum();
+        let ey: f64 = y.iter().map(|v| v.norm_sq()).sum::<f64>() / 16.0;
+        assert!((ex - ey).abs() < 1e-9 * ex);
+    }
+}

@@ -1,0 +1,222 @@
+//! d-dimensional FFT over a row-major buffer: apply the 1-d plan along
+//! each axis. Axis passes gather strided lines into a contiguous
+//! scratch buffer, transform, and scatter back — cache-friendly enough
+//! for the grid sizes the NFFT uses (≤ 2·N per axis, d ≤ 3).
+
+use super::complex::Complex;
+use super::plan::FftPlan;
+use std::sync::Arc;
+
+pub struct NdFftPlan {
+    shape: Vec<usize>,
+    plans: Vec<Arc<FftPlan>>,
+    total: usize,
+}
+
+impl NdFftPlan {
+    pub fn new(shape: &[usize]) -> NdFftPlan {
+        assert!(!shape.is_empty());
+        assert!(shape.iter().all(|&s| s >= 1));
+        let plans = shape.iter().map(|&s| FftPlan::new(s)).collect();
+        let total = shape.iter().product();
+        NdFftPlan { shape: shape.to_vec(), plans, total }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn forward(&self, x: &mut [Complex]) {
+        self.transform(x, Dir::Forward);
+    }
+
+    pub fn inverse(&self, x: &mut [Complex]) {
+        self.transform(x, Dir::Inverse);
+    }
+
+    pub fn backward_unnormalized(&self, x: &mut [Complex]) {
+        self.transform(x, Dir::BackwardUnnormalized);
+    }
+
+    fn transform(&self, x: &mut [Complex], dir: Dir) {
+        assert_eq!(x.len(), self.total, "NdFFT buffer size mismatch");
+        let d = self.shape.len();
+        // Row-major strides.
+        let mut strides = vec![1usize; d];
+        for k in (0..d.saturating_sub(1)).rev() {
+            strides[k] = strides[k + 1] * self.shape[k + 1];
+        }
+        let mut scratch = vec![Complex::ZERO; *self.shape.iter().max().unwrap()];
+        for axis in 0..d {
+            let len = self.shape[axis];
+            if len == 1 {
+                continue;
+            }
+            let stride = strides[axis];
+            let plan = &self.plans[axis];
+            let lines = self.total / len;
+            for line in 0..lines {
+                // Decompose the line index into (outer, inner) around the
+                // axis: offset = outer * (len * stride) + inner.
+                let outer = line / stride;
+                let inner = line % stride;
+                let base = outer * len * stride + inner;
+                if stride == 1 {
+                    let seg = &mut x[base..base + len];
+                    match dir {
+                        Dir::Forward => plan.forward(seg),
+                        Dir::Inverse => plan.inverse(seg),
+                        Dir::BackwardUnnormalized => plan.backward_unnormalized(seg),
+                    }
+                } else {
+                    let s = &mut scratch[..len];
+                    for (i, v) in s.iter_mut().enumerate() {
+                        *v = x[base + i * stride];
+                    }
+                    match dir {
+                        Dir::Forward => plan.forward(s),
+                        Dir::Inverse => plan.inverse(s),
+                        Dir::BackwardUnnormalized => plan.backward_unnormalized(s),
+                    }
+                    for (i, v) in s.iter().enumerate() {
+                        x[base + i * stride] = *v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Dir {
+    Forward,
+    Inverse,
+    BackwardUnnormalized,
+}
+
+/// Naive d-dimensional DFT oracle for tests.
+pub fn naive_ndft(x: &[Complex], shape: &[usize], sign: f64) -> Vec<Complex> {
+    let total: usize = shape.iter().product();
+    assert_eq!(x.len(), total);
+    let d = shape.len();
+    let mut strides = vec![1usize; d];
+    for k in (0..d.saturating_sub(1)).rev() {
+        strides[k] = strides[k + 1] * shape[k + 1];
+    }
+    let index = |flat: usize| -> Vec<usize> {
+        let mut idx = vec![0usize; d];
+        let mut rem = flat;
+        for k in 0..d {
+            idx[k] = rem / strides[k];
+            rem %= strides[k];
+        }
+        idx
+    };
+    let mut out = vec![Complex::ZERO; total];
+    for (kf, o) in out.iter_mut().enumerate() {
+        let kidx = index(kf);
+        let mut acc = Complex::ZERO;
+        for (jf, &v) in x.iter().enumerate() {
+            let jidx = index(jf);
+            let mut phase = 0.0;
+            for a in 0..d {
+                phase += jidx[a] as f64 * kidx[a] as f64 / shape[a] as f64;
+            }
+            acc += v * Complex::cis(sign * 2.0 * std::f64::consts::PI * phase);
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_grid(total: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        (0..total).map(|_| Complex::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn matches_naive_2d() {
+        let shape = [4usize, 8];
+        let x = rand_grid(32, 1);
+        let want = naive_ndft(&x, &shape, -1.0);
+        let plan = NdFftPlan::new(&shape);
+        let mut got = x;
+        plan.forward(&mut got);
+        let err =
+            got.iter().zip(&want).map(|(g, w)| (*g - *w).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-9, "err={err}");
+    }
+
+    #[test]
+    fn matches_naive_3d_mixed_sizes() {
+        let shape = [3usize, 4, 5];
+        let x = rand_grid(60, 2);
+        let want = naive_ndft(&x, &shape, -1.0);
+        let plan = NdFftPlan::new(&shape);
+        let mut got = x;
+        plan.forward(&mut got);
+        let err =
+            got.iter().zip(&want).map(|(g, w)| (*g - *w).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-8, "err={err}");
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let shape = [8usize, 4, 16];
+        let x = rand_grid(512, 3);
+        let plan = NdFftPlan::new(&shape);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        let err = y.iter().zip(&x).map(|(g, w)| (*g - *w).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10, "err={err}");
+    }
+
+    #[test]
+    fn singleton_axes_are_noops() {
+        let shape = [1usize, 8, 1];
+        let x = rand_grid(8, 4);
+        let plan1 = NdFftPlan::new(&shape);
+        let plan2 = NdFftPlan::new(&[8]);
+        let mut a = x.clone();
+        plan1.forward(&mut a);
+        let mut b = x;
+        plan2.forward(&mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((*u - *v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn separability_rank_one_input() {
+        // FFT of an outer product is the outer product of FFTs.
+        let (n0, n1) = (4usize, 8usize);
+        let mut rng = crate::data::rng::Rng::seed_from(5);
+        let a: Vec<Complex> = (0..n0).map(|_| Complex::new(rng.normal(), 0.0)).collect();
+        let b: Vec<Complex> = (0..n1).map(|_| Complex::new(rng.normal(), 0.0)).collect();
+        let mut grid = vec![Complex::ZERO; n0 * n1];
+        for i in 0..n0 {
+            for j in 0..n1 {
+                grid[i * n1 + j] = a[i] * b[j];
+            }
+        }
+        let plan = NdFftPlan::new(&[n0, n1]);
+        plan.forward(&mut grid);
+        let fa = crate::fft::naive_dft(&a, -1.0);
+        let fb = crate::fft::naive_dft(&b, -1.0);
+        for i in 0..n0 {
+            for j in 0..n1 {
+                let want = fa[i] * fb[j];
+                assert!((grid[i * n1 + j] - want).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Plan-based 1-d FFT. Power-of-two lengths use an iterative radix-2
+//! decimation-in-time butterfly with precomputed bit-reversal and
+//! twiddle tables; other lengths fall back to Bluestein's algorithm
+//! (which itself runs on a power-of-two plan).
+
+use super::bluestein::Bluestein;
+use super::complex::Complex;
+use std::sync::Arc;
+
+enum Kind {
+    Radix2 {
+        /// Bit-reversal permutation.
+        rev: Vec<u32>,
+        /// Twiddles for the forward transform, grouped per stage:
+        /// stage with half-size `m` stores `m` twiddles `e^{-iπk/m}`.
+        twiddles_fwd: Vec<Complex>,
+        /// Conjugate twiddles for the inverse transform.
+        twiddles_inv: Vec<Complex>,
+    },
+    Bluestein(Box<Bluestein>),
+}
+
+/// A reusable FFT plan for a fixed length.
+pub struct FftPlan {
+    n: usize,
+    kind: Kind,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Arc<FftPlan> {
+        assert!(n >= 1, "FFT length must be positive");
+        let kind = if n.is_power_of_two() {
+            let bits = n.trailing_zeros();
+            let mut rev = vec![0u32; n];
+            for (i, r) in rev.iter_mut().enumerate() {
+                *r = (i as u32).reverse_bits() >> (32 - bits.max(1)) as u32;
+            }
+            if n == 1 {
+                rev[0] = 0;
+            }
+            // Flattened per-stage twiddle tables: total n-1 entries.
+            let mut twiddles_fwd = Vec::with_capacity(n.saturating_sub(1));
+            let mut twiddles_inv = Vec::with_capacity(n.saturating_sub(1));
+            let mut m = 1usize;
+            while m < n {
+                for k in 0..m {
+                    let ang = -std::f64::consts::PI * k as f64 / m as f64;
+                    twiddles_fwd.push(Complex::cis(ang));
+                    twiddles_inv.push(Complex::cis(-ang));
+                }
+                m <<= 1;
+            }
+            Kind::Radix2 { rev, twiddles_fwd, twiddles_inv }
+        } else {
+            Kind::Bluestein(Box::new(Bluestein::new(n)))
+        };
+        Arc::new(FftPlan { n, kind })
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place forward transform (e^{-2πi jk/n}, unnormalised).
+    pub fn forward(&self, x: &mut [Complex]) {
+        self.transform(x, true);
+    }
+
+    /// In-place inverse transform (e^{+2πi jk/n}, scaled by 1/n).
+    pub fn inverse(&self, x: &mut [Complex]) {
+        self.transform(x, false);
+        let s = 1.0 / self.n as f64;
+        for v in x.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+
+    /// Unnormalised backward transform (e^{+2πi jk/n}) — what the NFFT
+    /// needs internally (normalisation is folded into the window).
+    pub fn backward_unnormalized(&self, x: &mut [Complex]) {
+        self.transform(x, false);
+    }
+
+    fn transform(&self, x: &mut [Complex], forward: bool) {
+        assert_eq!(x.len(), self.n, "FFT buffer length mismatch");
+        match &self.kind {
+            Kind::Radix2 { rev, twiddles_fwd, twiddles_inv } => {
+                let n = self.n;
+                if n == 1 {
+                    return;
+                }
+                // Bit-reversal permutation.
+                for i in 0..n {
+                    let j = rev[i] as usize;
+                    if i < j {
+                        x.swap(i, j);
+                    }
+                }
+                let tw = if forward { twiddles_fwd } else { twiddles_inv };
+                // Iterative butterflies.
+                let mut m = 1usize; // half block size
+                let mut toff = 0usize; // twiddle offset of this stage
+                while m < n {
+                    let step = m << 1;
+                    let stage_tw = &tw[toff..toff + m];
+                    let mut base = 0usize;
+                    while base < n {
+                        for k in 0..m {
+                            let t = stage_tw[k] * x[base + k + m];
+                            let u = x[base + k];
+                            x[base + k] = u + t;
+                            x[base + k + m] = u - t;
+                        }
+                        base += step;
+                    }
+                    toff += m;
+                    m = step;
+                }
+            }
+            Kind::Bluestein(b) => b.transform(x, forward),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn matches_naive_dft_pow2() {
+        for &n in &[1usize, 2, 4, 8, 64, 256] {
+            let x = rand_signal(n, n as u64);
+            let want = naive_dft(&x, -1.0);
+            let plan = FftPlan::new(n);
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            assert!(max_err(&got, &want) < 1e-9 * (n as f64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_pow2() {
+        for &n in &[2usize, 16, 128, 1024] {
+            let x = rand_signal(n, 100 + n as u64);
+            let plan = FftPlan::new(n);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            plan.inverse(&mut y);
+            assert!(max_err(&y, &x) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft_arbitrary_lengths() {
+        for &n in &[3usize, 5, 6, 7, 12, 17, 100, 243] {
+            let x = rand_signal(n, 200 + n as u64);
+            let want = naive_dft(&x, -1.0);
+            let plan = FftPlan::new(n);
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            assert!(max_err(&got, &want) < 1e-8 * (n as f64).max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_arbitrary_lengths() {
+        for &n in &[3usize, 7, 30, 97] {
+            let x = rand_signal(n, 300 + n as u64);
+            let plan = FftPlan::new(n);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            plan.inverse(&mut y);
+            assert!(max_err(&y, &x) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 64;
+        let a = rand_signal(n, 1);
+        let b = rand_signal(n, 2);
+        let plan = FftPlan::new(n);
+        let mut fa = a.clone();
+        plan.forward(&mut fa);
+        let mut fb = b.clone();
+        plan.forward(&mut fb);
+        let mut fab: Vec<Complex> =
+            a.iter().zip(&b).map(|(x, y)| *x + y.scale(2.5)).collect();
+        plan.forward(&mut fab);
+        for i in 0..n {
+            let want = fa[i] + fb[i].scale(2.5);
+            assert!((fab[i] - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn backward_unnormalized_is_n_times_inverse() {
+        let n = 32;
+        let x = rand_signal(n, 5);
+        let plan = FftPlan::new(n);
+        let mut a = x.clone();
+        plan.backward_unnormalized(&mut a);
+        let mut b = x.clone();
+        plan.inverse(&mut b);
+        for i in 0..n {
+            assert!((a[i] - b[i].scale(n as f64)).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! The dense direct baseline (the paper's "direct method"): O(n²)
+//! matvecs with `W` or `A = D^{-1/2} W D^{-1/2}` where the kernel
+//! entries are recomputed on the fly (never storing the n×n matrix),
+//! exactly as the paper's §6.1 timing setup describes. For small n an
+//! explicit materialisation is available for tests and oracles.
+
+use super::operator::LinearOperator;
+use crate::fastsum::kernels::Kernel;
+use crate::linalg::dense::DenseMatrix;
+
+/// Which operator the matvec realises.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DenseMode {
+    /// `W x` (zero diagonal, eq. 2.3).
+    Adjacency,
+    /// `A x = D^{-1/2} W D^{-1/2} x` (§2).
+    Normalized,
+}
+
+pub struct DenseKernelOperator {
+    points: Vec<f64>,
+    n: usize,
+    d: usize,
+    kernel: Kernel,
+    mode: DenseMode,
+    /// d_j = Σ_i W_ji (precomputed once, like the paper's setup which
+    /// precomputes D^{-1/2} but recomputes W entries per product).
+    inv_sqrt_deg: Vec<f64>,
+    degrees: Vec<f64>,
+}
+
+impl DenseKernelOperator {
+    pub fn new(points: &[f64], d: usize, kernel: Kernel, mode: DenseMode) -> Self {
+        assert!(d > 0 && points.len() % d == 0);
+        let n = points.len() / d;
+        let degrees = compute_degrees(points, n, d, kernel);
+        let inv_sqrt_deg = degrees
+            .iter()
+            .map(|&v| {
+                assert!(v > 0.0, "zero degree: graph has an isolated vertex");
+                1.0 / v.sqrt()
+            })
+            .collect();
+        DenseKernelOperator { points: points.to_vec(), n, d, kernel, mode, inv_sqrt_deg, degrees }
+    }
+
+    pub fn degrees(&self) -> &[f64] {
+        &self.degrees
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    fn w_entry(&self, j: usize, i: usize) -> f64 {
+        if i == j {
+            return 0.0;
+        }
+        let pj = &self.points[j * self.d..(j + 1) * self.d];
+        let pi = &self.points[i * self.d..(i + 1) * self.d];
+        let mut r2 = 0.0;
+        for k in 0..self.d {
+            let t = pj[k] - pi[k];
+            r2 += t * t;
+        }
+        self.kernel.eval_radial(r2.sqrt())
+    }
+
+    /// Materialise W (tests / small-n oracles only).
+    pub fn dense_w(&self) -> DenseMatrix {
+        let mut w = DenseMatrix::zeros(self.n, self.n);
+        for j in 0..self.n {
+            for i in 0..self.n {
+                w[(j, i)] = self.w_entry(j, i);
+            }
+        }
+        w
+    }
+
+    /// Materialise A = D^{-1/2} W D^{-1/2}.
+    pub fn dense_a(&self) -> DenseMatrix {
+        let mut a = self.dense_w();
+        for j in 0..self.n {
+            for i in 0..self.n {
+                a[(j, i)] *= self.inv_sqrt_deg[j] * self.inv_sqrt_deg[i];
+            }
+        }
+        a
+    }
+
+    /// Materialise the symmetric normalised Laplacian L_s = I - A.
+    pub fn dense_ls(&self) -> DenseMatrix {
+        let mut ls = self.dense_a();
+        for j in 0..self.n {
+            for i in 0..self.n {
+                ls[(j, i)] = if i == j { 1.0 - ls[(j, i)] } else { -ls[(j, i)] };
+            }
+        }
+        ls
+    }
+}
+
+/// Degree vector d_j = Σ_{i≠j} K(v_j - v_i), the diagonal of D.
+pub fn compute_degrees(points: &[f64], n: usize, d: usize, kernel: Kernel) -> Vec<f64> {
+    let mut deg = vec![0.0; n];
+    for j in 0..n {
+        let pj = &points[j * d..(j + 1) * d];
+        // Symmetric accumulation: each pair once.
+        for i in (j + 1)..n {
+            let pi = &points[i * d..(i + 1) * d];
+            let mut r2 = 0.0;
+            for k in 0..d {
+                let t = pj[k] - pi[k];
+                r2 += t * t;
+            }
+            let w = kernel.eval_radial(r2.sqrt());
+            deg[j] += w;
+            deg[i] += w;
+        }
+    }
+    deg
+}
+
+impl LinearOperator for DenseKernelOperator {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        match self.mode {
+            DenseMode::Adjacency => {
+                for j in 0..self.n {
+                    let mut acc = 0.0;
+                    for i in 0..self.n {
+                        acc += self.w_entry(j, i) * x[i];
+                    }
+                    y[j] = acc;
+                }
+            }
+            DenseMode::Normalized => {
+                // A x = D^{-1/2} W (D^{-1/2} x)
+                let xs: Vec<f64> =
+                    x.iter().zip(&self.inv_sqrt_deg).map(|(v, s)| v * s).collect();
+                for j in 0..self.n {
+                    let mut acc = 0.0;
+                    for i in 0..self.n {
+                        acc += self.w_entry(j, i) * xs[i];
+                    }
+                    y[j] = acc * self.inv_sqrt_deg[j];
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &str {
+        match self.mode {
+            DenseMode::Adjacency => "dense-W",
+            DenseMode::Normalized => "dense-A",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn sample_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed_from(seed);
+        rng.normal_vec(n * d)
+    }
+
+    #[test]
+    fn w_is_symmetric_zero_diagonal() {
+        let pts = sample_points(12, 3, 1);
+        let op = DenseKernelOperator::new(&pts, 3, Kernel::Gaussian { sigma: 1.5 }, DenseMode::Adjacency);
+        let w = op.dense_w();
+        for j in 0..12 {
+            assert_eq!(w[(j, j)], 0.0);
+            for i in 0..12 {
+                assert!((w[(j, i)] - w[(i, j)]).abs() < 1e-15);
+                assert!(w[(j, i)] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_matches_materialized() {
+        let pts = sample_points(15, 2, 2);
+        let mut rng = Rng::seed_from(3);
+        let x = rng.normal_vec(15);
+        for mode in [DenseMode::Adjacency, DenseMode::Normalized] {
+            let op =
+                DenseKernelOperator::new(&pts, 2, Kernel::Gaussian { sigma: 2.0 }, mode);
+            let m = match mode {
+                DenseMode::Adjacency => op.dense_w(),
+                DenseMode::Normalized => op.dense_a(),
+            };
+            let want = m.matvec(&x);
+            let got = op.apply_vec(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn degrees_are_row_sums() {
+        let pts = sample_points(10, 3, 4);
+        let op = DenseKernelOperator::new(&pts, 3, Kernel::Gaussian { sigma: 1.0 }, DenseMode::Adjacency);
+        let w = op.dense_w();
+        for j in 0..10 {
+            let row_sum: f64 = w.row(j).iter().sum();
+            assert!((op.degrees()[j] - row_sum).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalized_spectral_properties() {
+        // λmax(A) = 1 with eigenvector D^{1/2} 1 (paper §2).
+        let pts = sample_points(20, 2, 5);
+        let op = DenseKernelOperator::new(&pts, 2, Kernel::Gaussian { sigma: 1.5 }, DenseMode::Normalized);
+        // But note: with a zero diagonal, A = D^{-1/2} W D^{-1/2} still
+        // satisfies A (D^{1/2} 1) = D^{-1/2} W 1 = D^{-1/2} D 1 = D^{1/2} 1.
+        let v: Vec<f64> = op.degrees().iter().map(|&d| d.sqrt()).collect();
+        let av = op.apply_vec(&v);
+        for (a, b) in av.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()));
+        }
+        // Spectrum of L_s within [0, 2].
+        let (eigs, _) = crate::linalg::jacobi::sym_eig(&op.dense_ls());
+        for &e in &eigs {
+            assert!(e > -1e-10 && e < 2.0 + 1e-10, "L_s eigenvalue {e} outside [0,2]");
+        }
+        assert!(eigs[0].abs() < 1e-10, "smallest L_s eigenvalue should be 0");
+    }
+
+    #[test]
+    fn laplacian_rbf_kernel_works_too() {
+        let pts = sample_points(8, 2, 6);
+        let op = DenseKernelOperator::new(&pts, 2, Kernel::LaplacianRbf { sigma: 0.5 }, DenseMode::Adjacency);
+        let w = op.dense_w();
+        assert!(w.inf_norm() > 0.0);
+    }
+}

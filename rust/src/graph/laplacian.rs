@@ -1,0 +1,121 @@
+//! Laplacian views over an adjacency-like operator. Given any engine
+//! computing `A x` (the normalised adjacency), the paper's downstream
+//! systems need affine combinations:
+//!
+//! * `L_s x = x - A x` (eq. 2.1);
+//! * `(I + β L_s) x = (1+β) x - β A x` — the kernel-SSL system (eq. 6.4);
+//! * `(K + β I) α` for KRR (§6.3) where the base operator computes `K x`.
+//!
+//! [`ShiftedOperator`] realises `y = α x + β (B x)` for any base `B`.
+
+use super::operator::LinearOperator;
+use std::sync::Arc;
+
+/// Which Laplacian a caller wants (§2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaplacianKind {
+    /// L = D - W.
+    Combinatorial,
+    /// L_s = I - D^{-1/2} W D^{-1/2} (symmetric, eq. 2.1).
+    SymmetricNormalized,
+    /// L_w = I - D^{-1} W (random walk).
+    RandomWalk,
+}
+
+/// `y = alpha · x + beta · (B x)`.
+pub struct ShiftedOperator {
+    pub base: Arc<dyn LinearOperator>,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl ShiftedOperator {
+    /// `L_s = I - A` for a base operator computing `A x`.
+    pub fn laplacian_sym(base: Arc<dyn LinearOperator>) -> Self {
+        ShiftedOperator { base, alpha: 1.0, beta: -1.0 }
+    }
+
+    /// `I + β L_s = (1+β) I - β A` (the SSL system of eq. 6.4).
+    pub fn ssl_system(base: Arc<dyn LinearOperator>, beta: f64) -> Self {
+        ShiftedOperator { base, alpha: 1.0 + beta, beta: -beta }
+    }
+
+    /// `B + β I` (the KRR system `K + β I` of §6.3).
+    pub fn ridge(base: Arc<dyn LinearOperator>, beta: f64) -> Self {
+        ShiftedOperator { base, alpha: beta, beta: 1.0 }
+    }
+}
+
+impl LinearOperator for ShiftedOperator {
+    fn dim(&self) -> usize {
+        self.base.dim()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.base.apply(x, y);
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi = self.alpha * xi + self.beta * *yi;
+        }
+    }
+
+    fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
+        self.base.apply_block(xs, ys);
+        for (yi, xi) in ys.iter_mut().zip(xs) {
+            *yi = self.alpha * xi + self.beta * *yi;
+        }
+    }
+
+    fn name(&self) -> &str {
+        "shifted"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::operator::FnOperator;
+
+    fn double_op() -> Arc<dyn LinearOperator> {
+        Arc::new(FnOperator {
+            n: 2,
+            f: |x: &[f64], y: &mut [f64]| {
+                y[0] = 2.0 * x[0];
+                y[1] = 2.0 * x[1];
+            },
+        })
+    }
+
+    #[test]
+    fn laplacian_sym_of_identity_like() {
+        let ls = ShiftedOperator::laplacian_sym(double_op());
+        // (I - 2I) x = -x
+        assert_eq!(ls.apply_vec(&[1.0, -3.0]), vec![-1.0, 3.0]);
+    }
+
+    #[test]
+    fn ssl_system_formula() {
+        let beta = 10.0;
+        let op = ShiftedOperator::ssl_system(double_op(), beta);
+        // (1+β)x - β·2x = (1-β)x
+        assert_eq!(op.apply_vec(&[1.0, 2.0]), vec![1.0 - beta, 2.0 * (1.0 - beta)]);
+    }
+
+    #[test]
+    fn ridge_formula() {
+        let op = ShiftedOperator::ridge(double_op(), 0.5);
+        // 2x + 0.5x = 2.5x
+        assert_eq!(op.apply_vec(&[2.0, 4.0]), vec![5.0, 10.0]);
+    }
+
+    #[test]
+    fn block_matches_single() {
+        let op = ShiftedOperator::ssl_system(double_op(), 3.0);
+        let xs = [1.0, 0.0, 0.5, -1.0];
+        let mut ys = [0.0; 4];
+        op.apply_block(&xs, &mut ys);
+        let a = op.apply_vec(&xs[0..2]);
+        let b = op.apply_vec(&xs[2..4]);
+        assert_eq!(&ys[0..2], a.as_slice());
+        assert_eq!(&ys[2..4], b.as_slice());
+    }
+}

@@ -1,0 +1,18 @@
+//! Graph-Laplacian operator abstractions.
+//!
+//! Everything on the request path works against [`LinearOperator`]: the
+//! dense direct baseline ([`dense`]), the native NFFT fastsum engine
+//! (`fastsum::NormalizedAdjacency`), the PJRT artifact engine
+//! (`runtime::HloOperator` via the coordinator) and the truncated
+//! eigen-approximations all implement it, so Krylov methods and the
+//! applications are engine-agnostic.
+
+pub mod dense;
+pub mod laplacian;
+pub mod normalized;
+pub mod operator;
+
+pub use dense::DenseKernelOperator;
+pub use laplacian::{LaplacianKind, ShiftedOperator};
+pub use normalized::NormalizedOperator;
+pub use operator::LinearOperator;

@@ -1,0 +1,94 @@
+//! Engine-agnostic normalisation wrapper: given ANY operator computing
+//! the zero-diagonal adjacency `W x`, realise
+//! `A x = D^{−1/2} W D^{−1/2} x` with `D = diag(W·1)` (Alg 3.2 around
+//! an arbitrary engine — used by the PJRT artifact engine; the native
+//! NFFT engine has its own fused implementation in
+//! `fastsum::NormalizedAdjacency`).
+
+use super::operator::LinearOperator;
+use std::sync::Arc;
+
+pub struct NormalizedOperator {
+    w: Arc<dyn LinearOperator>,
+    degrees: Vec<f64>,
+    inv_sqrt_deg: Vec<f64>,
+}
+
+impl NormalizedOperator {
+    pub fn new(w: Arc<dyn LinearOperator>) -> anyhow::Result<NormalizedOperator> {
+        let n = w.dim();
+        let ones = vec![1.0; n];
+        let mut degrees = vec![0.0; n];
+        w.apply(&ones, &mut degrees);
+        let mut inv_sqrt_deg = Vec::with_capacity(n);
+        for (i, &dv) in degrees.iter().enumerate() {
+            anyhow::ensure!(
+                dv > 0.0,
+                "non-positive approximate degree {dv:.3e} at node {i} (Lemma 3.1: eps >= eta)"
+            );
+            inv_sqrt_deg.push(1.0 / dv.sqrt());
+        }
+        Ok(NormalizedOperator { w, degrees, inv_sqrt_deg })
+    }
+
+    pub fn degrees(&self) -> &[f64] {
+        &self.degrees
+    }
+}
+
+impl LinearOperator for NormalizedOperator {
+    fn dim(&self) -> usize {
+        self.w.dim()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let xs: Vec<f64> = x.iter().zip(&self.inv_sqrt_deg).map(|(v, s)| v * s).collect();
+        self.w.apply(&xs, y);
+        for (yi, s) in y.iter_mut().zip(&self.inv_sqrt_deg) {
+            *yi *= s;
+        }
+    }
+
+    fn name(&self) -> &str {
+        "normalized"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastsum::Kernel;
+    use crate::graph::dense::{DenseKernelOperator, DenseMode};
+
+    #[test]
+    fn wrapper_matches_fused_dense_normalized() {
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let points = rng.normal_vec(30 * 2);
+        let kernel = Kernel::Gaussian { sigma: 1.5 };
+        let w = Arc::new(DenseKernelOperator::new(&points, 2, kernel, DenseMode::Adjacency));
+        let wrapped = NormalizedOperator::new(w).unwrap();
+        let fused = DenseKernelOperator::new(&points, 2, kernel, DenseMode::Normalized);
+        let x = rng.normal_vec(30);
+        let a = wrapped.apply_vec(&x);
+        let b = fused.apply_vec(&x);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-12);
+        }
+        // Degrees match the dense row sums.
+        for (u, v) in wrapped.degrees().iter().zip(fused.degrees()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rejects_negative_degrees() {
+        use crate::graph::operator::FnOperator;
+        let w = Arc::new(FnOperator {
+            n: 3,
+            f: |_: &[f64], y: &mut [f64]| {
+                y.copy_from_slice(&[1.0, -2.0, 1.0]);
+            },
+        });
+        assert!(NormalizedOperator::new(w).is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! The abstract symmetric linear operator all engines implement.
+
+/// A real linear operator `y = A x` of fixed dimension.
+///
+/// `apply_block` exists because several call sites (the hybrid Nyström
+/// method's `A·G`, block Lanczos experiments, the coordinator batcher)
+/// apply the operator to many vectors at once; engines can amortise
+/// setup (e.g. the NFFT reuses its window/FFT plan and the HLO engine
+/// batches PJRT executions).
+pub trait LinearOperator: Send + Sync {
+    /// Dimension n of the (square) operator.
+    fn dim(&self) -> usize;
+
+    /// y = A x. `x.len() == y.len() == dim()`.
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+
+    /// Apply to `k` column vectors stored contiguously (column-major:
+    /// `xs[j*n..(j+1)*n]` is column `j`). Default: loop over columns.
+    fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(xs.len() % n, 0);
+        assert_eq!(xs.len(), ys.len());
+        for (x, y) in xs.chunks_exact(n).zip(ys.chunks_exact_mut(n)) {
+            self.apply(x, y);
+        }
+    }
+
+    /// Convenience allocation form.
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.dim()];
+        self.apply(x, &mut y);
+        y
+    }
+
+    /// A human-readable engine name for metrics/logs.
+    fn name(&self) -> &str {
+        "operator"
+    }
+}
+
+/// Operators implemented as plain functions — used by tests.
+pub struct FnOperator<F: Fn(&[f64], &mut [f64]) + Send + Sync> {
+    pub n: usize,
+    pub f: F,
+}
+
+impl<F: Fn(&[f64], &mut [f64]) + Send + Sync> LinearOperator for FnOperator<F> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        (self.f)(x, y)
+    }
+
+    fn name(&self) -> &str {
+        "fn"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_operator_and_block_default() {
+        let op = FnOperator {
+            n: 3,
+            f: |x: &[f64], y: &mut [f64]| {
+                for i in 0..3 {
+                    y[i] = 2.0 * x[i];
+                }
+            },
+        };
+        assert_eq!(op.apply_vec(&[1.0, 2.0, 3.0]), vec![2.0, 4.0, 6.0]);
+        let xs = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let mut ys = [0.0; 6];
+        op.apply_block(&xs, &mut ys);
+        assert_eq!(ys, [2.0, 0.0, 0.0, 0.0, 2.0, 0.0]);
+    }
+}

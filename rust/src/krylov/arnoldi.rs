@@ -1,0 +1,248 @@
+//! Arnoldi iteration and restarted GMRES — the nonsymmetric Krylov
+//! machinery §2/§4 reference for the random-walk Laplacian
+//! `L_w = I − D⁻¹W` (nonsymmetric but similar to `L_s`).
+
+use crate::graph::operator::LinearOperator;
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::vec;
+
+/// One Arnoldi factorisation `A V_k = V_{k+1} H̄_k`.
+///
+/// Returns `(V: n×(k+1) orthonormal columns, H̄: (k+1)×k upper
+/// Hessenberg)`. `k` may shrink on breakdown (invariant subspace).
+pub fn arnoldi(
+    op: &dyn LinearOperator,
+    start: &[f64],
+    k: usize,
+) -> (DenseMatrix, DenseMatrix) {
+    let n = op.dim();
+    assert_eq!(start.len(), n);
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k + 1);
+    let mut v0 = start.to_vec();
+    vec::normalize(&mut v0);
+    vs.push(v0);
+    let mut h = DenseMatrix::zeros(k + 1, k);
+    let mut actual_k = k;
+    let mut w = vec![0.0; n];
+    for j in 0..k {
+        op.apply(&vs[j], &mut w);
+        // Modified Gram-Schmidt.
+        for (i, vi) in vs.iter().enumerate() {
+            let hij = vec::dot(vi, &w);
+            h[(i, j)] = hij;
+            vec::axpy(-hij, vi, &mut w);
+        }
+        let hnorm = vec::norm2(&w);
+        h[(j + 1, j)] = hnorm;
+        if hnorm < 1e-14 {
+            actual_k = j + 1;
+            break;
+        }
+        let mut vnext = w.clone();
+        vec::scale(1.0 / hnorm, &mut vnext);
+        vs.push(vnext);
+    }
+    let cols = vs.len();
+    let mut v = DenseMatrix::zeros(n, cols);
+    for (j, col) in vs.iter().enumerate() {
+        v.set_col(j, col);
+    }
+    // Trim H to (cols)×(actual_k).
+    let mut ht = DenseMatrix::zeros(cols, actual_k);
+    for i in 0..cols {
+        for j in 0..actual_k {
+            ht[(i, j)] = h[(i, j)];
+        }
+    }
+    (v, ht)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GmresOptions {
+    pub tol: f64,
+    /// Restart length.
+    pub restart: usize,
+    pub max_restarts: usize,
+}
+
+impl Default for GmresOptions {
+    fn default() -> Self {
+        GmresOptions { tol: 1e-10, restart: 50, max_restarts: 40 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GmresResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub rel_residual: f64,
+}
+
+/// Restarted GMRES(m) for general (nonsymmetric) `A x = b`.
+pub fn gmres_solve(op: &dyn LinearOperator, b: &[f64], opts: &GmresOptions) -> GmresResult {
+    let n = op.dim();
+    assert_eq!(b.len(), n);
+    let bnorm = vec::norm2(b);
+    if bnorm == 0.0 {
+        return GmresResult { x: vec![0.0; n], iterations: 0, converged: true, rel_residual: 0.0 };
+    }
+    let mut x = vec![0.0; n];
+    let mut total_iters = 0usize;
+    let mut rel;
+    let mut ax = vec![0.0; n];
+    for _restart in 0..opts.max_restarts {
+        op.apply(&x, &mut ax);
+        let r0: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let beta = vec::norm2(&r0);
+        rel = beta / bnorm;
+        if rel <= opts.tol {
+            return GmresResult { x, iterations: total_iters, converged: true, rel_residual: rel };
+        }
+        let m = opts.restart.min(n);
+        let (v, h) = arnoldi(op, &r0, m);
+        let k = h.cols;
+        total_iters += k;
+        // Least squares: min ‖β e₁ − H̄ y‖ via QR (Householder on the
+        // small (k+1)×k Hessenberg).
+        let rows = h.rows;
+        let mut rhs = vec![0.0; rows];
+        rhs[0] = beta;
+        let y = hessenberg_lstsq(&h, &rhs);
+        // x += V_k y
+        for j in 0..k {
+            let col = v.col(j);
+            vec::axpy(y[j], &col, &mut x);
+        }
+    }
+    op.apply(&x, &mut ax);
+    let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+    rel = vec::norm2(&r) / bnorm;
+    GmresResult { x, iterations: total_iters, converged: rel <= opts.tol, rel_residual: rel }
+}
+
+/// Least squares for a small (k+1)×k Hessenberg system via Givens
+/// rotations.
+fn hessenberg_lstsq(h: &DenseMatrix, rhs: &[f64]) -> Vec<f64> {
+    let k = h.cols;
+    let mut r = h.clone();
+    let mut g = rhs.to_vec();
+    for j in 0..k {
+        let a = r[(j, j)];
+        let b = r[(j + 1, j)];
+        let denom = (a * a + b * b).sqrt();
+        if denom < 1e-300 {
+            continue;
+        }
+        let (c, s) = (a / denom, b / denom);
+        for col in j..k {
+            let t1 = r[(j, col)];
+            let t2 = r[(j + 1, col)];
+            r[(j, col)] = c * t1 + s * t2;
+            r[(j + 1, col)] = -s * t1 + c * t2;
+        }
+        let t1 = g[j];
+        let t2 = g[j + 1];
+        g[j] = c * t1 + s * t2;
+        g[j + 1] = -s * t1 + c * t2;
+    }
+    // Back substitution on the k×k upper triangle.
+    let mut y = vec![0.0; k];
+    for j in (0..k).rev() {
+        let mut acc = g[j];
+        for col in (j + 1)..k {
+            acc -= r[(j, col)] * y[col];
+        }
+        y[j] = if r[(j, j)].abs() > 1e-300 { acc / r[(j, j)] } else { 0.0 };
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::operator::FnOperator;
+
+    #[test]
+    fn arnoldi_relation_holds() {
+        // A V_k = V_{k+1} H̄_k on a nonsymmetric operator.
+        let n = 12;
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let a = DenseMatrix { rows: n, cols: n, data: rng.normal_vec(n * n) };
+        let a2 = a.clone();
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                y.copy_from_slice(&a2.matvec(x));
+            },
+        };
+        let start = rng.normal_vec(n);
+        let k = 6;
+        let (v, h) = arnoldi(&op, &start, k);
+        // Check columnwise: A v_j = Σ_i h_ij v_i.
+        for j in 0..h.cols {
+            let av = a.matvec(&v.col(j));
+            let mut rec = vec![0.0; n];
+            for i in 0..h.rows {
+                vec::axpy(h[(i, j)], &v.col(i), &mut rec);
+            }
+            for t in 0..n {
+                assert!((av[t] - rec[t]).abs() < 1e-9, "Arnoldi relation broken");
+            }
+        }
+        // V orthonormal.
+        let vtv = v.transpose().matmul(&v);
+        for i in 0..v.cols {
+            for j in 0..v.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn gmres_solves_nonsymmetric() {
+        let n = 30;
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        // Well-conditioned nonsymmetric matrix: I + 0.3·random.
+        let mut a = DenseMatrix { rows: n, cols: n, data: rng.normal_vec(n * n) };
+        for v in a.data.iter_mut() {
+            *v *= 0.3 / (n as f64).sqrt();
+        }
+        for i in 0..n {
+            a[(i, i)] += 1.0;
+        }
+        let a2 = a.clone();
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| y.copy_from_slice(&a2.matvec(x)),
+        };
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let r = gmres_solve(&op, &b, &GmresOptions::default());
+        assert!(r.converged, "rel {}", r.rel_residual);
+        for (u, t) in r.x.iter().zip(&x_true) {
+            assert!((u - t).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn gmres_with_restarts() {
+        let n = 40;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + (i as f64) * 0.5) * x[i];
+                }
+            },
+        };
+        let b = vec![1.0; n];
+        // Tiny restart forces multiple cycles.
+        let r = gmres_solve(&op, &b, &GmresOptions { restart: 5, max_restarts: 50, tol: 1e-10 });
+        assert!(r.converged);
+        for i in 0..n {
+            assert!((r.x[i] * (1.0 + i as f64 * 0.5) - 1.0).abs() < 1e-7);
+        }
+    }
+}

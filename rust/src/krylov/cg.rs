@@ -1,0 +1,188 @@
+//! Conjugate gradients for SPD systems — used by the kernel-SSL
+//! application (eq. 6.4: `(I + β L_s) u = f`, SPD because spec(L_s) ⊆
+//! [0,2]) and by kernel ridge regression (`(K + βI) α = f`, §6.3), with
+//! optional Jacobi (diagonal) preconditioning.
+
+use crate::graph::operator::LinearOperator;
+use crate::linalg::vec;
+
+#[derive(Debug, Clone)]
+pub struct CgOptions {
+    /// Relative residual tolerance ‖r‖/‖b‖.
+    pub tol: f64,
+    pub max_iter: usize,
+    /// Optional diagonal preconditioner (entries of M⁻¹).
+    pub precond_inv_diag: Option<Vec<f64>>,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions { tol: 1e-10, max_iter: 1000, precond_inv_diag: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Final relative residual.
+    pub rel_residual: f64,
+}
+
+/// Solve `A x = b` for symmetric positive definite `A`.
+pub fn cg_solve(op: &dyn LinearOperator, b: &[f64], opts: &CgOptions) -> CgResult {
+    let n = op.dim();
+    assert_eq!(b.len(), n);
+    let bnorm = vec::norm2(b).max(1e-300);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let apply_prec = |r: &[f64]| -> Vec<f64> {
+        match &opts.precond_inv_diag {
+            Some(m) => r.iter().zip(m).map(|(ri, mi)| ri * mi).collect(),
+            None => r.to_vec(),
+        }
+    };
+    let mut z = apply_prec(&r);
+    let mut p = z.clone();
+    let mut rz = vec::dot(&r, &z);
+    let mut ap = vec![0.0; n];
+    let mut iterations = 0;
+    let mut converged = vec::norm2(&r) / bnorm <= opts.tol;
+    while !converged && iterations < opts.max_iter {
+        op.apply(&p, &mut ap);
+        let pap = vec::dot(&p, &ap);
+        if pap <= 0.0 {
+            // Not SPD (or breakdown) — stop with the best iterate.
+            break;
+        }
+        let alpha = rz / pap;
+        vec::axpy(alpha, &p, &mut x);
+        vec::axpy(-alpha, &ap, &mut r);
+        iterations += 1;
+        if vec::norm2(&r) / bnorm <= opts.tol {
+            converged = true;
+            break;
+        }
+        z = apply_prec(&r);
+        let rz_new = vec::dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    let rel_residual = vec::norm2(&r) / bnorm;
+    CgResult { x, iterations, converged, rel_residual }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::laplacian::ShiftedOperator;
+    use crate::graph::operator::FnOperator;
+    use std::sync::Arc;
+
+    #[test]
+    fn solves_diagonal_system() {
+        let n = 20;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (i + 1) as f64 * x[i];
+                }
+            },
+        };
+        let b: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+        let r = cg_solve(&op, &b, &CgOptions::default());
+        assert!(r.converged);
+        for xi in &r.x {
+            assert!((xi - 1.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn solves_spd_kernel_system() {
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let points = rng.normal_vec(30 * 2);
+        let k = Arc::new(crate::graph::dense::DenseKernelOperator::new(
+            &points,
+            2,
+            crate::fastsum::Kernel::Gaussian { sigma: 1.0 },
+            crate::graph::dense::DenseMode::Adjacency,
+        ));
+        // K + βI with β large enough to be SPD.
+        let op = ShiftedOperator::ridge(k.clone(), 5.0);
+        let x_true = rng.normal_vec(30);
+        let b = op.apply_vec(&x_true);
+        let r = cg_solve(&op, &b, &CgOptions { tol: 1e-12, ..Default::default() });
+        assert!(r.converged, "rel res {}", r.rel_residual);
+        for (a, b) in r.x.iter().zip(&x_true) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn jacobi_preconditioner_reduces_iterations() {
+        // Badly scaled diagonal system.
+        let n = 200;
+        let diag: Vec<f64> = (0..n).map(|i| 10.0f64.powi((i % 6) as i32)).collect();
+        let d2 = diag.clone();
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = d2[i] * x[i];
+                }
+            },
+        };
+        let b = vec![1.0; n];
+        let plain = cg_solve(&op, &b, &CgOptions { tol: 1e-10, ..Default::default() });
+        let pre = cg_solve(
+            &op,
+            &b,
+            &CgOptions {
+                tol: 1e-10,
+                precond_inv_diag: Some(diag.iter().map(|d| 1.0 / d).collect()),
+                ..Default::default()
+            },
+        );
+        assert!(pre.converged);
+        assert!(
+            pre.iterations < plain.iterations,
+            "precond {} !< plain {}",
+            pre.iterations,
+            plain.iterations
+        );
+    }
+
+    #[test]
+    fn zero_rhs_immediate() {
+        let op = FnOperator {
+            n: 5,
+            f: |x: &[f64], y: &mut [f64]| y.copy_from_slice(x),
+        };
+        let r = cg_solve(&op, &[0.0; 5], &CgOptions::default());
+        assert!(r.converged);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.x, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn max_iter_respected() {
+        let n = 50;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + i as f64 * 1000.0) * x[i];
+                }
+            },
+        };
+        let b = vec![1.0; n];
+        let r = cg_solve(&op, &b, &CgOptions { tol: 1e-16, max_iter: 3, ..Default::default() });
+        assert!(!r.converged);
+        assert_eq!(r.iterations, 3);
+    }
+}

@@ -1,0 +1,170 @@
+//! MINRES — minimal residual method for symmetric (possibly indefinite)
+//! systems [Paige & Saunders 1975], referenced in §4 as the Lanczos
+//! based solver alongside CG. Used when the shifted graph operator is
+//! not guaranteed definite (e.g. `L_s − μ I` shifts in spectral
+//! experiments).
+
+use crate::graph::operator::LinearOperator;
+use crate::linalg::vec;
+
+#[derive(Debug, Clone, Copy)]
+pub struct MinresOptions {
+    pub tol: f64,
+    pub max_iter: usize,
+}
+
+impl Default for MinresOptions {
+    fn default() -> Self {
+        MinresOptions { tol: 1e-10, max_iter: 1000 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MinresResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub rel_residual: f64,
+}
+
+/// Solve `A x = b` for symmetric `A` by MINRES.
+pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) -> MinresResult {
+    let n = op.dim();
+    assert_eq!(b.len(), n);
+    let bnorm = vec::norm2(b);
+    if bnorm == 0.0 {
+        return MinresResult { x: vec![0.0; n], iterations: 0, converged: true, rel_residual: 0.0 };
+    }
+    // Lanczos vectors.
+    let mut v_prev = vec![0.0; n];
+    let mut v = b.to_vec();
+    let mut beta = bnorm;
+    vec::scale(1.0 / beta, &mut v);
+    // Solution update directions.
+    let mut d_prev = vec![0.0; n];
+    let mut d_prev2 = vec![0.0; n];
+    let mut x = vec![0.0; n];
+    // Givens rotation state.
+    let (mut c, mut s) = (1.0f64, 0.0f64);
+    let (mut c_prev, mut s_prev) = (1.0f64, 0.0f64);
+    let mut eta = beta;
+    let mut w = vec![0.0; n];
+    let mut rel = 1.0;
+    for iter in 1..=opts.max_iter {
+        // Lanczos step.
+        op.apply(&v, &mut w);
+        let alpha = vec::dot(&v, &w);
+        for i in 0..n {
+            w[i] -= alpha * v[i] + beta * v_prev[i];
+        }
+        let beta_next = vec::norm2(&w);
+        // Apply previous rotations to the new tridiagonal column.
+        let delta = c * alpha - c_prev * s * beta;
+        let gamma1 = (delta * delta + beta_next * beta_next).sqrt();
+        let epsilon = s_prev * beta;
+        let gamma2 = s * alpha + c_prev * c * beta;
+        // New rotation.
+        let (c_new, s_new) = if gamma1 > 0.0 {
+            (delta / gamma1, beta_next / gamma1)
+        } else {
+            (1.0, 0.0)
+        };
+        // Update direction d = (v − gamma2 d_prev − epsilon d_prev2)/gamma1.
+        let mut d = vec![0.0; n];
+        for i in 0..n {
+            d[i] = (v[i] - gamma2 * d_prev[i] - epsilon * d_prev2[i]) / gamma1.max(1e-300);
+        }
+        // x += c_new * eta * d
+        vec::axpy(c_new * eta, &d, &mut x);
+        rel = (s_new * eta).abs() / bnorm;
+        eta = -s_new * eta;
+        // Shift state.
+        d_prev2 = std::mem::replace(&mut d_prev, d);
+        c_prev = c;
+        s_prev = s;
+        c = c_new;
+        s = s_new;
+        if beta_next < 1e-300 || rel <= opts.tol {
+            return MinresResult { x, iterations: iter, converged: rel <= opts.tol, rel_residual: rel };
+        }
+        v_prev = std::mem::replace(&mut v, w.clone());
+        vec::scale(1.0 / beta_next, &mut v);
+        beta = beta_next;
+    }
+    MinresResult { x, iterations: opts.max_iter, converged: false, rel_residual: rel }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::operator::FnOperator;
+
+    #[test]
+    fn solves_spd_diagonal() {
+        let n = 25;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + i as f64) * x[i];
+                }
+            },
+        };
+        let b: Vec<f64> = (0..n).map(|i| (i % 3) as f64 - 1.0).collect();
+        let r = minres_solve(&op, &b, &MinresOptions::default());
+        assert!(r.converged, "rel {}", r.rel_residual);
+        for i in 0..n {
+            assert!((r.x[i] * (1.0 + i as f64) - b[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn solves_indefinite_system() {
+        // diag(-2, -1, 1, 2, ...) — CG would break down, MINRES fine.
+        let n = 20;
+        let diag: Vec<f64> = (0..n).map(|i| if i < n / 2 { -((i + 1) as f64) } else { (i + 1) as f64 }).collect();
+        let d2 = diag.clone();
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = d2[i] * x[i];
+                }
+            },
+        };
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+        let b: Vec<f64> = (0..n).map(|i| diag[i] * x_true[i]).collect();
+        let r = minres_solve(&op, &b, &MinresOptions { tol: 1e-12, max_iter: 200 });
+        assert!(r.converged);
+        for (a, t) in r.x.iter().zip(&x_true) {
+            assert!((a - t).abs() < 1e-7, "{a} vs {t}");
+        }
+    }
+
+    #[test]
+    fn residual_monotone_enough() {
+        // MINRES minimises the residual: final rel residual ≤ initial.
+        let n = 30;
+        let mut rng = crate::data::rng::Rng::seed_from(3);
+        let points = rng.normal_vec(n * 2);
+        let op = crate::graph::dense::DenseKernelOperator::new(
+            &points,
+            2,
+            crate::fastsum::Kernel::Gaussian { sigma: 1.0 },
+            crate::graph::dense::DenseMode::Normalized,
+        );
+        let b = rng.normal_vec(n);
+        // A itself is symmetric (eigs in [-1,1]) — possibly indefinite.
+        let r = minres_solve(&op, &b, &MinresOptions { tol: 1e-8, max_iter: 500 });
+        assert!(r.rel_residual <= 1.0);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn zero_rhs() {
+        let op = FnOperator { n: 4, f: |x: &[f64], y: &mut [f64]| y.copy_from_slice(x) };
+        let r = minres_solve(&op, &[0.0; 4], &MinresOptions::default());
+        assert!(r.converged);
+        assert_eq!(r.iterations, 0);
+    }
+}

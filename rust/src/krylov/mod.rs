@@ -1,0 +1,17 @@
+//! Krylov subspace methods (§4): the Lanczos eigensolver at the core of
+//! the paper, plus the linear-system solvers the applications need (CG
+//! for SPD systems, MINRES for symmetric indefinite ones, and
+//! Arnoldi/GMRES for the nonsymmetric random-walk Laplacian `L_w`
+//! mentioned in §2).
+//!
+//! All methods consume a [`crate::graph::LinearOperator`], so the same
+//! code runs against the dense direct engine, the native NFFT fastsum
+//! engine, the PJRT artifact engine and truncated eigenapproximations.
+
+pub mod arnoldi;
+pub mod cg;
+pub mod lanczos;
+pub mod minres;
+
+pub use cg::{cg_solve, CgOptions, CgResult};
+pub use lanczos::{lanczos_eigs, EigResult, LanczosOptions};

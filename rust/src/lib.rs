@@ -1,0 +1,52 @@
+//! NFFT-accelerated Krylov methods for graph Laplacians of fully
+//! connected networks.
+//!
+//! Rust + JAX + Pallas reproduction of
+//! *"NFFT meets Krylov methods: Fast matrix-vector products for the graph
+//! Laplacian of fully connected networks"* (Alfke, Potts, Stoll, Volkmer,
+//! Frontiers in Applied Mathematics and Statistics, 2018).
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`fft`] — from-scratch complex FFT substrate (radix-2 / mixed-radix /
+//!   Bluestein) used by the native NFFT engine.
+//! * [`nfft`] — nonequispaced fast Fourier transform (forward + adjoint)
+//!   with Kaiser-Bessel / Gaussian / B-spline windows.
+//! * [`fastsum`] — Algorithms 3.1 / 3.2 of the paper: kernel
+//!   regularisation, Fourier coefficients, and the O(n) approximate
+//!   matrix-vector product with the (normalised) adjacency matrix.
+//! * [`linalg`] — dense linear-algebra substrate: QR, symmetric
+//!   tridiagonal eigensolver, Jacobi eigensolver, small dense ops.
+//! * [`krylov`] — Lanczos eigensolver, CG, MINRES, Arnoldi/GMRES.
+//! * [`nystrom`] — the traditional Nyström extension (Section 5.1) and
+//!   the hybrid Nyström-Gaussian-NFFT method (Algorithm 5.1).
+//! * [`graph`] — graph-Laplacian operators and the dense direct baseline.
+//! * [`data`] — dataset generators (spiral, crescent-fullmoon, synthetic
+//!   image, blobs) and a deterministic PRNG substrate.
+//! * [`apps`] — the paper's applications: spectral clustering (§6.2.1),
+//!   phase-field SSL (§6.2.2), kernel SSL (§6.2.3), kernel ridge
+//!   regression (§6.3).
+//! * [`runtime`] — PJRT client wrapper loading AOT artifacts produced by
+//!   the JAX/Pallas build path (`python/compile/aot.py`).
+//! * [`coordinator`] — the L3 service layer: job queue, matvec batching,
+//!   worker threads, metrics, and the CLI-facing engine registry.
+//! * [`bench_harness`] — drivers regenerating every table/figure of the
+//!   paper's evaluation section.
+
+pub mod apps;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fastsum;
+pub mod fft;
+pub mod graph;
+pub mod krylov;
+pub mod linalg;
+pub mod nfft;
+pub mod nystrom;
+pub mod runtime;
+pub mod util;
+
+// Re-exports are added as the modules land (see module docs above).

@@ -1,0 +1,189 @@
+//! Cyclic Jacobi eigensolver for small dense symmetric matrices — the
+//! correctness oracle for Lanczos tests and the inner eigensolver of
+//! both Nyström variants (`B₂ = QᵀAQ` in Alg 5.1 step 5, `R W_XX⁻¹ Rᵀ`
+//! in §5.1).
+
+use super::dense::DenseMatrix;
+
+/// Eigen-decomposition of a symmetric matrix. Returns
+/// `(eigenvalues ascending, eigenvector matrix V)` with `A v_j = λ_j v_j`
+/// where `v_j` is column `j` of `V`.
+pub fn sym_eig(a: &DenseMatrix) -> (Vec<f64>, DenseMatrix) {
+    let n = a.rows;
+    assert_eq!(a.cols, n, "sym_eig expects a square matrix");
+    // Verify symmetry within roundoff; symmetrise to be safe.
+    let mut m = a.clone();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let mut v = DenseMatrix::identity(n);
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation rows/cols p,q of M.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate into V.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut d: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    // Sort ascending with eigenvector columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    d = order.iter().map(|&i| m[(i, i)]).collect();
+    let mut vs = DenseMatrix::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for row in 0..n {
+            vs[(row, newj)] = v[(row, oldj)];
+        }
+    }
+    (d, vs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::seed_from(seed);
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn two_by_two() {
+        let a = DenseMatrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (d, _) = sym_eig(&a);
+        assert!((d[0] - 1.0).abs() < 1e-12);
+        assert!((d[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let n = 12;
+        let a = random_symmetric(n, 1);
+        let (d, v) = sym_eig(&a);
+        // A V = V diag(d)
+        for j in 0..n {
+            let col: Vec<f64> = (0..n).map(|i| v[(i, j)]).collect();
+            let av = a.matvec(&col);
+            for i in 0..n {
+                assert!(
+                    (av[i] - d[j] * col[i]).abs() < 1e-9,
+                    "eigenpair {j} residual"
+                );
+            }
+        }
+        // V orthogonal.
+        let vtv = v.transpose().matmul(&v);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+        // Eigenvalues ascending.
+        for w in d.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_and_frobenius_invariants() {
+        let n = 9;
+        let a = random_symmetric(n, 2);
+        let (d, _) = sym_eig(&a);
+        let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        assert!((tr - d.iter().sum::<f64>()).abs() < 1e-9);
+        let fro2: f64 = a.data.iter().map(|v| v * v).sum();
+        let sum_d2: f64 = d.iter().map(|v| v * v).sum();
+        assert!((fro2 - sum_d2).abs() < 1e-8);
+    }
+
+    #[test]
+    fn positive_semidefinite_gram() {
+        // Gram matrices have non-negative eigenvalues.
+        let mut rng = Rng::seed_from(3);
+        let b = DenseMatrix { rows: 6, cols: 4, data: rng.normal_vec(24) };
+        let g = b.matmul(&b.transpose());
+        let (d, _) = sym_eig(&g);
+        for &x in &d {
+            assert!(x > -1e-10, "negative eigenvalue {x} in Gram matrix");
+        }
+    }
+
+    #[test]
+    fn agrees_with_tridiag_solver() {
+        // A symmetric tridiagonal matrix must give the same spectrum via
+        // both solvers.
+        let alpha = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let beta = [0.5, 0.5, 0.5, 0.5];
+        let mut a = DenseMatrix::zeros(5, 5);
+        for i in 0..5 {
+            a[(i, i)] = alpha[i];
+            if i + 1 < 5 {
+                a[(i, i + 1)] = beta[i];
+                a[(i + 1, i)] = beta[i];
+            }
+        }
+        let (dj, _) = sym_eig(&a);
+        let dt = crate::linalg::tridiag::tridiag_eigvals(&alpha, &beta);
+        for (x, y) in dj.iter().zip(&dt) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+}

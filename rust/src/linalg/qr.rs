@@ -1,0 +1,169 @@
+//! Householder QR with the thin (economy) factorisation used by both
+//! Nyström variants (§5.1 and Alg 5.1 steps 3/6) and by Lanczos
+//! post-processing.
+
+use super::dense::DenseMatrix;
+
+/// Thin QR of an m×k matrix (m ≥ k): returns (Q: m×k with orthonormal
+/// columns, R: k×k upper triangular) with A = Q R.
+pub fn thin_qr(a: &DenseMatrix) -> (DenseMatrix, DenseMatrix) {
+    let m = a.rows;
+    let k = a.cols;
+    assert!(m >= k, "thin_qr expects a tall matrix (m >= k)");
+    // Work on a copy; accumulate Householder reflectors.
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for j in 0..k {
+        // Build the Householder vector for column j below the diagonal.
+        let mut norm = 0.0;
+        for i in j..m {
+            norm += r[(i, j)] * r[(i, j)];
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m - j];
+        if norm == 0.0 {
+            // Zero column: identity reflector (v = 0 ⇒ H = I).
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[(j, j)] >= 0.0 { -norm } else { norm };
+        for i in j..m {
+            v[i - j] = r[(i, j)];
+        }
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq < 1e-300 {
+            vs.push(vec![0.0; m - j]);
+            r[(j, j)] = alpha;
+            continue;
+        }
+        // Apply H = I - 2 v v^T / (v^T v) to the trailing block of R.
+        for col in j..k {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * r[(i, col)];
+            }
+            let f = 2.0 * dot / vnorm_sq;
+            for i in j..m {
+                r[(i, col)] -= f * v[i - j];
+            }
+        }
+        vs.push(v);
+    }
+    // Q = H_0 H_1 ... H_{k-1} applied to the first k columns of I.
+    let mut q = DenseMatrix::zeros(m, k);
+    for j in 0..k {
+        q[(j, j)] = 1.0;
+    }
+    for jr in (0..k).rev() {
+        let v = &vs[jr];
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq < 1e-300 {
+            continue;
+        }
+        for col in 0..k {
+            let mut dot = 0.0;
+            for i in jr..m {
+                dot += v[i - jr] * q[(i, col)];
+            }
+            let f = 2.0 * dot / vnorm_sq;
+            for i in jr..m {
+                q[(i, col)] -= f * v[i - jr];
+            }
+        }
+    }
+    // Zero the strictly-lower part of R and truncate to k×k.
+    let mut rk = DenseMatrix::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            rk[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, rk)
+}
+
+/// Column-wise orthonormalisation (the paper's `orth`): thin QR, return Q.
+pub fn orth(a: &DenseMatrix) -> DenseMatrix {
+    thin_qr(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn random_matrix(m: usize, k: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::seed_from(seed);
+        DenseMatrix { rows: m, cols: k, data: rng.normal_vec(m * k) }
+    }
+
+    fn check_qr(a: &DenseMatrix) {
+        let (q, r) = thin_qr(a);
+        assert_eq!(q.rows, a.rows);
+        assert_eq!(q.cols, a.cols);
+        // Q^T Q = I
+        let qtq = q.transpose().matmul(&q);
+        for i in 0..q.cols {
+            for j in 0..q.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (qtq[(i, j)] - want).abs() < 1e-10,
+                    "QtQ[{i},{j}] = {}",
+                    qtq[(i, j)]
+                );
+            }
+        }
+        // A = Q R
+        let qr = q.matmul(&r);
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                assert!((qr[(i, j)] - a[(i, j)]).abs() < 1e-10);
+            }
+        }
+        // R upper triangular.
+        for i in 0..r.rows {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_random_tall() {
+        check_qr(&random_matrix(20, 5, 1));
+        check_qr(&random_matrix(7, 7, 2));
+        check_qr(&random_matrix(50, 1, 3));
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        // Two identical columns: QR must still satisfy A = QR, QtQ ≈ I.
+        let mut a = random_matrix(10, 3, 4);
+        for i in 0..10 {
+            let v = a[(i, 0)];
+            a[(i, 2)] = v;
+        }
+        let (q, r) = thin_qr(&a);
+        let qr = q.matmul(&r);
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                assert!((qr[(i, j)] - a[(i, j)]).abs() < 1e-10);
+            }
+        }
+        // R has a (near-)zero diagonal in the dependent column.
+        assert!(r[(2, 2)].abs() < 1e-10);
+    }
+
+    #[test]
+    fn orth_columns_span_input() {
+        let a = random_matrix(15, 4, 5);
+        let q = orth(&a);
+        // Projection of A onto span(Q) reproduces A.
+        let proj = q.matmul(&q.transpose().matmul(&a));
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                assert!((proj[(i, j)] - a[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Symmetric tridiagonal eigensolver — the back end of the Lanczos
+//! method: eigenvalues and (optionally) eigenvectors of T_k via the
+//! implicit QL algorithm with Wilkinson shifts (the classic `tql2`
+//! routine, re-derived for f64).
+
+use super::dense::DenseMatrix;
+
+/// Eigen-decomposition of a symmetric tridiagonal matrix given its
+/// diagonal `alpha` (length k) and off-diagonal `beta` (length k-1).
+///
+/// Returns `(eigenvalues ascending, eigenvector matrix Z)` where column
+/// `j` of `Z` (k×k, row-major) is the eigenvector of `eigenvalues[j]`.
+pub fn tridiag_eig(alpha: &[f64], beta: &[f64]) -> (Vec<f64>, DenseMatrix) {
+    let k = alpha.len();
+    assert!(k >= 1);
+    assert_eq!(beta.len(), k.saturating_sub(1));
+    let mut d = alpha.to_vec();
+    // e is padded to length k with a trailing zero (tql2 convention).
+    let mut e = vec![0.0; k];
+    e[..k - 1].copy_from_slice(beta);
+    let mut z = DenseMatrix::identity(k);
+
+    for l in 0..k {
+        let mut iter = 0;
+        loop {
+            // Find small off-diagonal element.
+            let mut m = l;
+            while m + 1 < k {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tridiag_eig: QL failed to converge");
+            // Wilkinson shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let mut s = 1.0;
+            let mut c = 1.0;
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into Z.
+                for row in 0..k {
+                    f = z[(row, i + 1)];
+                    z[(row, i + 1)] = s * z[(row, i)] + c * f;
+                    z[(row, i)] = c * z[(row, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort ascending, permuting the eigenvector columns alongside.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let eigs: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut zs = DenseMatrix::zeros(k, k);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for row in 0..k {
+            zs[(row, newj)] = z[(row, oldj)];
+        }
+    }
+    (eigs, zs)
+}
+
+/// Eigenvalues only (same algorithm, no vector accumulation — used when
+/// the caller only needs Ritz values, e.g. convergence monitoring).
+pub fn tridiag_eigvals(alpha: &[f64], beta: &[f64]) -> Vec<f64> {
+    tridiag_eig(alpha, beta).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tridiag_matvec(alpha: &[f64], beta: &[f64], x: &[f64]) -> Vec<f64> {
+        let k = alpha.len();
+        let mut y = vec![0.0; k];
+        for i in 0..k {
+            y[i] = alpha[i] * x[i];
+            if i > 0 {
+                y[i] += beta[i - 1] * x[i - 1];
+            }
+            if i + 1 < k {
+                y[i] += beta[i] * x[i + 1];
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn two_by_two_exact() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let (eigs, z) = tridiag_eig(&[2.0, 2.0], &[1.0]);
+        assert!((eigs[0] - 1.0).abs() < 1e-12);
+        assert!((eigs[1] - 3.0).abs() < 1e-12);
+        // Eigenvectors (1,-1)/√2 and (1,1)/√2 up to sign.
+        let s = 1.0 / 2.0_f64.sqrt();
+        assert!((z[(0, 0)].abs() - s).abs() < 1e-12);
+        assert!((z[(1, 1)].abs() - s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let (eigs, _) = tridiag_eig(&[3.0, -1.0, 2.0], &[0.0, 0.0]);
+        assert!((eigs[0] + 1.0).abs() < 1e-14);
+        assert!((eigs[1] - 2.0).abs() < 1e-14);
+        assert!((eigs[2] - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn laplacian_chain_known_spectrum() {
+        // 1-d discrete Laplacian (diag 2, off -1) of size k has
+        // eigenvalues 2 - 2 cos(π j/(k+1)), j = 1..k.
+        let k = 12;
+        let alpha = vec![2.0; k];
+        let beta = vec![-1.0; k - 1];
+        let (eigs, z) = tridiag_eig(&alpha, &beta);
+        for j in 1..=k {
+            let want = 2.0 - 2.0 * (std::f64::consts::PI * j as f64 / (k + 1) as f64).cos();
+            assert!(
+                (eigs[j - 1] - want).abs() < 1e-10,
+                "eig {j}: got {} want {want}",
+                eigs[j - 1]
+            );
+        }
+        // Residual check for every eigenpair.
+        for j in 0..k {
+            let v: Vec<f64> = (0..k).map(|i| z[(i, j)]).collect();
+            let av = tridiag_matvec(&alpha, &beta, &v);
+            for i in 0..k {
+                assert!((av[i] - eigs[j] * v[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let k = 20;
+        let alpha = rng.normal_vec(k);
+        let beta = rng.normal_vec(k - 1);
+        let (_, z) = tridiag_eig(&alpha, &beta);
+        let ztz = z.transpose().matmul(&z);
+        for i in 0..k {
+            for j in 0..k {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((ztz[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        let k = 15;
+        let alpha = rng.normal_vec(k);
+        let beta = rng.normal_vec(k - 1);
+        let eigs = tridiag_eigvals(&alpha, &beta);
+        let tr: f64 = alpha.iter().sum();
+        let se: f64 = eigs.iter().sum();
+        assert!((tr - se).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_element() {
+        let (eigs, z) = tridiag_eig(&[5.0], &[]);
+        assert_eq!(eigs, vec![5.0]);
+        assert_eq!(z[(0, 0)], 1.0);
+    }
+}

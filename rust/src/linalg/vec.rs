@@ -1,0 +1,89 @@
+//! Vector kernels used in the Krylov hot loops. These are written as
+//! straightforward slice loops; rustc auto-vectorises them, and the
+//! profile (EXPERIMENTS.md §Perf) shows they are far from the matvec
+//! bottleneck.
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// x <- x / ‖x‖₂; returns the norm. Panics on the zero vector.
+pub fn normalize(x: &mut [f64]) -> f64 {
+    let n = norm2(x);
+    assert!(n > 0.0, "cannot normalize the zero vector");
+    scale(1.0 / n, x);
+    n
+}
+
+/// Componentwise multiply: y_i *= d_i (diagonal application).
+pub fn diag_mul(d: &[f64], y: &mut [f64]) {
+    assert_eq!(d.len(), y.len());
+    for (yi, di) in y.iter_mut().zip(d) {
+        *yi *= di;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, -1.0], &mut y);
+        assert_eq!(y, vec![3.0, -1.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![1.5, -0.5]);
+    }
+
+    #[test]
+    fn normalize_unit() {
+        let mut x = vec![0.0, 3.0, 4.0];
+        let n = normalize(&mut x);
+        assert_eq!(n, 5.0);
+        assert!((norm2(&x) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn normalize_zero_panics() {
+        let mut x = vec![0.0, 0.0];
+        normalize(&mut x);
+    }
+
+    #[test]
+    fn diag_mul_componentwise() {
+        let mut y = vec![2.0, 3.0];
+        diag_mul(&[10.0, 0.5], &mut y);
+        assert_eq!(y, vec![20.0, 1.5]);
+    }
+}

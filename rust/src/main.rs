@@ -1,0 +1,186 @@
+//! `nfft-krylov` — CLI for the NFFT-accelerated graph-Laplacian stack.
+//!
+//! Subcommands:
+//!   eig             k dominant eigenpairs of A on spiral data
+//!   solve           (I + β L_s) u = f demo solve
+//!   cluster         spectral image segmentation (§6.2.1)
+//!   ssl-phasefield  Allen-Cahn SSL (§6.2.2)
+//!   ssl-kernel      kernel SSL (§6.2.3)
+//!   krr             kernel ridge regression (§6.3)
+//!   artifacts-check cross-check PJRT artifacts vs the native engine
+//!   serve           run a coordinator worker pool over a job script
+
+use nfft_krylov::cli::Args;
+use nfft_krylov::config::RunConfig;
+use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
+use nfft_krylov::coordinator::jobs::{Job, JobResult};
+use nfft_krylov::coordinator::Coordinator;
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::data::spiral::{generate, SpiralParams};
+use nfft_krylov::krylov::cg::CgOptions;
+use nfft_krylov::krylov::lanczos::LanczosOptions;
+
+const USAGE: &str = "usage: nfft-krylov <eig|solve|cluster|ssl-phasefield|ssl-kernel|krr|artifacts-check|serve> \
+[--n N] [--k K] [--sigma S] [--setup 1|2|3] [--engine native|hlo|dense] [--seed S] [--tol T]";
+
+fn main() {
+    let args = match Args::parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cfg = match RunConfig::from_args(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("eig") => cmd_eig(&cfg),
+        Some("solve") => cmd_solve(&cfg),
+        Some("cluster") => run_example("spectral_clustering"),
+        Some("ssl-phasefield") => run_example("ssl_phasefield"),
+        Some("ssl-kernel") => run_example("ssl_kernel"),
+        Some("krr") => run_example("kernel_ridge_regression"),
+        Some("artifacts-check") => cmd_artifacts_check(&cfg),
+        Some("serve") => cmd_serve(&cfg, &args),
+        _ => {
+            eprintln!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn spiral_spec(cfg: &RunConfig, engine: EngineKind) -> OperatorSpec {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let ds = generate(SpiralParams { per_class: cfg.n / 5, ..Default::default() }, &mut rng);
+    OperatorSpec { points: ds.points, d: 3, kernel: cfg.kernel(), params: cfg.fastsum_params(), engine }
+}
+
+fn cmd_eig(cfg: &RunConfig) -> i32 {
+    let mut reg = EngineRegistry::new("artifacts");
+    let op = match reg.build_normalized(&spiral_spec(cfg, cfg.engine)) {
+        Ok(op) => op,
+        Err(e) => {
+            eprintln!("operator construction failed: {e}");
+            return 1;
+        }
+    };
+    let t = std::time::Instant::now();
+    let r = nfft_krylov::krylov::lanczos::lanczos_eigs(
+        op.as_ref(),
+        LanczosOptions { k: cfg.k, tol: cfg.tol, ..Default::default() },
+    );
+    println!(
+        "n={} engine={:?} setup#{}: {} iterations, {:.2}s",
+        cfg.n,
+        cfg.engine,
+        cfg.setup,
+        r.iterations,
+        t.elapsed().as_secs_f64()
+    );
+    for (j, lam) in r.eigenvalues.iter().enumerate() {
+        println!("lambda_{:<2} = {:.12}", j + 1, lam);
+    }
+    0
+}
+
+fn cmd_solve(cfg: &RunConfig) -> i32 {
+    let mut reg = EngineRegistry::new("artifacts");
+    let op = match reg.build_normalized(&spiral_spec(cfg, cfg.engine)) {
+        Ok(op) => op,
+        Err(e) => {
+            eprintln!("operator construction failed: {e}");
+            return 1;
+        }
+    };
+    let n = op.dim();
+    let mut rhs = vec![0.0; n];
+    rhs[0] = 1.0;
+    rhs[n - 1] = -1.0;
+    let system = nfft_krylov::graph::laplacian::ShiftedOperator::ssl_system(op, 10.0);
+    let r = nfft_krylov::krylov::cg::cg_solve(
+        &system,
+        &rhs,
+        &CgOptions { tol: cfg.tol.max(1e-12), ..Default::default() },
+    );
+    println!(
+        "CG on (I + 10 L_s): {} iterations, converged = {}, rel res = {:.2e}",
+        r.iterations, r.converged, r.rel_residual
+    );
+    if r.converged {
+        0
+    } else {
+        1
+    }
+}
+
+fn run_example(name: &str) -> i32 {
+    println!("this workload ships as a runnable example: cargo run --release --example {name}");
+    0
+}
+
+fn cmd_artifacts_check(cfg: &RunConfig) -> i32 {
+    let mut reg = EngineRegistry::new("artifacts");
+    let native = match reg.build_normalized(&spiral_spec(cfg, EngineKind::Native)) {
+        Ok(op) => op,
+        Err(e) => {
+            eprintln!("native engine failed: {e}");
+            return 1;
+        }
+    };
+    let hlo = match reg.build_normalized(&spiral_spec(cfg, EngineKind::Hlo)) {
+        Ok(op) => op,
+        Err(e) => {
+            eprintln!("hlo engine failed: {e} (run `make artifacts`?)");
+            return 1;
+        }
+    };
+    let mut rng = Rng::seed_from(cfg.seed + 1);
+    let x = rng.normal_vec(native.dim());
+    let a = native.apply_vec(&x);
+    let b = hlo.apply_vec(&x);
+    let err = a.iter().zip(&b).map(|(u, v)| (u - v).abs()).fold(0.0f64, f64::max);
+    println!("max |native - hlo| = {err:.3e}");
+    if err < 1e-8 {
+        println!("artifacts OK");
+        0
+    } else {
+        eprintln!("MISMATCH — artifacts are stale? run `make artifacts`");
+        1
+    }
+}
+
+fn cmd_serve(cfg: &RunConfig, args: &Args) -> i32 {
+    let workers = args.get_usize("workers", 1).unwrap_or(1);
+    let jobs = args.get_usize("jobs", 4).unwrap_or(4);
+    let mut reg = EngineRegistry::new("artifacts");
+    let op = match reg.build_normalized(&spiral_spec(cfg, cfg.engine)) {
+        Ok(op) => op,
+        Err(e) => {
+            eprintln!("operator construction failed: {e}");
+            return 1;
+        }
+    };
+    let n = op.dim();
+    let mut coord = Coordinator::new(op, workers);
+    println!("coordinator up: {workers} workers, dispatching {jobs} matvec jobs + 1 eig job");
+    let mut rng = Rng::seed_from(cfg.seed);
+    let handles: Vec<_> = (0..jobs)
+        .map(|_| coord.submit(Job::Matvec { x: rng.normal_vec(n) }))
+        .collect();
+    let eig = coord.submit(Job::Eig(LanczosOptions { k: cfg.k.min(5), tol: 1e-8, ..Default::default() }));
+    for h in handles {
+        let _ = h.wait();
+    }
+    if let JobResult::Eig(r) = eig.wait() {
+        println!("eig job: lambda_1 = {:.8}", r.eigenvalues[0]);
+    }
+    println!("{}", coord.metrics().report());
+    coord.shutdown();
+    0
+}

@@ -1,0 +1,145 @@
+//! Nonequispaced fast Fourier transform (NFFT) — the engine under the
+//! paper's Algorithm 3.1.
+//!
+//! Conventions follow the paper exactly (§3):
+//!
+//! * **adjoint**:  `x̂_l = Σ_{i=1}^n x_i e^{−2πi l·v_i}`, `l ∈ I_N^d`;
+//! * **forward**:  `f(v_j) = Σ_{l ∈ I_N^d} f̂_l e^{+2πi l·v_j}`;
+//!
+//! with `I_N = {−N/2, …, N/2−1}` and nodes `v ∈ [−1/2, 1/2)^d`.
+//! Frequency arrays are stored in "mod-N" layout: coefficient `l` lives
+//! at flat index built from `(l mod N)` per axis, matching FFT output
+//! order so no fftshift is ever performed.
+//!
+//! Each transform is window-spread (or gathered) onto a 2×-oversampled
+//! grid, FFT'd with the from-scratch [`crate::fft`] plans, and
+//! deconvolved by the window's Fourier coefficients.
+
+pub mod plan;
+pub mod window;
+
+pub use plan::NfftPlan;
+pub use window::{Window, WindowKind};
+
+use crate::fft::Complex;
+
+/// Direct NDFT adjoint — O(n·N^d) oracle used by tests.
+pub fn ndft_adjoint(points: &[f64], d: usize, x: &[f64], n_band: &[usize]) -> Vec<Complex> {
+    let n = x.len();
+    assert_eq!(points.len(), n * d);
+    assert_eq!(n_band.len(), d);
+    let total: usize = n_band.iter().product();
+    let mut out = vec![Complex::ZERO; total];
+    for (flat, o) in out.iter_mut().enumerate() {
+        let l = unflatten_freq(flat, n_band);
+        let mut acc = Complex::ZERO;
+        for i in 0..n {
+            let v = &points[i * d..(i + 1) * d];
+            let phase: f64 = l.iter().zip(v).map(|(&li, &vi)| li as f64 * vi).sum();
+            acc += Complex::cis(-2.0 * std::f64::consts::PI * phase).scale(x[i]);
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Direct NDFT forward — O(n·N^d) oracle used by tests.
+pub fn ndft_forward(points: &[f64], d: usize, f_hat: &[Complex], n_band: &[usize]) -> Vec<Complex> {
+    assert_eq!(points.len() % d, 0);
+    let n = points.len() / d;
+    let total: usize = n_band.iter().product();
+    assert_eq!(f_hat.len(), total);
+    let mut out = vec![Complex::ZERO; n];
+    for j in 0..n {
+        let v = &points[j * d..(j + 1) * d];
+        let mut acc = Complex::ZERO;
+        for (flat, &fh) in f_hat.iter().enumerate() {
+            let l = unflatten_freq(flat, n_band);
+            let phase: f64 = l.iter().zip(v).map(|(&li, &vi)| li as f64 * vi).sum();
+            acc += fh * Complex::cis(2.0 * std::f64::consts::PI * phase);
+        }
+        out[j] = acc;
+    }
+    out
+}
+
+/// Decode a flat mod-N index into signed frequencies `l ∈ I_N^d`
+/// (row-major over axes).
+pub fn unflatten_freq(flat: usize, n_band: &[usize]) -> Vec<i64> {
+    let d = n_band.len();
+    let mut idx = vec![0i64; d];
+    let mut rem = flat;
+    for a in (0..d).rev() {
+        let na = n_band[a];
+        let pos = rem % na;
+        rem /= na;
+        idx[a] = if pos < na / 2 { pos as i64 } else { pos as i64 - na as i64 };
+    }
+    idx
+}
+
+/// Inverse of [`unflatten_freq`].
+pub fn flatten_freq(l: &[i64], n_band: &[usize]) -> usize {
+    let mut flat = 0usize;
+    for (a, &na) in n_band.iter().enumerate() {
+        let pos = l[a].rem_euclid(na as i64) as usize;
+        flat = flat * na + pos;
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freq_flatten_roundtrip() {
+        let shape = [8usize, 4];
+        for flat in 0..32 {
+            let l = unflatten_freq(flat, &shape);
+            assert!(l[0] >= -4 && l[0] < 4);
+            assert!(l[1] >= -2 && l[1] < 2);
+            assert_eq!(flatten_freq(&l, &shape), flat);
+        }
+    }
+
+    #[test]
+    fn ndft_adjoint_single_point_is_character() {
+        // One point with weight 1: x̂_l = e^{-2πi l v}.
+        let v = [0.1, -0.2];
+        let shape = [4usize, 4];
+        let out = ndft_adjoint(&v, 2, &[1.0], &shape);
+        for (flat, got) in out.iter().enumerate() {
+            let l = unflatten_freq(flat, &shape);
+            let want = Complex::cis(
+                -2.0 * std::f64::consts::PI * (l[0] as f64 * 0.1 + l[1] as f64 * -0.2),
+            );
+            assert!((*got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ndft_forward_adjoint_inner_product_identity() {
+        // <F f̂, x>_C^n == <f̂, F^H x>_C^{N^d} with F the forward NDFT.
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let d = 2;
+        let n = 5;
+        let shape = [4usize, 8];
+        let total = 32;
+        let points: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+        let x = rng.normal_vec(n);
+        let f_hat: Vec<Complex> =
+            (0..total).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+        let fw = ndft_forward(&points, d, &f_hat, &shape);
+        let adj = ndft_adjoint(&points, d, &x, &shape);
+        // <Ff̂, x> = Σ_j f_j conj(x_j)  (x real ⇒ conj trivial)
+        let lhs: Complex =
+            fw.iter().zip(&x).fold(Complex::ZERO, |acc, (f, &xi)| acc + f.scale(xi));
+        // <f̂, F^H x> = Σ_l f̂_l conj((F^H x)_l)
+        let rhs: Complex = f_hat
+            .iter()
+            .zip(&adj)
+            .fold(Complex::ZERO, |acc, (fh, a)| acc + (*fh * a.conj()));
+        assert!((lhs - rhs).abs() < 1e-10, "lhs={lhs:?} rhs={rhs:?}");
+    }
+}

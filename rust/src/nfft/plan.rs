@@ -1,0 +1,537 @@
+//! The d-dimensional NFFT plan: window spreading / gathering onto a
+//! 2×-oversampled grid plus FFT deconvolution. This is the request-path
+//! hot spot of the whole system — see EXPERIMENTS.md §Perf for the
+//! iteration log on this file.
+
+use super::window::{Window, WindowKind};
+use crate::fft::{Complex, NdFftPlan};
+
+pub struct NfftPlan {
+    d: usize,
+    /// Bandwidth per axis (N_a); frequency set I_{N_a} per axis.
+    n_band: Vec<usize>,
+    /// Oversampled grid per axis (2 N_a).
+    n_os: Vec<usize>,
+    /// Row-major strides of the oversampled grid.
+    strides: Vec<usize>,
+    windows: Vec<Window>,
+    fft: NdFftPlan,
+    /// Per-axis deconvolution factors in mod-N layout:
+    /// `dec[a][pos] = 1 / (n_os_a · φ̂_a(l))` with `pos = l mod N_a`.
+    /// (The global 1/n_os^d of the adjoint and the 1/n_os^d of the
+    /// forward inverse-FFT are folded in axis-wise.)
+    deconv: Vec<Vec<f64>>,
+    total_freq: usize,
+    total_grid: usize,
+}
+
+impl NfftPlan {
+    /// `n_band[a]` must be even (I_N is symmetric); the oversampled grid
+    /// is fixed at 2N per axis (powers of two keep the FFT radix-2).
+    pub fn new(n_band: &[usize], m: usize, kind: WindowKind) -> NfftPlan {
+        assert!(!n_band.is_empty());
+        for &na in n_band {
+            assert!(na >= 2 && na % 2 == 0, "bandwidth must be even, got {na}");
+        }
+        let d = n_band.len();
+        let n_os: Vec<usize> = n_band.iter().map(|&na| 2 * na).collect();
+        for (&na, &osa) in n_band.iter().zip(&n_os) {
+            // Footprint must fit in the grid.
+            assert!(2 * m + 2 <= osa, "window cut-off m={m} too large for N={na}");
+        }
+        let windows: Vec<Window> = n_band
+            .iter()
+            .zip(&n_os)
+            .map(|(&na, &osa)| Window::new(kind, na, osa, m))
+            .collect();
+        let mut strides = vec![1usize; d];
+        for a in (0..d.saturating_sub(1)).rev() {
+            strides[a] = strides[a + 1] * n_os[a + 1];
+        }
+        let fft = NdFftPlan::new(&n_os);
+        let deconv: Vec<Vec<f64>> = (0..d)
+            .map(|a| {
+                let na = n_band[a];
+                let osa = n_os[a] as f64;
+                let mut v = vec![0.0; na];
+                for pos in 0..na {
+                    let l = if pos < na / 2 { pos as i64 } else { pos as i64 - na as i64 };
+                    v[pos] = 1.0 / (osa * windows[a].phi_hat(l));
+                }
+                v
+            })
+            .collect();
+        let total_freq = n_band.iter().product();
+        let total_grid = n_os.iter().product();
+        NfftPlan { d, n_band: n_band.to_vec(), n_os, strides, windows, fft, deconv, total_freq, total_grid }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    pub fn bandwidth(&self) -> &[usize] {
+        &self.n_band
+    }
+
+    pub fn num_freq(&self) -> usize {
+        self.total_freq
+    }
+
+    pub fn grid_len(&self) -> usize {
+        self.total_grid
+    }
+
+    /// Scratch grid buffer (callers reuse it across applications).
+    pub fn alloc_grid(&self) -> Vec<Complex> {
+        vec![Complex::ZERO; self.total_grid]
+    }
+
+    /// **Adjoint NFFT**: `out_l ≈ Σ_i x_i e^{−2πi l·v_i}` for `l ∈ I_N^d`
+    /// (mod-N layout). `points` is row-major n×d with entries in
+    /// [−1/2, 1/2); `grid` is a reusable scratch buffer of `grid_len()`.
+    pub fn adjoint(&self, points: &[f64], x: &[f64], grid: &mut [Complex], out: &mut [Complex]) {
+        let n = x.len();
+        assert_eq!(points.len(), n * self.d);
+        assert_eq!(grid.len(), self.total_grid);
+        assert_eq!(out.len(), self.total_freq);
+        for g in grid.iter_mut() {
+            *g = Complex::ZERO;
+        }
+        self.spread(points, x, grid);
+        self.fft.forward(grid);
+        self.extract_deconvolved(grid, out);
+    }
+
+    /// Forward NFFT returning only the real part — the fastsum pipeline
+    /// consumes Re(f) and the Hermitian symmetry of `b̂ ⊙ x̂` makes the
+    /// imaginary part roundoff anyway. Halves the gather arithmetic
+    /// (§Perf iteration 2).
+    pub fn forward_real(
+        &self,
+        points: &[f64],
+        f_hat: &[Complex],
+        grid: &mut [Complex],
+        out: &mut [f64],
+    ) {
+        assert_eq!(f_hat.len(), self.total_freq);
+        assert_eq!(points.len(), out.len() * self.d);
+        assert_eq!(grid.len(), self.total_grid);
+        for g in grid.iter_mut() {
+            *g = Complex::ZERO;
+        }
+        self.embed_deconvolved(f_hat, grid);
+        self.fft.backward_unnormalized(grid);
+        self.gather_real(points, grid, out);
+    }
+
+    fn gather_real(&self, points: &[f64], grid: &[Complex], out: &mut [f64]) {
+        let d = self.d;
+        let fp = self.windows[0].footprint();
+        let mut vals = vec![0.0f64; d * fp];
+        let mut starts = vec![0i64; d];
+        let last = d - 1;
+        let n_last = self.n_os[last];
+        for (j, o) in out.iter_mut().enumerate() {
+            let v = &points[j * d..(j + 1) * d];
+            for a in 0..d {
+                starts[a] =
+                    self.windows[a].footprint_values(v[a], &mut vals[a * fp..(a + 1) * fp]);
+            }
+            let mut acc = 0.0f64;
+            let mut idx = vec![0usize; d.saturating_sub(1)];
+            'outer: loop {
+                let mut base = 0usize;
+                let mut w = 1.0;
+                for a in 0..last {
+                    let u =
+                        (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
+                    base += u * self.strides[a];
+                    w *= vals[a * fp + idx[a]];
+                }
+                if w != 0.0 {
+                    let lvals = &vals[last * fp..(last + 1) * fp];
+                    let s = starts[last].rem_euclid(n_last as i64) as usize;
+                    let first_len = fp.min(n_last - s);
+                    let mut inner = 0.0f64;
+                    let src = &grid[base + s..base + s + first_len];
+                    for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
+                        inner += g.re * lv;
+                    }
+                    let src = &grid[base..base + fp - first_len];
+                    for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
+                        inner += g.re * lv;
+                    }
+                    acc += inner * w;
+                }
+                let mut a = last;
+                loop {
+                    if a == 0 {
+                        break 'outer;
+                    }
+                    a -= 1;
+                    idx[a] += 1;
+                    if idx[a] < fp {
+                        break;
+                    }
+                    idx[a] = 0;
+                }
+            }
+            *o = acc;
+        }
+    }
+
+    /// **Forward NFFT**: `out_j ≈ Σ_{l∈I_N^d} f̂_l e^{+2πi l·v_j}`.
+    pub fn forward(
+        &self,
+        points: &[f64],
+        f_hat: &[Complex],
+        grid: &mut [Complex],
+        out: &mut [Complex],
+    ) {
+        assert_eq!(f_hat.len(), self.total_freq);
+        assert_eq!(points.len(), out.len() * self.d);
+        assert_eq!(grid.len(), self.total_grid);
+        for g in grid.iter_mut() {
+            *g = Complex::ZERO;
+        }
+        self.embed_deconvolved(f_hat, grid);
+        // g_u = (1/n_os^d) Σ_l G_l e^{+2πi l·u/n_os}: unnormalised
+        // backward FFT; the 1/n_os^d is already folded into `deconv`.
+        self.fft.backward_unnormalized(grid);
+        self.gather(points, grid, out);
+    }
+
+    /// Spread weighted window footprints onto the oversampled grid:
+    /// `grid_u += Σ_i x_i · Π_a φ_a(v_ia − u_a/n_os_a)`.
+    fn spread(&self, points: &[f64], x: &[f64], grid: &mut [Complex]) {
+        let d = self.d;
+        let fp = self.windows[0].footprint();
+        // Per-axis footprint values + starting indices for one point.
+        let mut vals = vec![0.0f64; d * fp];
+        let mut starts = vec![0i64; d];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let v = &points[i * d..(i + 1) * d];
+            for a in 0..d {
+                starts[a] =
+                    self.windows[a].footprint_values(v[a], &mut vals[a * fp..(a + 1) * fp]);
+            }
+            self.scatter_tensor(&starts, &vals, fp, xi, grid);
+        }
+    }
+
+    /// Tensor-product scatter of one point's footprint (recursive over
+    /// axes, specialised inner loop on the last axis).
+    fn scatter_tensor(
+        &self,
+        starts: &[i64],
+        vals: &[f64],
+        fp: usize,
+        weight: f64,
+        grid: &mut [Complex],
+    ) {
+        let d = self.d;
+        let last = d - 1;
+        let n_last = self.n_os[last];
+        // Iterate over the outer d-1 axes with an odometer.
+        let mut idx = vec![0usize; d.saturating_sub(1)];
+        loop {
+            // Base offset and accumulated outer weight.
+            let mut base = 0usize;
+            let mut w = weight;
+            for a in 0..last {
+                let u = (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
+                base += u * self.strides[a];
+                w *= vals[a * fp + idx[a]];
+            }
+            if w != 0.0 {
+                let lvals = &vals[last * fp..(last + 1) * fp];
+                let s = starts[last].rem_euclid(n_last as i64) as usize;
+                // Split the wrapped run into at most two contiguous
+                // spans; slice views let the compiler drop bounds
+                // checks in the hot accumulate loop (§Perf iteration 1).
+                let first_len = fp.min(n_last - s);
+                let dst = &mut grid[base + s..base + s + first_len];
+                for (g, &lv) in dst.iter_mut().zip(&lvals[..first_len]) {
+                    g.re += w * lv;
+                }
+                let dst = &mut grid[base..base + fp - first_len];
+                for (g, &lv) in dst.iter_mut().zip(&lvals[first_len..]) {
+                    g.re += w * lv;
+                }
+            }
+            // Odometer increment.
+            let mut a = last;
+            loop {
+                if a == 0 {
+                    return;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < fp {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+    }
+
+    /// Gather: `out_j = Σ_footprint grid_u · Π_a φ_a(v_ja − u_a/n_os_a)`.
+    fn gather(&self, points: &[f64], grid: &[Complex], out: &mut [Complex]) {
+        let d = self.d;
+        let fp = self.windows[0].footprint();
+        let mut vals = vec![0.0f64; d * fp];
+        let mut starts = vec![0i64; d];
+        let last = d - 1;
+        let n_last = self.n_os[last];
+        for (j, o) in out.iter_mut().enumerate() {
+            let v = &points[j * d..(j + 1) * d];
+            for a in 0..d {
+                starts[a] =
+                    self.windows[a].footprint_values(v[a], &mut vals[a * fp..(a + 1) * fp]);
+            }
+            let mut acc = Complex::ZERO;
+            let mut idx = vec![0usize; d.saturating_sub(1)];
+            'outer: loop {
+                let mut base = 0usize;
+                let mut w = 1.0;
+                for a in 0..last {
+                    let u =
+                        (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
+                    base += u * self.strides[a];
+                    w *= vals[a * fp + idx[a]];
+                }
+                if w != 0.0 {
+                    let lvals = &vals[last * fp..(last + 1) * fp];
+                    let s = starts[last].rem_euclid(n_last as i64) as usize;
+                    let first_len = fp.min(n_last - s);
+                    let mut inner = Complex::ZERO;
+                    let src = &grid[base + s..base + s + first_len];
+                    for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
+                        inner += g.scale(lv);
+                    }
+                    let src = &grid[base..base + fp - first_len];
+                    for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
+                        inner += g.scale(lv);
+                    }
+                    acc += inner.scale(w);
+                }
+                let mut a = last;
+                loop {
+                    if a == 0 {
+                        break 'outer;
+                    }
+                    a -= 1;
+                    idx[a] += 1;
+                    if idx[a] < fp {
+                        break;
+                    }
+                    idx[a] = 0;
+                }
+            }
+            *o = acc;
+        }
+    }
+
+    /// Copy the in-band FFT coefficients out of the oversampled grid,
+    /// applying the per-axis deconvolution factors (adjoint direction).
+    fn extract_deconvolved(&self, grid: &[Complex], out: &mut [Complex]) {
+        self.for_each_band(|flat_out, flat_grid, factor| {
+            out[flat_out] = grid[flat_grid].scale(factor);
+        });
+    }
+
+    /// Embed deconvolved band coefficients into the zeroed oversampled
+    /// grid (forward direction).
+    fn embed_deconvolved(&self, f_hat: &[Complex], grid: &mut [Complex]) {
+        self.for_each_band(|flat_out, flat_grid, factor| {
+            grid[flat_grid] = f_hat[flat_out].scale(factor);
+        });
+    }
+
+    /// Enumerate the band `l ∈ I_N^d`, yielding (flat index in the N^d
+    /// mod-N array, flat index in the oversampled grid, deconvolution
+    /// factor).
+    fn for_each_band(&self, mut f: impl FnMut(usize, usize, f64)) {
+        let d = self.d;
+        let mut idx = vec![0usize; d]; // position in the N^d array
+        loop {
+            let mut flat_out = 0usize;
+            let mut flat_grid = 0usize;
+            let mut factor = 1.0;
+            for a in 0..d {
+                let na = self.n_band[a];
+                let pos = idx[a];
+                let l = if pos < na / 2 { pos as i64 } else { pos as i64 - na as i64 };
+                flat_out = flat_out * na + pos;
+                let gpos = l.rem_euclid(self.n_os[a] as i64) as usize;
+                flat_grid += gpos * self.strides[a];
+                factor *= self.deconv[a][pos];
+            }
+            f(flat_out, flat_grid, factor);
+            // Odometer.
+            let mut a = d;
+            loop {
+                if a == 0 {
+                    return;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < self.n_band[a] {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nfft::{ndft_adjoint, ndft_forward};
+
+    fn rand_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        (0..n * d).map(|_| rng.uniform_in(-0.5, 0.4999)).collect()
+    }
+
+    fn max_err_c(a: &[Complex], b: &[Complex]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn adjoint_matches_ndft_1d() {
+        let n = 40;
+        let points = rand_points(n, 1, 1);
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        let x = rng.normal_vec(n);
+        let band = [16usize];
+        let want = ndft_adjoint(&points, 1, &x, &band);
+        let plan = NfftPlan::new(&band, 8, WindowKind::KaiserBessel);
+        let mut grid = plan.alloc_grid();
+        let mut got = vec![Complex::ZERO; plan.num_freq()];
+        plan.adjoint(&points, &x, &mut grid, &mut got);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum();
+        assert!(max_err_c(&got, &want) < 1e-11 * scale, "err {}", max_err_c(&got, &want));
+    }
+
+    #[test]
+    fn forward_matches_ndft_2d() {
+        let n = 25;
+        let d = 2;
+        let points = rand_points(n, d, 3);
+        let band = [8usize, 16];
+        let total = 128;
+        let mut rng = crate::data::rng::Rng::seed_from(4);
+        let f_hat: Vec<Complex> =
+            (0..total).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+        let want = ndft_forward(&points, d, &f_hat, &band);
+        let plan = NfftPlan::new(&band, 6, WindowKind::KaiserBessel);
+        let mut grid = plan.alloc_grid();
+        let mut got = vec![Complex::ZERO; n];
+        plan.forward(&points, &f_hat, &mut grid, &mut got);
+        let scale: f64 = f_hat.iter().map(|v| v.abs()).sum();
+        assert!(max_err_c(&got, &want) < 1e-11 * scale, "err {}", max_err_c(&got, &want));
+    }
+
+    #[test]
+    fn adjoint_matches_ndft_3d() {
+        let n = 30;
+        let d = 3;
+        let points = rand_points(n, d, 5);
+        let mut rng = crate::data::rng::Rng::seed_from(6);
+        let x = rng.normal_vec(n);
+        let band = [8usize, 8, 8];
+        let want = ndft_adjoint(&points, d, &x, &band);
+        let plan = NfftPlan::new(&band, 3, WindowKind::KaiserBessel);
+        let mut grid = plan.alloc_grid();
+        let mut got = vec![Complex::ZERO; plan.num_freq()];
+        plan.adjoint(&points, &x, &mut grid, &mut got);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum();
+        // m = 3 ⇒ ~1e-5 relative accuracy expected.
+        assert!(max_err_c(&got, &want) < 1e-4 * scale, "err {}", max_err_c(&got, &want));
+    }
+
+    #[test]
+    fn accuracy_improves_with_m() {
+        let n = 50;
+        let points = rand_points(n, 1, 7);
+        let mut rng = crate::data::rng::Rng::seed_from(8);
+        let x = rng.normal_vec(n);
+        let band = [32usize];
+        let want = ndft_adjoint(&points, 1, &x, &band);
+        let mut errs = Vec::new();
+        for m in [2usize, 4, 7] {
+            let plan = NfftPlan::new(&band, m, WindowKind::KaiserBessel);
+            let mut grid = plan.alloc_grid();
+            let mut got = vec![Complex::ZERO; plan.num_freq()];
+            plan.adjoint(&points, &x, &mut grid, &mut got);
+            errs.push(max_err_c(&got, &want));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "errors not decreasing: {errs:?}");
+        assert!(errs[2] < 1e-10, "m=7 error too large: {}", errs[2]);
+    }
+
+    #[test]
+    fn gaussian_window_works_but_less_accurate() {
+        let n = 30;
+        let points = rand_points(n, 1, 9);
+        let mut rng = crate::data::rng::Rng::seed_from(10);
+        let x = rng.normal_vec(n);
+        let band = [16usize];
+        let want = ndft_adjoint(&points, 1, &x, &band);
+        let m = 4;
+        let err_of = |kind| {
+            let plan = NfftPlan::new(&band, m, kind);
+            let mut grid = plan.alloc_grid();
+            let mut got = vec![Complex::ZERO; plan.num_freq()];
+            plan.adjoint(&points, &x, &mut grid, &mut got);
+            max_err_c(&got, &want)
+        };
+        let kb = err_of(WindowKind::KaiserBessel);
+        let ga = err_of(WindowKind::Gaussian);
+        assert!(kb < ga, "KB ({kb}) should beat Gaussian ({ga}) at equal m");
+        assert!(ga < 1e-3);
+    }
+
+    #[test]
+    fn points_near_boundary_wrap_correctly() {
+        // Nodes at ±(1/2 − ε) exercise the wrap-around spans.
+        let points = vec![-0.4999, 0.4999, -0.25, 0.25];
+        let x = vec![1.0, -2.0, 0.5, 0.25];
+        let band = [16usize];
+        let want = ndft_adjoint(&points, 1, &x, &band);
+        let plan = NfftPlan::new(&band, 6, WindowKind::KaiserBessel);
+        let mut grid = plan.alloc_grid();
+        let mut got = vec![Complex::ZERO; plan.num_freq()];
+        plan.adjoint(&points, &x, &mut grid, &mut got);
+        assert!(max_err_c(&got, &want) < 1e-9, "err {}", max_err_c(&got, &want));
+    }
+
+    #[test]
+    fn linearity_of_adjoint() {
+        let n = 20;
+        let points = rand_points(n, 2, 11);
+        let mut rng = crate::data::rng::Rng::seed_from(12);
+        let x1 = rng.normal_vec(n);
+        let x2 = rng.normal_vec(n);
+        let band = [8usize, 8];
+        let plan = NfftPlan::new(&band, 5, WindowKind::KaiserBessel);
+        let mut grid = plan.alloc_grid();
+        let mut a = vec![Complex::ZERO; 64];
+        let mut b = vec![Complex::ZERO; 64];
+        let mut ab = vec![Complex::ZERO; 64];
+        plan.adjoint(&points, &x1, &mut grid, &mut a);
+        plan.adjoint(&points, &x2, &mut grid, &mut b);
+        let xsum: Vec<f64> = x1.iter().zip(&x2).map(|(u, v)| u + 3.0 * v).collect();
+        plan.adjoint(&points, &xsum, &mut grid, &mut ab);
+        for i in 0..64 {
+            let want = a[i] + b[i].scale(3.0);
+            assert!((ab[i] - want).abs() < 1e-12 * (1.0 + want.abs()));
+        }
+    }
+}

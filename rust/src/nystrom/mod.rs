@@ -1,0 +1,33 @@
+//! The paper's §5: the traditional Nyström extension (the baseline the
+//! NFFT-Lanczos method is compared against) and the paper's second
+//! contribution, the hybrid Nyström-Gaussian-NFFT method (Alg 5.1).
+
+pub mod hybrid;
+pub mod traditional;
+
+pub use hybrid::{hybrid_nystrom, HybridNystromOptions};
+pub use traditional::{traditional_nystrom, TraditionalNystromOptions};
+
+use crate::linalg::dense::DenseMatrix;
+
+/// Rank-k eigen-approximation `A ≈ V Λ Vᵀ` (shared result type).
+#[derive(Debug, Clone)]
+pub struct NystromResult {
+    /// Approximate largest eigenvalues, descending.
+    pub eigenvalues: Vec<f64>,
+    /// Corresponding (orthonormal) eigenvector columns, n×k.
+    pub eigenvectors: DenseMatrix,
+}
+
+/// Errors the Nyström methods can report — the paper discusses both
+/// failure modes (§5.1: negative approximate degrees; §6.2.3:
+/// ill-conditioned `W_XX`).
+#[derive(Debug, thiserror::Error)]
+pub enum NystromError {
+    #[error("approximate degree {value:.3e} at node {index} is non-positive; D_E^(-1/2) would be imaginary")]
+    NegativeDegree { index: usize, value: f64 },
+    #[error("sample block W_XX is numerically singular (ill-conditioned sample set)")]
+    SingularSampleBlock,
+    #[error("inner eigendecomposition produced no positive eigenvalues")]
+    NoPositiveEigenvalues,
+}

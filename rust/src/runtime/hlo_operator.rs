@@ -1,0 +1,143 @@
+//! The AOT fastsum engine: `W x` through a PJRT-compiled artifact.
+//!
+//! Construction mirrors `fastsum::FastsumOperator` (Alg 3.2 steps 1–3:
+//! ρ-scaling, kernel rescale, Fourier coefficients — all computed by
+//! the same rust code, so the two engines share everything except the
+//! Alg 3.1 execution, which here runs inside XLA). Requests with
+//! n < artifact-n are zero-padded: padded nodes carry weight 0, so
+//! they contribute nothing to the sums, and their output rows are
+//! dropped.
+
+use super::artifact::ArtifactExecutable;
+use super::manifest::Manifest;
+use crate::fastsum::coeffs::kernel_coefficients;
+use crate::fastsum::kernels::Kernel;
+use crate::fastsum::operator::FastsumParams;
+use crate::fastsum::regularize::RegularizedKernel;
+use crate::graph::operator::LinearOperator;
+use crate::runtime::PjrtContext;
+use std::sync::Arc;
+
+pub struct HloFastsumOperator {
+    exe: ArtifactExecutable,
+    /// Real number of nodes.
+    n: usize,
+    /// Padded (artifact) size.
+    n_pad: usize,
+    d: usize,
+    /// ρ-scaled nodes padded to n_pad (pads at the origin, weight 0).
+    scaled_points: Vec<f64>,
+    b_hat: Vec<f64>,
+    kernel: Kernel,
+    out_scale: f64,
+}
+
+impl HloFastsumOperator {
+    pub fn new(
+        ctx: &Arc<PjrtContext>,
+        manifest: &Manifest,
+        points: &[f64],
+        d: usize,
+        kernel: Kernel,
+        params: FastsumParams,
+    ) -> anyhow::Result<HloFastsumOperator> {
+        anyhow::ensure!(
+            params.eps_b == 0.0 && !params.center,
+            "HLO artifacts are generated for the paper's eps_b = 0, uncentred configuration"
+        );
+        let n = points.len() / d;
+        let spec = manifest
+            .find_fastsum(n, d, params.n_band, params.m)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for n={n}, d={d}, N={}, m={} — regenerate with `make artifacts`",
+                    params.n_band,
+                    params.m
+                )
+            })?;
+        let exe = ctx.load_artifact(manifest.full_path(spec))?;
+        // Alg 3.2 steps 1-3, identical to the native engine.
+        let mut max_norm = 0.0f64;
+        for j in 0..n {
+            let r2: f64 = points[j * d..(j + 1) * d].iter().map(|v| v * v).sum();
+            max_norm = max_norm.max(r2.sqrt());
+        }
+        anyhow::ensure!(max_norm > 0.0, "all points at the origin");
+        let rho = 0.25 / max_norm;
+        let n_pad = spec.n;
+        let mut scaled_points = vec![0.0; n_pad * d];
+        for j in 0..n {
+            for a in 0..d {
+                scaled_points[j * d + a] = points[j * d + a] * rho;
+            }
+        }
+        let scaled_kernel = kernel.rescaled(rho);
+        let reg = RegularizedKernel::new(scaled_kernel, params.p, 0.0);
+        let band = vec![params.n_band; d];
+        let b_hat = kernel_coefficients(&reg, &band);
+        Ok(HloFastsumOperator {
+            exe,
+            n,
+            n_pad,
+            d,
+            scaled_points,
+            b_hat,
+            kernel,
+            out_scale: kernel.output_scale(rho),
+        })
+    }
+
+    pub fn artifact_name(&self) -> &str {
+        self.exe.name()
+    }
+
+    pub fn k_zero(&self) -> f64 {
+        self.kernel.at_zero()
+    }
+
+    /// `y = W̃ x` through the artifact (padded internally).
+    pub fn apply_w_tilde(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        let mut x_pad = vec![0.0; self.n_pad];
+        x_pad[..self.n].copy_from_slice(x);
+        let out = self
+            .exe
+            .run_f64(&[
+                (&self.scaled_points, &[self.n_pad as i64, self.d as i64]),
+                (&x_pad, &[self.n_pad as i64]),
+                (&self.b_hat, &[self.b_hat.len() as i64]),
+            ])
+            .expect("artifact execution failed");
+        for (yi, &o) in y.iter_mut().zip(out.iter().take(self.n)) {
+            *yi = o * self.out_scale;
+        }
+    }
+
+    /// Degree vector via the artifact.
+    pub fn degrees(&self) -> Vec<f64> {
+        let ones = vec![1.0; self.n];
+        let mut deg = vec![0.0; self.n];
+        self.apply(&ones, &mut deg);
+        deg
+    }
+}
+
+impl LinearOperator for HloFastsumOperator {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Zero-diagonal adjacency view: `W x = W̃x − K(0) x`.
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.apply_w_tilde(x, y);
+        let k0 = self.k_zero();
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi -= k0 * xi;
+        }
+    }
+
+    fn name(&self) -> &str {
+        "hlo-W"
+    }
+}

@@ -1,0 +1,132 @@
+//! `artifacts/manifest.json` parsing (via the in-repo JSON substrate —
+//! no serde offline).
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// "fastsum" or "dense".
+    pub family: String,
+    /// Padded problem size the executable was traced for.
+    pub n: usize,
+    pub d: usize,
+    /// Fastsum only: bandwidth N and window cut-off m.
+    pub n_band: Option<usize>,
+    pub m: Option<usize>,
+    /// Dense only: baked-in σ.
+    pub sigma: Option<f64>,
+    /// Path to the HLO text, relative to the manifest directory.
+    pub path: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let v = json::parse(text)?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing '{k}'"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| a.get(k).and_then(Json::as_usize);
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                family: get_str("family")?,
+                n: get_usize("n")
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing 'n'"))?,
+                d: get_usize("d")
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing 'd'"))?,
+                n_band: get_usize("N"),
+                m: get_usize("m"),
+                sigma: a.get("sigma").and_then(Json::as_f64),
+                path: PathBuf::from(get_str("path")?),
+            });
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    /// Smallest fastsum artifact that fits `n` points with the exact
+    /// (d, N, m) requested.
+    pub fn find_fastsum(&self, n: usize, d: usize, n_band: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.family == "fastsum"
+                    && a.d == d
+                    && a.n_band == Some(n_band)
+                    && a.m == Some(m)
+                    && a.n >= n
+            })
+            .min_by_key(|a| a.n)
+    }
+
+    pub fn full_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "dtype": "f64",
+      "artifacts": [
+        {"name": "fastsum_n512_d3_N16_m2", "family": "fastsum", "n": 512,
+         "d": 3, "N": 16, "m": 2, "path": "fastsum_n512_d3_N16_m2.hlo.txt"},
+        {"name": "fastsum_n2048_d3_N16_m2", "family": "fastsum", "n": 2048,
+         "d": 3, "N": 16, "m": 2, "path": "fastsum_n2048_d3_N16_m2.hlo.txt"},
+        {"name": "dense_n512_d3_s3.5", "family": "dense", "n": 512, "d": 3,
+         "sigma": 3.5, "path": "dense_n512_d3_s3.5.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].n_band, Some(16));
+        assert_eq!(m.artifacts[2].sigma, Some(3.5));
+        assert_eq!(
+            m.full_path(&m.artifacts[0]),
+            PathBuf::from("/tmp/a/fastsum_n512_d3_N16_m2.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn find_fastsum_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.find_fastsum(100, 3, 16, 2).unwrap().n, 512);
+        assert_eq!(m.find_fastsum(512, 3, 16, 2).unwrap().n, 512);
+        assert_eq!(m.find_fastsum(513, 3, 16, 2).unwrap().n, 2048);
+        assert!(m.find_fastsum(5000, 3, 16, 2).is_none());
+        assert!(m.find_fastsum(100, 2, 16, 2).is_none());
+        assert!(m.find_fastsum(100, 3, 32, 2).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#, PathBuf::from(".")).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text; see /opt/xla-example/README.md
+//! for why text, not serialized protos) and exposes them as
+//! [`crate::graph::LinearOperator`]s.
+//!
+//! Python never runs here: the rust binary compiles the HLO once at
+//! startup via the PJRT CPU client and executes it on the request path.
+
+pub mod artifact;
+pub mod hlo_operator;
+pub mod manifest;
+
+pub use artifact::{ArtifactExecutable, PjrtContext};
+pub use hlo_operator::HloFastsumOperator;
+pub use manifest::{ArtifactSpec, Manifest};

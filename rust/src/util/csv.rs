@@ -1,0 +1,86 @@
+//! Minimal CSV writer for benchmark result emission (`results/*.csv`).
+//!
+//! Only what the bench harness needs: header + numeric/string rows with
+//! proper quoting of fields containing commas or quotes.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncols: usize,
+}
+
+fn quote(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl CsvWriter {
+    /// Create `path` (parent directories included) and write the header.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<CsvWriter> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(","))?;
+        Ok(CsvWriter { out, ncols: header.len() })
+    }
+
+    /// Write a row of already-formatted fields.
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.ncols, "CSV row width mismatch");
+        writeln!(
+            self.out,
+            "{}",
+            fields.iter().map(|f| quote(f)).collect::<Vec<_>>().join(",")
+        )
+    }
+
+    /// Convenience: row of f64 values rendered with full precision.
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let fields: Vec<String> = fields.iter().map(|v| format!("{v:.12e}")).collect();
+        self.row(&fields)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("nfft_krylov_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b,comma"]).unwrap();
+            w.row(&["1".into(), "x\"y".into()]).unwrap();
+            w.row_f64(&[1.5, 2.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,\"b,comma\"");
+        assert_eq!(lines[1], "1,\"x\"\"y\"");
+        assert!(lines[2].starts_with("1.5"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let dir = std::env::temp_dir().join("nfft_krylov_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a"]).unwrap();
+        let _ = w.row(&["1".into(), "2".into()]);
+    }
+}

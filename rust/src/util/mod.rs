@@ -1,0 +1,73 @@
+//! Small shared substrates: timers, statistics, CSV/JSON emission and a
+//! miniature property-testing harness (the environment is offline, so
+//! `criterion`, `serde` and `proptest` are re-implemented at the scale
+//! this crate needs).
+
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod stats;
+pub mod timer;
+
+/// Machine epsilon-scale comparison helper used across tests.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    let diff = (a - b).abs();
+    if diff <= tol {
+        return true;
+    }
+    let scale = a.abs().max(b.abs()).max(1.0);
+    diff <= tol * scale
+}
+
+/// Maximum absolute difference between two slices (panics on length
+/// mismatch — that is always a programming error here).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Relative l2 error ‖a − b‖₂ / max(‖b‖₂, tiny).
+pub fn rel_l2_error(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rel_l2_error: length mismatch");
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_absolute_and_relative() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-10));
+        assert!(approx_eq(1e12, 1e12 + 1.0, 1e-10));
+        assert!(!approx_eq(1.0, 1.1, 1e-3));
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn rel_l2_error_zero_for_equal() {
+        let v = [3.0, -4.0, 5.0];
+        assert_eq!(rel_l2_error(&v, &v), 0.0);
+    }
+
+    #[test]
+    fn rel_l2_error_scales() {
+        let a = [2.0, 0.0];
+        let b = [1.0, 0.0];
+        assert!((rel_l2_error(&a, &b) - 1.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,82 @@
+//! Summary statistics for benchmark series (min / mean / max / median /
+//! stddev) and a least-squares log-log slope fit used to verify the
+//! paper's complexity claims (NFFT ~ n, direct ~ n², Nyström ~ n³).
+
+/// Min / mean / max / median / standard deviation of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of: empty sample");
+        let n = samples.len();
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let min = sorted[0];
+        let max = sorted[n - 1];
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n as f64 - 1.0).max(1.0);
+        Summary { n, min, max, mean, median, stddev: var.sqrt() }
+    }
+}
+
+/// Least-squares fit of `log y = a + b log x`; returns the slope `b`.
+///
+/// This is the quantity the paper reads off Figure 3d: runtime slopes of
+/// ≈1 (NFFT-Lanczos), ≈2 (direct), ≈3 (traditional Nyström).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points for a slope");
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let n = lx.len() as f64;
+    let sx: f64 = lx.iter().sum();
+    let sy: f64 = ly.iter().sum();
+    let sxx: f64 = lx.iter().map(|x| x * x).sum();
+    let sxy: f64 = lx.iter().zip(&ly).map(|(x, y)| x * y).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.median, 2.5);
+        assert!((s.stddev - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn slope_recovers_powers() {
+        let xs = [100.0, 200.0, 400.0, 800.0];
+        let quad: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        assert!((loglog_slope(&xs, &quad) - 2.0).abs() < 1e-10);
+        let lin: Vec<f64> = xs.iter().map(|x| 0.5 * x).collect();
+        assert!((loglog_slope(&xs, &lin) - 1.0).abs() < 1e-10);
+    }
+}

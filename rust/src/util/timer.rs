@@ -1,0 +1,148 @@
+//! Wall-clock timing helpers used by the bench harness and the
+//! coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple scoped stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Accumulates named phase timings (used for hot-path profiling of the
+/// fastsum operator: spread / fft / multiply / gather).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimings {
+    entries: Vec<(String, f64, u64)>,
+}
+
+impl PhaseTimings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += secs;
+            e.2 += 1;
+        } else {
+            self.entries.push((name.to_string(), secs, 1));
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|e| e.0 == name).map(|e| e.1)
+    }
+
+    pub fn entries(&self) -> &[(String, f64, u64)] {
+        &self.entries
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimings) {
+        for (name, secs, count) in &other.entries {
+            if let Some(e) = self.entries.iter_mut().find(|e| &e.0 == name) {
+                e.1 += secs;
+                e.2 += count;
+            } else {
+                self.entries.push((name.clone(), *secs, *count));
+            }
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().max(1e-300);
+        let mut out = String::new();
+        for (name, secs, count) in &self.entries {
+            out.push_str(&format!(
+                "{:>12}: {:>10.4}s  ({:>5.1}%)  x{}\n",
+                name,
+                secs,
+                100.0 * secs / total,
+                count
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_secs();
+        let b = t.elapsed_secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn phase_timings_accumulate() {
+        let mut p = PhaseTimings::new();
+        p.add("fft", 1.0);
+        p.add("fft", 0.5);
+        p.add("spread", 2.0);
+        assert!((p.total() - 3.5).abs() < 1e-12);
+        assert_eq!(p.get("fft"), Some(1.5));
+        assert_eq!(p.get("missing"), None);
+        let report = p.report();
+        assert!(report.contains("fft"));
+        assert!(report.contains("spread"));
+    }
+
+    #[test]
+    fn phase_timings_merge() {
+        let mut a = PhaseTimings::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimings::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), Some(3.0));
+        assert_eq!(a.get("y"), Some(3.0));
+    }
+}

@@ -1,0 +1,125 @@
+//! Integration: the PJRT artifact engine (JAX/Pallas AOT, L1+L2) must
+//! agree with the native rust fastsum engine (L3) and the dense oracle
+//! on identical inputs. Requires `make artifacts` to have run.
+
+use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::fastsum::{FastsumParams, Kernel};
+use nfft_krylov::graph::LinearOperator;
+use nfft_krylov::krylov::lanczos::{lanczos_eigs, LanczosOptions};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn spiral_spec(n: usize, engine: EngineKind, params: FastsumParams) -> OperatorSpec {
+    let mut rng = Rng::seed_from(11);
+    let ds = nfft_krylov::data::spiral::generate(
+        nfft_krylov::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+        &mut rng,
+    );
+    OperatorSpec {
+        points: ds.points,
+        d: 3,
+        kernel: Kernel::Gaussian { sigma: 3.5 },
+        params,
+        engine,
+    }
+}
+
+#[test]
+fn hlo_engine_matches_native_engine() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut reg = EngineRegistry::new("artifacts");
+    let params = FastsumParams::setup2();
+    let native = reg
+        .build_normalized(&spiral_spec(400, EngineKind::Native, params))
+        .unwrap();
+    let hlo = reg.build_normalized(&spiral_spec(400, EngineKind::Hlo, params)).unwrap();
+    let mut rng = Rng::seed_from(12);
+    let x = rng.normal_vec(400);
+    let ya = native.apply_vec(&x);
+    let yb = hlo.apply_vec(&x);
+    let mut worst = 0.0f64;
+    for (a, b) in ya.iter().zip(&yb) {
+        worst = worst.max((a - b).abs() / (1.0 + b.abs()));
+    }
+    // Both engines implement the identical algorithm in f64; they agree
+    // to near machine precision.
+    assert!(worst < 1e-9, "native vs hlo mismatch: {worst:.3e}");
+}
+
+#[test]
+fn hlo_engine_matches_dense_oracle() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut reg = EngineRegistry::new("artifacts");
+    let params = FastsumParams::setup2();
+    let dense = reg
+        .build_normalized(&spiral_spec(300, EngineKind::DenseDirect, params))
+        .unwrap();
+    let hlo = reg.build_normalized(&spiral_spec(300, EngineKind::Hlo, params)).unwrap();
+    let mut rng = Rng::seed_from(13);
+    let x = rng.normal_vec(300);
+    let ya = dense.apply_vec(&x);
+    let yb = hlo.apply_vec(&x);
+    for (a, b) in ya.iter().zip(&yb) {
+        assert!((a - b).abs() < 1e-7 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn nfft_lanczos_through_hlo_engine() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    // The paper's headline pipeline with the AOT artifact at the core:
+    // eigenvalues from the HLO engine match the native engine.
+    let mut reg = EngineRegistry::new("artifacts");
+    let params = FastsumParams::setup2();
+    let native = reg
+        .build_normalized(&spiral_spec(400, EngineKind::Native, params))
+        .unwrap();
+    let hlo = reg.build_normalized(&spiral_spec(400, EngineKind::Hlo, params)).unwrap();
+    let opts = LanczosOptions { k: 5, tol: 1e-8, max_iter: 150, ..Default::default() };
+    let ra = lanczos_eigs(native.as_ref(), opts);
+    let rb = lanczos_eigs(hlo.as_ref(), opts);
+    for t in 0..5 {
+        assert!(
+            (ra.eigenvalues[t] - rb.eigenvalues[t]).abs() < 1e-7,
+            "eig {t}: native {} vs hlo {}",
+            ra.eigenvalues[t],
+            rb.eigenvalues[t]
+        );
+    }
+    assert!((ra.eigenvalues[0] - 1.0).abs() < 1e-8);
+}
+
+#[test]
+fn padding_is_transparent() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    // n = 100 runs through the n = 512 artifact: results must match the
+    // native engine at n = 100 exactly (pads carry zero weight).
+    let mut reg = EngineRegistry::new("artifacts");
+    let params = FastsumParams::setup1();
+    let native =
+        reg.build_adjacency(&spiral_spec(100, EngineKind::Native, params)).unwrap();
+    let hlo = reg.build_adjacency(&spiral_spec(100, EngineKind::Hlo, params)).unwrap();
+    assert_eq!(hlo.dim(), 100);
+    let mut rng = Rng::seed_from(14);
+    let x = rng.normal_vec(100);
+    let ya = native.apply_vec(&x);
+    let yb = hlo.apply_vec(&x);
+    for (a, b) in ya.iter().zip(&yb) {
+        assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}

@@ -1,0 +1,462 @@
+// Temporary diagnostic: decompose fastsum error into NFFT error vs
+// kernel-approximation error.
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::fastsum::coeffs::kernel_coefficients;
+use nfft_krylov::fastsum::kernels::Kernel;
+use nfft_krylov::fastsum::regularize::RegularizedKernel;
+use nfft_krylov::fft::Complex;
+use nfft_krylov::nfft::{ndft_adjoint, ndft_forward, NfftPlan, WindowKind};
+
+#[test]
+#[ignore]
+fn probe() {
+    let mut rng = Rng::seed_from(1);
+    let ds = nfft_krylov::data::spiral::generate(
+        nfft_krylov::data::spiral::SpiralParams { per_class: 30, ..Default::default() },
+        &mut rng,
+    );
+    let n = ds.n;
+    let d = 3;
+    let sigma = 3.5;
+    // Same scaling as FastsumOperator.
+    let mut center = vec![0.0; d];
+    for j in 0..n {
+        for a in 0..d {
+            center[a] += ds.points[j * d + a];
+        }
+    }
+    for c in center.iter_mut() {
+        *c /= n as f64;
+    }
+    let mut max_norm: f64 = 0.0;
+    for j in 0..n {
+        let mut r2 = 0.0;
+        for a in 0..d {
+            let t = ds.points[j * d + a] - center[a];
+            r2 += t * t;
+        }
+        max_norm = max_norm.max(r2.sqrt());
+    }
+    let rho = 0.25 / max_norm;
+    let pts: Vec<f64> = (0..n * d)
+        .map(|i| (ds.points[i] - center[i % d]) * rho)
+        .collect();
+    let kern = Kernel::Gaussian { sigma: sigma * rho };
+
+    for (nb, m) in [(32usize, 4usize), (64, 7)] {
+        let band = vec![nb; d];
+        let reg = RegularizedKernel::new(kern, m, 0.0);
+        let bh = kernel_coefficients(&reg, &band);
+        let x = Rng::seed_from(2).normal_vec(n);
+        let x1: f64 = x.iter().map(|v| v.abs()).sum();
+
+        // Dense truth.
+        let mut truth = vec![0.0; n];
+        for j in 0..n {
+            for i in 0..n {
+                let mut r2 = 0.0;
+                for a in 0..d {
+                    let t = pts[j * d + a] - pts[i * d + a];
+                    r2 += t * t;
+                }
+                truth[j] += x[i] * kern.eval_radial(r2.sqrt());
+            }
+        }
+        // Exact NDFT pipeline (isolates kernel-approx error).
+        let adj = ndft_adjoint(&pts, d, &x, &band);
+        let fh: Vec<Complex> = adj.iter().zip(&bh).map(|(a, &b)| a.scale(b)).collect();
+        let exact = ndft_forward(&pts, d, &fh, &band);
+        let err_kernel = truth
+            .iter()
+            .zip(&exact)
+            .map(|(t, e)| (t - e.re).abs())
+            .fold(0.0f64, f64::max)
+            / x1;
+        // NFFT pipeline.
+        let plan = NfftPlan::new(&band, m, WindowKind::KaiserBessel);
+        let mut grid = plan.alloc_grid();
+        let mut freq = vec![Complex::ZERO; plan.num_freq()];
+        plan.adjoint(&pts, &x, &mut grid, &mut freq);
+        // NFFT adjoint error vs NDFT adjoint:
+        let err_adj = freq
+            .iter()
+            .zip(&adj)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0f64, f64::max)
+            / x1;
+        for (f, &b) in freq.iter_mut().zip(&bh) {
+            *f = f.scale(b);
+        }
+        let mut out = vec![Complex::ZERO; n];
+        plan.forward(&pts, &freq, &mut grid, &mut out);
+        let err_total = truth
+            .iter()
+            .zip(&out)
+            .map(|(t, e)| (t - e.re).abs())
+            .fold(0.0f64, f64::max)
+            / x1;
+        println!("N={nb} m={m}: kernel_err={err_kernel:.3e} adj_err={err_adj:.3e} total={err_total:.3e}");
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_hybrid() {
+    use nfft_krylov::graph::dense::{DenseKernelOperator, DenseMode};
+    use nfft_krylov::linalg::jacobi::sym_eig;
+    use nfft_krylov::nystrom::{hybrid_nystrom, HybridNystromOptions};
+    let mut rng = Rng::seed_from(7);
+    let ds = nfft_krylov::data::spiral::generate(
+        nfft_krylov::data::spiral::SpiralParams { per_class: 16, ..Default::default() },
+        &mut rng,
+    );
+    let dense = DenseKernelOperator::new(&ds.points, 3, Kernel::Gaussian { sigma: 3.5 }, DenseMode::Normalized);
+    let (all, _) = sym_eig(&dense.dense_a());
+    let want: Vec<f64> = (0..8).map(|t| all[ds.n - 1 - t]).collect();
+    println!("true top8: {:?}", want);
+    println!("true bottom3: {:?}", &all[..3]);
+    for l in [10usize, 20, 50] {
+        for seed in [50u64, 51] {
+            let r = hybrid_nystrom(&dense, HybridNystromOptions { l, m: 10, k: 5, seed }).unwrap();
+            println!("L={l} seed={seed}: {:?}", r.eigenvalues);
+        }
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_hlo() {
+    use nfft_krylov::runtime::{Manifest, PjrtContext};
+    use std::sync::Arc;
+    let ctx = Arc::new(PjrtContext::cpu().unwrap());
+    let manifest = Manifest::load("artifacts").unwrap();
+    let spec = manifest.find_fastsum(8, 3, 16, 2).unwrap();
+    let exe = ctx.load_artifact(manifest.full_path(spec)).unwrap();
+    let n_pad = spec.n;
+    // 8 real points, simple geometry.
+    let mut rng = Rng::seed_from(3);
+    let mut pts = vec![0.0; n_pad * 3];
+    for i in 0..8 * 3 {
+        pts[i] = rng.uniform_in(-0.2, 0.2);
+    }
+    let mut x = vec![0.0; n_pad];
+    for i in 0..8 {
+        x[i] = rng.normal();
+    }
+    let sigma_s = 0.15;
+    // b_hat via rust coeffs.
+    let reg = nfft_krylov::fastsum::regularize::RegularizedKernel::new(
+        Kernel::Gaussian { sigma: sigma_s }, 2, 0.0);
+    let b = nfft_krylov::fastsum::coeffs::kernel_coefficients(&reg, &[16, 16, 16]);
+    let out = exe.run_f64(&[(&pts, &[n_pad as i64, 3]), (&x, &[n_pad as i64]), (&b, &[4096])]).unwrap();
+    // dense truth
+    for j in 0..8 {
+        let mut want = 0.0;
+        for i in 0..8 {
+            let mut r2 = 0.0;
+            for a in 0..3 { let t = pts[j*3+a] - pts[i*3+a]; r2 += t*t; }
+            want += x[i] * (-r2 / (sigma_s*sigma_s)).exp();
+        }
+        println!("j={j}: hlo={:.6} dense={:.6} ratio={:.4}", out[j], want, out[j]/want);
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_hlo_dense() {
+    use nfft_krylov::runtime::PjrtContext;
+    use std::sync::Arc;
+    let ctx = Arc::new(PjrtContext::cpu().unwrap());
+    let exe = ctx.load_artifact("artifacts/dense_n512_d3_s3.5.hlo.txt").unwrap();
+    let n = 512;
+    let mut rng = Rng::seed_from(4);
+    let mut pts = vec![0.0; n * 3];
+    for v in pts.iter_mut() { *v = rng.uniform_in(-2.0, 2.0); }
+    let mut x = vec![0.0; n];
+    for v in x.iter_mut() { *v = rng.normal(); }
+    let out = exe.run_f64(&[(&pts, &[n as i64, 3]), (&x, &[n as i64])]).unwrap();
+    let sigma = 3.5;
+    for j in 0..4 {
+        let mut want = 0.0;
+        for i in 0..n {
+            let mut r2 = 0.0;
+            for a in 0..3 { let t = pts[j*3+a] - pts[i*3+a]; r2 += t*t; }
+            want += x[i] * (-r2/(sigma*sigma)).exp();
+        }
+        println!("j={j}: hlo={:.6} dense={:.6}", out[j as usize], want);
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_stages() {
+    use nfft_krylov::runtime::PjrtContext;
+    let ctx = PjrtContext::cpu().unwrap();
+    let exe = ctx.load_artifact("/tmp/probe_a.hlo.txt").unwrap();
+    let v = [0.1, 0.2, 0.3, 0.4, -0.1, -0.2, 1.1, 0.15];
+    let out = exe.run_f64(&[(&v, &[8])]).unwrap();
+    println!("A scatter: {:?}", &out[..]);
+    let exe = ctx.load_artifact("/tmp/probe_b.hlo.txt").unwrap();
+    let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.37).sin()).collect();
+    let out = exe.run_f64(&[(&x, &[16])]).unwrap();
+    let err: f64 = out.iter().zip(&x).map(|(a,b)| (a-b).abs()).fold(0.0, f64::max);
+    println!("B fft roundtrip err: {err:.3e}");
+    let exe = ctx.load_artifact("/tmp/probe_c.hlo.txt").unwrap();
+    let v = [0.0, 0.05, 0.1, -0.1, 0.2, -0.2, 0.24, -0.24];
+    let out = exe.run_f64(&[(&v, &[8])]).unwrap();
+    println!("C window sums: {:?}", &out[..]);
+    let exe = ctx.load_artifact("/tmp/probe_d.hlo.txt").unwrap();
+    let x = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+    let out = exe.run_f64(&[(&x, &[8])]).unwrap();
+    println!("D fftn first row: {:?}", &out[..8]);
+}
+
+#[test]
+#[ignore]
+fn probe_stages2() {
+    use nfft_krylov::fft::Complex;
+    use nfft_krylov::nfft::{ndft_adjoint, ndft_forward};
+    use nfft_krylov::runtime::PjrtContext;
+    let ctx = PjrtContext::cpu().unwrap();
+    let n = 8usize; let d = 2usize; let nb = 16usize;
+    let mut rng = Rng::seed_from(5);
+    let pts: Vec<f64> = (0..n*d).map(|_| rng.uniform_in(-0.25, 0.25)).collect();
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    // E: adjoint — returns (real, imag); run_f64 takes output 0 = real part.
+    let exe = ctx.load_artifact("/tmp/probe_e.hlo.txt").unwrap();
+    let out = exe.run_f64(&[(&pts, &[8, 2]), (&x, &[8])]).unwrap();
+    let want = ndft_adjoint(&pts, d, &x, &[nb, nb]);
+    let err: f64 = out.iter().zip(&want).map(|(a, w)| (a - w.re).abs()).fold(0.0, f64::max);
+    println!("E adjoint real err: {err:.3e}  (out[0]={}, want={})", out[0], want[0].re);
+    // F: forward with real f_hat.
+    let exe = ctx.load_artifact("/tmp/probe_f.hlo.txt").unwrap();
+    let fh: Vec<f64> = (0..nb*nb).map(|_| rng.normal()).collect();
+    let out = exe.run_f64(&[(&pts, &[8, 2]), (&fh, &[(nb*nb) as i64])]).unwrap();
+    let fhc: Vec<Complex> = fh.iter().map(|&v| Complex::from_re(v)).collect();
+    let want = ndft_forward(&pts, d, &fhc, &[nb, nb]);
+    let err: f64 = out.iter().zip(&want).map(|(a, w)| (a - w.re).abs()).fold(0.0, f64::max);
+    println!("F forward err: {err:.3e}  (out[0]={}, want={})", out[0], want[0].re);
+}
+
+#[test]
+#[ignore]
+fn probe_stages3() {
+    use nfft_krylov::runtime::PjrtContext;
+    let ctx = PjrtContext::cpu().unwrap();
+    let n = 8usize; let d = 2usize;
+    let mut rng = Rng::seed_from(5);
+    let pts: Vec<f64> = (0..n*d).map(|_| rng.uniform_in(-0.25, 0.25)).collect();
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    {
+        let exe = ctx.load_artifact("/tmp/probe_g0.hlo.txt").unwrap();
+        let out = exe.run_f64(&[(&pts, &[8, 2])]).unwrap();
+        println!("g0: first={:?} sum={:.4}", &out[..out.len().min(4)], out.iter().sum::<f64>());
+    }
+    for name in ["g1", "g2"] {
+        let exe = ctx.load_artifact(&format!("/tmp/probe_{name}.hlo.txt")).unwrap();
+        let out = exe.run_f64(&[(&pts, &[8, 2]), (&x, &[8])]).unwrap();
+        println!("{name}: first={:?} sum={:.4}", &out[..out.len().min(4)], out.iter().sum::<f64>());
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_stages4() {
+    use nfft_krylov::runtime::PjrtContext;
+    let ctx = PjrtContext::cpu().unwrap();
+    let n = 8usize; let d = 2usize;
+    let mut rng = Rng::seed_from(5);
+    let pts: Vec<f64> = (0..n*d).map(|_| rng.uniform_in(-0.25, 0.25)).collect();
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    for name in ["g3", "g4"] {
+        let exe = ctx.load_artifact(&format!("/tmp/probe_{name}.hlo.txt")).unwrap();
+        let out = exe.run_f64(&[(&pts, &[8, 2]), (&x, &[8])]).unwrap();
+        println!("{name}: first={:?} sum={:.4}", &out[..4], out.iter().map(|v| v.abs()).sum::<f64>());
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_stages5() {
+    use nfft_krylov::runtime::PjrtContext;
+    let ctx = PjrtContext::cpu().unwrap();
+    for (tag, d) in [("h2", 2usize), ("h3", 3usize)] {
+        let n = 8usize; let nb = 16usize;
+        let mut rng = Rng::seed_from(6);
+        let pts: Vec<f64> = (0..n*d).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let sigma_s = 0.15;
+        let reg = nfft_krylov::fastsum::regularize::RegularizedKernel::new(
+            Kernel::Gaussian { sigma: sigma_s }, 2, 0.0);
+        let band = vec![nb; d];
+        let b = nfft_krylov::fastsum::coeffs::kernel_coefficients(&reg, &band);
+        let exe = ctx.load_artifact(&format!("/tmp/probe_{tag}.hlo.txt")).unwrap();
+        let out = exe.run_f64(&[(&pts, &[n as i64, d as i64]), (&x, &[n as i64]), (&b, &[b.len() as i64])]).unwrap();
+        let mut worst = 0.0f64;
+        for j in 0..n {
+            let mut want = 0.0;
+            for i in 0..n {
+                let mut r2 = 0.0;
+                for a in 0..d { let t = pts[j*d+a] - pts[i*d+a]; r2 += t*t; }
+                want += x[i] * (-r2/(sigma_s*sigma_s)).exp();
+            }
+            worst = worst.max((out[j] - want).abs());
+        }
+        println!("{tag} d={d}: worst={worst:.3e} out0={} ", out[0]);
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_constants() {
+    use nfft_krylov::runtime::PjrtContext;
+    let ctx = PjrtContext::cpu().unwrap();
+    let x = [1.0, 1.0, 1.0, 1.0];
+    let exe = ctx.load_artifact("/tmp/probe_c1.hlo.txt").unwrap();
+    println!("c1 (f64 const array): {:?}", exe.run_f64(&[(&x, &[4])]).unwrap());
+    let exe = ctx.load_artifact("/tmp/probe_c2.hlo.txt").unwrap();
+    println!("c2 (c128 const array): {:?}", exe.run_f64(&[(&x, &[4])]).unwrap());
+}
+
+#[test]
+#[ignore]
+fn probe_stages6() {
+    use nfft_krylov::runtime::PjrtContext;
+    let ctx = PjrtContext::cpu().unwrap();
+    let n = 8usize; let d = 2usize;
+    let mut rng = Rng::seed_from(5);
+    let pts: Vec<f64> = (0..n*d).map(|_| rng.uniform_in(-0.25, 0.25)).collect();
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    for name in ["e1", "e2"] {
+        let exe = ctx.load_artifact(&format!("/tmp/probe_{name}.hlo.txt")).unwrap();
+        let out = exe.run_f64(&[(&pts, &[8, 2]), (&x, &[8])]).unwrap();
+        println!("{name}: sumabs={:.4} first={:?}", out.iter().map(|v| v.abs()).sum::<f64>(), &out[..3]);
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_stages7() {
+    use nfft_krylov::runtime::PjrtContext;
+    let ctx = PjrtContext::cpu().unwrap();
+    let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.3).sin()).collect();
+    for name in ["k1", "k2", "k3"] {
+        let exe = ctx.load_artifact(&format!("/tmp/probe_{name}.hlo.txt")).unwrap();
+        let out = exe.run_f64(&[(&x, &[4, 4])]).unwrap();
+        println!("{name}: sumabs={:.4}", out.iter().map(|v| v.abs()).sum::<f64>());
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_ssl_params() {
+    use nfft_krylov::apps::ssl_kernel::*;
+    use nfft_krylov::graph::dense::{DenseKernelOperator, DenseMode};
+    use nfft_krylov::krylov::cg::CgOptions;
+    use std::sync::Arc;
+    let mut rng = Rng::seed_from(1);
+    let ds = nfft_krylov::data::crescent::generate(1500, Default::default(), &mut rng);
+    for sigma in [0.3, 0.5, 0.8] {
+        let a: Arc<dyn nfft_krylov::graph::LinearOperator> = Arc::new(DenseKernelOperator::new(
+            &ds.points, 2, Kernel::Gaussian { sigma }, DenseMode::Normalized));
+        for beta in [1e3, 3e3, 1e4] {
+            let mut rng2 = Rng::seed_from(2);
+            let f = make_training_vector(&ds.labels, 10, &mut rng2);
+            let res = ssl_kernel_solve(a.clone(), &f, beta, &CgOptions { tol: 1e-4, max_iter: 1000, ..Default::default() });
+            let rate = misclassification_rate(&res.u, &ds.labels);
+            println!("sigma={sigma} beta={beta:.0e}: rate={rate:.4} iters={}", res.cg.iterations);
+        }
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_phasefield() {
+    use nfft_krylov::apps::phasefield::*;
+    use nfft_krylov::fastsum::{FastsumParams, NormalizedAdjacency};
+    use nfft_krylov::krylov::lanczos::{lanczos_eigs, LanczosOptions};
+    let mut rng = Rng::seed_from(1);
+    let ds = nfft_krylov::data::blobs::generate(
+        &[vec![0.0, 0.0], vec![8.0, 8.0]], &[60, 60], 0.7, &mut rng);
+    let a = NormalizedAdjacency::new(&ds.points, 2, Kernel::Gaussian { sigma: 2.0 },
+        FastsumParams::setup2()).unwrap();
+    let r = lanczos_eigs(&a, LanczosOptions { k: 4, tol: 1e-8, ..Default::default() });
+    let ls: Vec<f64> = r.eigenvalues.iter().map(|l| 1.0 - l).collect();
+    println!("ls eigs: {:?}", ls);
+    let mut training = vec![0.0; ds.n];
+    training[0] = 1.0; training[1] = 1.0; training[60] = -1.0; training[61] = -1.0;
+    for max_steps in [3usize, 10, 50] {
+        let res = phase_field_ssl(&ls, &r.eigenvectors, &training,
+            PhaseFieldParams { max_steps, ..Default::default() });
+        let umax = res.u.iter().cloned().fold(f64::MIN, f64::max);
+        let umin = res.u.iter().cloned().fold(f64::MAX, f64::min);
+        println!("steps={} converged={} u range [{umin:.4}, {umax:.4}] u0={:.4} u60={:.4}",
+            res.steps, res.converged, res.u[0], res.u[60]);
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_fig7_scale() {
+    use nfft_krylov::apps::ssl_kernel::*;
+    use nfft_krylov::fastsum::{FastsumParams, NormalizedAdjacency};
+    use nfft_krylov::krylov::cg::CgOptions;
+    use nfft_krylov::nfft::WindowKind;
+    use std::sync::Arc;
+    for n in [1200usize, 5000] {
+        let mut rng = Rng::seed_from(1);
+        let ds = nfft_krylov::data::crescent::generate(n, Default::default(), &mut rng);
+        for sigma in [0.2, 0.3, 0.4] {
+            let params = FastsumParams { n_band: 512, m: 3, p: 3, eps_b: 0.0,
+                window: WindowKind::KaiserBessel, center: false };
+            let Ok(a) = NormalizedAdjacency::new(&ds.points, 2, Kernel::Gaussian { sigma }, params) else {
+                println!("n={n} sigma={sigma}: operator failed (disconnected)"); continue;
+            };
+            let a: Arc<dyn nfft_krylov::graph::LinearOperator> = Arc::new(a);
+            for beta in [1e3, 1e4] {
+                let mut trng = Rng::seed_from(7);
+                let f = make_training_vector(&ds.labels, 25, &mut trng);
+                let res = ssl_kernel_solve(a.clone(), &f, beta,
+                    &CgOptions { tol: 1e-4, max_iter: 1000, ..Default::default() });
+                let rate = misclassification_rate(&res.u, &ds.labels);
+                println!("n={n} sigma={sigma} beta={beta:.0e}: rate={rate:.4} it={}", res.cg.iterations);
+            }
+        }
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_fig4() {
+    let r = nfft_krylov::bench_harness::fig4::run(false, 7);
+    println!("fig4 eigs: {:?}", r.eigenvalues);
+}
+
+#[test]
+#[ignore]
+fn probe_perf_split() {
+    use nfft_krylov::fft::Complex;
+    use nfft_krylov::nfft::{NfftPlan, WindowKind};
+    use std::time::Instant;
+    for (nb, m, n) in [(32usize, 4usize, 10000usize), (64, 7, 10000)] {
+        let mut rng = Rng::seed_from(1);
+        let pts: Vec<f64> = (0..n * 3).map(|_| rng.uniform_in(-0.25, 0.25)).collect();
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let plan = NfftPlan::new(&[nb; 3], m, WindowKind::KaiserBessel);
+        let mut grid = plan.alloc_grid();
+        let mut out = vec![Complex::ZERO; plan.num_freq()];
+        // full adjoint
+        let t = Instant::now();
+        for _ in 0..3 { plan.adjoint(&pts, &x, &mut grid, &mut out); }
+        let t_adj = t.elapsed().as_secs_f64() / 3.0;
+        // fft alone on the grid
+        let t = Instant::now();
+        for _ in 0..3 {
+            use nfft_krylov::fft::NdFftPlan;
+            let p2 = NdFftPlan::new(&[2*nb; 3]);
+            p2.forward(&mut grid);
+        }
+        let t_fft_with_plan = t.elapsed().as_secs_f64() / 3.0;
+        println!("N={nb} m={m} n={n}: adjoint={t_adj:.4}s  fft(+plan)={t_fft_with_plan:.4}s");
+    }
+}
