@@ -1,17 +1,33 @@
 //! `cargo bench --bench matvec_micro [-- --sizes 2000,10000]`
 //! Microbenchmarks of the request-path hot spot: one fastsum matvec
-//! per engine/setup, with the per-phase breakdown used by the §Perf
-//! iteration log, plus the PJRT artifact engine when available.
+//! per engine/setup with the per-phase breakdown used by the §Perf
+//! iteration log (the one-time `geometry` phase shows the plan/geometry
+//! split), the block-vs-loop comparison for k ∈ {1, 8, 16, 32}, plus
+//! the PJRT artifact engine when available. Emits `BENCH_matvec.json`
+//! so the perf trajectory is tracked across PRs.
 
 use nfft_krylov::bench_harness::harness::{bench, BenchArgs};
 use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
 use nfft_krylov::data::rng::Rng;
 use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel};
 use nfft_krylov::graph::LinearOperator;
+use nfft_krylov::util::json::Json;
+use std::collections::BTreeMap;
+
+const BLOCK_SIZES: [usize; 4] = [1, 8, 16, 32];
+
+fn json_row(entries: &[(&str, Json)]) -> Json {
+    let mut obj = BTreeMap::new();
+    for (k, v) in entries {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(obj)
+}
 
 fn main() {
     let args = BenchArgs::from_env();
     let sizes = args.sizes.unwrap_or_else(|| vec![2000, 10000, 50000]);
+    let mut rows: Vec<Json> = Vec::new();
     for &n in &sizes {
         println!("== fastsum matvec, n = {n} ==");
         let mut rng = Rng::seed_from(args.seed);
@@ -31,8 +47,53 @@ fn main() {
             let t = op.timings();
             print!("{}", t.report());
         }
+
+        // Block execution: apply_block over k columns vs k sequential
+        // apply calls, on the paper's setup #2 (the acceptance-criteria
+        // configuration). The `geometry` phase below is the one-time
+        // precomputation both paths amortise.
+        println!("-- block apply vs per-column loop (native, setup2) --");
+        let op = FastsumOperator::new(
+            &ds.points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        );
+        let geometry_secs = op.timings().get("geometry").unwrap_or(0.0);
+        println!("  geometry precompute (one-time): {geometry_secs:.4}s");
+        for &k in &BLOCK_SIZES {
+            let mut rng_b = Rng::seed_from(args.seed ^ ((k as u64) << 8));
+            let xs = rng_b.normal_vec(ds.n * k);
+            let mut ys = vec![0.0; ds.n * k];
+            let s_block =
+                bench(&format!("native setup2 apply_block k={k}"), 1, 3, || {
+                    op.apply_block(&xs, &mut ys)
+                });
+            let s_loop = bench(&format!("native setup2 {k}x apply loop"), 1, 3, || {
+                for (xc, yc) in xs.chunks_exact(ds.n).zip(ys.chunks_exact_mut(ds.n)) {
+                    op.apply(xc, yc);
+                }
+            });
+            let speedup = s_loop.min / s_block.min.max(1e-12);
+            println!(
+                "    k={k:>2}: block {:.4}s  loop {:.4}s  -> {speedup:.2}x",
+                s_block.min, s_loop.min
+            );
+            rows.push(json_row(&[
+                ("engine", Json::Str("native".into())),
+                ("setup", Json::Str("setup2".into())),
+                ("n", Json::Num(ds.n as f64)),
+                ("k", Json::Num(k as f64)),
+                ("block_min_s", Json::Num(s_block.min)),
+                ("loop_min_s", Json::Num(s_loop.min)),
+                ("speedup", Json::Num(speedup)),
+                ("geometry_s", Json::Num(geometry_secs)),
+            ]));
+        }
+
         if n <= 3000 {
-            // Dense direct baseline for context.
+            // Dense direct baseline for context, including its
+            // cache-blocked block path (fair comparator).
             let dense = nfft_krylov::graph::dense::DenseKernelOperator::new(
                 &ds.points,
                 3,
@@ -40,6 +101,32 @@ fn main() {
                 nfft_krylov::graph::dense::DenseMode::Adjacency,
             );
             bench("dense direct", 0, 2, || dense.apply(&x, &mut y));
+            let k = 8usize;
+            let mut rng_b = Rng::seed_from(args.seed ^ 0xd0);
+            let xs = rng_b.normal_vec(ds.n * k);
+            let mut ys = vec![0.0; ds.n * k];
+            let s_block = bench(&format!("dense apply_block k={k}"), 0, 2, || {
+                dense.apply_block(&xs, &mut ys)
+            });
+            let s_loop = bench(&format!("dense {k}x apply loop"), 0, 2, || {
+                for (xc, yc) in xs.chunks_exact(ds.n).zip(ys.chunks_exact_mut(ds.n)) {
+                    dense.apply(xc, yc);
+                }
+            });
+            let speedup = s_loop.min / s_block.min.max(1e-12);
+            println!(
+                "    k={k:>2}: block {:.4}s  loop {:.4}s  -> {speedup:.2}x",
+                s_block.min, s_loop.min
+            );
+            rows.push(json_row(&[
+                ("engine", Json::Str("dense".into())),
+                ("setup", Json::Str("adjacency".into())),
+                ("n", Json::Num(ds.n as f64)),
+                ("k", Json::Num(k as f64)),
+                ("block_min_s", Json::Num(s_block.min)),
+                ("loop_min_s", Json::Num(s_loop.min)),
+                ("speedup", Json::Num(speedup)),
+            ]));
         }
         if n <= 2048 && std::path::Path::new("artifacts/manifest.json").exists() {
             let mut reg = EngineRegistry::new("artifacts");
@@ -54,5 +141,17 @@ fn main() {
                 bench("hlo artifact setup2", 1, 5, || op.apply(&x, &mut y));
             }
         }
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("matvec_micro".into()));
+    root.insert("block_sizes".to_string(), Json::Arr(
+        BLOCK_SIZES.iter().map(|&k| Json::Num(k as f64)).collect(),
+    ));
+    root.insert("results".to_string(), Json::Arr(rows));
+    let text = Json::Obj(root).to_string();
+    match std::fs::write("BENCH_matvec.json", &text) {
+        Ok(()) => println!("wrote BENCH_matvec.json"),
+        Err(e) => eprintln!("could not write BENCH_matvec.json: {e}"),
     }
 }

@@ -31,6 +31,12 @@ impl LinearOperator for GramOperator {
         self.fast.apply_w_tilde(x, y);
     }
 
+    /// Gram block products ride the fastsum block path (multi-response
+    /// KRR fits solve one column per response).
+    fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
+        self.fast.apply_w_tilde_block(xs, ys);
+    }
+
     fn name(&self) -> &str {
         "gram-K"
     }

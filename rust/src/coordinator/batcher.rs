@@ -1,8 +1,11 @@
 //! Matvec batcher: coalesces single-vector requests into block
-//! applications. Engines amortise per-apply setup over a block (the
-//! NFFT engine reuses its plan and workspaces; the PJRT engine avoids
-//! repeated host-device literal churn), and the hybrid Nyström method
-//! naturally submits L columns at once.
+//! applications. Since the block refactor the coalesced flush lands on
+//! engines' REAL `apply_block` implementations (the NFFT engine shares
+//! its precomputed geometry and runs the batch's columns in parallel
+//! against pooled scratch; the dense baseline computes each kernel
+//! entry once per batch), so batching converts queue depth directly
+//! into hardware parallelism. The hybrid Nyström method naturally
+//! submits L columns at once.
 //!
 //! Invariants (enforced by tests + the property harness):
 //!   * responses map 1:1 to requests, in submission order per flush;

@@ -1,7 +1,7 @@
 //! Job types the coordinator executes.
 
 use crate::krylov::cg::CgOptions;
-use crate::krylov::lanczos::LanczosOptions;
+use crate::krylov::lanczos::{BlockLanczosOptions, LanczosOptions};
 use crate::nystrom::hybrid::HybridNystromOptions;
 
 /// A unit of work against a built operator.
@@ -9,12 +9,20 @@ use crate::nystrom::hybrid::HybridNystromOptions;
 pub enum Job {
     /// k largest eigenpairs of A via NFFT-Lanczos.
     Eig(LanczosOptions),
+    /// k largest eigenpairs via block Lanczos (one `apply_block` per
+    /// iteration; see [`crate::krylov::block_lanczos_eigs`]).
+    BlockEig(BlockLanczosOptions),
     /// Solve (I + β L_s) u = f (the §6.2.3 SSL system).
     SslSolve { beta: f64, rhs: Vec<f64>, opts: CgOptions },
     /// Hybrid Nyström eigen-approximation (Alg 5.1).
     HybridNystrom(HybridNystromOptions),
     /// Raw matvec A·x (goes through the batcher).
     Matvec { x: Vec<f64> },
+    /// Block matvec A·[x₁ … x_k]: `xs` holds k columns of length
+    /// `dim()` contiguously (column-major). Executes as ONE engine
+    /// `apply_block` — the request shape multi-class SSL and Nyström
+    /// clients submit.
+    BlockMatvec { xs: Vec<f64> },
 }
 
 /// Results, mirroring [`Job`].
@@ -24,15 +32,18 @@ pub enum JobResult {
     Solve(crate::krylov::cg::CgResult),
     HybridNystrom(Result<crate::nystrom::NystromResult, crate::nystrom::NystromError>),
     Matvec(Vec<f64>),
+    BlockMatvec(Vec<f64>),
 }
 
 impl Job {
     pub fn kind(&self) -> &'static str {
         match self {
             Job::Eig(_) => "eig",
+            Job::BlockEig(_) => "block-eig",
             Job::SslSolve { .. } => "ssl-solve",
             Job::HybridNystrom(_) => "hybrid-nystrom",
             Job::Matvec { .. } => "matvec",
+            Job::BlockMatvec { .. } => "block-matvec",
         }
     }
 }

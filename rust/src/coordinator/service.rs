@@ -1,16 +1,18 @@
 //! The coordinator service: a worker pool consuming a typed job queue
 //! against one built operator. Single-producer API, multi-worker
-//! execution (matvec-heavy jobs run one per worker; the engines'
-//! internal workspaces are mutex-guarded, so wall-clock parallelism is
-//! bounded by the engine — on the 1-vCPU reference box the default is
-//! one worker, but the machinery is exercised with more in tests).
+//! execution. The engines draw per-call scratch from buffer pools (no
+//! mutex-guarded workspace anymore), so concurrent workers really do
+//! run matvecs in parallel, and block-shaped jobs
+//! ([`Job::BlockMatvec`], Nyström, block Lanczos) execute as single
+//! `apply_block` calls that parallelise across columns inside the
+//! engine.
 
 use crate::coordinator::jobs::{Job, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::graph::laplacian::ShiftedOperator;
 use crate::graph::operator::LinearOperator;
 use crate::krylov::cg::cg_solve;
-use crate::krylov::lanczos::lanczos_eigs;
+use crate::krylov::lanczos::{block_lanczos_eigs, lanczos_eigs};
 use crate::nystrom::hybrid::hybrid_nystrom;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -122,6 +124,7 @@ impl Drop for Coordinator {
 fn run_job(op: &dyn LinearOperator, op_arc: &Arc<dyn LinearOperator>, job: &Job) -> JobResult {
     match job {
         Job::Eig(opts) => JobResult::Eig(lanczos_eigs(op, *opts)),
+        Job::BlockEig(opts) => JobResult::Eig(block_lanczos_eigs(op, *opts)),
         Job::SslSolve { beta, rhs, opts } => {
             let system = ShiftedOperator::ssl_system(op_arc.clone(), *beta);
             JobResult::Solve(cg_solve(&system, rhs, opts))
@@ -131,6 +134,15 @@ fn run_job(op: &dyn LinearOperator, op_arc: &Arc<dyn LinearOperator>, job: &Job)
             let mut y = vec![0.0; op.dim()];
             op.apply(x, &mut y);
             JobResult::Matvec(y)
+        }
+        Job::BlockMatvec { xs } => {
+            assert!(
+                !xs.is_empty() && xs.len() % op.dim() == 0,
+                "block matvec payload not a multiple of dim()"
+            );
+            let mut ys = vec![0.0; xs.len()];
+            op.apply_block(xs, &mut ys);
+            JobResult::BlockMatvec(ys)
         }
     }
 }
@@ -197,6 +209,30 @@ mod tests {
         let m = c.metrics();
         assert_eq!(m.jobs_submitted.load(std::sync::atomic::Ordering::Relaxed), 10);
         assert_eq!(m.jobs_completed.load(std::sync::atomic::Ordering::Relaxed), 10);
+        c.shutdown();
+    }
+
+    #[test]
+    fn block_matvec_job_matches_single_matvecs() {
+        let op = spiral_operator(60);
+        let n = op.dim();
+        let mut c = Coordinator::new(op.clone(), 2);
+        let mut rng = crate::data::rng::Rng::seed_from(5);
+        let k = 4;
+        let xs = rng.normal_vec(n * k);
+        let h = c.submit(Job::BlockMatvec { xs: xs.clone() });
+        match h.wait() {
+            JobResult::BlockMatvec(ys) => {
+                assert_eq!(ys.len(), n * k);
+                for j in 0..k {
+                    let want = op.apply_vec(&xs[j * n..(j + 1) * n]);
+                    for (a, b) in ys[j * n..(j + 1) * n].iter().zip(&want) {
+                        assert!((a - b).abs() < 1e-12, "column {j}: {a} vs {b}");
+                    }
+                }
+            }
+            _ => panic!("wrong result type"),
+        }
         c.shutdown();
     }
 

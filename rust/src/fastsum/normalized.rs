@@ -89,6 +89,14 @@ impl LinearOperator for NormalizedAdjacency {
         }
     }
 
+    /// Block form of step 5: the diagonal scalings are applied per
+    /// column, the k fastsum products run as one parallel block.
+    fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
+        crate::graph::operator::diag_sandwich_block(&self.inv_sqrt_deg, xs, ys, |s, o| {
+            self.fast.apply_w_block(s, o)
+        });
+    }
+
     fn name(&self) -> &str {
         "nfft-A"
     }
@@ -138,6 +146,30 @@ mod tests {
         let av = a.apply_vec(&v);
         for (x, y) in av.iter().zip(&v) {
             assert!((x - y).abs() < 1e-7 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn block_matches_single_applies() {
+        let points = spiral_points(90, 6);
+        let a = NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let n = 90;
+        let k = 4;
+        let mut rng = crate::data::rng::Rng::seed_from(7);
+        let xs = rng.normal_vec(n * k);
+        let mut block = vec![0.0; n * k];
+        a.apply_block(&xs, &mut block);
+        for j in 0..k {
+            let want = a.apply_vec(&xs[j * n..(j + 1) * n]);
+            for (g, w) in block[j * n..(j + 1) * n].iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12, "column {j}: {g} vs {w}");
+            }
         }
     }
 

@@ -7,6 +7,7 @@
 use super::operator::LinearOperator;
 use crate::fastsum::kernels::Kernel;
 use crate::linalg::dense::DenseMatrix;
+use rayon::prelude::*;
 
 /// Which operator the matvec realises.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -154,6 +155,71 @@ impl LinearOperator for DenseKernelOperator {
         }
     }
 
+    /// Cache-blocked block matvec: kernel entries `W_ji` are the
+    /// expensive part (per-entry exp/sqrt), so each entry is computed
+    /// ONCE and applied to all k columns — the per-column loop would
+    /// recompute the whole implicit matrix k times. Rows are staged
+    /// row-major so the k-wide inner loop is contiguous, and row tiles
+    /// run in parallel. This keeps the dense direct baseline a fair
+    /// comparator for the NFFT block path.
+    fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty() && xs.len() % n == 0, "block not a multiple of n");
+        let k = xs.len() / n;
+        if k == 1 {
+            self.apply(xs, ys);
+            return;
+        }
+        // Stage the columns row-major (xrow[i*k + c] = column c at node
+        // i), folding in the D^{-1/2} pre-scaling where needed.
+        let mut xrow = vec![0.0; n * k];
+        for (c, col) in xs.chunks_exact(n).enumerate() {
+            match self.mode {
+                DenseMode::Adjacency => {
+                    for (i, &v) in col.iter().enumerate() {
+                        xrow[i * k + c] = v;
+                    }
+                }
+                DenseMode::Normalized => {
+                    for (i, &v) in col.iter().enumerate() {
+                        xrow[i * k + c] = v * self.inv_sqrt_deg[i];
+                    }
+                }
+            }
+        }
+        let mut yrow = vec![0.0; n * k];
+        const ROW_TILE: usize = 32;
+        yrow.par_chunks_mut(ROW_TILE * k).enumerate().for_each(|(t, tile)| {
+            let j0 = t * ROW_TILE;
+            for (r, out) in tile.chunks_exact_mut(k).enumerate() {
+                let j = j0 + r;
+                for i in 0..n {
+                    let w = self.w_entry(j, i);
+                    let xr = &xrow[i * k..(i + 1) * k];
+                    for (o, &x) in out.iter_mut().zip(xr) {
+                        *o += w * x;
+                    }
+                }
+            }
+        });
+        // Back to column-major, folding in the D^{-1/2} post-scaling.
+        for (c, col) in ys.chunks_exact_mut(n).enumerate() {
+            match self.mode {
+                DenseMode::Adjacency => {
+                    for (i, y) in col.iter_mut().enumerate() {
+                        *y = yrow[i * k + c];
+                    }
+                }
+                DenseMode::Normalized => {
+                    for (i, y) in col.iter_mut().enumerate() {
+                        *y = yrow[i * k + c] * self.inv_sqrt_deg[i];
+                    }
+                }
+            }
+        }
+    }
+
     fn name(&self) -> &str {
         match self.mode {
             DenseMode::Adjacency => "dense-W",
@@ -202,6 +268,26 @@ mod tests {
             let got = op.apply_vec(&x);
             for (g, w) in got.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn block_matches_per_column_apply() {
+        let pts = sample_points(70, 3, 7);
+        let mut rng = Rng::seed_from(8);
+        // 70 rows exercises the partial last row tile (70 = 2*32 + 6).
+        let k = 5;
+        let xs = rng.normal_vec(70 * k);
+        for mode in [DenseMode::Adjacency, DenseMode::Normalized] {
+            let op = DenseKernelOperator::new(&pts, 3, Kernel::Gaussian { sigma: 1.5 }, mode);
+            let mut block = vec![0.0; 70 * k];
+            op.apply_block(&xs, &mut block);
+            for j in 0..k {
+                let want = op.apply_vec(&xs[j * 70..(j + 1) * 70]);
+                for (g, w) in block[j * 70..(j + 1) * 70].iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-12, "{mode:?} column {j}: {g} vs {w}");
+                }
             }
         }
     }

@@ -49,6 +49,14 @@ impl LinearOperator for NormalizedOperator {
         }
     }
 
+    /// Per-column diagonal scalings around one block application of the
+    /// wrapped engine, so blocking survives the normalisation wrapper.
+    fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
+        super::operator::diag_sandwich_block(&self.inv_sqrt_deg, xs, ys, |s, o| {
+            self.w.apply_block(s, o)
+        });
+    }
+
     fn name(&self) -> &str {
         "normalized"
     }

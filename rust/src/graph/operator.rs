@@ -2,11 +2,14 @@
 
 /// A real linear operator `y = A x` of fixed dimension.
 ///
-/// `apply_block` exists because several call sites (the hybrid Nyström
-/// method's `A·G`, block Lanczos experiments, the coordinator batcher)
-/// apply the operator to many vectors at once; engines can amortise
-/// setup (e.g. the NFFT reuses its window/FFT plan and the HLO engine
-/// batches PJRT executions).
+/// `apply_block` is the block execution path every batch call site
+/// routes through: the hybrid Nyström `A·G`, block Lanczos, and the
+/// coordinator batcher. Engines override it to amortise per-apply
+/// setup and to parallelise across columns — the NFFT engine shares
+/// its precomputed window geometry and runs columns concurrently
+/// against pooled scratch, the dense baseline computes each kernel
+/// entry once per block instead of once per column. The default is the
+/// sequential per-column loop, correct for any operator.
 pub trait LinearOperator: Send + Sync {
     /// Dimension n of the (square) operator.
     fn dim(&self) -> usize;
@@ -35,6 +38,34 @@ pub trait LinearOperator: Send + Sync {
     /// A human-readable engine name for metrics/logs.
     fn name(&self) -> &str {
         "operator"
+    }
+}
+
+/// Shared diagonal-sandwich block helper: scale every column of `xs`
+/// by `scale`, run `inner` on the whole block, scale the result's
+/// columns again. Both normalisation wrappers (`D^{−1/2} W D^{−1/2}`
+/// over the fastsum engine and over arbitrary engines) implement their
+/// `apply_block` with this.
+pub fn diag_sandwich_block(
+    scale: &[f64],
+    xs: &[f64],
+    ys: &mut [f64],
+    inner: impl FnOnce(&[f64], &mut [f64]),
+) {
+    let n = scale.len();
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty() && xs.len() % n == 0, "block not a multiple of n");
+    let mut scaled = vec![0.0; xs.len()];
+    for (src, dst) in xs.chunks_exact(n).zip(scaled.chunks_exact_mut(n)) {
+        for ((d, &v), s) in dst.iter_mut().zip(src).zip(scale) {
+            *d = v * s;
+        }
+    }
+    inner(&scaled, ys);
+    for col in ys.chunks_exact_mut(n) {
+        for (yi, s) in col.iter_mut().zip(scale) {
+            *yi *= s;
+        }
     }
 }
 

@@ -14,4 +14,6 @@ pub mod lanczos;
 pub mod minres;
 
 pub use cg::{cg_solve, CgOptions, CgResult};
-pub use lanczos::{lanczos_eigs, EigResult, LanczosOptions};
+pub use lanczos::{
+    block_lanczos_eigs, lanczos_eigs, BlockLanczosOptions, EigResult, LanczosOptions,
+};

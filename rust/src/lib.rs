@@ -11,27 +11,50 @@
 //! * [`fft`] — from-scratch complex FFT substrate (radix-2 / mixed-radix /
 //!   Bluestein) used by the native NFFT engine.
 //! * [`nfft`] — nonequispaced fast Fourier transform (forward + adjoint)
-//!   with Kaiser-Bessel / Gaussian / B-spline windows.
+//!   with Kaiser-Bessel / Gaussian windows. The plan is split into the
+//!   immutable transform ([`nfft::NfftPlan`]) and a per-point-cloud
+//!   [`nfft::NfftGeometry`] (window footprints precomputed once in
+//!   O(n·(2m+2)·d) and reused by every matvec); `adjoint_block` /
+//!   `forward_real_block` apply a transform to k columns in parallel
+//!   against pooled grid scratch.
 //! * [`fastsum`] — Algorithms 3.1 / 3.2 of the paper: kernel
 //!   regularisation, Fourier coefficients, and the O(n) approximate
 //!   matrix-vector product with the (normalised) adjacency matrix.
+//!   `apply_block` runs one adjoint→multiply→forward pass over k
+//!   columns; scratch comes from [`util::BufferPool`]s, so concurrent
+//!   callers never serialise.
 //! * [`linalg`] — dense linear-algebra substrate: QR, symmetric
 //!   tridiagonal eigensolver, Jacobi eigensolver, small dense ops.
-//! * [`krylov`] — Lanczos eigensolver, CG, MINRES, Arnoldi/GMRES.
+//! * [`krylov`] — Lanczos eigensolver (single-vector and block — the
+//!   block variant drives the engine through one `apply_block` per
+//!   iteration), CG, MINRES, Arnoldi/GMRES.
 //! * [`nystrom`] — the traditional Nyström extension (Section 5.1) and
-//!   the hybrid Nyström-Gaussian-NFFT method (Algorithm 5.1).
-//! * [`graph`] — graph-Laplacian operators and the dense direct baseline.
+//!   the hybrid Nyström-Gaussian-NFFT method (Algorithm 5.1); its `A·G`
+//!   and `A·Q` products are single block applies.
+//! * [`graph`] — graph-Laplacian operators and the dense direct
+//!   baseline (with a cache-blocked, parallel `apply_block` of its own,
+//!   keeping the O(n²) comparator fair).
 //! * [`data`] — dataset generators (spiral, crescent-fullmoon, synthetic
 //!   image, blobs) and a deterministic PRNG substrate.
 //! * [`apps`] — the paper's applications: spectral clustering (§6.2.1),
 //!   phase-field SSL (§6.2.2), kernel SSL (§6.2.3), kernel ridge
 //!   regression (§6.3).
 //! * [`runtime`] — PJRT client wrapper loading AOT artifacts produced by
-//!   the JAX/Pallas build path (`python/compile/aot.py`).
-//! * [`coordinator`] — the L3 service layer: job queue, matvec batching,
-//!   worker threads, metrics, and the CLI-facing engine registry.
+//!   the JAX/Pallas build path (`python/compile/aot.py`); compiled as an
+//!   error-returning stub unless the `pjrt` cargo feature is enabled.
+//! * [`coordinator`] — the L3 service layer: job queue, matvec batching
+//!   (coalesced requests flush as ONE `apply_block`), worker threads,
+//!   metrics, and the CLI-facing engine registry.
 //! * [`bench_harness`] — drivers regenerating every table/figure of the
 //!   paper's evaluation section.
+//!
+//! **Block execution core.** Every batch-shaped workload — the hybrid
+//! Nyström `A·G`, block Lanczos, the coordinator batcher, multi-class
+//! SSL — routes through [`graph::LinearOperator::apply_block`], which
+//! each engine implements natively: geometry shared across columns and
+//! columns in parallel (NFFT), one kernel evaluation per entry per
+//! block (dense). The single-vector `apply` is the degenerate k = 1
+//! case, not the primitive the system is built from.
 
 pub mod apps;
 pub mod bench_harness;

@@ -1,0 +1,73 @@
+//! Precomputed per-point-cloud NFFT geometry.
+//!
+//! Every NFFT application (spread in the adjoint, gather in the
+//! forward) needs, for each node `v_i` and each axis `a`, the window
+//! footprint: the starting grid index `u0 = ⌊v_ia·n_os_a⌋ − m` and the
+//! `2m+2` window values `φ_a(v_ia − (u0+t)/n_os_a)`. Those depend only
+//! on the point cloud and the plan — not on the vector being
+//! transformed — yet the original implementation recomputed them inside
+//! every spread/gather pass, i.e. on every matvec, every block column
+//! and every Lanczos iteration.
+//!
+//! [`NfftGeometry`] hoists that work into a one-time `O(n·(2m+2)·d)`
+//! precomputation (window evaluations are the expensive part: sinh/sin
+//! per tap for Kaiser-Bessel). The immutable [`super::NfftPlan`] keeps
+//! everything point-independent (windows, FFT plans, deconvolution
+//! factors) and can be shared across any number of point clouds, while
+//! a geometry is bound to one cloud and shared across every transform
+//! over it — the amortisation at the heart of the paper's Krylov
+//! speedup story.
+
+/// Window footprint table for one point cloud under one plan shape.
+///
+/// Built by [`super::NfftPlan::build_geometry`]; consumed by the
+/// `*_with_geometry` and `*_block` transform entry points.
+#[derive(Debug, Clone)]
+pub struct NfftGeometry {
+    pub(crate) n: usize,
+    pub(crate) d: usize,
+    /// Taps per axis (2m + 2).
+    pub(crate) fp: usize,
+    /// Oversampled grid size per axis the start indices were computed
+    /// against — a geometry is only valid for plans with this exact
+    /// grid shape.
+    pub(crate) n_os: Vec<usize>,
+    /// Per-(point, axis) footprint start indices, length `n·d`
+    /// (unwrapped; consumers reduce mod `n_os` at use time).
+    pub(crate) starts: Vec<i64>,
+    /// Per-(point, axis, tap) window values, length `n·d·fp`,
+    /// point-major then axis-major.
+    pub(crate) vals: Vec<f64>,
+}
+
+impl NfftGeometry {
+    /// Number of points this geometry was built for.
+    pub fn num_points(&self) -> usize {
+        self.n
+    }
+
+    /// Spatial dimension d.
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    /// Window taps per axis (2m + 2).
+    pub fn footprint(&self) -> usize {
+        self.fp
+    }
+
+    /// Approximate resident size in bytes (metrics/capacity planning).
+    pub fn bytes(&self) -> usize {
+        self.starts.len() * std::mem::size_of::<i64>()
+            + self.vals.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Footprint of point `i`: (per-axis start indices, per-axis×tap
+    /// window values).
+    #[inline]
+    pub(crate) fn point(&self, i: usize) -> (&[i64], &[f64]) {
+        let d = self.d;
+        let fp = self.fp;
+        (&self.starts[i * d..(i + 1) * d], &self.vals[i * d * fp..(i + 1) * d * fp])
+    }
+}

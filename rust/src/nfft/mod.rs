@@ -14,10 +14,17 @@
 //! Each transform is window-spread (or gathered) onto a 2×-oversampled
 //! grid, FFT'd with the from-scratch [`crate::fft`] plans, and
 //! deconvolved by the window's Fourier coefficients.
+//!
+//! The plan itself is split into the immutable transform [`NfftPlan`]
+//! and the per-point-cloud [`NfftGeometry`] (precomputed window
+//! footprints); batched `*_block` entry points apply a transform to k
+//! columns in parallel while sharing one geometry. See [`plan`].
 
+pub mod geometry;
 pub mod plan;
 pub mod window;
 
+pub use geometry::NfftGeometry;
 pub use plan::NfftPlan;
 pub use window::{Window, WindowKind};
 

@@ -2,9 +2,29 @@
 //! 2×-oversampled grid plus FFT deconvolution. This is the request-path
 //! hot spot of the whole system — see EXPERIMENTS.md §Perf for the
 //! iteration log on this file.
+//!
+//! The plan is split in two (§Perf iteration 3, the block-matvec
+//! refactor):
+//!
+//! * [`NfftPlan`] — immutable, point-independent state: windows, FFT
+//!   plans, deconvolution factors. Shareable across point clouds and
+//!   across threads.
+//! * [`NfftGeometry`] — the per-point-cloud window footprint table
+//!   (start indices + window values per node), precomputed once in
+//!   `O(n·(2m+2)·d)` by [`NfftPlan::build_geometry`] and reused by
+//!   every matvec, block column and Lanczos iteration.
+//!
+//! Transforms come in three flavours: the original single-shot API
+//! (`adjoint`/`forward`/`forward_real`, which build a transient
+//! geometry), the `*_with_geometry` variants that reuse a precomputed
+//! geometry, and the `*_block` variants that apply the transform to k
+//! columns at once — one pooled grid per column, columns in parallel.
 
+use super::geometry::NfftGeometry;
 use super::window::{Window, WindowKind};
 use crate::fft::{Complex, NdFftPlan};
+use crate::util::pool::BufferPool;
+use rayon::prelude::*;
 
 pub struct NfftPlan {
     d: usize,
@@ -87,26 +107,116 @@ impl NfftPlan {
         vec![Complex::ZERO; self.total_grid]
     }
 
+    /// Pool handing out grid scratch buffers sized for this plan — the
+    /// per-column scratch source of the `*_block` entry points.
+    pub fn grid_pool(&self) -> BufferPool<Complex> {
+        BufferPool::new(self.total_grid, Complex::ZERO)
+    }
+
+    /// Precompute the window footprint table (start indices + window
+    /// values per node and axis) for one point cloud. `points` is
+    /// row-major n×d with entries in [−1/2, 1/2). O(n·(2m+2)·d) window
+    /// evaluations, parallel over points; reuse the result across every
+    /// transform over the same cloud.
+    pub fn build_geometry(&self, points: &[f64]) -> NfftGeometry {
+        let d = self.d;
+        assert_eq!(points.len() % d, 0, "points not a multiple of d");
+        let n = points.len() / d;
+        let fp = self.windows[0].footprint();
+        let mut starts = vec![0i64; n * d];
+        let mut vals = vec![0.0f64; n * d * fp];
+        starts
+            .par_chunks_mut(d)
+            .zip(vals.par_chunks_mut(d * fp))
+            .enumerate()
+            .for_each(|(i, (s, v))| {
+                let p = &points[i * d..(i + 1) * d];
+                for a in 0..d {
+                    s[a] = self.windows[a]
+                        .footprint_values(p[a], &mut v[a * fp..(a + 1) * fp]);
+                }
+            });
+        NfftGeometry { n, d, fp, n_os: self.n_os.clone(), starts, vals }
+    }
+
+    fn check_geometry(&self, geo: &NfftGeometry) {
+        assert_eq!(geo.d, self.d, "geometry built for a different dimension");
+        assert_eq!(
+            geo.fp,
+            self.windows[0].footprint(),
+            "geometry built for a different window cut-off"
+        );
+        assert_eq!(
+            geo.n_os, self.n_os,
+            "geometry built for a different bandwidth/oversampled grid"
+        );
+    }
+
     /// **Adjoint NFFT**: `out_l ≈ Σ_i x_i e^{−2πi l·v_i}` for `l ∈ I_N^d`
     /// (mod-N layout). `points` is row-major n×d with entries in
     /// [−1/2, 1/2); `grid` is a reusable scratch buffer of `grid_len()`.
+    /// Builds a transient geometry — hot paths precompute one with
+    /// [`Self::build_geometry`] and call [`Self::adjoint_with_geometry`].
     pub fn adjoint(&self, points: &[f64], x: &[f64], grid: &mut [Complex], out: &mut [Complex]) {
         let n = x.len();
         assert_eq!(points.len(), n * self.d);
+        let geo = self.build_geometry(points);
+        self.adjoint_with_geometry(&geo, x, grid, out);
+    }
+
+    /// Adjoint NFFT reusing a precomputed geometry. The geometry is
+    /// immutable; any number of calls (including concurrent ones with
+    /// disjoint grids) may share it.
+    pub fn adjoint_with_geometry(
+        &self,
+        geo: &NfftGeometry,
+        x: &[f64],
+        grid: &mut [Complex],
+        out: &mut [Complex],
+    ) {
+        self.check_geometry(geo);
+        assert_eq!(x.len(), geo.n);
         assert_eq!(grid.len(), self.total_grid);
         assert_eq!(out.len(), self.total_freq);
         for g in grid.iter_mut() {
             *g = Complex::ZERO;
         }
-        self.spread(points, x, grid);
+        self.spread(geo, x, grid);
         self.fft.forward(grid);
         self.extract_deconvolved(grid, out);
+    }
+
+    /// Batched adjoint over k columns (`xs[j*n..(j+1)*n]` is column j;
+    /// `out[j*num_freq()..]` receives its coefficients). Shares one
+    /// geometry across all columns and runs columns in parallel, each
+    /// with its own pooled grid.
+    pub fn adjoint_block(
+        &self,
+        geo: &NfftGeometry,
+        xs: &[f64],
+        out: &mut [Complex],
+        grids: &BufferPool<Complex>,
+    ) {
+        self.check_geometry(geo);
+        let n = geo.n;
+        assert!(n > 0, "empty geometry");
+        assert_eq!(xs.len() % n, 0, "xs not a multiple of n");
+        let k = xs.len() / n;
+        assert_eq!(out.len(), k * self.total_freq);
+        assert_eq!(grids.buf_len(), self.total_grid, "grid pool sized for a different plan");
+        out.par_chunks_mut(self.total_freq)
+            .zip(xs.par_chunks(n))
+            .for_each(|(o, x)| {
+                let mut grid = grids.take();
+                self.adjoint_with_geometry(geo, x, &mut grid, o);
+                grids.put(grid);
+            });
     }
 
     /// Forward NFFT returning only the real part — the fastsum pipeline
     /// consumes Re(f) and the Hermitian symmetry of `b̂ ⊙ x̂` makes the
     /// imaginary part roundoff anyway. Halves the gather arithmetic
-    /// (§Perf iteration 2).
+    /// (§Perf iteration 2). Builds a transient geometry.
     pub fn forward_real(
         &self,
         points: &[f64],
@@ -114,74 +224,84 @@ impl NfftPlan {
         grid: &mut [Complex],
         out: &mut [f64],
     ) {
-        assert_eq!(f_hat.len(), self.total_freq);
         assert_eq!(points.len(), out.len() * self.d);
+        let geo = self.build_geometry(points);
+        self.forward_real_with_geometry(&geo, f_hat, grid, out);
+    }
+
+    /// Real-output forward NFFT reusing a precomputed geometry; the
+    /// per-node gather loop runs in parallel.
+    pub fn forward_real_with_geometry(
+        &self,
+        geo: &NfftGeometry,
+        f_hat: &[Complex],
+        grid: &mut [Complex],
+        out: &mut [f64],
+    ) {
+        self.forward_real_impl(geo, f_hat, grid, out, true);
+    }
+
+    /// Batched real-output forward over k coefficient columns
+    /// (`f_hats[j*num_freq()..]` → `out[j*n..]`). Columns in parallel,
+    /// one pooled grid each; the per-node gather inside a column stays
+    /// sequential so the column-level parallelism composes cleanly.
+    pub fn forward_real_block(
+        &self,
+        geo: &NfftGeometry,
+        f_hats: &[Complex],
+        out: &mut [f64],
+        grids: &BufferPool<Complex>,
+    ) {
+        self.check_geometry(geo);
+        let n = geo.n;
+        let nf = self.total_freq;
+        assert!(n > 0, "empty geometry");
+        assert_eq!(f_hats.len() % nf, 0, "f_hats not a multiple of num_freq()");
+        let k = f_hats.len() / nf;
+        assert_eq!(out.len(), k * n);
+        assert_eq!(grids.buf_len(), self.total_grid, "grid pool sized for a different plan");
+        out.par_chunks_mut(n)
+            .zip(f_hats.par_chunks(nf))
+            .for_each(|(o, fh)| {
+                let mut grid = grids.take();
+                self.forward_real_impl(geo, fh, &mut grid, o, false);
+                grids.put(grid);
+            });
+    }
+
+    fn forward_real_impl(
+        &self,
+        geo: &NfftGeometry,
+        f_hat: &[Complex],
+        grid: &mut [Complex],
+        out: &mut [f64],
+        parallel: bool,
+    ) {
+        self.check_geometry(geo);
+        assert_eq!(f_hat.len(), self.total_freq);
+        assert_eq!(out.len(), geo.n);
         assert_eq!(grid.len(), self.total_grid);
         for g in grid.iter_mut() {
             *g = Complex::ZERO;
         }
         self.embed_deconvolved(f_hat, grid);
         self.fft.backward_unnormalized(grid);
-        self.gather_real(points, grid, out);
-    }
-
-    fn gather_real(&self, points: &[f64], grid: &[Complex], out: &mut [f64]) {
-        let d = self.d;
-        let fp = self.windows[0].footprint();
-        let mut vals = vec![0.0f64; d * fp];
-        let mut starts = vec![0i64; d];
-        let last = d - 1;
-        let n_last = self.n_os[last];
-        for (j, o) in out.iter_mut().enumerate() {
-            let v = &points[j * d..(j + 1) * d];
-            for a in 0..d {
-                starts[a] =
-                    self.windows[a].footprint_values(v[a], &mut vals[a * fp..(a + 1) * fp]);
+        let grid_r: &[Complex] = grid;
+        if parallel {
+            out.par_iter_mut().enumerate().for_each(|(j, o)| {
+                let (starts, vals) = geo.point(j);
+                *o = self.gather_point_real(starts, vals, grid_r);
+            });
+        } else {
+            for (j, o) in out.iter_mut().enumerate() {
+                let (starts, vals) = geo.point(j);
+                *o = self.gather_point_real(starts, vals, grid_r);
             }
-            let mut acc = 0.0f64;
-            let mut idx = vec![0usize; d.saturating_sub(1)];
-            'outer: loop {
-                let mut base = 0usize;
-                let mut w = 1.0;
-                for a in 0..last {
-                    let u =
-                        (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
-                    base += u * self.strides[a];
-                    w *= vals[a * fp + idx[a]];
-                }
-                if w != 0.0 {
-                    let lvals = &vals[last * fp..(last + 1) * fp];
-                    let s = starts[last].rem_euclid(n_last as i64) as usize;
-                    let first_len = fp.min(n_last - s);
-                    let mut inner = 0.0f64;
-                    let src = &grid[base + s..base + s + first_len];
-                    for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
-                        inner += g.re * lv;
-                    }
-                    let src = &grid[base..base + fp - first_len];
-                    for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
-                        inner += g.re * lv;
-                    }
-                    acc += inner * w;
-                }
-                let mut a = last;
-                loop {
-                    if a == 0 {
-                        break 'outer;
-                    }
-                    a -= 1;
-                    idx[a] += 1;
-                    if idx[a] < fp {
-                        break;
-                    }
-                    idx[a] = 0;
-                }
-            }
-            *o = acc;
         }
     }
 
     /// **Forward NFFT**: `out_j ≈ Σ_{l∈I_N^d} f̂_l e^{+2πi l·v_j}`.
+    /// Builds a transient geometry.
     pub fn forward(
         &self,
         points: &[f64],
@@ -189,8 +309,22 @@ impl NfftPlan {
         grid: &mut [Complex],
         out: &mut [Complex],
     ) {
-        assert_eq!(f_hat.len(), self.total_freq);
         assert_eq!(points.len(), out.len() * self.d);
+        let geo = self.build_geometry(points);
+        self.forward_with_geometry(&geo, f_hat, grid, out);
+    }
+
+    /// Complex-output forward NFFT reusing a precomputed geometry.
+    pub fn forward_with_geometry(
+        &self,
+        geo: &NfftGeometry,
+        f_hat: &[Complex],
+        grid: &mut [Complex],
+        out: &mut [Complex],
+    ) {
+        self.check_geometry(geo);
+        assert_eq!(f_hat.len(), self.total_freq);
+        assert_eq!(out.len(), geo.n);
         assert_eq!(grid.len(), self.total_grid);
         for g in grid.iter_mut() {
             *g = Complex::ZERO;
@@ -199,32 +333,27 @@ impl NfftPlan {
         // g_u = (1/n_os^d) Σ_l G_l e^{+2πi l·u/n_os}: unnormalised
         // backward FFT; the 1/n_os^d is already folded into `deconv`.
         self.fft.backward_unnormalized(grid);
-        self.gather(points, grid, out);
+        for (j, o) in out.iter_mut().enumerate() {
+            let (starts, vals) = geo.point(j);
+            *o = self.gather_point(starts, vals, grid);
+        }
     }
 
     /// Spread weighted window footprints onto the oversampled grid:
     /// `grid_u += Σ_i x_i · Π_a φ_a(v_ia − u_a/n_os_a)`.
-    fn spread(&self, points: &[f64], x: &[f64], grid: &mut [Complex]) {
-        let d = self.d;
-        let fp = self.windows[0].footprint();
-        // Per-axis footprint values + starting indices for one point.
-        let mut vals = vec![0.0f64; d * fp];
-        let mut starts = vec![0i64; d];
+    fn spread(&self, geo: &NfftGeometry, x: &[f64], grid: &mut [Complex]) {
+        let fp = geo.fp;
         for (i, &xi) in x.iter().enumerate() {
             if xi == 0.0 {
                 continue;
             }
-            let v = &points[i * d..(i + 1) * d];
-            for a in 0..d {
-                starts[a] =
-                    self.windows[a].footprint_values(v[a], &mut vals[a * fp..(a + 1) * fp]);
-            }
-            self.scatter_tensor(&starts, &vals, fp, xi, grid);
+            let (starts, vals) = geo.point(i);
+            self.scatter_tensor(starts, vals, fp, xi, grid);
         }
     }
 
-    /// Tensor-product scatter of one point's footprint (recursive over
-    /// axes, specialised inner loop on the last axis).
+    /// Tensor-product scatter of one point's footprint (odometer over
+    /// the outer axes, specialised inner loop on the last axis).
     fn scatter_tensor(
         &self,
         starts: &[i64],
@@ -279,61 +408,99 @@ impl NfftPlan {
         }
     }
 
-    /// Gather: `out_j = Σ_footprint grid_u · Π_a φ_a(v_ja − u_a/n_os_a)`.
-    fn gather(&self, points: &[f64], grid: &[Complex], out: &mut [Complex]) {
+    /// Real-part gather of one point's footprint:
+    /// `Σ_footprint Re(grid_u) · Π_a φ_a(v_a − u_a/n_os_a)`.
+    fn gather_point_real(&self, starts: &[i64], vals: &[f64], grid: &[Complex]) -> f64 {
         let d = self.d;
-        let fp = self.windows[0].footprint();
-        let mut vals = vec![0.0f64; d * fp];
-        let mut starts = vec![0i64; d];
+        let fp = vals.len() / d;
         let last = d - 1;
         let n_last = self.n_os[last];
-        for (j, o) in out.iter_mut().enumerate() {
-            let v = &points[j * d..(j + 1) * d];
-            for a in 0..d {
-                starts[a] =
-                    self.windows[a].footprint_values(v[a], &mut vals[a * fp..(a + 1) * fp]);
+        let mut acc = 0.0f64;
+        let mut idx = vec![0usize; d.saturating_sub(1)];
+        'outer: loop {
+            let mut base = 0usize;
+            let mut w = 1.0;
+            for a in 0..last {
+                let u = (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
+                base += u * self.strides[a];
+                w *= vals[a * fp + idx[a]];
             }
-            let mut acc = Complex::ZERO;
-            let mut idx = vec![0usize; d.saturating_sub(1)];
-            'outer: loop {
-                let mut base = 0usize;
-                let mut w = 1.0;
-                for a in 0..last {
-                    let u =
-                        (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
-                    base += u * self.strides[a];
-                    w *= vals[a * fp + idx[a]];
+            if w != 0.0 {
+                let lvals = &vals[last * fp..(last + 1) * fp];
+                let s = starts[last].rem_euclid(n_last as i64) as usize;
+                let first_len = fp.min(n_last - s);
+                let mut inner = 0.0f64;
+                let src = &grid[base + s..base + s + first_len];
+                for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
+                    inner += g.re * lv;
                 }
-                if w != 0.0 {
-                    let lvals = &vals[last * fp..(last + 1) * fp];
-                    let s = starts[last].rem_euclid(n_last as i64) as usize;
-                    let first_len = fp.min(n_last - s);
-                    let mut inner = Complex::ZERO;
-                    let src = &grid[base + s..base + s + first_len];
-                    for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
-                        inner += g.scale(lv);
-                    }
-                    let src = &grid[base..base + fp - first_len];
-                    for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
-                        inner += g.scale(lv);
-                    }
-                    acc += inner.scale(w);
+                let src = &grid[base..base + fp - first_len];
+                for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
+                    inner += g.re * lv;
                 }
-                let mut a = last;
-                loop {
-                    if a == 0 {
-                        break 'outer;
-                    }
-                    a -= 1;
-                    idx[a] += 1;
-                    if idx[a] < fp {
-                        break;
-                    }
-                    idx[a] = 0;
-                }
+                acc += inner * w;
             }
-            *o = acc;
+            let mut a = last;
+            loop {
+                if a == 0 {
+                    break 'outer;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < fp {
+                    break;
+                }
+                idx[a] = 0;
+            }
         }
+        acc
+    }
+
+    /// Complex gather of one point's footprint.
+    fn gather_point(&self, starts: &[i64], vals: &[f64], grid: &[Complex]) -> Complex {
+        let d = self.d;
+        let fp = vals.len() / d;
+        let last = d - 1;
+        let n_last = self.n_os[last];
+        let mut acc = Complex::ZERO;
+        let mut idx = vec![0usize; d.saturating_sub(1)];
+        'outer: loop {
+            let mut base = 0usize;
+            let mut w = 1.0;
+            for a in 0..last {
+                let u = (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
+                base += u * self.strides[a];
+                w *= vals[a * fp + idx[a]];
+            }
+            if w != 0.0 {
+                let lvals = &vals[last * fp..(last + 1) * fp];
+                let s = starts[last].rem_euclid(n_last as i64) as usize;
+                let first_len = fp.min(n_last - s);
+                let mut inner = Complex::ZERO;
+                let src = &grid[base + s..base + s + first_len];
+                for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
+                    inner += g.scale(lv);
+                }
+                let src = &grid[base..base + fp - first_len];
+                for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
+                    inner += g.scale(lv);
+                }
+                acc += inner.scale(w);
+            }
+            let mut a = last;
+            loop {
+                if a == 0 {
+                    break 'outer;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < fp {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+        acc
     }
 
     /// Copy the in-band FFT coefficients out of the oversampled grid,
@@ -533,5 +700,81 @@ mod tests {
             let want = a[i] + b[i].scale(3.0);
             assert!((ab[i] - want).abs() < 1e-12 * (1.0 + want.abs()));
         }
+    }
+
+    #[test]
+    fn geometry_reuse_matches_transient() {
+        // One geometry, many vectors: bit-identical to the transient API,
+        // and re-applying an earlier vector reproduces its result exactly
+        // (the geometry is immutable).
+        let n = 35;
+        let d = 2;
+        let points = rand_points(n, d, 21);
+        let band = [16usize, 8];
+        let plan = NfftPlan::new(&band, 4, WindowKind::KaiserBessel);
+        let geo = plan.build_geometry(&points);
+        assert_eq!(geo.num_points(), n);
+        assert_eq!(geo.dims(), d);
+        assert_eq!(geo.footprint(), 2 * 4 + 2);
+        assert!(geo.bytes() > 0);
+        let mut rng = crate::data::rng::Rng::seed_from(22);
+        let x1 = rng.normal_vec(n);
+        let x2 = rng.normal_vec(n);
+        let mut grid = plan.alloc_grid();
+        let nf = plan.num_freq();
+        let mut want = vec![Complex::ZERO; nf];
+        let mut got = vec![Complex::ZERO; nf];
+        for x in [&x1, &x2, &x1] {
+            plan.adjoint(&points, x, &mut grid, &mut want);
+            plan.adjoint_with_geometry(&geo, x, &mut grid, &mut got);
+            assert_eq!(got, want, "geometry reuse must be bit-identical");
+        }
+        // Forward direction too.
+        let f_hat: Vec<Complex> =
+            (0..nf).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+        let mut yw = vec![0.0; n];
+        let mut yg = vec![0.0; n];
+        plan.forward_real(&points, &f_hat, &mut grid, &mut yw);
+        plan.forward_real_with_geometry(&geo, &f_hat, &mut grid, &mut yg);
+        assert_eq!(yg, yw);
+    }
+
+    #[test]
+    fn block_transforms_match_per_column() {
+        let n = 30;
+        let d = 2;
+        let k = 5;
+        let points = rand_points(n, d, 31);
+        let band = [8usize, 8];
+        let plan = NfftPlan::new(&band, 4, WindowKind::KaiserBessel);
+        let geo = plan.build_geometry(&points);
+        let pool = plan.grid_pool();
+        let nf = plan.num_freq();
+        let mut rng = crate::data::rng::Rng::seed_from(32);
+        let xs = rng.normal_vec(n * k);
+        // Block adjoint vs per-column adjoint.
+        let mut block_freq = vec![Complex::ZERO; k * nf];
+        plan.adjoint_block(&geo, &xs, &mut block_freq, &pool);
+        let mut grid = plan.alloc_grid();
+        let mut col = vec![Complex::ZERO; nf];
+        for j in 0..k {
+            plan.adjoint_with_geometry(&geo, &xs[j * n..(j + 1) * n], &mut grid, &mut col);
+            assert_eq!(&block_freq[j * nf..(j + 1) * nf], col.as_slice(), "column {j}");
+        }
+        // Block forward vs per-column forward on those coefficients.
+        let mut block_out = vec![0.0; k * n];
+        plan.forward_real_block(&geo, &block_freq, &mut block_out, &pool);
+        let mut ycol = vec![0.0; n];
+        for j in 0..k {
+            plan.forward_real_with_geometry(
+                &geo,
+                &block_freq[j * nf..(j + 1) * nf],
+                &mut grid,
+                &mut ycol,
+            );
+            assert_eq!(&block_out[j * n..(j + 1) * n], ycol.as_slice(), "column {j}");
+        }
+        // The pool retains the per-column scratch for reuse.
+        assert!(pool.idle() >= 1);
     }
 }

@@ -22,8 +22,10 @@ pub struct HybridNystromOptions {
 }
 
 /// Run Alg 5.1 against any engine computing `A x` (typically
-/// `fastsum::NormalizedAdjacency`; the block application is batched
-/// through `apply_block`, which the coordinator can parallelise).
+/// `fastsum::NormalizedAdjacency`). Both multi-column products — `A G`
+/// in step 3 and `A Q` in step 4 — are single `apply_block` calls, so
+/// on the NFFT engine all L columns share one precomputed geometry and
+/// run in parallel against pooled scratch.
 pub fn hybrid_nystrom(
     a: &dyn LinearOperator,
     opts: HybridNystromOptions,

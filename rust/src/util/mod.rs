@@ -5,9 +5,12 @@
 
 pub mod csv;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod stats;
 pub mod timer;
+
+pub use pool::BufferPool;
 
 /// Machine epsilon-scale comparison helper used across tests.
 pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {

@@ -1,0 +1,128 @@
+//! Lock-light scratch-buffer pooling for the matvec hot path.
+//!
+//! The fastsum engines need per-call scratch (the oversampled FFT grid
+//! and the frequency-coefficient array). Guarding one shared workspace
+//! with a mutex — the pre-refactor design — serialises concurrent
+//! callers for the *entire* matvec. The pool instead holds its lock
+//! only for a `Vec` push/pop: k parallel columns check out k disjoint
+//! buffers and run with zero contention, and steady-state traffic
+//! performs no allocation at all.
+//!
+//! Buffers are handed out with unspecified contents; every consumer in
+//! this crate overwrites its scratch before reading it.
+
+use std::sync::Mutex;
+
+/// A pool of equally-sized `Vec<T>` scratch buffers.
+pub struct BufferPool<T: Clone + Send> {
+    len: usize,
+    fill: T,
+    free: Mutex<Vec<Vec<T>>>,
+}
+
+impl<T: Clone + Send> BufferPool<T> {
+    /// Pool handing out buffers of length `len`, freshly allocated ones
+    /// initialised to `fill`.
+    pub fn new(len: usize, fill: T) -> BufferPool<T> {
+        BufferPool { len, fill, free: Mutex::new(Vec::new()) }
+    }
+
+    /// Length of every buffer this pool hands out.
+    pub fn buf_len(&self) -> usize {
+        self.len
+    }
+
+    /// Number of idle buffers currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Check a buffer out, allocating only when the pool is empty.
+    /// Contents are unspecified (recycled buffers are not cleared).
+    pub fn take(&self) -> Vec<T> {
+        if let Some(buf) = self.free.lock().unwrap().pop() {
+            return buf;
+        }
+        vec![self.fill.clone(); self.len]
+    }
+
+    /// Return a buffer to the pool. Buffers of the wrong length are
+    /// dropped (defensive: they could only come from caller misuse).
+    pub fn put(&self, buf: Vec<T>) {
+        if buf.len() == self.len {
+            self.free.lock().unwrap().push(buf);
+        }
+    }
+
+    /// Run `f` with a pooled buffer, returning it afterwards.
+    pub fn with<R>(&self, f: impl FnOnce(&mut [T]) -> R) -> R {
+        let mut buf = self.take();
+        let out = f(&mut buf);
+        self.put(buf);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles() {
+        let pool = BufferPool::new(4, 0.0f64);
+        assert_eq!(pool.idle(), 0);
+        let mut a = pool.take();
+        assert_eq!(a.len(), 4);
+        a[0] = 7.0;
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        // Recycled buffer keeps its (dirty) contents — callers overwrite.
+        let b = pool.take();
+        assert_eq!(b[0], 7.0);
+        assert_eq!(pool.idle(), 0);
+        pool.put(b);
+    }
+
+    #[test]
+    fn wrong_length_buffers_are_dropped() {
+        let pool = BufferPool::new(3, 0i32);
+        pool.put(vec![0; 5]);
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn with_returns_closure_result() {
+        let pool = BufferPool::new(2, 1.0f64);
+        let sum = pool.with(|buf| {
+            buf[0] = 2.0;
+            buf[1] = 3.0;
+            buf[0] + buf[1]
+        });
+        assert_eq!(sum, 5.0);
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn concurrent_takes_get_disjoint_buffers() {
+        use std::sync::Arc;
+        let pool = Arc::new(BufferPool::new(8, 0u64));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut buf = pool.take();
+                for v in buf.iter_mut() {
+                    *v = t;
+                }
+                // All writes must still be ours after a yield.
+                std::thread::yield_now();
+                assert!(buf.iter().all(|&v| v == t));
+                pool.put(buf);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(pool.idle() >= 1);
+    }
+}

@@ -1,12 +1,19 @@
-//! Integration: the PJRT artifact engine (JAX/Pallas AOT, L1+L2) must
-//! agree with the native rust fastsum engine (L3) and the dense oracle
-//! on identical inputs. Requires `make artifacts` to have run.
+//! Integration: engines must agree with each other on identical
+//! inputs — the native rust fastsum engine (L3) vs the dense oracle,
+//! block execution vs per-column loops, geometry reuse vs transient
+//! geometries, and (when `make artifacts` has run) the PJRT artifact
+//! engine (JAX/Pallas AOT, L1+L2).
 
 use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
 use nfft_krylov::data::rng::Rng;
-use nfft_krylov::fastsum::{FastsumParams, Kernel};
+use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel, NormalizedAdjacency};
+use nfft_krylov::fft::Complex;
+use nfft_krylov::graph::dense::{DenseKernelOperator, DenseMode};
 use nfft_krylov::graph::LinearOperator;
-use nfft_krylov::krylov::lanczos::{lanczos_eigs, LanczosOptions};
+use nfft_krylov::krylov::lanczos::{
+    block_lanczos_eigs, lanczos_eigs, BlockLanczosOptions, LanczosOptions,
+};
+use nfft_krylov::nfft::{NfftPlan, WindowKind};
 
 fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
@@ -24,6 +31,161 @@ fn spiral_spec(n: usize, engine: EngineKind, params: FastsumParams) -> OperatorS
         kernel: Kernel::Gaussian { sigma: 3.5 },
         params,
         engine,
+    }
+}
+
+fn spiral_points(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed_from(seed);
+    nfft_krylov::data::spiral::generate(
+        nfft_krylov::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+        &mut rng,
+    )
+    .points
+}
+
+/// Block-vs-loop consistency of the native engine: `apply_block` on k
+/// random columns must match k independent `apply` calls to ≤ 1e-12,
+/// for both the adjacency (`W`) and normalised (`A`) operator views.
+#[test]
+fn native_engine_block_matches_loop() {
+    let n = 120;
+    let points = spiral_points(n, 21);
+    let kernel = Kernel::Gaussian { sigma: 3.5 };
+    let w = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+    let a = NormalizedAdjacency::new(&points, 3, kernel, FastsumParams::setup2()).unwrap();
+    let ops: [&dyn LinearOperator; 2] = [&w, &a];
+    let mut rng = Rng::seed_from(22);
+    let k = 7;
+    let xs = rng.normal_vec(n * k);
+    for op in ops {
+        let mut block = vec![0.0; n * k];
+        op.apply_block(&xs, &mut block);
+        for j in 0..k {
+            let want = op.apply_vec(&xs[j * n..(j + 1) * n]);
+            for (g, v) in block[j * n..(j + 1) * n].iter().zip(&want) {
+                assert!(
+                    (g - v).abs() <= 1e-12,
+                    "{} column {j}: block {g} vs loop {v}",
+                    op.name()
+                );
+            }
+        }
+    }
+}
+
+/// Same block-vs-loop consistency for the dense direct engine, in both
+/// modes (its cache-blocked implementation reorders memory, not math).
+#[test]
+fn dense_engine_block_matches_loop() {
+    let n = 110;
+    let points = spiral_points(n, 23);
+    let kernel = Kernel::Gaussian { sigma: 3.5 };
+    let mut rng = Rng::seed_from(24);
+    let k = 5;
+    let xs = rng.normal_vec(n * k);
+    for mode in [DenseMode::Adjacency, DenseMode::Normalized] {
+        let op = DenseKernelOperator::new(&points, 3, kernel, mode);
+        let mut block = vec![0.0; n * k];
+        op.apply_block(&xs, &mut block);
+        for j in 0..k {
+            let want = op.apply_vec(&xs[j * n..(j + 1) * n]);
+            for (g, v) in block[j * n..(j + 1) * n].iter().zip(&want) {
+                assert!(
+                    (g - v).abs() <= 1e-12,
+                    "{mode:?} column {j}: block {g} vs loop {v}"
+                );
+            }
+        }
+    }
+}
+
+/// Engines must agree THROUGH the block path too: a native block apply
+/// matches the dense oracle's block apply at fastsum accuracy.
+#[test]
+fn native_and_dense_blocks_agree() {
+    let n = 100;
+    let points = spiral_points(n, 25);
+    let kernel = Kernel::Gaussian { sigma: 3.5 };
+    let native = NormalizedAdjacency::new(&points, 3, kernel, FastsumParams::setup2()).unwrap();
+    let dense = DenseKernelOperator::new(&points, 3, kernel, DenseMode::Normalized);
+    let mut rng = Rng::seed_from(26);
+    let k = 4;
+    let xs = rng.normal_vec(n * k);
+    let mut ya = vec![0.0; n * k];
+    let mut yb = vec![0.0; n * k];
+    native.apply_block(&xs, &mut ya);
+    dense.apply_block(&xs, &mut yb);
+    for (a, b) in ya.iter().zip(&yb) {
+        assert!((a - b).abs() < 1e-7 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+/// NFFT geometry-reuse regression: one precomputed geometry serves many
+/// adjoint/forward transforms bit-identically to per-call (transient)
+/// geometries, and is not mutated by use — re-applying the first vector
+/// after other traffic reproduces the original result exactly.
+#[test]
+fn nfft_geometry_reuse_regression() {
+    let n = 60;
+    let d = 3;
+    let mut rng = Rng::seed_from(27);
+    let points: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.5, 0.4999)).collect();
+    let band = [16usize, 16, 16];
+    let plan = NfftPlan::new(&band, 4, WindowKind::KaiserBessel);
+    let geo = plan.build_geometry(&points);
+    let nf = plan.num_freq();
+    let mut grid = plan.alloc_grid();
+    let mut fresh = vec![Complex::ZERO; nf];
+    let mut reused = vec![Complex::ZERO; nf];
+    // Adjoint: several vectors through the same geometry.
+    let vectors: Vec<Vec<f64>> = (0..3).map(|_| rng.normal_vec(n)).collect();
+    let mut first_result = Vec::new();
+    for (i, x) in vectors.iter().enumerate() {
+        plan.adjoint(&points, x, &mut grid, &mut fresh);
+        plan.adjoint_with_geometry(&geo, x, &mut grid, &mut reused);
+        assert_eq!(reused, fresh, "adjoint with reused geometry diverged on vector {i}");
+        if i == 0 {
+            first_result = reused.clone();
+        }
+    }
+    plan.adjoint_with_geometry(&geo, &vectors[0], &mut grid, &mut reused);
+    assert_eq!(reused, first_result, "geometry was mutated by intervening transforms");
+    // Forward: same story.
+    let f_hat: Vec<Complex> =
+        (0..nf).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+    let mut yf = vec![0.0; n];
+    let mut yg = vec![0.0; n];
+    plan.forward_real(&points, &f_hat, &mut grid, &mut yf);
+    plan.forward_real_with_geometry(&geo, &f_hat, &mut grid, &mut yg);
+    assert_eq!(yg, yf, "forward with reused geometry diverged");
+}
+
+/// The block-Lanczos path (driven entirely through `apply_block`) finds
+/// the same spectrum as single-vector Lanczos on the native engine.
+#[test]
+fn block_lanczos_matches_lanczos_on_native_engine() {
+    let n = 150;
+    let points = spiral_points(n, 28);
+    let a = NormalizedAdjacency::new(
+        &points,
+        3,
+        Kernel::Gaussian { sigma: 3.5 },
+        FastsumParams::setup2(),
+    )
+    .unwrap();
+    let single = lanczos_eigs(&a, LanczosOptions { k: 5, tol: 1e-9, ..Default::default() });
+    let block = block_lanczos_eigs(
+        &a,
+        BlockLanczosOptions { k: 5, block: 5, tol: 1e-9, ..Default::default() },
+    );
+    assert!((block.eigenvalues[0] - 1.0).abs() < 1e-7, "λ₁ = {}", block.eigenvalues[0]);
+    for t in 0..5 {
+        assert!(
+            (single.eigenvalues[t] - block.eigenvalues[t]).abs() < 1e-7,
+            "eig {t}: single {} vs block {}",
+            single.eigenvalues[t],
+            block.eigenvalues[t]
+        );
     }
 }
 
