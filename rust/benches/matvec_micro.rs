@@ -2,19 +2,23 @@
 //! Microbenchmarks of the request-path hot spot: one fastsum matvec
 //! per engine/setup with the per-phase breakdown used by the §Perf
 //! iteration log (the one-time `geometry` phase shows the plan/geometry
-//! split), the block-vs-loop comparison for k ∈ {1, 8, 16, 32}, plus
-//! the PJRT artifact engine when available. Emits `BENCH_matvec.json`
-//! so the perf trajectory is tracked across PRs.
+//! split), the block-vs-loop comparison for k ∈ {1, 8, 16, 32}, the
+//! sharded-execution sweep over shard counts and partition strategies,
+//! plus the PJRT artifact engine when available. Emits
+//! `BENCH_matvec.json` and `BENCH_shard.json` so the perf trajectory is
+//! tracked across PRs.
 
 use nfft_krylov::bench_harness::harness::{bench, BenchArgs};
 use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
 use nfft_krylov::data::rng::Rng;
 use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel};
 use nfft_krylov::graph::LinearOperator;
+use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
 use nfft_krylov::util::json::Json;
 use std::collections::BTreeMap;
 
 const BLOCK_SIZES: [usize; 4] = [1, 8, 16, 32];
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 
 fn json_row(entries: &[(&str, Json)]) -> Json {
     let mut obj = BTreeMap::new();
@@ -28,6 +32,7 @@ fn main() {
     let args = BenchArgs::from_env();
     let sizes = args.sizes.unwrap_or_else(|| vec![2000, 10000, 50000]);
     let mut rows: Vec<Json> = Vec::new();
+    let mut shard_rows: Vec<Json> = Vec::new();
     for &n in &sizes {
         println!("== fastsum matvec, n = {n} ==");
         let mut rng = Rng::seed_from(args.seed);
@@ -89,6 +94,40 @@ fn main() {
                 ("speedup", Json::Num(speedup)),
                 ("geometry_s", Json::Num(geometry_secs)),
             ]));
+        }
+
+        // Sharded execution sweep on the same setup2 operator: shard
+        // counts × partition strategies, single apply and k = 8 block.
+        // Shard 1 (contiguous) doubles as the unsharded baseline — it
+        // is bit-for-bit the parent arithmetic.
+        println!("-- sharded operator sweep (native, setup2) --");
+        let kb = 8usize;
+        let mut rng_s = Rng::seed_from(args.seed ^ 0x5a);
+        let xs_s = rng_s.normal_vec(ds.n * kb);
+        let mut ys_s = vec![0.0; ds.n * kb];
+        for strategy in [PartitionStrategy::Contiguous, PartitionStrategy::Morton] {
+            for &s in &SHARD_COUNTS {
+                let spec = ShardSpec::build(strategy, &ds.points, 3, s);
+                let sop = ShardedOperator::from_fastsum(&op, spec);
+                let s_apply =
+                    bench(&format!("sharded {}x{s} apply", strategy.name()), 1, 3, || {
+                        sop.apply(&x, &mut y)
+                    });
+                let s_block =
+                    bench(&format!("sharded {}x{s} apply_block k={kb}", strategy.name()), 1, 3, || {
+                        sop.apply_block(&xs_s, &mut ys_s)
+                    });
+                shard_rows.push(json_row(&[
+                    ("engine", Json::Str("native".into())),
+                    ("setup", Json::Str("setup2".into())),
+                    ("strategy", Json::Str(strategy.name().into())),
+                    ("n", Json::Num(ds.n as f64)),
+                    ("shards", Json::Num(s as f64)),
+                    ("k", Json::Num(kb as f64)),
+                    ("apply_min_s", Json::Num(s_apply.min)),
+                    ("block_min_s", Json::Num(s_block.min)),
+                ]));
+            }
         }
 
         if n <= 3000 {
@@ -153,5 +192,18 @@ fn main() {
     match std::fs::write("BENCH_matvec.json", &text) {
         Ok(()) => println!("wrote BENCH_matvec.json"),
         Err(e) => eprintln!("could not write BENCH_matvec.json: {e}"),
+    }
+
+    let mut shard_root = BTreeMap::new();
+    shard_root.insert("bench".to_string(), Json::Str("matvec_micro/shard".into()));
+    shard_root.insert(
+        "shard_counts".to_string(),
+        Json::Arr(SHARD_COUNTS.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    shard_root.insert("results".to_string(), Json::Arr(shard_rows));
+    let text = Json::Obj(shard_root).to_string();
+    match std::fs::write("BENCH_shard.json", &text) {
+        Ok(()) => println!("wrote BENCH_shard.json"),
+        Err(e) => eprintln!("could not write BENCH_shard.json: {e}"),
     }
 }

@@ -15,3 +15,22 @@ pub mod krr;
 pub mod phasefield;
 pub mod spectral;
 pub mod ssl_kernel;
+
+/// Per-node argmax over per-class scores — the decision rule every
+/// one-vs-rest multiclass predictor shares. `score(i, c)` is node i's
+/// score for class c; ties resolve to the highest class index (the
+/// `max_by` convention all call sites relied on).
+pub fn argmax_per_node(
+    n: usize,
+    num_classes: usize,
+    score: impl Fn(usize, usize) -> f64,
+) -> Vec<usize> {
+    assert!(num_classes >= 1);
+    (0..n)
+        .map(|i| {
+            (0..num_classes)
+                .max_by(|&a, &b| score(i, a).partial_cmp(&score(i, b)).unwrap())
+                .unwrap()
+        })
+        .collect()
+}

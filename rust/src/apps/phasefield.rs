@@ -50,6 +50,35 @@ pub struct PhaseFieldResult {
     pub converged: bool,
 }
 
+/// Spectral projection `coeffs_j = v_jᵀ u` (shared by the single and
+/// block evolutions so their arithmetic is identical).
+fn project(vectors: &DenseMatrix, u: &[f64], coeffs: &mut [f64]) {
+    let n = vectors.rows;
+    for (j, cj) in coeffs.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += vectors[(i, j)] * u[i];
+        }
+        *cj = acc;
+    }
+}
+
+/// Reconstruction `u = Σ_j coeffs_j v_j`.
+fn reconstruct(vectors: &DenseMatrix, coeffs: &[f64], u: &mut [f64]) {
+    let n = vectors.rows;
+    for v in u.iter_mut() {
+        *v = 0.0;
+    }
+    for (j, &cj) in coeffs.iter().enumerate() {
+        if cj == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            u[i] += cj * vectors[(i, j)];
+        }
+    }
+}
+
 /// Binary phase-field SSL.
 ///
 /// * `ls_eigenvalues[j]` are eigenvalues of `L_s` (ascending, the k
@@ -62,77 +91,11 @@ pub fn phase_field_ssl(
     training: &[f64],
     params: PhaseFieldParams,
 ) -> PhaseFieldResult {
-    let n = vectors.rows;
-    let k = vectors.cols;
-    assert_eq!(ls_eigenvalues.len(), k);
-    assert_eq!(training.len(), n);
-    let PhaseFieldParams { tau, epsilon, omega0, c, tol, max_steps } = params;
-
-    // Initial condition u(0) = f; spectral coefficients a_j = v_jᵀ u.
-    let mut u = training.to_vec();
-    let mut coeffs = vec![0.0; k];
-    let project = |u: &[f64], coeffs: &mut [f64]| {
-        for j in 0..k {
-            let mut acc = 0.0;
-            for i in 0..n {
-                acc += vectors[(i, j)] * u[i];
-            }
-            coeffs[j] = acc;
-        }
-    };
-    let reconstruct = |coeffs: &[f64], u: &mut [f64]| {
-        for v in u.iter_mut() {
-            *v = 0.0;
-        }
-        for j in 0..k {
-            let cj = coeffs[j];
-            if cj == 0.0 {
-                continue;
-            }
-            for i in 0..n {
-                u[i] += cj * vectors[(i, j)];
-            }
-        }
-    };
-    project(&u, &mut coeffs);
-    reconstruct(&coeffs, &mut u);
-
-    let mut steps = 0;
-    let mut converged = false;
-    let mut rhs_vec = vec![0.0; n];
-    for _ in 0..max_steps {
-        steps += 1;
-        let u_old = u.clone();
-        // rhs in node space: −(1/ε) ψ'(ū) + Ω(f − ū), with the (1/τ+c) ū
-        // term handled in coefficient space.
-        for i in 0..n {
-            let ub = u_old[i];
-            let psi_prime = 4.0 * ub * (ub * ub - 1.0);
-            let omega = if training[i] != 0.0 { omega0 } else { 0.0 };
-            rhs_vec[i] = -psi_prime / epsilon + omega * (training[i] - ub);
-        }
-        let mut rhs_coeffs = vec![0.0; k];
-        project(&rhs_vec, &mut rhs_coeffs);
-        let mut old_coeffs = vec![0.0; k];
-        project(&u_old, &mut old_coeffs);
-        for j in 0..k {
-            let denom = 1.0 / tau + epsilon * ls_eigenvalues[j] + c;
-            coeffs[j] = ((1.0 / tau + c) * old_coeffs[j] + rhs_coeffs[j]) / denom;
-        }
-        reconstruct(&coeffs, &mut u);
-        // Squared relative change.
-        let mut num = 0.0;
-        let mut den = 0.0;
-        for i in 0..n {
-            num += (u[i] - u_old[i]) * (u[i] - u_old[i]);
-            den += u[i] * u[i];
-        }
-        if num / den.max(1e-300) < tol {
-            converged = true;
-            break;
-        }
-    }
-    PhaseFieldResult { u, steps, converged }
+    // The single-class evolution is the one-column case of the block
+    // scheme (one copy of the per-step arithmetic lives there).
+    let mut results =
+        phase_field_ssl_block(ls_eigenvalues, vectors, &[training.to_vec()], params);
+    results.pop().expect("one training vector in, one result out")
 }
 
 /// Multi-class one-vs-rest wrapper (the paper's Fig 6 uses C = 5
@@ -160,17 +123,145 @@ pub fn phase_field_ssl_multiclass(
             scores[i * num_classes + c] = res.u[i];
         }
     }
-    (0..n)
-        .map(|i| {
-            (0..num_classes)
-                .max_by(|&a, &b| {
-                    scores[i * num_classes + a]
-                        .partial_cmp(&scores[i * num_classes + b])
-                        .unwrap()
-                })
-                .unwrap()
+    super::argmax_per_node(n, num_classes, |i, c| scores[i * num_classes + c])
+}
+
+/// All C one-vs-rest evolutions advanced in lockstep as one block:
+/// per-class arithmetic is identical to [`phase_field_ssl`] (classes
+/// are independent), but each time step walks the whole class block
+/// against the shared eigenbasis — the projection/reconstruction pass
+/// is batched per step instead of re-run per class, and converged
+/// classes freeze while the rest keep evolving.
+pub fn phase_field_ssl_block(
+    ls_eigenvalues: &[f64],
+    vectors: &DenseMatrix,
+    trainings: &[Vec<f64>],
+    params: PhaseFieldParams,
+) -> Vec<PhaseFieldResult> {
+    let n = vectors.rows;
+    let k = vectors.cols;
+    assert_eq!(ls_eigenvalues.len(), k);
+    assert!(!trainings.is_empty());
+    let PhaseFieldParams { tau, epsilon, omega0, c, tol, max_steps } = params;
+
+    struct Class {
+        u: Vec<f64>,
+        steps: usize,
+        converged: bool,
+    }
+    let mut classes: Vec<Class> = trainings
+        .iter()
+        .map(|training| {
+            assert_eq!(training.len(), n, "training vector dimension mismatch");
+            let mut u = training.clone();
+            let mut coeffs = vec![0.0; k];
+            project(vectors, &u, &mut coeffs);
+            reconstruct(vectors, &coeffs, &mut u);
+            Class { u, steps: 0, converged: false }
         })
+        .collect();
+
+    let mut coeffs = vec![0.0; k];
+    let mut rhs_vec = vec![0.0; n];
+    let mut rhs_coeffs = vec![0.0; k];
+    let mut old_coeffs = vec![0.0; k];
+    for _ in 0..max_steps {
+        if classes.iter().all(|cl| cl.converged) {
+            break;
+        }
+        for (cl, training) in
+            classes.iter_mut().zip(trainings).filter(|(cl, _)| !cl.converged)
+        {
+            cl.steps += 1;
+            let u_old = cl.u.clone();
+            for i in 0..n {
+                let ub = u_old[i];
+                let psi_prime = 4.0 * ub * (ub * ub - 1.0);
+                let omega = if training[i] != 0.0 { omega0 } else { 0.0 };
+                rhs_vec[i] = -psi_prime / epsilon + omega * (training[i] - ub);
+            }
+            project(vectors, &rhs_vec, &mut rhs_coeffs);
+            project(vectors, &u_old, &mut old_coeffs);
+            for j in 0..k {
+                let denom = 1.0 / tau + epsilon * ls_eigenvalues[j] + c;
+                coeffs[j] = ((1.0 / tau + c) * old_coeffs[j] + rhs_coeffs[j]) / denom;
+            }
+            reconstruct(vectors, &coeffs, &mut cl.u);
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for i in 0..n {
+                num += (cl.u[i] - u_old[i]) * (cl.u[i] - u_old[i]);
+                den += cl.u[i] * cl.u[i];
+            }
+            if num / den.max(1e-300) < tol {
+                cl.converged = true;
+            }
+        }
+    }
+    classes
+        .into_iter()
+        .map(|cl| PhaseFieldResult { u: cl.u, steps: cl.steps, converged: cl.converged })
         .collect()
+}
+
+/// Multi-class one-vs-rest via the block evolution: builds the C ±1/0
+/// training vectors, runs [`phase_field_ssl_block`], assigns argmax.
+/// Bit-identical labels to [`phase_field_ssl_multiclass`] (the classes
+/// are independent; only the loop structure differs).
+pub fn phase_field_ssl_multiclass_block(
+    ls_eigenvalues: &[f64],
+    vectors: &DenseMatrix,
+    labels: &[Option<usize>],
+    num_classes: usize,
+    params: PhaseFieldParams,
+) -> Vec<usize> {
+    let n = vectors.rows;
+    let trainings: Vec<Vec<f64>> = (0..num_classes)
+        .map(|c| {
+            labels
+                .iter()
+                .map(|l| match l {
+                    Some(li) if *li == c => 1.0,
+                    Some(_) => -1.0,
+                    None => 0.0,
+                })
+                .collect()
+        })
+        .collect();
+    let results = phase_field_ssl_block(ls_eigenvalues, vectors, &trainings, params);
+    super::argmax_per_node(n, num_classes, |i, c| results[c].u[i])
+}
+
+/// Multi-class phase-field SSL driven through the coordinator: the
+/// eigenpairs come from ONE [`crate::coordinator::Job::BlockEig`]
+/// (block Lanczos — one engine `apply_block` across the class-wide
+/// block per Lanczos step, not per-class eigensolves), then the C
+/// evolutions run in lockstep via [`phase_field_ssl_multiclass_block`].
+/// The Lanczos block width is the class count (that IS the routing
+/// story), so only `k_eigs` and `eig_tol` are caller-tunable.
+pub fn phase_field_ssl_multiclass_coordinated(
+    coord: &mut crate::coordinator::Coordinator,
+    labels: &[Option<usize>],
+    num_classes: usize,
+    k_eigs: usize,
+    eig_tol: f64,
+    params: PhaseFieldParams,
+) -> Vec<usize> {
+    use crate::coordinator::{Job, JobResult};
+    let opts = crate::krylov::lanczos::BlockLanczosOptions {
+        k: k_eigs,
+        block: num_classes.max(2),
+        tol: eig_tol,
+        ..Default::default()
+    };
+    let handle = coord.submit(Job::BlockEig(opts));
+    let eig = match handle.wait() {
+        JobResult::Eig(r) => r,
+        _ => panic!("wrong result type for block eig"),
+    };
+    // λ(L_s) = 1 − λ(A); Lanczos returns λ(A) descending ⇒ ascending L_s.
+    let ls: Vec<f64> = eig.eigenvalues.iter().map(|l| 1.0 - l).collect();
+    phase_field_ssl_multiclass_block(&ls, &eig.eigenvectors, labels, num_classes, params)
 }
 
 #[cfg(test)]
@@ -278,6 +369,71 @@ mod tests {
         let correct = pred.iter().zip(&ds.labels).filter(|(a, b)| a == b).count();
         let acc = correct as f64 / ds.n as f64;
         assert!(acc > 0.9, "multiclass accuracy {acc}");
+    }
+
+    #[test]
+    fn block_multiclass_matches_per_class_loop_exactly() {
+        let mut rng = crate::data::rng::Rng::seed_from(5);
+        let (ds, _) = crate::data::spiral::generate_relabeled_blobs(300, 0.4, &mut rng);
+        let (ls, v) = eig_setup(&ds.points, 3, 3.5, 5);
+        let mut labels: Vec<Option<usize>> = vec![None; ds.n];
+        for c in 0..5 {
+            let mut count = 0;
+            for i in 0..ds.n {
+                if ds.labels[i] == c {
+                    labels[i] = Some(c);
+                    count += 1;
+                    if count == 2 {
+                        break;
+                    }
+                }
+            }
+        }
+        let params = PhaseFieldParams { max_steps: 60, ..Default::default() };
+        let per_class = phase_field_ssl_multiclass(&ls, &v, &labels, 5, params);
+        let block = phase_field_ssl_multiclass_block(&ls, &v, &labels, 5, params);
+        assert_eq!(block, per_class, "lockstep block evolution changed the labels");
+    }
+
+    #[test]
+    fn coordinated_multiclass_classifies_blobs() {
+        use crate::coordinator::Coordinator;
+        use std::sync::Arc;
+        let mut rng = crate::data::rng::Rng::seed_from(6);
+        let (ds, _) = crate::data::spiral::generate_relabeled_blobs(350, 0.35, &mut rng);
+        let a = NormalizedAdjacency::new(
+            &ds.points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let mut labels: Vec<Option<usize>> = vec![None; ds.n];
+        for c in 0..5 {
+            let mut count = 0;
+            for i in 0..ds.n {
+                if ds.labels[i] == c {
+                    labels[i] = Some(c);
+                    count += 1;
+                    if count == 3 {
+                        break;
+                    }
+                }
+            }
+        }
+        let mut coord = Coordinator::new(Arc::new(a), 2);
+        let pred = phase_field_ssl_multiclass_coordinated(
+            &mut coord,
+            &labels,
+            5,
+            5,
+            1e-8,
+            PhaseFieldParams::default(),
+        );
+        coord.shutdown();
+        let correct = pred.iter().zip(&ds.labels).filter(|(a, b)| a == b).count();
+        let acc = correct as f64 / ds.n as f64;
+        assert!(acc > 0.9, "coordinated multiclass accuracy {acc}");
     }
 
     #[test]

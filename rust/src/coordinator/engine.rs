@@ -8,6 +8,7 @@ use crate::graph::dense::{DenseKernelOperator, DenseMode};
 use crate::graph::normalized::NormalizedOperator;
 use crate::graph::operator::LinearOperator;
 use crate::runtime::{HloFastsumOperator, Manifest, PjrtContext};
+use crate::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
 use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,6 +123,27 @@ impl EngineRegistry {
     }
 }
 
+/// Build the normalised-adjacency operator with sharded execution: the
+/// point domain splits into `shards` shards under `strategy`, the NFFT
+/// plan and kernel table stay shared. Native engine only — the dense
+/// baseline has nothing to shard and the HLO artifact is a monolith.
+/// A free function: sharded construction needs no registry state (no
+/// artifact manifests, no PJRT context).
+pub fn build_sharded_normalized(
+    spec: &OperatorSpec,
+    shards: usize,
+    strategy: PartitionStrategy,
+) -> anyhow::Result<Arc<dyn LinearOperator>> {
+    anyhow::ensure!(
+        spec.engine == EngineKind::Native,
+        "sharded execution requires the native NFFT engine (got {:?})",
+        spec.engine
+    );
+    let sspec = ShardSpec::build(strategy, &spec.points, spec.d, shards);
+    let op = ShardedOperator::normalized(&spec.points, spec.d, spec.kernel, spec.params, sspec)?;
+    Ok(Arc::new(op))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +169,24 @@ mod tests {
         assert_eq!("hlo".parse::<EngineKind>().unwrap(), EngineKind::Hlo);
         assert_eq!("dense".parse::<EngineKind>().unwrap(), EngineKind::DenseDirect);
         assert!("bogus".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn sharded_engine_matches_unsharded() {
+        let mut reg = EngineRegistry::new("artifacts");
+        let spec = tiny_spec(EngineKind::Native);
+        let plain = reg.build_normalized(&spec).unwrap();
+        let sharded = build_sharded_normalized(&spec, 3, PartitionStrategy::Morton).unwrap();
+        let mut rng = crate::data::rng::Rng::seed_from(5);
+        let x = rng.normal_vec(plain.dim());
+        let ya = plain.apply_vec(&x);
+        let yb = sharded.apply_vec(&x);
+        for (u, v) in ya.iter().zip(&yb) {
+            assert!((u - v).abs() < 1e-12 * (1.0 + v.abs()), "{u} vs {v}");
+        }
+        // Non-native engines refuse to shard.
+        let dense = tiny_spec(EngineKind::DenseDirect);
+        assert!(build_sharded_normalized(&dense, 2, PartitionStrategy::Contiguous).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod jobs;
 pub mod metrics;
 pub mod service;
 
-pub use engine::{EngineKind, EngineRegistry, OperatorSpec};
+pub use engine::{build_sharded_normalized, EngineKind, EngineRegistry, OperatorSpec};
 pub use jobs::{Job, JobResult};
 pub use metrics::Metrics;
 pub use service::Coordinator;

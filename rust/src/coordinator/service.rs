@@ -7,6 +7,7 @@
 //! `apply_block` calls that parallelise across columns inside the
 //! engine.
 
+use crate::coordinator::engine::{build_sharded_normalized, OperatorSpec};
 use crate::coordinator::jobs::{Job, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::graph::laplacian::ShiftedOperator;
@@ -76,6 +77,21 @@ impl Coordinator {
             }));
         }
         Coordinator { op, tx, workers: handles, metrics, next_id: 0 }
+    }
+
+    /// Coordinator whose operator executes sharded: the point domain
+    /// of `spec`'s cloud splits into `shards` shards under `strategy`
+    /// (see [`crate::shard`]), and every [`Job`] variant — matvec,
+    /// block matvec, eigensolves, SSL solves, hybrid Nyström — runs
+    /// unchanged on top of the sharded operator.
+    pub fn new_sharded(
+        spec: &OperatorSpec,
+        shards: usize,
+        strategy: crate::shard::PartitionStrategy,
+        workers: usize,
+    ) -> anyhow::Result<Coordinator> {
+        let op = build_sharded_normalized(spec, shards, strategy)?;
+        Ok(Coordinator::new(op, workers))
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -283,6 +299,39 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn sharded_coordinator_serves_jobs() {
+        use crate::coordinator::engine::{EngineKind, OperatorSpec};
+        use crate::fastsum::{FastsumParams, Kernel};
+        let mut rng = crate::data::rng::Rng::seed_from(7);
+        let ds = crate::data::spiral::generate(
+            crate::data::spiral::SpiralParams { per_class: 20, ..Default::default() },
+            &mut rng,
+        );
+        let spec = OperatorSpec {
+            points: ds.points,
+            d: 3,
+            kernel: Kernel::Gaussian { sigma: 3.5 },
+            params: FastsumParams::setup1(),
+            engine: EngineKind::Native,
+        };
+        let mut c =
+            Coordinator::new_sharded(&spec, 3, crate::shard::PartitionStrategy::Contiguous, 2)
+                .unwrap();
+        let n = c.operator().dim();
+        let h = c.submit(Job::Eig(LanczosOptions { k: 2, tol: 1e-6, ..Default::default() }));
+        match h.wait() {
+            JobResult::Eig(r) => assert!((r.eigenvalues[0] - 1.0).abs() < 1e-4),
+            _ => panic!("wrong result type"),
+        }
+        let h = c.submit(Job::Matvec { x: vec![1.0; n] });
+        match h.wait() {
+            JobResult::Matvec(y) => assert_eq!(y.len(), n),
+            _ => panic!("wrong result type"),
+        }
+        c.shutdown();
     }
 
     #[test]

@@ -34,13 +34,7 @@ impl NormalizedAdjacency {
 
     pub fn from_operator(fast: FastsumOperator) -> Result<Self, NormalizeError> {
         let degrees = fast.degrees();
-        let mut inv_sqrt_deg = Vec::with_capacity(degrees.len());
-        for (i, &v) in degrees.iter().enumerate() {
-            if v <= 0.0 {
-                return Err(NormalizeError::NonPositiveDegree { index: i, value: v });
-            }
-            inv_sqrt_deg.push(1.0 / v.sqrt());
-        }
+        let inv_sqrt_deg = inv_sqrt_degrees(&degrees)?;
         Ok(NormalizedAdjacency { fast, degrees, inv_sqrt_deg })
     }
 
@@ -70,6 +64,21 @@ impl NormalizedAdjacency {
         }
         Some(eps * (1.0 + eta) / (eta * (eta - eps)))
     }
+}
+
+/// `D^{−1/2}` entries from a degree vector, rejecting non-positive
+/// degrees (the Lemma 3.1 validity gate). Shared by the unsharded and
+/// sharded (`crate::shard`) normalised operators so the check can
+/// never drift between them.
+pub fn inv_sqrt_degrees(degrees: &[f64]) -> Result<Vec<f64>, NormalizeError> {
+    let mut inv = Vec::with_capacity(degrees.len());
+    for (index, &value) in degrees.iter().enumerate() {
+        if value <= 0.0 {
+            return Err(NormalizeError::NonPositiveDegree { index, value });
+        }
+        inv.push(1.0 / value.sqrt());
+    }
+    Ok(inv)
 }
 
 impl LinearOperator for NormalizedAdjacency {

@@ -18,7 +18,7 @@ use crate::nfft::{NfftGeometry, NfftPlan, WindowKind};
 use crate::util::pool::BufferPool;
 use crate::util::timer::{PhaseTimings, Timer};
 use rayon::prelude::*;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Control parameters of the fast summation (paper Figure 1).
 #[derive(Debug, Clone, Copy)]
@@ -74,19 +74,22 @@ impl FastsumParams {
 /// geometry shared by every subsequent matvec.
 pub struct FastsumOperator {
     n: usize,
-    #[allow(dead_code)]
     d: usize,
     /// ρ-scaled nodes in [−(1/4 − ε_B/2), 1/4 − ε_B/2]^d.
     scaled_points: Vec<f64>,
     /// Original-scale kernel.
     kernel: Kernel,
     params: FastsumParams,
-    plan: NfftPlan,
+    /// Immutable transform plan, shareable (the shard layer clones the
+    /// `Arc` so every shard runs against the one plan).
+    plan: Arc<NfftPlan>,
     /// Precomputed window footprints of `scaled_points` — the one-time
     /// `O(n·(2m+2)·d)` cost amortised over every matvec and column.
     geometry: NfftGeometry,
-    /// Fourier coefficients of the ρ-rescaled regularised kernel.
-    b_hat: Vec<f64>,
+    /// Fourier coefficients of the ρ-rescaled regularised kernel —
+    /// `Arc`-shared so shards never duplicate the regularised-kernel
+    /// table.
+    b_hat: Arc<Vec<f64>>,
     /// K_orig(d) = out_scale · K_scaled(ρ d).
     out_scale: f64,
     rho: f64,
@@ -161,9 +164,9 @@ impl FastsumOperator {
             scaled_points,
             kernel,
             params,
-            plan,
+            plan: Arc::new(plan),
             geometry,
-            b_hat,
+            b_hat: Arc::new(b_hat),
             out_scale,
             rho,
             grids,
@@ -191,9 +194,31 @@ impl FastsumOperator {
     }
 
     /// The ρ-scaled nodes on the torus (row-major n×d) the geometry was
-    /// built from — what a rebuilt/sharded geometry would consume.
+    /// built from — what a rebuilt/sharded geometry consumes.
     pub fn scaled_points(&self) -> &[f64] {
         &self.scaled_points
+    }
+
+    /// Ambient dimension d of the point cloud.
+    pub fn ambient_dim(&self) -> usize {
+        self.d
+    }
+
+    /// The shared immutable NFFT plan (shards clone the `Arc`).
+    pub fn plan(&self) -> &Arc<NfftPlan> {
+        &self.plan
+    }
+
+    /// The shared Fourier coefficients `b̂` of the regularised kernel
+    /// (`Arc`-shared: sharded execution never duplicates the table).
+    pub fn fourier_coefficients(&self) -> &Arc<Vec<f64>> {
+        &self.b_hat
+    }
+
+    /// Factor mapping rescaled-kernel outputs back to original kernel
+    /// scale (see [`Kernel::output_scale`]).
+    pub fn output_scale(&self) -> f64 {
+        self.out_scale
     }
 
     /// K(0) in original kernel scale — the diagonal of W̃.
@@ -214,7 +239,7 @@ impl FastsumOperator {
         let t_adj = t.elapsed_secs();
         // Step 2: multiply by b̂.
         let t = Timer::start();
-        for (f, &b) in freq.iter_mut().zip(&self.b_hat) {
+        for (f, &b) in freq.iter_mut().zip(self.b_hat.iter()) {
             *f = f.scale(b);
         }
         let t_mul = t.elapsed_secs();
@@ -263,7 +288,7 @@ impl FastsumOperator {
         // Step 2: one Fourier-multiply pass over all k columns.
         let t = Timer::start();
         freq.par_chunks_mut(nf).for_each(|col| {
-            for (f, &b) in col.iter_mut().zip(&self.b_hat) {
+            for (f, &b) in col.iter_mut().zip(self.b_hat.iter()) {
                 *f = f.scale(b);
             }
         });

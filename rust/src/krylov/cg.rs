@@ -76,6 +76,116 @@ pub fn cg_solve(op: &dyn LinearOperator, b: &[f64], opts: &CgOptions) -> CgResul
     CgResult { x, iterations, converged, rel_residual }
 }
 
+/// Lockstep CG over k independent right-hand sides sharing one SPD
+/// operator: per-column arithmetic is identical to [`cg_solve`], but
+/// every iteration performs ONE block application over the columns
+/// still iterating — the multi-class SSL request shape ("one block per
+/// CG step across classes" instead of per-class solve loops).
+///
+/// `block_apply` receives the still-active search directions packed
+/// column-major (`j`-th active column at `xs[j*n..(j+1)*n]`) and must
+/// return the operator applied to each; it is the hook callers use to
+/// route the block through an engine's `apply_block` or a coordinator
+/// `Job::BlockMatvec`. Columns drop out of the block as they converge
+/// (or hit `max_iter` / a breakdown), so late steps shrink.
+pub fn cg_solve_multi<F>(
+    n: usize,
+    rhss: &[f64],
+    opts: &CgOptions,
+    mut block_apply: F,
+) -> Vec<CgResult>
+where
+    F: FnMut(&[f64]) -> Vec<f64>,
+{
+    assert!(n > 0, "empty system");
+    assert!(!rhss.is_empty() && rhss.len() % n == 0, "rhs block not a multiple of n");
+    let k = rhss.len() / n;
+    let apply_prec = |r: &[f64]| -> Vec<f64> {
+        match &opts.precond_inv_diag {
+            Some(m) => r.iter().zip(m).map(|(ri, mi)| ri * mi).collect(),
+            None => r.to_vec(),
+        }
+    };
+    struct Col {
+        x: Vec<f64>,
+        r: Vec<f64>,
+        p: Vec<f64>,
+        rz: f64,
+        bnorm: f64,
+        iterations: usize,
+        converged: bool,
+        active: bool,
+    }
+    let mut cols: Vec<Col> = (0..k)
+        .map(|j| {
+            let b = &rhss[j * n..(j + 1) * n];
+            let bnorm = vec::norm2(b).max(1e-300);
+            let r = b.to_vec();
+            let z = apply_prec(&r);
+            let rz = vec::dot(&r, &z);
+            let converged = vec::norm2(&r) / bnorm <= opts.tol;
+            Col {
+                x: vec![0.0; n],
+                p: z,
+                r,
+                rz,
+                bnorm,
+                iterations: 0,
+                converged,
+                active: !converged && opts.max_iter > 0,
+            }
+        })
+        .collect();
+    loop {
+        let act: Vec<usize> = (0..k).filter(|&j| cols[j].active).collect();
+        if act.is_empty() {
+            break;
+        }
+        let mut xs = Vec::with_capacity(act.len() * n);
+        for &j in &act {
+            xs.extend_from_slice(&cols[j].p);
+        }
+        let aps = block_apply(&xs);
+        assert_eq!(aps.len(), act.len() * n, "block_apply returned a wrong-size block");
+        for (slot, &j) in act.iter().enumerate() {
+            let ap = &aps[slot * n..(slot + 1) * n];
+            let col = &mut cols[j];
+            let pap = vec::dot(&col.p, ap);
+            if pap <= 0.0 {
+                // Not SPD (or breakdown) — stop with the best iterate.
+                col.active = false;
+                continue;
+            }
+            let alpha = col.rz / pap;
+            vec::axpy(alpha, &col.p, &mut col.x);
+            vec::axpy(-alpha, ap, &mut col.r);
+            col.iterations += 1;
+            if vec::norm2(&col.r) / col.bnorm <= opts.tol {
+                col.converged = true;
+                col.active = false;
+                continue;
+            }
+            if col.iterations >= opts.max_iter {
+                col.active = false;
+                continue;
+            }
+            let z = apply_prec(&col.r);
+            let rz_new = vec::dot(&col.r, &z);
+            let beta = rz_new / col.rz;
+            col.rz = rz_new;
+            for i in 0..n {
+                col.p[i] = z[i] + beta * col.p[i];
+            }
+        }
+    }
+    cols.into_iter()
+        .map(|c| {
+            let rel_residual = vec::norm2(&c.r) / c.bnorm;
+            CgResult { x: c.x, iterations: c.iterations, converged: c.converged, rel_residual }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +265,85 @@ mod tests {
             pre.iterations,
             plain.iterations
         );
+    }
+
+    #[test]
+    fn multi_matches_single_column_solves_exactly() {
+        // Independent systems advanced in lockstep perform the same
+        // per-column arithmetic as k separate cg_solve runs, so the
+        // results are bit-identical when block_apply is an exact
+        // per-column loop (the LinearOperator default).
+        let n = 25;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + (i % 7) as f64) * x[i];
+                }
+            },
+        };
+        let mut rng = crate::data::rng::Rng::seed_from(11);
+        let k = 4;
+        let rhss = rng.normal_vec(n * k);
+        let opts = CgOptions { tol: 1e-11, ..Default::default() };
+        let multi = cg_solve_multi(n, &rhss, &opts, |xs| {
+            let mut ys = vec![0.0; xs.len()];
+            op.apply_block(xs, &mut ys);
+            ys
+        });
+        assert_eq!(multi.len(), k);
+        for (j, got) in multi.iter().enumerate() {
+            let want = cg_solve(&op, &rhss[j * n..(j + 1) * n], &opts);
+            assert_eq!(got.x, want.x, "column {j} iterates diverged");
+            assert_eq!(got.iterations, want.iterations);
+            assert_eq!(got.converged, want.converged);
+            assert!(got.converged);
+        }
+    }
+
+    #[test]
+    fn multi_columns_converge_at_different_rates() {
+        // Column 0 needs one iteration (rhs is an eigvec direction of a
+        // diagonal system), the others more; shrinking blocks must not
+        // corrupt bookkeeping.
+        let n = 40;
+        let diag: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64) * 0.5).collect();
+        let d2 = diag.clone();
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = d2[i] * x[i];
+                }
+            },
+        };
+        let mut rhss = vec![0.0; n * 3];
+        rhss[0] = 1.0; // e_0: converges in 1 step
+        for i in 0..n {
+            rhss[n + i] = 1.0;
+            rhss[2 * n + i] = (i as f64).sin();
+        }
+        let mut block_calls = 0usize;
+        let opts = CgOptions { tol: 1e-10, ..Default::default() };
+        let multi = cg_solve_multi(n, &rhss, &opts, |xs| {
+            block_calls += 1;
+            let mut ys = vec![0.0; xs.len()];
+            op.apply_block(xs, &mut ys);
+            ys
+        });
+        assert!(multi.iter().all(|r| r.converged));
+        assert_eq!(multi[0].iterations, 1);
+        assert!(multi[1].iterations > 1);
+        // One block call per lockstep iteration, not per column.
+        let max_iters = multi.iter().map(|r| r.iterations).max().unwrap();
+        assert_eq!(block_calls, max_iters);
+        // Solutions correct.
+        for (j, r) in multi.iter().enumerate() {
+            for i in 0..n {
+                let want = rhss[j * n + i] / diag[i];
+                assert!((r.x[i] - want).abs() < 1e-8, "col {j} entry {i}");
+            }
+        }
     }
 
     #[test]

@@ -34,6 +34,13 @@
 //! * [`graph`] — graph-Laplacian operators and the dense direct
 //!   baseline (with a cache-blocked, parallel `apply_block` of its own,
 //!   keeping the O(n²) comparator fair).
+//! * [`shard`] — sharded operator execution: point-domain partitioners
+//!   (contiguous / strided / Morton), per-shard geometry + scratch
+//!   derived from one parent plan, and [`shard::ShardedOperator`],
+//!   which runs the adjoint spread per shard, tree-reduces subgrids
+//!   into the shared frequency stage, and fans the forward transform
+//!   back out per shard. See its module docs for the execution-layer
+//!   map (plan → geometry → shards → coordinator).
 //! * [`data`] — dataset generators (spiral, crescent-fullmoon, synthetic
 //!   image, blobs) and a deterministic PRNG substrate.
 //! * [`apps`] — the paper's applications: spectral clustering (§6.2.1),
@@ -70,6 +77,7 @@ pub mod linalg;
 pub mod nfft;
 pub mod nystrom;
 pub mod runtime;
+pub mod shard;
 pub mod util;
 
 // Re-exports are added as the modules land (see module docs above).

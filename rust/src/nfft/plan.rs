@@ -19,6 +19,14 @@
 //! geometry), the `*_with_geometry` variants that reuse a precomputed
 //! geometry, and the `*_block` variants that apply the transform to k
 //! columns at once — one pooled grid per column, columns in parallel.
+//!
+//! The adjoint additionally decomposes into its two public halves —
+//! [`NfftPlan::spread_with_geometry`] (additive over point subsets) and
+//! [`NfftPlan::adjoint_finalize`] (FFT + deconvolved extraction) — the
+//! seam the shard execution layer ([`crate::shard`]) builds on. Inside
+//! one spread, large clouds are chunked across threads into pooled
+//! subgrids and combined with the fixed-order tree reduction of
+//! [`crate::util::reduce`], so results stay bit-deterministic.
 
 use super::geometry::NfftGeometry;
 use super::window::{Window, WindowKind};
@@ -43,6 +51,9 @@ pub struct NfftPlan {
     deconv: Vec<Vec<f64>>,
     total_freq: usize,
     total_grid: usize,
+    /// Subgrid scratch for the chunk-parallel spread (one grid per
+    /// active chunk; recycled across applications).
+    spread_scratch: BufferPool<Complex>,
 }
 
 impl NfftPlan {
@@ -83,7 +94,24 @@ impl NfftPlan {
             .collect();
         let total_freq = n_band.iter().product();
         let total_grid = n_os.iter().product();
-        NfftPlan { d, n_band: n_band.to_vec(), n_os, strides, windows, fft, deconv, total_freq, total_grid }
+        // Retention capped at the thread count: a burst of concurrent
+        // chunked spreads (parallel block columns) may briefly allocate
+        // more subgrids, but only a steady-state working set stays
+        // parked (grids can be tens of MB at setup3 scale).
+        let spread_scratch =
+            BufferPool::bounded(total_grid, Complex::ZERO, rayon::current_num_threads());
+        NfftPlan {
+            d,
+            n_band: n_band.to_vec(),
+            n_os,
+            strides,
+            windows,
+            fft,
+            deconv,
+            total_freq,
+            total_grid,
+            spread_scratch,
+        }
     }
 
     pub fn dims(&self) -> usize {
@@ -174,14 +202,33 @@ impl NfftPlan {
         grid: &mut [Complex],
         out: &mut [Complex],
     ) {
+        self.spread_with_geometry(geo, x, grid);
+        self.adjoint_finalize(grid, out);
+    }
+
+    /// Spread-only first half of the adjoint: zero `grid`, then
+    /// accumulate the weighted window footprints of `geo`'s points.
+    /// Spreading is additive, so disjoint point subsets spread into
+    /// separate grids sum (element-wise) to the full-cloud spread —
+    /// the property the shard layer exploits: each shard spreads its
+    /// own points into its own subgrid, and the subgrids are reduced
+    /// before ONE [`Self::adjoint_finalize`].
+    pub fn spread_with_geometry(&self, geo: &NfftGeometry, x: &[f64], grid: &mut [Complex]) {
         self.check_geometry(geo);
         assert_eq!(x.len(), geo.n);
         assert_eq!(grid.len(), self.total_grid);
-        assert_eq!(out.len(), self.total_freq);
         for g in grid.iter_mut() {
             *g = Complex::ZERO;
         }
         self.spread(geo, x, grid);
+    }
+
+    /// Second half of the adjoint: forward FFT of a grid holding (the
+    /// sum of) spread contributions, then deconvolved extraction of the
+    /// in-band coefficients. `grid` is clobbered.
+    pub fn adjoint_finalize(&self, grid: &mut [Complex], out: &mut [Complex]) {
+        assert_eq!(grid.len(), self.total_grid);
+        assert_eq!(out.len(), self.total_freq);
         self.fft.forward(grid);
         self.extract_deconvolved(grid, out);
     }
@@ -269,6 +316,40 @@ impl NfftPlan {
             });
     }
 
+    /// First half of the real-output forward, point-free: zero `grid`,
+    /// embed the deconvolved band coefficients, inverse FFT. The
+    /// prepared grid is read-only input for any number of
+    /// [`Self::gather_real_with_geometry`] calls — the seam that lets
+    /// the shard layer run ONE freq→grid transform and fan only the
+    /// per-point gather out across shards.
+    pub fn forward_real_prepare(&self, f_hat: &[Complex], grid: &mut [Complex]) {
+        assert_eq!(f_hat.len(), self.total_freq);
+        assert_eq!(grid.len(), self.total_grid);
+        for g in grid.iter_mut() {
+            *g = Complex::ZERO;
+        }
+        self.embed_deconvolved(f_hat, grid);
+        self.fft.backward_unnormalized(grid);
+    }
+
+    /// Second half of the real-output forward: gather the real part at
+    /// each of `geo`'s points from a grid prepared by
+    /// [`Self::forward_real_prepare`]; the per-node loop is parallel.
+    pub fn gather_real_with_geometry(
+        &self,
+        geo: &NfftGeometry,
+        grid: &[Complex],
+        out: &mut [f64],
+    ) {
+        self.check_geometry(geo);
+        assert_eq!(out.len(), geo.n);
+        assert_eq!(grid.len(), self.total_grid);
+        out.par_iter_mut().enumerate().for_each(|(j, o)| {
+            let (starts, vals) = geo.point(j);
+            *o = self.gather_point_real(starts, vals, grid);
+        });
+    }
+
     fn forward_real_impl(
         &self,
         geo: &NfftGeometry,
@@ -278,14 +359,8 @@ impl NfftPlan {
         parallel: bool,
     ) {
         self.check_geometry(geo);
-        assert_eq!(f_hat.len(), self.total_freq);
         assert_eq!(out.len(), geo.n);
-        assert_eq!(grid.len(), self.total_grid);
-        for g in grid.iter_mut() {
-            *g = Complex::ZERO;
-        }
-        self.embed_deconvolved(f_hat, grid);
-        self.fft.backward_unnormalized(grid);
+        self.forward_real_prepare(f_hat, grid);
         let grid_r: &[Complex] = grid;
         if parallel {
             out.par_iter_mut().enumerate().for_each(|(j, o)| {
@@ -341,15 +416,72 @@ impl NfftPlan {
 
     /// Spread weighted window footprints onto the oversampled grid:
     /// `grid_u += Σ_i x_i · Π_a φ_a(v_ia − u_a/n_os_a)`.
+    ///
+    /// For large clouds the point loop splits into chunks spread into
+    /// pooled subgrids in parallel, then combined with the fixed-order
+    /// tree reduction — the chunk count depends only on the problem
+    /// shape (and the process-constant thread count), so every caller
+    /// of every entry point sees bit-identical results.
     fn spread(&self, geo: &NfftGeometry, x: &[f64], grid: &mut [Complex]) {
         let fp = geo.fp;
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
+        let n = geo.n;
+        let chunks = self.spread_chunks(n, fp);
+        if chunks <= 1 {
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let (starts, vals) = geo.point(i);
+                self.scatter_tensor(starts, vals, fp, xi, grid);
             }
-            let (starts, vals) = geo.point(i);
-            self.scatter_tensor(starts, vals, fp, xi, grid);
+            return;
         }
+        let chunk_len = n.div_ceil(chunks);
+        let mut subs: Vec<Vec<Complex>> = x
+            .par_chunks(chunk_len)
+            .enumerate()
+            .map(|(c, xc)| {
+                let mut sub = self.spread_scratch.take();
+                for g in sub.iter_mut() {
+                    *g = Complex::ZERO;
+                }
+                let base = c * chunk_len;
+                for (off, &xi) in xc.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let (starts, vals) = geo.point(base + off);
+                    self.scatter_tensor(starts, vals, fp, xi, &mut sub);
+                }
+                sub
+            })
+            .collect();
+        crate::util::reduce::tree_reduce_in_place(&mut subs);
+        for (g, &s) in grid.iter_mut().zip(subs[0].iter()) {
+            *g += s;
+        }
+        for sub in subs {
+            self.spread_scratch.put(sub);
+        }
+    }
+
+    /// Number of spread chunks for an n-point cloud. Deterministic per
+    /// process: depends only on the problem shape and the (constant)
+    /// rayon pool width — never on scheduling. Sequential unless the
+    /// cloud is large AND the per-point footprint work dominates the
+    /// subgrid zero/reduce overhead.
+    fn spread_chunks(&self, n: usize, fp: usize) -> usize {
+        const MIN_POINTS_PER_CHUNK: usize = 2048;
+        let chunks = rayon::current_num_threads().min(n / MIN_POINTS_PER_CHUNK);
+        if chunks <= 1 {
+            return 1;
+        }
+        let per_point = fp.saturating_pow(self.d as u32);
+        let work = n.saturating_mul(per_point);
+        if work < 4 * chunks * self.total_grid {
+            return 1;
+        }
+        chunks
     }
 
     /// Tensor-product scatter of one point's footprint (odometer over
@@ -737,6 +869,95 @@ mod tests {
         plan.forward_real(&points, &f_hat, &mut grid, &mut yw);
         plan.forward_real_with_geometry(&geo, &f_hat, &mut grid, &mut yg);
         assert_eq!(yg, yw);
+    }
+
+    #[test]
+    fn spread_finalize_split_matches_adjoint() {
+        let n = 40;
+        let d = 2;
+        let points = rand_points(n, d, 41);
+        let band = [8usize, 8];
+        let plan = NfftPlan::new(&band, 4, WindowKind::KaiserBessel);
+        let geo = plan.build_geometry(&points);
+        let mut rng = crate::data::rng::Rng::seed_from(42);
+        let x = rng.normal_vec(n);
+        let nf = plan.num_freq();
+        let mut grid = plan.alloc_grid();
+        let mut want = vec![Complex::ZERO; nf];
+        plan.adjoint_with_geometry(&geo, &x, &mut grid, &mut want);
+        // Split halves on the full cloud: bit-identical.
+        let mut got = vec![Complex::ZERO; nf];
+        plan.spread_with_geometry(&geo, &x, &mut grid);
+        plan.adjoint_finalize(&mut grid, &mut got);
+        assert_eq!(got, want);
+        // Additivity over point subsets (the shard-layer contract):
+        // spreads of two halves of the cloud sum to the full spread.
+        let split = n / 2;
+        let geo_a = plan.build_geometry(&points[..split * d]);
+        let geo_b = plan.build_geometry(&points[split * d..]);
+        let mut ga = plan.alloc_grid();
+        let mut gb = plan.alloc_grid();
+        plan.spread_with_geometry(&geo_a, &x[..split], &mut ga);
+        plan.spread_with_geometry(&geo_b, &x[split..], &mut gb);
+        for (a, &b) in ga.iter_mut().zip(gb.iter()) {
+            *a += b;
+        }
+        let mut sum_out = vec![Complex::ZERO; nf];
+        plan.adjoint_finalize(&mut ga, &mut sum_out);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum();
+        let err = max_err_c(&sum_out, &want);
+        assert!(err < 1e-13 * scale.max(1.0), "subset-spread sum diverged: {err}");
+    }
+
+    #[test]
+    fn forward_prepare_gather_split_matches_forward() {
+        let n = 35;
+        let d = 2;
+        let points = rand_points(n, d, 61);
+        let band = [8usize, 16];
+        let plan = NfftPlan::new(&band, 4, WindowKind::KaiserBessel);
+        let geo = plan.build_geometry(&points);
+        let mut rng = crate::data::rng::Rng::seed_from(62);
+        let f_hat: Vec<Complex> =
+            (0..plan.num_freq()).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+        let mut grid = plan.alloc_grid();
+        let mut want = vec![0.0; n];
+        plan.forward_real_with_geometry(&geo, &f_hat, &mut grid, &mut want);
+        // Split halves: one prepare, gathers from the read-only grid —
+        // bit-identical, including gathers over point subsets.
+        plan.forward_real_prepare(&f_hat, &mut grid);
+        let mut got = vec![0.0; n];
+        plan.gather_real_with_geometry(&geo, &grid, &mut got);
+        assert_eq!(got, want);
+        let split = n / 3;
+        let geo_a = plan.build_geometry(&points[..split * d]);
+        let mut part = vec![0.0; split];
+        plan.gather_real_with_geometry(&geo_a, &grid, &mut part);
+        assert_eq!(part.as_slice(), &want[..split]);
+    }
+
+    #[test]
+    fn large_cloud_adjoint_accurate_and_deterministic() {
+        // Big enough to take the chunk-parallel spread branch on
+        // multi-core hosts (and the sequential one elsewhere) — either
+        // way the result must be reproducible and match the oracle.
+        let n = 6000;
+        let points = rand_points(n, 1, 51);
+        let mut rng = crate::data::rng::Rng::seed_from(52);
+        let x = rng.normal_vec(n);
+        let band = [8usize];
+        let plan = NfftPlan::new(&band, 3, WindowKind::KaiserBessel);
+        let geo = plan.build_geometry(&points);
+        let mut grid = plan.alloc_grid();
+        let mut a = vec![Complex::ZERO; plan.num_freq()];
+        let mut b = vec![Complex::ZERO; plan.num_freq()];
+        plan.adjoint_with_geometry(&geo, &x, &mut grid, &mut a);
+        plan.adjoint_with_geometry(&geo, &x, &mut grid, &mut b);
+        assert_eq!(a, b, "chunked spread must be deterministic");
+        let want = ndft_adjoint(&points, 1, &x, &band);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum();
+        // m = 3 ⇒ ~1e-4 relative accuracy.
+        assert!(max_err_c(&a, &want) < 1e-4 * scale, "err {}", max_err_c(&a, &want));
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Shard executor: per-shard metrics aggregation and the plain-JSON
+//! [`ShardSpec`] wire encoding.
+//!
+//! [`ShardExecutor`] collects [`PhaseTimings`] per shard plus the
+//! shared-stage timings, so operators can report both the aggregate
+//! picture ("where does a matvec spend time?") and the per-shard skew
+//! ("is shard 3 the straggler?") — the observability a multi-host
+//! deployment needs before it exists.
+//!
+//! The JSON encoding ([`ShardSpec::to_json`] / [`ShardSpec::from_json`],
+//! via [`crate::util::json`]) is the dispatch hook for that future:
+//! a coordinator ships `{spec, shard_id}` to a worker process, the
+//! worker rebuilds its [`crate::shard::plan::ShardPlan`] from the
+//! (immutable, cheap-to-broadcast) plan parameters and runs phases 1
+//! and 3 locally. Everything a worker needs to know about placement is
+//! in this one self-describing value.
+
+use crate::shard::partition::ShardSpec;
+use crate::util::json::Json;
+use crate::util::timer::PhaseTimings;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Aggregates per-shard and shared-stage timings for one sharded
+/// operator. All methods take `&self`; recording is safe from the
+/// shard-parallel phases.
+pub struct ShardExecutor {
+    per_shard: Vec<Mutex<PhaseTimings>>,
+    shared: Mutex<PhaseTimings>,
+    columns: AtomicU64,
+}
+
+impl ShardExecutor {
+    pub fn new(shards: usize) -> ShardExecutor {
+        ShardExecutor {
+            per_shard: (0..shards).map(|_| Mutex::new(PhaseTimings::new())).collect(),
+            shared: Mutex::new(PhaseTimings::new()),
+            columns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    /// Record a shard-local phase (spread / forward).
+    pub fn record(&self, shard: usize, phase: &str, secs: f64) {
+        self.per_shard[shard].lock().unwrap().add(phase, secs);
+    }
+
+    /// Record a shared-stage phase (reduce / multiply / total / ...).
+    pub fn record_global(&self, phase: &str, secs: f64) {
+        self.shared.lock().unwrap().add(phase, secs);
+    }
+
+    /// Count columns pushed through the operator.
+    pub fn note_columns(&self, k: u64) {
+        self.columns.fetch_add(k, Ordering::Relaxed);
+    }
+
+    pub fn columns_applied(&self) -> u64 {
+        self.columns.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of one shard's timings.
+    pub fn shard_timings(&self, shard: usize) -> PhaseTimings {
+        self.per_shard[shard].lock().unwrap().clone()
+    }
+
+    /// Shared-stage timings snapshot.
+    pub fn shared_timings(&self) -> PhaseTimings {
+        self.shared.lock().unwrap().clone()
+    }
+
+    /// Aggregate: shared stages merged with every shard's local phases
+    /// (same phase names accumulate across shards).
+    pub fn aggregate(&self) -> PhaseTimings {
+        let mut out = self.shared.lock().unwrap().clone();
+        for sh in &self.per_shard {
+            out.merge(&sh.lock().unwrap());
+        }
+        out
+    }
+
+    /// Human-readable skew report: per-shard totals next to each other.
+    pub fn skew_report(&self) -> String {
+        let mut out = String::new();
+        for (s, sh) in self.per_shard.iter().enumerate() {
+            let t = sh.lock().unwrap();
+            out.push_str(&format!("shard {s}: {:.6}s\n", t.total()));
+        }
+        out
+    }
+}
+
+impl ShardSpec {
+    /// Plain-JSON encoding: `{"n": …, "shards": [[…], …]}`.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("n".to_string(), Json::Num(self.num_points() as f64));
+        obj.insert(
+            "shards".to_string(),
+            Json::Arr(
+                self.shards()
+                    .iter()
+                    .map(|sh| Json::Arr(sh.iter().map(|&i| Json::Num(i as f64)).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+
+    /// Decode and validate a spec produced by [`ShardSpec::to_json`]
+    /// (or by an external placement policy emitting the same shape).
+    pub fn from_json(v: &Json) -> anyhow::Result<ShardSpec> {
+        let n = v
+            .get("n")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("shard spec: missing numeric 'n'"))?;
+        let shards_json = v
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("shard spec: missing array 'shards'"))?;
+        let mut shards = Vec::with_capacity(shards_json.len());
+        for (s, sh) in shards_json.iter().enumerate() {
+            let arr = sh
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shard spec: shard {s} is not an array"))?;
+            let mut idx = Vec::with_capacity(arr.len());
+            for v in arr {
+                idx.push(
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("shard spec: non-numeric index in shard {s}"))?,
+                );
+            }
+            shards.push(idx);
+        }
+        Ok(ShardSpec::from_assignments(n, shards)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn executor_aggregates_and_reports() {
+        let exec = ShardExecutor::new(2);
+        exec.record(0, "spread", 1.0);
+        exec.record(1, "spread", 2.0);
+        exec.record(1, "forward", 0.5);
+        exec.record_global("reduce", 0.25);
+        exec.note_columns(3);
+        assert_eq!(exec.num_shards(), 2);
+        assert_eq!(exec.columns_applied(), 3);
+        let agg = exec.aggregate();
+        assert_eq!(agg.get("spread"), Some(3.0));
+        assert_eq!(agg.get("forward"), Some(0.5));
+        assert_eq!(agg.get("reduce"), Some(0.25));
+        assert_eq!(exec.shard_timings(0).get("spread"), Some(1.0));
+        assert_eq!(exec.shared_timings().get("reduce"), Some(0.25));
+        let skew = exec.skew_report();
+        assert!(skew.contains("shard 0"));
+        assert!(skew.contains("shard 1"));
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let spec = ShardSpec::strided(11, 3);
+        let text = spec.to_json().to_string();
+        // Survives a genuine serialize → parse → decode round trip.
+        let parsed = json::parse(&text).unwrap();
+        let back = ShardSpec::from_json(&parsed).unwrap();
+        assert_eq!(back, spec);
+        // Empty shards survive too.
+        let spec =
+            ShardSpec::from_assignments(3, vec![vec![0, 1, 2], Vec::new()]).unwrap();
+        let back = ShardSpec::from_json(&json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_specs() {
+        let bad = |s: &str| ShardSpec::from_json(&json::parse(s).unwrap());
+        assert!(bad(r#"{"shards": [[0]]}"#).is_err(), "missing n");
+        assert!(bad(r#"{"n": 2, "shards": [[0]]}"#).is_err(), "incomplete partition");
+        assert!(bad(r#"{"n": 2, "shards": [[0, 1, 1]]}"#).is_err(), "duplicate index");
+        assert!(bad(r#"{"n": 2, "shards": [[0, "x"]]}"#).is_err(), "non-numeric index");
+        assert!(bad(r#"{"n": 2, "shards": 7}"#).is_err(), "shards not an array");
+    }
+}

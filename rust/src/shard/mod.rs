@@ -1,0 +1,51 @@
+//! Sharded operator execution — the fastsum matvec split over point
+//! shards, one process today, many hosts tomorrow, same code path.
+//!
+//! # Why the point domain shards freely
+//!
+//! The paper's matvec never materialises the kernel matrix: it factors
+//! into adjoint-NFFT → frequency multiply → forward-NFFT. The frequency
+//! stage is *global but tiny* (N^d coefficients) and identical for
+//! every shard; the spread and gather stages are *sums/maps over
+//! points* and therefore split cleanly over any partition of the point
+//! set. Sharding the operator is exactly: run the point-local halves
+//! per shard, exchange one small frequency-domain object in between.
+//!
+//! # Execution layers (plan → geometry → shards → coordinator)
+//!
+//! 1. **Plan** ([`crate::nfft::NfftPlan`]) — immutable, point-free
+//!    transform state (windows, FFT plans, deconvolution). Built once,
+//!    shared by everything via `Arc`; in a multi-process future it is
+//!    rebuilt from a handful of scalars, never shipped.
+//! 2. **Geometry** ([`crate::nfft::NfftGeometry`]) — per-point-cloud
+//!    window footprints. The shard layer builds one *per shard* over
+//!    just that shard's points ([`plan::ShardPlan`]), so the tables
+//!    partition instead of duplicating.
+//! 3. **Shards** ([`operator::ShardedOperator`]) — each apply runs the
+//!    adjoint spread shard-locally into pooled subgrids, tree-reduces
+//!    them (fixed, deterministic order — [`crate::util::reduce`]) into
+//!    the global grid, performs the shared FFT/deconvolve/kernel
+//!    multiply against the `Arc`-shared coefficient table, then fans
+//!    the forward transform back out per shard — the freq→grid half
+//!    runs once, each shard gathers only its own points — with
+//!    diagonal and normalization corrections composed shard-locally.
+//! 4. **Coordinator** ([`crate::coordinator::Coordinator`]) — jobs are
+//!    operator-agnostic, so `Coordinator::new_sharded` serves every
+//!    existing [`crate::coordinator::Job`] variant (matvec, block
+//!    matvec, eigensolves, SSL solves, hybrid Nyström) over a sharded
+//!    operator unchanged.
+//!
+//! [`partition`] supplies the placement policies (contiguous, strided,
+//! Morton space-filling tiles) as explicit, validated, JSON-encodable
+//! [`ShardSpec`]s; [`exec`] carries the per-shard metrics and the wire
+//! encoding that a future multi-process dispatcher would broadcast.
+
+pub mod exec;
+pub mod operator;
+pub mod partition;
+pub mod plan;
+
+pub use exec::ShardExecutor;
+pub use operator::{ShardedMode, ShardedOperator};
+pub use partition::{PartitionError, PartitionStrategy, ShardSpec};
+pub use plan::{build_shard_plans, ShardPlan};

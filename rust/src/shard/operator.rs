@@ -1,0 +1,425 @@
+//! [`ShardedOperator`] — the fastsum matvec executed over point shards.
+//!
+//! One application runs three phases (see the module docs of
+//! [`crate::shard`] for the layer map):
+//!
+//! 1. **shard-local adjoint spread** — each shard gathers its own
+//!    entries of `x` (applying the `D^{−1/2}` input scaling locally in
+//!    normalized mode) and spreads them into its own pooled subgrid;
+//! 2. **shared frequency stage** — the per-shard subgrids tree-reduce
+//!    (fixed order, deterministic) into the global grid, one FFT +
+//!    deconvolution produces `x̂`, and the `Arc`-shared regularised
+//!    kernel table multiplies in place — this stage is identical no
+//!    matter how many shards exist;
+//! 3. **shard-local forward fan-out** — the freq→grid half of the
+//!    forward transform (embed + inverse FFT) runs once on the shared
+//!    coefficients; each shard then gathers its own points from the
+//!    prepared grid and composes the diagonal (`−K(0)`) and
+//!    normalization corrections shard-locally before scattering into
+//!    `y`.
+//!
+//! With `shards = 1` under a contiguous spec every phase degenerates to
+//! exactly the unsharded [`FastsumOperator`] arithmetic — results are
+//! bit-for-bit identical, which the cross-engine tests pin down.
+
+use crate::fastsum::normalized::NormalizeError;
+use crate::fastsum::{FastsumOperator, FastsumParams, Kernel};
+use crate::fft::Complex;
+use crate::graph::operator::LinearOperator;
+use crate::nfft::NfftPlan;
+use crate::shard::exec::ShardExecutor;
+use crate::shard::partition::ShardSpec;
+use crate::shard::plan::{build_shard_plans, ShardPlan};
+use crate::util::pool::BufferPool;
+use crate::util::reduce::tree_reduce_in_place;
+use crate::util::timer::{PhaseTimings, Timer};
+use rayon::prelude::*;
+use std::sync::Arc;
+
+/// Which operator view the shards compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardedMode {
+    /// Zero-diagonal adjacency `W` (the [`FastsumOperator`] view).
+    Adjacency,
+    /// Normalised adjacency `A = D^{−1/2} W D^{−1/2}` (the
+    /// [`crate::fastsum::NormalizedAdjacency`] view).
+    Normalized,
+}
+
+/// Sharded fastsum operator: shared plan + shared kernel table,
+/// per-shard geometry/scratch, one [`LinearOperator`] surface.
+pub struct ShardedOperator {
+    n: usize,
+    plan: Arc<NfftPlan>,
+    b_hat: Arc<Vec<f64>>,
+    out_scale: f64,
+    k_zero: f64,
+    shards: Vec<ShardPlan>,
+    spec: ShardSpec,
+    mode: ShardedMode,
+    /// NFFT-approximated degrees (Normalized mode only, else empty).
+    degrees: Vec<f64>,
+    /// `D^{−1/2}` entries (Normalized mode only, else empty).
+    inv_sqrt_deg: Vec<f64>,
+    /// Frequency-coefficient scratch shared by the frequency stage.
+    freqs: BufferPool<Complex>,
+    /// Grid scratch for the shared freq→grid half of the forward
+    /// transform (one per in-flight column; shards only read it).
+    grids: BufferPool<Complex>,
+    exec: ShardExecutor,
+    name: String,
+}
+
+impl ShardedOperator {
+    /// Sharded zero-diagonal adjacency `W` over a fresh parent plan.
+    pub fn adjacency(
+        points: &[f64],
+        d: usize,
+        kernel: Kernel,
+        params: FastsumParams,
+        spec: ShardSpec,
+    ) -> ShardedOperator {
+        let parent = FastsumOperator::new(points, d, kernel, params);
+        Self::from_fastsum(&parent, spec)
+    }
+
+    /// Shard an existing parent operator: per-shard geometries are
+    /// built once from the parent's ρ-scaled points; the NFFT plan and
+    /// the regularised-kernel Fourier table are shared via `Arc` (no
+    /// duplication across shards).
+    pub fn from_fastsum(parent: &FastsumOperator, spec: ShardSpec) -> ShardedOperator {
+        assert_eq!(spec.num_points(), parent.dim(), "shard spec built for a different cloud");
+        let plan = parent.plan().clone();
+        let b_hat = parent.fourier_coefficients().clone();
+        let exec = ShardExecutor::new(spec.num_shards());
+        let t = Timer::start();
+        let shards = build_shard_plans(&plan, parent.scaled_points(), parent.ambient_dim(), &spec);
+        exec.record_global("shard-geometry", t.elapsed_secs());
+        let freqs = BufferPool::new(plan.num_freq(), Complex::ZERO);
+        let grids = plan.grid_pool();
+        let name = format!("nfft-W-shard{}", spec.num_shards());
+        ShardedOperator {
+            n: parent.dim(),
+            plan,
+            b_hat,
+            out_scale: parent.output_scale(),
+            k_zero: parent.k_zero(),
+            shards,
+            spec,
+            mode: ShardedMode::Adjacency,
+            degrees: Vec::new(),
+            inv_sqrt_deg: Vec::new(),
+            freqs,
+            grids,
+            exec,
+            name,
+        }
+    }
+
+    /// Sharded normalised adjacency `A = D^{−1/2} W D^{−1/2}`; the
+    /// degree vector `W·1` is computed through the sharded path itself
+    /// (as a distributed deployment would).
+    pub fn normalized(
+        points: &[f64],
+        d: usize,
+        kernel: Kernel,
+        params: FastsumParams,
+        spec: ShardSpec,
+    ) -> Result<ShardedOperator, NormalizeError> {
+        Self::adjacency(points, d, kernel, params, spec).into_normalized()
+    }
+
+    /// Switch an adjacency-view operator to the normalised view.
+    pub fn into_normalized(mut self) -> Result<ShardedOperator, NormalizeError> {
+        let ones = vec![1.0; self.n];
+        let mut deg = vec![0.0; self.n];
+        self.apply_columns(&ones, &mut deg);
+        self.inv_sqrt_deg = crate::fastsum::normalized::inv_sqrt_degrees(&deg)?;
+        self.degrees = deg;
+        self.mode = ShardedMode::Normalized;
+        self.name = format!("nfft-A-shard{}", self.spec.num_shards());
+        Ok(self)
+    }
+
+    pub fn mode(&self) -> ShardedMode {
+        self.mode
+    }
+
+    pub fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard_plans(&self) -> &[ShardPlan] {
+        &self.shards
+    }
+
+    /// NFFT-approximated degrees (empty unless normalised).
+    pub fn degrees(&self) -> &[f64] {
+        &self.degrees
+    }
+
+    /// The per-shard executor (timings, apply counters).
+    pub fn executor(&self) -> &ShardExecutor {
+        &self.exec
+    }
+
+    /// Aggregated phase timings across all shards plus the shared
+    /// stages (`shard-geometry`, `reduce`, `multiply`, `total`).
+    pub fn timings(&self) -> PhaseTimings {
+        self.exec.aggregate()
+    }
+
+    /// `D^{−1/2}` input scaling for point `i` (1 in adjacency mode).
+    #[inline]
+    fn in_scale(&self, i: usize) -> f64 {
+        match self.mode {
+            ShardedMode::Adjacency => 1.0,
+            ShardedMode::Normalized => self.inv_sqrt_deg[i],
+        }
+    }
+
+    /// Apply to one column. Mirrors the unsharded arithmetic exactly:
+    /// with one shard each phase reduces to the [`FastsumOperator`] /
+    /// [`crate::fastsum::NormalizedAdjacency`] operation sequence.
+    fn apply_one(&self, x: &[f64], y: &mut [f64]) {
+        let normalized = self.mode == ShardedMode::Normalized;
+        let t_all = Timer::start();
+        // Phase 1: shard-local gather + adjoint spread into subgrids.
+        // Empty shards (legal in hand-written/random specs) contribute
+        // nothing and are skipped — no grid to zero, no reduce operand.
+        let mut subs: Vec<Vec<Complex>> = self
+            .shards
+            .par_iter()
+            .enumerate()
+            .filter(|(_, sh)| sh.num_points() > 0)
+            .map(|(s, sh)| {
+                let t = Timer::start();
+                let mut local = Vec::with_capacity(sh.num_points());
+                for &i in sh.indices() {
+                    local.push(x[i] * self.in_scale(i));
+                }
+                let mut grid = sh.grids().take();
+                self.plan.spread_with_geometry(sh.geometry(), &local, &mut grid);
+                self.exec.record(s, "spread", t.elapsed_secs());
+                grid
+            })
+            .collect();
+        // Phase 2 (shared): tree-reduce subgrids into the global grid,
+        // FFT + deconvolve, multiply by the shared kernel table.
+        let t = Timer::start();
+        tree_reduce_in_place(&mut subs);
+        self.exec.record_global("reduce", t.elapsed_secs());
+        let mut freq = self.freqs.take();
+        self.plan.adjoint_finalize(&mut subs[0], &mut freq);
+        let spreaders = self.shards.iter().filter(|sh| sh.num_points() > 0);
+        for (sh, sub) in spreaders.zip(subs) {
+            sh.grids().put(sub);
+        }
+        let t = Timer::start();
+        for (f, &b) in freq.iter_mut().zip(self.b_hat.iter()) {
+            *f = f.scale(b);
+        }
+        self.exec.record_global("multiply", t.elapsed_secs());
+        // Phase 3: ONE shared freq→grid transform (embed + inverse
+        // FFT), then the per-point gather fans out across shards with
+        // diagonal + normalization corrections composed shard-locally.
+        let t = Timer::start();
+        let mut fgrid = self.grids.take();
+        self.plan.forward_real_prepare(&freq, &mut fgrid);
+        self.exec.record_global("forward-prepare", t.elapsed_secs());
+        let fgrid_ref: &[Complex] = &fgrid;
+        let outs: Vec<Vec<f64>> = self
+            .shards
+            .par_iter()
+            .enumerate()
+            .map(|(s, sh)| {
+                let t = Timer::start();
+                let mut out = vec![0.0; sh.num_points()];
+                self.plan.gather_real_with_geometry(sh.geometry(), fgrid_ref, &mut out);
+                if self.out_scale != 1.0 {
+                    for o in out.iter_mut() {
+                        *o *= self.out_scale;
+                    }
+                }
+                for (o, &i) in out.iter_mut().zip(sh.indices()) {
+                    if normalized {
+                        let xi = x[i] * self.inv_sqrt_deg[i];
+                        *o = (*o - self.k_zero * xi) * self.inv_sqrt_deg[i];
+                    } else {
+                        *o -= self.k_zero * x[i];
+                    }
+                }
+                self.exec.record(s, "forward", t.elapsed_secs());
+                out
+            })
+            .collect();
+        self.grids.put(fgrid);
+        self.freqs.put(freq);
+        for (sh, out) in self.shards.iter().zip(outs) {
+            for (&i, v) in sh.indices().iter().zip(out) {
+                y[i] = v;
+            }
+        }
+        self.exec.record_global("total", t_all.elapsed_secs());
+    }
+
+    /// Apply to k packed columns, columns in parallel.
+    fn apply_columns(&self, xs: &[f64], ys: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty() && xs.len() % n == 0, "block not a multiple of n");
+        let k = xs.len() / n;
+        self.exec.note_columns(k as u64);
+        if k == 1 {
+            self.apply_one(xs, ys);
+            return;
+        }
+        ys.par_chunks_mut(n)
+            .zip(xs.par_chunks(n))
+            .for_each(|(y, x)| self.apply_one(x, y));
+    }
+}
+
+impl LinearOperator for ShardedOperator {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        self.apply_columns(x, y);
+    }
+
+    fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
+        self.apply_columns(xs, ys);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastsum::NormalizedAdjacency;
+    use crate::util::rel_l2_error;
+
+    fn spiral_points(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        crate::data::spiral::generate(
+            crate::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+            &mut rng,
+        )
+        .points
+    }
+
+    #[test]
+    fn one_shard_bit_for_bit_with_fastsum() {
+        let points = spiral_points(85, 1);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let sharded = ShardedOperator::from_fastsum(&parent, ShardSpec::contiguous(85, 1));
+        let mut rng = crate::data::rng::Rng::seed_from(2);
+        let x = rng.normal_vec(85);
+        assert_eq!(sharded.apply_vec(&x), parent.apply_vec(&x), "shards=1 must be bit-for-bit");
+        // Block path too.
+        let xs = rng.normal_vec(85 * 3);
+        let mut a = vec![0.0; 85 * 3];
+        let mut b = vec![0.0; 85 * 3];
+        sharded.apply_block(&xs, &mut a);
+        parent.apply_block(&xs, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn one_shard_bit_for_bit_with_normalized() {
+        let points = spiral_points(80, 3);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let dense = NormalizedAdjacency::new(&points, 3, kernel, FastsumParams::setup2()).unwrap();
+        let sharded = ShardedOperator::normalized(
+            &points,
+            3,
+            kernel,
+            FastsumParams::setup2(),
+            ShardSpec::contiguous(80, 1),
+        )
+        .unwrap();
+        assert_eq!(sharded.degrees(), dense.degrees());
+        let mut rng = crate::data::rng::Rng::seed_from(4);
+        let x = rng.normal_vec(80);
+        assert_eq!(sharded.apply_vec(&x), dense.apply_vec(&x));
+    }
+
+    #[test]
+    fn many_shards_match_unsharded() {
+        let points = spiral_points(95, 5);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let mut rng = crate::data::rng::Rng::seed_from(6);
+        let x = rng.normal_vec(95);
+        let want = parent.apply_vec(&x);
+        for shards in [2usize, 3, 5, 8] {
+            for spec in [
+                ShardSpec::contiguous(95, shards),
+                ShardSpec::strided(95, shards),
+                ShardSpec::morton(&points, 3, shards),
+            ] {
+                let sharded = ShardedOperator::from_fastsum(&parent, spec);
+                let got = sharded.apply_vec(&x);
+                let err = rel_l2_error(&got, &want);
+                assert!(err < 1e-12, "shards={shards}: rel err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shards_are_harmless() {
+        let points = spiral_points(60, 7);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup1());
+        // Shard 1 of 3 owns nothing.
+        let spec = ShardSpec::from_assignments(
+            60,
+            vec![(0..30).collect(), Vec::new(), (30..60).collect()],
+        )
+        .unwrap();
+        let sharded = ShardedOperator::from_fastsum(&parent, spec);
+        let mut rng = crate::data::rng::Rng::seed_from(8);
+        let x = rng.normal_vec(60);
+        let err = rel_l2_error(&sharded.apply_vec(&x), &parent.apply_vec(&x));
+        assert!(err < 1e-12, "rel err {err}");
+    }
+
+    #[test]
+    fn executor_records_per_shard_timings() {
+        let points = spiral_points(70, 9);
+        let sharded = ShardedOperator::adjacency(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup1(),
+            ShardSpec::contiguous(70, 3),
+        );
+        let t0 = sharded.timings();
+        assert!(t0.get("shard-geometry").is_some());
+        assert!(t0.get("spread").is_none());
+        let x = vec![1.0; 70];
+        let mut y = vec![0.0; 70];
+        sharded.apply(&x, &mut y);
+        let t = sharded.timings();
+        assert!(t.get("spread").is_some());
+        assert!(t.get("forward").is_some());
+        assert!(t.get("reduce").is_some());
+        assert!(t.get("multiply").is_some());
+        assert_eq!(sharded.executor().columns_applied(), 1);
+        for s in 0..3 {
+            assert!(sharded.executor().shard_timings(s).get("spread").is_some(), "shard {s}");
+        }
+    }
+}

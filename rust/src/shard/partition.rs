@@ -1,0 +1,384 @@
+//! Point-domain partitioners producing explicit [`ShardSpec`]s.
+//!
+//! The fastsum factorisation never materialises the kernel matrix, so
+//! the *target-point domain* can be partitioned freely: the adjoint
+//! spread and the forward gather split cleanly per point subset, while
+//! the frequency-domain kernel multiply stays shared. A [`ShardSpec`]
+//! records that split explicitly — which global point indices each
+//! shard owns — so it can be validated, serialised (see
+//! [`crate::shard::exec`]) and, later, broadcast to remote workers.
+//!
+//! Three strategies:
+//!
+//! * [`ShardSpec::contiguous`] — near-equal contiguous index ranges
+//!   (identity layout; shard 0 of 1 is exactly the unsharded order);
+//! * [`ShardSpec::strided`] — round-robin `i mod s` (best static load
+//!   balance when point cost varies smoothly along the index order);
+//! * [`ShardSpec::morton`] — Morton / Z-order space-filling tiling:
+//!   points are sorted by interleaved quantised coordinates and split
+//!   contiguously, so each shard owns a spatially compact tile and its
+//!   spread touches a compact subgrid region (cache locality now,
+//!   subgrid-exchange economy in a multi-process future).
+
+use crate::data::rng::Rng;
+
+/// How to split a point cloud into shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    Contiguous,
+    Strided,
+    Morton,
+}
+
+impl PartitionStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Contiguous => "contiguous",
+            PartitionStrategy::Strided => "strided",
+            PartitionStrategy::Morton => "morton",
+        }
+    }
+}
+
+impl std::str::FromStr for PartitionStrategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "contiguous" => Ok(PartitionStrategy::Contiguous),
+            "strided" => Ok(PartitionStrategy::Strided),
+            "morton" | "z-order" => Ok(PartitionStrategy::Morton),
+            other => anyhow::bail!("unknown partition strategy '{other}' (contiguous|strided|morton)"),
+        }
+    }
+}
+
+/// An explicit partition of `n` points into shards: `shards[s]` lists
+/// the global point indices shard `s` owns. Every index in `0..n`
+/// appears in exactly one shard (enforced by the constructors and by
+/// [`ShardSpec::from_assignments`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub(crate) n: usize,
+    pub(crate) shards: Vec<Vec<usize>>,
+}
+
+/// Why an explicit assignment is not a valid partition.
+#[derive(Debug, thiserror::Error)]
+pub enum PartitionError {
+    #[error("point {index} assigned to {count} shards (must be exactly one)")]
+    NotAPartition { index: usize, count: usize },
+    #[error("assignment index {index} out of range for n = {n}")]
+    OutOfRange { index: usize, n: usize },
+    #[error("a shard spec needs at least one shard")]
+    NoShards,
+}
+
+impl ShardSpec {
+    /// Near-equal contiguous index ranges. With `shards = 1` this is
+    /// the identity layout — sharded execution visits points in
+    /// exactly the unsharded order (the bit-for-bit anchor).
+    pub fn contiguous(n: usize, shards: usize) -> ShardSpec {
+        assert!(n >= 1, "empty point cloud");
+        let out = split_ranges(n, shards.clamp(1, n))
+            .map(|r| r.collect())
+            .collect();
+        ShardSpec { n, shards: out }
+    }
+
+    /// Round-robin assignment `i → i mod s`.
+    pub fn strided(n: usize, shards: usize) -> ShardSpec {
+        assert!(n >= 1, "empty point cloud");
+        let s = shards.clamp(1, n);
+        let mut out = vec![Vec::with_capacity(n.div_ceil(s)); s];
+        for i in 0..n {
+            out[i % s].push(i);
+        }
+        ShardSpec { n, shards: out }
+    }
+
+    /// Morton (Z-order) space-filling tiler: sort by interleaved
+    /// quantised coordinates, split the sorted order contiguously, then
+    /// sort each shard's indices ascending (the *set* carries the
+    /// locality; ascending order keeps `shards = 1` the identity).
+    /// `points` is row-major n×d in any coordinate scale.
+    pub fn morton(points: &[f64], d: usize, shards: usize) -> ShardSpec {
+        assert!(d >= 1 && !points.is_empty() && points.len() % d == 0);
+        let n = points.len() / d;
+        let order = morton_order(points, d, n);
+        let out = split_ranges(n, shards.clamp(1, n))
+            .map(|r| {
+                let mut idx: Vec<usize> = order[r].to_vec();
+                idx.sort_unstable();
+                idx
+            })
+            .collect();
+        ShardSpec { n, shards: out }
+    }
+
+    /// Dispatch on a [`PartitionStrategy`].
+    pub fn build(strategy: PartitionStrategy, points: &[f64], d: usize, shards: usize) -> ShardSpec {
+        assert!(d >= 1 && points.len() % d == 0);
+        let n = points.len() / d;
+        match strategy {
+            PartitionStrategy::Contiguous => ShardSpec::contiguous(n, shards),
+            PartitionStrategy::Strided => ShardSpec::strided(n, shards),
+            PartitionStrategy::Morton => ShardSpec::morton(points, d, shards),
+        }
+    }
+
+    /// Validate an explicit assignment (e.g. decoded from JSON or
+    /// produced by an external placement policy). Empty shards are
+    /// permitted; every index in `0..n` must appear exactly once.
+    pub fn from_assignments(
+        n: usize,
+        shards: Vec<Vec<usize>>,
+    ) -> Result<ShardSpec, PartitionError> {
+        if shards.is_empty() {
+            return Err(PartitionError::NoShards);
+        }
+        let mut count = vec![0usize; n];
+        for sh in &shards {
+            for &i in sh {
+                if i >= n {
+                    return Err(PartitionError::OutOfRange { index: i, n });
+                }
+                count[i] += 1;
+            }
+        }
+        for (index, &c) in count.iter().enumerate() {
+            if c != 1 {
+                return Err(PartitionError::NotAPartition { index, count: c });
+            }
+        }
+        Ok(ShardSpec { n, shards })
+    }
+
+    /// Uniform random assignment — the adversarial case the equivalence
+    /// tests sweep (no locality, arbitrary imbalance, possibly empty
+    /// shards).
+    pub fn random(n: usize, shards: usize, rng: &mut Rng) -> ShardSpec {
+        assert!(n >= 1 && shards >= 1);
+        let mut out = vec![Vec::new(); shards];
+        for i in 0..n {
+            let s = rng.below(shards);
+            out[s].push(i);
+        }
+        ShardSpec { n, shards: out }
+    }
+
+    /// Total number of points partitioned.
+    pub fn num_points(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Global point indices of shard `s`.
+    pub fn shard(&self, s: usize) -> &[usize] {
+        &self.shards[s]
+    }
+
+    pub fn shards(&self) -> &[Vec<usize>] {
+        &self.shards
+    }
+
+    /// Largest shard size over smallest non-empty shard size — 1.0 is
+    /// perfectly balanced (capacity-planning metric).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.shards.iter().map(Vec::len).max().unwrap_or(0);
+        let min = self.shards.iter().map(Vec::len).filter(|&l| l > 0).min().unwrap_or(0);
+        if min == 0 {
+            return f64::INFINITY;
+        }
+        max as f64 / min as f64
+    }
+}
+
+/// Near-equal contiguous ranges covering `0..n`: the first `n % s`
+/// shards get one extra element. The single balance policy behind both
+/// [`ShardSpec::contiguous`] and [`ShardSpec::morton`].
+fn split_ranges(n: usize, s: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
+    let base = n / s;
+    let rem = n % s;
+    let mut start = 0;
+    (0..s).map(move |i| {
+        let len = base + usize::from(i < rem);
+        let r = start..start + len;
+        start += len;
+        r
+    })
+}
+
+/// Indices of `points` sorted by Morton code (ties broken by index, so
+/// the order is fully deterministic).
+fn morton_order(points: &[f64], d: usize, n: usize) -> Vec<usize> {
+    let mut lo = vec![f64::INFINITY; d];
+    let mut hi = vec![f64::NEG_INFINITY; d];
+    for i in 0..n {
+        for a in 0..d {
+            let v = points[i * d + a];
+            lo[a] = lo[a].min(v);
+            hi[a] = hi[a].max(v);
+        }
+    }
+    // bits·d ≤ 63 keeps the interleaved code inside a u64.
+    let bits = (63 / d).clamp(1, 16);
+    let levels = ((1u64 << bits) - 1) as f64;
+    let scale: Vec<f64> = (0..d)
+        .map(|a| {
+            let span = hi[a] - lo[a];
+            if span > 0.0 {
+                levels / span
+            } else {
+                0.0 // degenerate axis: all points share the cell
+            }
+        })
+        .collect();
+    let mut keyed: Vec<(u64, usize)> = (0..n)
+        .map(|i| {
+            let mut code = 0u64;
+            for b in (0..bits).rev() {
+                for a in 0..d {
+                    let q = ((points[i * d + a] - lo[a]) * scale[a]) as u64;
+                    code = (code << 1) | ((q >> b) & 1);
+                }
+            }
+            (code, i)
+        })
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_partition(spec: &ShardSpec) {
+        let mut seen = vec![false; spec.num_points()];
+        for sh in spec.shards() {
+            for &i in sh {
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some index unassigned");
+    }
+
+    #[test]
+    fn contiguous_covers_and_balances() {
+        for (n, s) in [(10, 3), (7, 7), (100, 1), (5, 9)] {
+            let spec = ShardSpec::contiguous(n, s);
+            assert_partition(&spec);
+            assert_eq!(spec.num_shards(), s.min(n));
+            let lens: Vec<usize> = spec.shards().iter().map(Vec::len).collect();
+            let max = *lens.iter().max().unwrap();
+            let min = *lens.iter().min().unwrap();
+            assert!(max - min <= 1, "unbalanced: {lens:?}");
+        }
+        // shards = 1 is the identity layout.
+        let spec = ShardSpec::contiguous(6, 1);
+        assert_eq!(spec.shard(0), &[0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn strided_round_robin() {
+        let spec = ShardSpec::strided(7, 3);
+        assert_partition(&spec);
+        assert_eq!(spec.shard(0), &[0, 3, 6]);
+        assert_eq!(spec.shard(1), &[1, 4]);
+        assert_eq!(spec.shard(2), &[2, 5]);
+    }
+
+    #[test]
+    fn morton_partitions_and_tiles() {
+        // Four spatial clusters at the corners of a square: a 4-way
+        // Morton split must put each cluster in one shard.
+        let mut pts = Vec::new();
+        let centers = [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0), (10.0, 10.0)];
+        let mut rng = Rng::seed_from(1);
+        for &(cx, cy) in &centers {
+            for _ in 0..8 {
+                pts.push(cx + 0.1 * rng.normal());
+                pts.push(cy + 0.1 * rng.normal());
+            }
+        }
+        let spec = ShardSpec::morton(&pts, 2, 4);
+        assert_partition(&spec);
+        assert_eq!(spec.num_shards(), 4);
+        for sh in spec.shards() {
+            assert_eq!(sh.len(), 8);
+            // All members of one shard belong to the same cluster
+            // (cluster id = index / 8 by construction).
+            let cluster = sh[0] / 8;
+            assert!(sh.iter().all(|&i| i / 8 == cluster), "shard mixes clusters: {sh:?}");
+        }
+        // shards = 1 is the identity layout (indices sorted ascending).
+        let one = ShardSpec::morton(&pts, 2, 1);
+        assert_eq!(one.shard(0), (0..32).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn morton_handles_degenerate_axis() {
+        // All y equal: must still produce a valid partition.
+        let pts = [0.0, 5.0, 1.0, 5.0, 2.0, 5.0, 3.0, 5.0];
+        let spec = ShardSpec::morton(&pts, 2, 2);
+        assert_partition(&spec);
+    }
+
+    #[test]
+    fn from_assignments_validates() {
+        assert!(ShardSpec::from_assignments(3, vec![vec![0, 2], vec![1]]).is_ok());
+        // Empty shard permitted.
+        assert!(ShardSpec::from_assignments(2, vec![vec![0, 1], vec![]]).is_ok());
+        assert!(matches!(
+            ShardSpec::from_assignments(3, vec![vec![0, 2], vec![0, 1]]),
+            Err(PartitionError::NotAPartition { index: 0, count: 2 })
+        ));
+        assert!(matches!(
+            ShardSpec::from_assignments(2, vec![vec![0, 1, 5]]),
+            Err(PartitionError::OutOfRange { index: 5, n: 2 })
+        ));
+        assert!(matches!(
+            ShardSpec::from_assignments(2, vec![vec![0]]),
+            Err(PartitionError::NotAPartition { index: 1, count: 0 })
+        ));
+        assert!(matches!(
+            ShardSpec::from_assignments(0, Vec::new()),
+            Err(PartitionError::NoShards)
+        ));
+    }
+
+    #[test]
+    fn random_is_a_partition() {
+        let mut rng = Rng::seed_from(9);
+        for _ in 0..10 {
+            let n = 1 + rng.below(50);
+            let s = 1 + rng.below(8);
+            let spec = ShardSpec::random(n, s, &mut rng);
+            assert_partition(&spec);
+            assert_eq!(spec.num_shards(), s);
+        }
+    }
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!("morton".parse::<PartitionStrategy>().unwrap(), PartitionStrategy::Morton);
+        assert_eq!(
+            "contiguous".parse::<PartitionStrategy>().unwrap(),
+            PartitionStrategy::Contiguous
+        );
+        assert_eq!("strided".parse::<PartitionStrategy>().unwrap(), PartitionStrategy::Strided);
+        assert!("bogus".parse::<PartitionStrategy>().is_err());
+        assert_eq!(PartitionStrategy::Morton.name(), "morton");
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let spec = ShardSpec::from_assignments(4, vec![vec![0, 1, 2], vec![3]]).unwrap();
+        assert!((spec.imbalance() - 3.0).abs() < 1e-12);
+        assert_eq!(ShardSpec::contiguous(8, 4).imbalance(), 1.0);
+    }
+}

@@ -7,6 +7,7 @@ pub mod csv;
 pub mod json;
 pub mod pool;
 pub mod proptest;
+pub mod reduce;
 pub mod stats;
 pub mod timer;
 

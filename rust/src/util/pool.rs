@@ -17,14 +17,25 @@ use std::sync::Mutex;
 pub struct BufferPool<T: Clone + Send> {
     len: usize,
     fill: T,
+    /// Retention cap: `put` drops buffers once this many are idle
+    /// (`usize::MAX` = keep everything).
+    max_idle: usize,
     free: Mutex<Vec<Vec<T>>>,
 }
 
 impl<T: Clone + Send> BufferPool<T> {
     /// Pool handing out buffers of length `len`, freshly allocated ones
-    /// initialised to `fill`.
+    /// initialised to `fill`. Retains every returned buffer.
     pub fn new(len: usize, fill: T) -> BufferPool<T> {
-        BufferPool { len, fill, free: Mutex::new(Vec::new()) }
+        BufferPool { len, fill, max_idle: usize::MAX, free: Mutex::new(Vec::new()) }
+    }
+
+    /// Pool that parks at most `max_idle` idle buffers; surplus `put`s
+    /// deallocate instead. Use when peak concurrency can briefly exceed
+    /// the steady-state working set (e.g. chunk-parallel spread grids)
+    /// and retaining the burst forever would pin large memory.
+    pub fn bounded(len: usize, fill: T, max_idle: usize) -> BufferPool<T> {
+        BufferPool { len, fill, max_idle, free: Mutex::new(Vec::new()) }
     }
 
     /// Length of every buffer this pool hands out.
@@ -47,10 +58,14 @@ impl<T: Clone + Send> BufferPool<T> {
     }
 
     /// Return a buffer to the pool. Buffers of the wrong length are
-    /// dropped (defensive: they could only come from caller misuse).
+    /// dropped (defensive: they could only come from caller misuse),
+    /// as are buffers beyond the retention cap.
     pub fn put(&self, buf: Vec<T>) {
         if buf.len() == self.len {
-            self.free.lock().unwrap().push(buf);
+            let mut free = self.free.lock().unwrap();
+            if free.len() < self.max_idle {
+                free.push(buf);
+            }
         }
     }
 
@@ -81,6 +96,16 @@ mod tests {
         assert_eq!(b[0], 7.0);
         assert_eq!(pool.idle(), 0);
         pool.put(b);
+    }
+
+    #[test]
+    fn bounded_pool_caps_idle_buffers() {
+        let pool = BufferPool::bounded(2, 0.0f64, 2);
+        let bufs: Vec<_> = (0..4).map(|_| pool.take()).collect();
+        for b in bufs {
+            pool.put(b);
+        }
+        assert_eq!(pool.idle(), 2, "surplus buffers must be dropped, not parked");
     }
 
     #[test]

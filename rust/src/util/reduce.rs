@@ -1,0 +1,102 @@
+//! Deterministic pairwise tree reduction over equally-sized buffers.
+//!
+//! Both the parallel spread inside one NFFT adjoint (per-chunk subgrid
+//! accumulation, `nfft::NfftPlan`) and the shard execution layer
+//! (per-shard subgrid reduction, `shard::ShardedOperator`) need the
+//! same primitive: sum k buffers element-wise into one. A naive
+//! "accumulate in arrival order" reduction would make results depend on
+//! thread scheduling; the tree here combines buffers in a FIXED pairing
+//! order (`buf[i] += buf[i + ⌈len/2⌉]`, halving each round), so the
+//! floating-point result is a pure function of the inputs — runs are
+//! reproducible, and every code path that shares the primitive stays
+//! bit-identical to every other.
+
+use rayon::prelude::*;
+
+/// Element-wise pairwise tree reduction: after the call, `bufs[0]`
+/// holds the sum of all buffers. The pairing order is fixed (index
+/// `i` absorbs index `i + ⌈len/2⌉` each round, rounds run until one
+/// buffer remains), so the result is deterministic regardless of how
+/// the per-pair additions are scheduled across threads. Contents of
+/// `bufs[1..]` are unspecified afterwards; callers recycle them.
+///
+/// All buffers must have equal length. An empty `bufs` is a no-op.
+pub fn tree_reduce_in_place<T>(bufs: &mut [Vec<T>])
+where
+    T: Copy + std::ops::AddAssign + Send + Sync,
+{
+    if let Some(first) = bufs.first() {
+        let len0 = first.len();
+        assert!(bufs.iter().all(|b| b.len() == len0), "tree_reduce: unequal buffer lengths");
+    }
+    let mut len = bufs.len();
+    while len > 1 {
+        let half = len.div_ceil(2);
+        let (dst, src) = bufs[..len].split_at_mut(half);
+        // src has len − half ≤ half entries; zip stops there, leaving
+        // dst[len − half..] untouched this round (they are absorbed in
+        // a later round).
+        dst.par_iter_mut().zip(src.par_iter()).for_each(|(d, s)| {
+            for (a, &b) in d.iter_mut().zip(s.iter()) {
+                *a += b;
+            }
+        });
+        len = half;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_of(bufs: &[Vec<f64>]) -> Vec<f64> {
+        let mut acc = vec![0.0; bufs[0].len()];
+        for b in bufs {
+            for (a, &v) in acc.iter_mut().zip(b) {
+                *a += v;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn reduces_to_elementwise_sum() {
+        for k in 1..9usize {
+            let mut bufs: Vec<Vec<f64>> =
+                (0..k).map(|c| (0..5).map(|i| (c * 10 + i) as f64).collect()).collect();
+            let want = sum_of(&bufs);
+            tree_reduce_in_place(&mut bufs);
+            // Integer-valued f64 sums are exact, so order cannot matter.
+            assert_eq!(bufs[0], want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mk = || -> Vec<Vec<f64>> {
+            let mut rng = crate::data::rng::Rng::seed_from(42);
+            (0..7).map(|_| rng.normal_vec(64)).collect()
+        };
+        let mut a = mk();
+        let mut b = mk();
+        tree_reduce_in_place(&mut a);
+        tree_reduce_in_place(&mut b);
+        assert_eq!(a[0], b[0], "tree reduction must be bit-deterministic");
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut none: Vec<Vec<f64>> = Vec::new();
+        tree_reduce_in_place(&mut none);
+        let mut one = vec![vec![1.0, 2.0]];
+        tree_reduce_in_place(&mut one);
+        assert_eq!(one[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unequal buffer lengths")]
+    fn rejects_mismatched_lengths() {
+        let mut bufs = vec![vec![0.0; 3], vec![0.0; 4]];
+        tree_reduce_in_place(&mut bufs);
+    }
+}
