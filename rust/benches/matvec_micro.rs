@@ -1,17 +1,20 @@
 //! `cargo bench --bench matvec_micro [-- --sizes 2000,10000]`
-//! Microbenchmarks of the request-path hot spot: one fastsum matvec
-//! per engine/setup with the per-phase breakdown used by the §Perf
-//! iteration log (the one-time `geometry` phase shows the plan/geometry
-//! split), the block-vs-loop comparison for k ∈ {1, 8, 16, 32}, the
-//! sharded-execution sweep over shard counts and partition strategies,
-//! plus the PJRT artifact engine when available. Emits
-//! `BENCH_matvec.json` and `BENCH_shard.json` so the perf trajectory is
-//! tracked across PRs.
+//! Microbenchmarks of the request-path hot spot: the FFT-stage
+//! comparison (seed-style serial complex vs parallel complex vs
+//! batched real/half-spectrum, 1-d/2-d/3-d grids → `BENCH_fft.json`),
+//! one fastsum matvec per engine/setup with the per-phase breakdown
+//! used by the §Perf iteration log (the one-time `geometry` phase shows
+//! the plan/geometry split), the block-vs-loop comparison for
+//! k ∈ {1, 8, 16, 32}, the sharded-execution sweep over shard counts
+//! and partition strategies, plus the PJRT artifact engine when
+//! available. Emits `BENCH_fft.json`, `BENCH_matvec.json` and
+//! `BENCH_shard.json` so the perf trajectory is tracked across PRs.
 
 use nfft_krylov::bench_harness::harness::{bench, BenchArgs};
 use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
 use nfft_krylov::data::rng::Rng;
 use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel};
+use nfft_krylov::fft::{Complex, NdFftPlan, RealNdFftPlan};
 use nfft_krylov::graph::LinearOperator;
 use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
 use nfft_krylov::util::json::Json;
@@ -19,6 +22,7 @@ use std::collections::BTreeMap;
 
 const BLOCK_SIZES: [usize; 4] = [1, 8, 16, 32];
 const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const FFT_BLOCK_SIZES: [usize; 3] = [1, 8, 16];
 
 fn json_row(entries: &[(&str, Json)]) -> Json {
     let mut obj = BTreeMap::new();
@@ -28,8 +32,84 @@ fn json_row(entries: &[(&str, Json)]) -> Json {
     Json::Obj(obj)
 }
 
+/// FFT-stage micro: forward+backward over k oversampled grids —
+/// (a) the seed execution profile (fully complex, one grid at a time,
+/// single-threaded), (b) the rebuilt parallel complex engine, (c) the
+/// batched real/half-spectrum engine (the fastsum default). The 2-d
+/// row at k ≥ 8 is the acceptance-criteria configuration.
+fn bench_fft_stage(seed: u64) -> Vec<Json> {
+    let mut rows = Vec::new();
+    // Oversampled-grid shapes (2N per axis): 1-d N=32768, 2-d N=64²,
+    // 3-d N=32³ — the setup2/setup3 regimes of the paper.
+    let shapes: [&[usize]; 3] = [&[65536], &[128, 128], &[64, 64, 64]];
+    println!("== FFT stage: complex-serial (seed) vs complex-parallel vs real-batched ==");
+    for shape in shapes {
+        let total: usize = shape.iter().product();
+        let cplan = NdFftPlan::new(shape);
+        let rplan = RealNdFftPlan::new(shape);
+        let th = rplan.total_half();
+        for &k in &FFT_BLOCK_SIZES {
+            let mut rng = Rng::seed_from(seed ^ ((total as u64) << 4) ^ k as u64);
+            let base: Vec<f64> = (0..total * k).map(|_| rng.normal()).collect();
+            let mut cbuf: Vec<Complex> =
+                base.iter().map(|&v| Complex::from_re(v)).collect();
+            let label = format!("{shape:?} k={k}");
+            let s_seed = bench(&format!("fft complex serial {label}"), 1, 3, || {
+                for g in cbuf.chunks_mut(total) {
+                    cplan.forward_serial(g);
+                    cplan.backward_unnormalized_serial(g);
+                }
+            });
+            let s_cplx = bench(&format!("fft complex batch  {label}"), 1, 3, || {
+                cplan.forward_batch(&mut cbuf);
+                cplan.backward_unnormalized_batch(&mut cbuf);
+            });
+            let mut rbuf = base.clone();
+            let mut specs = vec![Complex::ZERO; th * k];
+            let s_real = bench(&format!("fft real batch     {label}"), 1, 3, || {
+                rplan.forward_batch(&rbuf, &mut specs);
+                rplan.backward_unnormalized_batch(&mut specs, &mut rbuf);
+            });
+            let speedup_seed = s_seed.min / s_real.min.max(1e-12);
+            let speedup_cplx = s_cplx.min / s_real.min.max(1e-12);
+            println!(
+                "    {label}: seed {:.4}s  cplx-par {:.4}s  real-batch {:.4}s  -> {speedup_seed:.2}x vs seed, {speedup_cplx:.2}x vs parallel complex",
+                s_seed.min, s_cplx.min, s_real.min
+            );
+            rows.push(json_row(&[
+                ("dims", Json::Num(shape.len() as f64)),
+                (
+                    "shape",
+                    Json::Arr(shape.iter().map(|&s| Json::Num(s as f64)).collect()),
+                ),
+                ("k", Json::Num(k as f64)),
+                ("complex_serial_min_s", Json::Num(s_seed.min)),
+                ("complex_parallel_min_s", Json::Num(s_cplx.min)),
+                ("real_batch_min_s", Json::Num(s_real.min)),
+                ("speedup_vs_seed", Json::Num(speedup_seed)),
+                ("speedup_vs_parallel_complex", Json::Num(speedup_cplx)),
+            ]));
+        }
+    }
+    rows
+}
+
 fn main() {
     let args = BenchArgs::from_env();
+
+    let fft_rows = bench_fft_stage(args.seed);
+    let mut fft_root = BTreeMap::new();
+    fft_root.insert("bench".to_string(), Json::Str("matvec_micro/fft_stage".into()));
+    fft_root.insert(
+        "block_sizes".to_string(),
+        Json::Arr(FFT_BLOCK_SIZES.iter().map(|&k| Json::Num(k as f64)).collect()),
+    );
+    fft_root.insert("results".to_string(), Json::Arr(fft_rows));
+    let text = Json::Obj(fft_root).to_string();
+    match std::fs::write("BENCH_fft.json", &text) {
+        Ok(()) => println!("wrote BENCH_fft.json"),
+        Err(e) => eprintln!("could not write BENCH_fft.json: {e}"),
+    }
     let sizes = args.sizes.unwrap_or_else(|| vec![2000, 10000, 50000]);
     let mut rows: Vec<Json> = Vec::new();
     let mut shard_rows: Vec<Json> = Vec::new();

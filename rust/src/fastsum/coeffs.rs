@@ -50,7 +50,30 @@ pub fn kernel_coefficients(reg: &RegularizedKernel, n_band: &[usize]) -> Vec<f64
     let plan = NdFftPlan::new(n_band);
     plan.forward(&mut samples);
     let scale = 1.0 / total as f64;
-    samples.iter().map(|v| v.re * scale).collect()
+    let mut out: Vec<f64> = samples.iter().map(|v| v.re * scale).collect();
+    // K_R is even, so mathematically b̂_l = b̂_{−l}; the FFT leaves
+    // roundoff-level asymmetry. Symmetrise so the Hermitian
+    // half-spectrum path and the complex oracle agree to machine
+    // precision (−N/2 components are self-mirrored and untouched).
+    let mut strides = vec![1usize; d];
+    for a in (0..d.saturating_sub(1)).rev() {
+        strides[a] = strides[a + 1] * n_band[a + 1];
+    }
+    for flat in 0..total {
+        let mut rem = flat;
+        let mut mir = 0usize;
+        for a in 0..d {
+            let pos = rem / strides[a];
+            rem %= strides[a];
+            mir += ((n_band[a] - pos) % n_band[a]) * strides[a];
+        }
+        if mir > flat {
+            let avg = 0.5 * (out[flat] + out[mir]);
+            out[flat] = avg;
+            out[mir] = avg;
+        }
+    }
+    out
 }
 
 /// Max |K(y) − K_RF(y)| over random samples in the ball ‖y‖ ≤ 1/2 − ε_B

@@ -7,6 +7,15 @@
 //!    kernel `K_R` → `f̂_l`;
 //! 3. forward NFFT → `f(v_j) ≈ (W̃x)_j`.
 //!
+//! Execution note: `x` is real and `b̂` real-symmetric, so the default
+//! engine runs the whole pipeline on the real/half-spectrum FFT path —
+//! real spread grid, one r2c transform, the three frequency-domain
+//! steps fused into a single precomputed real diagonal `W` over the
+//! half spectrum, one c2r transform, real gather
+//! ([`operator::FastsumOperator::apply_w_tilde`]); the fully-complex
+//! pipeline above survives as the oracle
+//! ([`operator::FastsumOperator::apply_w_tilde_complex`]).
+//!
 //! `b̂` comes from sampling `K_R` on an N^d grid and one FFT (eq. 3.4);
 //! `K_R` is the two-point-Taylor regularisation of the radial kernel
 //! ([`regularize`]) built on truncated-Taylor (jet) automatic

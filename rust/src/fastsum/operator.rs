@@ -90,17 +90,31 @@ pub struct FastsumOperator {
     /// `Arc`-shared so shards never duplicate the regularised-kernel
     /// table.
     b_hat: Arc<Vec<f64>>,
+    /// The real-symmetric fused frequency-stage multiplier of the
+    /// half-spectrum path: `W(q) = (dec²·b̂)(q)/2 + (dec²·b̂)(−q)/2`
+    /// over the half spectrum ([`NfftPlan::build_half_multiplier`]).
+    /// One `W ⊙ S` replaces extract → b̂-multiply → embed. `Arc`-shared
+    /// with the shard layer.
+    half_mult: Arc<Vec<f64>>,
     /// K_orig(d) = out_scale · K_scaled(ρ d).
     out_scale: f64,
     rho: f64,
-    /// Pooled oversampled-grid scratch (one per in-flight column).
+    /// Pooled complex oversampled-grid scratch (oracle path).
     grids: BufferPool<Complex>,
-    /// Pooled frequency-coefficient scratch (single-vector path).
+    /// Pooled frequency-coefficient scratch (oracle path).
     freqs: BufferPool<Complex>,
-    /// Cached k·num_freq slab for the block path (resized on demand;
-    /// the lock is held only to swap the buffer in/out, and a
-    /// concurrent block call simply falls back to a fresh allocation).
-    block_freq_slab: Mutex<Vec<Complex>>,
+    /// Pooled REAL oversampled-grid scratch (default path; half the
+    /// memory of the complex grids).
+    rgrids: BufferPool<f64>,
+    /// Pooled half-spectrum scratch (default path).
+    specs: BufferPool<Complex>,
+    /// Cached k·grid_len real-grid slab for the batched block path
+    /// (resized on demand; the lock is held only to swap the buffer
+    /// in/out, and a concurrent block call falls back to a fresh
+    /// allocation).
+    block_rgrid_slab: Mutex<Vec<f64>>,
+    /// Cached k·half_spectrum_len slab for the batched block path.
+    block_spec_slab: Mutex<Vec<Complex>>,
     /// Accumulated per-phase timings (geometry/adjoint/multiply/...).
     timings: Mutex<PhaseTimings>,
 }
@@ -158,6 +172,9 @@ impl FastsumOperator {
         timings.add("geometry", t_geo.elapsed_secs());
         let grids = plan.grid_pool();
         let freqs = BufferPool::new(plan.num_freq(), Complex::ZERO);
+        let rgrids = plan.real_grid_pool();
+        let specs = plan.half_spectrum_pool();
+        let half_mult = Arc::new(plan.build_half_multiplier(&b_hat));
         FastsumOperator {
             n,
             d,
@@ -167,11 +184,15 @@ impl FastsumOperator {
             plan: Arc::new(plan),
             geometry,
             b_hat: Arc::new(b_hat),
+            half_mult,
             out_scale,
             rho,
             grids,
             freqs,
-            block_freq_slab: Mutex::new(Vec::new()),
+            rgrids,
+            specs,
+            block_rgrid_slab: Mutex::new(Vec::new()),
+            block_spec_slab: Mutex::new(Vec::new()),
             timings: Mutex::new(timings),
         }
     }
@@ -215,6 +236,13 @@ impl FastsumOperator {
         &self.b_hat
     }
 
+    /// The fused real-symmetric frequency-stage multiplier over the
+    /// half spectrum (`Arc`-shared with the shard layer, which runs the
+    /// same `W ⊙ S` in its shared frequency stage).
+    pub fn half_multiplier(&self) -> &Arc<Vec<f64>> {
+        &self.half_mult
+    }
+
     /// Factor mapping rescaled-kernel outputs back to original kernel
     /// scale (see [`Kernel::output_scale`]).
     pub fn output_scale(&self) -> f64 {
@@ -226,35 +254,41 @@ impl FastsumOperator {
         self.kernel.at_zero()
     }
 
-    /// `y = W̃ x` (Alg 3.1): includes the K(0) diagonal.
+    /// `y = W̃ x` (Alg 3.1): includes the K(0) diagonal. Runs the REAL
+    /// half-spectrum path: spread onto a real grid, r2c FFT, one fused
+    /// `W ⊙ S` multiply (both deconvolutions + kernel table), c2r FFT,
+    /// real gather. Matches [`Self::apply_w_tilde_complex`] — the
+    /// fully-complex oracle — to roundoff, at roughly half the FFT
+    /// arithmetic and grid memory.
     pub fn apply_w_tilde(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
-        let mut grid = self.grids.take();
-        let mut freq = self.freqs.take();
+        let mut rgrid = self.rgrids.take();
+        let mut spec = self.specs.take();
         let t_all = Timer::start();
-        // Step 1: adjoint NFFT (geometry reused, not recomputed).
+        // Step 1: real adjoint half — spread + r2c forward.
         let t = Timer::start();
-        self.plan.adjoint_with_geometry(&self.geometry, x, &mut grid, &mut freq);
+        self.plan.spread_real_with_geometry(&self.geometry, x, &mut rgrid);
+        self.plan.forward_half_spectrum(&rgrid, &mut spec);
         let t_adj = t.elapsed_secs();
-        // Step 2: multiply by b̂.
+        // Step 2: fused frequency stage over the half spectrum.
         let t = Timer::start();
-        for (f, &b) in freq.iter_mut().zip(self.b_hat.iter()) {
-            *f = f.scale(b);
+        for (s, &w) in spec.iter_mut().zip(self.half_mult.iter()) {
+            *s = s.scale(w);
         }
         let t_mul = t.elapsed_secs();
-        // Step 3: forward NFFT; b̂⊙x̂ is Hermitian so the result is real
-        // up to roundoff — use the real-output fast path.
+        // Step 3: c2r backward + real gather.
         let t = Timer::start();
-        self.plan.forward_real_with_geometry(&self.geometry, &freq, &mut grid, y);
-        let t_fwd = t.elapsed_secs();
+        self.plan.backward_half_spectrum(&mut spec, &mut rgrid);
+        self.plan.gather_real_grid(&self.geometry, &rgrid, y);
         if self.out_scale != 1.0 {
             for yi in y.iter_mut() {
                 *yi *= self.out_scale;
             }
         }
-        self.grids.put(grid);
-        self.freqs.put(freq);
+        let t_fwd = t.elapsed_secs();
+        self.rgrids.put(rgrid);
+        self.specs.put(spec);
         let mut timings = self.timings.lock().unwrap();
         timings.add("adjoint", t_adj);
         timings.add("multiply", t_mul);
@@ -262,10 +296,35 @@ impl FastsumOperator {
         timings.add("total", t_all.elapsed_secs());
     }
 
+    /// `y = W̃ x` over the fully-complex pipeline (adjoint NFFT →
+    /// b̂-multiply → real-output forward NFFT). Kept as the semantic
+    /// oracle for the half-spectrum default; not on the hot path.
+    pub fn apply_w_tilde_complex(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        let mut grid = self.grids.take();
+        let mut freq = self.freqs.take();
+        self.plan.adjoint_with_geometry(&self.geometry, x, &mut grid, &mut freq);
+        for (f, &b) in freq.iter_mut().zip(self.b_hat.iter()) {
+            *f = f.scale(b);
+        }
+        self.plan.forward_real_with_geometry(&self.geometry, &freq, &mut grid, y);
+        if self.out_scale != 1.0 {
+            for yi in y.iter_mut() {
+                *yi *= self.out_scale;
+            }
+        }
+        self.grids.put(grid);
+        self.freqs.put(freq);
+    }
+
     /// `ys = W̃ xs` for k columns stored contiguously (column-major:
-    /// `xs[j*n..(j+1)*n]` is column j). One adjoint/multiply/forward
-    /// pass over the whole block: columns run in parallel against the
-    /// shared geometry, each with pooled scratch.
+    /// `xs[j*n..(j+1)*n]` is column j). Staged batch execution over the
+    /// real path: one spread pass over all columns, ONE batched r2c,
+    /// one fused multiply sweep, ONE batched c2r, one gather pass —
+    /// every stage parallel across columns, twiddle/plan state shared.
+    /// Per-column arithmetic is identical to [`Self::apply_w_tilde`],
+    /// so block and loop results agree bitwise.
     pub fn apply_w_tilde_block(&self, xs: &[f64], ys: &mut [f64]) {
         let n = self.n;
         assert_eq!(xs.len(), ys.len());
@@ -275,34 +334,49 @@ impl FastsumOperator {
             self.apply_w_tilde(xs, ys);
             return;
         }
-        let nf = self.plan.num_freq();
+        let ng = self.plan.grid_len();
+        let nh = self.plan.half_spectrum_len();
         let t_all = Timer::start();
-        // Step 1: batched adjoint NFFT. The k·nf slab is recycled
-        // across calls (steady state allocates nothing); the adjoint
-        // overwrites every element, so stale contents are harmless.
-        let mut freq = std::mem::take(&mut *self.block_freq_slab.lock().unwrap());
-        freq.resize(k * nf, Complex::ZERO);
+        // The slabs are recycled across calls (steady state allocates
+        // nothing); every element is overwritten before being read, so
+        // stale contents are harmless.
+        let mut grids = std::mem::take(&mut *self.block_rgrid_slab.lock().unwrap());
+        grids.resize(k * ng, 0.0);
+        let mut specs = std::mem::take(&mut *self.block_spec_slab.lock().unwrap());
+        specs.resize(k * nh, Complex::ZERO);
+        // Step 1: spread all columns, then one batched r2c pass.
         let t = Timer::start();
-        self.plan.adjoint_block(&self.geometry, xs, &mut freq, &self.grids);
+        self.plan.spread_real_block(&self.geometry, xs, &mut grids);
+        self.plan.forward_half_spectrum_batch(&grids, &mut specs);
         let t_adj = t.elapsed_secs();
-        // Step 2: one Fourier-multiply pass over all k columns.
+        // Step 2: fused frequency stage, columns in parallel.
         let t = Timer::start();
-        freq.par_chunks_mut(nf).for_each(|col| {
-            for (f, &b) in col.iter_mut().zip(self.b_hat.iter()) {
-                *f = f.scale(b);
+        specs.par_chunks_mut(nh).for_each(|col| {
+            for (s, &w) in col.iter_mut().zip(self.half_mult.iter()) {
+                *s = s.scale(w);
             }
         });
         let t_mul = t.elapsed_secs();
-        // Step 3: batched real-output forward NFFT.
+        // Step 3: one batched c2r pass, then gather all columns.
         let t = Timer::start();
-        self.plan.forward_real_block(&self.geometry, &freq, ys, &self.grids);
-        let t_fwd = t.elapsed_secs();
+        self.plan.backward_half_spectrum_batch(&mut specs, &mut grids);
+        self.plan.gather_real_block(&self.geometry, &grids, ys);
         if self.out_scale != 1.0 {
             for yi in ys.iter_mut() {
                 *yi *= self.out_scale;
             }
         }
-        *self.block_freq_slab.lock().unwrap() = freq;
+        let t_fwd = t.elapsed_secs();
+        // Park the slabs for the next block apply (steady-state Krylov
+        // iterations reuse them allocation-free), but never pin more
+        // than a bounded amount of idle memory once a burst is over.
+        const MAX_RETAINED_SLAB_BYTES: usize = 256 << 20;
+        if grids.capacity() * std::mem::size_of::<f64>() <= MAX_RETAINED_SLAB_BYTES {
+            *self.block_rgrid_slab.lock().unwrap() = grids;
+        }
+        if specs.capacity() * std::mem::size_of::<Complex>() <= MAX_RETAINED_SLAB_BYTES {
+            *self.block_spec_slab.lock().unwrap() = specs;
+        }
         let mut timings = self.timings.lock().unwrap();
         timings.add("adjoint", t_adj);
         timings.add("multiply", t_mul);
@@ -313,6 +387,15 @@ impl FastsumOperator {
     /// `y = W x = W̃ x − K(0) x` (zero-diagonal adjacency).
     pub fn apply_w(&self, x: &[f64], y: &mut [f64]) {
         self.apply_w_tilde(x, y);
+        let k0 = self.k_zero();
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi -= k0 * xi;
+        }
+    }
+
+    /// `y = W x` over the fully-complex oracle pipeline.
+    pub fn apply_w_complex(&self, x: &[f64], y: &mut [f64]) {
+        self.apply_w_tilde_complex(x, y);
         let k0 = self.k_zero();
         for (yi, xi) in y.iter_mut().zip(x) {
             *yi -= k0 * xi;
@@ -570,6 +653,59 @@ mod tests {
         fast.apply_block(&xs[..n], &mut one);
         fast.apply(&xs[..n], &mut single);
         assert_eq!(one, single);
+    }
+
+    #[test]
+    fn real_path_matches_complex_oracle() {
+        // The default half-spectrum pipeline must agree with the
+        // fully-complex oracle to roundoff on every setup.
+        for (params, seed) in [
+            (FastsumParams::setup1(), 21u64),
+            (FastsumParams::setup2(), 22),
+            (FastsumParams::setup3(), 23),
+        ] {
+            let points = spiral_like_points(90, seed);
+            let fast = FastsumOperator::new(
+                &points,
+                3,
+                Kernel::Gaussian { sigma: 3.5 },
+                params,
+            );
+            let mut rng = crate::data::rng::Rng::seed_from(seed + 100);
+            let x = rng.normal_vec(90);
+            let mut real = vec![0.0; 90];
+            let mut oracle = vec![0.0; 90];
+            fast.apply_w(&x, &mut real);
+            fast.apply_w_complex(&x, &mut oracle);
+            let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+            let err = max_abs_diff(&real, &oracle);
+            assert!(err < 1e-12 * scale, "real vs complex diverged: {err}");
+        }
+    }
+
+    #[test]
+    fn real_path_matches_complex_oracle_2d() {
+        let mut rng = crate::data::rng::Rng::seed_from(31);
+        let ds = crate::data::crescent::generate(
+            100,
+            crate::data::crescent::CrescentParams::default(),
+            &mut rng,
+        );
+        let fast = FastsumOperator::new(
+            &ds.points,
+            2,
+            Kernel::Gaussian { sigma: 4.0 },
+            FastsumParams::setup2(),
+        );
+        let n = ds.points.len() / 2;
+        let x = rng.normal_vec(n);
+        let mut real = vec![0.0; n];
+        let mut oracle = vec![0.0; n];
+        fast.apply_w_tilde(&x, &mut real);
+        fast.apply_w_tilde_complex(&x, &mut oracle);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+        let err = max_abs_diff(&real, &oracle);
+        assert!(err < 1e-12 * scale, "2-d real vs complex diverged: {err}");
     }
 
     #[test]

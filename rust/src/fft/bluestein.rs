@@ -5,6 +5,7 @@
 
 use super::complex::Complex;
 use super::plan::FftPlan;
+use crate::util::pool::BufferPool;
 use std::sync::Arc;
 
 pub struct Bluestein {
@@ -17,6 +18,9 @@ pub struct Bluestein {
     filter_fwd: Vec<Complex>,
     /// Same for the inverse transform.
     filter_inv: Vec<Complex>,
+    /// Pooled length-`m` convolution scratch (one per in-flight call;
+    /// steady state allocates nothing).
+    scratch: BufferPool<Complex>,
 }
 
 impl Bluestein {
@@ -49,13 +53,17 @@ impl Bluestein {
         // the chirp itself (sign flip of the exponent).
         let filter_fwd = build_filter(true);
         let filter_inv = build_filter(false);
-        Bluestein { n, m, inner, chirp, filter_fwd, filter_inv }
+        let scratch = BufferPool::bounded(m, Complex::ZERO, rayon::current_num_threads());
+        Bluestein { n, m, inner, chirp, filter_fwd, filter_inv, scratch }
     }
 
     /// Unnormalised transform with sign -1 (forward=true) or +1.
     pub fn transform(&self, x: &mut [Complex], forward: bool) {
         assert_eq!(x.len(), self.n);
-        let mut a = vec![Complex::ZERO; self.m];
+        let mut a = self.scratch.take();
+        for v in a[self.n..].iter_mut() {
+            *v = Complex::ZERO;
+        }
         for j in 0..self.n {
             let c = if forward { self.chirp[j] } else { self.chirp[j].conj() };
             a[j] = x[j] * c;
@@ -70,6 +78,7 @@ impl Bluestein {
             let c = if forward { self.chirp[k] } else { self.chirp[k].conj() };
             x[k] = a[k] * c;
         }
+        self.scratch.put(a);
     }
 }
 
@@ -97,6 +106,56 @@ mod tests {
                 assert!(err < 1e-9 * n as f64, "n={n} fwd={fwd} err={err}");
             }
         }
+    }
+
+    #[test]
+    fn length_one_is_identity() {
+        let b = Bluestein::new(1);
+        let mut x = vec![Complex::new(2.5, -1.25)];
+        b.transform(&mut x, true);
+        assert!((x[0] - Complex::new(2.5, -1.25)).abs() < 1e-15);
+        b.transform(&mut x, false);
+        assert!((x[0] - Complex::new(2.5, -1.25)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn large_prime_lengths_match_naive() {
+        for &n in &[251usize, 997] {
+            let mut rng = crate::data::rng::Rng::seed_from(n as u64);
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let want = naive_dft(&x, -1.0);
+            let b = Bluestein::new(n);
+            let mut got = x.clone();
+            b.transform(&mut got, true);
+            let err =
+                got.iter().zip(&want).map(|(g, w)| (*g - *w).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-8 * n as f64, "n={n} err={err}");
+            // Round trip through the unnormalised pair.
+            b.transform(&mut got, false);
+            let err = got
+                .iter()
+                .zip(&x)
+                .map(|(g, w)| (g.scale(1.0 / n as f64) - *w).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-8, "roundtrip n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn pooled_scratch_is_recycled() {
+        let b = Bluestein::new(5);
+        let mut x: Vec<Complex> =
+            (0..5).map(|i| Complex::new(i as f64, -(i as f64))).collect();
+        let first = {
+            let mut y = x.clone();
+            b.transform(&mut y, true);
+            y
+        };
+        // Second call reuses the (dirty) pooled buffer — results must not
+        // depend on scratch contents.
+        b.transform(&mut x, true);
+        assert_eq!(x, first);
     }
 
     #[test]

@@ -1,28 +1,45 @@
-//! From-scratch complex FFT substrate.
+//! From-scratch FFT substrate — the batched, parallel, real-aware core
+//! under the NFFT pipeline (and therefore under every fastsum matvec
+//! and every Krylov iteration on the request path).
 //!
-//! The NFFT engine (and therefore every fastsum matvec on the request
-//! path) runs on these transforms, so they are written plan-based with
-//! precomputed twiddle factors:
+//! Three execution paths, all plan-based with precomputed twiddles:
 //!
-//! * [`complex::Complex`] — minimal complex arithmetic;
-//! * [`plan::FftPlan`] — iterative radix-2 decimation-in-time for power
-//!   of-two lengths (the NFFT oversampled grid is always a power of
-//!   two) with [`bluestein`] fallback for arbitrary lengths;
-//! * [`ndfft`] — d-dimensional transforms by axis sweeps over a strided
-//!   buffer.
+//! * **Planned** — [`plan::FftPlan`]: merged radix-4 decimation-in-time
+//!   for power-of-two lengths (two radix-2 stages per memory pass,
+//!   bit-identical arithmetic to the plain radix-2 schedule) with
+//!   [`bluestein`] fallback for arbitrary lengths; per-plan scratch is
+//!   pooled ([`crate::util::BufferPool`]), so steady-state transforms
+//!   allocate nothing.
+//! * **Batched / blocked** — [`ndfft::NdFftPlan`]: d-dimensional
+//!   transforms by axis sweeps; strided axes gather tiles of lines into
+//!   contiguous panels inside pooled scratch and every sweep is
+//!   parallel (rayon) above a size threshold, serial below it — both
+//!   bit-identical. `forward_batch`/`inverse_batch`/
+//!   `backward_unnormalized_batch` run k stacked grids against one
+//!   plan, and [`plan::FftPlan::forward_many`] is the matching
+//!   many-lines 1-d entry point.
+//! * **Real / half-spectrum** — [`real::RealFftPlan`] and
+//!   [`real::RealNdFftPlan`]: r2c forward for real grids and c2r
+//!   backward for Hermitian spectra at ~half the arithmetic and half
+//!   the spectrum memory; the default path under the NFFT adjoint
+//!   (real spread grid) and forward (real output), with the complex
+//!   path retained as the test oracle.
 //!
 //! Conventions: `forward` computes `X_k = Σ_j x_j e^{-2πi jk/n}`
 //! (unnormalised); `inverse` computes `x_j = (1/n) Σ_k X_k e^{+2πi jk/n}`
-//! so that `inverse(forward(x)) = x`.
+//! so that `inverse(forward(x)) = x`; `backward_unnormalized` omits the
+//! `1/n` (the NFFT folds normalisation into its window deconvolution).
 
 pub mod bluestein;
 pub mod complex;
 pub mod ndfft;
 pub mod plan;
+pub mod real;
 
 pub use complex::Complex;
 pub use ndfft::NdFftPlan;
 pub use plan::FftPlan;
+pub use real::{RealFftPlan, RealNdFftPlan};
 
 /// Naive O(n²) DFT — the correctness oracle for all FFT tests.
 pub fn naive_dft(x: &[Complex], sign: f64) -> Vec<Complex> {

@@ -1,0 +1,473 @@
+//! Real-input / half-spectrum FFT path.
+//!
+//! The NFFT adjoint spreads a **real** vector onto the oversampled
+//! grid, and the forward transform consumes a Hermitian-symmetric
+//! spectrum whose inverse is real — so the fully-complex transforms
+//! the seed ran did twice the necessary work. This module supplies the
+//! half-spectrum pair:
+//!
+//! * [`RealFftPlan`] — 1-d r2c forward / c2r backward for even lengths
+//!   via one complex FFT of half the length plus an O(n) twiddle
+//!   untangling pass (the classic packing identity);
+//! * [`RealNdFftPlan`] — d-dimensional transforms of a real row-major
+//!   grid: r2c along the contiguous last axis (rows in parallel), then
+//!   ordinary complex passes along the outer axes of the half-width
+//!   spectrum, sharing the blocked/pooled axis machinery of
+//!   [`super::ndfft`].
+//!
+//! Conventions match the complex plans exactly: `forward` is the
+//! unnormalised sign −1 DFT restricted to the non-negative half of the
+//! last axis (`H = n_last/2 + 1` bins); `backward_unnormalized`
+//! reconstructs `n_last · 2 ·…` — precisely `Π n_a` times the
+//! normalised inverse, i.e. what [`super::NdFftPlan::backward_unnormalized`]
+//! produces — so the two engines are drop-in interchangeable where the
+//! data is known real/Hermitian.
+//!
+//! Half-spectrum layout: row-major `[n_0, …, n_{d−2}, H]`; the implied
+//! full spectrum satisfies `X(g) = conj(X(−g mod n))` with the mirror
+//! flipping **every** axis.
+
+use super::complex::Complex;
+use super::ndfft::{strided_axis_pass, Dir, PAR_MIN_ELEMS};
+use super::plan::FftPlan;
+use crate::util::pool::BufferPool;
+use rayon::prelude::*;
+use std::sync::Arc;
+
+/// Reusable 1-d r2c/c2r plan for one even length.
+pub struct RealFftPlan {
+    n: usize,
+    /// n / 2 — the length of the underlying complex plan.
+    m: usize,
+    inner: Arc<FftPlan>,
+    /// Twiddles e^{−2πi k/n}, k = 0..=m.
+    tw: Vec<Complex>,
+    /// Pooled length-m packing scratch for the forward direction.
+    scratch: BufferPool<Complex>,
+}
+
+impl RealFftPlan {
+    pub fn new(n: usize) -> RealFftPlan {
+        assert!(n >= 2 && n % 2 == 0, "r2c length must be even, got {n}");
+        let m = n / 2;
+        let inner = FftPlan::new(m);
+        let tw: Vec<Complex> = (0..=m)
+            .map(|k| Complex::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
+            .collect();
+        let scratch = BufferPool::bounded(m, Complex::ZERO, rayon::current_num_threads());
+        RealFftPlan { n, m, inner, tw, scratch }
+    }
+
+    /// Real-signal length n.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Half-spectrum length n/2 + 1.
+    pub fn half_len(&self) -> usize {
+        self.m + 1
+    }
+
+    /// r2c forward: `dst[k] = Σ_j src[j] e^{−2πi jk/n}` for
+    /// k = 0..=n/2. The negative frequencies are implied by
+    /// `X(n−k) = conj(X(k))`.
+    pub fn forward(&self, src: &[f64], dst: &mut [Complex]) {
+        assert_eq!(src.len(), self.n, "r2c input length mismatch");
+        assert_eq!(dst.len(), self.m + 1, "r2c output length mismatch");
+        let m = self.m;
+        let mut z = self.scratch.take();
+        for (j, v) in z.iter_mut().enumerate() {
+            *v = Complex::new(src[2 * j], src[2 * j + 1]);
+        }
+        self.inner.forward(&mut z);
+        // Untangle: X_k = E_k + w_k O_k, X_{m−k} = conj(E_k − w_k O_k),
+        // with E/O the even/odd-sample spectra recovered from Z.
+        let mut k = 0usize;
+        while 2 * k <= m {
+            let zk = z[k % m];
+            let zmk = z[(m - k) % m];
+            let e = (zk + zmk.conj()).scale(0.5);
+            let o = (zk - zmk.conj()) * Complex::new(0.0, -0.5);
+            let t = self.tw[k] * o;
+            dst[k] = e + t;
+            dst[m - k] = (e - t).conj();
+            k += 1;
+        }
+        self.scratch.put(z);
+    }
+
+    /// c2r unnormalised backward: `dst[j] = Σ_{k=0}^{n−1} X_k e^{+2πi jk/n}`
+    /// with the implied Hermitian extension of `spec` — n times the
+    /// normalised inverse, matching
+    /// [`FftPlan::backward_unnormalized`]. The first n/2 entries of
+    /// `spec` are clobbered (used as packing scratch).
+    pub fn backward_unnormalized(&self, spec: &mut [Complex], dst: &mut [f64]) {
+        assert_eq!(spec.len(), self.m + 1, "c2r input length mismatch");
+        assert_eq!(dst.len(), self.n, "c2r output length mismatch");
+        let m = self.m;
+        // Re-pack pairwise into 2·Z (the factor 2, with the inner
+        // unnormalised backward's m, totals the required n).
+        let x0 = spec[0];
+        let xm = spec[m];
+        spec[0] = (x0 + xm.conj()) + Complex::I * (x0 - xm.conj());
+        let mut k = 1usize;
+        while 2 * k <= m {
+            let p = spec[k];
+            let q = spec[m - k];
+            let ctw = self.tw[k].conj();
+            let zk = (p + q.conj()) + Complex::I * (ctw * (p - q.conj()));
+            let zmk = (q + p.conj()) - Complex::I * (self.tw[k] * (q - p.conj()));
+            spec[k] = zk;
+            if k != m - k {
+                spec[m - k] = zmk;
+            }
+            k += 1;
+        }
+        self.inner.backward_unnormalized(&mut spec[..m]);
+        for (j, v) in spec[..m].iter().enumerate() {
+            dst[2 * j] = v.re;
+            dst[2 * j + 1] = v.im;
+        }
+    }
+}
+
+/// d-dimensional real-grid FFT plan with a half-width last axis.
+pub struct RealNdFftPlan {
+    /// Full real-grid shape (last axis even).
+    shape: Vec<usize>,
+    /// Half-spectrum shape `[n_0, …, n_{d−2}, n_last/2 + 1]`.
+    hshape: Vec<usize>,
+    /// Row-major strides of the half-spectrum grid.
+    hstrides: Vec<usize>,
+    /// Complex plans for the outer axes (0..d−1).
+    outer_plans: Vec<Arc<FftPlan>>,
+    r1d: RealFftPlan,
+    total_real: usize,
+    total_half: usize,
+    /// Pooled half-grid scratch for the strided outer-axis passes.
+    scratch: BufferPool<Complex>,
+}
+
+impl RealNdFftPlan {
+    pub fn new(shape: &[usize]) -> RealNdFftPlan {
+        assert!(!shape.is_empty());
+        assert!(shape.iter().all(|&s| s >= 1));
+        let d = shape.len();
+        let n_last = shape[d - 1];
+        let r1d = RealFftPlan::new(n_last);
+        let mut hshape = shape.to_vec();
+        hshape[d - 1] = r1d.half_len();
+        let mut hstrides = vec![1usize; d];
+        for k in (0..d.saturating_sub(1)).rev() {
+            hstrides[k] = hstrides[k + 1] * hshape[k + 1];
+        }
+        let outer_plans: Vec<Arc<FftPlan>> =
+            shape[..d - 1].iter().map(|&s| FftPlan::new(s)).collect();
+        let total_real: usize = shape.iter().product();
+        let total_half: usize = hshape.iter().product();
+        let scratch =
+            BufferPool::bounded(total_half, Complex::ZERO, rayon::current_num_threads());
+        RealNdFftPlan {
+            shape: shape.to_vec(),
+            hshape,
+            hstrides,
+            outer_plans,
+            r1d,
+            total_real,
+            total_half,
+            scratch,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn half_shape(&self) -> &[usize] {
+        &self.hshape
+    }
+
+    /// Row-major strides of the half-spectrum grid (the layout the NFFT
+    /// half-multiplier tables are built against).
+    pub fn half_strides(&self) -> &[usize] {
+        &self.hstrides
+    }
+
+    /// Real-grid element count.
+    pub fn total(&self) -> usize {
+        self.total_real
+    }
+
+    /// Half-spectrum element count.
+    pub fn total_half(&self) -> usize {
+        self.total_half
+    }
+
+    /// r2c forward of a real row-major grid into the half spectrum.
+    pub fn forward(&self, src: &[f64], dst: &mut [Complex]) {
+        assert_eq!(src.len(), self.total_real, "real grid size mismatch");
+        assert_eq!(dst.len(), self.total_half, "half spectrum size mismatch");
+        let par = self.total_real >= PAR_MIN_ELEMS && rayon::current_num_threads() > 1;
+        let n_last = self.shape[self.shape.len() - 1];
+        let h = self.r1d.half_len();
+        if par {
+            let min_rows = (PAR_MIN_ELEMS / n_last).max(1);
+            dst.par_chunks_mut(h)
+                .zip(src.par_chunks(n_last))
+                .with_min_len(min_rows)
+                .for_each(|(drow, srow)| self.r1d.forward(srow, drow));
+        } else {
+            for (drow, srow) in dst.chunks_mut(h).zip(src.chunks(n_last)) {
+                self.r1d.forward(srow, drow);
+            }
+        }
+        for (a, plan) in self.outer_plans.iter().enumerate() {
+            let len = self.hshape[a];
+            if len == 1 {
+                continue;
+            }
+            strided_axis_pass(dst, len, self.hstrides[a], plan, Dir::Forward, &self.scratch, par);
+        }
+    }
+
+    /// c2r unnormalised backward of a Hermitian half spectrum into a
+    /// real grid: `Π n_a` times the normalised inverse (what the
+    /// complex [`super::NdFftPlan::backward_unnormalized`] produces on
+    /// the implied full spectrum). Clobbers `spec`.
+    pub fn backward_unnormalized(&self, spec: &mut [Complex], dst: &mut [f64]) {
+        assert_eq!(spec.len(), self.total_half, "half spectrum size mismatch");
+        assert_eq!(dst.len(), self.total_real, "real grid size mismatch");
+        let par = self.total_real >= PAR_MIN_ELEMS && rayon::current_num_threads() > 1;
+        for (a, plan) in self.outer_plans.iter().enumerate() {
+            let len = self.hshape[a];
+            if len == 1 {
+                continue;
+            }
+            strided_axis_pass(
+                spec,
+                len,
+                self.hstrides[a],
+                plan,
+                Dir::BackwardUnnormalized,
+                &self.scratch,
+                par,
+            );
+        }
+        let n_last = self.shape[self.shape.len() - 1];
+        let h = self.r1d.half_len();
+        if par {
+            let min_rows = (PAR_MIN_ELEMS / n_last).max(1);
+            spec.par_chunks_mut(h)
+                .zip(dst.par_chunks_mut(n_last))
+                .with_min_len(min_rows)
+                .for_each(|(srow, drow)| self.r1d.backward_unnormalized(srow, drow));
+        } else {
+            for (srow, drow) in spec.chunks_mut(h).zip(dst.chunks_mut(n_last)) {
+                self.r1d.backward_unnormalized(srow, drow);
+            }
+        }
+    }
+
+    /// Batched r2c forward over k stacked real grids, grids in parallel.
+    /// Bit-identical to a loop of [`Self::forward`] calls.
+    pub fn forward_batch(&self, srcs: &[f64], dsts: &mut [Complex]) {
+        assert!(
+            !srcs.is_empty() && srcs.len() % self.total_real == 0,
+            "batch length not a multiple of the real grid size"
+        );
+        let k = srcs.len() / self.total_real;
+        assert_eq!(dsts.len(), k * self.total_half, "half-spectrum batch size mismatch");
+        if k == 1 {
+            self.forward(srcs, dsts);
+            return;
+        }
+        dsts.par_chunks_mut(self.total_half)
+            .zip(srcs.par_chunks(self.total_real))
+            .for_each(|(d, s)| self.forward(s, d));
+    }
+
+    /// Batched c2r backward over k stacked half spectra.
+    pub fn backward_unnormalized_batch(&self, specs: &mut [Complex], dsts: &mut [f64]) {
+        assert!(
+            !specs.is_empty() && specs.len() % self.total_half == 0,
+            "batch length not a multiple of the half-spectrum size"
+        );
+        let k = specs.len() / self.total_half;
+        assert_eq!(dsts.len(), k * self.total_real, "real-grid batch size mismatch");
+        if k == 1 {
+            self.backward_unnormalized(specs, dsts);
+            return;
+        }
+        specs
+            .par_chunks_mut(self.total_half)
+            .zip(dsts.par_chunks_mut(self.total_real))
+            .for_each(|(s, d)| self.backward_unnormalized(s, d));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::ndfft::{naive_ndft, NdFftPlan};
+    use crate::fft::naive_dft;
+
+    fn rand_real(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn r2c_matches_naive_half_spectrum() {
+        // Even lengths incl. n = 2 and half-lengths that hit Bluestein.
+        for &n in &[2usize, 4, 6, 8, 10, 16, 24, 50, 256] {
+            let x = rand_real(n, n as u64);
+            let xc: Vec<Complex> = x.iter().map(|&v| Complex::from_re(v)).collect();
+            let want = naive_dft(&xc, -1.0);
+            let plan = RealFftPlan::new(n);
+            let mut got = vec![Complex::ZERO; plan.half_len()];
+            plan.forward(&x, &mut got);
+            for k in 0..=n / 2 {
+                assert!(
+                    (got[k] - want[k]).abs() < 1e-9 * (n as f64),
+                    "n={n} k={k}: {:?} vs {:?}",
+                    got[k],
+                    want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn c2r_roundtrip_is_n_times_input() {
+        for &n in &[2usize, 6, 16, 34, 128] {
+            let x = rand_real(n, 100 + n as u64);
+            let plan = RealFftPlan::new(n);
+            let mut spec = vec![Complex::ZERO; plan.half_len()];
+            plan.forward(&x, &mut spec);
+            let mut y = vec![0.0; n];
+            plan.backward_unnormalized(&mut spec, &mut y);
+            for j in 0..n {
+                assert!(
+                    (y[j] - n as f64 * x[j]).abs() < 1e-9 * (n as f64),
+                    "n={n} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nd_forward_matches_complex_plan_on_real_input() {
+        for shape in [vec![16usize], vec![8, 16], vec![4, 6, 8]] {
+            let total: usize = shape.iter().product();
+            let x = rand_real(total, 7);
+            let rplan = RealNdFftPlan::new(&shape);
+            let mut half = vec![Complex::ZERO; rplan.total_half()];
+            rplan.forward(&x, &mut half);
+            let cplan = NdFftPlan::new(&shape);
+            let mut full: Vec<Complex> = x.iter().map(|&v| Complex::from_re(v)).collect();
+            cplan.forward(&mut full);
+            // Stored half positions must match the full spectrum.
+            let h = *rplan.half_shape().last().unwrap();
+            let n_last = *shape.last().unwrap();
+            let rows = total / n_last;
+            for row in 0..rows {
+                for k in 0..h {
+                    let a = half[row * h + k];
+                    let b = full[row * n_last + k];
+                    assert!(
+                        (a - b).abs() < 1e-9 * (total as f64),
+                        "shape {shape:?} row {row} bin {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nd_roundtrip_is_total_times_input() {
+        for shape in [vec![32usize], vec![8, 12], vec![4, 4, 8]] {
+            let total: usize = shape.iter().product();
+            let x = rand_real(total, 9);
+            let rplan = RealNdFftPlan::new(&shape);
+            let mut spec = vec![Complex::ZERO; rplan.total_half()];
+            rplan.forward(&x, &mut spec);
+            let mut y = vec![0.0; total];
+            rplan.backward_unnormalized(&mut spec, &mut y);
+            for j in 0..total {
+                assert!(
+                    (y[j] - total as f64 * x[j]).abs() < 1e-8 * (total as f64),
+                    "shape {shape:?} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nd_backward_matches_complex_backward_real_part() {
+        // Random REAL grid -> forward -> backward must equal the complex
+        // engine's forward -> backward real part (both unnormalised).
+        let shape = [6usize, 8];
+        let total = 48;
+        let x = rand_real(total, 11);
+        let rplan = RealNdFftPlan::new(&shape);
+        let mut spec = vec![Complex::ZERO; rplan.total_half()];
+        rplan.forward(&x, &mut spec);
+        let mut got = vec![0.0; total];
+        rplan.backward_unnormalized(&mut spec, &mut got);
+        let cplan = NdFftPlan::new(&shape);
+        let mut full: Vec<Complex> = x.iter().map(|&v| Complex::from_re(v)).collect();
+        cplan.forward(&mut full);
+        cplan.backward_unnormalized(&mut full);
+        for j in 0..total {
+            assert!((got[j] - full[j].re).abs() < 1e-8 * total as f64, "j={j}");
+        }
+    }
+
+    #[test]
+    fn nd_matches_naive_oracle() {
+        let shape = [4usize, 10];
+        let total = 40;
+        let x = rand_real(total, 13);
+        let xc: Vec<Complex> = x.iter().map(|&v| Complex::from_re(v)).collect();
+        let want = naive_ndft(&xc, &shape, -1.0);
+        let rplan = RealNdFftPlan::new(&shape);
+        let mut half = vec![Complex::ZERO; rplan.total_half()];
+        rplan.forward(&x, &mut half);
+        let h = *rplan.half_shape().last().unwrap();
+        for row in 0..4 {
+            for k in 0..h {
+                let a = half[row * h + k];
+                let b = want[row * 10 + k];
+                assert!((a - b).abs() < 1e-8, "row {row} bin {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_bit_identical_to_loop() {
+        let shape = [8usize, 8];
+        let total = 64;
+        let k = 4;
+        let xs = rand_real(total * k, 15);
+        let rplan = RealNdFftPlan::new(&shape);
+        let th = rplan.total_half();
+        let mut batch = vec![Complex::ZERO; th * k];
+        rplan.forward_batch(&xs, &mut batch);
+        let mut looped = vec![Complex::ZERO; th * k];
+        for (s, d) in xs.chunks(total).zip(looped.chunks_mut(th)) {
+            rplan.forward(s, d);
+        }
+        assert_eq!(batch, looped);
+        let mut yb = vec![0.0; total * k];
+        let mut yl = vec![0.0; total * k];
+        rplan.backward_unnormalized_batch(&mut batch, &mut yb);
+        for (s, d) in looped.chunks_mut(th).zip(yl.chunks_mut(total)) {
+            rplan.backward_unnormalized(s, d);
+        }
+        assert_eq!(yb, yl);
+    }
+}

@@ -8,8 +8,12 @@
 //!
 //! The crate is organised bottom-up:
 //!
-//! * [`fft`] — from-scratch complex FFT substrate (radix-2 / mixed-radix /
-//!   Bluestein) used by the native NFFT engine.
+//! * [`fft`] — from-scratch FFT substrate (merged radix-4 / Bluestein)
+//!   used by the native NFFT engine: blocked, pooled-scratch,
+//!   rayon-parallel axis passes, `*_batch` entry points over stacked
+//!   grids, and a real/half-spectrum path ([`fft::RealNdFftPlan`]) that
+//!   is the default under the fastsum pipeline (complex path retained
+//!   as the test oracle).
 //! * [`nfft`] — nonequispaced fast Fourier transform (forward + adjoint)
 //!   with Kaiser-Bessel / Gaussian windows. The plan is split into the
 //!   immutable transform ([`nfft::NfftPlan`]) and a per-point-cloud

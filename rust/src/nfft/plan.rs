@@ -30,7 +30,7 @@
 
 use super::geometry::NfftGeometry;
 use super::window::{Window, WindowKind};
-use crate::fft::{Complex, NdFftPlan};
+use crate::fft::{Complex, NdFftPlan, RealNdFftPlan};
 use crate::util::pool::BufferPool;
 use rayon::prelude::*;
 
@@ -44,6 +44,10 @@ pub struct NfftPlan {
     strides: Vec<usize>,
     windows: Vec<Window>,
     fft: NdFftPlan,
+    /// Real/half-spectrum transform pair over the same grid — the
+    /// default execution path (the spread grid is real; the forward
+    /// spectrum is Hermitian). The complex `fft` stays as the oracle.
+    rfft: RealNdFftPlan,
     /// Per-axis deconvolution factors in mod-N layout:
     /// `dec[a][pos] = 1 / (n_os_a · φ̂_a(l))` with `pos = l mod N_a`.
     /// (The global 1/n_os^d of the adjoint and the 1/n_os^d of the
@@ -51,9 +55,14 @@ pub struct NfftPlan {
     deconv: Vec<Vec<f64>>,
     total_freq: usize,
     total_grid: usize,
-    /// Subgrid scratch for the chunk-parallel spread (one grid per
-    /// active chunk; recycled across applications).
+    /// Half-spectrum element count (last axis truncated to n_os/2 + 1).
+    total_half_grid: usize,
+    /// Subgrid scratch for the chunk-parallel complex spread (one grid
+    /// per active chunk; recycled across applications).
     spread_scratch: BufferPool<Complex>,
+    /// Subgrid scratch for the chunk-parallel REAL spread (default
+    /// path; half the memory of the complex one).
+    spread_scratch_real: BufferPool<f64>,
 }
 
 impl NfftPlan {
@@ -80,6 +89,7 @@ impl NfftPlan {
             strides[a] = strides[a + 1] * n_os[a + 1];
         }
         let fft = NdFftPlan::new(&n_os);
+        let rfft = RealNdFftPlan::new(&n_os);
         let deconv: Vec<Vec<f64>> = (0..d)
             .map(|a| {
                 let na = n_band[a];
@@ -94,12 +104,15 @@ impl NfftPlan {
             .collect();
         let total_freq = n_band.iter().product();
         let total_grid = n_os.iter().product();
+        let total_half_grid = rfft.total_half();
         // Retention capped at the thread count: a burst of concurrent
         // chunked spreads (parallel block columns) may briefly allocate
         // more subgrids, but only a steady-state working set stays
         // parked (grids can be tens of MB at setup3 scale).
         let spread_scratch =
             BufferPool::bounded(total_grid, Complex::ZERO, rayon::current_num_threads());
+        let spread_scratch_real =
+            BufferPool::bounded(total_grid, 0.0f64, rayon::current_num_threads());
         NfftPlan {
             d,
             n_band: n_band.to_vec(),
@@ -107,10 +120,13 @@ impl NfftPlan {
             strides,
             windows,
             fft,
+            rfft,
             deconv,
             total_freq,
             total_grid,
+            total_half_grid,
             spread_scratch,
+            spread_scratch_real,
         }
     }
 
@@ -139,6 +155,33 @@ impl NfftPlan {
     /// per-column scratch source of the `*_block` entry points.
     pub fn grid_pool(&self) -> BufferPool<Complex> {
         BufferPool::new(self.total_grid, Complex::ZERO)
+    }
+
+    /// Length of the half spectrum of the oversampled grid (last axis
+    /// truncated to `n_os/2 + 1` bins).
+    pub fn half_spectrum_len(&self) -> usize {
+        self.total_half_grid
+    }
+
+    /// Real oversampled-grid scratch (the default spread/gather grid —
+    /// half the memory of the complex one).
+    pub fn alloc_real_grid(&self) -> Vec<f64> {
+        vec![0.0; self.total_grid]
+    }
+
+    /// Pool of real oversampled grids.
+    pub fn real_grid_pool(&self) -> BufferPool<f64> {
+        BufferPool::new(self.total_grid, 0.0)
+    }
+
+    /// Half-spectrum scratch buffer.
+    pub fn alloc_half_spectrum(&self) -> Vec<Complex> {
+        vec![Complex::ZERO; self.total_half_grid]
+    }
+
+    /// Pool of half-spectrum buffers.
+    pub fn half_spectrum_pool(&self) -> BufferPool<Complex> {
+        BufferPool::new(self.total_half_grid, Complex::ZERO)
     }
 
     /// Precompute the window footprint table (start indices + window
@@ -231,6 +274,213 @@ impl NfftPlan {
         assert_eq!(out.len(), self.total_freq);
         self.fft.forward(grid);
         self.extract_deconvolved(grid, out);
+    }
+
+    // ------------------------------------------------------------------
+    // Real / half-spectrum execution path (the default under fastsum and
+    // the shard layer; the complex path above remains the test oracle).
+    //
+    // The adjoint input vector is real, so the spread grid is real and
+    // its spectrum Hermitian; the forward spectrum `b̂ ⊙ x̂` is Hermitian
+    // (b̂ real-symmetric, x real), so its inverse transform is real. The
+    // whole frequency stage — extract·deconvolve, kernel multiply,
+    // embed·deconvolve — collapses onto the half spectrum as ONE real
+    // diagonal multiply `S ↦ W ⊙ S` with
+    // `W(q) = (w(q) + w(−q)) / 2`, `w = dec² · b̂` at band positions
+    // (see [`Self::build_half_multiplier`]): c2r of `W ⊙ S` equals the
+    // real part the complex pipeline would produce, exactly.
+    // ------------------------------------------------------------------
+
+    /// Real-grid spread: zero `rgrid`, then accumulate the weighted
+    /// window footprints of `geo`'s points. Identical arithmetic to
+    /// [`Self::spread_with_geometry`] restricted to the real part
+    /// (which is all the complex spread ever wrote), at half the
+    /// memory traffic. Chunk-parallel for large clouds with the same
+    /// deterministic tree reduction.
+    pub fn spread_real_with_geometry(&self, geo: &NfftGeometry, x: &[f64], rgrid: &mut [f64]) {
+        self.check_geometry(geo);
+        assert_eq!(x.len(), geo.n);
+        assert_eq!(rgrid.len(), self.total_grid);
+        for g in rgrid.iter_mut() {
+            *g = 0.0;
+        }
+        self.spread_real(geo, x, rgrid);
+    }
+
+    /// Spread k columns into k stacked real grids, columns in parallel.
+    pub fn spread_real_block(&self, geo: &NfftGeometry, xs: &[f64], rgrids: &mut [f64]) {
+        self.check_geometry(geo);
+        let n = geo.n;
+        assert!(n > 0, "empty geometry");
+        assert_eq!(xs.len() % n, 0, "xs not a multiple of n");
+        let k = xs.len() / n;
+        assert_eq!(rgrids.len(), k * self.total_grid, "grid slab size mismatch");
+        rgrids
+            .par_chunks_mut(self.total_grid)
+            .zip(xs.par_chunks(n))
+            .for_each(|(g, x)| self.spread_real_with_geometry(geo, x, g));
+    }
+
+    /// r2c forward of a (spread) real grid into its half spectrum.
+    pub fn forward_half_spectrum(&self, rgrid: &[f64], spec: &mut [Complex]) {
+        self.rfft.forward(rgrid, spec);
+    }
+
+    /// Batched r2c forward over k stacked real grids.
+    pub fn forward_half_spectrum_batch(&self, rgrids: &[f64], specs: &mut [Complex]) {
+        self.rfft.forward_batch(rgrids, specs);
+    }
+
+    /// c2r unnormalised backward of a Hermitian half spectrum into a
+    /// real grid (clobbers `spec`).
+    pub fn backward_half_spectrum(&self, spec: &mut [Complex], rgrid: &mut [f64]) {
+        self.rfft.backward_unnormalized(spec, rgrid);
+    }
+
+    /// Batched c2r backward over k stacked half spectra.
+    pub fn backward_half_spectrum_batch(&self, specs: &mut [Complex], rgrids: &mut [f64]) {
+        self.rfft.backward_unnormalized_batch(specs, rgrids);
+    }
+
+    /// Real-path second half of the adjoint: r2c FFT of the (real)
+    /// spread grid, then deconvolved extraction of the full band from
+    /// the half spectrum (negative last-axis frequencies come from the
+    /// Hermitian mirror). Matches [`Self::adjoint_finalize`] to
+    /// roundoff. `spec` is scratch of `half_spectrum_len()`.
+    pub fn adjoint_finalize_real(
+        &self,
+        rgrid: &[f64],
+        spec: &mut [Complex],
+        out: &mut [Complex],
+    ) {
+        assert_eq!(rgrid.len(), self.total_grid);
+        assert_eq!(spec.len(), self.total_half_grid);
+        assert_eq!(out.len(), self.total_freq);
+        self.rfft.forward(rgrid, spec);
+        let nlast = self.n_band[self.d - 1];
+        let dec_last = &self.deconv[self.d - 1];
+        let spec_r: &[Complex] = spec;
+        self.for_each_band_outer(|base, go, gf, fac| {
+            for (pos, &dl) in dec_last.iter().enumerate().take(nlast / 2) {
+                out[base + pos] = spec_r[go + pos].scale(fac * dl);
+            }
+            for (pos, &dl) in dec_last.iter().enumerate().skip(nlast / 2) {
+                // l = pos − N < 0 lives at grid index n_os + l > n_os/2;
+                // its Hermitian mirror (all axes flipped) is stored.
+                out[base + pos] = spec_r[gf + (nlast - pos)].conj().scale(fac * dl);
+            }
+        });
+    }
+
+    /// The fused frequency-stage multiplier of the real path: a real
+    /// diagonal over the half spectrum combining both deconvolutions
+    /// and the kernel table, `W(q) = Σ_{band l: g(l) ∈ {q, −q}} dec(l)²·b̂_l / 2`.
+    /// Built once per operator; `b_hat` is in the mod-N band layout.
+    pub fn build_half_multiplier(&self, b_hat: &[f64]) -> Vec<f64> {
+        assert_eq!(b_hat.len(), self.total_freq);
+        let nlast = self.n_band[self.d - 1];
+        let dec_last = &self.deconv[self.d - 1];
+        let mut w = vec![0.0; self.total_half_grid];
+        self.for_each_band_outer(|base, go, gf, fac| {
+            for (pos, &dl) in dec_last.iter().enumerate() {
+                let v = 0.5 * fac * fac * dl * dl * b_hat[base + pos];
+                if pos < nlast / 2 {
+                    // l = pos ≥ 0: grid index pos is stored directly.
+                    w[go + pos] += v;
+                    if pos == 0 {
+                        // The l = 0 plane is its own mirror image.
+                        w[gf] += v;
+                    }
+                } else {
+                    // l = pos − N < 0: only the Hermitian mirror
+                    // (grid index N − pos ≤ N/2) is stored.
+                    w[gf + (nlast - pos)] += v;
+                }
+            }
+        });
+        w
+    }
+
+    /// Gather the value at each of `geo`'s points from a REAL grid
+    /// produced by [`Self::backward_half_spectrum`]; per-node loop is
+    /// parallel. Counterpart of [`Self::gather_real_with_geometry`] on
+    /// the real-grid path.
+    pub fn gather_real_grid(&self, geo: &NfftGeometry, rgrid: &[f64], out: &mut [f64]) {
+        self.check_geometry(geo);
+        assert_eq!(out.len(), geo.n);
+        assert_eq!(rgrid.len(), self.total_grid);
+        out.par_iter_mut().enumerate().for_each(|(j, o)| {
+            let (starts, vals) = geo.point(j);
+            *o = self.gather_point_real_f64(starts, vals, rgrid);
+        });
+    }
+
+    /// Gather k columns from k stacked real grids, columns in parallel
+    /// (the per-point arithmetic is identical to
+    /// [`Self::gather_real_grid`], so results match bitwise).
+    pub fn gather_real_block(&self, geo: &NfftGeometry, rgrids: &[f64], out: &mut [f64]) {
+        self.check_geometry(geo);
+        let n = geo.n;
+        assert!(n > 0, "empty geometry");
+        assert_eq!(out.len() % n, 0, "out not a multiple of n");
+        let k = out.len() / n;
+        assert_eq!(rgrids.len(), k * self.total_grid, "grid slab size mismatch");
+        out.par_chunks_mut(n)
+            .zip(rgrids.par_chunks(self.total_grid))
+            .for_each(|(o, g)| {
+                for (j, v) in o.iter_mut().enumerate() {
+                    let (starts, vals) = geo.point(j);
+                    *v = self.gather_point_real_f64(starts, vals, g);
+                }
+            });
+    }
+
+    /// Enumerate the band positions of the OUTER axes (all but the
+    /// last), yielding for each: the flat band offset of its last-axis
+    /// row (`flat · N_last`), the direct and Hermitian-mirror offsets
+    /// into the half-spectrum grid, and the outer deconvolution
+    /// product. `d = 1` yields the single trivial entry.
+    fn for_each_band_outer(&self, mut f: impl FnMut(usize, usize, usize, f64)) {
+        let d = self.d;
+        let hstr = self.rfft.half_strides();
+        let nlast = self.n_band[d - 1];
+        if d == 1 {
+            f(0, 0, 0, 1.0);
+            return;
+        }
+        let mut idx = vec![0usize; d - 1];
+        loop {
+            let mut flat = 0usize;
+            let mut go = 0usize;
+            let mut gf = 0usize;
+            let mut fac = 1.0;
+            for a in 0..d - 1 {
+                let na = self.n_band[a];
+                let pos = idx[a];
+                let l = if pos < na / 2 { pos as i64 } else { pos as i64 - na as i64 };
+                let osa = self.n_os[a];
+                let g = l.rem_euclid(osa as i64) as usize;
+                let gflip = (osa - g) % osa;
+                flat = flat * na + pos;
+                go += g * hstr[a];
+                gf += gflip * hstr[a];
+                fac *= self.deconv[a][pos];
+            }
+            f(flat * nlast, go, gf, fac);
+            // Odometer over the outer axes.
+            let mut a = d - 1;
+            loop {
+                if a == 0 {
+                    return;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < self.n_band[a] {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
     }
 
     /// Batched adjoint over k columns (`xs[j*n..(j+1)*n]` is column j;
@@ -538,6 +788,150 @@ impl NfftPlan {
                 idx[a] = 0;
             }
         }
+    }
+
+    /// Real-grid spread (mirror of [`Self::spread`] over `f64` grids):
+    /// chunk count and reduction order are shared with the complex
+    /// path, so determinism guarantees carry over unchanged.
+    fn spread_real(&self, geo: &NfftGeometry, x: &[f64], grid: &mut [f64]) {
+        let fp = geo.fp;
+        let n = geo.n;
+        let chunks = self.spread_chunks(n, fp);
+        if chunks <= 1 {
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let (starts, vals) = geo.point(i);
+                self.scatter_tensor_real(starts, vals, fp, xi, grid);
+            }
+            return;
+        }
+        let chunk_len = n.div_ceil(chunks);
+        let mut subs: Vec<Vec<f64>> = x
+            .par_chunks(chunk_len)
+            .enumerate()
+            .map(|(c, xc)| {
+                let mut sub = self.spread_scratch_real.take();
+                for g in sub.iter_mut() {
+                    *g = 0.0;
+                }
+                let base = c * chunk_len;
+                for (off, &xi) in xc.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let (starts, vals) = geo.point(base + off);
+                    self.scatter_tensor_real(starts, vals, fp, xi, &mut sub);
+                }
+                sub
+            })
+            .collect();
+        crate::util::reduce::tree_reduce_in_place(&mut subs);
+        for (g, &s) in grid.iter_mut().zip(subs[0].iter()) {
+            *g += s;
+        }
+        for sub in subs {
+            self.spread_scratch_real.put(sub);
+        }
+    }
+
+    /// Tensor-product scatter of one point's footprint onto a REAL
+    /// grid — the same arithmetic [`Self::scatter_tensor`] performs on
+    /// the real components, at half the memory traffic.
+    fn scatter_tensor_real(
+        &self,
+        starts: &[i64],
+        vals: &[f64],
+        fp: usize,
+        weight: f64,
+        grid: &mut [f64],
+    ) {
+        let d = self.d;
+        let last = d - 1;
+        let n_last = self.n_os[last];
+        let mut idx = vec![0usize; d.saturating_sub(1)];
+        loop {
+            let mut base = 0usize;
+            let mut w = weight;
+            for a in 0..last {
+                let u = (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
+                base += u * self.strides[a];
+                w *= vals[a * fp + idx[a]];
+            }
+            if w != 0.0 {
+                let lvals = &vals[last * fp..(last + 1) * fp];
+                let s = starts[last].rem_euclid(n_last as i64) as usize;
+                let first_len = fp.min(n_last - s);
+                let dst = &mut grid[base + s..base + s + first_len];
+                for (g, &lv) in dst.iter_mut().zip(&lvals[..first_len]) {
+                    *g += w * lv;
+                }
+                let dst = &mut grid[base..base + fp - first_len];
+                for (g, &lv) in dst.iter_mut().zip(&lvals[first_len..]) {
+                    *g += w * lv;
+                }
+            }
+            let mut a = last;
+            loop {
+                if a == 0 {
+                    return;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < fp {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+    }
+
+    /// Gather of one point's footprint from a REAL grid.
+    fn gather_point_real_f64(&self, starts: &[i64], vals: &[f64], grid: &[f64]) -> f64 {
+        let d = self.d;
+        let fp = vals.len() / d;
+        let last = d - 1;
+        let n_last = self.n_os[last];
+        let mut acc = 0.0f64;
+        let mut idx = vec![0usize; d.saturating_sub(1)];
+        'outer: loop {
+            let mut base = 0usize;
+            let mut w = 1.0;
+            for a in 0..last {
+                let u = (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
+                base += u * self.strides[a];
+                w *= vals[a * fp + idx[a]];
+            }
+            if w != 0.0 {
+                let lvals = &vals[last * fp..(last + 1) * fp];
+                let s = starts[last].rem_euclid(n_last as i64) as usize;
+                let first_len = fp.min(n_last - s);
+                let mut inner = 0.0f64;
+                let src = &grid[base + s..base + s + first_len];
+                for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
+                    inner += g * lv;
+                }
+                let src = &grid[base..base + fp - first_len];
+                for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
+                    inner += g * lv;
+                }
+                acc += inner * w;
+            }
+            let mut a = last;
+            loop {
+                if a == 0 {
+                    break 'outer;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < fp {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+        acc
     }
 
     /// Real-part gather of one point's footprint:
@@ -997,5 +1391,137 @@ mod tests {
         }
         // The pool retains the per-column scratch for reuse.
         assert!(pool.idle() >= 1);
+    }
+
+    #[test]
+    fn real_spread_matches_complex_spread_bitwise() {
+        for (band, d) in [(vec![16usize], 1), (vec![8, 16], 2), (vec![8, 8, 8], 3)] {
+            let n = 45;
+            let points = rand_points(n, d, 71 + d as u64);
+            let plan = NfftPlan::new(&band, 3, WindowKind::KaiserBessel);
+            let geo = plan.build_geometry(&points);
+            let mut rng = crate::data::rng::Rng::seed_from(72);
+            let x = rng.normal_vec(n);
+            let mut cgrid = plan.alloc_grid();
+            plan.spread_with_geometry(&geo, &x, &mut cgrid);
+            let mut rgrid = plan.alloc_real_grid();
+            plan.spread_real_with_geometry(&geo, &x, &mut rgrid);
+            for (r, c) in rgrid.iter().zip(&cgrid) {
+                assert_eq!(*r, c.re, "real spread must be the complex spread's real part");
+                assert_eq!(c.im, 0.0, "complex spread grid must be purely real");
+            }
+        }
+    }
+
+    #[test]
+    fn adjoint_finalize_real_matches_complex() {
+        for (band, d) in [(vec![16usize], 1), (vec![8, 16], 2), (vec![4, 8, 8], 3)] {
+            let n = 40;
+            let points = rand_points(n, d, 81 + d as u64);
+            let plan = NfftPlan::new(&band, 4, WindowKind::KaiserBessel);
+            let geo = plan.build_geometry(&points);
+            let mut rng = crate::data::rng::Rng::seed_from(82);
+            let x = rng.normal_vec(n);
+            let nf = plan.num_freq();
+            let mut grid = plan.alloc_grid();
+            let mut want = vec![Complex::ZERO; nf];
+            plan.adjoint_with_geometry(&geo, &x, &mut grid, &mut want);
+            let mut rgrid = plan.alloc_real_grid();
+            let mut spec = plan.alloc_half_spectrum();
+            let mut got = vec![Complex::ZERO; nf];
+            plan.spread_real_with_geometry(&geo, &x, &mut rgrid);
+            plan.adjoint_finalize_real(&rgrid, &mut spec, &mut got);
+            let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+            let err = max_err_c(&got, &want);
+            assert!(err < 1e-12 * scale, "band {band:?}: real adjoint diverged: {err}");
+        }
+    }
+
+    #[test]
+    fn fused_half_multiplier_matches_complex_frequency_stage() {
+        // Full pipeline with a synthetic symmetric kernel table b̂:
+        // complex (extract → multiply → embed → IFFT → gather-Re) vs the
+        // real path (r2c → W ⊙ S → c2r → gather).
+        for (band, d) in [(vec![16usize], 1), (vec![8, 8], 2), (vec![4, 4, 8], 3)] {
+            let n = 30;
+            let points = rand_points(n, d, 91 + d as u64);
+            let plan = NfftPlan::new(&band, 4, WindowKind::KaiserBessel);
+            let geo = plan.build_geometry(&points);
+            let mut rng = crate::data::rng::Rng::seed_from(92);
+            let x = rng.normal_vec(n);
+            let nf = plan.num_freq();
+            // Symmetric b̂ (b̂_l = b̂_{−l}), like every even-kernel table.
+            let mut b_hat = vec![0.0; nf];
+            for (flat, b) in b_hat.iter_mut().enumerate() {
+                let l = crate::nfft::unflatten_freq(flat, &band);
+                let r2: f64 = l.iter().map(|&v| (v * v) as f64).sum();
+                *b = (-0.05 * r2).exp();
+            }
+            // Complex oracle pipeline.
+            let mut grid = plan.alloc_grid();
+            let mut freq = vec![Complex::ZERO; nf];
+            plan.adjoint_with_geometry(&geo, &x, &mut grid, &mut freq);
+            for (f, &b) in freq.iter_mut().zip(&b_hat) {
+                *f = f.scale(b);
+            }
+            let mut want = vec![0.0; n];
+            plan.forward_real_with_geometry(&geo, &freq, &mut grid, &mut want);
+            // Real fused pipeline.
+            let w = plan.build_half_multiplier(&b_hat);
+            let mut rgrid = plan.alloc_real_grid();
+            let mut spec = plan.alloc_half_spectrum();
+            plan.spread_real_with_geometry(&geo, &x, &mut rgrid);
+            plan.forward_half_spectrum(&rgrid, &mut spec);
+            for (s, &wv) in spec.iter_mut().zip(&w) {
+                *s = s.scale(wv);
+            }
+            plan.backward_half_spectrum(&mut spec, &mut rgrid);
+            let mut got = vec![0.0; n];
+            plan.gather_real_grid(&geo, &rgrid, &mut got);
+            let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+            let err = got
+                .iter()
+                .zip(&want)
+                .map(|(g, v)| (g - v).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-12 * scale, "band {band:?}: fused path diverged: {err}");
+        }
+    }
+
+    #[test]
+    fn real_block_helpers_bit_identical_to_single() {
+        let n = 30;
+        let d = 2;
+        let k = 4;
+        let points = rand_points(n, d, 95);
+        let band = [8usize, 8];
+        let plan = NfftPlan::new(&band, 4, WindowKind::KaiserBessel);
+        let geo = plan.build_geometry(&points);
+        let mut rng = crate::data::rng::Rng::seed_from(96);
+        let xs = rng.normal_vec(n * k);
+        let ng = plan.grid_len();
+        let mut slab = vec![0.0; k * ng];
+        plan.spread_real_block(&geo, &xs, &mut slab);
+        let mut one = plan.alloc_real_grid();
+        for j in 0..k {
+            plan.spread_real_with_geometry(&geo, &xs[j * n..(j + 1) * n], &mut one);
+            assert_eq!(&slab[j * ng..(j + 1) * ng], one.as_slice(), "spread column {j}");
+        }
+        // Batched half-spectrum transforms round-trip the slab.
+        let th = plan.half_spectrum_len();
+        let mut specs = vec![Complex::ZERO; k * th];
+        plan.forward_half_spectrum_batch(&slab, &mut specs);
+        let mut spec_one = plan.alloc_half_spectrum();
+        plan.forward_half_spectrum(&one, &mut spec_one);
+        assert_eq!(&specs[(k - 1) * th..], spec_one.as_slice());
+        plan.backward_half_spectrum_batch(&mut specs, &mut slab);
+        // Gather block vs per-column gather.
+        let mut out_block = vec![0.0; k * n];
+        plan.gather_real_block(&geo, &slab, &mut out_block);
+        let mut out_one = vec![0.0; n];
+        for j in 0..k {
+            plan.gather_real_grid(&geo, &slab[j * ng..(j + 1) * ng], &mut out_one);
+            assert_eq!(&out_block[j * n..(j + 1) * n], out_one.as_slice(), "gather column {j}");
+        }
     }
 }

@@ -5,18 +5,20 @@
 //!
 //! 1. **shard-local adjoint spread** — each shard gathers its own
 //!    entries of `x` (applying the `D^{−1/2}` input scaling locally in
-//!    normalized mode) and spreads them into its own pooled subgrid;
+//!    normalized mode) and spreads them into its own pooled REAL
+//!    subgrid (half the bytes of the seed's complex subgrids — the
+//!    exchange object a multi-process dispatcher would ship);
 //! 2. **shared frequency stage** — the per-shard subgrids tree-reduce
-//!    (fixed order, deterministic) into the global grid, one FFT +
-//!    deconvolution produces `x̂`, and the `Arc`-shared regularised
-//!    kernel table multiplies in place — this stage is identical no
+//!    (fixed order, deterministic) into the global real grid, ONE r2c
+//!    FFT produces the half spectrum, and the `Arc`-shared fused
+//!    multiplier `W` (deconvolution² × kernel table, folded onto the
+//!    half spectrum) multiplies in place — this stage is identical no
 //!    matter how many shards exist;
-//! 3. **shard-local forward fan-out** — the freq→grid half of the
-//!    forward transform (embed + inverse FFT) runs once on the shared
-//!    coefficients; each shard then gathers its own points from the
-//!    prepared grid and composes the diagonal (`−K(0)`) and
-//!    normalization corrections shard-locally before scattering into
-//!    `y`.
+//! 3. **shard-local forward fan-out** — ONE c2r backward transform
+//!    turns the multiplied half spectrum into the shared real output
+//!    grid; each shard then gathers its own points from it and
+//!    composes the diagonal (`−K(0)`) and normalization corrections
+//!    shard-locally before scattering into `y`.
 //!
 //! With `shards = 1` under a contiguous spec every phase degenerates to
 //! exactly the unsharded [`FastsumOperator`] arithmetic — results are
@@ -46,12 +48,15 @@ pub enum ShardedMode {
     Normalized,
 }
 
-/// Sharded fastsum operator: shared plan + shared kernel table,
-/// per-shard geometry/scratch, one [`LinearOperator`] surface.
+/// Sharded fastsum operator: shared plan + shared fused frequency
+/// multiplier, per-shard geometry/scratch, one [`LinearOperator`]
+/// surface.
 pub struct ShardedOperator {
     n: usize,
     plan: Arc<NfftPlan>,
-    b_hat: Arc<Vec<f64>>,
+    /// Fused half-spectrum frequency multiplier (`Arc`-shared with the
+    /// parent [`FastsumOperator`]).
+    half_mult: Arc<Vec<f64>>,
     out_scale: f64,
     k_zero: f64,
     shards: Vec<ShardPlan>,
@@ -61,11 +66,12 @@ pub struct ShardedOperator {
     degrees: Vec<f64>,
     /// `D^{−1/2}` entries (Normalized mode only, else empty).
     inv_sqrt_deg: Vec<f64>,
-    /// Frequency-coefficient scratch shared by the frequency stage.
-    freqs: BufferPool<Complex>,
-    /// Grid scratch for the shared freq→grid half of the forward
-    /// transform (one per in-flight column; shards only read it).
-    grids: BufferPool<Complex>,
+    /// Half-spectrum scratch shared by the frequency stage.
+    specs: BufferPool<Complex>,
+    /// Real grid scratch for the shared spectrum→grid half of the
+    /// forward transform (one per in-flight column; shards only read
+    /// it).
+    rgrids: BufferPool<f64>,
     exec: ShardExecutor,
     name: String,
 }
@@ -90,18 +96,18 @@ impl ShardedOperator {
     pub fn from_fastsum(parent: &FastsumOperator, spec: ShardSpec) -> ShardedOperator {
         assert_eq!(spec.num_points(), parent.dim(), "shard spec built for a different cloud");
         let plan = parent.plan().clone();
-        let b_hat = parent.fourier_coefficients().clone();
+        let half_mult = parent.half_multiplier().clone();
         let exec = ShardExecutor::new(spec.num_shards());
         let t = Timer::start();
         let shards = build_shard_plans(&plan, parent.scaled_points(), parent.ambient_dim(), &spec);
         exec.record_global("shard-geometry", t.elapsed_secs());
-        let freqs = BufferPool::new(plan.num_freq(), Complex::ZERO);
-        let grids = plan.grid_pool();
+        let specs = plan.half_spectrum_pool();
+        let rgrids = plan.real_grid_pool();
         let name = format!("nfft-W-shard{}", spec.num_shards());
         ShardedOperator {
             n: parent.dim(),
             plan,
-            b_hat,
+            half_mult,
             out_scale: parent.output_scale(),
             k_zero: parent.k_zero(),
             shards,
@@ -109,8 +115,8 @@ impl ShardedOperator {
             mode: ShardedMode::Adjacency,
             degrees: Vec::new(),
             inv_sqrt_deg: Vec::new(),
-            freqs,
-            grids,
+            specs,
+            rgrids,
             exec,
             name,
         }
@@ -188,10 +194,11 @@ impl ShardedOperator {
     fn apply_one(&self, x: &[f64], y: &mut [f64]) {
         let normalized = self.mode == ShardedMode::Normalized;
         let t_all = Timer::start();
-        // Phase 1: shard-local gather + adjoint spread into subgrids.
-        // Empty shards (legal in hand-written/random specs) contribute
-        // nothing and are skipped — no grid to zero, no reduce operand.
-        let mut subs: Vec<Vec<Complex>> = self
+        // Phase 1: shard-local gather + adjoint spread into REAL
+        // subgrids. Empty shards (legal in hand-written/random specs)
+        // contribute nothing and are skipped — no grid to zero, no
+        // reduce operand.
+        let mut subs: Vec<Vec<f64>> = self
             .shards
             .par_iter()
             .enumerate()
@@ -203,35 +210,38 @@ impl ShardedOperator {
                     local.push(x[i] * self.in_scale(i));
                 }
                 let mut grid = sh.grids().take();
-                self.plan.spread_with_geometry(sh.geometry(), &local, &mut grid);
+                self.plan.spread_real_with_geometry(sh.geometry(), &local, &mut grid);
                 self.exec.record(s, "spread", t.elapsed_secs());
                 grid
             })
             .collect();
-        // Phase 2 (shared): tree-reduce subgrids into the global grid,
-        // FFT + deconvolve, multiply by the shared kernel table.
+        // Phase 2 (shared): tree-reduce subgrids into the global real
+        // grid, ONE r2c FFT, then the fused half-spectrum multiply —
+        // identical no matter how many shards exist.
         let t = Timer::start();
         tree_reduce_in_place(&mut subs);
         self.exec.record_global("reduce", t.elapsed_secs());
-        let mut freq = self.freqs.take();
-        self.plan.adjoint_finalize(&mut subs[0], &mut freq);
+        let mut spec = self.specs.take();
+        let t = Timer::start();
+        self.plan.forward_half_spectrum(&subs[0], &mut spec);
+        self.exec.record_global("fft-forward", t.elapsed_secs());
         let spreaders = self.shards.iter().filter(|sh| sh.num_points() > 0);
         for (sh, sub) in spreaders.zip(subs) {
             sh.grids().put(sub);
         }
         let t = Timer::start();
-        for (f, &b) in freq.iter_mut().zip(self.b_hat.iter()) {
-            *f = f.scale(b);
+        for (f, &w) in spec.iter_mut().zip(self.half_mult.iter()) {
+            *f = f.scale(w);
         }
         self.exec.record_global("multiply", t.elapsed_secs());
-        // Phase 3: ONE shared freq→grid transform (embed + inverse
-        // FFT), then the per-point gather fans out across shards with
-        // diagonal + normalization corrections composed shard-locally.
+        // Phase 3: ONE shared c2r backward transform, then the
+        // per-point gather fans out across shards with diagonal +
+        // normalization corrections composed shard-locally.
         let t = Timer::start();
-        let mut fgrid = self.grids.take();
-        self.plan.forward_real_prepare(&freq, &mut fgrid);
+        let mut fgrid = self.rgrids.take();
+        self.plan.backward_half_spectrum(&mut spec, &mut fgrid);
         self.exec.record_global("forward-prepare", t.elapsed_secs());
-        let fgrid_ref: &[Complex] = &fgrid;
+        let fgrid_ref: &[f64] = &fgrid;
         let outs: Vec<Vec<f64>> = self
             .shards
             .par_iter()
@@ -239,7 +249,7 @@ impl ShardedOperator {
             .map(|(s, sh)| {
                 let t = Timer::start();
                 let mut out = vec![0.0; sh.num_points()];
-                self.plan.gather_real_with_geometry(sh.geometry(), fgrid_ref, &mut out);
+                self.plan.gather_real_grid(sh.geometry(), fgrid_ref, &mut out);
                 if self.out_scale != 1.0 {
                     for o in out.iter_mut() {
                         *o *= self.out_scale;
@@ -257,8 +267,8 @@ impl ShardedOperator {
                 out
             })
             .collect();
-        self.grids.put(fgrid);
-        self.freqs.put(freq);
+        self.rgrids.put(fgrid);
+        self.specs.put(spec);
         for (sh, out) in self.shards.iter().zip(outs) {
             for (&i, v) in sh.indices().iter().zip(out) {
                 y[i] = v;

@@ -9,7 +9,6 @@
 //! `Arc`s held by the [`crate::shard::ShardedOperator`] — a shard plan
 //! duplicates only its own O(|shard|·(2m+2)·d) footprint table.
 
-use crate::fft::Complex;
 use crate::nfft::{NfftGeometry, NfftPlan};
 use crate::shard::partition::ShardSpec;
 use crate::util::pool::BufferPool;
@@ -21,8 +20,11 @@ pub struct ShardPlan {
     indices: Vec<usize>,
     /// Window footprints of exactly those points.
     geometry: NfftGeometry,
-    /// Shard-private oversampled-grid scratch.
-    grids: BufferPool<Complex>,
+    /// Shard-private REAL oversampled-grid scratch — the spread grid of
+    /// the half-spectrum path. Real subgrids halve both the resident
+    /// scratch and the inter-shard exchange object the frequency stage
+    /// tree-reduces (vs the complex grids of the seed path).
+    grids: BufferPool<f64>,
 }
 
 impl ShardPlan {
@@ -38,7 +40,7 @@ impl ShardPlan {
         &self.geometry
     }
 
-    pub(crate) fn grids(&self) -> &BufferPool<Complex> {
+    pub(crate) fn grids(&self) -> &BufferPool<f64> {
         &self.grids
     }
 
@@ -73,7 +75,7 @@ pub fn build_shard_plans(
             ShardPlan {
                 indices: idx.clone(),
                 geometry: plan.build_geometry(&pts),
-                grids: plan.grid_pool(),
+                grids: plan.real_grid_pool(),
             }
         })
         .collect()
