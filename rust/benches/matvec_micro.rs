@@ -1,14 +1,18 @@
 //! `cargo bench --bench matvec_micro [-- --sizes 2000,10000]`
-//! Microbenchmarks of the request-path hot spot: the FFT-stage
-//! comparison (seed-style serial complex vs parallel complex vs
-//! batched real/half-spectrum, 1-d/2-d/3-d grids → `BENCH_fft.json`),
+//! Microbenchmarks of the request-path hot spot: the spread/gather
+//! stage comparison (seed unsorted odometer kernels vs flat-offset vs
+//! Morton-tiled owner-computes, 2-d/3-d clouds at n ∈ {1e4, 1e5} →
+//! `BENCH_spread.json`), the FFT-stage comparison (seed-style serial
+//! complex vs parallel complex vs batched real/half-spectrum,
+//! 1-d/2-d/3-d grids → `BENCH_fft.json`),
 //! one fastsum matvec per engine/setup with the per-phase breakdown
 //! used by the §Perf iteration log (the one-time `geometry` phase shows
 //! the plan/geometry split), the block-vs-loop comparison for
 //! k ∈ {1, 8, 16, 32}, the sharded-execution sweep over shard counts
 //! and partition strategies, plus the PJRT artifact engine when
-//! available. Emits `BENCH_fft.json`, `BENCH_matvec.json` and
-//! `BENCH_shard.json` so the perf trajectory is tracked across PRs.
+//! available. Emits `BENCH_spread.json`, `BENCH_fft.json`,
+//! `BENCH_matvec.json` and `BENCH_shard.json` so the perf trajectory
+//! is tracked across PRs.
 
 use nfft_krylov::bench_harness::harness::{bench, BenchArgs};
 use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
@@ -16,6 +20,7 @@ use nfft_krylov::data::rng::Rng;
 use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel};
 use nfft_krylov::fft::{Complex, NdFftPlan, RealNdFftPlan};
 use nfft_krylov::graph::LinearOperator;
+use nfft_krylov::nfft::{NfftPlan, SpreadLayout, WindowKind};
 use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
 use nfft_krylov::util::json::Json;
 use std::collections::BTreeMap;
@@ -94,8 +99,78 @@ fn bench_fft_stage(seed: u64) -> Vec<Json> {
     rows
 }
 
+/// Spread/gather-stage micro: one window convolution each way (spread
+/// in the adjoint, gather in the forward) over the same geometry —
+/// (a) the seed unsorted path (heap odometer + rem_euclid per point,
+/// retained as `spread_real_reference`/`gather_real_grid_reference`),
+/// (b) the flat-offset unsorted engine (bit-identical results),
+/// (c) the Morton-tiled owner-computes engine. 2-d and 3-d clouds at
+/// n ∈ {1e4, 1e5}; the n = 1e5 rows carry the ≥1.5× acceptance
+/// criterion.
+fn bench_spread_stage(seed: u64) -> Vec<Json> {
+    let mut rows = Vec::new();
+    println!("== spread/gather stage: seed-unsorted vs flat-offset vs tiled ==");
+    let configs: [(&[usize], usize); 2] = [(&[64, 64], 2), (&[32, 32, 32], 3)];
+    for (band, d) in configs {
+        let plan = NfftPlan::new(band, 4, WindowKind::KaiserBessel);
+        for &n in &[10_000usize, 100_000] {
+            let mut rng = Rng::seed_from(seed ^ ((d as u64) << 8) ^ n as u64);
+            // The fastsum regime: ρ-scaled nodes inside [−1/4, 1/4]^d.
+            let points: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.25, 0.2499)).collect();
+            let x = rng.normal_vec(n);
+            let geo_u = plan.build_geometry(&points);
+            let geo_t = plan.build_geometry_with(&points, SpreadLayout::Tiled);
+            let mut grid = plan.alloc_real_grid();
+            let mut out = vec![0.0; n];
+            let label = format!("{d}-d n={n}");
+            let s_seed = bench(&format!("spread+gather seed unsorted {label}"), 1, 3, || {
+                plan.spread_real_reference(&geo_u, &x, &mut grid);
+                plan.gather_real_grid_reference(&geo_u, &grid, &mut out);
+            });
+            let s_flat = bench(&format!("spread+gather flat-offset  {label}"), 1, 3, || {
+                plan.spread_real_with_geometry(&geo_u, &x, &mut grid);
+                plan.gather_real_grid(&geo_u, &grid, &mut out);
+            });
+            let s_tiled = bench(&format!("spread+gather tiled        {label}"), 1, 3, || {
+                plan.spread_real_with_geometry(&geo_t, &x, &mut grid);
+                plan.gather_real_grid(&geo_t, &grid, &mut out);
+            });
+            let speedup_flat = s_seed.min / s_flat.min.max(1e-12);
+            let speedup_tiled = s_seed.min / s_tiled.min.max(1e-12);
+            println!(
+                "    {label}: seed {:.4}s  flat {:.4}s  tiled {:.4}s  -> {speedup_flat:.2}x flat, {speedup_tiled:.2}x tiled vs seed",
+                s_seed.min, s_flat.min, s_tiled.min
+            );
+            rows.push(json_row(&[
+                ("dims", Json::Num(d as f64)),
+                (
+                    "band",
+                    Json::Arr(band.iter().map(|&b| Json::Num(b as f64)).collect()),
+                ),
+                ("n", Json::Num(n as f64)),
+                ("seed_unsorted_min_s", Json::Num(s_seed.min)),
+                ("flat_offset_min_s", Json::Num(s_flat.min)),
+                ("tiled_min_s", Json::Num(s_tiled.min)),
+                ("speedup_flat_vs_seed", Json::Num(speedup_flat)),
+                ("speedup_tiled_vs_seed", Json::Num(speedup_tiled)),
+            ]));
+        }
+    }
+    rows
+}
+
 fn main() {
     let args = BenchArgs::from_env();
+
+    let spread_rows = bench_spread_stage(args.seed);
+    let mut spread_root = BTreeMap::new();
+    spread_root.insert("bench".to_string(), Json::Str("matvec_micro/spread_stage".into()));
+    spread_root.insert("results".to_string(), Json::Arr(spread_rows));
+    let text = Json::Obj(spread_root).to_string();
+    match std::fs::write("BENCH_spread.json", &text) {
+        Ok(()) => println!("wrote BENCH_spread.json"),
+        Err(e) => eprintln!("could not write BENCH_spread.json: {e}"),
+    }
 
     let fft_rows = bench_fft_stage(args.seed);
     let mut fft_root = BTreeMap::new();
@@ -206,6 +281,14 @@ fn main() {
                     ("k", Json::Num(kb as f64)),
                     ("apply_min_s", Json::Num(s_apply.min)),
                     ("block_min_s", Json::Num(s_block.min)),
+                    // Exchange-object economics: total boxed subgrid
+                    // bytes one apply ships vs the seed's full grids.
+                    ("exchange_bytes", Json::Num(sop.exchange_bytes() as f64)),
+                    (
+                        "full_grid_exchange_bytes",
+                        Json::Num((s * sop.full_grid_bytes()) as f64),
+                    ),
+                    ("stats", sop.stats_json()),
                 ]));
             }
         }

@@ -18,6 +18,12 @@ pub struct Metrics {
     pub matvec_batches: AtomicU64,
     /// Total vectors flushed through the batcher.
     pub batched_vectors: AtomicU64,
+    /// Resident bytes of the served operator's precomputed state
+    /// (geometry footprint + flat-offset + permutation tables, kernel
+    /// coefficients, shard plans — see
+    /// [`crate::graph::operator::LinearOperator::state_bytes`]).
+    /// Capacity planning reads this; 0 = engine does not report.
+    operator_state_bytes: AtomicU64,
     latency_buckets: [AtomicU64; 14],
     latency_total_us: AtomicU64,
 }
@@ -25,6 +31,17 @@ pub struct Metrics {
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Record the served operator's precomputed-state footprint (set
+    /// once at coordinator construction, refreshed if the operator is
+    /// swapped).
+    pub fn set_operator_state_bytes(&self, bytes: u64) {
+        self.operator_state_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn operator_state_bytes(&self) -> u64 {
+        self.operator_state_bytes.load(Ordering::Relaxed)
     }
 
     pub fn record_latency(&self, micros: u64) {
@@ -72,13 +89,14 @@ impl Metrics {
             }
         };
         format!(
-            "jobs: {} submitted, {} completed, {} failed | matvecs: {} ({} batches, {} vectors) | latency: mean {:.0}us p50 <={} p99 <={}",
+            "jobs: {} submitted, {} completed, {} failed | matvecs: {} ({} batches, {} vectors) | op state: {} B | latency: mean {:.0}us p50 <={} p99 <={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.matvecs.load(Ordering::Relaxed),
             self.matvec_batches.load(Ordering::Relaxed),
             self.batched_vectors.load(Ordering::Relaxed),
+            self.operator_state_bytes.load(Ordering::Relaxed),
             self.mean_latency_us(),
             q(0.5),
             q(0.99),
@@ -103,6 +121,15 @@ mod tests {
         assert_eq!(m.latency_quantile_us(1.0), 1_000_000);
         let r = m.report();
         assert!(r.contains("3 submitted"));
+    }
+
+    #[test]
+    fn operator_state_bytes_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.operator_state_bytes(), 0);
+        m.set_operator_state_bytes(4096);
+        assert_eq!(m.operator_state_bytes(), 4096);
+        assert!(m.report().contains("4096 B"));
     }
 
     #[test]

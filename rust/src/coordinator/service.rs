@@ -50,6 +50,10 @@ impl Coordinator {
     pub fn new(op: Arc<dyn LinearOperator>, workers: usize) -> Coordinator {
         assert!(workers >= 1);
         let metrics = Arc::new(Metrics::new());
+        // Surface the operator's precomputed-state footprint (geometry
+        // + offset/permutation tables, shard plans) for capacity
+        // planning.
+        metrics.set_operator_state_bytes(op.state_bytes() as u64);
         let (tx, rx) = channel::<Envelope>();
         let shared_rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::with_capacity(workers);

@@ -109,6 +109,11 @@ impl LinearOperator for NormalizedAdjacency {
     fn name(&self) -> &str {
         "nfft-A"
     }
+
+    fn state_bytes(&self) -> usize {
+        self.fast.state_bytes()
+            + (self.degrees.len() + self.inv_sqrt_deg.len()) * std::mem::size_of::<f64>()
+    }
 }
 
 #[cfg(test)]

@@ -14,7 +14,7 @@ use super::kernels::Kernel;
 use super::regularize::RegularizedKernel;
 use crate::fft::Complex;
 use crate::graph::operator::LinearOperator;
-use crate::nfft::{NfftGeometry, NfftPlan, WindowKind};
+use crate::nfft::{NfftGeometry, NfftPlan, SpreadLayout, WindowKind};
 use crate::util::pool::BufferPool;
 use crate::util::timer::{PhaseTimings, Timer};
 use rayon::prelude::*;
@@ -124,6 +124,22 @@ impl FastsumOperator {
     /// are centred and scaled internally (Alg 3.2 step 1: after
     /// centring, ρ = (1/4 − ε_B/2)/max‖v‖).
     pub fn new(points: &[f64], d: usize, kernel: Kernel, params: FastsumParams) -> Self {
+        Self::with_layout(points, d, kernel, params, SpreadLayout::Unsorted)
+    }
+
+    /// [`Self::new`] with an explicit spread/gather walk layout.
+    /// `Unsorted` (the [`Self::new`] default) keeps the seed-exact
+    /// execution; `Tiled` builds the Morton-tiled geometry and runs
+    /// the owner-computes locality spread and the sorted gather walk —
+    /// deterministic, and matching the unsorted engine to roundoff
+    /// (see [`crate::nfft::geometry`]).
+    pub fn with_layout(
+        points: &[f64],
+        d: usize,
+        kernel: Kernel,
+        params: FastsumParams,
+        layout: SpreadLayout,
+    ) -> Self {
         assert!(d >= 1 && !points.is_empty() && points.len() % d == 0);
         let n = points.len() / d;
         assert!(params.n_band % 2 == 0, "bandwidth must be even");
@@ -167,7 +183,7 @@ impl FastsumOperator {
         // One-time geometry precomputation — reused by every matvec,
         // block column and Lanczos iteration over this cloud.
         let t_geo = Timer::start();
-        let geometry = plan.build_geometry(&scaled_points);
+        let geometry = plan.build_geometry_with(&scaled_points, layout);
         let mut timings = PhaseTimings::new();
         timings.add("geometry", t_geo.elapsed_secs());
         let grids = plan.grid_pool();
@@ -212,6 +228,11 @@ impl FastsumOperator {
     /// The precomputed NFFT geometry (window footprints) of this cloud.
     pub fn geometry(&self) -> &NfftGeometry {
         &self.geometry
+    }
+
+    /// The spread/gather walk layout this operator was built with.
+    pub fn spread_layout(&self) -> SpreadLayout {
+        self.geometry.layout()
     }
 
     /// The ρ-scaled nodes on the torus (row-major n×d) the geometry was
@@ -445,6 +466,12 @@ impl LinearOperator for FastsumOperator {
 
     fn name(&self) -> &str {
         "nfft-W"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.geometry.bytes()
+            + (self.b_hat.len() + self.half_mult.len() + self.scaled_points.len())
+                * std::mem::size_of::<f64>()
     }
 }
 
@@ -706,6 +733,44 @@ mod tests {
         let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
         let err = max_abs_diff(&real, &oracle);
         assert!(err < 1e-12 * scale, "2-d real vs complex diverged: {err}");
+    }
+
+    #[test]
+    fn tiled_layout_matches_unsorted_engine() {
+        use crate::nfft::SpreadLayout;
+        let points = spiral_like_points(120, 17);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let unsorted = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let tiled = FastsumOperator::with_layout(
+            &points,
+            3,
+            kernel,
+            FastsumParams::setup2(),
+            SpreadLayout::Tiled,
+        );
+        assert_eq!(unsorted.spread_layout(), SpreadLayout::Unsorted);
+        assert_eq!(tiled.spread_layout(), SpreadLayout::Tiled);
+        // The tiled geometry's extra tables are visible to capacity
+        // planning.
+        assert!(tiled.state_bytes() > unsorted.state_bytes());
+        let mut rng = crate::data::rng::Rng::seed_from(18);
+        let x = rng.normal_vec(120);
+        let a = unsorted.apply_vec(&x);
+        let b = tiled.apply_vec(&x);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+        let err = max_abs_diff(&a, &b);
+        assert!(err < 1e-12 * scale, "tiled vs unsorted diverged: {err}");
+        // Owner-computes spread keeps the operator deterministic.
+        assert_eq!(tiled.apply_vec(&x), b);
+        // Block path rides the same tiled engine.
+        let xs = rng.normal_vec(120 * 3);
+        let mut blk = vec![0.0; 120 * 3];
+        tiled.apply_block(&xs, &mut blk);
+        let mut col = vec![0.0; 120];
+        for j in 0..3 {
+            tiled.apply(&xs[j * 120..(j + 1) * 120], &mut col);
+            assert_eq!(&blk[j * 120..(j + 1) * 120], col.as_slice(), "column {j}");
+        }
     }
 
     #[test]

@@ -39,6 +39,14 @@ pub trait LinearOperator: Send + Sync {
     fn name(&self) -> &str {
         "operator"
     }
+
+    /// Approximate resident bytes of the operator's precomputed state
+    /// (geometry tables, kernel coefficients, shard plans, …) for
+    /// capacity planning — surfaced by the coordinator metrics. `0`
+    /// means the engine does not report.
+    fn state_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Shared diagonal-sandwich block helper: scale every column of `xs`

@@ -1,27 +1,107 @@
-//! Precomputed per-point-cloud NFFT geometry.
+//! Precomputed per-point-cloud NFFT geometry: window footprints, the
+//! flat-offset scatter/gather layout, and the optional Morton-tiled
+//! point order behind the owner-computes parallel spread.
 //!
 //! Every NFFT application (spread in the adjoint, gather in the
 //! forward) needs, for each node `v_i` and each axis `a`, the window
 //! footprint: the starting grid index `u0 = ⌊v_ia·n_os_a⌋ − m` and the
 //! `2m+2` window values `φ_a(v_ia − (u0+t)/n_os_a)`. Those depend only
 //! on the point cloud and the plan — not on the vector being
-//! transformed — yet the original implementation recomputed them inside
-//! every spread/gather pass, i.e. on every matvec, every block column
-//! and every Lanczos iteration.
+//! transformed — so [`NfftGeometry`] hoists them into a one-time
+//! `O(n·(2m+2)·d)` precomputation shared by every matvec, block column
+//! and Lanczos iteration.
 //!
-//! [`NfftGeometry`] hoists that work into a one-time `O(n·(2m+2)·d)`
-//! precomputation (window evaluations are the expensive part: sinh/sin
-//! per tap for Kaiser-Bessel). The immutable [`super::NfftPlan`] keeps
-//! everything point-independent (windows, FFT plans, deconvolution
-//! factors) and can be shared across any number of point clouds, while
-//! a geometry is bound to one cloud and shared across every transform
-//! over it — the amortisation at the heart of the paper's Krylov
-//! speedup story.
+//! # Flat-offset layout
+//!
+//! On top of the raw `(starts, vals)` tables the geometry stores, per
+//! (point, axis, tap), the *wrapped grid offset premultiplied by the
+//! axis stride*: `offsets[i, a, t] = ((u0_ia + t) mod n_os_a) ·
+//! stride_a`. A footprint cell's flat index is then just the sum of
+//! one offset per axis — the scatter/gather hot loops perform **no**
+//! `rem_euclid`, **no** per-point heap odometer and **no**
+//! branch-per-axis; the d ∈ {1, 2, 3} kernels in
+//! [`super::NfftPlan`] are fully unrolled over axes. The offsets table
+//! costs `n·d·(2m+2)` `u32`s — half the bytes of the window-value
+//! table it sits next to — and [`NfftGeometry::bytes`] accounts for it
+//! so capacity planning stays honest.
+//!
+//! # Morton-tiled layout ([`SpreadLayout::Tiled`])
+//!
+//! Built on request, the tiled layout adds a locality order for the
+//! spread/gather walk:
+//!
+//! * points are sorted by (owning tile, Morton key of the footprint
+//!   start cell) — the stored permutation keeps inputs and outputs in
+//!   caller order, only the *walk* changes;
+//! * the oversampled grid's leading axis is split into near-equal row
+//!   slabs (*tiles*); each tile owns a disjoint contiguous grid region
+//!   and the points whose footprint starts inside it.
+//!
+//! The owner-computes spread assigns tiles to threads: a thread writes
+//! only its own region directly, and the ≤ `2m+1` footprint rows that
+//! overhang the tile's end accumulate into a small per-tile *rim*
+//! buffer. Rims are merged into the grid sequentially in tile order
+//! after the parallel phase.
+//!
+//! **Determinism argument**: every grid cell receives its direct
+//! contributions from exactly one thread (its owner), which processes
+//! its points in the fixed sorted order; rim contributions are applied
+//! in fixed tile order by one thread. No accumulation order anywhere
+//! depends on scheduling, so the spread is run-to-run bitwise
+//! deterministic — same guarantee as the chunked tree-reduce path, at
+//! a fraction of its memory traffic (rims instead of full per-thread
+//! grids). The tiled walk reorders the per-cell summation relative to
+//! the unsorted path, so the two agree to roundoff (~1e-15 relative),
+//! not bitwise — the unsorted layout remains the default and the
+//! oracle.
+
+/// How spread/gather walk a geometry's points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpreadLayout {
+    /// Caller point order; bit-for-bit the seed engine's arithmetic.
+    #[default]
+    Unsorted,
+    /// Morton/tile-sorted walk + owner-computes parallel spread
+    /// (deterministic; matches `Unsorted` to roundoff).
+    Tiled,
+}
+
+/// One spread tile: a contiguous slab of leading-axis grid rows plus
+/// the (sorted-order) range of points whose footprints start in it.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SpreadTile {
+    /// Owned leading-axis rows `[row_lo, row_hi)`.
+    pub(crate) row_lo: u32,
+    pub(crate) row_hi: u32,
+    /// Range into the sorted point order.
+    pub(crate) pts_lo: u32,
+    pub(crate) pts_hi: u32,
+}
+
+/// The Morton/tile sort of a geometry's points (see module docs).
+#[derive(Debug, Clone)]
+pub(crate) struct TiledLayout {
+    /// Point indices sorted by (tile, Morton key of start cell);
+    /// a permutation of `0..n`.
+    pub(crate) order: Vec<u32>,
+    /// Tiles in leading-axis row order, covering every grid row and
+    /// (via `pts_*`) every point exactly once.
+    pub(crate) tiles: Vec<SpreadTile>,
+}
+
+impl TiledLayout {
+    fn bytes(&self) -> usize {
+        self.order.len() * std::mem::size_of::<u32>()
+            + self.tiles.len() * std::mem::size_of::<SpreadTile>()
+    }
+}
 
 /// Window footprint table for one point cloud under one plan shape.
 ///
-/// Built by [`super::NfftPlan::build_geometry`]; consumed by the
-/// `*_with_geometry` and `*_block` transform entry points.
+/// Built by [`super::NfftPlan::build_geometry`] (or
+/// [`super::NfftPlan::build_geometry_with`] for a tiled layout);
+/// consumed by the `*_with_geometry` and `*_block` transform entry
+/// points.
 #[derive(Debug, Clone)]
 pub struct NfftGeometry {
     pub(crate) n: usize,
@@ -33,11 +113,18 @@ pub struct NfftGeometry {
     /// grid shape.
     pub(crate) n_os: Vec<usize>,
     /// Per-(point, axis) footprint start indices, length `n·d`
-    /// (unwrapped; consumers reduce mod `n_os` at use time).
+    /// (unwrapped; the bounding-box subgrid path consumes these).
     pub(crate) starts: Vec<i64>,
     /// Per-(point, axis, tap) window values, length `n·d·fp`,
     /// point-major then axis-major.
     pub(crate) vals: Vec<f64>,
+    /// Per-(point, axis, tap) wrapped grid offsets premultiplied by
+    /// the axis stride (same shape as `vals`): a footprint cell's flat
+    /// grid index is the sum of one entry per axis.
+    pub(crate) offsets: Vec<u32>,
+    /// Optional Morton/tile sort (present iff built with
+    /// [`SpreadLayout::Tiled`]).
+    pub(crate) tiled: Option<TiledLayout>,
 }
 
 impl NfftGeometry {
@@ -56,10 +143,23 @@ impl NfftGeometry {
         self.fp
     }
 
-    /// Approximate resident size in bytes (metrics/capacity planning).
+    /// The layout this geometry was built with.
+    pub fn layout(&self) -> SpreadLayout {
+        if self.tiled.is_some() {
+            SpreadLayout::Tiled
+        } else {
+            SpreadLayout::Unsorted
+        }
+    }
+
+    /// Approximate resident size in bytes (metrics/capacity planning),
+    /// including the flat-offset table and, when present, the tile
+    /// order.
     pub fn bytes(&self) -> usize {
         self.starts.len() * std::mem::size_of::<i64>()
             + self.vals.len() * std::mem::size_of::<f64>()
+            + self.offsets.len() * std::mem::size_of::<u32>()
+            + self.tiled.as_ref().map_or(0, TiledLayout::bytes)
     }
 
     /// Footprint of point `i`: (per-axis start indices, per-axis×tap
@@ -69,5 +169,70 @@ impl NfftGeometry {
         let d = self.d;
         let fp = self.fp;
         (&self.starts[i * d..(i + 1) * d], &self.vals[i * d * fp..(i + 1) * d * fp])
+    }
+
+    /// Flat-offset tables of point `i`: (per-axis×tap window values,
+    /// per-axis×tap premultiplied wrapped offsets).
+    #[inline]
+    pub(crate) fn point_tables(&self, i: usize) -> (&[f64], &[u32]) {
+        let d = self.d;
+        let fp = self.fp;
+        (&self.vals[i * d * fp..(i + 1) * d * fp], &self.offsets[i * d * fp..(i + 1) * d * fp])
+    }
+
+    /// The tiled layout, if this geometry was built with one.
+    #[inline]
+    pub(crate) fn tiled_layout(&self) -> Option<&TiledLayout> {
+        self.tiled.as_ref()
+    }
+}
+
+/// A spatially-restricted subgrid: the (unwrapped) per-axis bounding
+/// box of a point subset's window footprints, as used by the shard
+/// layer for its exchange object ([`crate::shard`]).
+///
+/// Box coordinates are *unwrapped*: cell `(j_0, …, j_{d−1})` of the
+/// box corresponds to global grid cell `((lo_a + j_a) mod n_os_a)_a`.
+/// Scattering into the box therefore needs no wrapping at all; the
+/// torus wrap is applied exactly once, when the box is merged into the
+/// full grid. When any axis span would exceed the grid period the box
+/// degenerates to the full wrapped grid (`is_full_grid`), keeping the
+/// merge injective — every global cell receives at most one box cell —
+/// which is what makes the boxed path bit-identical to the full-grid
+/// spread.
+#[derive(Debug, Clone)]
+pub struct SubgridBox {
+    /// Unwrapped origin per axis (meaningless when `full`).
+    pub(crate) lo: Vec<i64>,
+    /// Box extent per axis (= `n_os` when `full`).
+    pub(crate) len: Vec<usize>,
+    /// Row-major strides of the box.
+    pub(crate) strides: Vec<usize>,
+    /// Total cells in the box.
+    pub(crate) total: usize,
+    /// True when the box is the entire wrapped grid (fallback).
+    pub(crate) full: bool,
+}
+
+impl SubgridBox {
+    /// Number of cells in the box (= full grid length when
+    /// `is_full_grid`).
+    pub fn num_cells(&self) -> usize {
+        self.total
+    }
+
+    /// Resident/exchange size in bytes of one real subgrid of this box.
+    pub fn bytes(&self) -> usize {
+        self.total * std::mem::size_of::<f64>()
+    }
+
+    /// Whether the box degenerated to the full wrapped grid.
+    pub fn is_full_grid(&self) -> bool {
+        self.full
+    }
+
+    /// Box extent per axis.
+    pub fn extent(&self) -> &[usize] {
+        &self.len
     }
 }

@@ -17,14 +17,16 @@
 //!
 //! The plan itself is split into the immutable transform [`NfftPlan`]
 //! and the per-point-cloud [`NfftGeometry`] (precomputed window
-//! footprints); batched `*_block` entry points apply a transform to k
-//! columns in parallel while sharing one geometry. See [`plan`].
+//! footprints plus the flat-offset scatter/gather layout, optionally
+//! Morton-tiled — see [`geometry`]); batched `*_block` entry points
+//! apply a transform to k columns in parallel while sharing one
+//! geometry. See [`plan`].
 
 pub mod geometry;
 pub mod plan;
 pub mod window;
 
-pub use geometry::NfftGeometry;
+pub use geometry::{NfftGeometry, SpreadLayout, SubgridBox};
 pub use plan::NfftPlan;
 pub use window::{Window, WindowKind};
 

@@ -27,8 +27,24 @@
 //! one spread, large clouds are chunked across threads into pooled
 //! subgrids and combined with the fixed-order tree reduction of
 //! [`crate::util::reduce`], so results stay bit-deterministic.
+//!
+//! Spread/gather execution (§Perf iteration 4, the locality engine):
+//! the per-point kernels consume the geometry's precomputed
+//! *flat-offset* tables — wrapped, stride-premultiplied grid offsets —
+//! through axis-unrolled d ∈ {1, 2, 3} paths (stack odometer beyond),
+//! so the hot loops perform no `rem_euclid`, no heap allocation and no
+//! branch-per-axis; the arithmetic (and thus every bit of the result)
+//! is unchanged from the seed kernels, which are retained verbatim as
+//! [`NfftPlan::spread_real_reference`] /
+//! [`NfftPlan::gather_real_grid_reference`] — the oracle and the
+//! benchmark baseline. Geometries built with
+//! [`crate::nfft::SpreadLayout::Tiled`] additionally run the
+//! owner-computes tiled spread and the Morton-sorted gather walk (see
+//! [`super::geometry`] for the layout and the determinism argument),
+//! and the shard layer spreads into bounding-box subgrids via
+//! [`NfftPlan::spread_real_boxed`] / [`NfftPlan::merge_boxed_into`].
 
-use super::geometry::NfftGeometry;
+use super::geometry::{NfftGeometry, SpreadLayout, SpreadTile, SubgridBox, TiledLayout};
 use super::window::{Window, WindowKind};
 use crate::fft::{Complex, NdFftPlan, RealNdFftPlan};
 use crate::util::pool::BufferPool;
@@ -63,13 +79,23 @@ pub struct NfftPlan {
     /// Subgrid scratch for the chunk-parallel REAL spread (default
     /// path; half the memory of the complex one).
     spread_scratch_real: BufferPool<f64>,
+    /// Rim scratch of the owner-computes tiled spread: `2m+1` leading
+    /// -axis rows per in-flight tile (the halo a tile's footprints
+    /// overhang into its successor).
+    spread_rim_real: BufferPool<f64>,
 }
+
+/// Maximum spatial dimension: the footprint kernels iterate the outer
+/// axes with a stack-allocated odometer of this width (the paper's
+/// workloads use d ≤ 3; the bound only caps pathological inputs).
+const MAX_DIMS: usize = 16;
 
 impl NfftPlan {
     /// `n_band[a]` must be even (I_N is symmetric); the oversampled grid
     /// is fixed at 2N per axis (powers of two keep the FFT radix-2).
     pub fn new(n_band: &[usize], m: usize, kind: WindowKind) -> NfftPlan {
         assert!(!n_band.is_empty());
+        assert!(n_band.len() <= MAX_DIMS, "at most {MAX_DIMS} dimensions supported");
         for &na in n_band {
             assert!(na >= 2 && na % 2 == 0, "bandwidth must be even, got {na}");
         }
@@ -103,7 +129,13 @@ impl NfftPlan {
             })
             .collect();
         let total_freq = n_band.iter().product();
-        let total_grid = n_os.iter().product();
+        let total_grid: usize = n_os.iter().product();
+        // The flat-offset scatter/gather layout stores premultiplied
+        // grid offsets as u32 (half the bytes of the window values).
+        assert!(
+            total_grid <= u32::MAX as usize,
+            "oversampled grid too large for the u32 flat-offset layout"
+        );
         let total_half_grid = rfft.total_half();
         // Retention capped at the thread count: a burst of concurrent
         // chunked spreads (parallel block columns) may briefly allocate
@@ -113,6 +145,9 @@ impl NfftPlan {
             BufferPool::bounded(total_grid, Complex::ZERO, rayon::current_num_threads());
         let spread_scratch_real =
             BufferPool::bounded(total_grid, 0.0f64, rayon::current_num_threads());
+        let fp = windows[0].footprint();
+        let spread_rim_real =
+            BufferPool::bounded((fp - 1) * strides[0], 0.0f64, 2 * rayon::current_num_threads());
         NfftPlan {
             d,
             n_band: n_band.to_vec(),
@@ -127,6 +162,7 @@ impl NfftPlan {
             total_half_grid,
             spread_scratch,
             spread_scratch_real,
+            spread_rim_real,
         }
     }
 
@@ -185,29 +221,103 @@ impl NfftPlan {
     }
 
     /// Precompute the window footprint table (start indices + window
-    /// values per node and axis) for one point cloud. `points` is
-    /// row-major n×d with entries in [−1/2, 1/2). O(n·(2m+2)·d) window
-    /// evaluations, parallel over points; reuse the result across every
-    /// transform over the same cloud.
+    /// values per node and axis) plus the flat-offset scatter/gather
+    /// layout for one point cloud. `points` is row-major n×d with
+    /// entries in [−1/2, 1/2). O(n·(2m+2)·d) window evaluations,
+    /// parallel over points; reuse the result across every transform
+    /// over the same cloud. The walk order is
+    /// [`SpreadLayout::Unsorted`] — the seed-compatible default; use
+    /// [`Self::build_geometry_with`] for the Morton-tiled layout.
     pub fn build_geometry(&self, points: &[f64]) -> NfftGeometry {
+        self.build_geometry_with(points, SpreadLayout::Unsorted)
+    }
+
+    /// [`Self::build_geometry`] with an explicit spread/gather walk
+    /// layout. `Tiled` additionally Morton-sorts the points by their
+    /// footprint start cell and buckets them into leading-axis grid
+    /// slabs — the structure behind the owner-computes parallel spread
+    /// (see [`super::geometry`] for the layout and determinism
+    /// argument). Inputs and outputs stay in caller order either way.
+    pub fn build_geometry_with(&self, points: &[f64], layout: SpreadLayout) -> NfftGeometry {
         let d = self.d;
         assert_eq!(points.len() % d, 0, "points not a multiple of d");
         let n = points.len() / d;
         let fp = self.windows[0].footprint();
         let mut starts = vec![0i64; n * d];
         let mut vals = vec![0.0f64; n * d * fp];
+        let mut offsets = vec![0u32; n * d * fp];
         starts
             .par_chunks_mut(d)
-            .zip(vals.par_chunks_mut(d * fp))
+            .zip(vals.par_chunks_mut(d * fp).zip(offsets.par_chunks_mut(d * fp)))
             .enumerate()
-            .for_each(|(i, (s, v))| {
+            .for_each(|(i, (s, (v, o)))| {
                 let p = &points[i * d..(i + 1) * d];
                 for a in 0..d {
                     s[a] = self.windows[a]
                         .footprint_values(p[a], &mut v[a * fp..(a + 1) * fp]);
+                    let osa = self.n_os[a] as i64;
+                    let stride = self.strides[a];
+                    for (t, ot) in o[a * fp..(a + 1) * fp].iter_mut().enumerate() {
+                        let wrapped = (s[a] + t as i64).rem_euclid(osa) as usize;
+                        *ot = (wrapped * stride) as u32;
+                    }
                 }
             });
-        NfftGeometry { n, d, fp, n_os: self.n_os.clone(), starts, vals }
+        let tiled = match layout {
+            SpreadLayout::Unsorted => None,
+            SpreadLayout::Tiled => Some(self.build_tiled_layout(n, fp, &starts)),
+        };
+        NfftGeometry { n, d, fp, n_os: self.n_os.clone(), starts, vals, offsets, tiled }
+    }
+
+    /// Morton/tile sort of `n` points by footprint start cell, plus the
+    /// leading-axis slab decomposition of the grid (see
+    /// [`super::geometry`]). The tile count depends only on the grid
+    /// shape and the process-constant rayon pool width, never on
+    /// scheduling — layouts (and therefore tiled-spread results) are
+    /// reproducible run to run.
+    fn build_tiled_layout(&self, n: usize, fp: usize, starts: &[i64]) -> TiledLayout {
+        let d = self.d;
+        let g0 = self.n_os[0];
+        let t_count = (2 * rayon::current_num_threads()).clamp(1, g0);
+        let rows: Vec<std::ops::Range<usize>> = crate::util::split_even(g0, t_count).collect();
+        // Owning tile of a wrapped leading-axis row, derived from the
+        // `rows` ranges themselves (binary search) so classification
+        // and slab layout can never drift apart — a mismatch would
+        // send a point to a thread that does not own its rows.
+        let tile_of_row = |r: usize| -> usize { rows.partition_point(|range| range.end <= r) };
+        // Sort key: owning tile in the top 16 bits, Morton code of the
+        // wrapped start cell below, point index as the tiebreak — tiles
+        // become contiguous runs of the sorted order, Morton-local
+        // within each tile, and the permutation is fully deterministic.
+        let mut keyed: Vec<(u64, u32)> = (0..n)
+            .map(|i| {
+                let mut cell = [0usize; MAX_DIMS];
+                for (a, c) in cell[..d].iter_mut().enumerate() {
+                    *c = starts[i * d + a].rem_euclid(self.n_os[a] as i64) as usize;
+                }
+                let tile = tile_of_row(cell[0]) as u64;
+                ((tile << 48) | crate::util::morton::cell_key(&cell[..d], &self.n_os), i as u32)
+            })
+            .collect();
+        keyed.sort_unstable();
+        let order: Vec<u32> = keyed.iter().map(|&(_, i)| i).collect();
+        let mut tiles = Vec::with_capacity(t_count);
+        let mut pos = 0usize;
+        for (t, r) in rows.iter().enumerate() {
+            let lo = pos;
+            while pos < n && (keyed[pos].0 >> 48) as usize == t {
+                pos += 1;
+            }
+            tiles.push(SpreadTile {
+                row_lo: r.start as u32,
+                row_hi: r.end as u32,
+                pts_lo: lo as u32,
+                pts_hi: pos as u32,
+            });
+        }
+        debug_assert_eq!(pos, n, "every point must land in a tile");
+        TiledLayout { order, tiles }
     }
 
     fn check_geometry(&self, geo: &NfftGeometry) {
@@ -321,6 +431,315 @@ impl NfftPlan {
             .for_each(|(g, x)| self.spread_real_with_geometry(geo, x, g));
     }
 
+    /// The SEED-profile real spread — heap odometer and `rem_euclid`
+    /// index wrapping per point, unsorted caller order — retained
+    /// verbatim behind the same chunking policy. It is the oracle the
+    /// flat-offset engine is pinned against (bit-identical results)
+    /// and the "seed unsorted" baseline of the spread-stage
+    /// micro-benchmark. Ignores any tiled layout on `geo`.
+    pub fn spread_real_reference(&self, geo: &NfftGeometry, x: &[f64], rgrid: &mut [f64]) {
+        self.check_geometry(geo);
+        assert_eq!(x.len(), geo.n);
+        assert_eq!(rgrid.len(), self.total_grid);
+        for g in rgrid.iter_mut() {
+            *g = 0.0;
+        }
+        self.spread_real_unsorted(geo, x, rgrid, true);
+    }
+
+    /// The SEED-profile real gather (counterpart of
+    /// [`Self::spread_real_reference`]): caller-order parallel walk
+    /// with the retained odometer kernel. Bit-identical to
+    /// [`Self::gather_real_grid`].
+    pub fn gather_real_grid_reference(&self, geo: &NfftGeometry, rgrid: &[f64], out: &mut [f64]) {
+        self.check_geometry(geo);
+        assert_eq!(out.len(), geo.n);
+        assert_eq!(rgrid.len(), self.total_grid);
+        out.par_iter_mut().enumerate().for_each(|(j, o)| {
+            let (starts, vals) = geo.point(j);
+            *o = self.gather_real_seed(starts, vals, rgrid);
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Bounding-box subgrids — the shard layer's spatially-restricted
+    // exchange object ([`crate::shard`]). A shard spreads its points
+    // into the (unwrapped) per-axis bounding box of their footprints;
+    // the torus wrap is applied exactly once when the box is merged
+    // into the global grid. Because the box never exceeds the grid
+    // period per axis (else it falls back to the full grid), the merge
+    // is injective and every cell's accumulation order matches the
+    // full-grid spread — the boxed path is bit-identical to it, at a
+    // fraction of the memory and exchange volume.
+    // ------------------------------------------------------------------
+
+    /// Per-axis bounding box of `geo`'s window footprints (unwrapped
+    /// start indices). Falls back to the full wrapped grid when any
+    /// axis span exceeds the grid period (points spanning the whole
+    /// torus) or the geometry is empty.
+    pub fn bounding_box(&self, geo: &NfftGeometry) -> SubgridBox {
+        self.check_geometry(geo);
+        let d = self.d;
+        let fp = geo.fp as i64;
+        if geo.n == 0 {
+            return self.full_box();
+        }
+        let mut lo = vec![i64::MAX; d];
+        let mut hi = vec![i64::MIN; d];
+        for i in 0..geo.n {
+            for (a, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                let s = geo.starts[i * d + a];
+                *l = (*l).min(s);
+                *h = (*h).max(s + fp);
+            }
+        }
+        let mut len = vec![0usize; d];
+        for a in 0..d {
+            let span = (hi[a] - lo[a]) as usize;
+            if span > self.n_os[a] {
+                return self.full_box();
+            }
+            len[a] = span;
+        }
+        let mut strides = vec![1usize; d];
+        for a in (0..d.saturating_sub(1)).rev() {
+            strides[a] = strides[a + 1] * len[a + 1];
+        }
+        let total = len.iter().product();
+        SubgridBox { lo, len, strides, total, full: false }
+    }
+
+    /// The degenerate box covering the entire wrapped grid — what the
+    /// shard layer's `FullGrid` policy (the boxed path's oracle) uses.
+    pub fn bounding_box_full(&self) -> SubgridBox {
+        self.full_box()
+    }
+
+    /// The degenerate box covering the entire wrapped grid.
+    fn full_box(&self) -> SubgridBox {
+        SubgridBox {
+            lo: vec![0; self.d],
+            len: self.n_os.clone(),
+            strides: self.strides.clone(),
+            total: self.total_grid,
+            full: true,
+        }
+    }
+
+    /// Spread into a bounding-box subgrid: zero `out` (of
+    /// `bx.num_cells()`), then accumulate `geo`'s weighted footprints
+    /// at box-local coordinates — no wrapping anywhere. Uses the SAME
+    /// chunking decision and reduction pairing as the full-grid spread
+    /// (scratch buffers come from `scratch`, a pool of box-sized
+    /// buffers), so per-cell accumulation order — and therefore every
+    /// bit of the result — matches [`Self::spread_real_with_geometry`].
+    /// A full-grid fallback box delegates to exactly that method.
+    pub fn spread_real_boxed(
+        &self,
+        geo: &NfftGeometry,
+        x: &[f64],
+        bx: &SubgridBox,
+        out: &mut [f64],
+        scratch: &BufferPool<f64>,
+    ) {
+        if bx.full {
+            self.spread_real_with_geometry(geo, x, out);
+            return;
+        }
+        self.check_geometry(geo);
+        assert_eq!(x.len(), geo.n);
+        assert_eq!(out.len(), bx.total, "subgrid sized for a different box");
+        assert_eq!(scratch.buf_len(), bx.total, "scratch pool sized for a different box");
+        for g in out.iter_mut() {
+            *g = 0.0;
+        }
+        let fp = geo.fp;
+        let chunks = self.spread_chunks(geo.n, fp);
+        if chunks <= 1 {
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let (starts, vals) = geo.point(i);
+                self.scatter_boxed_real(starts, vals, fp, xi, bx, out);
+            }
+            return;
+        }
+        let chunk_len = geo.n.div_ceil(chunks);
+        let mut subs: Vec<Vec<f64>> = x
+            .par_chunks(chunk_len)
+            .enumerate()
+            .map(|(c, xc)| {
+                let mut sub = scratch.take();
+                for g in sub.iter_mut() {
+                    *g = 0.0;
+                }
+                let base = c * chunk_len;
+                for (off, &xi) in xc.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let (starts, vals) = geo.point(base + off);
+                    self.scatter_boxed_real(starts, vals, fp, xi, bx, &mut sub);
+                }
+                sub
+            })
+            .collect();
+        crate::util::reduce::tree_reduce_in_place(&mut subs);
+        for (g, &s) in out.iter_mut().zip(subs[0].iter()) {
+            *g += s;
+        }
+        for sub in subs {
+            scratch.put(sub);
+        }
+    }
+
+    /// Box-local scatter of one footprint: coordinates are offsets
+    /// from the (unwrapped) box origin, so the inner axis is one
+    /// contiguous span and no axis ever wraps. Multiply chain and
+    /// guard placement mirror [`Self::scatter_real`].
+    fn scatter_boxed_real(
+        &self,
+        starts: &[i64],
+        vals: &[f64],
+        fp: usize,
+        weight: f64,
+        bx: &SubgridBox,
+        sub: &mut [f64],
+    ) {
+        let d = self.d;
+        match d {
+            1 => {
+                let s = (starts[0] - bx.lo[0]) as usize;
+                let dst = &mut sub[s..s + fp];
+                for (g, &v) in dst.iter_mut().zip(vals) {
+                    *g += weight * v;
+                }
+            }
+            2 => {
+                let s0 = (starts[0] - bx.lo[0]) as usize;
+                let s1 = (starts[1] - bx.lo[1]) as usize;
+                let (v0, v1) = vals.split_at(fp);
+                for (t0, &va) in v0.iter().enumerate() {
+                    let w = weight * va;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let base = (s0 + t0) * bx.strides[0] + s1;
+                    let dst = &mut sub[base..base + fp];
+                    for (g, &v) in dst.iter_mut().zip(v1) {
+                        *g += w * v;
+                    }
+                }
+            }
+            3 => {
+                let s0 = (starts[0] - bx.lo[0]) as usize;
+                let s1 = (starts[1] - bx.lo[1]) as usize;
+                let s2 = (starts[2] - bx.lo[2]) as usize;
+                let (v0, rest) = vals.split_at(fp);
+                let (v1, v2) = rest.split_at(fp);
+                for (t0, &va) in v0.iter().enumerate() {
+                    let wa = weight * va;
+                    let b0 = (s0 + t0) * bx.strides[0];
+                    for (t1, &vb) in v1.iter().enumerate() {
+                        let w = wa * vb;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let base = b0 + (s1 + t1) * bx.strides[1] + s2;
+                        let dst = &mut sub[base..base + fp];
+                        for (g, &v) in dst.iter_mut().zip(v2) {
+                            *g += w * v;
+                        }
+                    }
+                }
+            }
+            _ => {
+                let outer = d - 1;
+                let s_last = (starts[outer] - bx.lo[outer]) as usize;
+                let mut idx = [0usize; MAX_DIMS];
+                loop {
+                    let mut base = 0usize;
+                    let mut w = weight;
+                    for a in 0..outer {
+                        base += ((starts[a] - bx.lo[a]) as usize + idx[a]) * bx.strides[a];
+                        w *= vals[a * fp + idx[a]];
+                    }
+                    if w != 0.0 {
+                        let dst = &mut sub[base + s_last..base + s_last + fp];
+                        for (g, &v) in dst.iter_mut().zip(&vals[outer * fp..]) {
+                            *g += w * v;
+                        }
+                    }
+                    let mut a = outer;
+                    loop {
+                        if a == 0 {
+                            return;
+                        }
+                        a -= 1;
+                        idx[a] += 1;
+                        if idx[a] < fp {
+                            break;
+                        }
+                        idx[a] = 0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accumulate a boxed subgrid into the full wrapped grid — the one
+    /// place the torus wrap of the boxed path is applied. The inner
+    /// axis splits into at most two contiguous spans; outer axes walk
+    /// an odometer (once per box, not per point). Injective per the
+    /// box construction, so merging preserves the per-cell bits.
+    pub fn merge_boxed_into(&self, bx: &SubgridBox, sub: &[f64], grid: &mut [f64]) {
+        assert_eq!(grid.len(), self.total_grid);
+        assert_eq!(sub.len(), bx.total);
+        if bx.full {
+            for (g, &s) in grid.iter_mut().zip(sub) {
+                *g += s;
+            }
+            return;
+        }
+        let d = self.d;
+        let n_last = self.n_os[d - 1];
+        let len_last = bx.len[d - 1];
+        let start_last = bx.lo[d - 1].rem_euclid(n_last as i64) as usize;
+        let first = len_last.min(n_last - start_last);
+        let mut idx = vec![0usize; d - 1];
+        loop {
+            let mut gbase = 0usize;
+            let mut sbase = 0usize;
+            for (a, &ia) in idx.iter().enumerate() {
+                let g = (bx.lo[a] + ia as i64).rem_euclid(self.n_os[a] as i64) as usize;
+                gbase += g * self.strides[a];
+                sbase += ia * bx.strides[a];
+            }
+            let src = &sub[sbase..sbase + len_last];
+            let dst = &mut grid[gbase + start_last..gbase + start_last + first];
+            for (g, &s) in dst.iter_mut().zip(&src[..first]) {
+                *g += s;
+            }
+            let dst = &mut grid[gbase..gbase + (len_last - first)];
+            for (g, &s) in dst.iter_mut().zip(&src[first..]) {
+                *g += s;
+            }
+            let mut a = d - 1;
+            loop {
+                if a == 0 {
+                    return;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < bx.len[a] {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+    }
+
     /// r2c forward of a (spread) real grid into its half spectrum.
     pub fn forward_half_spectrum(&self, rgrid: &[f64], spec: &mut [Complex]) {
         self.rfft.forward(rgrid, spec);
@@ -404,14 +823,39 @@ impl NfftPlan {
     /// Gather the value at each of `geo`'s points from a REAL grid
     /// produced by [`Self::backward_half_spectrum`]; per-node loop is
     /// parallel. Counterpart of [`Self::gather_real_with_geometry`] on
-    /// the real-grid path.
+    /// the real-grid path. On tiled geometries the walk follows the
+    /// Morton/tile sort (cache-local grid reads); each point's
+    /// arithmetic is order-independent, so outputs are bit-identical
+    /// to the caller-order walk either way.
     pub fn gather_real_grid(&self, geo: &NfftGeometry, rgrid: &[f64], out: &mut [f64]) {
         self.check_geometry(geo);
         assert_eq!(out.len(), geo.n);
         assert_eq!(rgrid.len(), self.total_grid);
+        if let Some(tl) = geo.tiled_layout() {
+            let order = &tl.order;
+            let chunk = order.len().div_ceil(4 * rayon::current_num_threads().max(1)).max(256);
+            let parts: Vec<Vec<f64>> = order
+                .par_chunks(chunk)
+                .map(|idxs| {
+                    idxs.iter()
+                        .map(|&pi| {
+                            let (vals, offs) = geo.point_tables(pi as usize);
+                            self.gather_real(offs, vals, rgrid)
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut it = order.iter();
+            for part in parts {
+                for v in part {
+                    out[*it.next().expect("order is a permutation of 0..n") as usize] = v;
+                }
+            }
+            return;
+        }
         out.par_iter_mut().enumerate().for_each(|(j, o)| {
-            let (starts, vals) = geo.point(j);
-            *o = self.gather_point_real_f64(starts, vals, rgrid);
+            let (vals, offs) = geo.point_tables(j);
+            *o = self.gather_real(offs, vals, rgrid);
         });
     }
 
@@ -429,8 +873,8 @@ impl NfftPlan {
             .zip(rgrids.par_chunks(self.total_grid))
             .for_each(|(o, g)| {
                 for (j, v) in o.iter_mut().enumerate() {
-                    let (starts, vals) = geo.point(j);
-                    *v = self.gather_point_real_f64(starts, vals, g);
+                    let (vals, offs) = geo.point_tables(j);
+                    *v = self.gather_real(offs, vals, g);
                 }
             });
     }
@@ -595,8 +1039,8 @@ impl NfftPlan {
         assert_eq!(out.len(), geo.n);
         assert_eq!(grid.len(), self.total_grid);
         out.par_iter_mut().enumerate().for_each(|(j, o)| {
-            let (starts, vals) = geo.point(j);
-            *o = self.gather_point_real(starts, vals, grid);
+            let (vals, offs) = geo.point_tables(j);
+            *o = self.gather_cpx_re(offs, vals, grid);
         });
     }
 
@@ -614,13 +1058,13 @@ impl NfftPlan {
         let grid_r: &[Complex] = grid;
         if parallel {
             out.par_iter_mut().enumerate().for_each(|(j, o)| {
-                let (starts, vals) = geo.point(j);
-                *o = self.gather_point_real(starts, vals, grid_r);
+                let (vals, offs) = geo.point_tables(j);
+                *o = self.gather_cpx_re(offs, vals, grid_r);
             });
         } else {
             for (j, o) in out.iter_mut().enumerate() {
-                let (starts, vals) = geo.point(j);
-                *o = self.gather_point_real(starts, vals, grid_r);
+                let (vals, offs) = geo.point_tables(j);
+                *o = self.gather_cpx_re(offs, vals, grid_r);
             }
         }
     }
@@ -659,8 +1103,8 @@ impl NfftPlan {
         // backward FFT; the 1/n_os^d is already folded into `deconv`.
         self.fft.backward_unnormalized(grid);
         for (j, o) in out.iter_mut().enumerate() {
-            let (starts, vals) = geo.point(j);
-            *o = self.gather_point(starts, vals, grid);
+            let (vals, offs) = geo.point_tables(j);
+            *o = self.gather_cpx(offs, vals, grid);
         }
     }
 
@@ -681,8 +1125,8 @@ impl NfftPlan {
                 if xi == 0.0 {
                     continue;
                 }
-                let (starts, vals) = geo.point(i);
-                self.scatter_tensor(starts, vals, fp, xi, grid);
+                let (vals, offs) = geo.point_tables(i);
+                self.scatter_cpx(offs, vals, fp, self.d, xi, grid);
             }
             return;
         }
@@ -700,8 +1144,8 @@ impl NfftPlan {
                     if xi == 0.0 {
                         continue;
                     }
-                    let (starts, vals) = geo.point(base + off);
-                    self.scatter_tensor(starts, vals, fp, xi, &mut sub);
+                    let (vals, offs) = geo.point_tables(base + off);
+                    self.scatter_cpx(offs, vals, fp, self.d, xi, &mut sub);
                 }
                 sub
             })
@@ -734,76 +1178,141 @@ impl NfftPlan {
         chunks
     }
 
-    /// Tensor-product scatter of one point's footprint (odometer over
-    /// the outer axes, specialised inner loop on the last axis).
-    fn scatter_tensor(
+    /// Flat-offset scatter of one point's footprint onto a COMPLEX
+    /// grid (real contributions only — all the adjoint spread ever
+    /// writes). `offs`/`vals` hold `axes · fp` premultiplied wrapped
+    /// offsets / window values; a cell's flat index is the sum of one
+    /// offset per axis, so there is no index wrapping, no heap
+    /// odometer and no branch-per-axis in the unrolled small-`axes`
+    /// paths. The per-cell arithmetic (multiply chain, guard, tap
+    /// order) mirrors the seed kernel exactly — results are
+    /// bit-identical.
+    fn scatter_cpx(
         &self,
-        starts: &[i64],
+        offs: &[u32],
         vals: &[f64],
         fp: usize,
+        axes: usize,
         weight: f64,
         grid: &mut [Complex],
     ) {
-        let d = self.d;
-        let last = d - 1;
-        let n_last = self.n_os[last];
-        // Iterate over the outer d-1 axes with an odometer.
-        let mut idx = vec![0usize; d.saturating_sub(1)];
-        loop {
-            // Base offset and accumulated outer weight.
-            let mut base = 0usize;
-            let mut w = weight;
-            for a in 0..last {
-                let u = (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
-                base += u * self.strides[a];
-                w *= vals[a * fp + idx[a]];
-            }
-            if w != 0.0 {
-                let lvals = &vals[last * fp..(last + 1) * fp];
-                let s = starts[last].rem_euclid(n_last as i64) as usize;
-                // Split the wrapped run into at most two contiguous
-                // spans; slice views let the compiler drop bounds
-                // checks in the hot accumulate loop (§Perf iteration 1).
-                let first_len = fp.min(n_last - s);
-                let dst = &mut grid[base + s..base + s + first_len];
-                for (g, &lv) in dst.iter_mut().zip(&lvals[..first_len]) {
-                    g.re += w * lv;
-                }
-                let dst = &mut grid[base..base + fp - first_len];
-                for (g, &lv) in dst.iter_mut().zip(&lvals[first_len..]) {
-                    g.re += w * lv;
+        match axes {
+            1 => {
+                for (&o, &v) in offs.iter().zip(vals) {
+                    grid[o as usize].re += weight * v;
                 }
             }
-            // Odometer increment.
-            let mut a = last;
-            loop {
-                if a == 0 {
-                    return;
+            2 => {
+                let (o0, o1) = offs.split_at(fp);
+                let (v0, v1) = vals.split_at(fp);
+                for (&oa, &va) in o0.iter().zip(v0) {
+                    let w = weight * va;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let base = oa as usize;
+                    for (&ob, &vb) in o1.iter().zip(v1) {
+                        grid[base + ob as usize].re += w * vb;
+                    }
                 }
-                a -= 1;
-                idx[a] += 1;
-                if idx[a] < fp {
-                    break;
+            }
+            3 => {
+                let (o0, rest) = offs.split_at(fp);
+                let (o1, o2) = rest.split_at(fp);
+                let (v0, rest) = vals.split_at(fp);
+                let (v1, v2) = rest.split_at(fp);
+                for (&oa, &va) in o0.iter().zip(v0) {
+                    let wa = weight * va;
+                    let ba = oa as usize;
+                    for (&ob, &vb) in o1.iter().zip(v1) {
+                        let w = wa * vb;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let base = ba + ob as usize;
+                        for (&oc, &vc) in o2.iter().zip(v2) {
+                            grid[base + oc as usize].re += w * vc;
+                        }
+                    }
                 }
-                idx[a] = 0;
+            }
+            _ => {
+                // Generic: stack odometer over the outer axes.
+                let outer = axes - 1;
+                let mut idx = [0usize; MAX_DIMS];
+                loop {
+                    let mut base = 0usize;
+                    let mut w = weight;
+                    for a in 0..outer {
+                        base += offs[a * fp + idx[a]] as usize;
+                        w *= vals[a * fp + idx[a]];
+                    }
+                    if w != 0.0 {
+                        let o = &offs[outer * fp..(outer + 1) * fp];
+                        let v = &vals[outer * fp..(outer + 1) * fp];
+                        for (&ol, &vl) in o.iter().zip(v) {
+                            grid[base + ol as usize].re += w * vl;
+                        }
+                    }
+                    let mut a = outer;
+                    loop {
+                        if a == 0 {
+                            return;
+                        }
+                        a -= 1;
+                        idx[a] += 1;
+                        if idx[a] < fp {
+                            break;
+                        }
+                        idx[a] = 0;
+                    }
+                }
             }
         }
     }
 
-    /// Real-grid spread (mirror of [`Self::spread`] over `f64` grids):
-    /// chunk count and reduction order are shared with the complex
-    /// path, so determinism guarantees carry over unchanged.
+    /// Real-grid spread (mirror of [`Self::spread`] over `f64` grids).
+    /// Unsorted geometries run the chunk-parallel flat-offset walk
+    /// (chunk count and reduction order shared with the complex path,
+    /// so determinism guarantees carry over unchanged); tiled
+    /// geometries run the owner-computes tiled engine.
     fn spread_real(&self, geo: &NfftGeometry, x: &[f64], grid: &mut [f64]) {
+        if let Some(tl) = geo.tiled_layout() {
+            self.spread_real_tiled(geo, tl, x, grid);
+        } else {
+            self.spread_real_unsorted(geo, x, grid, false);
+        }
+    }
+
+    /// The unsorted (caller point order) real spread: flat-offset
+    /// kernels by default, the retained seed kernels when
+    /// `seed_kernel` (the oracle / benchmark baseline — same chunking,
+    /// same reduction, bit-identical results either way).
+    fn spread_real_unsorted(
+        &self,
+        geo: &NfftGeometry,
+        x: &[f64],
+        grid: &mut [f64],
+        seed_kernel: bool,
+    ) {
         let fp = geo.fp;
         let n = geo.n;
+        let scatter = |i: usize, xi: f64, dst: &mut [f64]| {
+            if seed_kernel {
+                let (starts, vals) = geo.point(i);
+                self.scatter_real_seed(starts, vals, fp, xi, dst);
+            } else {
+                let (vals, offs) = geo.point_tables(i);
+                self.scatter_real(offs, vals, fp, self.d, xi, dst);
+            }
+        };
         let chunks = self.spread_chunks(n, fp);
         if chunks <= 1 {
             for (i, &xi) in x.iter().enumerate() {
                 if xi == 0.0 {
                     continue;
                 }
-                let (starts, vals) = geo.point(i);
-                self.scatter_tensor_real(starts, vals, fp, xi, grid);
+                scatter(i, xi, grid);
             }
             return;
         }
@@ -821,8 +1330,7 @@ impl NfftPlan {
                     if xi == 0.0 {
                         continue;
                     }
-                    let (starts, vals) = geo.point(base + off);
-                    self.scatter_tensor_real(starts, vals, fp, xi, &mut sub);
+                    scatter(base + off, xi, &mut sub);
                 }
                 sub
             })
@@ -836,10 +1344,192 @@ impl NfftPlan {
         }
     }
 
-    /// Tensor-product scatter of one point's footprint onto a REAL
-    /// grid — the same arithmetic [`Self::scatter_tensor`] performs on
-    /// the real components, at half the memory traffic.
-    fn scatter_tensor_real(
+    /// Owner-computes tiled spread (geometries built with
+    /// [`SpreadLayout::Tiled`]): tiles own disjoint leading-axis slabs
+    /// of `grid` and scatter their Morton-sorted points directly into
+    /// them; footprint rows overhanging a tile's end accumulate into a
+    /// small pooled rim, merged into the grid sequentially in tile
+    /// order afterwards. Every cell's accumulation order is a pure
+    /// function of the layout — run-to-run bitwise deterministic (see
+    /// [`super::geometry`] for the argument). Allocation-free in
+    /// steady state (rims are pooled, slabs are views into `grid`).
+    fn spread_real_tiled(&self, geo: &NfftGeometry, tl: &TiledLayout, x: &[f64], grid: &mut [f64]) {
+        let fp = geo.fp;
+        let d = self.d;
+        let row_len = self.strides[0];
+        let g0 = self.n_os[0];
+        // Disjoint per-tile views of the grid, in row order (explicit
+        // reborrow so `grid` stays usable for the rim merge below).
+        let mut rest: &mut [f64] = &mut grid[..];
+        let mut slabs: Vec<&mut [f64]> = Vec::with_capacity(tl.tiles.len());
+        for t in &tl.tiles {
+            let rows = (t.row_hi - t.row_lo) as usize;
+            let (head, tail) = rest.split_at_mut(rows * row_len);
+            slabs.push(head);
+            rest = tail;
+        }
+        debug_assert!(rest.is_empty());
+        let order = &tl.order;
+        let rims: Vec<Option<Vec<f64>>> = tl
+            .tiles
+            .par_iter()
+            .zip(slabs)
+            .map(|(tile, slab)| {
+                if tile.pts_lo == tile.pts_hi {
+                    return None;
+                }
+                let mut rim = self.spread_rim_real.take();
+                for r in rim.iter_mut() {
+                    *r = 0.0;
+                }
+                let row_lo = tile.row_lo as usize;
+                let row_hi = tile.row_hi as usize;
+                for &pi in &order[tile.pts_lo as usize..tile.pts_hi as usize] {
+                    let i = pi as usize;
+                    let xi = x[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let (vals, offs) = geo.point_tables(i);
+                    // Wrapped leading-axis start row; taps walk rows
+                    // w0+t unwrapped — overhang past row_hi lands in
+                    // the rim, whose merge applies the torus wrap.
+                    let w0 = offs[0] as usize / row_len;
+                    debug_assert!(w0 >= row_lo);
+                    let (v0, v_inner) = vals.split_at(fp);
+                    let o_inner = &offs[fp..];
+                    for (t, &v0t) in v0.iter().enumerate() {
+                        let w = xi * v0t;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let r = w0 + t;
+                        let dst = if r < row_hi {
+                            let lo = (r - row_lo) * row_len;
+                            &mut slab[lo..lo + row_len]
+                        } else {
+                            let lo = (r - row_hi) * row_len;
+                            &mut rim[lo..lo + row_len]
+                        };
+                        self.scatter_real(o_inner, v_inner, fp, d - 1, w, dst);
+                    }
+                }
+                Some(rim)
+            })
+            .collect();
+        // Fixed-order sequential rim merge: rim row j of tile t lands
+        // on global row (row_hi + j) mod g0.
+        for (tile, rim) in tl.tiles.iter().zip(rims) {
+            let Some(rim) = rim else { continue };
+            let row_hi = tile.row_hi as usize;
+            for (j, rrow) in rim.chunks_exact(row_len).enumerate() {
+                let grow = (row_hi + j) % g0;
+                let dst = &mut grid[grow * row_len..(grow + 1) * row_len];
+                for (g, &v) in dst.iter_mut().zip(rrow) {
+                    *g += v;
+                }
+            }
+            self.spread_rim_real.put(rim);
+        }
+    }
+
+    /// Flat-offset scatter of one footprint onto a REAL grid — the
+    /// same arithmetic [`Self::scatter_cpx`] performs, at half the
+    /// memory traffic. `axes = d` scatters the whole footprint;
+    /// `axes = d − 1` with the leading axis stripped scatters one
+    /// footprint row (the tiled spread's inner step); `axes = 0` adds
+    /// the bare weight (1-d rows are single cells).
+    fn scatter_real(
+        &self,
+        offs: &[u32],
+        vals: &[f64],
+        fp: usize,
+        axes: usize,
+        weight: f64,
+        grid: &mut [f64],
+    ) {
+        match axes {
+            0 => grid[0] += weight,
+            1 => {
+                for (&o, &v) in offs.iter().zip(vals) {
+                    grid[o as usize] += weight * v;
+                }
+            }
+            2 => {
+                let (o0, o1) = offs.split_at(fp);
+                let (v0, v1) = vals.split_at(fp);
+                for (&oa, &va) in o0.iter().zip(v0) {
+                    let w = weight * va;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let base = oa as usize;
+                    for (&ob, &vb) in o1.iter().zip(v1) {
+                        grid[base + ob as usize] += w * vb;
+                    }
+                }
+            }
+            3 => {
+                let (o0, rest) = offs.split_at(fp);
+                let (o1, o2) = rest.split_at(fp);
+                let (v0, rest) = vals.split_at(fp);
+                let (v1, v2) = rest.split_at(fp);
+                for (&oa, &va) in o0.iter().zip(v0) {
+                    let wa = weight * va;
+                    let ba = oa as usize;
+                    for (&ob, &vb) in o1.iter().zip(v1) {
+                        let w = wa * vb;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let base = ba + ob as usize;
+                        for (&oc, &vc) in o2.iter().zip(v2) {
+                            grid[base + oc as usize] += w * vc;
+                        }
+                    }
+                }
+            }
+            _ => {
+                let outer = axes - 1;
+                let mut idx = [0usize; MAX_DIMS];
+                loop {
+                    let mut base = 0usize;
+                    let mut w = weight;
+                    for a in 0..outer {
+                        base += offs[a * fp + idx[a]] as usize;
+                        w *= vals[a * fp + idx[a]];
+                    }
+                    if w != 0.0 {
+                        let o = &offs[outer * fp..(outer + 1) * fp];
+                        let v = &vals[outer * fp..(outer + 1) * fp];
+                        for (&ol, &vl) in o.iter().zip(v) {
+                            grid[base + ol as usize] += w * vl;
+                        }
+                    }
+                    let mut a = outer;
+                    loop {
+                        if a == 0 {
+                            return;
+                        }
+                        a -= 1;
+                        idx[a] += 1;
+                        if idx[a] < fp {
+                            break;
+                        }
+                        idx[a] = 0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The SEED scatter kernel (heap odometer + `rem_euclid` wrapping
+    /// per point), retained verbatim: it is the semantic oracle the
+    /// flat-offset and tiled engines are validated against, and the
+    /// "seed unsorted" baseline of the spread/gather micro-benchmark.
+    /// Per-cell arithmetic is identical to [`Self::scatter_real`], so
+    /// the two produce bit-identical grids.
+    fn scatter_real_seed(
         &self,
         starts: &[i64],
         vals: &[f64],
@@ -887,8 +1577,105 @@ impl NfftPlan {
         }
     }
 
-    /// Gather of one point's footprint from a REAL grid.
-    fn gather_point_real_f64(&self, starts: &[i64], vals: &[f64], grid: &[f64]) -> f64 {
+    /// Flat-offset gather of one footprint from a REAL grid:
+    /// per-axis-unrolled small-d paths, stack odometer beyond — no
+    /// heap allocation, no index wrapping. The accumulation order
+    /// (inner tap sum, then `acc += inner · w` per outer combination)
+    /// mirrors the seed kernel exactly, so results are bit-identical.
+    fn gather_real(&self, offs: &[u32], vals: &[f64], grid: &[f64]) -> f64 {
+        let d = self.d;
+        let fp = vals.len() / d;
+        match d {
+            1 => {
+                let mut inner = 0.0f64;
+                for (&o, &v) in offs.iter().zip(vals) {
+                    inner += grid[o as usize] * v;
+                }
+                inner
+            }
+            2 => {
+                let (o0, o1) = offs.split_at(fp);
+                let (v0, v1) = vals.split_at(fp);
+                let mut acc = 0.0f64;
+                for (&oa, &va) in o0.iter().zip(v0) {
+                    if va == 0.0 {
+                        continue;
+                    }
+                    let base = oa as usize;
+                    let mut inner = 0.0f64;
+                    for (&ob, &vb) in o1.iter().zip(v1) {
+                        inner += grid[base + ob as usize] * vb;
+                    }
+                    acc += inner * va;
+                }
+                acc
+            }
+            3 => {
+                let (o0, rest) = offs.split_at(fp);
+                let (o1, o2) = rest.split_at(fp);
+                let (v0, rest) = vals.split_at(fp);
+                let (v1, v2) = rest.split_at(fp);
+                let mut acc = 0.0f64;
+                for (&oa, &va) in o0.iter().zip(v0) {
+                    let ba = oa as usize;
+                    for (&ob, &vb) in o1.iter().zip(v1) {
+                        let w = va * vb;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let base = ba + ob as usize;
+                        let mut inner = 0.0f64;
+                        for (&oc, &vc) in o2.iter().zip(v2) {
+                            inner += grid[base + oc as usize] * vc;
+                        }
+                        acc += inner * w;
+                    }
+                }
+                acc
+            }
+            _ => {
+                let outer = d - 1;
+                let mut idx = [0usize; MAX_DIMS];
+                let mut acc = 0.0f64;
+                'outer: loop {
+                    let mut base = 0usize;
+                    let mut w = 1.0;
+                    for a in 0..outer {
+                        base += offs[a * fp + idx[a]] as usize;
+                        w *= vals[a * fp + idx[a]];
+                    }
+                    if w != 0.0 {
+                        let o = &offs[outer * fp..(outer + 1) * fp];
+                        let v = &vals[outer * fp..(outer + 1) * fp];
+                        let mut inner = 0.0f64;
+                        for (&ol, &vl) in o.iter().zip(v) {
+                            inner += grid[base + ol as usize] * vl;
+                        }
+                        acc += inner * w;
+                    }
+                    let mut a = outer;
+                    loop {
+                        if a == 0 {
+                            break 'outer;
+                        }
+                        a -= 1;
+                        idx[a] += 1;
+                        if idx[a] < fp {
+                            break;
+                        }
+                        idx[a] = 0;
+                    }
+                }
+                acc
+            }
+        }
+    }
+
+    /// The SEED gather kernel (heap odometer + `rem_euclid` per
+    /// point), retained verbatim as the oracle / benchmark baseline of
+    /// [`Self::gather_real_grid_reference`]. Bit-identical to
+    /// [`Self::gather_real`].
+    fn gather_real_seed(&self, starts: &[i64], vals: &[f64], grid: &[f64]) -> f64 {
         let d = self.d;
         let fp = vals.len() / d;
         let last = d - 1;
@@ -934,86 +1721,123 @@ impl NfftPlan {
         acc
     }
 
-    /// Real-part gather of one point's footprint:
-    /// `Σ_footprint Re(grid_u) · Π_a φ_a(v_a − u_a/n_os_a)`.
-    fn gather_point_real(&self, starts: &[i64], vals: &[f64], grid: &[Complex]) -> f64 {
+    /// Real-part flat-offset gather from a COMPLEX grid:
+    /// `Σ_footprint Re(grid_u) · Π_a φ_a(v_a − u_a/n_os_a)` — the same
+    /// walk as [`Self::gather_real`] reading `.re`.
+    fn gather_cpx_re(&self, offs: &[u32], vals: &[f64], grid: &[Complex]) -> f64 {
         let d = self.d;
         let fp = vals.len() / d;
-        let last = d - 1;
-        let n_last = self.n_os[last];
-        let mut acc = 0.0f64;
-        let mut idx = vec![0usize; d.saturating_sub(1)];
-        'outer: loop {
-            let mut base = 0usize;
-            let mut w = 1.0;
-            for a in 0..last {
-                let u = (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
-                base += u * self.strides[a];
-                w *= vals[a * fp + idx[a]];
-            }
-            if w != 0.0 {
-                let lvals = &vals[last * fp..(last + 1) * fp];
-                let s = starts[last].rem_euclid(n_last as i64) as usize;
-                let first_len = fp.min(n_last - s);
+        match d {
+            1 => {
                 let mut inner = 0.0f64;
-                let src = &grid[base + s..base + s + first_len];
-                for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
-                    inner += g.re * lv;
+                for (&o, &v) in offs.iter().zip(vals) {
+                    inner += grid[o as usize].re * v;
                 }
-                let src = &grid[base..base + fp - first_len];
-                for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
-                    inner += g.re * lv;
-                }
-                acc += inner * w;
+                inner
             }
-            let mut a = last;
-            loop {
-                if a == 0 {
-                    break 'outer;
+            2 => {
+                let (o0, o1) = offs.split_at(fp);
+                let (v0, v1) = vals.split_at(fp);
+                let mut acc = 0.0f64;
+                for (&oa, &va) in o0.iter().zip(v0) {
+                    if va == 0.0 {
+                        continue;
+                    }
+                    let base = oa as usize;
+                    let mut inner = 0.0f64;
+                    for (&ob, &vb) in o1.iter().zip(v1) {
+                        inner += grid[base + ob as usize].re * vb;
+                    }
+                    acc += inner * va;
                 }
-                a -= 1;
-                idx[a] += 1;
-                if idx[a] < fp {
-                    break;
+                acc
+            }
+            3 => {
+                let (o0, rest) = offs.split_at(fp);
+                let (o1, o2) = rest.split_at(fp);
+                let (v0, rest) = vals.split_at(fp);
+                let (v1, v2) = rest.split_at(fp);
+                let mut acc = 0.0f64;
+                for (&oa, &va) in o0.iter().zip(v0) {
+                    let ba = oa as usize;
+                    for (&ob, &vb) in o1.iter().zip(v1) {
+                        let w = va * vb;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let base = ba + ob as usize;
+                        let mut inner = 0.0f64;
+                        for (&oc, &vc) in o2.iter().zip(v2) {
+                            inner += grid[base + oc as usize].re * vc;
+                        }
+                        acc += inner * w;
+                    }
                 }
-                idx[a] = 0;
+                acc
+            }
+            _ => {
+                let outer = d - 1;
+                let mut idx = [0usize; MAX_DIMS];
+                let mut acc = 0.0f64;
+                'outer: loop {
+                    let mut base = 0usize;
+                    let mut w = 1.0;
+                    for a in 0..outer {
+                        base += offs[a * fp + idx[a]] as usize;
+                        w *= vals[a * fp + idx[a]];
+                    }
+                    if w != 0.0 {
+                        let o = &offs[outer * fp..(outer + 1) * fp];
+                        let v = &vals[outer * fp..(outer + 1) * fp];
+                        let mut inner = 0.0f64;
+                        for (&ol, &vl) in o.iter().zip(v) {
+                            inner += grid[base + ol as usize].re * vl;
+                        }
+                        acc += inner * w;
+                    }
+                    let mut a = outer;
+                    loop {
+                        if a == 0 {
+                            break 'outer;
+                        }
+                        a -= 1;
+                        idx[a] += 1;
+                        if idx[a] < fp {
+                            break;
+                        }
+                        idx[a] = 0;
+                    }
+                }
+                acc
             }
         }
-        acc
     }
 
-    /// Complex gather of one point's footprint.
-    fn gather_point(&self, starts: &[i64], vals: &[f64], grid: &[Complex]) -> Complex {
+    /// Complex flat-offset gather of one footprint (oracle forward
+    /// path); same walk as [`Self::gather_real`] over complex values.
+    fn gather_cpx(&self, offs: &[u32], vals: &[f64], grid: &[Complex]) -> Complex {
         let d = self.d;
         let fp = vals.len() / d;
-        let last = d - 1;
-        let n_last = self.n_os[last];
+        let outer = d - 1;
+        let mut idx = [0usize; MAX_DIMS];
         let mut acc = Complex::ZERO;
-        let mut idx = vec![0usize; d.saturating_sub(1)];
         'outer: loop {
             let mut base = 0usize;
             let mut w = 1.0;
-            for a in 0..last {
-                let u = (starts[a] + idx[a] as i64).rem_euclid(self.n_os[a] as i64) as usize;
-                base += u * self.strides[a];
+            for a in 0..outer {
+                base += offs[a * fp + idx[a]] as usize;
                 w *= vals[a * fp + idx[a]];
             }
             if w != 0.0 {
-                let lvals = &vals[last * fp..(last + 1) * fp];
-                let s = starts[last].rem_euclid(n_last as i64) as usize;
-                let first_len = fp.min(n_last - s);
+                let o = &offs[outer * fp..(outer + 1) * fp];
+                let v = &vals[outer * fp..(outer + 1) * fp];
                 let mut inner = Complex::ZERO;
-                let src = &grid[base + s..base + s + first_len];
-                for (g, &lv) in src.iter().zip(&lvals[..first_len]) {
-                    inner += g.scale(lv);
-                }
-                let src = &grid[base..base + fp - first_len];
-                for (g, &lv) in src.iter().zip(&lvals[first_len..]) {
-                    inner += g.scale(lv);
+                for (&ol, &vl) in o.iter().zip(v) {
+                    inner += grid[base + ol as usize].scale(vl);
                 }
                 acc += inner.scale(w);
             }
-            let mut a = last;
+            let mut a = outer;
             loop {
                 if a == 0 {
                     break 'outer;
@@ -1391,6 +2215,145 @@ mod tests {
         }
         // The pool retains the per-column scratch for reuse.
         assert!(pool.idle() >= 1);
+    }
+
+    #[test]
+    fn flat_offset_kernels_bit_identical_to_seed_reference() {
+        // The flat-offset spread/gather must reproduce the retained
+        // seed (odometer + rem_euclid) kernels bit for bit, for every
+        // dimension, including wrap-around footprints.
+        for (band, d) in [(vec![16usize], 1), (vec![8, 16], 2), (vec![8, 8, 8], 3)] {
+            let n = 60;
+            let mut points = rand_points(n, d, 201 + d as u64);
+            // Force boundary wraps.
+            points[0] = -0.4999;
+            points[d] = 0.4999;
+            let plan = NfftPlan::new(&band, 3, WindowKind::KaiserBessel);
+            let geo = plan.build_geometry(&points);
+            let mut rng = crate::data::rng::Rng::seed_from(202);
+            let x = rng.normal_vec(n);
+            let mut g_ref = plan.alloc_real_grid();
+            let mut g_new = plan.alloc_real_grid();
+            plan.spread_real_reference(&geo, &x, &mut g_ref);
+            plan.spread_real_with_geometry(&geo, &x, &mut g_new);
+            assert_eq!(g_ref, g_new, "d={d}: flat-offset spread must match seed bitwise");
+            let mut o_ref = vec![0.0; n];
+            let mut o_new = vec![0.0; n];
+            plan.gather_real_grid_reference(&geo, &g_ref, &mut o_ref);
+            plan.gather_real_grid(&geo, &g_new, &mut o_new);
+            assert_eq!(o_ref, o_new, "d={d}: flat-offset gather must match seed bitwise");
+        }
+    }
+
+    #[test]
+    fn tiled_spread_matches_oracle_and_is_deterministic() {
+        use crate::nfft::SpreadLayout;
+        for (band, d) in [(vec![16usize], 1), (vec![8, 16], 2), (vec![8, 8, 8], 3)] {
+            let n = 80;
+            let mut points = rand_points(n, d, 211 + d as u64);
+            points[0] = -0.4999; // rim wrap across the leading axis
+            points[d] = 0.4999;
+            let plan = NfftPlan::new(&band, 3, WindowKind::KaiserBessel);
+            let geo_u = plan.build_geometry(&points);
+            let geo_t = plan.build_geometry_with(&points, SpreadLayout::Tiled);
+            assert_eq!(geo_t.layout(), SpreadLayout::Tiled);
+            assert!(geo_t.bytes() > geo_u.bytes(), "tiled layout must be accounted for");
+            let mut rng = crate::data::rng::Rng::seed_from(212);
+            let x = rng.normal_vec(n);
+            let mut g_ref = plan.alloc_real_grid();
+            plan.spread_real_reference(&geo_u, &x, &mut g_ref);
+            let mut g_tiled = plan.alloc_real_grid();
+            plan.spread_real_with_geometry(&geo_t, &x, &mut g_tiled);
+            // Owner-computes reorders per-cell sums: roundoff-level
+            // agreement with the unsorted oracle. Raw grid cells carry
+            // the (large) un-deconvolved window magnitude, so the
+            // tolerance is relative to the largest cell.
+            let gscale = g_ref.iter().fold(0.0f64, |a, v| a.max(v.abs())).max(1e-300);
+            for (t, r) in g_tiled.iter().zip(&g_ref) {
+                assert!((t - r).abs() < 1e-11 * gscale, "d={d}: tiled spread diverged");
+            }
+            // ...but bitwise reproducibility run to run.
+            let mut g_again = plan.alloc_real_grid();
+            plan.spread_real_with_geometry(&geo_t, &x, &mut g_again);
+            assert_eq!(g_tiled, g_again, "d={d}: tiled spread must be deterministic");
+            // The sorted gather walk is bit-identical to caller order.
+            let mut o_t = vec![0.0; n];
+            let mut o_u = vec![0.0; n];
+            plan.gather_real_grid(&geo_t, &g_ref, &mut o_t);
+            plan.gather_real_grid(&geo_u, &g_ref, &mut o_u);
+            assert_eq!(o_t, o_u, "d={d}: sorted gather must match caller-order gather");
+        }
+    }
+
+    #[test]
+    fn boxed_spread_bit_identical_to_full_grid() {
+        // A compact cloud (the fastsum regime: ρ-scaled into
+        // [−1/4, 1/4]) gets a genuine sub-box; spreading into it and
+        // merging must reproduce the full-grid spread bit for bit.
+        for (band, d) in [(vec![16usize], 1), (vec![8, 16], 2), (vec![8, 8, 8], 3)] {
+            let n = 50;
+            let mut rng = crate::data::rng::Rng::seed_from(221 + d as u64);
+            let points: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.22, 0.22)).collect();
+            let plan = NfftPlan::new(&band, 3, WindowKind::KaiserBessel);
+            let geo = plan.build_geometry(&points);
+            let bx = plan.bounding_box(&geo);
+            assert!(!bx.is_full_grid(), "d={d}: compact cloud must get a sub-box");
+            assert!(bx.num_cells() < plan.grid_len(), "d={d}: box must shrink the grid");
+            let x = rng.normal_vec(n);
+            let mut want = plan.alloc_real_grid();
+            plan.spread_real_with_geometry(&geo, &x, &mut want);
+            let scratch = BufferPool::new(bx.num_cells(), 0.0f64);
+            let mut sub = vec![0.0; bx.num_cells()];
+            plan.spread_real_boxed(&geo, &x, &bx, &mut sub, &scratch);
+            let mut got = plan.alloc_real_grid();
+            plan.merge_boxed_into(&bx, &sub, &mut got);
+            assert_eq!(got, want, "d={d}: boxed spread+merge must match full spread");
+        }
+    }
+
+    #[test]
+    fn boxed_spread_falls_back_on_torus_spanning_clouds() {
+        // Points near ±1/2 span the whole axis: the box degenerates to
+        // the full grid and the boxed entry point delegates.
+        let points = vec![-0.4999, 0.4999, -0.25, 0.25];
+        let band = [16usize];
+        let plan = NfftPlan::new(&band, 6, WindowKind::KaiserBessel);
+        let geo = plan.build_geometry(&points);
+        let bx = plan.bounding_box(&geo);
+        assert!(bx.is_full_grid());
+        assert_eq!(bx.num_cells(), plan.grid_len());
+        let x = vec![1.0, -2.0, 0.5, 0.25];
+        let mut want = plan.alloc_real_grid();
+        plan.spread_real_with_geometry(&geo, &x, &mut want);
+        let scratch = plan.real_grid_pool();
+        let mut sub = plan.alloc_real_grid();
+        plan.spread_real_boxed(&geo, &x, &bx, &mut sub, &scratch);
+        let mut got = plan.alloc_real_grid();
+        plan.merge_boxed_into(&bx, &sub, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn tiled_geometry_runs_full_pipeline() {
+        // An end-to-end adjoint through a tiled geometry agrees with
+        // the NDFT oracle (sanity that the tiled spread feeds the FFT
+        // stage correctly, rims and all).
+        let n = 70;
+        let d = 2;
+        let points = rand_points(n, d, 231);
+        let mut rng = crate::data::rng::Rng::seed_from(232);
+        let x = rng.normal_vec(n);
+        let band = [16usize, 8];
+        let want = ndft_adjoint(&points, d, &x, &band);
+        let plan = NfftPlan::new(&band, 6, WindowKind::KaiserBessel);
+        let geo = plan.build_geometry_with(&points, crate::nfft::SpreadLayout::Tiled);
+        let mut rgrid = plan.alloc_real_grid();
+        let mut spec = plan.alloc_half_spectrum();
+        let mut got = vec![Complex::ZERO; plan.num_freq()];
+        plan.spread_real_with_geometry(&geo, &x, &mut rgrid);
+        plan.adjoint_finalize_real(&rgrid, &mut spec, &mut got);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum();
+        assert!(max_err_c(&got, &want) < 1e-9 * scale, "err {}", max_err_c(&got, &want));
     }
 
     #[test]

@@ -122,12 +122,20 @@ impl Window {
         2 * self.m + 2
     }
 
+    /// First grid index of the footprint of a node at `v`:
+    /// `u0 = ⌊v·n_os⌋ − m` (unwrapped; may be negative). The single
+    /// definition the footprint table, the tile classification and the
+    /// bounding-box subgrids all share.
+    #[inline]
+    pub fn start_index(&self, v: f64) -> i64 {
+        (v * self.n_os as f64).floor() as i64 - self.m as i64
+    }
+
     /// Fill `vals[t] = φ(v − (u0 + t)/n_os)` for `t = 0..2m+2` where
     /// `u0 = ⌊v·n_os⌋ − m`. Returns `u0`.
     pub fn footprint_values(&self, v: f64, vals: &mut [f64]) -> i64 {
         debug_assert_eq!(vals.len(), self.footprint());
-        let c = v * self.n_os as f64;
-        let u0 = c.floor() as i64 - self.m as i64;
+        let u0 = self.start_index(v);
         let inv = 1.0 / self.n_os as f64;
         for (t, out) in vals.iter_mut().enumerate() {
             *out = self.phi(v - (u0 + t as i64) as f64 * inv);
@@ -209,6 +217,7 @@ mod tests {
         let mut vals = vec![0.0; w.footprint()];
         let v = 0.113;
         let u0 = w.footprint_values(v, &mut vals);
+        assert_eq!(u0, w.start_index(v), "footprint start must match start_index");
         // The grid point nearest to v must be inside [u0, u0+2m+1].
         let c = (v * 32.0).round() as i64;
         assert!(u0 <= c && c <= u0 + 2 * 3 + 1);

@@ -22,6 +22,21 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Encode accumulated [`PhaseTimings`] as a JSON object
+/// `{phase: {secs, count}}` — the shape the per-shard stats report
+/// ([`crate::shard::ShardedOperator::stats_json`]) and the bench
+/// artifacts embed.
+pub fn timings_json(t: &PhaseTimings) -> Json {
+    let mut obj = BTreeMap::new();
+    for (name, secs, count) in t.entries() {
+        let mut e = BTreeMap::new();
+        e.insert("secs".to_string(), Json::Num(*secs));
+        e.insert("count".to_string(), Json::Num(*count as f64));
+        obj.insert(name.clone(), Json::Obj(e));
+    }
+    Json::Obj(obj)
+}
+
 /// Aggregates per-shard and shared-stage timings for one sharded
 /// operator. All methods take `&self`; recording is safe from the
 /// shard-parallel phases.
@@ -164,6 +179,23 @@ mod tests {
         let skew = exec.skew_report();
         assert!(skew.contains("shard 0"));
         assert!(skew.contains("shard 1"));
+    }
+
+    #[test]
+    fn timings_encode_as_json() {
+        let mut t = PhaseTimings::new();
+        t.add("spread", 1.5);
+        t.add("spread", 0.5);
+        t.add("reduce", 0.25);
+        let j = timings_json(&t);
+        let spread = j.get("spread").expect("spread present");
+        assert_eq!(spread.get("secs").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(spread.get("count").and_then(Json::as_f64), Some(2.0));
+        assert!(j.get("reduce").is_some());
+        // Survives a serialize → parse round trip.
+        let back = json::parse(&j.to_string()).unwrap();
+        let secs = back.get("spread").and_then(|s| s.get("secs")).and_then(Json::as_f64);
+        assert_eq!(secs, Some(2.0));
     }
 
     #[test]

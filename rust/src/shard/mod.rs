@@ -22,13 +22,24 @@
 //!    just that shard's points ([`plan::ShardPlan`]), so the tables
 //!    partition instead of duplicating.
 //! 3. **Shards** ([`operator::ShardedOperator`]) — each apply runs the
-//!    adjoint spread shard-locally into pooled subgrids, tree-reduces
-//!    them (fixed, deterministic order — [`crate::util::reduce`]) into
-//!    the global grid, performs the shared FFT/deconvolve/kernel
-//!    multiply against the `Arc`-shared coefficient table, then fans
-//!    the forward transform back out per shard — the freq→grid half
-//!    runs once, each shard gathers only its own points — with
-//!    diagonal and normalization corrections composed shard-locally.
+//!    adjoint spread shard-locally into pooled *bounding-box subgrids*
+//!    ([`plan::SubgridPolicy`]): the per-axis box of the shard's
+//!    window footprints instead of a full oversampled grid, so the
+//!    resident scratch and the inter-shard exchange object shrink to
+//!    what the shard actually touches (Morton tiles make the boxes
+//!    compact by construction). The boxes merge into the global grid
+//!    in fixed shard order — each box's torus wrap is applied exactly
+//!    once and the merge is injective, so the boxed path is
+//!    bit-identical to full-size subgrids (`FullGrid`, the retained
+//!    oracle policy) and deterministic. The shared
+//!    FFT/deconvolve/kernel multiply then runs once against the
+//!    `Arc`-shared coefficient table, and the forward transform fans
+//!    back out per shard — the freq→grid half runs once, each shard
+//!    gathers only its own points — with diagonal and normalization
+//!    corrections composed shard-locally.
+//!    [`operator::ShardedOperator::stats_json`] reports the per-shard
+//!    exchange-object sizes (box vs full grid) alongside the phase
+//!    timings, so the shrink is observable, not just asserted.
 //! 4. **Coordinator** ([`crate::coordinator::Coordinator`]) — jobs are
 //!    operator-agnostic, so `Coordinator::new_sharded` serves every
 //!    existing [`crate::coordinator::Job`] variant (matvec, block
@@ -45,7 +56,7 @@ pub mod operator;
 pub mod partition;
 pub mod plan;
 
-pub use exec::ShardExecutor;
+pub use exec::{timings_json, ShardExecutor};
 pub use operator::{ShardedMode, ShardedOperator};
 pub use partition::{PartitionError, PartitionStrategy, ShardSpec};
-pub use plan::{build_shard_plans, ShardPlan};
+pub use plan::{build_shard_plans, build_shard_plans_with, ShardPlan, SubgridPolicy};

@@ -6,11 +6,15 @@
 //! 1. **shard-local adjoint spread** — each shard gathers its own
 //!    entries of `x` (applying the `D^{−1/2}` input scaling locally in
 //!    normalized mode) and spreads them into its own pooled REAL
-//!    subgrid (half the bytes of the seed's complex subgrids — the
-//!    exchange object a multi-process dispatcher would ship);
-//! 2. **shared frequency stage** — the per-shard subgrids tree-reduce
-//!    (fixed order, deterministic) into the global real grid, ONE r2c
-//!    FFT produces the half spectrum, and the `Arc`-shared fused
+//!    bounding-box subgrid ([`crate::shard::plan::SubgridPolicy`]):
+//!    the box of the shard's footprints rather than the full
+//!    oversampled grid — the exchange object a multi-process
+//!    dispatcher would ship, now sized to what the shard touches;
+//! 2. **shared frequency stage** — the per-shard subgrids merge into
+//!    the global real grid in fixed shard order (each box's torus
+//!    wrap applied exactly once; injective per box, so per-cell bits
+//!    are preserved and the merge is deterministic), ONE r2c FFT
+//!    produces the half spectrum, and the `Arc`-shared fused
 //!    multiplier `W` (deconvolution² × kernel table, folded onto the
 //!    half spectrum) multiplies in place — this stage is identical no
 //!    matter how many shards exist;
@@ -29,13 +33,14 @@ use crate::fastsum::{FastsumOperator, FastsumParams, Kernel};
 use crate::fft::Complex;
 use crate::graph::operator::LinearOperator;
 use crate::nfft::NfftPlan;
-use crate::shard::exec::ShardExecutor;
+use crate::shard::exec::{timings_json, ShardExecutor};
 use crate::shard::partition::ShardSpec;
-use crate::shard::plan::{build_shard_plans, ShardPlan};
+use crate::shard::plan::{build_shard_plans_with, ShardPlan, SubgridPolicy};
+use crate::util::json::Json;
 use crate::util::pool::BufferPool;
-use crate::util::reduce::tree_reduce_in_place;
 use crate::util::timer::{PhaseTimings, Timer};
 use rayon::prelude::*;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Which operator view the shards compute.
@@ -92,14 +97,32 @@ impl ShardedOperator {
     /// Shard an existing parent operator: per-shard geometries are
     /// built once from the parent's ρ-scaled points; the NFFT plan and
     /// the regularised-kernel Fourier table are shared via `Arc` (no
-    /// duplication across shards).
+    /// duplication across shards). Subgrids follow the default
+    /// [`SubgridPolicy::BoundingBox`].
     pub fn from_fastsum(parent: &FastsumOperator, spec: ShardSpec) -> ShardedOperator {
+        Self::from_fastsum_with(parent, spec, SubgridPolicy::default())
+    }
+
+    /// [`Self::from_fastsum`] with an explicit subgrid policy
+    /// (`FullGrid` is the retained oracle for the bounding-box path —
+    /// the two are bit-identical by construction).
+    pub fn from_fastsum_with(
+        parent: &FastsumOperator,
+        spec: ShardSpec,
+        policy: SubgridPolicy,
+    ) -> ShardedOperator {
         assert_eq!(spec.num_points(), parent.dim(), "shard spec built for a different cloud");
         let plan = parent.plan().clone();
         let half_mult = parent.half_multiplier().clone();
         let exec = ShardExecutor::new(spec.num_shards());
         let t = Timer::start();
-        let shards = build_shard_plans(&plan, parent.scaled_points(), parent.ambient_dim(), &spec);
+        let shards = build_shard_plans_with(
+            &plan,
+            parent.scaled_points(),
+            parent.ambient_dim(),
+            &spec,
+            policy,
+        );
         exec.record_global("shard-geometry", t.elapsed_secs());
         let specs = plan.half_spectrum_pool();
         let rgrids = plan.real_grid_pool();
@@ -179,6 +202,66 @@ impl ShardedOperator {
         self.exec.aggregate()
     }
 
+    /// Total bytes of the exchange objects one apply ships (the boxed
+    /// real subgrids, summed over non-empty shards). Compare against
+    /// `num_shards · full_grid_bytes` — the seed's full-size exchange.
+    pub fn exchange_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|sh| sh.num_points() > 0)
+            .map(ShardPlan::exchange_bytes)
+            .sum()
+    }
+
+    /// Bytes of one full oversampled real grid (the per-shard exchange
+    /// object under the seed/`FullGrid` policy).
+    pub fn full_grid_bytes(&self) -> usize {
+        self.plan.grid_len() * std::mem::size_of::<f64>()
+    }
+
+    /// Per-shard stats + timings as JSON — the observability object
+    /// the bench harness and a future multi-process dispatcher emit.
+    /// Records, per shard: point count, the exchange-object bytes
+    /// (bounding-box subgrid) next to the full-grid bytes it replaces,
+    /// whether the box fell back to the full grid, the geometry-table
+    /// bytes, and the shard's phase timings.
+    pub fn stats_json(&self) -> Json {
+        let full_bytes = self.full_grid_bytes();
+        let per_shard: Vec<Json> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, sh)| {
+                let mut o = BTreeMap::new();
+                o.insert("shard".to_string(), Json::Num(s as f64));
+                o.insert("points".to_string(), Json::Num(sh.num_points() as f64));
+                // Empty shards are skipped by apply_one and ship
+                // nothing — report 0 so per-shard rows sum to
+                // `exchange_bytes_total`.
+                let ex = if sh.num_points() == 0 { 0 } else { sh.exchange_bytes() };
+                o.insert("exchange_bytes".to_string(), Json::Num(ex as f64));
+                o.insert("full_grid_bytes".to_string(), Json::Num(full_bytes as f64));
+                o.insert("subgrid_is_full".to_string(), Json::Bool(sh.bbox().is_full_grid()));
+                o.insert("geometry_bytes".to_string(), Json::Num(sh.geometry().bytes() as f64));
+                o.insert("timings".to_string(), timings_json(&self.exec.shard_timings(s)));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("operator".to_string(), Json::Str(self.name.clone()));
+        root.insert("shards".to_string(), Json::Num(self.shards.len() as f64));
+        root.insert("columns_applied".to_string(), Json::Num(self.exec.columns_applied() as f64));
+        root.insert("exchange_bytes_total".to_string(), Json::Num(self.exchange_bytes() as f64));
+        root.insert(
+            "full_grid_exchange_bytes_total".to_string(),
+            Json::Num((self.shards.iter().filter(|sh| sh.num_points() > 0).count() * full_bytes)
+                as f64),
+        );
+        root.insert("shared_timings".to_string(), timings_json(&self.exec.shared_timings()));
+        root.insert("per_shard".to_string(), Json::Arr(per_shard));
+        Json::Obj(root)
+    }
+
     /// `D^{−1/2}` input scaling for point `i` (1 in adjacency mode).
     #[inline]
     fn in_scale(&self, i: usize) -> f64 {
@@ -195,10 +278,10 @@ impl ShardedOperator {
         let normalized = self.mode == ShardedMode::Normalized;
         let t_all = Timer::start();
         // Phase 1: shard-local gather + adjoint spread into REAL
-        // subgrids. Empty shards (legal in hand-written/random specs)
-        // contribute nothing and are skipped — no grid to zero, no
-        // reduce operand.
-        let mut subs: Vec<Vec<f64>> = self
+        // bounding-box subgrids (the exchange object). Empty shards
+        // (legal in hand-written/random specs) contribute nothing and
+        // are skipped — no subgrid to zero, no merge operand.
+        let subs: Vec<(usize, Vec<f64>)> = self
             .shards
             .par_iter()
             .enumerate()
@@ -209,36 +292,43 @@ impl ShardedOperator {
                 for &i in sh.indices() {
                     local.push(x[i] * self.in_scale(i));
                 }
-                let mut grid = sh.grids().take();
-                self.plan.spread_real_with_geometry(sh.geometry(), &local, &mut grid);
+                let mut sub = sh.grids().take();
+                self.plan.spread_real_boxed(sh.geometry(), &local, sh.bbox(), &mut sub, sh.grids());
                 self.exec.record(s, "spread", t.elapsed_secs());
-                grid
+                (s, sub)
             })
             .collect();
-        // Phase 2 (shared): tree-reduce subgrids into the global real
-        // grid, ONE r2c FFT, then the fused half-spectrum multiply —
-        // identical no matter how many shards exist.
+        // Phase 2 (shared): merge the boxed subgrids into the global
+        // real grid in fixed shard order (each box's wrap applied
+        // once; deterministic), ONE r2c FFT, then the fused
+        // half-spectrum multiply — identical no matter how many shards
+        // exist.
+        let mut fgrid = self.rgrids.take();
         let t = Timer::start();
-        tree_reduce_in_place(&mut subs);
+        for g in fgrid.iter_mut() {
+            *g = 0.0;
+        }
+        for (s, sub) in &subs {
+            self.plan.merge_boxed_into(self.shards[*s].bbox(), sub, &mut fgrid);
+        }
         self.exec.record_global("reduce", t.elapsed_secs());
         let mut spec = self.specs.take();
         let t = Timer::start();
-        self.plan.forward_half_spectrum(&subs[0], &mut spec);
+        self.plan.forward_half_spectrum(&fgrid, &mut spec);
         self.exec.record_global("fft-forward", t.elapsed_secs());
-        let spreaders = self.shards.iter().filter(|sh| sh.num_points() > 0);
-        for (sh, sub) in spreaders.zip(subs) {
-            sh.grids().put(sub);
+        for (s, sub) in subs {
+            self.shards[s].grids().put(sub);
         }
         let t = Timer::start();
         for (f, &w) in spec.iter_mut().zip(self.half_mult.iter()) {
             *f = f.scale(w);
         }
         self.exec.record_global("multiply", t.elapsed_secs());
-        // Phase 3: ONE shared c2r backward transform, then the
-        // per-point gather fans out across shards with diagonal +
-        // normalization corrections composed shard-locally.
+        // Phase 3: ONE shared c2r backward transform (reusing the
+        // merged spread grid as the output buffer), then the per-point
+        // gather fans out across shards with diagonal + normalization
+        // corrections composed shard-locally.
         let t = Timer::start();
-        let mut fgrid = self.rgrids.take();
         self.plan.backward_half_spectrum(&mut spec, &mut fgrid);
         self.exec.record_global("forward-prepare", t.elapsed_secs());
         let fgrid_ref: &[f64] = &fgrid;
@@ -311,6 +401,12 @@ impl LinearOperator for ShardedOperator {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.shards.iter().map(ShardPlan::bytes).sum::<usize>()
+            + (self.half_mult.len() + self.degrees.len() + self.inv_sqrt_deg.len())
+                * std::mem::size_of::<f64>()
     }
 }
 
@@ -404,6 +500,100 @@ mod tests {
         let x = rng.normal_vec(60);
         let err = rel_l2_error(&sharded.apply_vec(&x), &parent.apply_vec(&x));
         assert!(err < 1e-12, "rel err {err}");
+    }
+
+    #[test]
+    fn bounding_box_policy_bit_identical_to_full_grid_policy() {
+        // The boxed exchange object must not change a single bit
+        // relative to full-size subgrids — the merge is injective and
+        // the per-cell accumulation order is preserved by construction.
+        let points = spiral_points(90, 11);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let mut rng = crate::data::rng::Rng::seed_from(12);
+        let x = rng.normal_vec(90);
+        for shards in [1usize, 3, 5] {
+            let spec = ShardSpec::morton(&points, 3, shards);
+            let boxed = ShardedOperator::from_fastsum_with(
+                &parent,
+                spec.clone(),
+                SubgridPolicy::BoundingBox,
+            );
+            let full =
+                ShardedOperator::from_fastsum_with(&parent, spec, SubgridPolicy::FullGrid);
+            assert_eq!(
+                boxed.apply_vec(&x),
+                full.apply_vec(&x),
+                "shards={shards}: policies must agree bitwise"
+            );
+            assert!(
+                boxed.exchange_bytes() <= full.exchange_bytes(),
+                "shards={shards}: boxes cannot exceed full grids"
+            );
+        }
+    }
+
+    #[test]
+    fn stats_report_exchange_object_shrink() {
+        // Morton tiles of a spatial cloud: every shard's bounding box
+        // must be measurably smaller than the full oversampled grid,
+        // and the stats JSON must carry the numbers.
+        let points = spiral_points(120, 13);
+        let sharded = ShardedOperator::adjacency(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+            ShardSpec::morton(&points, 3, 4),
+        );
+        let full = sharded.full_grid_bytes();
+        assert!(
+            sharded.exchange_bytes() < 4 * full,
+            "total exchange {} must undercut 4 full grids {}",
+            sharded.exchange_bytes(),
+            4 * full
+        );
+        let x = vec![1.0; 120];
+        let mut y = vec![0.0; 120];
+        sharded.apply(&x, &mut y);
+        let stats = sharded.stats_json();
+        assert_eq!(stats.get("shards").and_then(crate::util::json::Json::as_usize), Some(4));
+        let per = stats.get("per_shard").and_then(crate::util::json::Json::as_arr).unwrap();
+        assert_eq!(per.len(), 4);
+        for sh in per {
+            let ex = sh.get("exchange_bytes").and_then(crate::util::json::Json::as_f64).unwrap();
+            let fg = sh.get("full_grid_bytes").and_then(crate::util::json::Json::as_f64).unwrap();
+            assert!(ex <= fg, "exchange {ex} must not exceed full grid {fg}");
+            assert!(sh.get("timings").and_then(|t| t.get("spread")).is_some());
+        }
+        // The JSON survives a round trip (it is the wire object a
+        // dispatcher would ship).
+        let text = stats.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("exchange_bytes_total").and_then(crate::util::json::Json::as_f64),
+            Some(sharded.exchange_bytes() as f64)
+        );
+        // And the operator reports its resident state for capacity
+        // planning.
+        assert!(sharded.state_bytes() > 0);
+    }
+
+    #[test]
+    fn sharded_apply_is_deterministic() {
+        let points = spiral_points(100, 15);
+        let sharded = ShardedOperator::adjacency(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+            ShardSpec::morton(&points, 3, 5),
+        );
+        let mut rng = crate::data::rng::Rng::seed_from(16);
+        let x = rng.normal_vec(100);
+        let y1 = sharded.apply_vec(&x);
+        let y2 = sharded.apply_vec(&x);
+        assert_eq!(y1, y2, "boxed sharded apply must be run-to-run deterministic");
     }
 
     #[test]

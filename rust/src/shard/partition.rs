@@ -14,11 +14,13 @@
 //!   (identity layout; shard 0 of 1 is exactly the unsharded order);
 //! * [`ShardSpec::strided`] — round-robin `i mod s` (best static load
 //!   balance when point cost varies smoothly along the index order);
-//! * [`ShardSpec::morton`] — Morton / Z-order space-filling tiling:
-//!   points are sorted by interleaved quantised coordinates and split
-//!   contiguously, so each shard owns a spatially compact tile and its
-//!   spread touches a compact subgrid region (cache locality now,
-//!   subgrid-exchange economy in a multi-process future).
+//! * [`ShardSpec::morton`] — Morton / Z-order space-filling tiling
+//!   ([`crate::util::morton`], the substrate shared with the NFFT
+//!   geometry's tile sort): points are sorted by interleaved quantised
+//!   coordinates and split contiguously, so each shard owns a
+//!   spatially compact tile, its spread touches a compact subgrid
+//!   region, and the bounding-box exchange object
+//!   ([`crate::shard::plan`]) stays small.
 
 use crate::data::rng::Rng;
 
@@ -79,7 +81,7 @@ impl ShardSpec {
     /// exactly the unsharded order (the bit-for-bit anchor).
     pub fn contiguous(n: usize, shards: usize) -> ShardSpec {
         assert!(n >= 1, "empty point cloud");
-        let out = split_ranges(n, shards.clamp(1, n))
+        let out = crate::util::split_even(n, shards.clamp(1, n))
             .map(|r| r.collect())
             .collect();
         ShardSpec { n, shards: out }
@@ -104,8 +106,8 @@ impl ShardSpec {
     pub fn morton(points: &[f64], d: usize, shards: usize) -> ShardSpec {
         assert!(d >= 1 && !points.is_empty() && points.len() % d == 0);
         let n = points.len() / d;
-        let order = morton_order(points, d, n);
-        let out = split_ranges(n, shards.clamp(1, n))
+        let order = crate::util::morton::float_order(points, d, n);
+        let out = crate::util::split_even(n, shards.clamp(1, n))
             .map(|r| {
                 let mut idx: Vec<usize> = order[r].to_vec();
                 idx.sort_unstable();
@@ -196,61 +198,6 @@ impl ShardSpec {
     }
 }
 
-/// Near-equal contiguous ranges covering `0..n`: the first `n % s`
-/// shards get one extra element. The single balance policy behind both
-/// [`ShardSpec::contiguous`] and [`ShardSpec::morton`].
-fn split_ranges(n: usize, s: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
-    let base = n / s;
-    let rem = n % s;
-    let mut start = 0;
-    (0..s).map(move |i| {
-        let len = base + usize::from(i < rem);
-        let r = start..start + len;
-        start += len;
-        r
-    })
-}
-
-/// Indices of `points` sorted by Morton code (ties broken by index, so
-/// the order is fully deterministic).
-fn morton_order(points: &[f64], d: usize, n: usize) -> Vec<usize> {
-    let mut lo = vec![f64::INFINITY; d];
-    let mut hi = vec![f64::NEG_INFINITY; d];
-    for i in 0..n {
-        for a in 0..d {
-            let v = points[i * d + a];
-            lo[a] = lo[a].min(v);
-            hi[a] = hi[a].max(v);
-        }
-    }
-    // bits·d ≤ 63 keeps the interleaved code inside a u64.
-    let bits = (63 / d).clamp(1, 16);
-    let levels = ((1u64 << bits) - 1) as f64;
-    let scale: Vec<f64> = (0..d)
-        .map(|a| {
-            let span = hi[a] - lo[a];
-            if span > 0.0 {
-                levels / span
-            } else {
-                0.0 // degenerate axis: all points share the cell
-            }
-        })
-        .collect();
-    let mut keyed: Vec<(u64, usize)> = (0..n)
-        .map(|i| {
-            let mut code = 0u64;
-            for b in (0..bits).rev() {
-                for a in 0..d {
-                    let q = ((points[i * d + a] - lo[a]) * scale[a]) as u64;
-                    code = (code << 1) | ((q >> b) & 1);
-                }
-            }
-            (code, i)
-        })
-        .collect();
-    keyed.sort_unstable();
-    keyed.into_iter().map(|(_, i)| i).collect()
-}
 
 #[cfg(test)]
 mod tests {

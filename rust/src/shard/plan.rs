@@ -3,16 +3,45 @@
 //! A [`ShardPlan`] is everything one shard needs to run its half-passes
 //! locally: the global indices it owns, the [`NfftGeometry`] of those
 //! points (window footprints, built once from the parent `NfftPlan`),
-//! and its own grid [`BufferPool`] so shards never contend for scratch.
-//! Everything *shared* stays shared by construction: the immutable
-//! [`NfftPlan`] and the regularised-kernel Fourier table travel as
-//! `Arc`s held by the [`crate::shard::ShardedOperator`] — a shard plan
-//! duplicates only its own O(|shard|·(2m+2)·d) footprint table.
+//! the [`SubgridBox`] its spread writes into, and its own grid
+//! [`BufferPool`] (sized to that box) so shards never contend for
+//! scratch. Everything *shared* stays shared by construction: the
+//! immutable [`NfftPlan`] and the regularised-kernel Fourier table
+//! travel as `Arc`s held by the [`crate::shard::ShardedOperator`] — a
+//! shard plan duplicates only its own O(|shard|·(2m+2)·d) footprint
+//! table plus a bounding box.
+//!
+//! # Spatially-restricted subgrids
+//!
+//! Under [`SubgridPolicy::BoundingBox`] (the default) a shard's spread
+//! grid is the per-axis bounding box of its points' window footprints
+//! instead of the full oversampled grid — on spatially compact shards
+//! (Morton tiles) this shrinks both the resident scratch and the
+//! exchange object a multi-process dispatcher would ship to the size
+//! the shard actually touches. The box construction keeps the merge
+//! into the global grid injective (it degenerates to the full grid
+//! when a shard spans the torus), which makes the boxed spread
+//! bit-identical to the full-grid spread — `shards = 1` remains
+//! bit-for-bit the unsharded engine. [`SubgridPolicy::FullGrid`]
+//! forces full-size subgrids; it is retained as the oracle the boxed
+//! path is pinned against.
 
-use crate::nfft::{NfftGeometry, NfftPlan};
+use crate::nfft::{NfftGeometry, NfftPlan, SubgridBox};
 use crate::shard::partition::ShardSpec;
 use crate::util::pool::BufferPool;
 use std::sync::Arc;
+
+/// Which spread grid a shard allocates and exchanges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SubgridPolicy {
+    /// Bounding box of the shard's footprints (full-grid fallback when
+    /// a shard spans the torus). Bit-identical to `FullGrid`.
+    #[default]
+    BoundingBox,
+    /// Full oversampled grid per shard (the seed behaviour; retained
+    /// as the oracle).
+    FullGrid,
+}
 
 /// One shard's immutable execution state.
 pub struct ShardPlan {
@@ -20,10 +49,10 @@ pub struct ShardPlan {
     indices: Vec<usize>,
     /// Window footprints of exactly those points.
     geometry: NfftGeometry,
-    /// Shard-private REAL oversampled-grid scratch — the spread grid of
-    /// the half-spectrum path. Real subgrids halve both the resident
-    /// scratch and the inter-shard exchange object the frequency stage
-    /// tree-reduces (vs the complex grids of the seed path).
+    /// The (possibly full-grid) subgrid box the spread writes into —
+    /// the inter-shard exchange object of the frequency stage.
+    bbox: SubgridBox,
+    /// Shard-private REAL subgrid scratch, sized to `bbox`.
     grids: BufferPool<f64>,
 }
 
@@ -40,6 +69,17 @@ impl ShardPlan {
         &self.geometry
     }
 
+    /// The shard's subgrid box (the exchange object's shape).
+    pub fn bbox(&self) -> &SubgridBox {
+        &self.bbox
+    }
+
+    /// Bytes of the exchange object one apply ships for this shard —
+    /// the boxed real subgrid.
+    pub fn exchange_bytes(&self) -> usize {
+        self.bbox.bytes()
+    }
+
     pub(crate) fn grids(&self) -> &BufferPool<f64> {
         &self.grids
     }
@@ -50,7 +90,8 @@ impl ShardPlan {
     }
 }
 
-/// Build one [`ShardPlan`] per shard of `spec` against the parent plan.
+/// Build one [`ShardPlan`] per shard of `spec` against the parent plan
+/// under the default [`SubgridPolicy::BoundingBox`].
 /// `scaled_points` are the parent's ρ-scaled nodes (row-major n×d); the
 /// per-shard geometries are built once here and reused by every apply.
 pub fn build_shard_plans(
@@ -58,6 +99,17 @@ pub fn build_shard_plans(
     scaled_points: &[f64],
     d: usize,
     spec: &ShardSpec,
+) -> Vec<ShardPlan> {
+    build_shard_plans_with(plan, scaled_points, d, spec, SubgridPolicy::default())
+}
+
+/// [`build_shard_plans`] with an explicit subgrid policy.
+pub fn build_shard_plans_with(
+    plan: &Arc<NfftPlan>,
+    scaled_points: &[f64],
+    d: usize,
+    spec: &ShardSpec,
+    policy: SubgridPolicy,
 ) -> Vec<ShardPlan> {
     assert!(d >= 1 && scaled_points.len() % d == 0);
     assert_eq!(
@@ -72,11 +124,20 @@ pub fn build_shard_plans(
             for &i in idx {
                 pts.extend_from_slice(&scaled_points[i * d..(i + 1) * d]);
             }
-            ShardPlan {
-                indices: idx.clone(),
-                geometry: plan.build_geometry(&pts),
-                grids: plan.real_grid_pool(),
-            }
+            let geometry = plan.build_geometry(&pts);
+            let bbox = match policy {
+                SubgridPolicy::BoundingBox => plan.bounding_box(&geometry),
+                SubgridPolicy::FullGrid => plan.bounding_box_full(),
+            };
+            // Retention bounded: a burst of chunk-parallel spreads may
+            // briefly check out extra subgrids, but only a steady-state
+            // working set stays parked per shard.
+            let grids = BufferPool::bounded(
+                bbox.num_cells(),
+                0.0f64,
+                rayon::current_num_threads().max(2),
+            );
+            ShardPlan { indices: idx.clone(), geometry, bbox, grids }
         })
         .collect()
 }
@@ -104,6 +165,7 @@ mod tests {
             assert_eq!(sh.geometry().dims(), d);
             assert_eq!(sh.geometry().footprint(), 2 * 4 + 2);
             assert!(sh.bytes() > 0);
+            assert_eq!(sh.exchange_bytes(), sh.bbox().bytes());
         }
     }
 
@@ -134,6 +196,32 @@ mod tests {
                 plan.spread_with_geometry(sh.geometry(), &x_local, &mut shard_grid);
                 assert_eq!(full_grid, shard_grid, "point {global}");
             }
+        }
+    }
+
+    #[test]
+    fn bounding_boxes_shrink_compact_shards() {
+        // A tightly clustered cloud (the fastsum regime) gives every
+        // shard a strict sub-box; the full-grid policy does not.
+        let n = 40;
+        let d = 2;
+        let mut rng = crate::data::rng::Rng::seed_from(5);
+        let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let plan = Arc::new(NfftPlan::new(&[16, 16], 4, WindowKind::KaiserBessel));
+        let spec = ShardSpec::morton(&pts, d, 4);
+        let boxed = build_shard_plans(&plan, &pts, d, &spec);
+        let full = build_shard_plans_with(&plan, &pts, d, &spec, SubgridPolicy::FullGrid);
+        let grid_bytes = plan.grid_len() * std::mem::size_of::<f64>();
+        for (b, f) in boxed.iter().zip(&full) {
+            assert!(f.bbox().is_full_grid());
+            assert_eq!(f.exchange_bytes(), grid_bytes);
+            assert!(!b.bbox().is_full_grid(), "compact shard must get a sub-box");
+            assert!(
+                b.exchange_bytes() < grid_bytes,
+                "box {} must be smaller than the grid {}",
+                b.exchange_bytes(),
+                grid_bytes
+            );
         }
     }
 }

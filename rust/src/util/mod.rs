@@ -5,6 +5,7 @@
 
 pub mod csv;
 pub mod json;
+pub mod morton;
 pub mod pool;
 pub mod proptest;
 pub mod reduce;
@@ -12,6 +13,22 @@ pub mod stats;
 pub mod timer;
 
 pub use pool::BufferPool;
+
+/// Near-equal contiguous ranges covering `0..n`: the first `n % parts`
+/// ranges get one extra element. The single balance policy behind the
+/// contiguous/Morton shard splits and the NFFT spread tiling (sharing
+/// it keeps every "split evenly" decision in the codebase identical).
+pub fn split_even(n: usize, parts: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
+    let base = n / parts;
+    let rem = n % parts;
+    let mut start = 0;
+    (0..parts).map(move |i| {
+        let len = base + usize::from(i < rem);
+        let r = start..start + len;
+        start += len;
+        r
+    })
+}
 
 /// Machine epsilon-scale comparison helper used across tests.
 pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
@@ -73,5 +90,22 @@ mod tests {
         let a = [2.0, 0.0];
         let b = [1.0, 0.0];
         assert!((rel_l2_error(&a, &b) - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn split_even_covers_and_balances() {
+        for (n, p) in [(10usize, 3usize), (7, 7), (100, 1), (5, 9), (64, 4)] {
+            let ranges: Vec<_> = split_even(n, p).collect();
+            assert_eq!(ranges.len(), p);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "ranges must be contiguous");
+                next = r.end;
+            }
+            assert_eq!(next, n, "ranges must cover 0..n");
+            let max = ranges.iter().map(|r| r.len()).max().unwrap();
+            let min = ranges.iter().map(|r| r.len()).min().unwrap();
+            assert!(max - min <= 1, "unbalanced: {ranges:?}");
+        }
     }
 }

@@ -1,0 +1,147 @@
+//! Morton (Z-order) key construction shared by the shard partitioner
+//! and the NFFT geometry tile sort.
+//!
+//! Both consumers need the same primitive — interleave per-axis
+//! quantised coordinates MSB-first into one integer so that sorting by
+//! the key groups spatially close items — but feed it different inputs:
+//! the partitioner quantises raw float coordinates against the cloud's
+//! bounding box, while the geometry sorts points by the integer grid
+//! cell their window footprint starts at. Keeping one implementation
+//! here guarantees the two orders agree on what "spatially close"
+//! means.
+
+/// MSB-first bit interleave of `coords` (each holding `bits`
+/// significant bits): axis 0 contributes the most significant bit of
+/// every `d`-bit group, matching the classic Z-order curve.
+pub fn interleave(coords: &[u64], bits: u32) -> u64 {
+    let mut code = 0u64;
+    for b in (0..bits).rev() {
+        for &q in coords {
+            code = (code << 1) | ((q >> b) & 1);
+        }
+    }
+    code
+}
+
+/// Bits per axis so the interleaved code of `d` axes fits `budget`
+/// total bits (capped at 16 — beyond that the ordering is already
+/// fully resolved for any realistic cloud).
+pub fn bits_per_axis(d: usize, budget: u32) -> u32 {
+    ((budget as usize / d.max(1)) as u32).clamp(1, 16)
+}
+
+/// Indices of `points` (row-major n×d) sorted by the Morton code of
+/// their bounding-box-quantised coordinates, ties broken by index so
+/// the order is fully deterministic. This is the order behind
+/// [`crate::shard::ShardSpec::morton`].
+pub fn float_order(points: &[f64], d: usize, n: usize) -> Vec<usize> {
+    let mut lo = vec![f64::INFINITY; d];
+    let mut hi = vec![f64::NEG_INFINITY; d];
+    for i in 0..n {
+        for a in 0..d {
+            let v = points[i * d + a];
+            lo[a] = lo[a].min(v);
+            hi[a] = hi[a].max(v);
+        }
+    }
+    // bits·d ≤ 63 keeps the interleaved code inside a u64.
+    let bits = bits_per_axis(d, 63);
+    let levels = ((1u64 << bits) - 1) as f64;
+    let scale: Vec<f64> = (0..d)
+        .map(|a| {
+            let span = hi[a] - lo[a];
+            if span > 0.0 {
+                levels / span
+            } else {
+                0.0 // degenerate axis: all points share the cell
+            }
+        })
+        .collect();
+    // Beyond 16 axes the per-axis budget is exhausted anyway; key on
+    // the leading 16 (ties break by index, partitions stay valid).
+    let dk = d.min(16);
+    let mut keyed: Vec<(u64, usize)> = (0..n)
+        .map(|i| {
+            let mut q = [0u64; 16];
+            for (a, qa) in q[..dk].iter_mut().enumerate() {
+                *qa = ((points[i * d + a] - lo[a]) * scale[a]) as u64;
+            }
+            (interleave(&q[..dk], bits), i)
+        })
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Morton key of one integer grid cell (`cells[a] < extent[a]`): each
+/// axis keeps its `bits_per_axis(d, 48)` MOST significant bits so the
+/// key orders cells coarsest-split-first, like the float variant. The
+/// 48-bit budget leaves the top key bits free for callers that prepend
+/// a bucket id.
+pub fn cell_key(cells: &[usize], extent: &[usize]) -> u64 {
+    let d = cells.len();
+    debug_assert_eq!(extent.len(), d);
+    let bits = bits_per_axis(d, 48);
+    let dk = d.min(16);
+    let mut q = [0u64; 16];
+    for ((qa, &c), &e) in q[..dk].iter_mut().zip(cells).zip(extent) {
+        debug_assert!(c < e.max(1));
+        // Width of the axis in bits, rounded up; shift so the kept
+        // window is the top of the axis range.
+        let width = usize::BITS - e.max(1).leading_zeros();
+        *qa = if width > bits { (c as u64) >> (width - bits) } else { c as u64 };
+    }
+    interleave(&q[..dk], bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interleave_axis0_most_significant() {
+        // axis 0 = 0b10, axis 1 = 0b01 with 2 bits → 1001.
+        assert_eq!(interleave(&[0b10, 0b01], 2), 0b1001);
+        assert_eq!(interleave(&[0b1], 1), 0b1);
+    }
+
+    #[test]
+    fn bits_budget_respected() {
+        assert_eq!(bits_per_axis(2, 63), 16);
+        assert_eq!(bits_per_axis(3, 63), 16);
+        assert_eq!(bits_per_axis(5, 63), 12);
+        assert_eq!(bits_per_axis(1, 48), 16);
+    }
+
+    #[test]
+    fn float_order_groups_clusters() {
+        // Two distant 1-d clusters: all of one before all of the other.
+        let pts = [0.0, 0.1, 10.0, 10.1, 0.05, 10.05];
+        let order = float_order(&pts, 1, 6);
+        let first_half: Vec<usize> = order[..3].to_vec();
+        for &i in &first_half {
+            assert!(pts[i] < 5.0, "low cluster must sort first: {order:?}");
+        }
+    }
+
+    #[test]
+    fn cell_key_orders_by_coarse_split() {
+        // In 2-d, cells in the left half-plane sort before the right.
+        let extent = [64usize, 64];
+        let left = cell_key(&[10, 50], &extent);
+        let right = cell_key(&[40, 3], &extent);
+        assert!(left < right, "{left} !< {right}");
+    }
+
+    #[test]
+    fn cell_key_deterministic_and_monotone_on_axis0() {
+        let extent = [256usize];
+        let mut prev = 0;
+        for c in 0..256 {
+            let k = cell_key(&[c], &extent);
+            assert_eq!(k, cell_key(&[c], &extent));
+            assert!(k >= prev, "keys must be monotone on a single axis");
+            prev = k;
+        }
+    }
+}

@@ -15,7 +15,7 @@ use nfft_krylov::krylov::lanczos::{BlockLanczosOptions, LanczosOptions};
 use nfft_krylov::nfft::WindowKind;
 use nfft_krylov::nystrom::hybrid::HybridNystromOptions;
 use nfft_krylov::prop_assert;
-use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
+use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator, SubgridPolicy};
 use nfft_krylov::util::rel_l2_error;
 use std::sync::Arc;
 
@@ -100,6 +100,65 @@ fn sharded_matches_unsharded_and_dense_for_all_kernels() {
                     strategy.name()
                 );
             }
+        }
+    }
+}
+
+/// Bounding-box subgrids (the default exchange object) vs full-grid
+/// shards: bit-identical outputs on non-divisible n for all four
+/// kernels and every strategy, and a genuinely smaller exchange
+/// object on Morton partitions of a spatial cloud.
+#[test]
+fn bounding_box_shards_match_full_grid_shards_for_all_kernels() {
+    let n = 101; // not divisible by 2, 3 or 7
+    let d = 2;
+    let points = gaussian_cloud(n, d, 91);
+    let mut rng = Rng::seed_from(92);
+    let x = rng.normal_vec(n);
+    for (kernel, params, _) in kernel_setups() {
+        let parent = FastsumOperator::new(&points, d, kernel, params);
+        for strategy in STRATEGIES {
+            for &shards in &SHARD_COUNTS {
+                let spec = ShardSpec::build(strategy, &points, d, shards);
+                let boxed = ShardedOperator::from_fastsum_with(
+                    &parent,
+                    spec.clone(),
+                    SubgridPolicy::BoundingBox,
+                );
+                let full =
+                    ShardedOperator::from_fastsum_with(&parent, spec, SubgridPolicy::FullGrid);
+                assert_eq!(
+                    boxed.apply_vec(&x),
+                    full.apply_vec(&x),
+                    "{kernel:?} {}x{shards}: bounding-box shards must be bit-identical",
+                    strategy.name()
+                );
+                assert!(
+                    boxed.exchange_bytes() <= full.exchange_bytes(),
+                    "{kernel:?} {}x{shards}: boxes larger than full grids",
+                    strategy.name()
+                );
+            }
+        }
+        // Morton tiles of this cloud must shrink the exchange object
+        // outright (every shard spatially compact).
+        let morton = ShardedOperator::from_fastsum(&parent, ShardSpec::morton(&points, d, 4));
+        assert!(
+            morton.exchange_bytes() < 4 * morton.full_grid_bytes(),
+            "{kernel:?}: Morton boxes {} must undercut full grids {}",
+            morton.exchange_bytes(),
+            4 * morton.full_grid_bytes()
+        );
+        // The shrink is recorded in the per-shard stats JSON.
+        let stats = morton.stats_json();
+        let per = stats.get("per_shard").and_then(nfft_krylov::util::json::Json::as_arr).unwrap();
+        assert_eq!(per.len(), 4);
+        for sh in per {
+            let ex = sh
+                .get("exchange_bytes")
+                .and_then(nfft_krylov::util::json::Json::as_f64)
+                .unwrap();
+            assert!(ex > 0.0);
         }
     }
 }

@@ -1,0 +1,198 @@
+//! Spread/gather engine equivalence suite: the flat-offset kernels
+//! must reproduce the retained seed (odometer + `rem_euclid`) oracle
+//! bit for bit; the Morton-tiled owner-computes spread must match the
+//! unsorted oracle to 1e-12 and be run-to-run bitwise deterministic;
+//! bounding-box subgrids must be bit-identical to full-grid spreads —
+//! under proptest-style random point clouds, random vectors, every
+//! supported dimension, and random shard partitions.
+
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel};
+use nfft_krylov::graph::LinearOperator;
+use nfft_krylov::nfft::{NfftPlan, SpreadLayout, WindowKind};
+use nfft_krylov::prop_assert;
+use nfft_krylov::shard::{ShardSpec, ShardedOperator, SubgridPolicy};
+use nfft_krylov::util::pool::BufferPool;
+use nfft_krylov::util::proptest;
+
+/// Random plan shape + cloud + vector for one proptest case. Points
+/// cover the full torus (boundary wraps included).
+fn random_case(rng: &mut Rng) -> (NfftPlan, Vec<f64>, Vec<f64>, usize) {
+    let d = 1 + rng.below(3);
+    let bands: [usize; 3] = [8, 16, 32];
+    let band: Vec<usize> = (0..d).map(|_| bands[rng.below(3)]).collect();
+    let m = 2 + rng.below(3);
+    let plan = NfftPlan::new(&band, m, WindowKind::KaiserBessel);
+    let n = 5 + rng.below(120);
+    let points: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.5, 0.4999)).collect();
+    let x = rng.normal_vec(n);
+    (plan, points, x, n)
+}
+
+#[test]
+fn flat_offset_engine_bit_identical_to_seed_oracle() {
+    proptest::check(
+        proptest::Config { cases: 24, seed: 0xf1a7 },
+        "flat-offset spread/gather ≡ seed oracle (bitwise)",
+        |rng| {
+            let (plan, points, x, n) = random_case(rng);
+            let geo = plan.build_geometry(&points);
+            let mut g_ref = plan.alloc_real_grid();
+            let mut g_new = plan.alloc_real_grid();
+            plan.spread_real_reference(&geo, &x, &mut g_ref);
+            plan.spread_real_with_geometry(&geo, &x, &mut g_new);
+            prop_assert!(g_ref == g_new, "spread grids differ");
+            let mut o_ref = vec![0.0; n];
+            let mut o_new = vec![0.0; n];
+            plan.gather_real_grid_reference(&geo, &g_ref, &mut o_ref);
+            plan.gather_real_grid(&geo, &g_new, &mut o_new);
+            prop_assert!(o_ref == o_new, "gather outputs differ");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tiled_engine_matches_oracle_and_is_deterministic() {
+    proptest::check(
+        proptest::Config { cases: 24, seed: 0x71e5 },
+        "tiled spread ≈ oracle (1e-12), deterministic; sorted gather ≡ unsorted",
+        |rng| {
+            let (plan, points, x, n) = random_case(rng);
+            let geo_u = plan.build_geometry(&points);
+            let geo_t = plan.build_geometry_with(&points, SpreadLayout::Tiled);
+            let mut g_ref = plan.alloc_real_grid();
+            plan.spread_real_reference(&geo_u, &x, &mut g_ref);
+            let mut g_tiled = plan.alloc_real_grid();
+            plan.spread_real_with_geometry(&geo_t, &x, &mut g_tiled);
+            // Grid cells carry the un-deconvolved window magnitude, so
+            // compare relative to the largest cell.
+            let gscale = g_ref.iter().fold(0.0f64, |a, v| a.max(v.abs())).max(1e-300);
+            for (t, r) in g_tiled.iter().zip(&g_ref) {
+                prop_assert!((t - r).abs() < 1e-11 * gscale, "tiled spread diverged: {t} vs {r}");
+            }
+            let mut g_again = plan.alloc_real_grid();
+            plan.spread_real_with_geometry(&geo_t, &x, &mut g_again);
+            prop_assert!(g_tiled == g_again, "tiled spread not deterministic");
+            // The permutation changes only the walk: gather outputs
+            // stay in caller order and match bitwise.
+            let mut o_t = vec![0.0; n];
+            let mut o_u = vec![0.0; n];
+            plan.gather_real_grid(&geo_t, &g_ref, &mut o_t);
+            plan.gather_real_grid(&geo_u, &g_ref, &mut o_u);
+            prop_assert!(o_t == o_u, "sorted gather walk changed outputs");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn boxed_spread_bit_identical_under_random_clouds() {
+    proptest::check(
+        proptest::Config { cases: 24, seed: 0xb0c5 },
+        "bounding-box spread+merge ≡ full-grid spread (bitwise)",
+        |rng| {
+            let (plan, _, x, n) = random_case(rng);
+            let d = plan.dims();
+            // A mix of compact clouds (genuine boxes) and full-torus
+            // clouds (fallback boxes).
+            let half_width = if rng.below(2) == 0 { 0.2 } else { 0.4999 };
+            let points: Vec<f64> =
+                (0..n * d).map(|_| rng.uniform_in(-half_width, half_width)).collect();
+            let geo = plan.build_geometry(&points);
+            let bx = plan.bounding_box(&geo);
+            let mut want = plan.alloc_real_grid();
+            plan.spread_real_with_geometry(&geo, &x, &mut want);
+            let scratch = BufferPool::new(bx.num_cells(), 0.0f64);
+            let mut sub = vec![0.0; bx.num_cells()];
+            plan.spread_real_boxed(&geo, &x, &bx, &mut sub, &scratch);
+            let mut got = plan.alloc_real_grid();
+            plan.merge_boxed_into(&bx, &sub, &mut got);
+            prop_assert!(
+                got == want,
+                "boxed spread differs (full_grid_fallback={})",
+                bx.is_full_grid()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn random_shard_partitions_with_boxes_preserve_the_matvec() {
+    // Random partitions (arbitrary imbalance, empty shards) over the
+    // default bounding-box policy: bit-identical to the FullGrid
+    // oracle policy, within 1e-12 of the unsharded engine, and
+    // deterministic.
+    let n = 83;
+    let d = 2;
+    let mut rng0 = Rng::seed_from(0x5ad5);
+    let points: Vec<f64> = (0..n * d).map(|_| rng0.normal()).collect();
+    let parent = FastsumOperator::new(
+        &points,
+        d,
+        Kernel::Gaussian { sigma: 2.5 },
+        FastsumParams::setup1(),
+    );
+    let x = rng0.normal_vec(n);
+    let want = parent.apply_vec(&x);
+    let xnorm: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+    proptest::check(
+        proptest::Config { cases: 10, seed: 0x5ad6 },
+        "random shard partitions with bounding boxes",
+        |rng| {
+            let shards = 1 + rng.below(8);
+            let spec = ShardSpec::random(n, shards, rng);
+            let boxed = ShardedOperator::from_fastsum_with(
+                &parent,
+                spec.clone(),
+                SubgridPolicy::BoundingBox,
+            );
+            let full = ShardedOperator::from_fastsum_with(&parent, spec, SubgridPolicy::FullGrid);
+            let got = boxed.apply_vec(&x);
+            prop_assert!(got == full.apply_vec(&x), "policies diverged (shards={shards})");
+            prop_assert!(got == boxed.apply_vec(&x), "boxed apply not deterministic");
+            let err = got
+                .iter()
+                .zip(&want)
+                .map(|(g, w)| (g - w).abs())
+                .fold(0.0, f64::max)
+                / xnorm;
+            prop_assert!(err < 1e-12, "shards={shards}: err {err}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tiled_operator_serves_the_same_matvecs() {
+    // End-to-end: a FastsumOperator on the tiled layout agrees with
+    // the unsorted default within roundoff, deterministically, across
+    // kernels.
+    let n = 110;
+    let d = 2;
+    let mut rng = Rng::seed_from(0x7a11);
+    let points: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let x = rng.normal_vec(n);
+    let xnorm: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+    for kernel in [Kernel::Gaussian { sigma: 2.5 }, Kernel::LaplacianRbf { sigma: 1.0 }] {
+        let params = match kernel {
+            Kernel::LaplacianRbf { .. } => FastsumParams {
+                n_band: 128,
+                m: 4,
+                p: 4,
+                eps_b: 0.0,
+                window: WindowKind::KaiserBessel,
+                center: false,
+            },
+            _ => FastsumParams::setup2(),
+        };
+        let unsorted = FastsumOperator::new(&points, d, kernel, params);
+        let tiled = FastsumOperator::with_layout(&points, d, kernel, params, SpreadLayout::Tiled);
+        let a = unsorted.apply_vec(&x);
+        let b = tiled.apply_vec(&x);
+        let err = a.iter().zip(&b).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max) / xnorm;
+        assert!(err < 1e-12, "{kernel:?}: tiled operator diverged by {err}");
+        assert_eq!(tiled.apply_vec(&x), b, "{kernel:?}: tiled operator not deterministic");
+    }
+}
