@@ -5,14 +5,17 @@
 //! `BENCH_spread.json`), the FFT-stage comparison (seed-style serial
 //! complex vs parallel complex vs batched real/half-spectrum,
 //! 1-d/2-d/3-d grids → `BENCH_fft.json`),
+//! the Krylov-stage comparison (seed scalar reorthogonalisation loop
+//! vs the panel engine's fused `gram_tv`/`update` kernels, n ∈ {1e4,
+//! 1e5}, j ∈ {32, 128}, block k ∈ {1, 8} → `BENCH_krylov.json`),
 //! one fastsum matvec per engine/setup with the per-phase breakdown
 //! used by the §Perf iteration log (the one-time `geometry` phase shows
 //! the plan/geometry split), the block-vs-loop comparison for
 //! k ∈ {1, 8, 16, 32}, the sharded-execution sweep over shard counts
 //! and partition strategies, plus the PJRT artifact engine when
-//! available. Emits `BENCH_spread.json`, `BENCH_fft.json`,
-//! `BENCH_matvec.json` and `BENCH_shard.json` so the perf trajectory
-//! is tracked across PRs.
+//! available. Emits `BENCH_krylov.json`, `BENCH_spread.json`,
+//! `BENCH_fft.json`, `BENCH_matvec.json` and `BENCH_shard.json` so the
+//! perf trajectory is tracked across PRs.
 
 use nfft_krylov::bench_harness::harness::{bench, BenchArgs};
 use nfft_krylov::coordinator::engine::{EngineKind, EngineRegistry, OperatorSpec};
@@ -20,6 +23,7 @@ use nfft_krylov::data::rng::Rng;
 use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel};
 use nfft_krylov::fft::{Complex, NdFftPlan, RealNdFftPlan};
 use nfft_krylov::graph::LinearOperator;
+use nfft_krylov::linalg::Panel;
 use nfft_krylov::nfft::{NfftPlan, SpreadLayout, WindowKind};
 use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
 use nfft_krylov::util::json::Json;
@@ -28,6 +32,9 @@ use std::collections::BTreeMap;
 const BLOCK_SIZES: [usize; 4] = [1, 8, 16, 32];
 const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 const FFT_BLOCK_SIZES: [usize; 3] = [1, 8, 16];
+const KRYLOV_NS: [usize; 2] = [10_000, 100_000];
+const KRYLOV_JS: [usize; 2] = [32, 128];
+const KRYLOV_KS: [usize; 2] = [1, 8];
 
 fn json_row(entries: &[(&str, Json)]) -> Json {
     let mut obj = BTreeMap::new();
@@ -159,8 +166,76 @@ fn bench_spread_stage(seed: u64) -> Vec<Json> {
     rows
 }
 
+/// Krylov-stage micro: one full-reorthogonalisation sweep (`c = Vᵀw`,
+/// `w −= Vc`) over a j-column basis — (a) the seed scalar loop (j
+/// separate sequential `dot`/`axpy` passes, the retained `*_reference`
+/// kernels), (b) the panel engine's fused blocked parallel
+/// `gram_tv`/`update` pair (`gram_block`/`update_block` for k > 1
+/// residual columns). The n = 1e5, j = 128 rows carry the acceptance
+/// criterion: the panel pair must beat the seed loop.
+fn bench_krylov_stage(seed: u64) -> Vec<Json> {
+    let mut rows = Vec::new();
+    println!("== Krylov stage: seed scalar reorthogonalisation vs panel kernels ==");
+    for &n in &KRYLOV_NS {
+        for &j in &KRYLOV_JS {
+            let mut rng = Rng::seed_from(seed ^ ((n as u64) << 3) ^ j as u64);
+            let mut basis = Panel::new(n, 8);
+            for _ in 0..j {
+                basis.push_col(&rng.normal_vec(n));
+            }
+            for &k in &KRYLOV_KS {
+                let ws0 = rng.normal_vec(n * k);
+                let mut ws = vec![0.0; n * k];
+                let mut coeffs = vec![0.0; j * k];
+                let label = format!("n={n} j={j} k={k}");
+                let s_seed = bench(&format!("krylov seed scalar {label}"), 1, 3, || {
+                    ws.copy_from_slice(&ws0);
+                    for (w, c) in ws.chunks_exact_mut(n).zip(coeffs.chunks_exact_mut(j)) {
+                        basis.gram_tv_reference(w, c);
+                        basis.update_reference(c, w);
+                    }
+                });
+                let s_panel = bench(&format!("krylov panel       {label}"), 1, 3, || {
+                    ws.copy_from_slice(&ws0);
+                    if k == 1 {
+                        basis.gram_tv(&ws, &mut coeffs);
+                        basis.update(&coeffs, &mut ws);
+                    } else {
+                        basis.gram_block(&ws, &mut coeffs);
+                        basis.update_block(&coeffs, &mut ws);
+                    }
+                });
+                let speedup = s_seed.min / s_panel.min.max(1e-12);
+                println!(
+                    "    {label}: seed {:.4}s  panel {:.4}s  -> {speedup:.2}x",
+                    s_seed.min, s_panel.min
+                );
+                rows.push(json_row(&[
+                    ("n", Json::Num(n as f64)),
+                    ("j", Json::Num(j as f64)),
+                    ("k", Json::Num(k as f64)),
+                    ("seed_scalar_min_s", Json::Num(s_seed.min)),
+                    ("panel_min_s", Json::Num(s_panel.min)),
+                    ("speedup", Json::Num(speedup)),
+                ]));
+            }
+        }
+    }
+    rows
+}
+
 fn main() {
     let args = BenchArgs::from_env();
+
+    let krylov_rows = bench_krylov_stage(args.seed);
+    let mut krylov_root = BTreeMap::new();
+    krylov_root.insert("bench".to_string(), Json::Str("matvec_micro/krylov_stage".into()));
+    krylov_root.insert("results".to_string(), Json::Arr(krylov_rows));
+    let text = Json::Obj(krylov_root).to_string();
+    match std::fs::write("BENCH_krylov.json", &text) {
+        Ok(()) => println!("wrote BENCH_krylov.json"),
+        Err(e) => eprintln!("could not write BENCH_krylov.json: {e}"),
+    }
 
     let spread_rows = bench_spread_stage(args.seed);
     let mut spread_root = BTreeMap::new();

@@ -126,7 +126,13 @@ pub fn run(cfg: &Fig3Config) -> Fig3Results {
                 let t = Timer::start();
                 let r = lanczos_eigs(
                     &dense,
-                    LanczosOptions { k: K_EIGS, tol: 1e-9, max_iter: 150, seed: 7, ..Default::default() },
+                    LanczosOptions {
+                        k: K_EIGS,
+                        tol: 1e-9,
+                        max_iter: 150,
+                        seed: 7,
+                        ..Default::default()
+                    },
                 );
                 let secs = t.elapsed_secs();
                 let res = residual_norms(&ref_op, &r.eigenvalues, &r.eigenvectors);
@@ -159,9 +165,21 @@ pub fn run(cfg: &Fig3Config) -> Fig3Results {
                 .expect("nfft operator");
                 let r = lanczos_eigs(
                     &op,
-                    LanczosOptions { k: K_EIGS, tol: 1e-9, max_iter: 150, seed: 7, ..Default::default() },
+                    LanczosOptions {
+                        k: K_EIGS,
+                        tol: 1e-9,
+                        max_iter: 150,
+                        seed: 7,
+                        ..Default::default()
+                    },
                 );
                 let secs = t.elapsed_secs();
+                if rep == 0 {
+                    println!(
+                        "  {:<22} n={n:<7} phases: matvec {:.3}s, ortho {:.3}s",
+                        methods[mi], r.matvec_secs, r.ortho_secs
+                    );
+                }
                 let res = residual_norms(&ref_op, &r.eigenvalues, &r.eigenvectors);
                 let cell = &mut per_method[mi];
                 cell.runtimes.push(secs);

@@ -67,6 +67,10 @@ pub fn run(full: bool, seed: u64) -> Fig4Result {
         &a,
         LanczosOptions { k: 10, tol: 1e-8, max_iter: 200, ..Default::default() },
     );
+    println!(
+        "  [lanczos phases] matvec {:.3}s, orthogonalisation {:.3}s ({} iterations)",
+        r.matvec_secs, r.ortho_secs, r.iterations
+    );
     Fig4Result { eigenvalues: r.eigenvalues, n_pixels: ds.n, seconds: t.elapsed_secs() }
 }
 

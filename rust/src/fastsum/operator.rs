@@ -123,16 +123,25 @@ impl FastsumOperator {
     /// `points`: row-major n×d in the ORIGINAL coordinates. The nodes
     /// are centred and scaled internally (Alg 3.2 step 1: after
     /// centring, ρ = (1/4 − ε_B/2)/max‖v‖).
+    ///
+    /// The spread/gather layout follows [`SpreadLayout::auto_for`]:
+    /// clouds of at least [`SpreadLayout::TILED_DEFAULT_THRESHOLD`]
+    /// points run the Morton-tiled owner-computes engine (deterministic,
+    /// ≈1e-15 from the unsorted walk), smaller clouds keep the
+    /// seed-exact unsorted walk. Use [`Self::with_layout`] to force
+    /// either explicitly.
     pub fn new(points: &[f64], d: usize, kernel: Kernel, params: FastsumParams) -> Self {
-        Self::with_layout(points, d, kernel, params, SpreadLayout::Unsorted)
+        assert!(d >= 1 && points.len() % d == 0);
+        let layout = SpreadLayout::auto_for(points.len() / d);
+        Self::with_layout(points, d, kernel, params, layout)
     }
 
     /// [`Self::new`] with an explicit spread/gather walk layout.
-    /// `Unsorted` (the [`Self::new`] default) keeps the seed-exact
-    /// execution; `Tiled` builds the Morton-tiled geometry and runs
-    /// the owner-computes locality spread and the sorted gather walk —
-    /// deterministic, and matching the unsorted engine to roundoff
-    /// (see [`crate::nfft::geometry`]).
+    /// `Unsorted` keeps the seed-exact execution (and is the oracle
+    /// the tiled engine is pinned against); `Tiled` builds the
+    /// Morton-tiled geometry and runs the owner-computes locality
+    /// spread and the sorted gather walk — deterministic, and matching
+    /// the unsorted engine to roundoff (see [`crate::nfft::geometry`]).
     pub fn with_layout(
         points: &[f64],
         d: usize,
@@ -771,6 +780,31 @@ mod tests {
             tiled.apply(&xs[j * 120..(j + 1) * 120], &mut col);
             assert_eq!(&blk[j * 120..(j + 1) * 120], col.as_slice(), "column {j}");
         }
+    }
+
+    #[test]
+    fn default_layout_follows_auto_threshold() {
+        use crate::nfft::SpreadLayout;
+        // Below the threshold `new` keeps the seed-exact unsorted walk;
+        // the auto rule itself is pinned in nfft::geometry. Forcing
+        // either layout explicitly always wins over the size rule.
+        let points = spiral_like_points(100, 19);
+        let small = FastsumOperator::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup1(),
+        );
+        // 100 points sit far below TILED_DEFAULT_THRESHOLD.
+        assert_eq!(small.spread_layout(), SpreadLayout::Unsorted);
+        let forced = FastsumOperator::with_layout(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup1(),
+            SpreadLayout::Tiled,
+        );
+        assert_eq!(forced.spread_layout(), SpreadLayout::Tiled);
     }
 
     #[test]

@@ -1,10 +1,17 @@
 //! Arnoldi iteration and restarted GMRES — the nonsymmetric Krylov
 //! machinery §2/§4 reference for the random-walk Laplacian
 //! `L_w = I − D⁻¹W` (nonsymmetric but similar to `L_s`).
+//!
+//! The basis lives in a [`Panel`]; orthogonalisation is two-pass
+//! classical Gram-Schmidt (CGS2 — "twice is enough"), each pass ONE
+//! fused [`Panel::gram_tv`] + [`Panel::update`] sweep instead of j
+//! serial `dot`/`axpy` passes. The Hessenberg entry is the sum of both
+//! passes' coefficients, so `A V_k = V_{k+1} H̄_k` holds exactly as it
+//! did for the seed's modified Gram-Schmidt.
 
 use crate::graph::operator::LinearOperator;
 use crate::linalg::dense::DenseMatrix;
-use crate::linalg::vec;
+use crate::linalg::panel::{paxpy, pnorm2, Panel};
 
 /// One Arnoldi factorisation `A V_k = V_{k+1} H̄_k`.
 ///
@@ -17,35 +24,42 @@ pub fn arnoldi(
 ) -> (DenseMatrix, DenseMatrix) {
     let n = op.dim();
     assert_eq!(start.len(), n);
-    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k + 1);
-    let mut v0 = start.to_vec();
-    vec::normalize(&mut v0);
-    vs.push(v0);
+    let mut basis = Panel::new(n, 8.min(k + 1).max(1));
+    let v0_norm = pnorm2(start);
+    assert!(v0_norm > 0.0, "cannot start Arnoldi from the zero vector");
+    basis.push_col_scaled(start, 1.0 / v0_norm);
     let mut h = DenseMatrix::zeros(k + 1, k);
     let mut actual_k = k;
     let mut w = vec![0.0; n];
+    let mut c1: Vec<f64> = Vec::with_capacity(k + 1);
+    let mut c2: Vec<f64> = Vec::with_capacity(k + 1);
     for j in 0..k {
-        op.apply(&vs[j], &mut w);
-        // Modified Gram-Schmidt.
-        for (i, vi) in vs.iter().enumerate() {
-            let hij = vec::dot(vi, &w);
-            h[(i, j)] = hij;
-            vec::axpy(-hij, vi, &mut w);
+        op.apply(basis.col(j), &mut w);
+        // CGS2: two fused Gram/update sweeps; H gets the summed
+        // coefficients (total amount subtracted along each basis
+        // direction), preserving the Arnoldi relation exactly.
+        let cols = basis.num_cols();
+        c1.resize(cols, 0.0);
+        basis.gram_tv(&w, &mut c1);
+        basis.update(&c1, &mut w);
+        c2.resize(cols, 0.0);
+        basis.gram_tv(&w, &mut c2);
+        basis.update(&c2, &mut w);
+        for i in 0..cols {
+            h[(i, j)] = c1[i] + c2[i];
         }
-        let hnorm = vec::norm2(&w);
+        let hnorm = pnorm2(&w);
         h[(j + 1, j)] = hnorm;
         if hnorm < 1e-14 {
             actual_k = j + 1;
             break;
         }
-        let mut vnext = w.clone();
-        vec::scale(1.0 / hnorm, &mut vnext);
-        vs.push(vnext);
+        basis.push_col_scaled(&w, 1.0 / hnorm);
     }
-    let cols = vs.len();
+    let cols = basis.num_cols();
     let mut v = DenseMatrix::zeros(n, cols);
-    for (j, col) in vs.iter().enumerate() {
-        v.set_col(j, col);
+    for j in 0..cols {
+        v.set_col(j, basis.col(j));
     }
     // Trim H to (cols)×(actual_k).
     let mut ht = DenseMatrix::zeros(cols, actual_k);
@@ -83,7 +97,7 @@ pub struct GmresResult {
 pub fn gmres_solve(op: &dyn LinearOperator, b: &[f64], opts: &GmresOptions) -> GmresResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
-    let bnorm = vec::norm2(b);
+    let bnorm = pnorm2(b);
     if bnorm == 0.0 {
         return GmresResult { x: vec![0.0; n], iterations: 0, converged: true, rel_residual: 0.0 };
     }
@@ -91,10 +105,14 @@ pub fn gmres_solve(op: &dyn LinearOperator, b: &[f64], opts: &GmresOptions) -> G
     let mut total_iters = 0usize;
     let mut rel;
     let mut ax = vec![0.0; n];
+    let mut r0 = vec![0.0; n];
+    let mut vcol = vec![0.0; n];
     for _restart in 0..opts.max_restarts {
         op.apply(&x, &mut ax);
-        let r0: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
-        let beta = vec::norm2(&r0);
+        for ((r, &bi), &ai) in r0.iter_mut().zip(b).zip(&ax) {
+            *r = bi - ai;
+        }
+        let beta = pnorm2(&r0);
         rel = beta / bnorm;
         if rel <= opts.tol {
             return GmresResult { x, iterations: total_iters, converged: true, rel_residual: rel };
@@ -110,14 +128,16 @@ pub fn gmres_solve(op: &dyn LinearOperator, b: &[f64], opts: &GmresOptions) -> G
         rhs[0] = beta;
         let y = hessenberg_lstsq(&h, &rhs);
         // x += V_k y
-        for j in 0..k {
-            let col = v.col(j);
-            vec::axpy(y[j], &col, &mut x);
+        for (j, &yj) in y.iter().enumerate() {
+            v.col_into(j, &mut vcol);
+            paxpy(yj, &vcol, &mut x);
         }
     }
     op.apply(&x, &mut ax);
-    let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
-    rel = vec::norm2(&r) / bnorm;
+    for ((r, &bi), &ai) in r0.iter_mut().zip(b).zip(&ax) {
+        *r = bi - ai;
+    }
+    rel = pnorm2(&r0) / bnorm;
     GmresResult { x, iterations: total_iters, converged: rel <= opts.tol, rel_residual: rel }
 }
 
@@ -184,7 +204,7 @@ mod tests {
             let av = a.matvec(&v.col(j));
             let mut rec = vec![0.0; n];
             for i in 0..h.rows {
-                vec::axpy(h[(i, j)], &v.col(i), &mut rec);
+                crate::linalg::vec::axpy(h[(i, j)], &v.col(i), &mut rec);
             }
             for t in 0..n {
                 assert!((av[t] - rec[t]).abs() < 1e-9, "Arnoldi relation broken");

@@ -2,9 +2,18 @@
 //! application (eq. 6.4: `(I + β L_s) u = f`, SPD because spec(L_s) ⊆
 //! [0,2]) and by kernel ridge regression (`(K + βI) α = f`, §6.3), with
 //! optional Jacobi (diagonal) preconditioning.
+//!
+//! The iteration algebra (dots, axpys, the direction update) runs on
+//! the deterministic parallel kernels of [`crate::linalg::panel`]; all
+//! per-iteration *vector* scratch (x, r, z, p, Ap, the packed block)
+//! is preallocated and reused — what remains per step is O(row-blocks)
+//! reduction partials inside `pdot`, never O(n). [`cg_solve_multi`]
+//! advances C independent systems in lockstep with ONE block
+//! application and fused panel ops (packed multi-dots) per step; its
+//! per-column arithmetic is *bit-identical* to [`cg_solve`].
 
 use crate::graph::operator::LinearOperator;
-use crate::linalg::vec;
+use crate::linalg::panel::{dots_packed_into, paxpy, pdot, pnorm2, xpby};
 
 #[derive(Debug, Clone)]
 pub struct CgOptions {
@@ -30,49 +39,58 @@ pub struct CgResult {
     pub rel_residual: f64,
 }
 
+/// `z ← M⁻¹ r` into a preallocated buffer (identity when no
+/// preconditioner) — shared by the single and lockstep solvers so
+/// their per-column arithmetic can never drift.
+fn apply_prec_into(precond: &Option<Vec<f64>>, r: &[f64], z: &mut [f64]) {
+    assert_eq!(z.len(), r.len());
+    match precond {
+        Some(m) => {
+            assert_eq!(m.len(), r.len(), "preconditioner sized for a different system");
+            for ((zi, &ri), &mi) in z.iter_mut().zip(r).zip(m) {
+                *zi = ri * mi;
+            }
+        }
+        None => z.copy_from_slice(r),
+    }
+}
+
 /// Solve `A x = b` for symmetric positive definite `A`.
 pub fn cg_solve(op: &dyn LinearOperator, b: &[f64], opts: &CgOptions) -> CgResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
-    let bnorm = vec::norm2(b).max(1e-300);
+    let bnorm = pnorm2(b).max(1e-300);
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
-    let apply_prec = |r: &[f64]| -> Vec<f64> {
-        match &opts.precond_inv_diag {
-            Some(m) => r.iter().zip(m).map(|(ri, mi)| ri * mi).collect(),
-            None => r.to_vec(),
-        }
-    };
-    let mut z = apply_prec(&r);
+    let mut z = vec![0.0; n];
+    apply_prec_into(&opts.precond_inv_diag, &r, &mut z);
     let mut p = z.clone();
-    let mut rz = vec::dot(&r, &z);
+    let mut rz = pdot(&r, &z);
     let mut ap = vec![0.0; n];
     let mut iterations = 0;
-    let mut converged = vec::norm2(&r) / bnorm <= opts.tol;
+    let mut converged = pnorm2(&r) / bnorm <= opts.tol;
     while !converged && iterations < opts.max_iter {
         op.apply(&p, &mut ap);
-        let pap = vec::dot(&p, &ap);
+        let pap = pdot(&p, &ap);
         if pap <= 0.0 {
             // Not SPD (or breakdown) — stop with the best iterate.
             break;
         }
         let alpha = rz / pap;
-        vec::axpy(alpha, &p, &mut x);
-        vec::axpy(-alpha, &ap, &mut r);
+        paxpy(alpha, &p, &mut x);
+        paxpy(-alpha, &ap, &mut r);
         iterations += 1;
-        if vec::norm2(&r) / bnorm <= opts.tol {
+        if pnorm2(&r) / bnorm <= opts.tol {
             converged = true;
             break;
         }
-        z = apply_prec(&r);
-        let rz_new = vec::dot(&r, &z);
+        apply_prec_into(&opts.precond_inv_diag, &r, &mut z);
+        let rz_new = pdot(&r, &z);
         let beta = rz_new / rz;
         rz = rz_new;
-        for i in 0..n {
-            p[i] = z[i] + beta * p[i];
-        }
+        xpby(&z, beta, &mut p);
     }
-    let rel_residual = vec::norm2(&r) / bnorm;
+    let rel_residual = pnorm2(&r) / bnorm;
     CgResult { x, iterations, converged, rel_residual }
 }
 
@@ -80,7 +98,9 @@ pub fn cg_solve(op: &dyn LinearOperator, b: &[f64], opts: &CgOptions) -> CgResul
 /// operator: per-column arithmetic is identical to [`cg_solve`], but
 /// every iteration performs ONE block application over the columns
 /// still iterating — the multi-class SSL request shape ("one block per
-/// CG step across classes" instead of per-class solve loops).
+/// CG step across classes" instead of per-class solve loops) — and the
+/// per-step `pᵀAp` sweep runs as one fused packed multi-dot across the
+/// active columns.
 ///
 /// `block_apply` receives the still-active search directions packed
 /// column-major (`j`-th active column at `xs[j*n..(j+1)*n]`) and must
@@ -100,16 +120,11 @@ where
     assert!(n > 0, "empty system");
     assert!(!rhss.is_empty() && rhss.len() % n == 0, "rhs block not a multiple of n");
     let k = rhss.len() / n;
-    let apply_prec = |r: &[f64]| -> Vec<f64> {
-        match &opts.precond_inv_diag {
-            Some(m) => r.iter().zip(m).map(|(ri, mi)| ri * mi).collect(),
-            None => r.to_vec(),
-        }
-    };
     struct Col {
         x: Vec<f64>,
         r: Vec<f64>,
         p: Vec<f64>,
+        z: Vec<f64>,
         rz: f64,
         bnorm: f64,
         iterations: usize,
@@ -119,15 +134,17 @@ where
     let mut cols: Vec<Col> = (0..k)
         .map(|j| {
             let b = &rhss[j * n..(j + 1) * n];
-            let bnorm = vec::norm2(b).max(1e-300);
+            let bnorm = pnorm2(b).max(1e-300);
             let r = b.to_vec();
-            let z = apply_prec(&r);
-            let rz = vec::dot(&r, &z);
-            let converged = vec::norm2(&r) / bnorm <= opts.tol;
+            let mut z = vec![0.0; n];
+            apply_prec_into(&opts.precond_inv_diag, &r, &mut z);
+            let rz = pdot(&r, &z);
+            let converged = pnorm2(&r) / bnorm <= opts.tol;
             Col {
                 x: vec![0.0; n],
-                p: z,
+                p: z.clone(),
                 r,
+                z,
                 rz,
                 bnorm,
                 iterations: 0,
@@ -136,31 +153,40 @@ where
             }
         })
         .collect();
+    // Iteration scratch reused across lockstep steps.
+    let mut xs: Vec<f64> = Vec::with_capacity(k * n);
+    let mut paps: Vec<f64> = Vec::with_capacity(k);
+    let mut act: Vec<usize> = Vec::with_capacity(k);
     loop {
-        let act: Vec<usize> = (0..k).filter(|&j| cols[j].active).collect();
+        act.clear();
+        act.extend((0..k).filter(|&j| cols[j].active));
         if act.is_empty() {
             break;
         }
-        let mut xs = Vec::with_capacity(act.len() * n);
+        xs.clear();
         for &j in &act {
             xs.extend_from_slice(&cols[j].p);
         }
         let aps = block_apply(&xs);
         assert_eq!(aps.len(), act.len() * n, "block_apply returned a wrong-size block");
+        // One fused multi-dot across the active block — same per-column
+        // bits as cg_solve's pdot.
+        paps.resize(act.len(), 0.0);
+        dots_packed_into(&xs, &aps, n, &mut paps);
         for (slot, &j) in act.iter().enumerate() {
             let ap = &aps[slot * n..(slot + 1) * n];
             let col = &mut cols[j];
-            let pap = vec::dot(&col.p, ap);
+            let pap = paps[slot];
             if pap <= 0.0 {
                 // Not SPD (or breakdown) — stop with the best iterate.
                 col.active = false;
                 continue;
             }
             let alpha = col.rz / pap;
-            vec::axpy(alpha, &col.p, &mut col.x);
-            vec::axpy(-alpha, ap, &mut col.r);
+            paxpy(alpha, &col.p, &mut col.x);
+            paxpy(-alpha, ap, &mut col.r);
             col.iterations += 1;
-            if vec::norm2(&col.r) / col.bnorm <= opts.tol {
+            if pnorm2(&col.r) / col.bnorm <= opts.tol {
                 col.converged = true;
                 col.active = false;
                 continue;
@@ -169,18 +195,16 @@ where
                 col.active = false;
                 continue;
             }
-            let z = apply_prec(&col.r);
-            let rz_new = vec::dot(&col.r, &z);
+            apply_prec_into(&opts.precond_inv_diag, &col.r, &mut col.z);
+            let rz_new = pdot(&col.r, &col.z);
             let beta = rz_new / col.rz;
             col.rz = rz_new;
-            for i in 0..n {
-                col.p[i] = z[i] + beta * col.p[i];
-            }
+            xpby(&col.z, beta, &mut col.p);
         }
     }
     cols.into_iter()
         .map(|c| {
-            let rel_residual = vec::norm2(&c.r) / c.bnorm;
+            let rel_residual = pnorm2(&c.r) / c.bnorm;
             CgResult { x: c.x, iterations: c.iterations, converged: c.converged, rel_residual }
         })
         .collect()
@@ -298,6 +322,35 @@ mod tests {
             assert_eq!(got.iterations, want.iterations);
             assert_eq!(got.converged, want.converged);
             assert!(got.converged);
+        }
+    }
+
+    #[test]
+    fn multi_matches_single_exactly_beyond_one_row_block() {
+        // Same lockstep ≡ loop pin on a system large enough that the
+        // blocked tree-reduced dots actually split into row blocks.
+        let n = 3 * crate::linalg::panel::ROW_BLOCK + 17;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for (i, (yi, xi)) in y.iter_mut().zip(x).enumerate() {
+                    *yi = (1.0 + (i % 11) as f64) * xi;
+                }
+            },
+        };
+        let mut rng = crate::data::rng::Rng::seed_from(21);
+        let k = 3;
+        let rhss = rng.normal_vec(n * k);
+        let opts = CgOptions { tol: 1e-10, max_iter: 60, ..Default::default() };
+        let multi = cg_solve_multi(n, &rhss, &opts, |xs| {
+            let mut ys = vec![0.0; xs.len()];
+            op.apply_block(xs, &mut ys);
+            ys
+        });
+        for (j, got) in multi.iter().enumerate() {
+            let want = cg_solve(&op, &rhss[j * n..(j + 1) * n], &opts);
+            assert_eq!(got.x, want.x, "column {j} iterates diverged");
+            assert_eq!(got.iterations, want.iterations);
         }
     }
 

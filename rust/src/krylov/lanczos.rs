@@ -6,12 +6,25 @@
 //! orthogonality that plagues the plain three-term recurrence) and the
 //! paper's residual bound ‖A Q_k w − λ Q_k w‖ = |β_{k+1} w_k| (eq. 4.1
 //! ff.) as the convergence criterion.
+//!
+//! The basis lives in a [`Panel`] (contiguous column-major chunks) and
+//! the whole per-iteration basis algebra — reorthogonalisation, Ritz
+//! assembly, the block-Lanczos Gram products — runs on the panel
+//! engine's fused deterministic kernels: full reorthogonalisation is
+//! two classical Gram-Schmidt passes, each ONE [`Panel::gram_tv`] +
+//! ONE [`Panel::update`] sweep instead of j separate `dot`/`axpy`
+//! passes ("twice is enough" holds for CGS2 exactly as it did for the
+//! seed's MGS2). [`EigResult`] reports the resulting phase split:
+//! `matvec_secs` (operator applications) vs `ortho_secs` (basis
+//! algebra) — the two terms of the Amdahl budget the eigen benchmarks
+//! track.
 
 use crate::data::rng::Rng;
 use crate::graph::operator::LinearOperator;
 use crate::linalg::dense::DenseMatrix;
+use crate::linalg::panel::{paxpy, pdot, pnorm2, Panel};
 use crate::linalg::tridiag::tridiag_eig;
-use crate::linalg::vec;
+use crate::util::timer::Timer;
 
 #[derive(Debug, Clone, Copy)]
 pub struct LanczosOptions {
@@ -46,6 +59,11 @@ pub struct EigResult {
     pub residual_bounds: Vec<f64>,
     /// Number of operator applications.
     pub matvecs: usize,
+    /// Seconds spent inside operator applications.
+    pub matvec_secs: f64,
+    /// Seconds spent in the basis algebra (reorthogonalisation, Gram
+    /// products, Ritz assembly) — the panel-engine phase.
+    pub ortho_secs: f64,
 }
 
 /// Compute the k largest eigenpairs of the symmetric `op`.
@@ -56,44 +74,52 @@ pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult 
     let max_iter = opts.max_iter.min(n).max(k + 2);
 
     let mut rng = Rng::seed_from(opts.seed);
-    // Basis vectors stored as rows of `q` (row-major j-th basis vector
-    // at q[j]) for cache-friendly reorthogonalisation.
-    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(max_iter);
+    // Basis vectors as panel columns — contiguous, chunk-pooled; the
+    // reorthogonalisation sweeps run on the fused panel kernels.
+    let mut basis = Panel::new(n, 8.min(max_iter.max(1)));
     let mut alpha: Vec<f64> = Vec::new();
     let mut beta: Vec<f64> = Vec::new(); // β_2..: beta[j] couples q_j, q_{j+1}
 
-    let mut q = rng.normal_vec(n);
-    vec::normalize(&mut q);
-    basis.push(q.clone());
+    let q = rng.normal_vec(n);
+    let q_norm = pnorm2(&q);
+    assert!(q_norm > 0.0, "zero start vector");
+    basis.push_col_scaled(&q, 1.0 / q_norm);
 
     let mut w = vec![0.0; n];
+    // Reorthogonalisation coefficients, resized to the basis each
+    // iteration (allocation-free steady state).
+    let mut coeffs: Vec<f64> = Vec::with_capacity(max_iter);
     let mut matvecs = 0usize;
+    let mut matvec_secs = 0.0f64;
+    let mut ortho_secs = 0.0f64;
     let mut converged_info: Option<(Vec<f64>, DenseMatrix, Vec<f64>)> = None;
 
     for j in 0..max_iter {
-        op.apply(&basis[j], &mut w);
+        let t = Timer::start();
+        op.apply(basis.col(j), &mut w);
+        matvec_secs += t.elapsed_secs();
         matvecs += 1;
-        let a_j = vec::dot(&basis[j], &w);
+        let t = Timer::start();
+        let a_j = pdot(basis.col(j), &w);
         alpha.push(a_j);
         // w ← w − α_j q_j − β_j q_{j−1}
-        vec::axpy(-a_j, &basis[j], &mut w);
+        paxpy(-a_j, basis.col(j), &mut w);
         if j > 0 {
             let b_j = beta[j - 1];
-            vec::axpy(-b_j, &basis[j - 1], &mut w);
+            paxpy(-b_j, basis.col(j - 1), &mut w);
         }
         if opts.full_reorth {
             // Two passes of classical Gram-Schmidt against the whole
-            // basis ("twice is enough").
+            // basis ("twice is enough"), each pass ONE fused Gram
+            // sweep + ONE fused update sweep.
             for _ in 0..2 {
-                for qv in &basis {
-                    let c = vec::dot(qv, &w);
-                    if c != 0.0 {
-                        vec::axpy(-c, qv, &mut w);
-                    }
-                }
+                coeffs.resize(basis.num_cols(), 0.0);
+                basis.gram_tv(&w, &mut coeffs);
+                basis.update(&coeffs, &mut w);
             }
         }
-        let b_next = vec::norm2(&w);
+        let b_next = pnorm2(&w);
+        ortho_secs += t.elapsed_secs();
         // Convergence test on the current tridiagonal. The QL solve with
         // vector accumulation is O(j³), so test every 5th iteration
         // (and on the final one) once j ≥ k.
@@ -128,9 +154,9 @@ pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult 
         }
         if j + 1 < max_iter {
             beta.push(b_next);
-            let mut qn = w.clone();
-            vec::scale(1.0 / b_next, &mut qn);
-            basis.push(qn);
+            let t = Timer::start();
+            basis.push_col_scaled(&w, 1.0 / b_next);
+            ortho_secs += t.elapsed_secs();
         }
     }
 
@@ -141,29 +167,29 @@ pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult 
     });
     let dim = alpha.len();
     let kk = k.min(dim);
-    // Assemble Ritz vectors for the kk largest Ritz values.
+    // Assemble Ritz vectors v = Q z_col for the kk largest Ritz values
+    // — one fused panel mul per vector.
+    let t = Timer::start();
     let mut eigenvalues = Vec::with_capacity(kk);
     let mut vectors = DenseMatrix::zeros(n, kk);
-    for t in 0..kk {
-        let col = dim - 1 - t; // descending
+    let mut zcol = vec![0.0; dim];
+    let mut vcol = vec![0.0; n];
+    for t_idx in 0..kk {
+        let col = dim - 1 - t_idx; // descending
         eigenvalues.push(evals[col]);
-        // v = Q z_col
-        for (j, qv) in basis.iter().enumerate().take(dim) {
-            let zj = z[(j, col)];
-            if zj == 0.0 {
-                continue;
-            }
-            for i in 0..n {
-                vectors[(i, t)] += zj * qv[i];
-            }
-        }
+        z.col_into(col, &mut zcol);
+        basis.mul(&zcol, &mut vcol);
+        vectors.set_col(t_idx, &vcol);
     }
+    ortho_secs += t.elapsed_secs();
     EigResult {
         eigenvalues,
         eigenvectors: vectors,
         iterations: dim,
         residual_bounds: resids,
         matvecs,
+        matvec_secs,
+        ortho_secs,
     }
 }
 
@@ -199,13 +225,18 @@ impl Default for BlockLanczosOptions {
 /// engine invocation per iteration instead of b single matvecs.
 ///
 /// Implementation: Rayleigh–Ritz over the accumulated block-Krylov
-/// basis. Each iteration stores both `Q_s` and `Y_s = A Q_s`, builds
-/// the projected matrix `T = Vᵀ A V` from those products directly
-/// (robust to rank deflation, unlike the three-term block recurrence),
-/// and measures TRUE residual norms `‖A v − θ v‖₂ = ‖Y z − θ V z‖₂`
-/// for the convergence test. The residual block is fully (two-pass)
-/// reorthogonalised; rank-deficient directions are replaced by fresh
-/// random vectors orthogonal to the basis so the block never shrinks.
+/// basis. The basis `Q` and its images `Y = A Q` are two [`Panel`]s
+/// whose chunks are single b-column blocks — contiguous, so each
+/// iteration's block feeds `apply_block` with zero copies and the
+/// engine's output lands directly in the image panel. Each iteration
+/// builds the projected matrix `T = Vᵀ A V` from the stored products
+/// directly (robust to rank deflation, unlike the three-term block
+/// recurrence) via ONE [`Panel::gram_block`], and measures TRUE
+/// residual norms `‖A v − θ v‖₂ = ‖Y z − θ V z‖₂` for the convergence
+/// test. The residual block is fully (two-pass, CGS2)
+/// reorthogonalised with two `gram_block`/`update_block` pairs;
+/// rank-deficient directions are replaced by fresh random vectors
+/// orthogonal to the basis so the block never shrinks.
 pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) -> EigResult {
     use crate::linalg::jacobi::sym_eig;
     use crate::linalg::qr::{orth, thin_qr};
@@ -229,36 +260,55 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
         }
     }
     let q0 = orth(&g);
-    let mut first = vec![0.0; n * b];
-    for j in 0..b {
-        for i in 0..n {
-            first[j * n + i] = q0[(i, j)];
+    // Basis blocks Q_s and their images Y_s = A Q_s as two panels:
+    // every chunk is a contiguous n×b column-major block (the
+    // apply_block layout).
+    let mut basis = Panel::new(n, b);
+    let mut images = Panel::new(n, b);
+    basis.push_chunk_with(|buf| {
+        for (q, col) in buf.chunks_exact_mut(n).enumerate() {
+            for (i, v) in col.iter_mut().enumerate() {
+                *v = q0[(i, q)];
+            }
         }
-    }
-    // Basis blocks Q_s and their images Y_s = A Q_s, each column-major
-    // n×b (the apply_block layout).
-    let mut blocks: Vec<Vec<f64>> = vec![first];
-    let mut images: Vec<Vec<f64>> = Vec::new();
+    });
     // Persistent upper block wedge of Vᵀ A V products; grows by one
     // column block per iteration (append-only basis ⇒ old products
     // stay valid, no O(dim²·n) recompute).
     let mut t_raw = DenseMatrix::zeros(0, 0);
     let mut matvecs = 0usize;
+    let mut matvec_secs = 0.0f64;
+    let mut ortho_secs = 0.0f64;
     let mut last: Option<(Vec<f64>, DenseMatrix, Vec<f64>)> = None;
+    // Reused iteration scratch — the steady-state loop allocates
+    // nothing beyond panel growth.
+    let mut tcol: Vec<f64> = Vec::new();
+    let mut cbuf: Vec<f64> = Vec::new();
+    let mut w_buf = vec![0.0; n * b];
+    let mut zcol: Vec<f64> = Vec::new();
+    let mut vz = vec![0.0; n];
+    let mut yz = vec![0.0; n];
+    let mut qcol = vec![0.0; n];
 
     for s in 0..max_blocks {
-        // One block application per iteration.
-        let mut y = vec![0.0; n * b];
-        op.apply_block(&blocks[s], &mut y);
+        // One block application per iteration, written straight into
+        // the image panel's next chunk.
+        let t = Timer::start();
+        images.push_chunk_with(|buf| {
+            buf.fill(0.0);
+            op.apply_block(basis.chunk(s), buf);
+        });
+        matvec_secs += t.elapsed_secs();
         matvecs += b;
-        images.push(y);
-        let nb = images.len();
+        let nb = s + 1;
         let dim = nb * b;
 
         // T = Vᵀ A V from the stored products (symmetrised; it is
         // symmetric in exact arithmetic because A is). Only the new
-        // column block Q_iᵀ Y_s is computed this iteration; the rest
-        // is carried over from `t_raw`.
+        // column block Vᵀ Y_s is computed this iteration — ONE panel
+        // Gram over the image chunk — the rest is carried over from
+        // `t_raw`.
+        let t = Timer::start();
         let mut t_grown = DenseMatrix::zeros(dim, dim);
         let old = t_raw.rows;
         for i in 0..old {
@@ -266,14 +316,11 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
                 t_grown[(i, j)] = t_raw[(i, j)];
             }
         }
-        let y_new = &images[nb - 1];
-        for (i, qb) in blocks.iter().enumerate().take(nb) {
-            for p in 0..b {
-                let qv = &qb[p * n..(p + 1) * n];
-                for q in 0..b {
-                    t_grown[(i * b + p, (nb - 1) * b + q)] =
-                        vec::dot(qv, &y_new[q * n..(q + 1) * n]);
-                }
+        tcol.resize(dim * b, 0.0);
+        basis.gram_block(images.chunk(nb - 1), &mut tcol);
+        for q in 0..b {
+            for row in 0..dim {
+                t_grown[(row, (nb - 1) * b + q)] = tcol[q * dim + row];
             }
         }
         t_raw = t_grown;
@@ -293,33 +340,22 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
                 }
             }
         }
+        ortho_secs += t.elapsed_secs();
         let (evals, z) = sym_eig(&t_mat); // ascending
 
-        // True residuals ‖Y z − θ V z‖₂ of the kk largest Ritz pairs.
+        // True residuals ‖Y z − θ V z‖₂ of the kk largest Ritz pairs —
+        // two fused panel muls per pair.
+        let t = Timer::start();
         let kk = k.min(dim);
         let mut resids = Vec::with_capacity(kk);
         let mut all_ok = dim >= k;
-        let mut vz = vec![0.0; n];
-        let mut yz = vec![0.0; n];
-        for t in 0..kk {
-            let col = dim - 1 - t;
+        zcol.resize(dim, 0.0);
+        for t_idx in 0..kk {
+            let col = dim - 1 - t_idx;
             let theta = evals[col];
-            vz.fill(0.0);
-            yz.fill(0.0);
-            for ib in 0..nb {
-                for p in 0..b {
-                    let zv = z[(ib * b + p, col)];
-                    if zv == 0.0 {
-                        continue;
-                    }
-                    let qv = &blocks[ib][p * n..(p + 1) * n];
-                    let yv = &images[ib][p * n..(p + 1) * n];
-                    for i in 0..n {
-                        vz[i] += zv * qv[i];
-                        yz[i] += zv * yv[i];
-                    }
-                }
-            }
+            z.col_into(col, &mut zcol);
+            basis.mul(&zcol, &mut vz);
+            images.mul(&zcol, &mut yz);
             let mut r2 = 0.0;
             for i in 0..n {
                 let r = yz[i] - theta * vz[i];
@@ -331,33 +367,25 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
                 all_ok = false;
             }
         }
+        ortho_secs += t.elapsed_secs();
         last = Some((evals, z, resids));
         if (all_ok && dim >= k) || s + 1 == max_blocks || dim + b > n {
             break;
         }
 
-        // Next block: residual Y_s fully reorthogonalised (two CGS
-        // passes) against every stored block, then QR.
-        let mut w = images[s].clone();
+        // Next block: residual Y_s fully reorthogonalised against the
+        // whole basis — two CGS passes, each ONE gram_block + ONE
+        // update_block — then QR.
+        let t = Timer::start();
+        w_buf.copy_from_slice(images.chunk(s));
         for _ in 0..2 {
-            for qb in &blocks {
-                for q in 0..b {
-                    let col = &mut w[q * n..(q + 1) * n];
-                    for p in 0..b {
-                        let qv = &qb[p * n..(p + 1) * n];
-                        let c = vec::dot(qv, col);
-                        if c != 0.0 {
-                            vec::axpy(-c, qv, col);
-                        }
-                    }
-                }
-            }
+            cbuf.resize(dim * b, 0.0);
+            basis.gram_block(&w_buf, &mut cbuf);
+            basis.update_block(&cbuf, &mut w_buf);
         }
         let mut wmat = DenseMatrix::zeros(n, b);
-        for q in 0..b {
-            for i in 0..n {
-                wmat[(i, q)] = w[q * n + i];
-            }
+        for (q, col) in w_buf.chunks_exact(n).enumerate() {
+            wmat.set_col(q, col);
         }
         let (mut q_next, r) = thin_qr(&wmat);
         // Rank recovery: replace deflated directions (tiny R diagonal —
@@ -376,77 +404,71 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
             .max(f64::MIN_POSITIVE);
         let rmax = (0..b).map(|t| r[(t, t)].abs()).fold(0.0f64, f64::max);
         let mut recovered = true;
-        for t in 0..b {
-            if r[(t, t)].abs() > 1e-12 * rmax && rmax > 1e-13 * a_scale {
+        for t_idx in 0..b {
+            if r[(t_idx, t_idx)].abs() > 1e-12 * rmax && rmax > 1e-13 * a_scale {
                 continue;
             }
             let mut v = rng.normal_vec(n);
             for _ in 0..2 {
-                for qb in &blocks {
-                    for p in 0..b {
-                        let qv = &qb[p * n..(p + 1) * n];
-                        let c = vec::dot(qv, &v);
-                        vec::axpy(-c, qv, &mut v);
-                    }
-                }
+                cbuf.resize(dim, 0.0);
+                basis.gram_tv(&v, &mut cbuf);
+                basis.update(&cbuf, &mut v);
                 for p in 0..b {
-                    if p == t {
+                    if p == t_idx {
                         continue;
                     }
-                    let qcol: Vec<f64> = (0..n).map(|i| q_next[(i, p)]).collect();
-                    let c = vec::dot(&qcol, &v);
-                    vec::axpy(-c, &qcol, &mut v);
+                    q_next.col_into(p, &mut qcol);
+                    let c = pdot(&qcol, &v);
+                    paxpy(-c, &qcol, &mut v);
                 }
             }
-            let nv = vec::norm2(&v);
+            let nv = pnorm2(&v);
             if nv < 1e-8 {
                 recovered = false;
                 break;
             }
-            vec::scale(1.0 / nv, &mut v);
-            for i in 0..n {
-                q_next[(i, t)] = v[i];
+            let inv = 1.0 / nv;
+            for (i, vi) in v.iter().enumerate() {
+                q_next[(i, t_idx)] = vi * inv;
             }
         }
         if !recovered {
+            ortho_secs += t.elapsed_secs();
             break; // the basis exhausted the space
         }
-        let mut next = vec![0.0; n * b];
-        for q in 0..b {
-            for i in 0..n {
-                next[q * n + i] = q_next[(i, q)];
+        basis.push_chunk_with(|buf| {
+            for (q, col) in buf.chunks_exact_mut(n).enumerate() {
+                for (i, v) in col.iter_mut().enumerate() {
+                    *v = q_next[(i, q)];
+                }
             }
-        }
-        blocks.push(next);
+        });
+        ortho_secs += t.elapsed_secs();
     }
 
     let (evals, z, resids) = last.expect("at least one block iteration runs");
-    let dim = images.len() * b;
+    let dim = images.num_cols();
     let kk = k.min(dim);
+    let t = Timer::start();
     let mut eigenvalues = Vec::with_capacity(kk);
     let mut vectors = DenseMatrix::zeros(n, kk);
-    for t in 0..kk {
-        let col = dim - 1 - t; // descending
+    zcol.resize(dim, 0.0);
+    for t_idx in 0..kk {
+        let col = dim - 1 - t_idx; // descending
         eigenvalues.push(evals[col]);
-        for (ib, qb) in blocks.iter().enumerate().take(images.len()) {
-            for p in 0..b {
-                let zv = z[(ib * b + p, col)];
-                if zv == 0.0 {
-                    continue;
-                }
-                let qv = &qb[p * n..(p + 1) * n];
-                for i in 0..n {
-                    vectors[(i, t)] += zv * qv[i];
-                }
-            }
-        }
+        z.col_into(col, &mut zcol);
+        basis.mul(&zcol, &mut vz);
+        vectors.set_col(t_idx, &vz);
     }
+    ortho_secs += t.elapsed_secs();
     EigResult {
         eigenvalues,
         eigenvectors: vectors,
         iterations: dim,
         residual_bounds: resids,
         matvecs,
+        matvec_secs,
+        ortho_secs,
     }
 }
 
@@ -585,6 +607,45 @@ mod tests {
         assert!(r.eigenvalues.len() >= 2);
         assert!((r.eigenvalues[0] - 3.0).abs() < 1e-8);
         assert!((r.eigenvalues[1] - 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn reports_phase_split() {
+        let mut rng = crate::data::rng::Rng::seed_from(9);
+        let points = rng.normal_vec(40 * 2);
+        let op = DenseKernelOperator::new(
+            &points,
+            2,
+            crate::fastsum::Kernel::Gaussian { sigma: 1.5 },
+            DenseMode::Normalized,
+        );
+        let r = lanczos_eigs(&op, LanczosOptions { k: 4, ..Default::default() });
+        assert!(r.matvec_secs >= 0.0 && r.matvec_secs.is_finite());
+        assert!(r.ortho_secs > 0.0, "reorthogonalisation must be timed");
+        let rb = block_lanczos_eigs(
+            &op,
+            BlockLanczosOptions { k: 4, block: 2, ..Default::default() },
+        );
+        assert!(rb.ortho_secs > 0.0);
+    }
+
+    #[test]
+    fn lanczos_is_run_to_run_deterministic() {
+        // The panel kernels are bitwise deterministic, so the whole
+        // solver is a pure function of (operator, options).
+        let mut rng = crate::data::rng::Rng::seed_from(12);
+        let points = rng.normal_vec(45 * 2);
+        let op = DenseKernelOperator::new(
+            &points,
+            2,
+            crate::fastsum::Kernel::Gaussian { sigma: 1.5 },
+            DenseMode::Normalized,
+        );
+        let opts = LanczosOptions { k: 5, ..Default::default() };
+        let a = lanczos_eigs(&op, opts);
+        let b = lanczos_eigs(&op, opts);
+        assert_eq!(a.eigenvalues, b.eigenvalues);
+        assert_eq!(a.eigenvectors.data, b.eigenvectors.data);
     }
 
     #[test]

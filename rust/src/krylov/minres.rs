@@ -3,9 +3,14 @@
 //! based solver alongside CG. Used when the shifted graph operator is
 //! not guaranteed definite (e.g. `L_s − μ I` shifts in spectral
 //! experiments).
+//!
+//! Iteration algebra on the deterministic parallel kernels of
+//! [`crate::linalg::panel`]; the Lanczos-vector and direction buffers
+//! rotate by swap, so the steady-state loop performs no allocation.
 
 use crate::graph::operator::LinearOperator;
-use crate::linalg::vec;
+use crate::linalg::panel::{paxpy, pdot, pnorm2, PAR_THRESHOLD};
+use rayon::prelude::*;
 
 #[derive(Debug, Clone, Copy)]
 pub struct MinresOptions {
@@ -31,16 +36,17 @@ pub struct MinresResult {
 pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) -> MinresResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
-    let bnorm = vec::norm2(b);
+    let bnorm = pnorm2(b);
     if bnorm == 0.0 {
         return MinresResult { x: vec![0.0; n], iterations: 0, converged: true, rel_residual: 0.0 };
     }
-    // Lanczos vectors.
+    // Lanczos vectors (rotated by swap each iteration — no cloning).
     let mut v_prev = vec![0.0; n];
-    let mut v = b.to_vec();
+    let inv0 = 1.0 / bnorm;
+    let mut v: Vec<f64> = b.iter().map(|&bi| bi * inv0).collect();
     let mut beta = bnorm;
-    vec::scale(1.0 / beta, &mut v);
-    // Solution update directions.
+    // Solution update directions, likewise rotated by swap.
+    let mut d_cur = vec![0.0; n];
     let mut d_prev = vec![0.0; n];
     let mut d_prev2 = vec![0.0; n];
     let mut x = vec![0.0; n];
@@ -53,11 +59,19 @@ pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) ->
     for iter in 1..=opts.max_iter {
         // Lanczos step.
         op.apply(&v, &mut w);
-        let alpha = vec::dot(&v, &w);
-        for i in 0..n {
-            w[i] -= alpha * v[i] + beta * v_prev[i];
+        let alpha = pdot(&v, &w);
+        // Element-wise, so serial and parallel are bit-identical; gate
+        // the fork-join on the same threshold as the panel kernels.
+        if n <= PAR_THRESHOLD {
+            for (wi, (vi, vpi)) in w.iter_mut().zip(v.iter().zip(v_prev.iter())) {
+                *wi -= alpha * vi + beta * vpi;
+            }
+        } else {
+            w.par_iter_mut()
+                .zip(v.par_iter().zip(v_prev.par_iter()))
+                .for_each(|(wi, (&vi, &vpi))| *wi -= alpha * vi + beta * vpi);
         }
-        let beta_next = vec::norm2(&w);
+        let beta_next = pnorm2(&w);
         // Apply previous rotations to the new tridiagonal column.
         let delta = c * alpha - c_prev * s * beta;
         let gamma1 = (delta * delta + beta_next * beta_next).sqrt();
@@ -70,25 +84,50 @@ pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) ->
             (1.0, 0.0)
         };
         // Update direction d = (v − gamma2 d_prev − epsilon d_prev2)/gamma1.
-        let mut d = vec![0.0; n];
-        for i in 0..n {
-            d[i] = (v[i] - gamma2 * d_prev[i] - epsilon * d_prev2[i]) / gamma1.max(1e-300);
+        let g1 = gamma1.max(1e-300);
+        if n <= PAR_THRESHOLD {
+            for (di, (vi, (dpi, dp2i))) in d_cur
+                .iter_mut()
+                .zip(v.iter().zip(d_prev.iter().zip(d_prev2.iter())))
+            {
+                *di = (vi - gamma2 * dpi - epsilon * dp2i) / g1;
+            }
+        } else {
+            d_cur
+                .par_iter_mut()
+                .zip(v.par_iter().zip(d_prev.par_iter().zip(d_prev2.par_iter())))
+                .for_each(|(di, (&vi, (&dpi, &dp2i)))| {
+                    *di = (vi - gamma2 * dpi - epsilon * dp2i) / g1
+                });
         }
         // x += c_new * eta * d
-        vec::axpy(c_new * eta, &d, &mut x);
+        paxpy(c_new * eta, &d_cur, &mut x);
         rel = (s_new * eta).abs() / bnorm;
         eta = -s_new * eta;
-        // Shift state.
-        d_prev2 = std::mem::replace(&mut d_prev, d);
+        // Shift state: d_prev2 ← d_prev ← d_cur (old d_prev2 becomes
+        // next iteration's scratch).
+        std::mem::swap(&mut d_prev2, &mut d_prev);
+        std::mem::swap(&mut d_prev, &mut d_cur);
         c_prev = c;
         s_prev = s;
         c = c_new;
         s = s_new;
         if beta_next < 1e-300 || rel <= opts.tol {
-            return MinresResult { x, iterations: iter, converged: rel <= opts.tol, rel_residual: rel };
+            let converged = rel <= opts.tol;
+            return MinresResult { x, iterations: iter, converged, rel_residual: rel };
         }
-        v_prev = std::mem::replace(&mut v, w.clone());
-        vec::scale(1.0 / beta_next, &mut v);
+        // v_prev ← v, v ← w/β (old v_prev is overwritten by the next
+        // apply's output buffer).
+        std::mem::swap(&mut v_prev, &mut v);
+        std::mem::swap(&mut v, &mut w);
+        let inv = 1.0 / beta_next;
+        if n <= PAR_THRESHOLD {
+            for vi in v.iter_mut() {
+                *vi *= inv;
+            }
+        } else {
+            v.par_iter_mut().for_each(|vi| *vi *= inv);
+        }
         beta = beta_next;
     }
     MinresResult { x, iterations: opts.max_iter, converged: false, rel_residual: rel }
@@ -122,7 +161,9 @@ mod tests {
     fn solves_indefinite_system() {
         // diag(-2, -1, 1, 2, ...) — CG would break down, MINRES fine.
         let n = 20;
-        let diag: Vec<f64> = (0..n).map(|i| if i < n / 2 { -((i + 1) as f64) } else { (i + 1) as f64 }).collect();
+        let diag: Vec<f64> = (0..n)
+            .map(|i| if i < n / 2 { -((i + 1) as f64) } else { (i + 1) as f64 })
+            .collect();
         let d2 = diag.clone();
         let op = FnOperator {
             n,

@@ -7,6 +7,12 @@
 //! All methods consume a [`crate::graph::LinearOperator`], so the same
 //! code runs against the dense direct engine, the native NFFT fastsum
 //! engine, the PJRT artifact engine and truncated eigenapproximations.
+//!
+//! The O(n·j) basis algebra of every solver — reorthogonalisation,
+//! Gram products, Ritz assembly, iteration dots/axpys — runs on the
+//! panel-major multi-vector engine ([`crate::linalg::panel`]): fused
+//! blocked sweeps, rayon-parallel, bitwise deterministic across runs
+//! and thread counts.
 
 pub mod arnoldi;
 pub mod cg;

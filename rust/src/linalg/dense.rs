@@ -48,6 +48,27 @@ impl DenseMatrix {
         (0..self.rows).map(|i| self[(i, j)]).collect()
     }
 
+    /// Copy column `j` into `out` — the allocation-free form of
+    /// [`Self::col`] for hot loops (Ritz extraction, GMRES updates).
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self[(i, j)];
+        }
+    }
+
+    /// Build from a packed column-major slab (`data.len() / rows`
+    /// columns) — the `apply_block` / panel layout.
+    pub fn from_col_major(rows: usize, data: &[f64]) -> DenseMatrix {
+        assert!(rows > 0 && data.len() % rows == 0);
+        let cols = data.len() / rows;
+        let mut m = DenseMatrix::zeros(rows, cols);
+        for (j, col) in data.chunks_exact(rows).enumerate() {
+            m.set_col(j, col);
+        }
+        m
+    }
+
     pub fn set_col(&mut self, j: usize, v: &[f64]) {
         assert_eq!(v.len(), self.rows);
         for i in 0..self.rows {
@@ -198,6 +219,16 @@ mod tests {
         let b = DenseMatrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
         let c = a.matmul(&b);
         assert_eq!(c, DenseMatrix::from_rows(&[vec![2.0, 1.0], vec![4.0, 3.0]]));
+    }
+
+    #[test]
+    fn col_into_and_from_col_major_round_trip() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let mut c = vec![0.0; 3];
+        a.col_into(1, &mut c);
+        assert_eq!(c, vec![2.0, 4.0, 6.0]);
+        let slab = [1.0, 3.0, 5.0, 2.0, 4.0, 6.0]; // column-major
+        assert_eq!(DenseMatrix::from_col_major(3, &slab), a);
     }
 
     #[test]

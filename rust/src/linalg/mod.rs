@@ -1,13 +1,17 @@
 //! Dense linear-algebra substrate (no BLAS/LAPACK offline): vector
-//! helpers, a row-major dense matrix, Householder QR, the symmetric
-//! tridiagonal QL eigensolver (the Lanczos back end), and a cyclic
-//! Jacobi eigensolver used as the small-matrix oracle and by the
-//! Nyström methods.
+//! helpers, the panel-major multi-vector engine behind the Krylov hot
+//! loops ([`panel`]), a row-major dense matrix, Householder QR
+//! (column-major working set, trailing columns in parallel), the
+//! symmetric tridiagonal QL eigensolver (the Lanczos back end), and a
+//! cyclic Jacobi eigensolver used as the small-matrix oracle and by
+//! the Nyström methods.
 
 pub mod dense;
 pub mod jacobi;
+pub mod panel;
 pub mod qr;
 pub mod tridiag;
 pub mod vec;
 
 pub use dense::DenseMatrix;
+pub use panel::Panel;

@@ -1,0 +1,793 @@
+//! Panel-major multi-vector engine — the blocked, parallel,
+//! deterministic basis algebra under every Krylov loop.
+//!
+//! Once the operator apply is fast (block matvecs, half-spectrum FFT,
+//! tiled spread), the hot path of the eigen benchmarks and the
+//! multi-class SSL solves is the *basis algebra*: full
+//! reorthogonalisation is O(n·j) per Lanczos iteration, and the seed
+//! ran it as j separate one-vector `dot`/`axpy` sweeps over a
+//! `Vec<Vec<f64>>`. [`Panel`] stores j basis vectors as contiguous
+//! column-major chunks (grown from a [`BufferPool`], so steady-state
+//! growth recycles buffers) and exposes fused kernels that sweep the
+//! whole basis per pass:
+//!
+//! * [`Panel::gram_tv`] — `c = Vᵀw`, all j coefficients in one blocked
+//!   sweep, and its k-column form [`Panel::gram_block`] (`C = VᵀW`);
+//! * [`Panel::update`] — `w −= V·c` in one fused sweep, and
+//!   [`Panel::update_block`] (`W −= V·C`);
+//! * [`Panel::mul`] — `out = V·z` (Ritz-vector assembly);
+//! * the free multi-vector forms [`pdot`], [`pnorm2`], [`paxpy`],
+//!   [`xpby`], [`dots_packed_into`] used by CG/MINRES iterations.
+//!
+//! # Determinism contract
+//!
+//! Every kernel here is **run-to-run bitwise deterministic and
+//! bit-identical serial vs parallel**, for any thread count:
+//!
+//! * element-wise kernels (`update`, `mul`, `paxpy`, `xpby`) touch each
+//!   output element with a fixed per-element operation order, so
+//!   parallelising over disjoint row ranges cannot change a bit — they
+//!   are bitwise equal to the retained seed scalar loops
+//!   ([`Panel::update_reference`], [`Panel::mul_reference`],
+//!   [`crate::linalg::vec::axpy`]) at every size;
+//! * reductions (`gram_tv`, `gram_block`, `pdot`, `pnorm2`) accumulate
+//!   over **fixed row blocks** of [`ROW_BLOCK`] rows (block boundaries
+//!   depend only on n, never on the thread count) and combine the
+//!   per-block partials with the fixed-order pairwise tree shared with
+//!   the spread/shard layers
+//!   ([`crate::util::reduce::tree_reduce_chunks_in_place`]). For
+//!   n ≤ [`ROW_BLOCK`] this is *bit-identical* to the seed sequential
+//!   dot ([`Panel::gram_tv_reference`], [`crate::linalg::vec::dot`]);
+//!   beyond one block it agrees with the sequential order to roundoff
+//!   while remaining a pure function of the inputs.
+//!
+//! The seed scalar loops are retained as `*_reference` kernels: they
+//! are the semantic oracles of the proptest suite and the baseline rows
+//! of the `BENCH_krylov.json` micro-benchmark.
+
+use crate::linalg::vec;
+use crate::util::pool::BufferPool;
+use crate::util::reduce::tree_reduce_chunks_in_place;
+use rayon::prelude::*;
+use std::sync::{Arc, Mutex};
+
+/// Rows per reduction block. Fixed (never derived from the thread
+/// count) so block boundaries — and therefore every reduction's
+/// floating-point result — are a pure function of the input length.
+pub const ROW_BLOCK: usize = 2048;
+
+/// Below this many total elements a kernel runs serially — the
+/// arithmetic is identical either way (see the module docs), this is
+/// purely a scheduling decision. Shared with the Krylov iteration
+/// loops (MINRES) so every element-wise sweep gates the same way.
+pub(crate) const PAR_THRESHOLD: usize = 1 << 14;
+
+/// A growable n×j column-major multi-vector panel.
+///
+/// Columns live in chunks of `chunk_cols` columns, each chunk one
+/// contiguous `n·chunk_cols` buffer checked out of a [`BufferPool`].
+/// A panel returns its chunks to the pool on drop, so a caller running
+/// successive same-shape solves can hand the same pool to each run via
+/// [`Panel::with_pool`] and grow every basis after the first one
+/// allocation-free (within one panel's lifetime chunks are held, not
+/// recycled — panels are append-only). Every column is contiguous; a
+/// chunk of columns is contiguous too, which lets block-Krylov callers
+/// hand a whole chunk straight to `apply_block` with no
+/// gather/scatter copies.
+pub struct Panel {
+    n: usize,
+    cols: usize,
+    chunk_cols: usize,
+    chunks: Vec<Vec<f64>>,
+    pool: Arc<BufferPool<f64>>,
+    /// Recycled per-call Gram partial slabs (`nblocks·j` each) — the
+    /// steady-state reorthogonalisation loop allocates nothing.
+    partials: Mutex<Vec<Vec<f64>>>,
+}
+
+impl Panel {
+    /// Empty panel of n-row columns with a private chunk pool.
+    pub fn new(n: usize, chunk_cols: usize) -> Panel {
+        assert!(n > 0 && chunk_cols > 0);
+        let pool = Arc::new(BufferPool::new(n * chunk_cols, 0.0f64));
+        Self::with_pool(n, chunk_cols, pool)
+    }
+
+    /// Empty panel drawing its chunks from a shared pool (which must
+    /// hand out `n·chunk_cols`-length buffers).
+    pub fn with_pool(n: usize, chunk_cols: usize, pool: Arc<BufferPool<f64>>) -> Panel {
+        assert!(n > 0 && chunk_cols > 0);
+        assert_eq!(pool.buf_len(), n * chunk_cols, "pool sized for a different panel shape");
+        Panel { n, cols: 0, chunk_cols, chunks: Vec::new(), pool, partials: Mutex::new(Vec::new()) }
+    }
+
+    /// Panel copied out of a packed column-major slab (`k = data.len()
+    /// / n` columns), chunked at `chunk_cols`. When the caller can give
+    /// up the slab, [`Panel::from_owned_col_major`] adopts it without
+    /// copying.
+    pub fn from_col_major(n: usize, chunk_cols: usize, data: &[f64]) -> Panel {
+        assert!(n > 0 && data.len() % n == 0);
+        let mut p = Panel::new(n, chunk_cols);
+        for col in data.chunks_exact(n) {
+            p.push_col(col);
+        }
+        p
+    }
+
+    /// Panel adopting an existing packed column-major slab as its ONE
+    /// chunk — zero copies; the natural view over an `apply_block`
+    /// output the caller no longer needs (the Nyström sample panels).
+    pub fn from_owned_col_major(n: usize, data: Vec<f64>) -> Panel {
+        assert!(n > 0 && !data.is_empty() && data.len() % n == 0);
+        let cols = data.len() / n;
+        let pool = Arc::new(BufferPool::new(data.len(), 0.0f64));
+        Panel {
+            n,
+            cols,
+            chunk_cols: cols,
+            chunks: vec![data],
+            pool,
+            partials: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Rows per column.
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Number of columns currently stored.
+    pub fn num_cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The shared chunk pool (for siblings built via
+    /// [`Panel::with_pool`]).
+    pub fn pool(&self) -> &Arc<BufferPool<f64>> {
+        &self.pool
+    }
+
+    /// Column `t` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, t: usize) -> &[f64] {
+        assert!(t < self.cols, "column {t} out of bounds ({} cols)", self.cols);
+        let n = self.n;
+        let off = (t % self.chunk_cols) * n;
+        &self.chunks[t / self.chunk_cols][off..off + n]
+    }
+
+    /// Chunk `s` as one contiguous column-major slab of `chunk_cols`
+    /// columns — valid only when the panel holds at least `(s+1) ·
+    /// chunk_cols` columns (block-Krylov panels always push whole
+    /// chunks, so their chunks are always full).
+    #[inline]
+    pub fn chunk(&self, s: usize) -> &[f64] {
+        let want = (s + 1) * self.chunk_cols;
+        assert!(self.cols >= want, "chunk {s} not fully populated ({} cols)", self.cols);
+        &self.chunks[s]
+    }
+
+    /// Append one column (copied from `src`).
+    pub fn push_col(&mut self, src: &[f64]) {
+        self.push_col_scaled(src, 1.0);
+    }
+
+    /// Append `alpha · src` as a new column — the Lanczos
+    /// `q_{j+1} = w / β` normalisation without an intermediate clone.
+    pub fn push_col_scaled(&mut self, src: &[f64], alpha: f64) {
+        let n = self.n;
+        assert_eq!(src.len(), n);
+        let slot = self.cols % self.chunk_cols;
+        if slot == 0 {
+            self.chunks.push(self.pool.take());
+        }
+        let chunk = self.chunks.last_mut().expect("chunk just ensured");
+        let dst = &mut chunk[slot * n..(slot + 1) * n];
+        if alpha == 1.0 {
+            dst.copy_from_slice(src);
+        } else {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = alpha * s;
+            }
+        }
+        self.cols += 1;
+    }
+
+    /// Append one whole chunk of `chunk_cols` columns, filled in place
+    /// by `f` (e.g. an `apply_block` writing its output straight into
+    /// the panel). Requires the panel to be chunk-aligned (block
+    /// panels always are).
+    pub fn push_chunk_with(&mut self, f: impl FnOnce(&mut [f64])) {
+        assert_eq!(self.cols % self.chunk_cols, 0, "push_chunk_with on a ragged panel");
+        let mut buf = self.pool.take();
+        f(&mut buf);
+        self.chunks.push(buf);
+        self.cols += self.chunk_cols;
+    }
+
+    fn take_partials(&self, len: usize) -> Vec<f64> {
+        let mut buf = self.partials.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    fn put_partials(&self, buf: Vec<f64>) {
+        let mut cache = self.partials.lock().unwrap();
+        if cache.len() < 8 {
+            cache.push(buf);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Fused kernels.
+    // ------------------------------------------------------------------
+
+    /// `out = Vᵀ w` — every Gram coefficient of the
+    /// reorthogonalisation in ONE blocked sweep: per fixed row block,
+    /// the w-slice is loaded once and streamed against all j column
+    /// slices; per-block partial coefficient vectors are combined by
+    /// the shared fixed-order tree. Bit-identical to
+    /// [`Panel::gram_tv_reference`] for n ≤ [`ROW_BLOCK`]; bitwise
+    /// reproducible across runs and thread counts always.
+    pub fn gram_tv(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.n);
+        assert_eq!(out.len(), self.cols);
+        if self.cols == 0 {
+            return;
+        }
+        let mut slab = self.take_partials(self.n.div_ceil(ROW_BLOCK) * self.cols);
+        self.gram_into(w, out, &mut slab);
+        self.put_partials(slab);
+    }
+
+    /// Per-block Gram partials: `part[t] = Σ_{i ∈ block b} v_t[i]·w[i]`
+    /// with the strict sequential accumulation order of the seed dot.
+    fn gram_partial(&self, w: &[f64], b: usize, part: &mut [f64]) {
+        let lo = b * ROW_BLOCK;
+        let hi = (lo + ROW_BLOCK).min(self.n);
+        let wb = &w[lo..hi];
+        for (t, p) in part.iter_mut().enumerate() {
+            let cb = &self.col(t)[lo..hi];
+            let mut acc = 0.0;
+            for (x, y) in cb.iter().zip(wb) {
+                acc += x * y;
+            }
+            *p = acc;
+        }
+    }
+
+    /// `gram_tv` core against caller scratch (`nblocks·j` partials).
+    fn gram_into(&self, w: &[f64], out: &mut [f64], slab: &mut [f64]) {
+        let n = self.n;
+        let j = self.cols;
+        let nblocks = n.div_ceil(ROW_BLOCK);
+        assert_eq!(slab.len(), nblocks * j);
+        if n * j >= PAR_THRESHOLD && nblocks > 1 {
+            slab.par_chunks_mut(j)
+                .enumerate()
+                .for_each(|(b, part)| self.gram_partial(w, b, part));
+        } else {
+            for (b, part) in slab.chunks_exact_mut(j).enumerate() {
+                self.gram_partial(w, b, part);
+            }
+        }
+        tree_reduce_chunks_in_place(slab, j);
+        out.copy_from_slice(&slab[..j]);
+    }
+
+    /// `w −= V c` — the subtraction half of one CGS pass, fused into a
+    /// single sweep over w (the seed ran j full `axpy` passes). Each
+    /// `w_i` receives its j subtractions in ascending column order, so
+    /// the result is bitwise equal to [`Panel::update_reference`] at
+    /// every size and for every thread count.
+    pub fn update(&self, c: &[f64], w: &mut [f64]) {
+        assert_eq!(c.len(), self.cols);
+        assert_eq!(w.len(), self.n);
+        if self.cols == 0 {
+            return;
+        }
+        let n = self.n;
+        if n * self.cols >= PAR_THRESHOLD && n > ROW_BLOCK {
+            w.par_chunks_mut(ROW_BLOCK)
+                .enumerate()
+                .for_each(|(b, wb)| self.update_rows(c, b * ROW_BLOCK, wb));
+        } else {
+            for (b, wb) in w.chunks_mut(ROW_BLOCK).enumerate() {
+                self.update_rows(c, b * ROW_BLOCK, wb);
+            }
+        }
+    }
+
+    /// `update` over one row range starting at `lo` — subtractions in
+    /// ascending column order per element.
+    fn update_rows(&self, c: &[f64], lo: usize, wb: &mut [f64]) {
+        let hi = lo + wb.len();
+        for (t, &ct) in c.iter().enumerate() {
+            if ct == 0.0 {
+                continue;
+            }
+            let cb = &self.col(t)[lo..hi];
+            for (y, &x) in wb.iter_mut().zip(cb) {
+                *y -= ct * x;
+            }
+        }
+    }
+
+    /// `out = V z`, using the first `z.len()` columns — Ritz-vector
+    /// assembly (`v = Q z`) as one fused sweep. Bitwise equal to
+    /// [`Panel::mul_reference`] (accumulation in ascending column
+    /// order per row).
+    pub fn mul(&self, z: &[f64], out: &mut [f64]) {
+        assert!(z.len() <= self.cols, "more weights than columns");
+        assert_eq!(out.len(), self.n);
+        let n = self.n;
+        if n * z.len() >= PAR_THRESHOLD && n > ROW_BLOCK {
+            out.par_chunks_mut(ROW_BLOCK)
+                .enumerate()
+                .for_each(|(b, ob)| self.mul_rows(z, b * ROW_BLOCK, ob));
+        } else {
+            for (b, ob) in out.chunks_mut(ROW_BLOCK).enumerate() {
+                self.mul_rows(z, b * ROW_BLOCK, ob);
+            }
+        }
+    }
+
+    /// `mul` over one row range starting at `lo` — accumulation in
+    /// ascending column order per element.
+    fn mul_rows(&self, z: &[f64], lo: usize, ob: &mut [f64]) {
+        let hi = lo + ob.len();
+        ob.fill(0.0);
+        for (t, &zt) in z.iter().enumerate() {
+            if zt == 0.0 {
+                continue;
+            }
+            let cb = &self.col(t)[lo..hi];
+            for (y, &x) in ob.iter_mut().zip(cb) {
+                *y += zt * x;
+            }
+        }
+    }
+
+    /// `C = Vᵀ W` for k packed columns (`ws[q·n..(q+1)·n]` is column
+    /// q): `out[q·j + t] = ⟨v_t, w_q⟩`. Per w-column arithmetic is
+    /// exactly [`Panel::gram_tv`], columns in parallel — block ≡ loop
+    /// bitwise.
+    pub fn gram_block(&self, ws: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        let j = self.cols;
+        assert!(!ws.is_empty() && ws.len() % n == 0, "w block not a multiple of n");
+        let k = ws.len() / n;
+        assert_eq!(out.len(), k * j);
+        if j == 0 {
+            return;
+        }
+        if k == 1 {
+            self.gram_tv(ws, out);
+            return;
+        }
+        let nblocks = n.div_ceil(ROW_BLOCK);
+        if n * j * k < PAR_THRESHOLD {
+            let mut slab = self.take_partials(nblocks * j);
+            for (o, w) in out.chunks_exact_mut(j).zip(ws.chunks_exact(n)) {
+                self.gram_into(w, o, &mut slab);
+            }
+            self.put_partials(slab);
+            return;
+        }
+        out.par_chunks_mut(j).zip(ws.par_chunks(n)).for_each(|(o, w)| {
+            let mut slab = self.take_partials(nblocks * j);
+            self.gram_into(w, o, &mut slab);
+            self.put_partials(slab);
+        });
+    }
+
+    /// `W −= V C` for k packed columns (`coeffs[q·j..(q+1)·j]` holds
+    /// column q's coefficients). Per column bitwise equal to
+    /// [`Panel::update`].
+    pub fn update_block(&self, coeffs: &[f64], ws: &mut [f64]) {
+        let n = self.n;
+        let j = self.cols;
+        assert!(!ws.is_empty() && ws.len() % n == 0, "w block not a multiple of n");
+        let k = ws.len() / n;
+        assert_eq!(coeffs.len(), k * j);
+        if n * j * k < PAR_THRESHOLD {
+            for (w, c) in ws.chunks_exact_mut(n).zip(coeffs.chunks_exact(j)) {
+                self.update(c, w);
+            }
+            return;
+        }
+        ws.par_chunks_mut(n)
+            .zip(coeffs.par_chunks(j))
+            .for_each(|(w, c)| self.update(c, w));
+    }
+
+    // ------------------------------------------------------------------
+    // Retained seed scalar loops — semantic oracles + bench baselines.
+    // ------------------------------------------------------------------
+
+    /// The seed reorthogonalisation Gram sweep: j separate sequential
+    /// [`vec::dot`] passes over w.
+    pub fn gram_tv_reference(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.n);
+        assert_eq!(out.len(), self.cols);
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = vec::dot(self.col(t), w);
+        }
+    }
+
+    /// The seed subtraction sweep: j separate [`vec::axpy`] passes.
+    pub fn update_reference(&self, c: &[f64], w: &mut [f64]) {
+        assert_eq!(c.len(), self.cols);
+        for (t, &ct) in c.iter().enumerate() {
+            if ct != 0.0 {
+                vec::axpy(-ct, self.col(t), w);
+            }
+        }
+    }
+
+    /// The seed Ritz assembly: axpy accumulation into a zeroed buffer.
+    pub fn mul_reference(&self, z: &[f64], out: &mut [f64]) {
+        assert!(z.len() <= self.cols);
+        out.fill(0.0);
+        for (t, &zt) in z.iter().enumerate() {
+            if zt != 0.0 {
+                vec::axpy(zt, self.col(t), out);
+            }
+        }
+    }
+}
+
+impl Drop for Panel {
+    fn drop(&mut self) {
+        for chunk in self.chunks.drain(..) {
+            self.pool.put(chunk);
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Free multi-vector kernels (no panel required) — the CG/MINRES
+// iteration algebra. Same determinism contract as the panel kernels.
+// ----------------------------------------------------------------------
+
+/// Parallel deterministic dot product: sequential within fixed
+/// [`ROW_BLOCK`] blocks, partials combined by the shared fixed-order
+/// tree. Bit-identical to [`vec::dot`] for n ≤ [`ROW_BLOCK`]; bitwise
+/// reproducible across runs and thread counts always.
+pub fn pdot(a: &[f64], b: &[f64]) -> f64 {
+    fn block_dot(xa: &[f64], xb: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (x, y) in xa.iter().zip(xb) {
+            acc += x * y;
+        }
+        acc
+    }
+    let n = a.len();
+    assert_eq!(n, b.len());
+    if n <= ROW_BLOCK {
+        return vec::dot(a, b);
+    }
+    // Same fixed blocks + same tree pairing either way, so the serial
+    // gate cannot change a bit.
+    let mut partials: Vec<f64> = if n < PAR_THRESHOLD {
+        a.chunks(ROW_BLOCK)
+            .zip(b.chunks(ROW_BLOCK))
+            .map(|(xa, xb)| block_dot(xa, xb))
+            .collect()
+    } else {
+        a.par_chunks(ROW_BLOCK)
+            .zip(b.par_chunks(ROW_BLOCK))
+            .map(|(xa, xb)| block_dot(xa, xb))
+            .collect()
+    };
+    tree_reduce_chunks_in_place(&mut partials, 1);
+    partials[0]
+}
+
+/// ‖a‖₂ over the [`pdot`] reduction.
+pub fn pnorm2(a: &[f64]) -> f64 {
+    pdot(a, a).sqrt()
+}
+
+/// `y += alpha x`, parallel over row blocks — element-wise, so bitwise
+/// equal to [`vec::axpy`] at every size.
+pub fn paxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    if y.len() <= PAR_THRESHOLD {
+        vec::axpy(alpha, x, y);
+        return;
+    }
+    y.par_chunks_mut(ROW_BLOCK)
+        .zip(x.par_chunks(ROW_BLOCK))
+        .for_each(|(yb, xb)| vec::axpy(alpha, xb, yb));
+}
+
+/// `y = x + beta y` (the CG direction update), parallel over row
+/// blocks; element-wise deterministic.
+pub fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    fn rows(xb: &[f64], beta: f64, yb: &mut [f64]) {
+        for (yi, &xi) in yb.iter_mut().zip(xb) {
+            *yi = xi + beta * *yi;
+        }
+    }
+    if y.len() <= PAR_THRESHOLD {
+        rows(x, beta, y);
+        return;
+    }
+    y.par_chunks_mut(ROW_BLOCK)
+        .zip(x.par_chunks(ROW_BLOCK))
+        .for_each(|(yb, xb)| rows(xb, beta, yb));
+}
+
+/// k packed column-pair dots — `out[q] = ⟨xs_q, ys_q⟩` with the exact
+/// [`pdot`] arithmetic per column, columns in parallel. The lockstep
+/// multi-class CG uses this for its per-step `pᵀAp` sweep.
+pub fn dots_packed_into(xs: &[f64], ys: &[f64], n: usize, out: &mut [f64]) {
+    assert!(n > 0 && xs.len() % n == 0);
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(out.len(), xs.len() / n);
+    if xs.len() < PAR_THRESHOLD {
+        for (o, (x, y)) in out.iter_mut().zip(xs.chunks_exact(n).zip(ys.chunks_exact(n))) {
+            *o = pdot(x, y);
+        }
+        return;
+    }
+    out.par_iter_mut()
+        .zip(xs.par_chunks(n).zip(ys.par_chunks(n)))
+        .for_each(|(o, (x, y))| *o = pdot(x, y));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn random_panel(rng: &mut Rng, n: usize, j: usize, chunk_cols: usize) -> Panel {
+        let mut p = Panel::new(n, chunk_cols);
+        for _ in 0..j {
+            p.push_col(&rng.normal_vec(n));
+        }
+        p
+    }
+
+    #[test]
+    fn columns_round_trip_through_chunks() {
+        let mut rng = Rng::seed_from(1);
+        let cols: Vec<Vec<f64>> = (0..7).map(|_| rng.normal_vec(13)).collect();
+        let mut p = Panel::new(13, 3);
+        for c in &cols {
+            p.push_col(c);
+        }
+        assert_eq!(p.num_cols(), 7);
+        assert_eq!(p.dim(), 13);
+        for (t, c) in cols.iter().enumerate() {
+            assert_eq!(p.col(t), c.as_slice(), "column {t}");
+        }
+    }
+
+    #[test]
+    fn col_major_constructors_agree() {
+        let mut rng = Rng::seed_from(11);
+        let n = 6;
+        let slab = rng.normal_vec(n * 4);
+        let copied = Panel::from_col_major(n, 2, &slab);
+        let owned = Panel::from_owned_col_major(n, slab.clone());
+        assert_eq!(copied.num_cols(), 4);
+        assert_eq!(owned.num_cols(), 4);
+        for t in 0..4 {
+            assert_eq!(copied.col(t), &slab[t * n..(t + 1) * n]);
+            assert_eq!(owned.col(t), copied.col(t), "column {t}");
+        }
+        // The adopted slab is one contiguous chunk.
+        assert_eq!(owned.chunk(0), slab.as_slice());
+    }
+
+    #[test]
+    fn push_col_scaled_scales() {
+        let mut p = Panel::new(4, 2);
+        p.push_col_scaled(&[2.0, -4.0, 6.0, 0.0], 0.5);
+        assert_eq!(p.col(0), &[1.0, -2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn chunk_slices_are_contiguous_blocks() {
+        let mut rng = Rng::seed_from(2);
+        let p = random_panel(&mut rng, 5, 6, 3);
+        let c = p.chunk(1);
+        assert_eq!(c.len(), 15);
+        assert_eq!(&c[0..5], p.col(3));
+        assert_eq!(&c[10..15], p.col(5));
+    }
+
+    #[test]
+    fn push_chunk_with_fills_in_place() {
+        let mut p = Panel::new(3, 2);
+        p.push_chunk_with(|buf| {
+            for (i, b) in buf.iter_mut().enumerate() {
+                *b = i as f64;
+            }
+        });
+        assert_eq!(p.num_cols(), 2);
+        assert_eq!(p.col(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(p.col(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn drop_returns_chunks_to_shared_pool() {
+        let pool = Arc::new(BufferPool::new(8, 0.0f64));
+        {
+            let mut p = Panel::with_pool(4, 2, pool.clone());
+            p.push_col(&[1.0; 4]);
+            p.push_col(&[2.0; 4]);
+            p.push_col(&[3.0; 4]);
+            assert_eq!(pool.idle(), 0);
+        }
+        assert_eq!(pool.idle(), 2, "both chunks must return on drop");
+    }
+
+    #[test]
+    fn gram_and_update_match_references_bitwise_single_block() {
+        // One row block ⇒ the blocked reduction degenerates to the
+        // seed sequential arithmetic exactly.
+        let mut rng = Rng::seed_from(3);
+        for (n, j) in [(17usize, 5usize), (400, 12), (ROW_BLOCK, 9)] {
+            let p = random_panel(&mut rng, n, j, 4);
+            let w0 = rng.normal_vec(n);
+            let mut c_ref = vec![0.0; j];
+            let mut c_new = vec![0.0; j];
+            p.gram_tv_reference(&w0, &mut c_ref);
+            p.gram_tv(&w0, &mut c_new);
+            assert_eq!(c_ref, c_new, "gram n={n} j={j}");
+            let mut w_ref = w0.clone();
+            let mut w_new = w0;
+            p.update_reference(&c_ref, &mut w_ref);
+            p.update(&c_new, &mut w_new);
+            assert_eq!(w_ref, w_new, "update n={n} j={j}");
+        }
+    }
+
+    #[test]
+    fn update_and_mul_match_references_bitwise_any_size() {
+        let mut rng = Rng::seed_from(4);
+        let n = 3 * ROW_BLOCK + 77;
+        let p = random_panel(&mut rng, n, 6, 4);
+        let c = rng.normal_vec(6);
+        let w0 = rng.normal_vec(n);
+        let mut w_ref = w0.clone();
+        let mut w_new = w0;
+        p.update_reference(&c, &mut w_ref);
+        p.update(&c, &mut w_new);
+        assert_eq!(w_ref, w_new);
+        let mut m_ref = vec![0.0; n];
+        let mut m_new = vec![0.0; n];
+        p.mul_reference(&c[..4], &mut m_ref);
+        p.mul(&c[..4], &mut m_new);
+        assert_eq!(m_ref, m_new);
+    }
+
+    #[test]
+    fn gram_multi_block_matches_reference_to_roundoff() {
+        let mut rng = Rng::seed_from(5);
+        let n = 2 * ROW_BLOCK + 31;
+        let j = 9;
+        let p = random_panel(&mut rng, n, j, 4);
+        let w = rng.normal_vec(n);
+        let mut c_ref = vec![0.0; j];
+        let mut c_new = vec![0.0; j];
+        p.gram_tv_reference(&w, &mut c_ref);
+        p.gram_tv(&w, &mut c_new);
+        for (a, b) in c_new.iter().zip(&c_ref) {
+            assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // And the blocked reduction is repeatable bit-for-bit.
+        let mut c_again = vec![0.0; j];
+        p.gram_tv(&w, &mut c_again);
+        assert_eq!(c_new, c_again);
+    }
+
+    #[test]
+    fn block_forms_equal_column_loops_bitwise() {
+        let mut rng = Rng::seed_from(6);
+        let n = ROW_BLOCK + 100;
+        let j = 7;
+        let k = 3;
+        let p = random_panel(&mut rng, n, j, 4);
+        let ws = rng.normal_vec(n * k);
+        let mut gb = vec![0.0; j * k];
+        p.gram_block(&ws, &mut gb);
+        for q in 0..k {
+            let mut one = vec![0.0; j];
+            p.gram_tv(&ws[q * n..(q + 1) * n], &mut one);
+            assert_eq!(&gb[q * j..(q + 1) * j], one.as_slice(), "gram col {q}");
+        }
+        let mut wb = ws.clone();
+        p.update_block(&gb, &mut wb);
+        for q in 0..k {
+            let mut one = ws[q * n..(q + 1) * n].to_vec();
+            p.update(&gb[q * j..(q + 1) * j], &mut one);
+            assert_eq!(&wb[q * n..(q + 1) * n], one.as_slice(), "update col {q}");
+        }
+    }
+
+    #[test]
+    fn pdot_matches_vec_dot_small_and_is_deterministic_large() {
+        let mut rng = Rng::seed_from(7);
+        let a = rng.normal_vec(ROW_BLOCK);
+        let b = rng.normal_vec(ROW_BLOCK);
+        assert_eq!(pdot(&a, &b), vec::dot(&a, &b));
+        let n = 5 * ROW_BLOCK + 3;
+        let a = rng.normal_vec(n);
+        let b = rng.normal_vec(n);
+        let d1 = pdot(&a, &b);
+        let d2 = pdot(&a, &b);
+        assert_eq!(d1, d2);
+        assert!((d1 - vec::dot(&a, &b)).abs() < 1e-9 * (1.0 + d1.abs()));
+        assert_eq!(pnorm2(&a), pdot(&a, &a).sqrt());
+    }
+
+    #[test]
+    fn paxpy_and_xpby_match_scalar_loops_bitwise() {
+        let mut rng = Rng::seed_from(8);
+        let n = (PAR_THRESHOLD) + 11;
+        let x = rng.normal_vec(n);
+        let y0 = rng.normal_vec(n);
+        let mut y_ref = y0.clone();
+        let mut y_new = y0.clone();
+        vec::axpy(0.37, &x, &mut y_ref);
+        paxpy(0.37, &x, &mut y_new);
+        assert_eq!(y_ref, y_new);
+        let mut y_ref = y0.clone();
+        let mut y_new = y0;
+        for (yi, &xi) in y_ref.iter_mut().zip(&x) {
+            *yi = xi + 0.8 * *yi;
+        }
+        xpby(&x, 0.8, &mut y_new);
+        assert_eq!(y_ref, y_new);
+    }
+
+    #[test]
+    fn dots_packed_matches_per_column_pdot() {
+        let mut rng = Rng::seed_from(9);
+        let n = ROW_BLOCK * 2 + 5;
+        let k = 4;
+        let xs = rng.normal_vec(n * k);
+        let ys = rng.normal_vec(n * k);
+        let mut out = vec![0.0; k];
+        dots_packed_into(&xs, &ys, n, &mut out);
+        for q in 0..k {
+            assert_eq!(out[q], pdot(&xs[q * n..(q + 1) * n], &ys[q * n..(q + 1) * n]));
+        }
+    }
+
+    #[test]
+    fn cgs2_reorthogonalisation_orthonormalises() {
+        // Two gram/update passes per new column — the panel engine's
+        // CGS2 — keeps ‖VᵀV − I‖∞ at roundoff.
+        let mut rng = Rng::seed_from(10);
+        let n = 500;
+        let j = 20;
+        let mut basis = Panel::new(n, 8);
+        let mut c = Vec::new();
+        for _ in 0..j {
+            let mut w = rng.normal_vec(n);
+            for _ in 0..2 {
+                c.resize(basis.num_cols(), 0.0);
+                basis.gram_tv(&w, &mut c);
+                basis.update(&c, &mut w);
+            }
+            let nrm = pnorm2(&w);
+            assert!(nrm > 1e-8);
+            basis.push_col_scaled(&w, 1.0 / nrm);
+        }
+        let mut g = vec![0.0; j];
+        for t in 0..j {
+            basis.gram_tv(basis.col(t), &mut g);
+            for (s, &v) in g.iter().enumerate() {
+                let want = if s == t { 1.0 } else { 0.0 };
+                assert!((v - want).abs() < 1e-12, "VtV[{s},{t}] = {v}");
+            }
+        }
+    }
+}

@@ -1,8 +1,34 @@
 //! Householder QR with the thin (economy) factorisation used by both
 //! Nyström variants (§5.1 and Alg 5.1 steps 3/6) and by Lanczos
 //! post-processing.
+//!
+//! The factorisation works on a column-major copy of the input, so
+//! every reflector application streams contiguous column slices — and
+//! the trailing-column updates run in parallel (rayon) with each
+//! column processed by exactly one task in the seed's sequential
+//! per-column order, so the result is **bit-identical to the original
+//! serial row-major implementation** at every size and thread count.
+//! For the tall panels the hybrid Nyström builds (n×L with n up to
+//! 10⁵⁻⁶), this turns the QR from a strided serial sweep into a
+//! cache-local parallel one.
 
 use super::dense::DenseMatrix;
+use super::panel::PAR_THRESHOLD;
+use rayon::prelude::*;
+
+/// Apply the Householder reflector `H = I − 2vvᵀ/(vᵀv)` (acting on
+/// rows `j..`) to one column — the seed's sequential dot/update order.
+fn reflect(col: &mut [f64], j: usize, v: &[f64], vnorm_sq: f64) {
+    let tail = &mut col[j..];
+    let mut dot = 0.0;
+    for (x, &vi) in tail.iter().zip(v) {
+        dot += vi * x;
+    }
+    let f = 2.0 * dot / vnorm_sq;
+    for (x, &vi) in tail.iter_mut().zip(v) {
+        *x -= f * vi;
+    }
+}
 
 /// Thin QR of an m×k matrix (m ≥ k): returns (Q: m×k with orthonormal
 /// columns, R: k×k upper triangular) with A = Q R.
@@ -10,50 +36,57 @@ pub fn thin_qr(a: &DenseMatrix) -> (DenseMatrix, DenseMatrix) {
     let m = a.rows;
     let k = a.cols;
     assert!(m >= k, "thin_qr expects a tall matrix (m >= k)");
-    // Work on a copy; accumulate Householder reflectors.
-    let mut r = a.clone();
+    // Same serial/parallel gate as every panel kernel — identical
+    // arithmetic either way, purely a scheduling choice.
+    let parallel = m * k >= PAR_THRESHOLD;
+    // Column-major working copy; column j at cm[j*m..(j+1)*m].
+    let mut cm = vec![0.0; m * k];
+    for (j, col) in cm.chunks_exact_mut(m).enumerate() {
+        for (i, v) in col.iter_mut().enumerate() {
+            *v = a[(i, j)];
+        }
+    }
+    // Accumulated Householder reflectors (v_j acts on rows j..m).
     let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
     for j in 0..k {
-        // Build the Householder vector for column j below the diagonal.
+        // Build the Householder vector from column j's tail.
+        let colj = &cm[j * m..(j + 1) * m];
         let mut norm = 0.0;
-        for i in j..m {
-            norm += r[(i, j)] * r[(i, j)];
+        for &x in &colj[j..] {
+            norm += x * x;
         }
         let norm = norm.sqrt();
-        let mut v = vec![0.0; m - j];
         if norm == 0.0 {
             // Zero column: identity reflector (v = 0 ⇒ H = I).
-            vs.push(v);
+            vs.push(vec![0.0; m - j]);
             continue;
         }
-        let alpha = if r[(j, j)] >= 0.0 { -norm } else { norm };
-        for i in j..m {
-            v[i - j] = r[(i, j)];
-        }
+        let alpha = if colj[j] >= 0.0 { -norm } else { norm };
+        let mut v: Vec<f64> = colj[j..].to_vec();
         v[0] -= alpha;
         let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
         if vnorm_sq < 1e-300 {
             vs.push(vec![0.0; m - j]);
-            r[(j, j)] = alpha;
+            cm[j * m + j] = alpha;
             continue;
         }
-        // Apply H = I - 2 v v^T / (v^T v) to the trailing block of R.
-        for col in j..k {
-            let mut dot = 0.0;
-            for i in j..m {
-                dot += v[i - j] * r[(i, col)];
-            }
-            let f = 2.0 * dot / vnorm_sq;
-            for i in j..m {
-                r[(i, col)] -= f * v[i - j];
+        // Apply H = I - 2 v v^T / (v^T v) to columns j..k — one task
+        // per column, each running the seed's sequential dot/update.
+        let trailing = &mut cm[j * m..];
+        if parallel {
+            trailing.par_chunks_mut(m).for_each(|col| reflect(col, j, &v, vnorm_sq));
+        } else {
+            for col in trailing.chunks_exact_mut(m) {
+                reflect(col, j, &v, vnorm_sq);
             }
         }
         vs.push(v);
     }
-    // Q = H_0 H_1 ... H_{k-1} applied to the first k columns of I.
-    let mut q = DenseMatrix::zeros(m, k);
+    // Q = H_0 H_1 ... H_{k-1} applied to the first k columns of I
+    // (column-major, columns in parallel per reflector).
+    let mut qm = vec![0.0; m * k];
     for j in 0..k {
-        q[(j, j)] = 1.0;
+        qm[j * m + j] = 1.0;
     }
     for jr in (0..k).rev() {
         let v = &vs[jr];
@@ -61,22 +94,20 @@ pub fn thin_qr(a: &DenseMatrix) -> (DenseMatrix, DenseMatrix) {
         if vnorm_sq < 1e-300 {
             continue;
         }
-        for col in 0..k {
-            let mut dot = 0.0;
-            for i in jr..m {
-                dot += v[i - jr] * q[(i, col)];
-            }
-            let f = 2.0 * dot / vnorm_sq;
-            for i in jr..m {
-                q[(i, col)] -= f * v[i - jr];
+        if parallel {
+            qm.par_chunks_mut(m).for_each(|col| reflect(col, jr, v, vnorm_sq));
+        } else {
+            for col in qm.chunks_exact_mut(m) {
+                reflect(col, jr, v, vnorm_sq);
             }
         }
     }
-    // Zero the strictly-lower part of R and truncate to k×k.
+    let q = DenseMatrix::from_col_major(m, &qm);
+    // R: upper triangle of the reduced working copy, truncated to k×k.
     let mut rk = DenseMatrix::zeros(k, k);
     for i in 0..k {
         for j in i..k {
-            rk[(i, j)] = r[(i, j)];
+            rk[(i, j)] = cm[j * m + i];
         }
     }
     (q, rk)
@@ -152,6 +183,37 @@ mod tests {
         }
         // R has a (near-)zero diagonal in the dependent column.
         assert!(r[(2, 2)].abs() < 1e-10);
+    }
+
+    #[test]
+    fn qr_zero_column() {
+        // An all-zero column hits the identity-reflector path.
+        let mut a = random_matrix(8, 3, 6);
+        for i in 0..8 {
+            a[(i, 1)] = 0.0;
+        }
+        let (q, r) = thin_qr(&a);
+        let qr = q.matmul(&r);
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                assert!((qr[(i, j)] - a[(i, j)]).abs() < 1e-10);
+            }
+        }
+        assert_eq!(r[(1, 1)], 0.0);
+    }
+
+    #[test]
+    fn qr_parallel_threshold_does_not_change_bits() {
+        // A matrix big enough for the parallel path must factor
+        // identically to its serial per-column arithmetic — the
+        // per-column tasks are order-independent by construction, so we
+        // pin run-to-run determinism on a parallel-size input.
+        let a = random_matrix(6000, 4, 7);
+        let (q1, r1) = thin_qr(&a);
+        let (q2, r2) = thin_qr(&a);
+        assert_eq!(q1.data, q2.data);
+        assert_eq!(r1.data, r2.data);
+        check_qr(&a);
     }
 
     #[test]

@@ -1,7 +1,26 @@
-//! Vector kernels used in the Krylov hot loops. These are written as
-//! straightforward slice loops; rustc auto-vectorises them, and the
-//! profile (EXPERIMENTS.md §Perf) shows they are far from the matvec
-//! bottleneck.
+//! Scalar one-vector kernels: strictly sequential slice loops.
+//!
+//! These are **not** the Krylov hot path any more — once the operator
+//! apply got fast (block matvecs, half-spectrum FFT, tiled spread),
+//! the O(n·j) basis algebra dominated, and the Krylov stack now runs
+//! on the panel engine ([`crate::linalg::panel`]): fused multi-vector
+//! sweeps, parallel over fixed row blocks, bitwise deterministic.
+//!
+//! What remains here is the *sequential reference arithmetic* the
+//! panel kernels are defined against and pinned to:
+//!
+//! * small-n substrate — for n ≤ `panel::ROW_BLOCK` the panel
+//!   reductions are bit-identical to [`dot`], and the element-wise
+//!   panel kernels are bit-identical to [`axpy`]/[`scale`] at every
+//!   size;
+//! * oracle + baseline — the retained `*_reference` kernels of the
+//!   panel engine and the `BENCH_krylov.json` baseline rows are built
+//!   from these loops;
+//! * one-shot call sites (small dense solves, set-up code) where a
+//!   parallel sweep would cost more than it saves.
+//!
+//! Use [`crate::linalg::panel`] for anything that runs once per Krylov
+//! iteration on full-size vectors.
 
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());

@@ -66,6 +66,29 @@ pub enum SpreadLayout {
     Tiled,
 }
 
+impl SpreadLayout {
+    /// Cloud size at which [`SpreadLayout::auto_for`] switches to the
+    /// tiled engine: below it the Morton sort + rim merges cost more
+    /// than the locality buys; above it the owner-computes spread wins
+    /// on memory traffic (see the spread-stage rows of
+    /// `BENCH_spread.json`).
+    pub const TILED_DEFAULT_THRESHOLD: usize = 20_000;
+
+    /// The default layout for an n-point cloud: `Tiled` for large
+    /// clouds, `Unsorted` (the seed-exact walk) otherwise. Both remain
+    /// explicitly selectable via `build_geometry_with` /
+    /// `FastsumOperator::with_layout`; the tiled engine is
+    /// deterministic but reorders per-cell sums, so it matches the
+    /// unsorted oracle to roundoff (~1e-15 relative), not bitwise.
+    pub fn auto_for(n: usize) -> SpreadLayout {
+        if n >= Self::TILED_DEFAULT_THRESHOLD {
+            SpreadLayout::Tiled
+        } else {
+            SpreadLayout::Unsorted
+        }
+    }
+}
+
 /// One spread tile: a contiguous slab of leading-axis grid rows plus
 /// the (sorted-order) range of points whose footprints start in it.
 #[derive(Debug, Clone, Copy)]
@@ -234,5 +257,24 @@ impl SubgridBox {
     /// Box extent per axis.
     pub fn extent(&self) -> &[usize] {
         &self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_layout_switches_at_threshold() {
+        assert_eq!(SpreadLayout::auto_for(0), SpreadLayout::Unsorted);
+        assert_eq!(
+            SpreadLayout::auto_for(SpreadLayout::TILED_DEFAULT_THRESHOLD - 1),
+            SpreadLayout::Unsorted
+        );
+        assert_eq!(
+            SpreadLayout::auto_for(SpreadLayout::TILED_DEFAULT_THRESHOLD),
+            SpreadLayout::Tiled
+        );
+        assert_eq!(SpreadLayout::auto_for(usize::MAX), SpreadLayout::Tiled);
     }
 }

@@ -2,12 +2,19 @@
 //! randomized Nyström approximation `A ≈ (AQ)(QᵀAQ)⁻¹(AQ)ᵀ` of [24]
 //! with all 2L dense matvecs replaced by the NFFT fastsum (the paper's
 //! second contribution), plus the rank-M truncation of `(QᵀAQ)⁻¹`.
+//!
+//! The O(n·L) algebra around the two block applies — `B₂ = Qᵀ(AQ)`,
+//! `B₁U_M`, `V = Q̂Û` — runs over [`Panel`] views of the column-major
+//! sample blocks (fused parallel Gram/mul sweeps, deterministic), and
+//! the two thin QRs stream the panels column-major in parallel; the
+//! serial row-major transpose-matmul round trips are gone.
 
 use super::{NystromError, NystromResult};
 use crate::data::rng::Rng;
 use crate::graph::operator::LinearOperator;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::jacobi::sym_eig;
+use crate::linalg::panel::Panel;
 use crate::linalg::qr::{orth, thin_qr};
 
 #[derive(Debug, Clone, Copy)]
@@ -41,30 +48,20 @@ pub fn hybrid_nystrom(
     let g: Vec<f64> = rng.normal_vec(n * l);
     let mut y = vec![0.0; n * l];
     a.apply_block(&g, &mut y);
-    let mut ymat = DenseMatrix::zeros(n, l);
-    for j in 0..l {
-        for i in 0..n {
-            ymat[(i, j)] = y[j * n + i];
-        }
-    }
-    let q = orth(&ymat);
+    let q = orth(&DenseMatrix::from_col_major(n, &y));
 
-    // Step 4: B₁ = A Q, B₂ = Qᵀ B₁.
+    // Step 4: B₁ = A Q, B₂ = Qᵀ B₁ — the Gram of the Q sample panel
+    // against the image panel, one fused parallel sweep.
     let mut qcols = vec![0.0; n * l];
-    for j in 0..l {
-        for i in 0..n {
-            qcols[j * n + i] = q[(i, j)];
-        }
+    for (j, col) in qcols.chunks_exact_mut(n).enumerate() {
+        q.col_into(j, col);
     }
     let mut b1cols = vec![0.0; n * l];
     a.apply_block(&qcols, &mut b1cols);
-    let mut b1 = DenseMatrix::zeros(n, l);
-    for j in 0..l {
-        for i in 0..n {
-            b1[(i, j)] = b1cols[j * n + i];
-        }
-    }
-    let b2 = q.transpose().matmul(&b1);
+    let q_panel = Panel::from_owned_col_major(n, qcols);
+    let mut b2cols = vec![0.0; l * l];
+    q_panel.gram_block(&b1cols, &mut b2cols);
+    let b2 = DenseMatrix::from_col_major(l, &b2cols);
 
     // Step 5: top-M positive eigenpairs of B₂. A *relative* floor on
     // the kept eigenvalues is essential: for fast-decaying spectra the
@@ -89,8 +86,17 @@ pub fn hybrid_nystrom(
         }
     }
 
-    // Step 6: Q̂ R̂ = B₁ U_M.
-    let b1u = b1.matmul(&u_m);
+    // Step 6: Q̂ R̂ = B₁ U_M — the n×m_eff product as m_eff fused panel
+    // muls over the B₁ sample panel.
+    let b1_panel = Panel::from_owned_col_major(n, b1cols);
+    let mut b1u = DenseMatrix::zeros(n, m_eff);
+    let mut ucol = vec![0.0; l];
+    let mut pcol = vec![0.0; n];
+    for j in 0..m_eff {
+        u_m.col_into(j, &mut ucol);
+        b1_panel.mul(&ucol, &mut pcol);
+        b1u.set_col(j, &pcol);
+    }
     let (q_hat, r_hat) = thin_qr(&b1u);
 
     // Step 7: eig of R̂ Σ_M⁻¹ R̂ᵀ; V = Q̂ Û.
@@ -115,7 +121,19 @@ pub fn hybrid_nystrom(
             u_hat[(i, t)] = inner_vecs[(i, idx)];
         }
     }
-    let v = q_hat.matmul(&u_hat);
+    // V = Q̂ Û — kk fused panel muls over the Q̂ panel.
+    let mut qhat_cols = vec![0.0; n * m_eff];
+    for (j, col) in qhat_cols.chunks_exact_mut(n).enumerate() {
+        q_hat.col_into(j, col);
+    }
+    let qhat_panel = Panel::from_owned_col_major(n, qhat_cols);
+    let mut v = DenseMatrix::zeros(n, kk);
+    let mut hcol = vec![0.0; m_eff];
+    for t in 0..kk {
+        u_hat.col_into(t, &mut hcol);
+        qhat_panel.mul(&hcol, &mut pcol);
+        v.set_col(t, &pcol);
+    }
     Ok(NystromResult { eigenvalues, eigenvectors: v })
 }
 

@@ -27,6 +27,15 @@
 //! With `shards = 1` under a contiguous spec every phase degenerates to
 //! exactly the unsharded [`FastsumOperator`] arithmetic — results are
 //! bit-for-bit identical, which the cross-engine tests pin down.
+//!
+//! **Anchor under the tiled default.** Since large clouds default to
+//! [`crate::nfft::SpreadLayout::Tiled`], the bit-for-bit anchor is
+//! stated precisely: shard geometries always walk the *unsorted*
+//! order, so `shards = 1` is bit-for-bit the unsharded engine built
+//! with `SpreadLayout::Unsorted` — the seed arithmetic — regardless of
+//! the parent's own layout, and agrees with a tiled parent to the
+//! tiled engine's ≈1e-15 roundoff (1e-12 pinned by tests). Small
+//! clouds (below the tiled threshold) keep the original pin verbatim.
 
 use crate::fastsum::normalized::NormalizeError;
 use crate::fastsum::{FastsumOperator, FastsumParams, Kernel};
@@ -441,6 +450,29 @@ mod tests {
         sharded.apply_block(&xs, &mut a);
         parent.apply_block(&xs, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn one_shard_from_tiled_parent_anchors_to_unsorted_engine() {
+        // The re-anchored pin for the tiled default: shard geometries
+        // always walk the unsorted order, so shards=1 stays bit-for-bit
+        // the UNSORTED engine even when the parent was built tiled, and
+        // within the tiled engine's roundoff of the parent itself.
+        use crate::nfft::SpreadLayout;
+        let points = spiral_points(90, 21);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let params = FastsumParams::setup2();
+        let tiled =
+            FastsumOperator::with_layout(&points, 3, kernel, params, SpreadLayout::Tiled);
+        let unsorted =
+            FastsumOperator::with_layout(&points, 3, kernel, params, SpreadLayout::Unsorted);
+        let sharded = ShardedOperator::from_fastsum(&tiled, ShardSpec::contiguous(90, 1));
+        let mut rng = crate::data::rng::Rng::seed_from(22);
+        let x = rng.normal_vec(90);
+        let got = sharded.apply_vec(&x);
+        assert_eq!(got, unsorted.apply_vec(&x), "shards=1 must stay anchored to unsorted bits");
+        let err = rel_l2_error(&got, &tiled.apply_vec(&x));
+        assert!(err < 1e-12, "tiled parent vs sharded rel err {err}");
     }
 
     #[test]

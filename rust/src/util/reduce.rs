@@ -45,6 +45,43 @@ where
     }
 }
 
+/// [`tree_reduce_in_place`] over the equal-length chunks of one flat
+/// slab: after the call, `slab[..chunk_len]` holds the element-wise sum
+/// of all `slab.len() / chunk_len` chunks, combined in exactly the same
+/// fixed pairing order (chunk `i` absorbs chunk `i + ⌈len/2⌉` each
+/// round). The Krylov panel engine ([`crate::linalg::panel`]) stores
+/// its per-row-block Gram partials in one pooled slab and reduces them
+/// with this, so every reduction in the codebase — grid subgrids and
+/// Gram coefficients alike — shares one pairing policy and therefore
+/// one determinism argument. Contents of `slab[chunk_len..]` are
+/// unspecified afterwards.
+///
+/// `slab.len()` must be a multiple of `chunk_len`; an empty slab is a
+/// no-op. The per-pair additions run serially — partial counts in the
+/// panel engine are small (tens), so parallelising the combine would
+/// cost more than it saves.
+pub fn tree_reduce_chunks_in_place<T>(slab: &mut [T], chunk_len: usize)
+where
+    T: Copy + std::ops::AddAssign,
+{
+    if slab.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "tree_reduce_chunks: zero chunk length");
+    assert_eq!(slab.len() % chunk_len, 0, "tree_reduce_chunks: slab not a multiple of chunk_len");
+    let mut len = slab.len() / chunk_len;
+    while len > 1 {
+        let half = len.div_ceil(2);
+        let (dst, src) = slab[..len * chunk_len].split_at_mut(half * chunk_len);
+        for (d, s) in dst.chunks_exact_mut(chunk_len).zip(src.chunks_exact(chunk_len)) {
+            for (a, &b) in d.iter_mut().zip(s.iter()) {
+                *a += b;
+            }
+        }
+        len = half;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,5 +135,35 @@ mod tests {
     fn rejects_mismatched_lengths() {
         let mut bufs = vec![vec![0.0; 3], vec![0.0; 4]];
         tree_reduce_in_place(&mut bufs);
+    }
+
+    #[test]
+    fn chunked_variant_matches_buffer_variant_bitwise() {
+        // Same pairing order ⇒ same bits, for every chunk count.
+        for k in 1..9usize {
+            let mut rng = crate::data::rng::Rng::seed_from(7 + k as u64);
+            let bufs: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(5)).collect();
+            let mut slab: Vec<f64> = bufs.iter().flatten().copied().collect();
+            let mut asvecs = bufs.clone();
+            tree_reduce_in_place(&mut asvecs);
+            tree_reduce_chunks_in_place(&mut slab, 5);
+            assert_eq!(slab[..5], asvecs[0][..], "k={k}");
+        }
+    }
+
+    #[test]
+    fn chunked_variant_empty_and_single() {
+        let mut none: Vec<f64> = Vec::new();
+        tree_reduce_chunks_in_place(&mut none, 3);
+        let mut one = vec![1.0, 2.0];
+        tree_reduce_chunks_in_place(&mut one, 2);
+        assert_eq!(one, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn chunked_variant_rejects_ragged_slab() {
+        let mut slab = vec![0.0; 5];
+        tree_reduce_chunks_in_place(&mut slab, 2);
     }
 }
