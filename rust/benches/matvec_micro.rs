@@ -8,6 +8,10 @@
 //! the Krylov-stage comparison (seed scalar reorthogonalisation loop
 //! vs the panel engine's fused `gram_tv`/`update` kernels, n ∈ {1e4,
 //! 1e5}, j ∈ {32, 128}, block k ∈ {1, 8} → `BENCH_krylov.json`),
+//! each stage row also carries a paired scalar-vs-simd measurement
+//! (`*_scalar_min_s` / `*_simd_min_s`, via the `NFFT_SIMD` override
+//! hook) plus the detected `simd_level`, gated by
+//! `scripts/check_bench_regression.py` in CI,
 //! one fastsum matvec per engine/setup with the per-phase breakdown
 //! used by the §Perf iteration log (the one-time `geometry` phase shows
 //! the plan/geometry split), the block-vs-loop comparison for
@@ -27,6 +31,7 @@ use nfft_krylov::linalg::Panel;
 use nfft_krylov::nfft::{NfftPlan, SpreadLayout, WindowKind};
 use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
 use nfft_krylov::util::json::Json;
+use nfft_krylov::util::simd::{self, Level};
 use std::collections::BTreeMap;
 
 const BLOCK_SIZES: [usize; 4] = [1, 8, 16, 32];
@@ -78,15 +83,25 @@ fn bench_fft_stage(seed: u64) -> Vec<Json> {
             });
             let mut rbuf = base.clone();
             let mut specs = vec![Complex::ZERO; th * k];
+            // Paired scalar-vs-simd rows: the same real-batched engine
+            // at the forced-scalar dispatch level and at the detected
+            // default (the SIMD row on AVX2 hosts).
+            let s_real_scalar = simd::with_override(Some(Level::Scalar), || {
+                bench(&format!("fft real batch scalar {label}"), 1, 3, || {
+                    rplan.forward_batch(&rbuf, &mut specs);
+                    rplan.backward_unnormalized_batch(&mut specs, &mut rbuf);
+                })
+            });
             let s_real = bench(&format!("fft real batch     {label}"), 1, 3, || {
                 rplan.forward_batch(&rbuf, &mut specs);
                 rplan.backward_unnormalized_batch(&mut specs, &mut rbuf);
             });
             let speedup_seed = s_seed.min / s_real.min.max(1e-12);
             let speedup_cplx = s_cplx.min / s_real.min.max(1e-12);
+            let speedup_simd = s_real_scalar.min / s_real.min.max(1e-12);
             println!(
-                "    {label}: seed {:.4}s  cplx-par {:.4}s  real-batch {:.4}s  -> {speedup_seed:.2}x vs seed, {speedup_cplx:.2}x vs parallel complex",
-                s_seed.min, s_cplx.min, s_real.min
+                "    {label}: seed {:.4}s  cplx-par {:.4}s  real-batch {:.4}s ({:.4}s scalar)  -> {speedup_seed:.2}x vs seed, {speedup_cplx:.2}x vs parallel complex, {speedup_simd:.2}x simd",
+                s_seed.min, s_cplx.min, s_real.min, s_real_scalar.min
             );
             rows.push(json_row(&[
                 ("dims", Json::Num(shape.len() as f64)),
@@ -95,11 +110,15 @@ fn bench_fft_stage(seed: u64) -> Vec<Json> {
                     Json::Arr(shape.iter().map(|&s| Json::Num(s as f64)).collect()),
                 ),
                 ("k", Json::Num(k as f64)),
+                ("simd_level", Json::Str(simd::active().name().into())),
                 ("complex_serial_min_s", Json::Num(s_seed.min)),
                 ("complex_parallel_min_s", Json::Num(s_cplx.min)),
                 ("real_batch_min_s", Json::Num(s_real.min)),
+                ("real_batch_scalar_min_s", Json::Num(s_real_scalar.min)),
+                ("real_batch_simd_min_s", Json::Num(s_real.min)),
                 ("speedup_vs_seed", Json::Num(speedup_seed)),
                 ("speedup_vs_parallel_complex", Json::Num(speedup_cplx)),
+                ("speedup_simd_vs_scalar", Json::Num(speedup_simd)),
             ]));
         }
     }
@@ -134,9 +153,24 @@ fn bench_spread_stage(seed: u64) -> Vec<Json> {
                 plan.spread_real_reference(&geo_u, &x, &mut grid);
                 plan.gather_real_grid_reference(&geo_u, &grid, &mut out);
             });
+            // Paired scalar-vs-simd rows: the same flat-offset and
+            // tiled engines with the dispatch level forced to scalar
+            // vs the detected default.
+            let s_flat_scalar = simd::with_override(Some(Level::Scalar), || {
+                bench(&format!("spread+gather flat scalar  {label}"), 1, 3, || {
+                    plan.spread_real_with_geometry(&geo_u, &x, &mut grid);
+                    plan.gather_real_grid(&geo_u, &grid, &mut out);
+                })
+            });
             let s_flat = bench(&format!("spread+gather flat-offset  {label}"), 1, 3, || {
                 plan.spread_real_with_geometry(&geo_u, &x, &mut grid);
                 plan.gather_real_grid(&geo_u, &grid, &mut out);
+            });
+            let s_tiled_scalar = simd::with_override(Some(Level::Scalar), || {
+                bench(&format!("spread+gather tiled scalar {label}"), 1, 3, || {
+                    plan.spread_real_with_geometry(&geo_t, &x, &mut grid);
+                    plan.gather_real_grid(&geo_t, &grid, &mut out);
+                })
             });
             let s_tiled = bench(&format!("spread+gather tiled        {label}"), 1, 3, || {
                 plan.spread_real_with_geometry(&geo_t, &x, &mut grid);
@@ -144,9 +178,10 @@ fn bench_spread_stage(seed: u64) -> Vec<Json> {
             });
             let speedup_flat = s_seed.min / s_flat.min.max(1e-12);
             let speedup_tiled = s_seed.min / s_tiled.min.max(1e-12);
+            let speedup_simd = s_tiled_scalar.min / s_tiled.min.max(1e-12);
             println!(
-                "    {label}: seed {:.4}s  flat {:.4}s  tiled {:.4}s  -> {speedup_flat:.2}x flat, {speedup_tiled:.2}x tiled vs seed",
-                s_seed.min, s_flat.min, s_tiled.min
+                "    {label}: seed {:.4}s  flat {:.4}s  tiled {:.4}s ({:.4}s scalar)  -> {speedup_flat:.2}x flat, {speedup_tiled:.2}x tiled vs seed, {speedup_simd:.2}x simd",
+                s_seed.min, s_flat.min, s_tiled.min, s_tiled_scalar.min
             );
             rows.push(json_row(&[
                 ("dims", Json::Num(d as f64)),
@@ -155,11 +190,17 @@ fn bench_spread_stage(seed: u64) -> Vec<Json> {
                     Json::Arr(band.iter().map(|&b| Json::Num(b as f64)).collect()),
                 ),
                 ("n", Json::Num(n as f64)),
+                ("simd_level", Json::Str(simd::active().name().into())),
                 ("seed_unsorted_min_s", Json::Num(s_seed.min)),
                 ("flat_offset_min_s", Json::Num(s_flat.min)),
+                ("flat_offset_scalar_min_s", Json::Num(s_flat_scalar.min)),
+                ("flat_offset_simd_min_s", Json::Num(s_flat.min)),
                 ("tiled_min_s", Json::Num(s_tiled.min)),
+                ("tiled_scalar_min_s", Json::Num(s_tiled_scalar.min)),
+                ("tiled_simd_min_s", Json::Num(s_tiled.min)),
                 ("speedup_flat_vs_seed", Json::Num(speedup_flat)),
                 ("speedup_tiled_vs_seed", Json::Num(speedup_tiled)),
+                ("speedup_simd_vs_scalar", Json::Num(speedup_simd)),
             ]));
         }
     }
@@ -195,6 +236,20 @@ fn bench_krylov_stage(seed: u64) -> Vec<Json> {
                         basis.update_reference(c, w);
                     }
                 });
+                // Paired scalar-vs-simd rows: the same panel sweep at
+                // the forced-scalar level vs the detected default.
+                let s_panel_scalar = simd::with_override(Some(Level::Scalar), || {
+                    bench(&format!("krylov panel scalar{label}"), 1, 3, || {
+                        ws.copy_from_slice(&ws0);
+                        if k == 1 {
+                            basis.gram_tv(&ws, &mut coeffs);
+                            basis.update(&coeffs, &mut ws);
+                        } else {
+                            basis.gram_block(&ws, &mut coeffs);
+                            basis.update_block(&coeffs, &mut ws);
+                        }
+                    })
+                });
                 let s_panel = bench(&format!("krylov panel       {label}"), 1, 3, || {
                     ws.copy_from_slice(&ws0);
                     if k == 1 {
@@ -206,17 +261,22 @@ fn bench_krylov_stage(seed: u64) -> Vec<Json> {
                     }
                 });
                 let speedup = s_seed.min / s_panel.min.max(1e-12);
+                let speedup_simd = s_panel_scalar.min / s_panel.min.max(1e-12);
                 println!(
-                    "    {label}: seed {:.4}s  panel {:.4}s  -> {speedup:.2}x",
-                    s_seed.min, s_panel.min
+                    "    {label}: seed {:.4}s  panel {:.4}s ({:.4}s scalar)  -> {speedup:.2}x, {speedup_simd:.2}x simd",
+                    s_seed.min, s_panel.min, s_panel_scalar.min
                 );
                 rows.push(json_row(&[
                     ("n", Json::Num(n as f64)),
                     ("j", Json::Num(j as f64)),
                     ("k", Json::Num(k as f64)),
+                    ("simd_level", Json::Str(simd::active().name().into())),
                     ("seed_scalar_min_s", Json::Num(s_seed.min)),
                     ("panel_min_s", Json::Num(s_panel.min)),
+                    ("panel_scalar_min_s", Json::Num(s_panel_scalar.min)),
+                    ("panel_simd_min_s", Json::Num(s_panel.min)),
                     ("speedup", Json::Num(speedup)),
+                    ("speedup_simd_vs_scalar", Json::Num(speedup_simd)),
                 ]));
             }
         }
@@ -227,9 +287,12 @@ fn bench_krylov_stage(seed: u64) -> Vec<Json> {
 fn main() {
     let args = BenchArgs::from_env();
 
+    println!("simd level: {}", simd::active().name());
+
     let krylov_rows = bench_krylov_stage(args.seed);
     let mut krylov_root = BTreeMap::new();
     krylov_root.insert("bench".to_string(), Json::Str("matvec_micro/krylov_stage".into()));
+    krylov_root.insert("simd_level".to_string(), Json::Str(simd::active().name().into()));
     krylov_root.insert("results".to_string(), Json::Arr(krylov_rows));
     let text = Json::Obj(krylov_root).to_string();
     match std::fs::write("BENCH_krylov.json", &text) {
@@ -240,6 +303,7 @@ fn main() {
     let spread_rows = bench_spread_stage(args.seed);
     let mut spread_root = BTreeMap::new();
     spread_root.insert("bench".to_string(), Json::Str("matvec_micro/spread_stage".into()));
+    spread_root.insert("simd_level".to_string(), Json::Str(simd::active().name().into()));
     spread_root.insert("results".to_string(), Json::Arr(spread_rows));
     let text = Json::Obj(spread_root).to_string();
     match std::fs::write("BENCH_spread.json", &text) {
@@ -250,6 +314,7 @@ fn main() {
     let fft_rows = bench_fft_stage(args.seed);
     let mut fft_root = BTreeMap::new();
     fft_root.insert("bench".to_string(), Json::Str("matvec_micro/fft_stage".into()));
+    fft_root.insert("simd_level".to_string(), Json::Str(simd::active().name().into()));
     fft_root.insert(
         "block_sizes".to_string(),
         Json::Arr(FFT_BLOCK_SIZES.iter().map(|&k| Json::Num(k as f64)).collect()),

@@ -2,7 +2,11 @@
 
 use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
 
+/// `repr(C)` so a `&[Complex]` can be reinterpreted as interleaved
+/// `re, im` f64 pairs — the layout the AVX2 butterfly and untangle
+/// kernels in `fft::plan` / `fft::real` stream through.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(C)]
 pub struct Complex {
     pub re: f64,
     pub im: f64,

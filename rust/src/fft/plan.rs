@@ -13,6 +13,15 @@
 //! sizes the NFFT uses). When `log2 n` is odd a lone radix-2 stage
 //! (twiddle 1) runs first.
 //!
+//! On AVX2 hosts (see [`crate::util::simd`]) each pass additionally
+//! runs a vector body processing two `k` lanes per iteration on the
+//! interleaved re/im layout (`Complex` is `repr(C)`). The butterfly
+//! uses the mul/mul/addsub complex-product form — every partial
+//! product is rounded exactly as in the scalar `Complex` multiply and
+//! **no FMA is contracted** — so the AVX2 transform is **bitwise
+//! identical** to the scalar one; dispatch only changes throughput,
+//! never results (`docs/DETERMINISM.md`).
+//!
 //! For batch workloads the `*_many` entry points transform every
 //! contiguous length-`n` line of a longer buffer, in parallel across
 //! lines — the 1-d batch primitive the contiguous-axis pass of
@@ -20,6 +29,7 @@
 
 use super::bluestein::Bluestein;
 use super::complex::Complex;
+use crate::util::simd;
 use rayon::prelude::*;
 use std::sync::Arc;
 
@@ -157,18 +167,12 @@ impl FftPlan {
                     }
                 }
                 let tw = if forward { twiddles_fwd } else { twiddles_inv };
+                let avx2 = simd::avx2_active();
                 let mut m = 1usize; // half block size of the next stage
                 let mut toff = 0usize; // twiddle offset of that stage
                 if n.trailing_zeros() % 2 == 1 {
                     // Odd log2 n: one lone radix-2 stage (twiddle = 1).
-                    let mut base = 0usize;
-                    while base < n {
-                        let u = x[base];
-                        let t = x[base + 1];
-                        x[base] = u + t;
-                        x[base + 1] = u - t;
-                        base += 2;
-                    }
+                    radix2_lone_pass(x, avx2);
                     toff += 1;
                     m = 2;
                 }
@@ -179,37 +183,159 @@ impl FftPlan {
                 // the two stages separately.
                 while m < n {
                     let toff2 = toff + m;
-                    let step = 4 * m;
-                    let mut base = 0usize;
-                    while base < n {
-                        for k in 0..m {
-                            let w1 = tw[toff + k];
-                            let w2a = tw[toff2 + k];
-                            let w2b = tw[toff2 + k + m];
-                            let a = x[base + k];
-                            let b = x[base + k + m];
-                            let c = x[base + k + 2 * m];
-                            let d = x[base + k + 3 * m];
-                            let t1 = w1 * b;
-                            let ap = a + t1;
-                            let bp = a - t1;
-                            let t2 = w1 * d;
-                            let cp = c + t2;
-                            let dp = c - t2;
-                            let t3 = w2a * cp;
-                            x[base + k] = ap + t3;
-                            x[base + k + 2 * m] = ap - t3;
-                            let t4 = w2b * dp;
-                            x[base + k + m] = bp + t4;
-                            x[base + k + 3 * m] = bp - t4;
-                        }
-                        base += step;
-                    }
+                    radix4_pass(x, tw, toff, toff2, m, avx2);
                     toff = toff2 + 2 * m;
                     m <<= 2;
                 }
             }
             Kind::Bluestein(b) => b.transform(x, forward),
+        }
+    }
+}
+
+/// One lone radix-2 stage (twiddle 1) over adjacent pairs.
+#[inline]
+fn radix2_lone_pass(x: &mut [Complex], avx2: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2 {
+        // SAFETY: `avx2` is only true after feature detection.
+        unsafe { x86::radix2_lone_pass(x) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = avx2;
+    let mut base = 0usize;
+    while base < x.len() {
+        let u = x[base];
+        let t = x[base + 1];
+        x[base] = u + t;
+        x[base + 1] = u - t;
+        base += 2;
+    }
+}
+
+/// One merged radix-4 pass (half sizes `m` and `2m` fused). The AVX2
+/// body handles two `k` lanes per iteration and needs `m ≥ 2`; the
+/// `m == 1` pass (even `log2 n` only) stays scalar.
+#[inline]
+fn radix4_pass(x: &mut [Complex], tw: &[Complex], toff: usize, toff2: usize, m: usize, avx2: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2 && m >= 2 {
+        // SAFETY: `avx2` is only true after feature detection.
+        unsafe { x86::radix4_pass(x, tw, toff, toff2, m) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = avx2;
+    let n = x.len();
+    let step = 4 * m;
+    let mut base = 0usize;
+    while base < n {
+        for k in 0..m {
+            let w1 = tw[toff + k];
+            let w2a = tw[toff2 + k];
+            let w2b = tw[toff2 + k + m];
+            let a = x[base + k];
+            let b = x[base + k + m];
+            let c = x[base + k + 2 * m];
+            let d = x[base + k + 3 * m];
+            let t1 = w1 * b;
+            let ap = a + t1;
+            let bp = a - t1;
+            let t2 = w1 * d;
+            let cp = c + t2;
+            let dp = c - t2;
+            let t3 = w2a * cp;
+            x[base + k] = ap + t3;
+            x[base + k + 2 * m] = ap - t3;
+            let t4 = w2b * dp;
+            x[base + k + m] = bp + t4;
+            x[base + k + 3 * m] = bp - t4;
+        }
+        base += step;
+    }
+}
+
+/// AVX2 butterfly bodies. Interleaved re/im lanes, two complex values
+/// per 256-bit register; complex products use the mul/mul/addsub form
+/// so every rounding step matches the scalar `Complex` ops exactly —
+/// these passes are bitwise identical to the scalar ones above.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use super::Complex;
+    use std::arch::x86_64::*;
+
+    /// `w * x` on two complex lanes, rounded exactly like the scalar
+    /// `Complex` multiply (mul, mul, addsub — no FMA):
+    /// `re = w.re·x.re − w.im·x.im`, `im = w.re·x.im + w.im·x.re`.
+    /// Each partial product rounds once and the adds commute bitwise,
+    /// so `cmul2(a, b)` equals the scalar `a * b` AND `b * a`.
+    ///
+    /// # Safety
+    /// Caller must be executing with AVX2 enabled (call from inside a
+    /// `target_feature(enable = "avx2")` function).
+    #[inline(always)]
+    pub(crate) unsafe fn cmul2(w: __m256d, x: __m256d) -> __m256d {
+        let wr = _mm256_movedup_pd(w); // [w0.re, w0.re, w1.re, w1.re]
+        let wi = _mm256_unpackhi_pd(w, w); // [w0.im, w0.im, w1.im, w1.im]
+        let xs = _mm256_permute_pd(x, 0x5); // [x0.im, x0.re, x1.im, x1.re]
+        _mm256_addsub_pd(_mm256_mul_pd(wr, x), _mm256_mul_pd(wi, xs))
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `x.len()` must be even.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn radix2_lone_pass(x: &mut [Complex]) {
+        let n = x.len();
+        let xp = x.as_mut_ptr() as *mut f64;
+        let mut base = 0usize;
+        while base < n {
+            // [u.re, u.im, t.re, t.im]
+            let v = _mm256_loadu_pd(xp.add(2 * base));
+            let sw = _mm256_permute2f128_pd(v, v, 0x01); // [t, u]
+            let plus = _mm256_add_pd(v, sw); // lo lane: u + t
+            let minus = _mm256_sub_pd(v, sw); // lo lane: u - t
+            _mm256_storeu_pd(xp.add(2 * base), _mm256_permute2f128_pd(plus, minus, 0x20));
+            base += 2;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `m ≥ 2` and even (so the
+    /// two-lane `k` loop covers `0..m` exactly); `x`/`tw` laid out as
+    /// in the scalar pass.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn radix4_pass(x: &mut [Complex], tw: &[Complex], toff: usize, toff2: usize, m: usize) {
+        let n = x.len();
+        let step = 4 * m;
+        let xp = x.as_mut_ptr() as *mut f64;
+        let twp = tw.as_ptr() as *const f64;
+        let mut base = 0usize;
+        while base < n {
+            let mut k = 0usize;
+            while k < m {
+                let w1 = _mm256_loadu_pd(twp.add(2 * (toff + k)));
+                let w2a = _mm256_loadu_pd(twp.add(2 * (toff2 + k)));
+                let w2b = _mm256_loadu_pd(twp.add(2 * (toff2 + k + m)));
+                let a = _mm256_loadu_pd(xp.add(2 * (base + k)));
+                let b = _mm256_loadu_pd(xp.add(2 * (base + k + m)));
+                let c = _mm256_loadu_pd(xp.add(2 * (base + k + 2 * m)));
+                let d = _mm256_loadu_pd(xp.add(2 * (base + k + 3 * m)));
+                let t1 = cmul2(w1, b);
+                let ap = _mm256_add_pd(a, t1);
+                let bp = _mm256_sub_pd(a, t1);
+                let t2 = cmul2(w1, d);
+                let cp = _mm256_add_pd(c, t2);
+                let dp = _mm256_sub_pd(c, t2);
+                let t3 = cmul2(w2a, cp);
+                _mm256_storeu_pd(xp.add(2 * (base + k)), _mm256_add_pd(ap, t3));
+                _mm256_storeu_pd(xp.add(2 * (base + k + 2 * m)), _mm256_sub_pd(ap, t3));
+                let t4 = cmul2(w2b, dp);
+                _mm256_storeu_pd(xp.add(2 * (base + k + m)), _mm256_add_pd(bp, t4));
+                _mm256_storeu_pd(xp.add(2 * (base + k + 3 * m)), _mm256_sub_pd(bp, t4));
+                k += 2;
+            }
+            base += step;
         }
     }
 }

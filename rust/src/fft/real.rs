@@ -26,11 +26,19 @@
 //! Half-spectrum layout: row-major `[n_0, …, n_{d−2}, H]`; the implied
 //! full spectrum satisfies `X(g) = conj(X(−g mod n))` with the mirror
 //! flipping **every** axis.
+//!
+//! On AVX2 hosts the O(n) twiddle-untangle passes run a vector body
+//! over two `k` lanes at a time (symmetric partner loaded reversed via
+//! a 128-bit lane swap); like the butterfly kernels, every complex
+//! product uses the mul/mul/addsub form with no FMA, so the vector
+//! untangle is **bitwise identical** to the scalar loop
+//! (`docs/DETERMINISM.md`).
 
 use super::complex::Complex;
 use super::ndfft::{strided_axis_pass, Dir, PAR_MIN_ELEMS};
 use super::plan::FftPlan;
 use crate::util::pool::BufferPool;
+use crate::util::simd;
 use rayon::prelude::*;
 use std::sync::Arc;
 
@@ -86,17 +94,7 @@ impl RealFftPlan {
         self.inner.forward(&mut z);
         // Untangle: X_k = E_k + w_k O_k, X_{m−k} = conj(E_k − w_k O_k),
         // with E/O the even/odd-sample spectra recovered from Z.
-        let mut k = 0usize;
-        while 2 * k <= m {
-            let zk = z[k % m];
-            let zmk = z[(m - k) % m];
-            let e = (zk + zmk.conj()).scale(0.5);
-            let o = (zk - zmk.conj()) * Complex::new(0.0, -0.5);
-            let t = self.tw[k] * o;
-            dst[k] = e + t;
-            dst[m - k] = (e - t).conj();
-            k += 1;
-        }
+        untangle_forward(&z, &self.tw, dst, m, simd::avx2_active());
         self.scratch.put(z);
     }
 
@@ -114,23 +112,166 @@ impl RealFftPlan {
         let x0 = spec[0];
         let xm = spec[m];
         spec[0] = (x0 + xm.conj()) + Complex::I * (x0 - xm.conj());
-        let mut k = 1usize;
-        while 2 * k <= m {
-            let p = spec[k];
-            let q = spec[m - k];
-            let ctw = self.tw[k].conj();
-            let zk = (p + q.conj()) + Complex::I * (ctw * (p - q.conj()));
-            let zmk = (q + p.conj()) - Complex::I * (self.tw[k] * (q - p.conj()));
-            spec[k] = zk;
-            if k != m - k {
-                spec[m - k] = zmk;
-            }
-            k += 1;
-        }
+        repack_backward(spec, &self.tw, m, simd::avx2_active());
         self.inner.backward_unnormalized(&mut spec[..m]);
         for (j, v) in spec[..m].iter().enumerate() {
             dst[2 * j] = v.re;
             dst[2 * j + 1] = v.im;
+        }
+    }
+}
+
+/// One forward-untangle step at bin `k` — the scalar-lane arithmetic
+/// both the scalar loop and the AVX2 head/tail share.
+#[inline(always)]
+fn untangle_one(z: &[Complex], tw: &[Complex], dst: &mut [Complex], m: usize, k: usize) {
+    let zk = z[k % m];
+    let zmk = z[(m - k) % m];
+    let e = (zk + zmk.conj()).scale(0.5);
+    let o = (zk - zmk.conj()) * Complex::new(0.0, -0.5);
+    let t = tw[k] * o;
+    dst[k] = e + t;
+    dst[m - k] = (e - t).conj();
+}
+
+/// Forward untangle sweep over `k = 0..=m/2`.
+#[inline]
+fn untangle_forward(z: &[Complex], tw: &[Complex], dst: &mut [Complex], m: usize, avx2: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2 {
+        // SAFETY: `avx2` is only true after feature detection.
+        unsafe { x86::untangle_forward(z, tw, dst, m) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = avx2;
+    let mut k = 0usize;
+    while 2 * k <= m {
+        untangle_one(z, tw, dst, m, k);
+        k += 1;
+    }
+}
+
+/// One backward-repack step at bin `k ≥ 1` — shared scalar-lane
+/// arithmetic.
+#[inline(always)]
+fn repack_one(spec: &mut [Complex], tw: &[Complex], m: usize, k: usize) {
+    let p = spec[k];
+    let q = spec[m - k];
+    let ctw = tw[k].conj();
+    let zk = (p + q.conj()) + Complex::I * (ctw * (p - q.conj()));
+    let zmk = (q + p.conj()) - Complex::I * (tw[k] * (q - p.conj()));
+    spec[k] = zk;
+    if k != m - k {
+        spec[m - k] = zmk;
+    }
+}
+
+/// Backward repack sweep over `k = 1..=m/2` (bin 0 is handled by the
+/// caller).
+#[inline]
+fn repack_backward(spec: &mut [Complex], tw: &[Complex], m: usize, avx2: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2 {
+        // SAFETY: `avx2` is only true after feature detection.
+        unsafe { x86::repack_backward(spec, tw, m) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = avx2;
+    let mut k = 1usize;
+    while 2 * k <= m {
+        repack_one(spec, tw, m, k);
+        k += 1;
+    }
+}
+
+/// AVX2 untangle/repack bodies: two `k` lanes per iteration on the
+/// interleaved re/im layout, the mirrored partner (`m − k`) loaded and
+/// stored through a 128-bit lane swap. All complex products go through
+/// [`super::plan::x86::cmul2`] (mul/mul/addsub, no FMA), so both
+/// passes are bitwise identical to the scalar loops above. The vector
+/// body only runs while the `k` pair and its mirrored pair are
+/// disjoint (`k + 2 < m − k`); the boundary bins fall back to the
+/// shared scalar-lane helpers.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::plan::x86::cmul2;
+    use super::{repack_one, untangle_one, Complex};
+    use std::arch::x86_64::*;
+
+    /// Swap the two 128-bit (one-complex) halves of `v`.
+    #[inline(always)]
+    unsafe fn swap128(v: __m256d) -> __m256d {
+        _mm256_permute2f128_pd(v, v, 0x01)
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; slice layout as in
+    /// [`super::untangle_forward`] (`z.len() == m`, `tw.len() == m+1`,
+    /// `dst.len() == m+1`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn untangle_forward(z: &[Complex], tw: &[Complex], dst: &mut [Complex], m: usize) {
+        untangle_one(z, tw, dst, m, 0);
+        let conj_mask = _mm256_setr_pd(0.0, -0.0, 0.0, -0.0);
+        let half = _mm256_set1_pd(0.5);
+        // The constant (0, −0.5) on both complex lanes.
+        let nihalf = _mm256_setr_pd(0.0, -0.5, 0.0, -0.5);
+        let zp = z.as_ptr() as *const f64;
+        let twp = tw.as_ptr() as *const f64;
+        let dp = dst.as_mut_ptr() as *mut f64;
+        let mut k = 1usize;
+        while 2 * (k + 1) <= m && k + 2 < m - k {
+            let zk = _mm256_loadu_pd(zp.add(2 * k));
+            let zmkc = _mm256_xor_pd(swap128(_mm256_loadu_pd(zp.add(2 * (m - k - 1)))), conj_mask);
+            let e = _mm256_mul_pd(_mm256_add_pd(zk, zmkc), half);
+            let o = cmul2(nihalf, _mm256_sub_pd(zk, zmkc));
+            let t = cmul2(_mm256_loadu_pd(twp.add(2 * k)), o);
+            _mm256_storeu_pd(dp.add(2 * k), _mm256_add_pd(e, t));
+            let mirror = _mm256_xor_pd(_mm256_sub_pd(e, t), conj_mask);
+            _mm256_storeu_pd(dp.add(2 * (m - k - 1)), swap128(mirror));
+            k += 2;
+        }
+        while 2 * k <= m {
+            untangle_one(z, tw, dst, m, k);
+            k += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available; slice layout as in
+    /// [`super::repack_backward`] (`spec.len() == m+1`,
+    /// `tw.len() == m+1`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn repack_backward(spec: &mut [Complex], tw: &[Complex], m: usize) {
+        let conj_mask = _mm256_setr_pd(0.0, -0.0, 0.0, -0.0);
+        // Complex::I on both lanes.
+        let ivec = _mm256_setr_pd(0.0, 1.0, 0.0, 1.0);
+        let sp = spec.as_mut_ptr() as *mut f64;
+        let twp = tw.as_ptr() as *const f64;
+        let mut k = 1usize;
+        while 2 * (k + 1) <= m && k + 2 < m - k {
+            let p = _mm256_loadu_pd(sp.add(2 * k));
+            let q = swap128(_mm256_loadu_pd(sp.add(2 * (m - k - 1))));
+            let twv = _mm256_loadu_pd(twp.add(2 * k));
+            let ctwv = _mm256_xor_pd(twv, conj_mask);
+            let pc = _mm256_xor_pd(p, conj_mask);
+            let qc = _mm256_xor_pd(q, conj_mask);
+            let zk = _mm256_add_pd(
+                _mm256_add_pd(p, qc),
+                cmul2(ivec, cmul2(ctwv, _mm256_sub_pd(p, qc))),
+            );
+            let zmk = _mm256_sub_pd(
+                _mm256_add_pd(q, pc),
+                cmul2(ivec, cmul2(twv, _mm256_sub_pd(q, pc))),
+            );
+            _mm256_storeu_pd(sp.add(2 * k), zk);
+            _mm256_storeu_pd(sp.add(2 * (m - k - 1)), swap128(zmk));
+            k += 2;
+        }
+        while 2 * k <= m {
+            repack_one(spec, tw, m, k);
+            k += 1;
         }
     }
 }

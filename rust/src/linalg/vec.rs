@@ -10,9 +10,11 @@
 //! panel kernels are defined against and pinned to:
 //!
 //! * small-n substrate — for n ≤ `panel::ROW_BLOCK` the panel
-//!   reductions are bit-identical to [`dot`], and the element-wise
-//!   panel kernels are bit-identical to [`axpy`]/[`scale`] at every
-//!   size;
+//!   reductions are bit-identical to [`dot`] under the scalar SIMD
+//!   level (`crate::util::simd::Level::Scalar`; wider levels
+//!   re-associate lanes and agree to roundoff — see
+//!   `docs/DETERMINISM.md`), and the element-wise panel kernels are
+//!   bit-identical to [`axpy`]/[`scale`] at every size and level;
 //! * oracle + baseline — the retained `*_reference` kernels of the
 //!   panel engine and the `BENCH_krylov.json` baseline rows are built
 //!   from these loops;

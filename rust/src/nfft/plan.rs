@@ -43,11 +43,24 @@
 //! [`super::geometry`] for the layout and the determinism argument),
 //! and the shard layer spreads into bounding-box subgrids via
 //! [`NfftPlan::spread_real_boxed`] / [`NfftPlan::merge_boxed_into`].
+//!
+//! SIMD (§Perf iteration 6): the last-axis tap rows of the flat-offset
+//! kernels are ascending-by-one wrapped offsets, so after splitting at
+//! the single torus wrap each row is one or two contiguous grid
+//! slices; the rows therefore run through the dispatched
+//! [`crate::util::simd`] kernels — `scatter_add`/`vadd` (element-wise,
+//! **bitwise identical** to the scalar walk at every level, so every
+//! spread/merge pin against the seed oracle survives SIMD unchanged)
+//! and `gather_dot` (a lane reduction: bitwise reproducible per level,
+//! ≤ 1e-12 of the scalar sum, bitwise equal to the seed oracle exactly
+//! at `Level::Scalar`). The level is resolved once per sweep and
+//! threaded through the per-point kernels (`docs/DETERMINISM.md`).
 
 use super::geometry::{NfftGeometry, SpreadLayout, SpreadTile, SubgridBox, TiledLayout};
 use super::window::{Window, WindowKind};
 use crate::fft::{Complex, NdFftPlan, RealNdFftPlan};
 use crate::util::pool::BufferPool;
+use crate::util::simd::{self, Level};
 use rayon::prelude::*;
 
 pub struct NfftPlan {
@@ -554,6 +567,7 @@ impl NfftPlan {
             *g = 0.0;
         }
         let fp = geo.fp;
+        let lvl = simd::active();
         let chunks = self.spread_chunks(geo.n, fp);
         if chunks <= 1 {
             for (i, &xi) in x.iter().enumerate() {
@@ -561,7 +575,7 @@ impl NfftPlan {
                     continue;
                 }
                 let (starts, vals) = geo.point(i);
-                self.scatter_boxed_real(starts, vals, fp, xi, bx, out);
+                self.scatter_boxed_real(lvl, starts, vals, fp, xi, bx, out);
             }
             return;
         }
@@ -580,15 +594,13 @@ impl NfftPlan {
                         continue;
                     }
                     let (starts, vals) = geo.point(base + off);
-                    self.scatter_boxed_real(starts, vals, fp, xi, bx, &mut sub);
+                    self.scatter_boxed_real(lvl, starts, vals, fp, xi, bx, &mut sub);
                 }
                 sub
             })
             .collect();
         crate::util::reduce::tree_reduce_in_place(&mut subs);
-        for (g, &s) in out.iter_mut().zip(subs[0].iter()) {
-            *g += s;
-        }
+        simd::vadd(lvl, &subs[0], out);
         for sub in subs {
             scratch.put(sub);
         }
@@ -597,9 +609,12 @@ impl NfftPlan {
     /// Box-local scatter of one footprint: coordinates are offsets
     /// from the (unwrapped) box origin, so the inner axis is one
     /// contiguous span and no axis ever wraps. Multiply chain and
-    /// guard placement mirror [`Self::scatter_real`].
+    /// guard placement mirror [`Self::scatter_real`]; inner rows are
+    /// contiguous [`simd::axpy`] calls (element-wise, bitwise across
+    /// levels).
     fn scatter_boxed_real(
         &self,
+        lvl: Level,
         starts: &[i64],
         vals: &[f64],
         fp: usize,
@@ -611,10 +626,7 @@ impl NfftPlan {
         match d {
             1 => {
                 let s = (starts[0] - bx.lo[0]) as usize;
-                let dst = &mut sub[s..s + fp];
-                for (g, &v) in dst.iter_mut().zip(vals) {
-                    *g += weight * v;
-                }
+                simd::axpy(lvl, weight, vals, &mut sub[s..s + fp]);
             }
             2 => {
                 let s0 = (starts[0] - bx.lo[0]) as usize;
@@ -626,10 +638,7 @@ impl NfftPlan {
                         continue;
                     }
                     let base = (s0 + t0) * bx.strides[0] + s1;
-                    let dst = &mut sub[base..base + fp];
-                    for (g, &v) in dst.iter_mut().zip(v1) {
-                        *g += w * v;
-                    }
+                    simd::axpy(lvl, w, v1, &mut sub[base..base + fp]);
                 }
             }
             3 => {
@@ -647,10 +656,7 @@ impl NfftPlan {
                             continue;
                         }
                         let base = b0 + (s1 + t1) * bx.strides[1] + s2;
-                        let dst = &mut sub[base..base + fp];
-                        for (g, &v) in dst.iter_mut().zip(v2) {
-                            *g += w * v;
-                        }
+                        simd::axpy(lvl, w, v2, &mut sub[base..base + fp]);
                     }
                 }
             }
@@ -667,9 +673,7 @@ impl NfftPlan {
                     }
                     if w != 0.0 {
                         let dst = &mut sub[base + s_last..base + s_last + fp];
-                        for (g, &v) in dst.iter_mut().zip(&vals[outer * fp..]) {
-                            *g += w * v;
-                        }
+                        simd::axpy(lvl, w, &vals[outer * fp..], dst);
                     }
                     let mut a = outer;
                     loop {
@@ -696,10 +700,9 @@ impl NfftPlan {
     pub fn merge_boxed_into(&self, bx: &SubgridBox, sub: &[f64], grid: &mut [f64]) {
         assert_eq!(grid.len(), self.total_grid);
         assert_eq!(sub.len(), bx.total);
+        let lvl = simd::active();
         if bx.full {
-            for (g, &s) in grid.iter_mut().zip(sub) {
-                *g += s;
-            }
+            simd::vadd(lvl, sub, grid);
             return;
         }
         let d = self.d;
@@ -718,13 +721,9 @@ impl NfftPlan {
             }
             let src = &sub[sbase..sbase + len_last];
             let dst = &mut grid[gbase + start_last..gbase + start_last + first];
-            for (g, &s) in dst.iter_mut().zip(&src[..first]) {
-                *g += s;
-            }
+            simd::vadd(lvl, &src[..first], dst);
             let dst = &mut grid[gbase..gbase + (len_last - first)];
-            for (g, &s) in dst.iter_mut().zip(&src[first..]) {
-                *g += s;
-            }
+            simd::vadd(lvl, &src[first..], dst);
             let mut a = d - 1;
             loop {
                 if a == 0 {
@@ -831,6 +830,7 @@ impl NfftPlan {
         self.check_geometry(geo);
         assert_eq!(out.len(), geo.n);
         assert_eq!(rgrid.len(), self.total_grid);
+        let lvl = simd::active();
         if let Some(tl) = geo.tiled_layout() {
             let order = &tl.order;
             let chunk = order.len().div_ceil(4 * rayon::current_num_threads().max(1)).max(256);
@@ -840,7 +840,7 @@ impl NfftPlan {
                     idxs.iter()
                         .map(|&pi| {
                             let (vals, offs) = geo.point_tables(pi as usize);
-                            self.gather_real(offs, vals, rgrid)
+                            self.gather_real(lvl, offs, vals, rgrid)
                         })
                         .collect()
                 })
@@ -855,7 +855,7 @@ impl NfftPlan {
         }
         out.par_iter_mut().enumerate().for_each(|(j, o)| {
             let (vals, offs) = geo.point_tables(j);
-            *o = self.gather_real(offs, vals, rgrid);
+            *o = self.gather_real(lvl, offs, vals, rgrid);
         });
     }
 
@@ -869,12 +869,13 @@ impl NfftPlan {
         assert_eq!(out.len() % n, 0, "out not a multiple of n");
         let k = out.len() / n;
         assert_eq!(rgrids.len(), k * self.total_grid, "grid slab size mismatch");
+        let lvl = simd::active();
         out.par_chunks_mut(n)
             .zip(rgrids.par_chunks(self.total_grid))
             .for_each(|(o, g)| {
                 for (j, v) in o.iter_mut().enumerate() {
                     let (vals, offs) = geo.point_tables(j);
-                    *v = self.gather_real(offs, vals, g);
+                    *v = self.gather_real(lvl, offs, vals, g);
                 }
             });
     }
@@ -1297,13 +1298,14 @@ impl NfftPlan {
     ) {
         let fp = geo.fp;
         let n = geo.n;
+        let lvl = simd::active();
         let scatter = |i: usize, xi: f64, dst: &mut [f64]| {
             if seed_kernel {
                 let (starts, vals) = geo.point(i);
                 self.scatter_real_seed(starts, vals, fp, xi, dst);
             } else {
                 let (vals, offs) = geo.point_tables(i);
-                self.scatter_real(offs, vals, fp, self.d, xi, dst);
+                self.scatter_real(lvl, offs, vals, fp, self.d, xi, dst);
             }
         };
         let chunks = self.spread_chunks(n, fp);
@@ -1336,9 +1338,7 @@ impl NfftPlan {
             })
             .collect();
         crate::util::reduce::tree_reduce_in_place(&mut subs);
-        for (g, &s) in grid.iter_mut().zip(subs[0].iter()) {
-            *g += s;
-        }
+        simd::vadd(lvl, &subs[0], grid);
         for sub in subs {
             self.spread_scratch_real.put(sub);
         }
@@ -1356,6 +1356,7 @@ impl NfftPlan {
     fn spread_real_tiled(&self, geo: &NfftGeometry, tl: &TiledLayout, x: &[f64], grid: &mut [f64]) {
         let fp = geo.fp;
         let d = self.d;
+        let lvl = simd::active();
         let row_len = self.strides[0];
         let g0 = self.n_os[0];
         // Disjoint per-tile views of the grid, in row order (explicit
@@ -1411,7 +1412,7 @@ impl NfftPlan {
                             let lo = (r - row_hi) * row_len;
                             &mut rim[lo..lo + row_len]
                         };
-                        self.scatter_real(o_inner, v_inner, fp, d - 1, w, dst);
+                        self.scatter_real(lvl, o_inner, v_inner, fp, d - 1, w, dst);
                     }
                 }
                 Some(rim)
@@ -1425,9 +1426,7 @@ impl NfftPlan {
             for (j, rrow) in rim.chunks_exact(row_len).enumerate() {
                 let grow = (row_hi + j) % g0;
                 let dst = &mut grid[grow * row_len..(grow + 1) * row_len];
-                for (g, &v) in dst.iter_mut().zip(rrow) {
-                    *g += v;
-                }
+                simd::vadd(lvl, rrow, dst);
             }
             self.spread_rim_real.put(rim);
         }
@@ -1438,9 +1437,13 @@ impl NfftPlan {
     /// memory traffic. `axes = d` scatters the whole footprint;
     /// `axes = d − 1` with the leading axis stripped scatters one
     /// footprint row (the tiled spread's inner step); `axes = 0` adds
-    /// the bare weight (1-d rows are single cells).
+    /// the bare weight (1-d rows are single cells). Last-axis rows run
+    /// through [`simd::scatter_add`] (split-at-wrap contiguous axpy) —
+    /// element-wise, so bitwise identical to the scalar walk at every
+    /// SIMD level.
     fn scatter_real(
         &self,
+        lvl: Level,
         offs: &[u32],
         vals: &[f64],
         fp: usize,
@@ -1451,9 +1454,7 @@ impl NfftPlan {
         match axes {
             0 => grid[0] += weight,
             1 => {
-                for (&o, &v) in offs.iter().zip(vals) {
-                    grid[o as usize] += weight * v;
-                }
+                simd::scatter_add(lvl, offs, vals, weight, grid);
             }
             2 => {
                 let (o0, o1) = offs.split_at(fp);
@@ -1464,9 +1465,7 @@ impl NfftPlan {
                         continue;
                     }
                     let base = oa as usize;
-                    for (&ob, &vb) in o1.iter().zip(v1) {
-                        grid[base + ob as usize] += w * vb;
-                    }
+                    simd::scatter_add(lvl, o1, v1, w, &mut grid[base..]);
                 }
             }
             3 => {
@@ -1483,9 +1482,7 @@ impl NfftPlan {
                             continue;
                         }
                         let base = ba + ob as usize;
-                        for (&oc, &vc) in o2.iter().zip(v2) {
-                            grid[base + oc as usize] += w * vc;
-                        }
+                        simd::scatter_add(lvl, o2, v2, w, &mut grid[base..]);
                     }
                 }
             }
@@ -1502,9 +1499,7 @@ impl NfftPlan {
                     if w != 0.0 {
                         let o = &offs[outer * fp..(outer + 1) * fp];
                         let v = &vals[outer * fp..(outer + 1) * fp];
-                        for (&ol, &vl) in o.iter().zip(v) {
-                            grid[base + ol as usize] += w * vl;
-                        }
+                        simd::scatter_add(lvl, o, v, w, &mut grid[base..]);
                     }
                     let mut a = outer;
                     loop {
@@ -1579,20 +1574,17 @@ impl NfftPlan {
 
     /// Flat-offset gather of one footprint from a REAL grid:
     /// per-axis-unrolled small-d paths, stack odometer beyond — no
-    /// heap allocation, no index wrapping. The accumulation order
-    /// (inner tap sum, then `acc += inner · w` per outer combination)
-    /// mirrors the seed kernel exactly, so results are bit-identical.
-    fn gather_real(&self, offs: &[u32], vals: &[f64], grid: &[f64]) -> f64 {
+    /// heap allocation, no index wrapping. The outer accumulation
+    /// order (`acc += inner · w` per outer combination) mirrors the
+    /// seed kernel exactly; the inner tap sum runs through
+    /// [`simd::gather_dot`], a lane reduction — bit-identical to the
+    /// seed kernel at [`Level::Scalar`], bitwise-reproducible and
+    /// within roundoff (≤ 1e-12) of it at the SIMD levels.
+    fn gather_real(&self, lvl: Level, offs: &[u32], vals: &[f64], grid: &[f64]) -> f64 {
         let d = self.d;
         let fp = vals.len() / d;
         match d {
-            1 => {
-                let mut inner = 0.0f64;
-                for (&o, &v) in offs.iter().zip(vals) {
-                    inner += grid[o as usize] * v;
-                }
-                inner
-            }
+            1 => simd::gather_dot(lvl, offs, vals, grid),
             2 => {
                 let (o0, o1) = offs.split_at(fp);
                 let (v0, v1) = vals.split_at(fp);
@@ -1602,10 +1594,7 @@ impl NfftPlan {
                         continue;
                     }
                     let base = oa as usize;
-                    let mut inner = 0.0f64;
-                    for (&ob, &vb) in o1.iter().zip(v1) {
-                        inner += grid[base + ob as usize] * vb;
-                    }
+                    let inner = simd::gather_dot(lvl, o1, v1, &grid[base..]);
                     acc += inner * va;
                 }
                 acc
@@ -1624,10 +1613,7 @@ impl NfftPlan {
                             continue;
                         }
                         let base = ba + ob as usize;
-                        let mut inner = 0.0f64;
-                        for (&oc, &vc) in o2.iter().zip(v2) {
-                            inner += grid[base + oc as usize] * vc;
-                        }
+                        let inner = simd::gather_dot(lvl, o2, v2, &grid[base..]);
                         acc += inner * w;
                     }
                 }
@@ -1647,10 +1633,7 @@ impl NfftPlan {
                     if w != 0.0 {
                         let o = &offs[outer * fp..(outer + 1) * fp];
                         let v = &vals[outer * fp..(outer + 1) * fp];
-                        let mut inner = 0.0f64;
-                        for (&ol, &vl) in o.iter().zip(v) {
-                            inner += grid[base + ol as usize] * vl;
-                        }
+                        let inner = simd::gather_dot(lvl, o, v, &grid[base..]);
                         acc += inner * w;
                     }
                     let mut a = outer;
@@ -2241,7 +2224,20 @@ mod tests {
             let mut o_new = vec![0.0; n];
             plan.gather_real_grid_reference(&geo, &g_ref, &mut o_ref);
             plan.gather_real_grid(&geo, &g_new, &mut o_new);
-            assert_eq!(o_ref, o_new, "d={d}: flat-offset gather must match seed bitwise");
+            // The gather inner sum is a SIMD lane reduction: bitwise
+            // equal to the seed kernel exactly at the scalar level,
+            // within roundoff (and deterministic) at the others.
+            if simd::active() == Level::Scalar {
+                assert_eq!(o_ref, o_new, "d={d}: flat-offset gather must match seed bitwise");
+            } else {
+                let scale = o_ref.iter().fold(1.0f64, |a, v| a.max(v.abs()));
+                for (r, w) in o_ref.iter().zip(&o_new) {
+                    assert!((r - w).abs() <= 1e-12 * scale, "d={d}: gather diverged: {r} vs {w}");
+                }
+                let mut o_again = vec![0.0; n];
+                plan.gather_real_grid(&geo, &g_new, &mut o_again);
+                assert_eq!(o_new, o_again, "d={d}: SIMD gather must be deterministic");
+            }
         }
     }
 

@@ -9,6 +9,7 @@ pub mod morton;
 pub mod pool;
 pub mod proptest;
 pub mod reduce;
+pub mod simd;
 pub mod stats;
 pub mod timer;
 

@@ -1,0 +1,817 @@
+//! Explicit-SIMD kernel substrate for the three hot kernel families
+//! (spread/gather taps, FFT butterflies, panel gram/update).
+//!
+//! Once the algorithmic overheads were gone (flat offsets, merged
+//! radix-4 passes, fused panel sweeps), the remaining cost of the
+//! matvec and Krylov hot loops is pure microarchitecture: streaming
+//! f64 rows through multiplies and adds. This module supplies the
+//! shared lane machinery those families run on:
+//!
+//! * [`Level`] — the per-process SIMD dispatch level, detected **once**
+//!   at first use (`is_x86_feature_detected!("avx2")` + `"fma"`,
+//!   cached in a `OnceLock`) and overridable via the `NFFT_SIMD`
+//!   environment variable (`scalar` / `portable` / `avx2`) or, for
+//!   benches and tests, [`with_override`]. Hot sweeps resolve the
+//!   level once per call and pass it down, so per-tap dispatch is
+//!   free.
+//! * [`F64x4`] / [`F64x8`] — stable-Rust portable lane types:
+//!   array-backed newtypes whose `#[inline]` add/mul ops compile to
+//!   clean vector code wherever the target baseline allows, and whose
+//!   fixed-order horizontal sums define the reduction contract below.
+//! * The dispatched kernels [`dot`], [`axpy`], [`xpby`],
+//!   [`gather_dot`] and [`scatter_add`], each with public per-level
+//!   variants (`*_scalar` / `*_portable` / `*_avx2`) that double as
+//!   the oracles of `tests/simd_kernels.rs` and the paired
+//!   scalar-vs-simd rows of the `BENCH_*.json` micro-benchmarks.
+//!
+//! # Determinism contract (see `docs/DETERMINISM.md`)
+//!
+//! * **Element-wise kernels never use FMA** and touch each output
+//!   element with the exact scalar operation order ­— [`axpy`],
+//!   [`xpby`] and [`scatter_add`] are **bitwise identical** to their
+//!   scalar forms at every level, on every input. Vectorising them
+//!   only changes how many elements move per instruction.
+//! * **Reductions** ([`dot`], [`gather_dot`]) accumulate into lanes
+//!   (stride-8 partial sums) and combine them in the fixed pairwise
+//!   order `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, then fold the
+//!   scalar tail sequentially. That order is a pure function of the
+//!   slice length and the level — never of the thread count — so
+//!   results are bitwise reproducible across runs and across thread
+//!   counts for a fixed level, and agree with the sequential scalar
+//!   sum to roundoff (≤ 1e-12 relative in the proptest suite). The
+//!   AVX2 variants additionally contract multiply-adds with FMA
+//!   (reductions only), which is why per-level results differ in the
+//!   last bits while every level stays within tolerance of the scalar
+//!   oracle.
+//!
+//! The scalar variants are always compiled and are the semantic
+//! oracle: forcing `NFFT_SIMD=scalar` reproduces the pre-SIMD
+//! arithmetic of the whole engine bit for bit.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// SIMD dispatch level, resolved once per process (see [`active`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// The retained sequential kernels — the semantic oracle.
+    Scalar,
+    /// Array-backed portable lanes (autovectorized; no FMA anywhere).
+    Portable,
+    /// `target_feature`-guarded AVX2 paths (FMA in reductions only).
+    Avx2,
+}
+
+impl Level {
+    /// Stable name used by bench JSON rows and the `NFFT_SIMD` env var.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Portable => "portable",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Whether the AVX2(+FMA) kernel variants can run on this host.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn detect() -> Level {
+    if let Ok(v) = std::env::var("NFFT_SIMD") {
+        match v.as_str() {
+            "scalar" => return Level::Scalar,
+            "portable" => return Level::Portable,
+            // `avx2` is only honoured where it can actually run.
+            "avx2" if avx2_available() => return Level::Avx2,
+            _ => {}
+        }
+    }
+    if avx2_available() {
+        Level::Avx2
+    } else {
+        Level::Portable
+    }
+}
+
+static DETECTED: OnceLock<Level> = OnceLock::new();
+/// 0 = no override, 1 = Scalar, 2 = Portable, 3 = Avx2.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+/// The active dispatch level: the [`with_override`] level if one is
+/// installed, else the cached detection result. One relaxed atomic
+/// load — hot sweeps still resolve it once per call and thread the
+/// result through their inner loops.
+pub fn active() -> Level {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => Level::Scalar,
+        2 => Level::Portable,
+        3 => Level::Avx2,
+        _ => *DETECTED.get_or_init(detect),
+    }
+}
+
+/// True when the AVX2 kernel variants should actually run: the active
+/// level is [`Level::Avx2`] AND the host can execute them (an
+/// override to `Avx2` on a non-AVX2 host falls back to portable in
+/// every dispatcher, and this helper reports `false`).
+pub fn avx2_active() -> bool {
+    active() == Level::Avx2 && avx2_available()
+}
+
+/// Run `f` with the dispatch level forced to `lvl` (`None` = the
+/// detected default), restoring the previous state afterwards. This is
+/// the bench/test hook behind the paired scalar-vs-simd `BENCH_*.json`
+/// rows and the cross-level equivalence proptests; overrides are
+/// process-global, so concurrent callers serialise on an internal
+/// lock. Not intended for production call sites. Because the override
+/// is visible to every thread, a test binary that calls this anywhere
+/// must route ALL its level-sensitive tests through it (the lock then
+/// serialises them); binaries that merely read [`active`] must not
+/// call it at all — `tests/simd_kernels.rs` is the only test binary
+/// that overrides.
+pub fn with_override<R>(lvl: Option<Level>, f: impl FnOnce() -> R) -> R {
+    let _guard = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = OVERRIDE.load(Ordering::Relaxed);
+    let code = match lvl {
+        None => 0,
+        Some(Level::Scalar) => 1,
+        Some(Level::Portable) => 2,
+        Some(Level::Avx2) => 3,
+    };
+    OVERRIDE.store(code, Ordering::Relaxed);
+    let out = f();
+    OVERRIDE.store(prev, Ordering::Relaxed);
+    out
+}
+
+/// The levels worth exercising on this host, in oracle-first order —
+/// the sweep the cross-level tests and the bench rows iterate.
+pub fn testable_levels() -> Vec<Level> {
+    let mut v = vec![Level::Scalar, Level::Portable];
+    if avx2_available() {
+        v.push(Level::Avx2);
+    }
+    v
+}
+
+// ----------------------------------------------------------------------
+// Portable lane types.
+// ----------------------------------------------------------------------
+
+/// Four f64 lanes, array-backed. All ops are per-lane and `#[inline]`
+/// so the optimizer lowers them to the widest vector unit the build
+/// target has; on a baseline x86-64 build they stay SSE2 pairs —
+/// still branch-free straight-line code.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F64x4(pub [f64; 4]);
+
+/// Eight f64 lanes — the accumulator shape of the reduction kernels
+/// (two AVX2 registers, or four SSE2 pairs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F64x8(pub [f64; 8]);
+
+macro_rules! lane_type {
+    ($name:ident, $n:literal) => {
+        impl $name {
+            pub const LANES: usize = $n;
+
+            #[inline(always)]
+            pub fn splat(v: f64) -> Self {
+                Self([v; $n])
+            }
+
+            #[inline(always)]
+            pub fn zero() -> Self {
+                Self([0.0; $n])
+            }
+
+            /// Load from the first `LANES` elements of `s`.
+            #[inline(always)]
+            pub fn load(s: &[f64]) -> Self {
+                let mut a = [0.0; $n];
+                a.copy_from_slice(&s[..$n]);
+                Self(a)
+            }
+
+            /// Store into the first `LANES` elements of `s`.
+            #[inline(always)]
+            pub fn store(self, s: &mut [f64]) {
+                s[..$n].copy_from_slice(&self.0);
+            }
+
+            #[inline(always)]
+            pub fn add(self, o: Self) -> Self {
+                let mut a = self.0;
+                for (x, y) in a.iter_mut().zip(&o.0) {
+                    *x += y;
+                }
+                Self(a)
+            }
+
+            #[inline(always)]
+            pub fn sub(self, o: Self) -> Self {
+                let mut a = self.0;
+                for (x, y) in a.iter_mut().zip(&o.0) {
+                    *x -= y;
+                }
+                Self(a)
+            }
+
+            #[inline(always)]
+            pub fn mul(self, o: Self) -> Self {
+                let mut a = self.0;
+                for (x, y) in a.iter_mut().zip(&o.0) {
+                    *x *= y;
+                }
+                Self(a)
+            }
+
+            /// `self + a·b` with separate rounding per step (NOT an
+            /// FMA) — the element-wise determinism contract depends on
+            /// this.
+            #[inline(always)]
+            pub fn mul_add(self, a: Self, b: Self) -> Self {
+                self.add(a.mul(b))
+            }
+        }
+    };
+}
+
+lane_type!(F64x4, 4);
+lane_type!(F64x8, 8);
+
+impl F64x4 {
+    /// Fixed-order horizontal sum: `(l0+l1) + (l2+l3)`.
+    #[inline(always)]
+    pub fn hsum(self) -> f64 {
+        let [a, b, c, d] = self.0;
+        (a + b) + (c + d)
+    }
+}
+
+impl F64x8 {
+    /// Fixed-order horizontal sum:
+    /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — the reduction-tree
+    /// order every reduction kernel in this module commits to.
+    #[inline(always)]
+    pub fn hsum(self) -> f64 {
+        let [a, b, c, d, e, f, g, h] = self.0;
+        ((a + b) + (c + d)) + ((e + f) + (g + h))
+    }
+}
+
+// ----------------------------------------------------------------------
+// dot — the reduction primitive under the panel Gram kernels, pdot
+// and the gather inner rows.
+// ----------------------------------------------------------------------
+
+/// Sequential dot product — the seed arithmetic
+/// ([`crate::linalg::vec::dot`]) and the oracle of the SIMD variants.
+#[inline]
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Portable lane dot: stride-8 lane accumulators (mul then add, no
+/// FMA), lanes combined in the fixed [`F64x8::hsum`] order, scalar
+/// tail folded in sequentially afterwards. For `len < 8` this
+/// degenerates to the sequential sum.
+#[inline]
+pub fn dot_portable(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let nv = n - n % F64x8::LANES;
+    let mut acc = F64x8::zero();
+    let mut i = 0;
+    while i < nv {
+        acc = acc.mul_add(F64x8::load(&a[i..]), F64x8::load(&b[i..]));
+        i += F64x8::LANES;
+    }
+    let mut sum = if nv > 0 { acc.hsum() } else { 0.0 };
+    for (x, y) in a[nv..].iter().zip(&b[nv..]) {
+        sum += x * y;
+    }
+    sum
+}
+
+/// AVX2+FMA dot: same stride-8 blocking and the same fixed lane
+/// combine order as [`dot_portable`], with the multiply-add contracted
+/// (reduction kernels may use FMA — element-wise kernels may not).
+/// Falls back to the portable variant where AVX2 is unavailable.
+#[inline]
+pub fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: feature presence checked above.
+        return unsafe { x86::dot_fma(a, b) };
+    }
+    dot_portable(a, b)
+}
+
+/// Dispatched dot product. Reduction contract: bitwise reproducible
+/// per level; ≤ 1e-12 of the scalar oracle across levels.
+#[inline]
+pub fn dot(lvl: Level, a: &[f64], b: &[f64]) -> f64 {
+    match lvl {
+        Level::Scalar => dot_scalar(a, b),
+        Level::Portable => dot_portable(a, b),
+        Level::Avx2 => dot_avx2(a, b),
+    }
+}
+
+// ----------------------------------------------------------------------
+// axpy / xpby — the element-wise primitives under the panel
+// update/mul sweeps, the CG/MINRES vector updates and the scatter
+// rows. Bitwise identical across levels, always.
+// ----------------------------------------------------------------------
+
+/// `y += alpha · x`, sequential.
+#[inline]
+pub fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y += alpha · x` on 4-lane blocks (mul then add — every element
+/// sees the exact scalar rounding, so the result is bitwise equal to
+/// [`axpy_scalar`] at every size).
+#[inline]
+pub fn axpy_portable(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let nv = n - n % F64x4::LANES;
+    let av = F64x4::splat(alpha);
+    let mut i = 0;
+    while i < nv {
+        let yv = F64x4::load(&y[i..]).add(av.mul(F64x4::load(&x[i..])));
+        yv.store(&mut y[i..]);
+        i += F64x4::LANES;
+    }
+    for (yi, xi) in y[nv..].iter_mut().zip(&x[nv..]) {
+        *yi += alpha * xi;
+    }
+}
+
+/// AVX2 `y += alpha · x` — mul + add (deliberately NOT fmadd, see the
+/// module contract). Falls back to portable off-x86_64.
+#[inline]
+pub fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: feature presence checked above.
+        unsafe { x86::axpy(alpha, x, y) };
+        return;
+    }
+    axpy_portable(alpha, x, y);
+}
+
+/// Dispatched `y += alpha · x` — bitwise identical across levels.
+#[inline]
+pub fn axpy(lvl: Level, alpha: f64, x: &[f64], y: &mut [f64]) {
+    match lvl {
+        Level::Scalar => axpy_scalar(alpha, x, y),
+        Level::Portable => axpy_portable(alpha, x, y),
+        Level::Avx2 => axpy_avx2(alpha, x, y),
+    }
+}
+
+/// `y += x`, sequential (grid/rim merges).
+#[inline]
+pub fn vadd_scalar(x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += xi;
+    }
+}
+
+/// `y += x` on 4-lane blocks — bitwise equal to [`vadd_scalar`].
+#[inline]
+pub fn vadd_portable(x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let nv = n - n % F64x4::LANES;
+    let mut i = 0;
+    while i < nv {
+        let yv = F64x4::load(&y[i..]).add(F64x4::load(&x[i..]));
+        yv.store(&mut y[i..]);
+        i += F64x4::LANES;
+    }
+    for (yi, xi) in y[nv..].iter_mut().zip(&x[nv..]) {
+        *yi += xi;
+    }
+}
+
+/// AVX2 `y += x`.
+#[inline]
+pub fn vadd_avx2(x: &[f64], y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: feature presence checked above.
+        unsafe { x86::vadd(x, y) };
+        return;
+    }
+    vadd_portable(x, y);
+}
+
+/// Dispatched `y += x` — bitwise identical across levels.
+#[inline]
+pub fn vadd(lvl: Level, x: &[f64], y: &mut [f64]) {
+    match lvl {
+        Level::Scalar => vadd_scalar(x, y),
+        Level::Portable => vadd_portable(x, y),
+        Level::Avx2 => vadd_avx2(x, y),
+    }
+}
+
+/// `y = x + beta · y`, sequential (the CG direction update).
+#[inline]
+pub fn xpby_scalar(x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + beta * *yi;
+    }
+}
+
+/// `y = x + beta · y` on 4-lane blocks — bitwise equal to
+/// [`xpby_scalar`].
+#[inline]
+pub fn xpby_portable(x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let nv = n - n % F64x4::LANES;
+    let bv = F64x4::splat(beta);
+    let mut i = 0;
+    while i < nv {
+        let yv = F64x4::load(&x[i..]).add(bv.mul(F64x4::load(&y[i..])));
+        yv.store(&mut y[i..]);
+        i += F64x4::LANES;
+    }
+    for (yi, xi) in y[nv..].iter_mut().zip(&x[nv..]) {
+        *yi = xi + beta * *yi;
+    }
+}
+
+/// AVX2 `y = x + beta · y` (mul + add, no FMA).
+#[inline]
+pub fn xpby_avx2(x: &[f64], beta: f64, y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: feature presence checked above.
+        unsafe { x86::xpby(x, beta, y) };
+        return;
+    }
+    xpby_portable(x, beta, y);
+}
+
+/// Dispatched `y = x + beta · y` — bitwise identical across levels.
+#[inline]
+pub fn xpby(lvl: Level, x: &[f64], beta: f64, y: &mut [f64]) {
+    match lvl {
+        Level::Scalar => xpby_scalar(x, beta, y),
+        Level::Portable => xpby_portable(x, beta, y),
+        Level::Avx2 => xpby_avx2(x, beta, y),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Tap-row kernels — the NFFT spread/gather inner loops. A last-axis
+// tap row's flat offsets are `(s + t) mod n`, i.e. ascending by one
+// with at most ONE wrap back to a smaller value; splitting at the
+// wrap yields one or two contiguous grid slices, on which the row
+// operation IS an axpy (spread) or a dot (gather). Rows whose offsets
+// do not have that shape (defensive — the geometry never produces
+// them) fall back to the scalar walk.
+// ----------------------------------------------------------------------
+
+/// Length of the leading contiguous run of `offs` (offsets ascending
+/// by exactly one). Returns `offs.len()` when the whole row is
+/// contiguous.
+#[inline]
+fn contiguous_run(offs: &[u32]) -> usize {
+    let base = offs[0];
+    for (t, &o) in offs.iter().enumerate().skip(1) {
+        if o != base + t as u32 {
+            return t;
+        }
+    }
+    offs.len()
+}
+
+/// Sequential tap-row gather: `Σ_t grid[offs[t]] · vals[t]` in tap
+/// order — the seed inner-row arithmetic.
+#[inline]
+pub fn gather_dot_scalar(offs: &[u32], vals: &[f64], grid: &[f64]) -> f64 {
+    let mut inner = 0.0;
+    for (&o, &v) in offs.iter().zip(vals) {
+        inner += grid[o as usize] * v;
+    }
+    inner
+}
+
+/// Dispatched tap-row gather: split at the torus wrap, run the
+/// contiguous segments through [`dot`] (first segment, then the wrap
+/// remainder, combined in that fixed order). Same reduction contract
+/// as `dot`; scalar fallback when the row is not wrap-contiguous.
+#[inline]
+pub fn gather_dot(lvl: Level, offs: &[u32], vals: &[f64], grid: &[f64]) -> f64 {
+    if lvl == Level::Scalar || offs.is_empty() {
+        return gather_dot_scalar(offs, vals, grid);
+    }
+    let split = contiguous_run(offs);
+    let lo = offs[0] as usize;
+    if split == offs.len() {
+        return dot(lvl, &vals[..split], &grid[lo..lo + split]);
+    }
+    let rest = &offs[split..];
+    if contiguous_run(rest) != rest.len() {
+        // Not the (s + t) mod n shape — defensive scalar walk.
+        return gather_dot_scalar(offs, vals, grid);
+    }
+    let lo2 = rest[0] as usize;
+    dot(lvl, &vals[..split], &grid[lo..lo + split])
+        + dot(lvl, &vals[split..], &grid[lo2..lo2 + rest.len()])
+}
+
+/// Sequential tap-row scatter: `grid[offs[t]] += weight · vals[t]` in
+/// tap order.
+#[inline]
+pub fn scatter_add_scalar(offs: &[u32], vals: &[f64], weight: f64, grid: &mut [f64]) {
+    for (&o, &v) in offs.iter().zip(vals) {
+        grid[o as usize] += weight * v;
+    }
+}
+
+/// Dispatched tap-row scatter: split at the torus wrap and run the
+/// contiguous segments through [`axpy`]. Element-wise (one add per
+/// distinct grid cell), so the result is **bitwise identical** to
+/// [`scatter_add_scalar`] at every level.
+#[inline]
+pub fn scatter_add(lvl: Level, offs: &[u32], vals: &[f64], weight: f64, grid: &mut [f64]) {
+    if lvl == Level::Scalar || offs.is_empty() {
+        scatter_add_scalar(offs, vals, weight, grid);
+        return;
+    }
+    let split = contiguous_run(offs);
+    let lo = offs[0] as usize;
+    if split == offs.len() {
+        axpy(lvl, weight, &vals[..split], &mut grid[lo..lo + split]);
+        return;
+    }
+    let rest = &offs[split..];
+    if contiguous_run(rest) != rest.len() {
+        scatter_add_scalar(offs, vals, weight, grid);
+        return;
+    }
+    let lo2 = rest[0] as usize;
+    axpy(lvl, weight, &vals[..split], &mut grid[lo..lo + split]);
+    axpy(lvl, weight, &vals[split..], &mut grid[lo2..lo2 + rest.len()]);
+}
+
+// ----------------------------------------------------------------------
+// AVX2 implementations. Compiled unconditionally on x86_64 (the
+// `target_feature` attribute scopes the instruction set to these
+// functions); selected at runtime only after `avx2_available()`.
+// ----------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Stride-8 FMA dot with the shared fixed lane-combine order.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_fma(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let nv = n - n % 8;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nv {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(ap.add(i)), _mm256_loadu_pd(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(ap.add(i + 4)),
+                _mm256_loadu_pd(bp.add(i + 4)),
+                acc1,
+            );
+            i += 8;
+        }
+        let mut sum = if nv > 0 {
+            let mut l = [0.0f64; 8];
+            _mm256_storeu_pd(l.as_mut_ptr(), acc0);
+            _mm256_storeu_pd(l.as_mut_ptr().add(4), acc1);
+            // acc0 holds lanes 0..4 (elements i, i+1, i+2, i+3), acc1
+            // lanes 4..8 — the F64x8::hsum pairing.
+            ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+        } else {
+            0.0
+        };
+        for (x, y) in a[nv..].iter().zip(&b[nv..]) {
+            sum += x * y;
+        }
+        sum
+    }
+
+    /// `y += alpha · x`, mul + add (bitwise-scalar element-wise
+    /// contract — no FMA).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let nv = n - n % 4;
+        let av = _mm256_set1_pd(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i < nv {
+            let prod = _mm256_mul_pd(av, _mm256_loadu_pd(xp.add(i)));
+            _mm256_storeu_pd(yp.add(i), _mm256_add_pd(_mm256_loadu_pd(yp.add(i)), prod));
+            i += 4;
+        }
+        for (yi, xi) in y[nv..].iter_mut().zip(&x[nv..]) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// `y += x`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn vadd(x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let nv = n - n % 4;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i < nv {
+            let sum = _mm256_add_pd(_mm256_loadu_pd(yp.add(i)), _mm256_loadu_pd(xp.add(i)));
+            _mm256_storeu_pd(yp.add(i), sum);
+            i += 4;
+        }
+        for (yi, xi) in y[nv..].iter_mut().zip(&x[nv..]) {
+            *yi += xi;
+        }
+    }
+
+    /// `y = x + beta · y`, mul + add (no FMA).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let nv = n - n % 4;
+        let bv = _mm256_set1_pd(beta);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i < nv {
+            let prod = _mm256_mul_pd(bv, _mm256_loadu_pd(yp.add(i)));
+            _mm256_storeu_pd(yp.add(i), _mm256_add_pd(_mm256_loadu_pd(xp.add(i)), prod));
+            i += 4;
+        }
+        for (yi, xi) in y[nv..].iter_mut().zip(&x[nv..]) {
+            *yi = xi + beta * *yi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-12 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    // NOTE: `with_override` is exercised in `tests/simd_kernels.rs`,
+    // never here — the lib test binary runs level-sensitive
+    // determinism tests concurrently, and a transient process-global
+    // override would race them.
+    #[test]
+    fn detection_is_stable() {
+        let l1 = active();
+        let l2 = active();
+        assert_eq!(l1, l2, "active level must be stable across calls");
+        if l1 == Level::Avx2 {
+            assert!(avx2_available(), "Avx2 must only be detected where it can run");
+        }
+    }
+
+    #[test]
+    fn lane_hsum_orders_are_pairwise() {
+        let v4 = F64x4([1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(v4.hsum(), (1.0 + 2.0) + (4.0 + 8.0));
+        let v8 = F64x8([1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0]);
+        assert_eq!(v8.hsum(), ((1.0 + 2.0) + (4.0 + 8.0)) + ((16.0 + 32.0) + (64.0 + 128.0)));
+    }
+
+    #[test]
+    fn dot_variants_agree_to_roundoff() {
+        let mut rng = Rng::seed_from(0x51d0);
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 63, 64, 1000, 4097] {
+            let a = rng.normal_vec(n.max(1));
+            let b = rng.normal_vec(n.max(1));
+            let a = &a[..n];
+            let b = &b[..n];
+            let s = dot_scalar(a, b);
+            let p = dot_portable(a, b);
+            assert!(close(s, p), "portable dot at n={n}: {p} vs {s}");
+            assert_eq!(p, dot_portable(a, b), "portable dot must be deterministic");
+            if avx2_available() {
+                let v = dot_avx2(a, b);
+                assert!(close(s, v), "avx2 dot at n={n}: {v} vs {s}");
+                assert_eq!(v, dot_avx2(a, b), "avx2 dot must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_variants_bitwise_equal() {
+        let mut rng = Rng::seed_from(0x51d1);
+        for n in [0usize, 1, 5, 8, 33, 1000] {
+            let x = rng.normal_vec(n.max(1));
+            let x = &x[..n];
+            let y0 = rng.normal_vec(n.max(1))[..n].to_vec();
+            for lvl in testable_levels() {
+                let mut ys = y0.clone();
+                axpy_scalar(0.37, x, &mut ys);
+                let mut yl = y0.clone();
+                axpy(lvl, 0.37, x, &mut yl);
+                assert_eq!(ys, yl, "axpy {lvl:?} n={n}");
+                let mut ys = y0.clone();
+                xpby_scalar(x, -1.25, &mut ys);
+                let mut yl = y0.clone();
+                xpby(lvl, x, -1.25, &mut yl);
+                assert_eq!(ys, yl, "xpby {lvl:?} n={n}");
+                let mut ys = y0.clone();
+                vadd_scalar(x, &mut ys);
+                let mut yl = y0.clone();
+                vadd(lvl, x, &mut yl);
+                assert_eq!(ys, yl, "vadd {lvl:?} n={n}");
+            }
+        }
+    }
+
+    /// Wrapped tap rows (the geometry's `(s + t) mod n` layout) and a
+    /// defensive non-contiguous row.
+    #[test]
+    fn tap_row_kernels_split_at_the_wrap() {
+        let mut rng = Rng::seed_from(0x51d2);
+        let n_grid = 64usize;
+        let grid0 = rng.normal_vec(n_grid);
+        for fp in [1usize, 5, 9, 15] {
+            for s in [0usize, 3, n_grid - 2, n_grid - fp.min(n_grid)] {
+                let offs: Vec<u32> = (0..fp).map(|t| ((s + t) % n_grid) as u32).collect();
+                let vals = rng.normal_vec(fp);
+                let want = gather_dot_scalar(&offs, &vals, &grid0);
+                for lvl in testable_levels() {
+                    let got = gather_dot(lvl, &offs, &vals, &grid0);
+                    assert!(close(want, got), "gather {lvl:?} fp={fp} s={s}: {got} vs {want}");
+                    assert_eq!(got, gather_dot(lvl, &offs, &vals, &grid0), "gather repeatable");
+                    let mut g_ref = grid0.clone();
+                    scatter_add_scalar(&offs, &vals, 0.7, &mut g_ref);
+                    let mut g_new = grid0.clone();
+                    scatter_add(lvl, &offs, &vals, 0.7, &mut g_new);
+                    assert_eq!(g_ref, g_new, "scatter {lvl:?} fp={fp} s={s} must be bitwise");
+                }
+            }
+        }
+        // Non-contiguous offsets (stride 2): every level must take the
+        // scalar fallback and agree bitwise.
+        let offs: Vec<u32> = (0..9u32).map(|t| 2 * t).collect();
+        let vals = rng.normal_vec(9);
+        let want = gather_dot_scalar(&offs, &vals, &grid0);
+        for lvl in testable_levels() {
+            assert_eq!(want, gather_dot(lvl, &offs, &vals, &grid0), "fallback {lvl:?}");
+        }
+    }
+}

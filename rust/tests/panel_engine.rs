@@ -1,7 +1,8 @@
 //! Panel-engine invariant suite: the fused multi-vector kernels under
 //! the Krylov stack must (a) reproduce the retained seed scalar loops
 //! bit for bit wherever the arithmetic order is preserved (element-wise
-//! kernels at every size, reductions within one row block), (b) agree
+//! kernels at every size and SIMD level, reductions within one row
+//! block at the scalar dispatch level), (b) agree
 //! with them to roundoff beyond that, (c) be bitwise run-to-run
 //! deterministic for ANY thread count (the row-block boundaries and the
 //! fixed-order reduction tree are pure functions of the input shape),
@@ -16,6 +17,7 @@ use nfft_krylov::linalg::panel::{pdot, pnorm2, ROW_BLOCK};
 use nfft_krylov::linalg::Panel;
 use nfft_krylov::prop_assert;
 use nfft_krylov::util::proptest;
+use nfft_krylov::util::simd;
 
 fn random_panel(rng: &mut Rng, n: usize, j: usize) -> Panel {
     let chunk = 1 + rng.below(8);
@@ -42,7 +44,21 @@ fn kernels_bitwise_equal_to_scalar_references() {
             let mut c_new = vec![0.0; j];
             p.gram_tv_reference(&w0, &mut c_ref);
             p.gram_tv(&w0, &mut c_new);
-            prop_assert!(c_ref == c_new, "gram differs at n={n_small} j={j}");
+            // Reductions are bitwise-seed only at the scalar SIMD
+            // level; wider lanes re-associate within the block.
+            if simd::active() == simd::Level::Scalar {
+                prop_assert!(c_ref == c_new, "gram differs at n={n_small} j={j}");
+            } else {
+                for (a, b) in c_new.iter().zip(&c_ref) {
+                    prop_assert!(
+                        (a - b).abs() < 1e-10 * (1.0 + b.abs()),
+                        "gram diverged at n={n_small} j={j}: {a} vs {b}"
+                    );
+                }
+                let mut c_again = vec![0.0; j];
+                p.gram_tv(&w0, &mut c_again);
+                prop_assert!(c_new == c_again, "gram not deterministic at a fixed level");
+            }
             let n_large = ROW_BLOCK + 1 + rng.below(3 * ROW_BLOCK);
             let p = random_panel(rng, n_large, j);
             let c = rng.normal_vec(j);
@@ -326,8 +342,17 @@ fn cg_agrees_with_seed_scalar_path() {
     let b = rng.normal_vec(n_small);
     let got = cg_solve(&op, &b, &CgOptions { tol: 1e-11, ..Default::default() });
     let (want, want_iters) = seed_cg(&op, &b, 1e-11, 1000);
-    assert_eq!(got.x, want, "panel CG must be bit-for-bit the seed path within one row block");
-    assert_eq!(got.iterations, want_iters);
+    if simd::active() == simd::Level::Scalar {
+        assert_eq!(got.x, want, "panel CG must be bit-for-bit the seed path within one row block");
+        assert_eq!(got.iterations, want_iters);
+    } else {
+        // SIMD reductions perturb the iterates in the last bits (and
+        // may shift convergence by an iteration) — both solves still
+        // land within the tolerance of the same solution.
+        for (a, w) in got.x.iter().zip(&want) {
+            assert!((a - w).abs() <= 1e-9 * (1.0 + w.abs()), "panel vs seed CG: {a} vs {w}");
+        }
+    }
     // Beyond one row block the blocked reductions reorder the sums —
     // the acceptance bar is agreement to ≤ 1e-12.
     let n_large = 3 * ROW_BLOCK + 11;

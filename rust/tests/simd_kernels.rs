@@ -1,0 +1,431 @@
+//! SIMD substrate equivalence suite (see `docs/DETERMINISM.md`):
+//! every dispatched kernel family — tap-row spread/gather, FFT
+//! butterflies/untangle, panel gram/update — is exercised at every
+//! dispatch level the host can run ([`simd::testable_levels`]) and
+//! held to the two-class contract:
+//!
+//! * **element-wise** kernels (axpy/xpby/vadd, scatter rows, FFT
+//!   butterflies and r2c/c2r untangle) are **bitwise identical** to
+//!   the scalar oracle at every level;
+//! * **reductions** (dot, gather rows, panel Gram, pdot) are bitwise
+//!   reproducible per level (including across rayon thread counts
+//!   {1, 4}) and agree with the scalar oracle to ≤ 1e-12 relative.
+//!
+//! This is the ONLY test binary that calls [`simd::with_override`]:
+//! the override is process-global, so every level-sensitive test here
+//! routes through it and the internal lock serialises them. Sizes
+//! straddle the lane widths (4/8), [`ROW_BLOCK`] (2048) and the
+//! parallel threshold (1 << 14).
+
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::fft::{Complex, FftPlan, RealFftPlan};
+use nfft_krylov::linalg::panel::{dots_packed_into, paxpy, pdot, xpby, Panel, ROW_BLOCK};
+use nfft_krylov::nfft::{NfftPlan, SpreadLayout, WindowKind};
+use nfft_krylov::prop_assert;
+use nfft_krylov::util::proptest;
+use nfft_krylov::util::simd::{self, Level};
+
+const PAR_THRESHOLD: usize = 1 << 14;
+
+fn close(a: f64, b: f64, scale: f64) -> bool {
+    (a - b).abs() <= 1e-12 * (scale + a.abs().max(b.abs()))
+}
+
+#[test]
+fn override_is_honored_and_restored() {
+    let detected = simd::active();
+    for lvl in simd::testable_levels() {
+        let inside = simd::with_override(Some(lvl), simd::active);
+        assert_eq!(inside, lvl, "override to {lvl:?} not honored");
+    }
+    assert_eq!(simd::active(), detected, "override must restore the detected level");
+}
+
+// ----------------------------------------------------------------------
+// Raw kernels.
+// ----------------------------------------------------------------------
+
+#[test]
+fn dot_levels_agree_to_roundoff_and_are_deterministic() {
+    proptest::check(
+        proptest::Config { cases: 16, seed: 0x51b01 },
+        "dot across levels (≤1e-12, per-level bitwise-repeatable)",
+        |rng| {
+            // Straddle the 8-lane stride, ROW_BLOCK and the tails.
+            let sizes = [1, 7, 8, 9, 63, 64, 65, 1000, ROW_BLOCK - 1, ROW_BLOCK + 5];
+            let n = sizes[rng.below(sizes.len())];
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let want = simd::with_override(Some(Level::Scalar), || simd::dot(simd::active(), &a, &b));
+            let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            for lvl in simd::testable_levels() {
+                let (d1, d2) = simd::with_override(Some(lvl), || {
+                    let l = simd::active();
+                    (simd::dot(l, &a, &b), simd::dot(l, &a, &b))
+                });
+                prop_assert!(close(want, d1, scale), "dot {lvl:?} n={n}: {d1} vs {want}");
+                prop_assert!(d1 == d2, "dot {lvl:?} n={n} not repeatable");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn elementwise_kernels_bitwise_across_levels() {
+    proptest::check(
+        proptest::Config { cases: 16, seed: 0x51b02 },
+        "axpy/xpby/vadd bitwise ≡ scalar at every level",
+        |rng| {
+            let sizes = [1, 3, 4, 5, 16, 100, 1023];
+            let n = sizes[rng.below(sizes.len())];
+            let x = rng.normal_vec(n);
+            let y0 = rng.normal_vec(n);
+            let alpha = rng.uniform_in(-2.0, 2.0);
+            for lvl in simd::testable_levels() {
+                let mut ys = y0.clone();
+                simd::axpy_scalar(alpha, &x, &mut ys);
+                let mut yl = y0.clone();
+                simd::with_override(Some(lvl), || simd::axpy(simd::active(), alpha, &x, &mut yl));
+                prop_assert!(ys == yl, "axpy {lvl:?} n={n}");
+                let mut ys = y0.clone();
+                simd::xpby_scalar(&x, alpha, &mut ys);
+                let mut yl = y0.clone();
+                simd::with_override(Some(lvl), || simd::xpby(simd::active(), &x, alpha, &mut yl));
+                prop_assert!(ys == yl, "xpby {lvl:?} n={n}");
+                let mut ys = y0.clone();
+                simd::vadd_scalar(&x, &mut ys);
+                let mut yl = y0.clone();
+                simd::with_override(Some(lvl), || simd::vadd(simd::active(), &x, &mut yl));
+                prop_assert!(ys == yl, "vadd {lvl:?} n={n}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tap_row_kernels_across_levels_under_random_wraps() {
+    proptest::check(
+        proptest::Config { cases: 24, seed: 0x51b03 },
+        "gather_dot/scatter_add on (s+t) mod n rows across levels",
+        |rng| {
+            let n_grid = 16 + rng.below(96);
+            let fp = 1 + rng.below(15.min(n_grid - 1));
+            let s = rng.below(n_grid);
+            let offs: Vec<u32> = (0..fp).map(|t| ((s + t) % n_grid) as u32).collect();
+            let vals = rng.normal_vec(fp);
+            let grid0 = rng.normal_vec(n_grid);
+            let want = simd::gather_dot_scalar(&offs, &vals, &grid0);
+            let scale: f64 = vals.iter().map(|v| v.abs()).sum();
+            for lvl in simd::testable_levels() {
+                let (g1, g2) = simd::with_override(Some(lvl), || {
+                    let l = simd::active();
+                    (
+                        simd::gather_dot(l, &offs, &vals, &grid0),
+                        simd::gather_dot(l, &offs, &vals, &grid0),
+                    )
+                });
+                prop_assert!(close(want, g1, scale), "gather {lvl:?}: {g1} vs {want}");
+                prop_assert!(g1 == g2, "gather {lvl:?} not repeatable");
+                let mut g_ref = grid0.clone();
+                simd::scatter_add_scalar(&offs, &vals, 0.7, &mut g_ref);
+                let mut g_new = grid0.clone();
+                simd::with_override(Some(lvl), || {
+                    simd::scatter_add(simd::active(), &offs, &vals, 0.7, &mut g_new)
+                });
+                prop_assert!(g_ref == g_new, "scatter {lvl:?} must be bitwise");
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------------------------
+// Family 1: NFFT spread/gather.
+// ----------------------------------------------------------------------
+
+fn random_nfft_case(rng: &mut Rng) -> (NfftPlan, Vec<f64>, Vec<f64>, usize) {
+    let d = 1 + rng.below(3);
+    let bands: [usize; 3] = [8, 16, 32];
+    let band: Vec<usize> = (0..d).map(|_| bands[rng.below(3)]).collect();
+    let m = 2 + rng.below(3);
+    let plan = NfftPlan::new(&band, m, WindowKind::KaiserBessel);
+    let n = 5 + rng.below(120);
+    let points: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.5, 0.4999)).collect();
+    let x = rng.normal_vec(n);
+    (plan, points, x, n)
+}
+
+#[test]
+fn nfft_spread_bitwise_and_gather_to_roundoff_across_levels() {
+    proptest::check(
+        proptest::Config { cases: 12, seed: 0x51b04 },
+        "spread grids bitwise across levels; gather ≤1e-12 + repeatable",
+        |rng| {
+            let (plan, points, x, n) = random_nfft_case(rng);
+            let geo = plan.build_geometry(&points);
+            let (g_scalar, o_scalar) = simd::with_override(Some(Level::Scalar), || {
+                let mut g = plan.alloc_real_grid();
+                plan.spread_real_with_geometry(&geo, &x, &mut g);
+                let mut o = vec![0.0; n];
+                plan.gather_real_grid(&geo, &g, &mut o);
+                (g, o)
+            });
+            let oscale = o_scalar.iter().fold(0.0f64, |a, v| a.max(v.abs())).max(1e-300);
+            for lvl in simd::testable_levels() {
+                let (g, o1, o2) = simd::with_override(Some(lvl), || {
+                    let mut g = plan.alloc_real_grid();
+                    plan.spread_real_with_geometry(&geo, &x, &mut g);
+                    let mut o1 = vec![0.0; n];
+                    plan.gather_real_grid(&geo, &g, &mut o1);
+                    let mut o2 = vec![0.0; n];
+                    plan.gather_real_grid(&geo, &g, &mut o2);
+                    (g, o1, o2)
+                });
+                prop_assert!(g == g_scalar, "spread grid must be bitwise at {lvl:?}");
+                for (a, b) in o1.iter().zip(&o_scalar) {
+                    prop_assert!(
+                        (a - b).abs() < 1e-12 * oscale,
+                        "gather diverged at {lvl:?}: {a} vs {b}"
+                    );
+                }
+                prop_assert!(o1 == o2, "gather not repeatable at {lvl:?}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn nfft_tiled_spread_thread_count_invariant_per_level() {
+    // Owner-computes tiling is thread-count invariant; that must
+    // survive every dispatch level (the rim merges and inner rows are
+    // element-wise SIMD).
+    let mut rng = Rng::seed_from(0x51b05);
+    let plan = NfftPlan::new(&[32, 32], 3, WindowKind::KaiserBessel);
+    let n = 600;
+    let points: Vec<f64> = (0..n * 2).map(|_| rng.uniform_in(-0.5, 0.4999)).collect();
+    let x = rng.normal_vec(n);
+    let geo = plan.build_geometry_with(&points, SpreadLayout::Tiled);
+    for lvl in simd::testable_levels() {
+        let run = |threads: usize| {
+            let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            simd::with_override(Some(lvl), || {
+                pool.install(|| {
+                    let mut g = plan.alloc_real_grid();
+                    plan.spread_real_with_geometry(&geo, &x, &mut g);
+                    let mut o = vec![0.0; n];
+                    plan.gather_real_grid(&geo, &g, &mut o);
+                    (g, o)
+                })
+            })
+        };
+        let (g1, o1) = run(1);
+        let (g4, o4) = run(4);
+        assert_eq!(g1, g4, "tiled spread depends on thread count at {lvl:?}");
+        assert_eq!(o1, o4, "gather depends on thread count at {lvl:?}");
+    }
+}
+
+// ----------------------------------------------------------------------
+// Family 2: FFT butterflies and r2c/c2r untangle. The AVX2 paths are
+// built from bitwise-exact complex multiplies (one rounding per
+// partial product, adds in scalar order), so the whole transform is
+// pinned BITWISE against the scalar level at every length: radix-4
+// chains, the lone radix-2 stage (odd log2 n), Bluestein lengths and
+// the untangle head/tail boundaries.
+// ----------------------------------------------------------------------
+
+#[test]
+fn complex_fft_bitwise_across_levels() {
+    let mut rng = Rng::seed_from(0x51b06);
+    for n in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512, 12, 17, 24, 100] {
+        let x0: Vec<Complex> =
+            (0..n).map(|_| Complex::new(rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0))).collect();
+        let plan = FftPlan::new(n);
+        let want = simd::with_override(Some(Level::Scalar), || {
+            let mut x = x0.clone();
+            plan.forward(&mut x);
+            let mut y = x.clone();
+            plan.backward_unnormalized(&mut y);
+            (x, y)
+        });
+        for lvl in simd::testable_levels() {
+            let got = simd::with_override(Some(lvl), || {
+                let mut x = x0.clone();
+                plan.forward(&mut x);
+                let mut y = x.clone();
+                plan.backward_unnormalized(&mut y);
+                (x, y)
+            });
+            assert_eq!(got.0, want.0, "forward fft n={n} not bitwise at {lvl:?}");
+            assert_eq!(got.1, want.1, "backward fft n={n} not bitwise at {lvl:?}");
+        }
+    }
+}
+
+#[test]
+fn real_fft_bitwise_across_levels() {
+    let mut rng = Rng::seed_from(0x51b07);
+    for n in [2usize, 4, 8, 12, 16, 20, 32, 64, 100, 256] {
+        let src = rng.normal_vec(n);
+        let plan = RealFftPlan::new(n);
+        let want = simd::with_override(Some(Level::Scalar), || {
+            let mut spec = vec![Complex::ZERO; plan.half_len()];
+            plan.forward(&src, &mut spec);
+            let mut back = vec![0.0; n];
+            let mut s2 = spec.clone();
+            plan.backward_unnormalized(&mut s2, &mut back);
+            (spec, back)
+        });
+        for lvl in simd::testable_levels() {
+            let got = simd::with_override(Some(lvl), || {
+                let mut spec = vec![Complex::ZERO; plan.half_len()];
+                plan.forward(&src, &mut spec);
+                let mut back = vec![0.0; n];
+                let mut s2 = spec.clone();
+                plan.backward_unnormalized(&mut s2, &mut back);
+                (spec, back)
+            });
+            assert_eq!(got.0, want.0, "r2c n={n} not bitwise at {lvl:?}");
+            assert_eq!(got.1, want.1, "c2r n={n} not bitwise at {lvl:?}");
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Family 3: panel gram/update and the free CG/MINRES kernels.
+// ----------------------------------------------------------------------
+
+#[test]
+fn panel_kernels_across_levels_straddling_row_block() {
+    proptest::check(
+        proptest::Config { cases: 6, seed: 0x51b08 },
+        "panel gram ≤1e-12 + repeatable; update/mul bitwise, across levels",
+        |rng| {
+            // Straddle ROW_BLOCK (2048) and PAR_THRESHOLD (16384).
+            let sizes = [100, ROW_BLOCK - 1, ROW_BLOCK + 9, 3 * ROW_BLOCK, PAR_THRESHOLD + 70];
+            let n = sizes[rng.below(sizes.len())];
+            let j = 2 + rng.below(6);
+            let mut p = Panel::new(n, 1 + rng.below(4));
+            for _ in 0..j {
+                p.push_col(&rng.normal_vec(n));
+            }
+            let w0 = rng.normal_vec(n);
+            let c = rng.normal_vec(j);
+            let (c_scalar, w_scalar, m_scalar) = simd::with_override(Some(Level::Scalar), || {
+                let mut cs = vec![0.0; j];
+                p.gram_tv(&w0, &mut cs);
+                let mut ws = w0.clone();
+                p.update(&c, &mut ws);
+                let mut ms = vec![0.0; n];
+                p.mul(&c, &mut ms);
+                (cs, ws, ms)
+            });
+            for lvl in simd::testable_levels() {
+                let (c1, c2, w1, m1) = simd::with_override(Some(lvl), || {
+                    let mut c1 = vec![0.0; j];
+                    p.gram_tv(&w0, &mut c1);
+                    let mut c2 = vec![0.0; j];
+                    p.gram_tv(&w0, &mut c2);
+                    let mut w1 = w0.clone();
+                    p.update(&c, &mut w1);
+                    let mut m1 = vec![0.0; n];
+                    p.mul(&c, &mut m1);
+                    (c1, c2, w1, m1)
+                });
+                for (a, b) in c1.iter().zip(&c_scalar) {
+                    prop_assert!(
+                        (a - b).abs() < 1e-10 * (1.0 + b.abs()),
+                        "gram n={n} {lvl:?}: {a} vs {b}"
+                    );
+                }
+                prop_assert!(c1 == c2, "gram not repeatable at {lvl:?}");
+                prop_assert!(w1 == w_scalar, "update must be bitwise at {lvl:?} (n={n})");
+                prop_assert!(m1 == m_scalar, "mul must be bitwise at {lvl:?} (n={n})");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn free_kernels_across_levels_straddling_par_threshold() {
+    proptest::check(
+        proptest::Config { cases: 6, seed: 0x51b09 },
+        "pdot/dots_packed ≤1e-12 + repeatable; paxpy/xpby bitwise, across levels",
+        |rng| {
+            let sizes = [ROW_BLOCK, ROW_BLOCK + 1, PAR_THRESHOLD - 1, PAR_THRESHOLD + 33];
+            let n = sizes[rng.below(sizes.len())];
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let (d_scalar, ax_scalar, xb_scalar) = simd::with_override(Some(Level::Scalar), || {
+                let d = pdot(&a, &b);
+                let mut y = b.clone();
+                paxpy(0.37, &a, &mut y);
+                let mut z = b.clone();
+                xpby(&a, -0.8, &mut z);
+                (d, y, z)
+            });
+            for lvl in simd::testable_levels() {
+                let (d1, d2, y1, z1, packed) = simd::with_override(Some(lvl), || {
+                    let d1 = pdot(&a, &b);
+                    let d2 = pdot(&a, &b);
+                    let mut y1 = b.clone();
+                    paxpy(0.37, &a, &mut y1);
+                    let mut z1 = b.clone();
+                    xpby(&a, -0.8, &mut z1);
+                    let mut packed = vec![0.0; 1];
+                    dots_packed_into(&a, &b, n, &mut packed);
+                    (d1, d2, y1, z1, packed)
+                });
+                prop_assert!(
+                    (d1 - d_scalar).abs() < 1e-10 * (1.0 + d_scalar.abs()),
+                    "pdot n={n} {lvl:?}: {d1} vs {d_scalar}"
+                );
+                prop_assert!(d1 == d2, "pdot not repeatable at {lvl:?}");
+                prop_assert!(packed[0] == d1, "dots_packed must match pdot at {lvl:?}");
+                prop_assert!(y1 == ax_scalar, "paxpy must be bitwise at {lvl:?} (n={n})");
+                prop_assert!(z1 == xb_scalar, "xpby must be bitwise at {lvl:?} (n={n})");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn panel_reductions_thread_count_invariant_per_level() {
+    let mut rng = Rng::seed_from(0x51b0a);
+    let n = 3 * ROW_BLOCK + 257;
+    let j = 9;
+    let mut p = Panel::new(n, 4);
+    for _ in 0..j {
+        p.push_col(&rng.normal_vec(n));
+    }
+    let w = rng.normal_vec(n);
+    let ws = rng.normal_vec(n * 2);
+    for lvl in simd::testable_levels() {
+        let run = |threads: usize| {
+            let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            simd::with_override(Some(lvl), || {
+                pool.install(|| {
+                    let mut c = vec![0.0; j];
+                    p.gram_tv(&w, &mut c);
+                    let mut cb = vec![0.0; 2 * j];
+                    p.gram_block(&ws, &mut cb);
+                    let d = pdot(&w, &ws[..n]);
+                    let mut u = w.clone();
+                    p.update(&c, &mut u);
+                    (c, cb, d, u)
+                })
+            })
+        };
+        let (c1, cb1, d1, u1) = run(1);
+        let (c4, cb4, d4, u4) = run(4);
+        assert_eq!(c1, c4, "gram_tv depends on thread count at {lvl:?}");
+        assert_eq!(cb1, cb4, "gram_block depends on thread count at {lvl:?}");
+        assert_eq!(d1, d4, "pdot depends on thread count at {lvl:?}");
+        assert_eq!(u1, u4, "update depends on thread count at {lvl:?}");
+    }
+}

@@ -14,6 +14,7 @@ use nfft_krylov::prop_assert;
 use nfft_krylov::shard::{ShardSpec, ShardedOperator, SubgridPolicy};
 use nfft_krylov::util::pool::BufferPool;
 use nfft_krylov::util::proptest;
+use nfft_krylov::util::simd;
 
 /// Random plan shape + cloud + vector for one proptest case. Points
 /// cover the full torus (boundary wraps included).
@@ -46,7 +47,21 @@ fn flat_offset_engine_bit_identical_to_seed_oracle() {
             let mut o_new = vec![0.0; n];
             plan.gather_real_grid_reference(&geo, &g_ref, &mut o_ref);
             plan.gather_real_grid(&geo, &g_new, &mut o_new);
-            prop_assert!(o_ref == o_new, "gather outputs differ");
+            // The gather inner rows are SIMD reductions: bitwise equal
+            // to the seed oracle only at the scalar dispatch level;
+            // wider lanes re-associate the tap sums, so they are
+            // pinned to roundoff + run-to-run determinism instead.
+            if simd::active() == simd::Level::Scalar {
+                prop_assert!(o_ref == o_new, "gather outputs differ");
+            } else {
+                let scale = o_ref.iter().fold(0.0f64, |a, v| a.max(v.abs())).max(1e-300);
+                for (a, b) in o_new.iter().zip(&o_ref) {
+                    prop_assert!((a - b).abs() < 1e-12 * scale, "gather diverged: {a} vs {b}");
+                }
+                let mut o_again = vec![0.0; n];
+                plan.gather_real_grid(&geo, &g_new, &mut o_again);
+                prop_assert!(o_new == o_again, "gather not deterministic at a fixed level");
+            }
             Ok(())
         },
     );

@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Gate the paired scalar-vs-simd bench rows.
+
+Every `BENCH_*.json` stage row carries paired timings for the same
+kernel at the forced-scalar dispatch level and at the detected default
+(`<stem>_scalar_min_s` / `<stem>_simd_min_s`, emitted by
+`cargo bench --bench matvec_micro`; see docs/DETERMINISM.md). The SIMD
+substrate must never make a kernel meaningfully slower than its scalar
+oracle, so this script fails when any SIMD timing exceeds
+`threshold × scalar` (default 1.10 — a 10% regression budget that
+absorbs timer noise on shared CI runners).
+
+A pair is gated only when BOTH fields are present: unpaired
+`*_scalar_min_s` fields (e.g. the seed-loop baseline `seed_scalar_min_s`
+in BENCH_krylov.json) are baselines for other comparisons and are
+skipped.
+
+If `benchmarks/baseline/BENCH_<stage>.json` files are committed, each
+current `*_simd_min_s` is additionally compared against the committed
+baseline's matching row (keyed by every non-timing field) under a
+looser threshold (default 1.5x, cross-machine noise); missing baselines
+are fine.
+
+Usage:
+    python3 scripts/check_bench_regression.py [--threshold 1.10]
+        [--baseline-threshold 1.5] [--dir rust] [FILES...]
+
+With no FILES, checks every BENCH_*.json in --dir. No third-party
+dependencies.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+SCALAR_SUFFIX = "_scalar_min_s"
+SIMD_SUFFIX = "_simd_min_s"
+# Timings below this are dominated by timer granularity; skip them.
+MIN_MEANINGFUL_S = 1e-5
+
+
+def row_pairs(row):
+    """Yield (stem, scalar_s, simd_s) for every complete pair in a row."""
+    for key, val in row.items():
+        if not key.endswith(SCALAR_SUFFIX):
+            continue
+        stem = key[: -len(SCALAR_SUFFIX)]
+        simd_key = stem + SIMD_SUFFIX
+        if simd_key not in row:
+            continue  # unpaired baseline field, not a simd pair
+        yield stem, float(val), float(row[simd_key])
+
+
+def row_identity(row):
+    """Hashable identity of a row: every non-timing scalar field."""
+    ident = []
+    for key in sorted(row):
+        if key.endswith("_min_s") or key.endswith("_s"):
+            continue
+        val = row[key]
+        if isinstance(val, (dict, list)):
+            val = json.dumps(val, sort_keys=True)
+        ident.append((key, val))
+    return tuple(ident)
+
+
+def check_file(path, threshold, baseline_threshold, baseline_dir):
+    failures = []
+    checked = 0
+    with open(path) as fh:
+        doc = json.load(fh)
+    rows = doc.get("results", [])
+
+    baseline_rows = {}
+    bpath = os.path.join(baseline_dir, os.path.basename(path))
+    if os.path.isfile(bpath):
+        with open(bpath) as fh:
+            bdoc = json.load(fh)
+        for brow in bdoc.get("results", []):
+            baseline_rows[row_identity(brow)] = brow
+
+    for row in rows:
+        for stem, scalar_s, simd_s in row_pairs(row):
+            if scalar_s < MIN_MEANINGFUL_S:
+                continue
+            checked += 1
+            ratio = simd_s / scalar_s
+            if ratio > threshold:
+                failures.append(
+                    f"{path}: {stem} simd {simd_s:.6f}s vs scalar "
+                    f"{scalar_s:.6f}s ({ratio:.2f}x > {threshold:.2f}x)"
+                )
+        brow = baseline_rows.get(row_identity(row))
+        if brow is None:
+            continue
+        for stem, _scalar_s, simd_s in row_pairs(row):
+            bkey = stem + SIMD_SUFFIX
+            if bkey not in brow:
+                continue
+            base_s = float(brow[bkey])
+            if base_s < MIN_MEANINGFUL_S:
+                continue
+            checked += 1
+            ratio = simd_s / base_s
+            if ratio > baseline_threshold:
+                failures.append(
+                    f"{path}: {stem} simd {simd_s:.6f}s vs committed baseline "
+                    f"{base_s:.6f}s ({ratio:.2f}x > {baseline_threshold:.2f}x)"
+                )
+    return checked, failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", help="BENCH_*.json files (default: --dir glob)")
+    ap.add_argument("--threshold", type=float, default=1.10,
+                    help="max allowed simd/scalar ratio (default 1.10)")
+    ap.add_argument("--baseline-threshold", type=float, default=1.5,
+                    help="max allowed ratio vs committed baseline (default 1.5)")
+    ap.add_argument("--dir", default="rust", help="directory holding BENCH_*.json")
+    ap.add_argument("--baseline-dir", default="benchmarks/baseline",
+                    help="directory with committed baseline BENCH_*.json (optional)")
+    args = ap.parse_args()
+
+    files = args.files or sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+    if not files:
+        print(f"check_bench_regression: no BENCH_*.json found in {args.dir!r}", file=sys.stderr)
+        return 1
+
+    total = 0
+    failures = []
+    for path in files:
+        checked, fails = check_file(path, args.threshold, args.baseline_threshold,
+                                    args.baseline_dir)
+        total += checked
+        failures.extend(fails)
+
+    if failures:
+        print("bench regression gate FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"bench regression gate passed ({total} paired timings across {len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
