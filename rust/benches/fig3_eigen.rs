@@ -7,7 +7,7 @@ use nfft_krylov::bench_harness::harness::BenchArgs;
 fn main() {
     let args = BenchArgs::from_env();
     let mut cfg = if args.full { fig3::Fig3Config::full() } else { fig3::Fig3Config::default_ci() };
-    if let Some(sizes) = args.sizes {
+    if let Some(sizes) = args.sizes.clone() {
         cfg.sizes = sizes;
     }
     if let Some(r) = args.repeats {
@@ -20,4 +20,5 @@ fn main() {
     let results = fig3::run(&cfg);
     fig3::report(&results, "results").expect("report");
     println!("\nCSV series written to results/fig3*.csv and results/fig2a_spiral.csv");
+    args.finish_trace();
 }

@@ -9,4 +9,5 @@ fn main() {
     std::fs::create_dir_all("results").ok();
     let r = fig4::run(args.full, args.seed);
     fig4::report(&r, "results").expect("report");
+    args.finish_trace();
 }

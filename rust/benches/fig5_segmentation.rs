@@ -10,4 +10,5 @@ fn main() {
     std::fs::create_dir_all("results").ok();
     let r = fig5::run(args.full, runs, args.seed);
     fig5::report(&r, "results").expect("report");
+    args.finish_trace();
 }

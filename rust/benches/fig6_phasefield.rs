@@ -14,4 +14,5 @@ fn main() {
     std::fs::create_dir_all("results").ok();
     let r = fig6::run(&cfg);
     fig6::report(&r, "results").expect("report");
+    args.finish_trace();
 }

@@ -34,4 +34,5 @@ fn main() {
         let r = fig7::run(&cfg);
         fig7::report(&r, kernel, "results").expect("report");
     }
+    args.finish_trace();
 }

@@ -17,4 +17,5 @@ fn main() {
         let r = fig9::run(kernel, &cfg);
         fig9::report(&r, "results").expect("report");
     }
+    args.finish_trace();
 }

@@ -325,7 +325,7 @@ fn main() {
         Ok(()) => println!("wrote BENCH_fft.json"),
         Err(e) => eprintln!("could not write BENCH_fft.json: {e}"),
     }
-    let sizes = args.sizes.unwrap_or_else(|| vec![2000, 10000, 50000]);
+    let sizes = args.sizes.clone().unwrap_or_else(|| vec![2000, 10000, 50000]);
     let mut rows: Vec<Json> = Vec::new();
     let mut shard_rows: Vec<Json> = Vec::new();
     for &n in &sizes {
@@ -509,4 +509,44 @@ fn main() {
         Ok(()) => println!("wrote BENCH_shard.json"),
         Err(e) => eprintln!("could not write BENCH_shard.json: {e}"),
     }
+
+    coordinator_smoke(args.seed);
+    args.finish_trace();
+}
+
+/// Tiny coordinator run that exercises the service-layer telemetry:
+/// writes the Prometheus exposition (`PROM_coordinator.txt`) and the
+/// flight-recorder report (`COORD_report.json`) for the CI validator.
+fn coordinator_smoke(seed: u64) {
+    println!("== coordinator telemetry smoke ==");
+    let mut rng = Rng::seed_from(seed);
+    let ds = nfft_krylov::data::spiral::generate(
+        nfft_krylov::data::spiral::SpiralParams { per_class: 100, ..Default::default() },
+        &mut rng,
+    );
+    let op = std::sync::Arc::new(FastsumOperator::new(
+        &ds.points,
+        3,
+        Kernel::Gaussian { sigma: 3.5 },
+        FastsumParams::setup1(),
+    ));
+    let n = ds.n;
+    let mut coord = nfft_krylov::coordinator::Coordinator::new(op, 2);
+    let handles: Vec<_> = (0..6)
+        .map(|_| coord.submit(nfft_krylov::coordinator::Job::Matvec { x: rng.normal_vec(n) }))
+        .collect();
+    for h in handles {
+        let _ = h.wait();
+    }
+    let prom = coord.metrics().prometheus_text();
+    match std::fs::write("PROM_coordinator.txt", &prom) {
+        Ok(()) => println!("wrote PROM_coordinator.txt"),
+        Err(e) => eprintln!("could not write PROM_coordinator.txt: {e}"),
+    }
+    let report = coord.report().to_string();
+    match std::fs::write("COORD_report.json", &report) {
+        Ok(()) => println!("wrote COORD_report.json"),
+        Err(e) => eprintln!("could not write COORD_report.json: {e}"),
+    }
+    coord.shutdown();
 }

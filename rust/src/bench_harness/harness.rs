@@ -24,13 +24,15 @@ pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T
     s
 }
 
-/// Shared bench CLI: `cargo bench --bench X -- [--full] [--sizes a,b,c]`.
+/// Shared bench CLI:
+/// `cargo bench --bench X -- [--full] [--sizes a,b,c] [--trace-out FILE]`.
 #[derive(Debug, Clone)]
 pub struct BenchArgs {
     pub full: bool,
     pub sizes: Option<Vec<usize>>,
     pub seed: u64,
     pub repeats: Option<usize>,
+    pub trace_out: Option<String>,
 }
 
 impl BenchArgs {
@@ -40,6 +42,7 @@ impl BenchArgs {
         let mut sizes = None;
         let mut seed = 42;
         let mut repeats = None;
+        let mut trace_out = None;
         let mut it = args.iter().peekable();
         while let Some(a) = it.next() {
             match a.as_str() {
@@ -63,12 +66,35 @@ impl BenchArgs {
                         repeats = v.parse().ok();
                     }
                 }
+                "--trace-out" => {
+                    if let Some(v) = it.next() {
+                        trace_out = Some(v.clone());
+                    }
+                }
                 // `cargo bench` passes --bench; ignore unknown flags so
                 // harness filters don't break us.
                 _ => {}
             }
         }
-        BenchArgs { full, sizes, seed, repeats }
+        let out = BenchArgs { full, sizes, seed, repeats, trace_out };
+        // `--trace-out` (or NFFT_TRACE=1 in the environment) turns the
+        // span recorder on for the whole bench run.
+        if out.trace_out.is_some() {
+            crate::obs::set_enabled(true);
+        }
+        out
+    }
+
+    /// Drain recorded spans and write the Chrome trace-event file, if
+    /// `--trace-out` asked for one. Call once at bench-main exit.
+    pub fn finish_trace(&self) {
+        if let Some(path) = &self.trace_out {
+            let events = crate::obs::drain_events();
+            match crate::obs::write_trace(path, &events) {
+                Ok(()) => eprintln!("trace: wrote {} span(s) to {path}", events.len()),
+                Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+            }
+        }
     }
 }
 

@@ -49,6 +49,7 @@ impl MatvecBatcher {
         if self.pending.is_empty() {
             return;
         }
+        let _span = crate::obs::span_cat("batcher.flush", "coordinator");
         let n = self.op.dim();
         let k = self.pending.len();
         let mut xs = vec![0.0; n * k];

@@ -1,10 +1,15 @@
 //! Lightweight, lock-free-ish metrics for the coordinator: atomic
 //! counters plus a fixed-bucket latency histogram.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Log-spaced latency buckets in microseconds (upper bounds).
-const BUCKETS_US: [u64; 14] = [
+use crate::obs::PromText;
+use crate::util::json::Json;
+
+/// Log-spaced latency buckets in microseconds (upper bounds; the last
+/// bucket is the `+Inf` catch-all).
+pub const BUCKETS_US: [u64; 14] = [
     10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 10_000_000,
     100_000_000, u64::MAX,
 ];
@@ -79,6 +84,117 @@ impl Metrics {
         u64::MAX
     }
 
+    /// Per-bucket (non-cumulative) histogram counts, aligned with
+    /// [`BUCKETS_US`].
+    pub fn latency_bucket_counts(&self) -> [u64; 14] {
+        let mut out = [0u64; 14];
+        for (o, b) in out.iter_mut().zip(&self.latency_buckets) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Sum of all recorded latencies in microseconds.
+    pub fn latency_sum_us(&self) -> u64 {
+        self.latency_total_us.load(Ordering::Relaxed)
+    }
+
+    /// Structured snapshot of every counter and the histogram, for
+    /// machine consumers (`Coordinator::report`, bench artifacts).
+    pub fn metrics_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let num = |v: u64| Json::Num(v as f64);
+        o.insert("jobs_submitted".to_string(), num(self.jobs_submitted.load(Ordering::Relaxed)));
+        o.insert("jobs_completed".to_string(), num(self.jobs_completed.load(Ordering::Relaxed)));
+        o.insert("jobs_failed".to_string(), num(self.jobs_failed.load(Ordering::Relaxed)));
+        o.insert("matvecs".to_string(), num(self.matvecs.load(Ordering::Relaxed)));
+        o.insert("matvec_batches".to_string(), num(self.matvec_batches.load(Ordering::Relaxed)));
+        o.insert("batched_vectors".to_string(), num(self.batched_vectors.load(Ordering::Relaxed)));
+        o.insert("operator_state_bytes".to_string(), num(self.operator_state_bytes()));
+        let mut lat = BTreeMap::new();
+        lat.insert("count".to_string(), num(self.latency_count()));
+        lat.insert("sum_us".to_string(), num(self.latency_sum_us()));
+        lat.insert("mean_us".to_string(), Json::Num(self.mean_latency_us()));
+        lat.insert("p50_le_us".to_string(), num(self.latency_quantile_us(0.5)));
+        lat.insert("p99_le_us".to_string(), num(self.latency_quantile_us(0.99)));
+        lat.insert(
+            "buckets".to_string(),
+            Json::Arr(
+                BUCKETS_US
+                    .iter()
+                    .zip(self.latency_bucket_counts())
+                    .map(|(&le, count)| {
+                        let mut b = BTreeMap::new();
+                        // u64::MAX is the +Inf bucket; JSON has no Inf,
+                        // so encode it as null.
+                        let le_json =
+                            if le == u64::MAX { Json::Null } else { Json::Num(le as f64) };
+                        b.insert("le_us".to_string(), le_json);
+                        b.insert("count".to_string(), num(count));
+                        Json::Obj(b)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert("latency".to_string(), Json::Obj(lat));
+        Json::Obj(o)
+    }
+
+    /// Render every counter and the latency histogram in Prometheus
+    /// text-exposition format (seconds for the histogram, per
+    /// convention). `scripts/validate_telemetry.py` checks this shape
+    /// in CI.
+    pub fn prometheus_text(&self) -> String {
+        let bounds_secs: Vec<f64> = BUCKETS_US
+            .iter()
+            .map(|&us| if us == u64::MAX { f64::INFINITY } else { us as f64 / 1e6 })
+            .collect();
+        let mut p = PromText::new();
+        p.counter(
+            "nfft_jobs_submitted_total",
+            "Jobs submitted to the coordinator.",
+            self.jobs_submitted.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_jobs_completed_total",
+            "Jobs completed by the coordinator.",
+            self.jobs_completed.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_jobs_failed_total",
+            "Jobs that failed or did not converge.",
+            self.jobs_failed.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_matvecs_total",
+            "Matrix-vector products executed.",
+            self.matvecs.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_matvec_batches_total",
+            "Coalesced matvec batches flushed.",
+            self.matvec_batches.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_batched_vectors_total",
+            "Vectors carried by flushed batches.",
+            self.batched_vectors.load(Ordering::Relaxed),
+        )
+        .gauge(
+            "nfft_operator_state_bytes",
+            "Resident bytes of the served operator's precomputed state.",
+            self.operator_state_bytes() as f64,
+        )
+        .histogram(
+            "nfft_job_latency_seconds",
+            "End-to-end job latency.",
+            &bounds_secs,
+            &self.latency_bucket_counts(),
+            self.latency_sum_us() as f64 / 1e6,
+        );
+        p.finish()
+    }
+
     pub fn report(&self) -> String {
         let q = |p: f64| -> String {
             let v = self.latency_quantile_us(p);
@@ -137,5 +253,49 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.latency_quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn metrics_json_snapshot() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(2, Ordering::Relaxed);
+        m.jobs_completed.fetch_add(2, Ordering::Relaxed);
+        m.set_operator_state_bytes(512);
+        m.record_latency(5);
+        m.record_latency(2_000);
+        let j = m.metrics_json();
+        assert_eq!(j.get("jobs_submitted").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("operator_state_bytes").and_then(Json::as_f64), Some(512.0));
+        let lat = j.get("latency").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(lat.get("sum_us").and_then(Json::as_f64), Some(2_005.0));
+        let buckets = lat.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 14);
+        assert_eq!(buckets[0].get("count").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(buckets[13].get("le_us"), Some(&Json::Null));
+        // Parses back as valid JSON.
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        m.record_latency(5); // le 10us => le="0.00001"
+        m.record_latency(200_000_000); // above the last finite bound
+        let text = m.prometheus_text();
+        assert!(text.contains("# TYPE nfft_jobs_submitted_total counter"));
+        assert!(text.contains("nfft_jobs_submitted_total 1\n"));
+        assert!(text.contains("# TYPE nfft_job_latency_seconds histogram"));
+        assert!(text.contains("nfft_job_latency_seconds_bucket{le=\"0.00001\"} 1\n"));
+        assert!(text.contains("nfft_job_latency_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("nfft_job_latency_seconds_count 2\n"));
+        // Cumulative counts are monotone across the bucket lines.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("nfft_job_latency_seconds_bucket")) {
+            let c: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(c >= last);
+            last = c;
+        }
     }
 }

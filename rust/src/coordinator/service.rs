@@ -15,9 +15,15 @@ use crate::graph::operator::LinearOperator;
 use crate::krylov::cg::cg_solve;
 use crate::krylov::lanczos::{block_lanczos_eigs, lanczos_eigs};
 use crate::nystrom::hybrid::hybrid_nystrom;
+use crate::obs::{self, FlightRecord, FlightRecorder};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+/// Jobs retained by the flight recorder for post-mortem snapshots.
+const FLIGHT_CAPACITY: usize = 256;
 
 enum Envelope {
     Work { id: u64, job: Job, reply: Sender<(u64, JobResult)> },
@@ -29,6 +35,7 @@ pub struct Coordinator {
     tx: Sender<Envelope>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    flight: Arc<FlightRecorder>,
     next_id: u64,
 }
 
@@ -50,6 +57,7 @@ impl Coordinator {
     pub fn new(op: Arc<dyn LinearOperator>, workers: usize) -> Coordinator {
         assert!(workers >= 1);
         let metrics = Arc::new(Metrics::new());
+        let flight = Arc::new(FlightRecorder::new(FLIGHT_CAPACITY));
         // Surface the operator's precomputed-state footprint (geometry
         // + offset/permutation tables, shard plans) for capacity
         // planning.
@@ -61,6 +69,7 @@ impl Coordinator {
             let rx = shared_rx.clone();
             let op = op.clone();
             let metrics = metrics.clone();
+            let flight = flight.clone();
             handles.push(std::thread::spawn(move || loop {
                 let msg = {
                     let guard = rx.lock().unwrap();
@@ -69,18 +78,30 @@ impl Coordinator {
                 match msg {
                     Ok(Envelope::Work { id, job, reply }) => {
                         let t = std::time::Instant::now();
-                        let result = run_job(op.as_ref(), &op, &job);
-                        metrics.record_latency(t.elapsed().as_micros() as u64);
+                        let result = {
+                            let _span = obs::span_id("job.execute", job.kind(), id);
+                            run_job(op.as_ref(), &op, &job)
+                        };
+                        let micros = t.elapsed().as_micros() as u64;
+                        metrics.record_latency(micros);
                         metrics
                             .jobs_completed
                             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let rec =
+                            flight_record(id, &job, &result, micros as f64 / 1e6, op.dim());
+                        if !rec.ok {
+                            metrics
+                                .jobs_failed
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        flight.record(&rec);
                         let _ = reply.send((id, result));
                     }
                     Ok(Envelope::Shutdown) | Err(_) => return,
                 }
             }));
         }
-        Coordinator { op, tx, workers: handles, metrics, next_id: 0 }
+        Coordinator { op, tx, workers: handles, metrics, flight, next_id: 0 }
     }
 
     /// Coordinator whose operator executes sharded: the point domain
@@ -102,6 +123,23 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// The last-N-jobs flight recorder (lock-free; snapshotable at
+    /// any time, including after a failed job).
+    pub fn flight(&self) -> &FlightRecorder {
+        &self.flight
+    }
+
+    /// Structured service report: every metric plus the flight
+    /// recorder's retained window. Cheap, lock-free reads — safe to
+    /// call mid-flight or post-mortem.
+    pub fn report(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("workers".to_string(), Json::Num(self.workers.len() as f64));
+        o.insert("metrics".to_string(), self.metrics.metrics_json());
+        o.insert("flight".to_string(), self.flight.to_json());
+        Json::Obj(o)
+    }
+
     pub fn operator(&self) -> &Arc<dyn LinearOperator> {
         &self.op
     }
@@ -110,6 +148,7 @@ impl Coordinator {
     pub fn submit(&mut self, job: Job) -> JobHandle {
         let id = self.next_id;
         self.next_id += 1;
+        let _span = obs::span_id("job.submit", job.kind(), id);
         self.metrics.jobs_submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (reply, rx) = channel();
         self.tx
@@ -138,6 +177,47 @@ impl Drop for Coordinator {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Columns a job carries: block width for block jobs, Krylov block /
+/// sketch width for the solvers, 1 for scalar applies.
+fn job_columns(job: &Job, dim: usize) -> u64 {
+    match job {
+        Job::Eig(_) | Job::SslSolve { .. } | Job::Matvec { .. } => 1,
+        Job::BlockEig(opts) => opts.block as u64,
+        Job::HybridNystrom(opts) => opts.l as u64,
+        Job::BlockMatvec { xs } => (xs.len() / dim.max(1)) as u64,
+    }
+}
+
+/// Build the flight-recorder entry for a finished job. `bytes` is the
+/// request+response payload actually moved through the queue; the
+/// matvec/ortho split is taken from the job's own accounting where it
+/// reports one (eig jobs).
+fn flight_record(
+    id: u64,
+    job: &Job,
+    result: &JobResult,
+    total_secs: f64,
+    dim: usize,
+) -> FlightRecord {
+    let columns = job_columns(job, dim);
+    let (matvec_secs, ortho_secs, ok) = match result {
+        JobResult::Eig(r) => (r.matvec_secs, r.ortho_secs, true),
+        JobResult::Solve(r) => (0.0, 0.0, r.converged),
+        JobResult::HybridNystrom(r) => (0.0, 0.0, r.is_ok()),
+        JobResult::Matvec(_) | JobResult::BlockMatvec(_) => (0.0, 0.0, true),
+    };
+    FlightRecord {
+        id,
+        kind: job.kind(),
+        columns,
+        total_secs,
+        matvec_secs,
+        ortho_secs,
+        bytes: 2 * columns * dim as u64 * 8,
+        ok,
     }
 }
 
@@ -343,5 +423,61 @@ mod tests {
         let op = spiral_operator(50);
         let c = Coordinator::new(op, 2);
         drop(c); // Drop impl joins workers without deadlock.
+    }
+
+    #[test]
+    fn report_carries_metrics_and_flight() {
+        use crate::util::json::Json;
+        let op = spiral_operator(50);
+        let n = op.dim();
+        let mut c = Coordinator::new(op, 1);
+        let _ = c.submit(Job::Matvec { x: vec![1.0; n] }).wait();
+        let rep = c.report();
+        assert_eq!(rep.get("workers").and_then(Json::as_usize), Some(1));
+        let metrics = rep.get("metrics").unwrap();
+        assert_eq!(metrics.get("jobs_completed").and_then(Json::as_f64), Some(1.0));
+        let flight = rep.get("flight").unwrap().as_arr().unwrap();
+        assert_eq!(flight.len(), 1);
+        assert_eq!(flight[0].get("kind").unwrap().as_str(), Some("matvec"));
+        assert_eq!(flight[0].get("columns").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(flight[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            flight[0].get("bytes").and_then(Json::as_f64),
+            Some(2.0 * 8.0 * n as f64)
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_reach_flight_and_failed_counter() {
+        let op = spiral_operator(50);
+        let n = op.dim();
+        let mut c = Coordinator::new(op, 1);
+        let mut rhs = vec![0.0; n];
+        rhs[0] = 1.0;
+        // One iteration cannot converge at this tolerance → the job
+        // completes but reports failure.
+        let h = c.submit(Job::SslSolve {
+            beta: 10.0,
+            rhs,
+            opts: CgOptions { tol: 1e-14, max_iter: 1, ..Default::default() },
+        });
+        match h.wait() {
+            JobResult::Solve(r) => assert!(!r.converged),
+            _ => panic!("wrong result type"),
+        }
+        let m = c.metrics();
+        assert_eq!(m.jobs_failed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(m.jobs_completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        let snap = c.flight().snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].kind, "ssl-solve");
+        assert!(!snap[0].ok);
+        // The report is still shaped after the failure.
+        assert_eq!(
+            c.report().get("flight").unwrap().as_arr().map(|a| a.len()),
+            Some(1)
+        );
+        c.shutdown();
     }
 }

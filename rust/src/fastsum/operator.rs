@@ -15,6 +15,7 @@ use super::regularize::RegularizedKernel;
 use crate::fft::Complex;
 use crate::graph::operator::LinearOperator;
 use crate::nfft::{NfftGeometry, NfftPlan, SpreadLayout, WindowKind};
+use crate::obs;
 use crate::util::pool::BufferPool;
 use crate::util::timer::{PhaseTimings, Timer};
 use rayon::prelude::*;
@@ -295,19 +296,25 @@ impl FastsumOperator {
         assert_eq!(y.len(), self.n);
         let mut rgrid = self.rgrids.take();
         let mut spec = self.specs.take();
+        let _span_all = obs::span_cat("fastsum.apply", "fastsum");
         let t_all = Timer::start();
         // Step 1: real adjoint half — spread + r2c forward.
+        let span = obs::span_cat("fastsum.adjoint", "fastsum");
         let t = Timer::start();
         self.plan.spread_real_with_geometry(&self.geometry, x, &mut rgrid);
         self.plan.forward_half_spectrum(&rgrid, &mut spec);
         let t_adj = t.elapsed_secs();
+        drop(span);
         // Step 2: fused frequency stage over the half spectrum.
+        let span = obs::span_cat("fastsum.multiply", "fastsum");
         let t = Timer::start();
         for (s, &w) in spec.iter_mut().zip(self.half_mult.iter()) {
             *s = s.scale(w);
         }
         let t_mul = t.elapsed_secs();
+        drop(span);
         // Step 3: c2r backward + real gather.
+        let span = obs::span_cat("fastsum.forward", "fastsum");
         let t = Timer::start();
         self.plan.backward_half_spectrum(&mut spec, &mut rgrid);
         self.plan.gather_real_grid(&self.geometry, &rgrid, y);
@@ -317,6 +324,7 @@ impl FastsumOperator {
             }
         }
         let t_fwd = t.elapsed_secs();
+        drop(span);
         self.rgrids.put(rgrid);
         self.specs.put(spec);
         let mut timings = self.timings.lock().unwrap();
@@ -366,6 +374,7 @@ impl FastsumOperator {
         }
         let ng = self.plan.grid_len();
         let nh = self.plan.half_spectrum_len();
+        let _span_all = obs::span_cat("fastsum.apply_block", "fastsum");
         let t_all = Timer::start();
         // The slabs are recycled across calls (steady state allocates
         // nothing); every element is overwritten before being read, so
@@ -375,11 +384,14 @@ impl FastsumOperator {
         let mut specs = std::mem::take(&mut *self.block_spec_slab.lock().unwrap());
         specs.resize(k * nh, Complex::ZERO);
         // Step 1: spread all columns, then one batched r2c pass.
+        let span = obs::span_cat("fastsum.adjoint", "fastsum");
         let t = Timer::start();
         self.plan.spread_real_block(&self.geometry, xs, &mut grids);
         self.plan.forward_half_spectrum_batch(&grids, &mut specs);
         let t_adj = t.elapsed_secs();
+        drop(span);
         // Step 2: fused frequency stage, columns in parallel.
+        let span = obs::span_cat("fastsum.multiply", "fastsum");
         let t = Timer::start();
         specs.par_chunks_mut(nh).for_each(|col| {
             for (s, &w) in col.iter_mut().zip(self.half_mult.iter()) {
@@ -387,7 +399,9 @@ impl FastsumOperator {
             }
         });
         let t_mul = t.elapsed_secs();
+        drop(span);
         // Step 3: one batched c2r pass, then gather all columns.
+        let span = obs::span_cat("fastsum.forward", "fastsum");
         let t = Timer::start();
         self.plan.backward_half_spectrum_batch(&mut specs, &mut grids);
         self.plan.gather_real_block(&self.geometry, &grids, ys);
@@ -397,6 +411,7 @@ impl FastsumOperator {
             }
         }
         let t_fwd = t.elapsed_secs();
+        drop(span);
         // Park the slabs for the next block apply (steady-state Krylov
         // iterations reuse them allocation-free), but never pin more
         // than a bounded amount of idle memory once a burst is over.

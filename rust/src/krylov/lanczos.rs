@@ -24,6 +24,7 @@ use crate::graph::operator::LinearOperator;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::panel::{paxpy, pdot, pnorm2, Panel};
 use crate::linalg::tridiag::tridiag_eig;
+use crate::obs;
 use crate::util::timer::Timer;
 
 #[derive(Debug, Clone, Copy)]
@@ -95,10 +96,13 @@ pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult 
     let mut converged_info: Option<(Vec<f64>, DenseMatrix, Vec<f64>)> = None;
 
     for j in 0..max_iter {
+        let span = obs::span_id("lanczos.matvec", "krylov", j as u64);
         let t = Timer::start();
         op.apply(basis.col(j), &mut w);
         matvec_secs += t.elapsed_secs();
+        drop(span);
         matvecs += 1;
+        let span = obs::span_id("lanczos.ortho", "krylov", j as u64);
         let t = Timer::start();
         let a_j = pdot(basis.col(j), &w);
         alpha.push(a_j);
@@ -120,6 +124,7 @@ pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult 
         }
         let b_next = pnorm2(&w);
         ortho_secs += t.elapsed_secs();
+        drop(span);
         // Convergence test on the current tridiagonal. The QL solve with
         // vector accumulation is O(j³), so test every 5th iteration
         // (and on the final one) once j ≥ k.
@@ -293,12 +298,14 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
     for s in 0..max_blocks {
         // One block application per iteration, written straight into
         // the image panel's next chunk.
+        let span = obs::span_id("block_lanczos.matvec", "krylov", s as u64);
         let t = Timer::start();
         images.push_chunk_with(|buf| {
             buf.fill(0.0);
             op.apply_block(basis.chunk(s), buf);
         });
         matvec_secs += t.elapsed_secs();
+        drop(span);
         matvecs += b;
         let nb = s + 1;
         let dim = nb * b;
@@ -308,6 +315,7 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
         // column block Vᵀ Y_s is computed this iteration — ONE panel
         // Gram over the image chunk — the rest is carried over from
         // `t_raw`.
+        let span = obs::span_id("block_lanczos.ortho", "krylov", s as u64);
         let t = Timer::start();
         let mut t_grown = DenseMatrix::zeros(dim, dim);
         let old = t_raw.rows;
@@ -341,6 +349,7 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
             }
         }
         ortho_secs += t.elapsed_secs();
+        drop(span);
         let (evals, z) = sym_eig(&t_mat); // ascending
 
         // True residuals ‖Y z − θ V z‖₂ of the kk largest Ritz pairs —

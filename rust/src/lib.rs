@@ -56,6 +56,10 @@
 //! * [`coordinator`] — the L3 service layer: job queue, matvec batching
 //!   (coalesced requests flush as ONE `apply_block`), worker threads,
 //!   metrics, and the CLI-facing engine registry.
+//! * [`obs`] — the telemetry subsystem: hierarchical spans (off by
+//!   default, `NFFT_TRACE=1` to record), Chrome trace-event +
+//!   Prometheus exporters, the coordinator's flight recorder, and
+//!   shard straggler analytics. See `docs/OBSERVABILITY.md`.
 //! * [`bench_harness`] — drivers regenerating every table/figure of the
 //!   paper's evaluation section.
 //!
@@ -80,6 +84,7 @@ pub mod krylov;
 pub mod linalg;
 pub mod nfft;
 pub mod nystrom;
+pub mod obs;
 pub mod runtime;
 pub mod shard;
 pub mod util;

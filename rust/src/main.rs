@@ -21,7 +21,8 @@ use nfft_krylov::krylov::cg::CgOptions;
 use nfft_krylov::krylov::lanczos::LanczosOptions;
 
 const USAGE: &str = "usage: nfft-krylov <eig|solve|cluster|ssl-phasefield|ssl-kernel|krr|artifacts-check|serve> \
-[--n N] [--k K] [--sigma S] [--setup 1|2|3] [--engine native|hlo|dense] [--seed S] [--tol T]";
+[--n N] [--k K] [--sigma S] [--setup 1|2|3] [--engine native|hlo|dense] [--seed S] [--tol T] \
+[--trace-out FILE]";
 
 fn main() {
     let args = match Args::parse_env() {
@@ -38,6 +39,10 @@ fn main() {
             std::process::exit(2);
         }
     };
+    let trace_out = args.get("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        nfft_krylov::obs::set_enabled(true);
+    }
     let code = match args.subcommand.as_deref() {
         Some("eig") => cmd_eig(&cfg),
         Some("solve") => cmd_solve(&cfg),
@@ -52,6 +57,13 @@ fn main() {
             2
         }
     };
+    if let Some(path) = &trace_out {
+        let events = nfft_krylov::obs::drain_events();
+        match nfft_krylov::obs::write_trace(path, &events) {
+            Ok(()) => eprintln!("trace: wrote {} span(s) to {path}", events.len()),
+            Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+        }
+    }
     std::process::exit(code);
 }
 

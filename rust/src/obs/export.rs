@@ -1,0 +1,209 @@
+//! Telemetry exporters: Chrome `trace_event` JSON and Prometheus
+//! text exposition.
+//!
+//! Both are built on the crate's existing plain-text substrates
+//! ([`crate::util::json`] and `String`) — no serde, no extra deps.
+//! `scripts/validate_telemetry.py` smoke-validates both formats in
+//! CI.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+use crate::obs::span::{dropped_events, SpanEvent, NO_ID};
+use crate::util::json::Json;
+
+/// Render drained span events as a Chrome `trace_event` document —
+/// the JSON Object Format with complete (`"ph": "X"`) events, loadable
+/// in Perfetto or `chrome://tracing`. `ts`/`dur` are microseconds per
+/// the format spec; `displayTimeUnit` only affects the UI.
+pub fn trace_event_json(events: &[SpanEvent]) -> Json {
+    let mut arr = Vec::with_capacity(events.len());
+    for ev in events {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(ev.name.to_string()));
+        obj.insert("cat".to_string(), Json::Str(ev.cat.to_string()));
+        obj.insert("ph".to_string(), Json::Str("X".to_string()));
+        obj.insert("ts".to_string(), Json::Num(ev.ts_us));
+        obj.insert("dur".to_string(), Json::Num(ev.dur_us));
+        obj.insert("pid".to_string(), Json::Num(1.0));
+        obj.insert("tid".to_string(), Json::Num(ev.tid as f64));
+        if ev.id != NO_ID {
+            let mut args = std::collections::BTreeMap::new();
+            args.insert("id".to_string(), Json::Num(ev.id as f64));
+            obj.insert("args".to_string(), Json::Obj(args));
+        }
+        arr.push(Json::Obj(obj));
+    }
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(arr));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    let mut other = std::collections::BTreeMap::new();
+    other.insert("dropped_events".to_string(), Json::Num(dropped_events() as f64));
+    doc.insert("otherData".to_string(), Json::Obj(other));
+    Json::Obj(doc)
+}
+
+/// Write a trace-event document for `events` to `path`.
+pub fn write_trace(path: impl AsRef<Path>, events: &[SpanEvent]) -> io::Result<()> {
+    std::fs::write(path, trace_event_json(events).to_string())
+}
+
+/// Prometheus text-exposition builder (format version 0.0.4).
+///
+/// Callers pass the full metric name (including any `_total` suffix);
+/// the builder emits the `# HELP` / `# TYPE` preamble and the sample
+/// lines. Histograms take *per-bucket* counts in the same order as
+/// their upper bounds and cumulate internally; an upper bound of
+/// `f64::INFINITY` renders as `+Inf`.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn preamble(&mut self, name: &str, help: &str, kind: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) -> &mut Self {
+        self.preamble(name, help, "counter");
+        let _ = writeln!(self.out, "{name} {value}");
+        self
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) -> &mut Self {
+        self.preamble(name, help, "gauge");
+        let _ = writeln!(self.out, "{name} {}", fmt_value(value));
+        self
+    }
+
+    /// `upper_bounds` and `bucket_counts` must have equal length;
+    /// `sum` is the histogram's observation sum in the metric's unit.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        upper_bounds: &[f64],
+        bucket_counts: &[u64],
+        sum: f64,
+    ) -> &mut Self {
+        assert_eq!(
+            upper_bounds.len(),
+            bucket_counts.len(),
+            "histogram {name}: bounds/counts length mismatch"
+        );
+        self.preamble(name, help, "histogram");
+        let mut cumulative = 0u64;
+        for (bound, count) in upper_bounds.iter().zip(bucket_counts) {
+            cumulative += count;
+            let le =
+                if bound.is_infinite() { "+Inf".to_string() } else { fmt_value(*bound) };
+            let _ = writeln!(self.out, "{name}_bucket{{le=\"{le}\"}} {cumulative}");
+        }
+        let _ = writeln!(self.out, "{name}_sum {}", fmt_value(sum));
+        let _ = writeln!(self.out, "{name}_count {cumulative}");
+        self
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Plain decimal rendering (`0.00003`, not `3e-5`): Rust's `{}` for
+/// f64 never produces exponent notation for these magnitudes, and
+/// integral values drop the fraction, matching Prometheus examples.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_events() -> Vec<SpanEvent> {
+        vec![
+            SpanEvent {
+                name: "fastsum.apply",
+                cat: "nfft",
+                ts_us: 10.0,
+                dur_us: 250.5,
+                tid: 0,
+                id: NO_ID,
+            },
+            SpanEvent {
+                name: "job.execute",
+                cat: "matvec",
+                ts_us: 12.0,
+                dur_us: 100.0,
+                tid: 1,
+                id: 7,
+            },
+        ]
+    }
+
+    #[test]
+    fn trace_event_shape_roundtrips() {
+        let doc = trace_event_json(&sample_events());
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        for ev in evs {
+            assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+            assert!(ev.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        }
+        let job = &evs[1];
+        assert_eq!(job.get("name").unwrap().as_str(), Some("job.execute"));
+        assert_eq!(job.get("args").unwrap().get("id").unwrap().as_f64(), Some(7.0));
+        assert_eq!(parsed.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    }
+
+    #[test]
+    fn prometheus_counter_gauge_shapes() {
+        let mut p = PromText::new();
+        p.counter("nfft_jobs_total", "Jobs submitted.", 3)
+            .gauge("nfft_state_bytes", "Resident bytes.", 1024.0);
+        let text = p.finish();
+        assert!(text.contains("# TYPE nfft_jobs_total counter\nnfft_jobs_total 3\n"));
+        assert!(text.contains("# TYPE nfft_state_bytes gauge\nnfft_state_bytes 1024\n"));
+        assert!(text.contains("# HELP nfft_jobs_total Jobs submitted.\n"));
+    }
+
+    #[test]
+    fn prometheus_histogram_cumulates() {
+        let mut p = PromText::new();
+        p.histogram(
+            "nfft_latency_seconds",
+            "Job latency.",
+            &[0.001, 0.01, f64::INFINITY],
+            &[2, 1, 1],
+            0.0215,
+        );
+        let text = p.finish();
+        assert!(text.contains("nfft_latency_seconds_bucket{le=\"0.001\"} 2\n"));
+        assert!(text.contains("nfft_latency_seconds_bucket{le=\"0.01\"} 3\n"));
+        assert!(text.contains("nfft_latency_seconds_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("nfft_latency_seconds_sum 0.0215\n"));
+        assert!(text.contains("nfft_latency_seconds_count 4\n"));
+    }
+
+    #[test]
+    fn plain_decimal_rendering() {
+        assert_eq!(fmt_value(3e-5), "0.00003");
+        assert_eq!(fmt_value(10.0), "10");
+        assert_eq!(fmt_value(0.3), "0.3");
+    }
+}

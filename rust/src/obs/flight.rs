@@ -1,0 +1,231 @@
+//! Flight recorder: a fixed-capacity lock-free ring of the last N
+//! job/apply records.
+//!
+//! The coordinator pushes one [`FlightRecord`] per executed job from
+//! whatever worker thread ran it; [`FlightRecorder::snapshot`] can be
+//! taken at any moment — including right after a failure — without
+//! blocking writers. The ring is a ticket seqlock built from safe
+//! `AtomicU64` slots:
+//!
+//! * a writer claims a global ticket with `head.fetch_add(1)`, picks
+//!   slot `ticket % capacity`, stores `seq = 2*ticket + 1` (write in
+//!   progress), writes the fields, then stores `seq = 2*ticket + 2`
+//!   (`Release`, publishing the fields);
+//! * a reader computes the exact `seq` it expects for a ticket and
+//!   validates it before *and* after copying the fields (`Acquire` /
+//!   fence), so a slot mid-overwrite — or lapped by a later ticket —
+//!   is simply skipped rather than returned torn.
+//!
+//! Every field is an atomic, so a lost race degrades to a skipped
+//! record, never undefined behavior.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Job kinds with a stable slot encoding; anything unrecognised maps
+/// to `"other"`. Kept in sync with `Job::kind`.
+const KINDS: [&str; 7] =
+    ["matvec", "block-matvec", "eig", "block-eig", "ssl-solve", "hybrid-nystrom", "other"];
+
+fn kind_code(kind: &str) -> u64 {
+    KINDS.iter().position(|k| *k == kind).unwrap_or(KINDS.len() - 1) as u64
+}
+
+/// One completed job as seen by the flight recorder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightRecord {
+    /// Coordinator job id.
+    pub id: u64,
+    /// Job kind (`Job::kind` string).
+    pub kind: &'static str,
+    /// Columns carried (k for block jobs, 1 for single applies).
+    pub columns: u64,
+    /// End-to-end wall seconds for the job.
+    pub total_secs: f64,
+    /// Matvec share, where the job reports it (eig jobs); else 0.
+    pub matvec_secs: f64,
+    /// Orthogonalisation share, where reported; else 0.
+    pub ortho_secs: f64,
+    /// Bytes moved by the job (operator state touched), best effort.
+    pub bytes: u64,
+    /// Did the job succeed (converge / return Ok)?
+    pub ok: bool,
+}
+
+impl FlightRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("id".to_string(), Json::Num(self.id as f64));
+        o.insert("kind".to_string(), Json::Str(self.kind.to_string()));
+        o.insert("columns".to_string(), Json::Num(self.columns as f64));
+        o.insert("total_secs".to_string(), Json::Num(self.total_secs));
+        o.insert("matvec_secs".to_string(), Json::Num(self.matvec_secs));
+        o.insert("ortho_secs".to_string(), Json::Num(self.ortho_secs));
+        o.insert("bytes".to_string(), Json::Num(self.bytes as f64));
+        o.insert("ok".to_string(), Json::Bool(self.ok));
+        Json::Obj(o)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Slot {
+    seq: AtomicU64,
+    id: AtomicU64,
+    kind: AtomicU64,
+    columns: AtomicU64,
+    total_bits: AtomicU64,
+    matvec_bits: AtomicU64,
+    ortho_bits: AtomicU64,
+    bytes: AtomicU64,
+    ok: AtomicU64,
+}
+
+/// Lock-free ring buffer of the last `capacity` [`FlightRecord`]s.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    slots: Vec<Slot>,
+    head: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "flight recorder needs at least one slot");
+        FlightRecorder {
+            slots: (0..capacity).map(|_| Slot::default()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records ever pushed (not capped at capacity).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Push one record; wait-free for writers (one `fetch_add` plus
+    /// plain atomic stores).
+    pub fn record(&self, rec: &FlightRecord) {
+        let ticket = self.head.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        slot.seq.store(2 * ticket + 1, Ordering::Release);
+        slot.id.store(rec.id, Ordering::Relaxed);
+        slot.kind.store(kind_code(rec.kind), Ordering::Relaxed);
+        slot.columns.store(rec.columns, Ordering::Relaxed);
+        slot.total_bits.store(rec.total_secs.to_bits(), Ordering::Relaxed);
+        slot.matvec_bits.store(rec.matvec_secs.to_bits(), Ordering::Relaxed);
+        slot.ortho_bits.store(rec.ortho_secs.to_bits(), Ordering::Relaxed);
+        slot.bytes.store(rec.bytes, Ordering::Relaxed);
+        slot.ok.store(rec.ok as u64, Ordering::Relaxed);
+        slot.seq.store(2 * ticket + 2, Ordering::Release);
+    }
+
+    fn read_ticket(&self, ticket: u64) -> Option<FlightRecord> {
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        let want = 2 * ticket + 2;
+        if slot.seq.load(Ordering::Acquire) != want {
+            return None;
+        }
+        let rec = FlightRecord {
+            id: slot.id.load(Ordering::Relaxed),
+            kind: KINDS[(slot.kind.load(Ordering::Relaxed) as usize).min(KINDS.len() - 1)],
+            columns: slot.columns.load(Ordering::Relaxed),
+            total_secs: f64::from_bits(slot.total_bits.load(Ordering::Relaxed)),
+            matvec_secs: f64::from_bits(slot.matvec_bits.load(Ordering::Relaxed)),
+            ortho_secs: f64::from_bits(slot.ortho_bits.load(Ordering::Relaxed)),
+            bytes: slot.bytes.load(Ordering::Relaxed),
+            ok: slot.ok.load(Ordering::Relaxed) != 0,
+        };
+        fence(Ordering::Acquire);
+        if slot.seq.load(Ordering::Relaxed) != want {
+            return None;
+        }
+        Some(rec)
+    }
+
+    /// Copy out the retained window, oldest first. Slots mid-write or
+    /// lapped during the scan are skipped, so a snapshot under heavy
+    /// concurrent writes may hold fewer than `capacity` records but
+    /// every record it does hold is intact.
+    pub fn snapshot(&self) -> Vec<FlightRecord> {
+        let head = self.head.load(Ordering::Acquire);
+        let start = head.saturating_sub(self.slots.len() as u64);
+        (start..head).filter_map(|t| self.read_ticket(t)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.snapshot().iter().map(|r| r.to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, kind: &'static str, ok: bool) -> FlightRecord {
+        FlightRecord {
+            id,
+            kind,
+            columns: 4,
+            total_secs: 0.25 + id as f64,
+            matvec_secs: 0.1,
+            ortho_secs: 0.05,
+            bytes: 4096,
+            ok,
+        }
+    }
+
+    #[test]
+    fn keeps_last_capacity_records() {
+        let ring = FlightRecorder::new(8);
+        for i in 0..20 {
+            ring.record(&rec(i, "matvec", true));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8);
+        assert_eq!(snap.first().unwrap().id, 12);
+        assert_eq!(snap.last().unwrap().id, 19);
+        assert_eq!(ring.pushed(), 20);
+        for w in snap.windows(2) {
+            assert_eq!(w[1].id, w[0].id + 1);
+        }
+    }
+
+    #[test]
+    fn records_survive_roundtrip() {
+        let ring = FlightRecorder::new(4);
+        ring.record(&rec(3, "ssl-solve", false));
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 1);
+        let r = &snap[0];
+        assert_eq!(r.kind, "ssl-solve");
+        assert!(!r.ok);
+        assert_eq!(r.columns, 4);
+        assert!((r.total_secs - 3.25).abs() < 1e-15);
+        assert_eq!(r.bytes, 4096);
+    }
+
+    #[test]
+    fn unknown_kind_maps_to_other() {
+        let ring = FlightRecorder::new(2);
+        ring.record(&rec(0, "mystery", true));
+        assert_eq!(ring.snapshot()[0].kind, "other");
+    }
+
+    #[test]
+    fn json_shape() {
+        let ring = FlightRecorder::new(2);
+        ring.record(&rec(1, "eig", true));
+        let j = ring.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("kind").unwrap().as_str(), Some("eig"));
+        assert_eq!(arr[0].get("ok"), Some(&Json::Bool(true)));
+        // Serialises and parses back.
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
+    }
+}

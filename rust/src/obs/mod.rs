@@ -1,0 +1,42 @@
+//! Unified telemetry subsystem — the instrument panel of the engine.
+//!
+//! Dependency-free (std only, like the rest of the crate) and layered
+//! so the numeric hot path never pays for it:
+//!
+//! * [`span`] — lightweight hierarchical spans. Every instrumented
+//!   seam (fastsum phases, shard spread/reduce/fft/fan-out, the
+//!   coordinator job lifecycle, Krylov outer iterations) opens a span
+//!   guard; when the recorder is disabled — the default — the guard is
+//!   `None` behind one relaxed atomic load, allocates nothing, and
+//!   records nothing, so outputs are bitwise identical tracing on or
+//!   off (pinned by `tests/telemetry.rs`). Enable with `NFFT_TRACE=1`
+//!   or [`span::set_enabled`].
+//! * [`export`] — Chrome `trace_event` JSON (loadable in Perfetto /
+//!   `chrome://tracing`) built on [`crate::util::json`], plus the
+//!   Prometheus text-exposition builder behind
+//!   [`crate::coordinator::Metrics::prometheus_text`].
+//! * [`flight`] — a fixed-capacity lock-free ring ("flight recorder")
+//!   of the last N job records, snapshotable from
+//!   [`crate::coordinator::Coordinator::report`] even after a failure.
+//! * [`skew`] — structured straggler analytics over
+//!   [`crate::shard::ShardExecutor`]: per-shard totals, max/mean
+//!   imbalance ratios, slowest shard, per-phase skew — the signal the
+//!   distributed dispatcher's work-stealing repartition consumes
+//!   (ROADMAP, distributed multi-host shard engine).
+//!
+//! Tracing NEVER perturbs numerics: spans only read the monotonic
+//! clock, all reductions keep their fixed order, and no kernel
+//! branches on the recorder state (see `docs/OBSERVABILITY.md` and
+//! `docs/DETERMINISM.md`).
+
+pub mod export;
+pub mod flight;
+pub mod skew;
+pub mod span;
+
+pub use export::{trace_event_json, write_trace, PromText};
+pub use flight::{FlightRecord, FlightRecorder};
+pub use skew::{analyze_skew, PhaseSkew, SkewReport};
+pub use span::{
+    drain_events, enabled, set_enabled, span, span_cat, span_id, with_recording, Span, SpanEvent,
+};

@@ -1,0 +1,218 @@
+//! Straggler analytics over [`ShardExecutor`] timings.
+//!
+//! [`analyze_skew`] turns the per-shard [`PhaseTimings`] a
+//! [`crate::shard::ShardedOperator`] accumulates into a structured
+//! [`SkewReport`]: per-shard totals, the max/mean imbalance ratio,
+//! which shard is slowest, and the same breakdown per phase. This is
+//! the signal the ROADMAP's distributed-engine item needs for
+//! straggler detection and work-stealing repartition — an imbalance
+//! ratio near 1.0 means the partition is fair; a shard sitting at 2×
+//! the mean is the one whose Morton tiles should migrate.
+
+use std::collections::BTreeMap;
+
+use crate::shard::ShardExecutor;
+use crate::util::json::Json;
+
+/// Skew across shards for one phase name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSkew {
+    pub phase: String,
+    /// Slowest shard's accumulated seconds in this phase.
+    pub max_secs: f64,
+    /// Mean accumulated seconds across all shards (absent = 0).
+    pub mean_secs: f64,
+    /// `max/mean`; 1.0 when the phase saw no time at all.
+    pub imbalance: f64,
+    pub slowest_shard: usize,
+}
+
+/// Structured straggler report for one sharded operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkewReport {
+    pub shards: usize,
+    /// Total shard-local seconds per shard, indexed by shard id.
+    pub per_shard_total_secs: Vec<f64>,
+    pub max_secs: f64,
+    pub mean_secs: f64,
+    /// `max/mean` over shard totals; 1.0 for an idle executor.
+    pub imbalance: f64,
+    pub slowest_shard: usize,
+    /// Per-phase skew, phases in first-seen order across shards.
+    pub per_phase: Vec<PhaseSkew>,
+}
+
+fn ratio(max: f64, mean: f64) -> f64 {
+    if mean > 0.0 {
+        max / mean
+    } else {
+        1.0
+    }
+}
+
+fn arg_max(values: &[f64]) -> (usize, f64) {
+    let mut best = (0, f64::NEG_INFINITY);
+    for (i, &v) in values.iter().enumerate() {
+        if v > best.1 {
+            best = (i, v);
+        }
+    }
+    (best.0, best.1.max(0.0))
+}
+
+/// Build a [`SkewReport`] from an executor's current counters. Only
+/// shard-*local* phases enter the skew math — shared-stage time is
+/// identical for every shard by construction and would only dilute
+/// the ratio.
+pub fn analyze_skew(exec: &ShardExecutor) -> SkewReport {
+    let shards = exec.num_shards();
+    let timings: Vec<_> = (0..shards).map(|s| exec.shard_timings(s)).collect();
+
+    let per_shard_total_secs: Vec<f64> = timings.iter().map(|t| t.total()).collect();
+    let (slowest_shard, max_secs) = arg_max(&per_shard_total_secs);
+    let mean_secs = if shards > 0 {
+        per_shard_total_secs.iter().sum::<f64>() / shards as f64
+    } else {
+        0.0
+    };
+
+    // Phase union in first-seen order (shard 0's order first, then any
+    // phases only later shards saw) — deterministic because shard
+    // timings accumulate in fixed phase order per apply.
+    let mut phases: Vec<String> = Vec::new();
+    for t in &timings {
+        for (name, _, _) in t.entries() {
+            if !phases.iter().any(|p| p == name) {
+                phases.push(name.clone());
+            }
+        }
+    }
+
+    let per_phase = phases
+        .into_iter()
+        .map(|phase| {
+            let secs: Vec<f64> =
+                timings.iter().map(|t| t.get(&phase).unwrap_or(0.0)).collect();
+            let (slowest, max) = arg_max(&secs);
+            let mean = if shards > 0 { secs.iter().sum::<f64>() / shards as f64 } else { 0.0 };
+            PhaseSkew {
+                phase,
+                max_secs: max,
+                mean_secs: mean,
+                imbalance: ratio(max, mean),
+                slowest_shard: slowest,
+            }
+        })
+        .collect();
+
+    SkewReport {
+        shards,
+        per_shard_total_secs,
+        max_secs,
+        mean_secs,
+        imbalance: ratio(max_secs, mean_secs),
+        slowest_shard,
+        per_phase,
+    }
+}
+
+impl SkewReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("shards".to_string(), Json::Num(self.shards as f64));
+        o.insert(
+            "per_shard_total_secs".to_string(),
+            Json::Arr(self.per_shard_total_secs.iter().map(|&s| Json::Num(s)).collect()),
+        );
+        o.insert("max_secs".to_string(), Json::Num(self.max_secs));
+        o.insert("mean_secs".to_string(), Json::Num(self.mean_secs));
+        o.insert("imbalance".to_string(), Json::Num(self.imbalance));
+        o.insert("slowest_shard".to_string(), Json::Num(self.slowest_shard as f64));
+        o.insert(
+            "per_phase".to_string(),
+            Json::Arr(
+                self.per_phase
+                    .iter()
+                    .map(|p| {
+                        let mut e = BTreeMap::new();
+                        e.insert("phase".to_string(), Json::Str(p.phase.clone()));
+                        e.insert("max_secs".to_string(), Json::Num(p.max_secs));
+                        e.insert("mean_secs".to_string(), Json::Num(p.mean_secs));
+                        e.insert("imbalance".to_string(), Json::Num(p.imbalance));
+                        e.insert(
+                            "slowest_shard".to_string(),
+                            Json::Num(p.slowest_shard as f64),
+                        );
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_executor_is_balanced() {
+        let exec = ShardExecutor::new(4);
+        let rep = analyze_skew(&exec);
+        assert_eq!(rep.shards, 4);
+        assert_eq!(rep.per_shard_total_secs, vec![0.0; 4]);
+        assert_eq!(rep.imbalance, 1.0);
+        assert!(rep.per_phase.is_empty());
+    }
+
+    #[test]
+    fn straggler_is_identified() {
+        let exec = ShardExecutor::new(2);
+        exec.record(0, "spread", 1.0);
+        exec.record(1, "spread", 3.0);
+        exec.record(0, "forward", 1.0);
+        exec.record(1, "forward", 1.0);
+        exec.record_global("reduce", 10.0); // must NOT enter skew math
+        let rep = analyze_skew(&exec);
+        assert_eq!(rep.shards, 2);
+        assert_eq!(rep.slowest_shard, 1);
+        assert!((rep.max_secs - 4.0).abs() < 1e-15);
+        assert!((rep.mean_secs - 3.0).abs() < 1e-15);
+        assert!((rep.imbalance - 4.0 / 3.0).abs() < 1e-15);
+
+        assert_eq!(rep.per_phase.len(), 2);
+        let spread = &rep.per_phase[0];
+        assert_eq!(spread.phase, "spread");
+        assert_eq!(spread.slowest_shard, 1);
+        assert!((spread.imbalance - 1.5).abs() < 1e-15);
+        let forward = &rep.per_phase[1];
+        assert_eq!(forward.phase, "forward");
+        assert!((forward.imbalance - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn phase_union_covers_late_shards() {
+        let exec = ShardExecutor::new(2);
+        exec.record(0, "spread", 1.0);
+        exec.record(1, "gather", 2.0);
+        let rep = analyze_skew(&exec);
+        let names: Vec<_> = rep.per_phase.iter().map(|p| p.phase.as_str()).collect();
+        assert_eq!(names, vec!["spread", "gather"]);
+        assert_eq!(rep.per_phase[1].slowest_shard, 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let exec = ShardExecutor::new(2);
+        exec.record(0, "spread", 2.0);
+        exec.record(1, "spread", 1.0);
+        let j = analyze_skew(&exec).to_json();
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("shards").and_then(Json::as_usize), Some(2));
+        assert_eq!(back.get("slowest_shard").and_then(Json::as_usize), Some(0));
+        let per_phase = back.get("per_phase").unwrap().as_arr().unwrap();
+        assert_eq!(per_phase[0].get("phase").unwrap().as_str(), Some("spread"));
+        assert_eq!(per_phase[0].get("imbalance").and_then(Json::as_f64), Some(4.0 / 3.0));
+    }
+}

@@ -42,6 +42,7 @@ use crate::fastsum::{FastsumOperator, FastsumParams, Kernel};
 use crate::fft::Complex;
 use crate::graph::operator::LinearOperator;
 use crate::nfft::NfftPlan;
+use crate::obs;
 use crate::shard::exec::{timings_json, ShardExecutor};
 use crate::shard::partition::ShardSpec;
 use crate::shard::plan::{build_shard_plans_with, ShardPlan, SubgridPolicy};
@@ -268,7 +269,16 @@ impl ShardedOperator {
         );
         root.insert("shared_timings".to_string(), timings_json(&self.exec.shared_timings()));
         root.insert("per_shard".to_string(), Json::Arr(per_shard));
+        root.insert("skew".to_string(), self.skew_json());
         Json::Obj(root)
+    }
+
+    /// Structured straggler report over the shard-local phases:
+    /// per-shard totals, max/mean imbalance ratio, slowest shard, and
+    /// the same per phase — see [`crate::obs::analyze_skew`]. This is
+    /// the repartition signal for the distributed dispatcher (ROADMAP).
+    pub fn skew_json(&self) -> Json {
+        obs::analyze_skew(&self.exec).to_json()
     }
 
     /// `D^{−1/2}` input scaling for point `i` (1 in adjacency mode).
@@ -285,6 +295,7 @@ impl ShardedOperator {
     /// [`crate::fastsum::NormalizedAdjacency`] operation sequence.
     fn apply_one(&self, x: &[f64], y: &mut [f64]) {
         let normalized = self.mode == ShardedMode::Normalized;
+        let _span_all = obs::span_cat("shard.apply", "shard");
         let t_all = Timer::start();
         // Phase 1: shard-local gather + adjoint spread into REAL
         // bounding-box subgrids (the exchange object). Empty shards
@@ -296,6 +307,7 @@ impl ShardedOperator {
             .enumerate()
             .filter(|(_, sh)| sh.num_points() > 0)
             .map(|(s, sh)| {
+                let _span = obs::span_id("shard.spread", "shard", s as u64);
                 let t = Timer::start();
                 let mut local = Vec::with_capacity(sh.num_points());
                 for &i in sh.indices() {
@@ -313,6 +325,7 @@ impl ShardedOperator {
         // half-spectrum multiply — identical no matter how many shards
         // exist.
         let mut fgrid = self.rgrids.take();
+        let span = obs::span_cat("shard.reduce", "shard");
         let t = Timer::start();
         for g in fgrid.iter_mut() {
             *g = 0.0;
@@ -321,31 +334,39 @@ impl ShardedOperator {
             self.plan.merge_boxed_into(self.shards[*s].bbox(), sub, &mut fgrid);
         }
         self.exec.record_global("reduce", t.elapsed_secs());
+        drop(span);
         let mut spec = self.specs.take();
+        let span = obs::span_cat("shard.fft", "shard");
         let t = Timer::start();
         self.plan.forward_half_spectrum(&fgrid, &mut spec);
         self.exec.record_global("fft-forward", t.elapsed_secs());
+        drop(span);
         for (s, sub) in subs {
             self.shards[s].grids().put(sub);
         }
+        let span = obs::span_cat("shard.multiply", "shard");
         let t = Timer::start();
         for (f, &w) in spec.iter_mut().zip(self.half_mult.iter()) {
             *f = f.scale(w);
         }
         self.exec.record_global("multiply", t.elapsed_secs());
+        drop(span);
         // Phase 3: ONE shared c2r backward transform (reusing the
         // merged spread grid as the output buffer), then the per-point
         // gather fans out across shards with diagonal + normalization
         // corrections composed shard-locally.
+        let span = obs::span_cat("shard.backward", "shard");
         let t = Timer::start();
         self.plan.backward_half_spectrum(&mut spec, &mut fgrid);
         self.exec.record_global("forward-prepare", t.elapsed_secs());
+        drop(span);
         let fgrid_ref: &[f64] = &fgrid;
         let outs: Vec<Vec<f64>> = self
             .shards
             .par_iter()
             .enumerate()
             .map(|(s, sh)| {
+                let _span = obs::span_id("shard.gather", "shard", s as u64);
                 let t = Timer::start();
                 let mut out = vec![0.0; sh.num_points()];
                 self.plan.gather_real_grid(sh.geometry(), fgrid_ref, &mut out);
@@ -652,6 +673,48 @@ mod tests {
         assert_eq!(sharded.executor().columns_applied(), 1);
         for s in 0..3 {
             assert!(sharded.executor().shard_timings(s).get("spread").is_some(), "shard {s}");
+        }
+    }
+
+    #[test]
+    fn skew_json_reports_imbalance() {
+        use crate::util::json::Json;
+        let points = spiral_points(80, 17);
+        for shards in [2usize, 4] {
+            let sharded = ShardedOperator::adjacency(
+                &points,
+                3,
+                Kernel::Gaussian { sigma: 3.5 },
+                FastsumParams::setup1(),
+                ShardSpec::contiguous(80, shards),
+            );
+            let x = vec![1.0; 80];
+            let mut y = vec![0.0; 80];
+            sharded.apply(&x, &mut y);
+            let skew = sharded.skew_json();
+            assert_eq!(skew.get("shards").and_then(Json::as_usize), Some(shards));
+            let totals = skew.get("per_shard_total_secs").unwrap().as_arr().unwrap();
+            assert_eq!(totals.len(), shards);
+            let imbalance = skew.get("imbalance").and_then(Json::as_f64).unwrap();
+            assert!(imbalance >= 1.0, "shards={shards}: imbalance {imbalance}");
+            let slowest = skew.get("slowest_shard").and_then(Json::as_usize).unwrap();
+            assert!(slowest < shards);
+            let phases: Vec<_> = skew
+                .get("per_phase")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| p.get("phase").unwrap().as_str().unwrap().to_string())
+                .collect();
+            assert!(phases.contains(&"spread".to_string()));
+            assert!(phases.contains(&"forward".to_string()));
+            // stats_json embeds the same report.
+            let stats = sharded.stats_json();
+            assert_eq!(
+                stats.get("skew").and_then(|s| s.get("shards")).and_then(Json::as_usize),
+                Some(shards)
+            );
         }
     }
 }

@@ -42,9 +42,14 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 
 /// Accumulates named phase timings (used for hot-path profiling of the
 /// fastsum operator: spread / fft / multiply / gather).
+///
+/// Entries keep first-insertion order (reports read pipeline-order);
+/// the side index makes `add`/`merge` O(log p) per phase instead of a
+/// linear scan over all recorded names.
 #[derive(Debug, Default, Clone)]
 pub struct PhaseTimings {
     entries: Vec<(String, f64, u64)>,
+    index: std::collections::BTreeMap<String, usize>,
 }
 
 impl PhaseTimings {
@@ -52,13 +57,20 @@ impl PhaseTimings {
         Self::default()
     }
 
-    pub fn add(&mut self, name: &str, secs: f64) {
-        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
-            e.1 += secs;
-            e.2 += 1;
-        } else {
-            self.entries.push((name.to_string(), secs, 1));
+    fn slot(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.index.get(name) {
+            return i;
         }
+        let i = self.entries.len();
+        self.entries.push((name.to_string(), 0.0, 0));
+        self.index.insert(name.to_string(), i);
+        i
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        let i = self.slot(name);
+        self.entries[i].1 += secs;
+        self.entries[i].2 += 1;
     }
 
     pub fn total(&self) -> f64 {
@@ -66,7 +78,7 @@ impl PhaseTimings {
     }
 
     pub fn get(&self, name: &str) -> Option<f64> {
-        self.entries.iter().find(|e| e.0 == name).map(|e| e.1)
+        self.index.get(name).map(|&i| self.entries[i].1)
     }
 
     pub fn entries(&self) -> &[(String, f64, u64)] {
@@ -75,12 +87,9 @@ impl PhaseTimings {
 
     pub fn merge(&mut self, other: &PhaseTimings) {
         for (name, secs, count) in &other.entries {
-            if let Some(e) = self.entries.iter_mut().find(|e| &e.0 == name) {
-                e.1 += secs;
-                e.2 += count;
-            } else {
-                self.entries.push((name.clone(), *secs, *count));
-            }
+            let i = self.slot(name);
+            self.entries[i].1 += secs;
+            self.entries[i].2 += count;
         }
     }
 
@@ -132,6 +141,18 @@ mod tests {
         let report = p.report();
         assert!(report.contains("fft"));
         assert!(report.contains("spread"));
+    }
+
+    #[test]
+    fn entries_keep_insertion_order() {
+        let mut p = PhaseTimings::new();
+        for name in ["spread", "fft-forward", "multiply", "fft-backward", "gather"] {
+            p.add(name, 0.25);
+        }
+        p.add("multiply", 0.25); // repeat must not reorder
+        let names: Vec<&str> = p.entries().iter().map(|e| e.0.as_str()).collect();
+        assert_eq!(names, ["spread", "fft-forward", "multiply", "fft-backward", "gather"]);
+        assert_eq!(p.entries()[2].2, 2);
     }
 
     #[test]

@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""Validate the telemetry artifacts the bench smoke emits.
+
+Two formats (see docs/OBSERVABILITY.md):
+
+* ``--trace FILE`` — a Chrome ``trace_event`` JSON document, as written
+  by ``--trace-out`` / ``obs::write_trace``. Checks the document shape
+  (``traceEvents`` list, ``displayTimeUnit``), and for every event the
+  required keys (``name``/``cat``/``ph``/``ts``/``dur``/``pid``/
+  ``tid``), ``ph == "X"`` complete events, non-negative microsecond
+  timestamps, and that at least ``--min-events`` spans were recorded
+  (a trace from an instrumented run must not be empty).
+
+* ``--prom FILE`` — Prometheus text exposition format 0.0.4, as written
+  by ``Metrics::prometheus_text()``. Checks that every sample belongs
+  to a metric announced by ``# HELP`` + ``# TYPE``, values parse as
+  numbers, histogram bucket counts are cumulative (monotone
+  non-decreasing in ``le`` order), the ``+Inf`` bucket is present and
+  equals ``<name>_count``, and ``_sum`` is non-negative.
+
+Usage:
+    python3 scripts/validate_telemetry.py --trace TRACE_matvec.json \
+        --prom PROM_coordinator.txt [--min-events 1]
+
+Exit code 0 when every given file validates; 1 otherwise. Stdlib only.
+"""
+
+import argparse
+import json
+import sys
+
+TRACE_EVENT_KEYS = ("name", "cat", "ph", "ts", "dur", "pid", "tid")
+
+
+def fail(errors, msg):
+    errors.append(msg)
+
+
+def validate_trace(path, min_events):
+    errors = []
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: cannot parse: {e}"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be an object"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{path}: missing 'traceEvents' list"]
+    if doc.get("displayTimeUnit") not in ("ms", "ns"):
+        fail(errors, f"{path}: displayTimeUnit must be 'ms' or 'ns'")
+    if len(events) < min_events:
+        fail(errors, f"{path}: {len(events)} events, expected >= {min_events}")
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(errors, f"{path}: event {i} is not an object")
+            continue
+        missing = [k for k in TRACE_EVENT_KEYS if k not in ev]
+        if missing:
+            fail(errors, f"{path}: event {i} missing keys {missing}")
+            continue
+        if ev["ph"] != "X":
+            fail(errors, f"{path}: event {i} ph={ev['ph']!r}, expected 'X'")
+        if not isinstance(ev["name"], str) or not ev["name"]:
+            fail(errors, f"{path}: event {i} has empty name")
+        for k in ("ts", "dur"):
+            v = ev[k]
+            if not isinstance(v, (int, float)) or v < 0:
+                fail(errors, f"{path}: event {i} {k}={v!r} must be a non-negative number")
+    return errors
+
+
+def parse_number(s):
+    if s == "+Inf":
+        return float("inf")
+    return float(s)
+
+
+def split_sample(line):
+    """Return (metric_name, labels_dict, value) for one sample line."""
+    if "{" in line:
+        name, rest = line.split("{", 1)
+        labelstr, valstr = rest.rsplit("}", 1)
+        labels = {}
+        for part in labelstr.split(","):
+            if not part:
+                continue
+            k, v = part.split("=", 1)
+            labels[k.strip()] = v.strip().strip('"')
+        return name.strip(), labels, parse_number(valstr.split()[0])
+    fields = line.split()
+    return fields[0], {}, parse_number(fields[1])
+
+
+def validate_prom(path):
+    errors = []
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            text = f.read()
+    except OSError as e:
+        return [f"{path}: cannot read: {e}"]
+    announced = {}  # base metric name -> type
+    samples = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in ("counter", "gauge", "histogram"):
+                fail(errors, f"{path}:{lineno}: malformed TYPE line: {line}")
+            else:
+                announced[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        try:
+            samples.append((lineno, *split_sample(line)))
+        except (ValueError, IndexError):
+            fail(errors, f"{path}:{lineno}: malformed sample line: {line}")
+    if not announced:
+        fail(errors, f"{path}: no # TYPE lines found")
+
+    def base_name(name):
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[: -len(suffix)] in announced:
+                return name[: -len(suffix)]
+        return name
+
+    hist = {}  # base -> {"buckets": [(le, value)], "sum": v, "count": v}
+    for lineno, name, labels, value in samples:
+        base = base_name(name)
+        if base not in announced:
+            fail(errors, f"{path}:{lineno}: sample '{name}' not announced by # TYPE")
+            continue
+        if announced[base] == "histogram":
+            h = hist.setdefault(base, {"buckets": [], "sum": None, "count": None})
+            if name.endswith("_bucket"):
+                if "le" not in labels:
+                    fail(errors, f"{path}:{lineno}: bucket sample without 'le' label")
+                else:
+                    h["buckets"].append((parse_number(labels["le"]), value))
+            elif name.endswith("_sum"):
+                h["sum"] = value
+            elif name.endswith("_count"):
+                h["count"] = value
+        elif value < 0 and announced[base] == "counter":
+            fail(errors, f"{path}:{lineno}: counter '{name}' is negative")
+    for base, h in sorted(hist.items()):
+        if not h["buckets"]:
+            fail(errors, f"{path}: histogram '{base}' has no buckets")
+            continue
+        les = [le for le, _ in h["buckets"]]
+        if les != sorted(les):
+            fail(errors, f"{path}: histogram '{base}' buckets not in increasing le order")
+        counts = [c for _, c in h["buckets"]]
+        if any(b < a for a, b in zip(counts, counts[1:])):
+            fail(errors, f"{path}: histogram '{base}' bucket counts are not cumulative")
+        if les[-1] != float("inf"):
+            fail(errors, f"{path}: histogram '{base}' missing +Inf bucket")
+        if h["count"] is None or h["sum"] is None:
+            fail(errors, f"{path}: histogram '{base}' missing _count or _sum")
+        elif counts[-1] != h["count"]:
+            fail(
+                errors,
+                f"{path}: histogram '{base}' +Inf bucket {counts[-1]} != _count {h['count']}",
+            )
+        if h["sum"] is not None and h["sum"] < 0:
+            fail(errors, f"{path}: histogram '{base}' _sum is negative")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", action="append", default=[], help="trace_event JSON file")
+    ap.add_argument("--prom", action="append", default=[], help="Prometheus text file")
+    ap.add_argument("--min-events", type=int, default=1)
+    args = ap.parse_args()
+    if not args.trace and not args.prom:
+        ap.error("give at least one --trace or --prom file")
+    errors = []
+    for path in args.trace:
+        errors.extend(validate_trace(path, args.min_events))
+    for path in args.prom:
+        errors.extend(validate_prom(path))
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    ok = not errors
+    checked = len(args.trace) + len(args.prom)
+    print(f"validate_telemetry: {checked} file(s), {'OK' if ok else f'{len(errors)} error(s)'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
