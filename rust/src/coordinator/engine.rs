@@ -7,6 +7,7 @@ use crate::fastsum::NormalizedAdjacency;
 use crate::graph::dense::{DenseKernelOperator, DenseMode};
 use crate::graph::normalized::NormalizedOperator;
 use crate::graph::operator::LinearOperator;
+use crate::robust::health;
 use crate::runtime::{HloFastsumOperator, Manifest, PjrtContext};
 use crate::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
 use std::sync::Arc;
@@ -43,6 +44,24 @@ pub struct OperatorSpec {
     pub engine: EngineKind,
 }
 
+impl OperatorSpec {
+    /// Admission health guard for operator construction: the point
+    /// cloud must be finite and shaped `n × d`, and the kernel shape
+    /// parameter finite and positive (see [`crate::robust::health`]).
+    /// Every `build_*` entry point runs this before doing any work.
+    pub fn validate(&self) -> Result<(), crate::robust::EngineError> {
+        if self.d == 0 || self.points.is_empty() || self.points.len() % self.d != 0 {
+            return Err(crate::robust::EngineError::invalid(format!(
+                "point cloud has {} coordinates, not a positive multiple of d = {}",
+                self.points.len(),
+                self.d
+            )));
+        }
+        health::validate_finite("point cloud", &self.points)?;
+        health::validate_kernel(&self.kernel)
+    }
+}
+
 /// Holds the lazily-created PJRT context + artifact manifest.
 pub struct EngineRegistry {
     pjrt: Option<Arc<PjrtContext>>,
@@ -67,6 +86,7 @@ impl EngineRegistry {
 
     /// Build the `A = D^{-1/2} W D^{-1/2}` operator for a spec.
     pub fn build_normalized(&mut self, spec: &OperatorSpec) -> anyhow::Result<Arc<dyn LinearOperator>> {
+        spec.validate()?;
         match spec.engine {
             EngineKind::Native => {
                 let op = NormalizedAdjacency::new(&spec.points, spec.d, spec.kernel, spec.params)?;
@@ -95,6 +115,7 @@ impl EngineRegistry {
 
     /// Build the raw adjacency (`W x`) operator for a spec.
     pub fn build_adjacency(&mut self, spec: &OperatorSpec) -> anyhow::Result<Arc<dyn LinearOperator>> {
+        spec.validate()?;
         match spec.engine {
             EngineKind::Native => Ok(Arc::new(crate::fastsum::FastsumOperator::new(
                 &spec.points,
@@ -134,6 +155,7 @@ pub fn build_sharded_normalized(
     shards: usize,
     strategy: PartitionStrategy,
 ) -> anyhow::Result<Arc<dyn LinearOperator>> {
+    spec.validate()?;
     anyhow::ensure!(
         spec.engine == EngineKind::Native,
         "sharded execution requires the native NFFT engine (got {:?})",
@@ -187,6 +209,29 @@ mod tests {
         // Non-native engines refuse to shard.
         let dense = tiny_spec(EngineKind::DenseDirect);
         assert!(build_sharded_normalized(&dense, 2, PartitionStrategy::Contiguous).is_err());
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected_before_building() {
+        let mut reg = EngineRegistry::new("artifacts");
+        // Non-finite kernel parameter.
+        let mut bad = tiny_spec(EngineKind::Native);
+        bad.kernel = Kernel::Gaussian { sigma: f64::NAN };
+        assert!(reg.build_normalized(&bad).is_err());
+        // NaN coordinate in the cloud.
+        let mut bad = tiny_spec(EngineKind::DenseDirect);
+        bad.points[5] = f64::INFINITY;
+        assert!(reg.build_adjacency(&bad).is_err());
+        // Ragged shape.
+        let mut bad = tiny_spec(EngineKind::Native);
+        bad.points.pop();
+        assert!(build_sharded_normalized(&bad, 2, PartitionStrategy::Contiguous).is_err());
+        // The error carries the typed class through anyhow.
+        let mut bad = tiny_spec(EngineKind::Native);
+        bad.kernel = Kernel::Multiquadric { c: -1.0 };
+        let err = reg.build_normalized(&bad).unwrap_err();
+        let engine_err = err.downcast_ref::<crate::robust::EngineError>().unwrap();
+        assert_eq!(engine_err.class(), "invalid-input");
     }
 
     #[test]

@@ -33,6 +33,21 @@ pub enum JobResult {
     HybridNystrom(Result<crate::nystrom::NystromResult, crate::nystrom::NystromError>),
     Matvec(Vec<f64>),
     BlockMatvec(Vec<f64>),
+    /// The job did not produce a usable result: rejected at admission,
+    /// cancelled/timed out, broken down numerically, or the worker
+    /// panicked (caught — the worker survives). See
+    /// `docs/ROBUSTNESS.md` for the taxonomy.
+    Failed(crate::robust::EngineError),
+}
+
+impl JobResult {
+    /// The typed failure, if this result is one.
+    pub fn error(&self) -> Option<&crate::robust::EngineError> {
+        match self {
+            JobResult::Failed(e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
 impl Job {

@@ -19,6 +19,17 @@ pub struct Metrics {
     pub jobs_submitted: AtomicU64,
     pub jobs_completed: AtomicU64,
     pub jobs_failed: AtomicU64,
+    /// Jobs rejected at admission (invalid input — never reached a
+    /// worker).
+    pub jobs_rejected: AtomicU64,
+    /// Jobs that ended with an expired deadline.
+    pub jobs_timeout: AtomicU64,
+    /// Jobs whose final attempt panicked in a worker (the panic is
+    /// caught and surfaced as a typed failure).
+    pub jobs_panicked: AtomicU64,
+    /// Degraded-path retries taken after a retryable failure (see
+    /// `docs/ROBUSTNESS.md`, degradation ladder).
+    pub jobs_retried: AtomicU64,
     pub matvecs: AtomicU64,
     pub matvec_batches: AtomicU64,
     /// Total vectors flushed through the batcher.
@@ -107,6 +118,10 @@ impl Metrics {
         o.insert("jobs_submitted".to_string(), num(self.jobs_submitted.load(Ordering::Relaxed)));
         o.insert("jobs_completed".to_string(), num(self.jobs_completed.load(Ordering::Relaxed)));
         o.insert("jobs_failed".to_string(), num(self.jobs_failed.load(Ordering::Relaxed)));
+        o.insert("jobs_rejected".to_string(), num(self.jobs_rejected.load(Ordering::Relaxed)));
+        o.insert("jobs_timeout".to_string(), num(self.jobs_timeout.load(Ordering::Relaxed)));
+        o.insert("jobs_panicked".to_string(), num(self.jobs_panicked.load(Ordering::Relaxed)));
+        o.insert("jobs_retried".to_string(), num(self.jobs_retried.load(Ordering::Relaxed)));
         o.insert("matvecs".to_string(), num(self.matvecs.load(Ordering::Relaxed)));
         o.insert("matvec_batches".to_string(), num(self.matvec_batches.load(Ordering::Relaxed)));
         o.insert("batched_vectors".to_string(), num(self.batched_vectors.load(Ordering::Relaxed)));
@@ -166,6 +181,26 @@ impl Metrics {
             self.jobs_failed.load(Ordering::Relaxed),
         )
         .counter(
+            "nfft_jobs_rejected_total",
+            "Jobs rejected at admission (invalid input).",
+            self.jobs_rejected.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_jobs_timeout_total",
+            "Jobs that exceeded their deadline.",
+            self.jobs_timeout.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_jobs_panicked_total",
+            "Jobs whose final attempt panicked in a worker (caught).",
+            self.jobs_panicked.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_jobs_retried_total",
+            "Degraded-path retries after retryable failures.",
+            self.jobs_retried.load(Ordering::Relaxed),
+        )
+        .counter(
             "nfft_matvecs_total",
             "Matrix-vector products executed.",
             self.matvecs.load(Ordering::Relaxed),
@@ -205,10 +240,14 @@ impl Metrics {
             }
         };
         format!(
-            "jobs: {} submitted, {} completed, {} failed | matvecs: {} ({} batches, {} vectors) | op state: {} B | latency: mean {:.0}us p50 <={} p99 <={}",
+            "jobs: {} submitted, {} completed, {} failed, {} rejected, {} timeout, {} panicked, {} retried | matvecs: {} ({} batches, {} vectors) | op state: {} B | latency: mean {:.0}us p50 <={} p99 <={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
+            self.jobs_rejected.load(Ordering::Relaxed),
+            self.jobs_timeout.load(Ordering::Relaxed),
+            self.jobs_panicked.load(Ordering::Relaxed),
+            self.jobs_retried.load(Ordering::Relaxed),
             self.matvecs.load(Ordering::Relaxed),
             self.matvec_batches.load(Ordering::Relaxed),
             self.batched_vectors.load(Ordering::Relaxed),
@@ -275,6 +314,31 @@ mod tests {
         assert_eq!(buckets[13].get("le_us"), Some(&Json::Null));
         // Parses back as valid JSON.
         assert!(crate::util::json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn robustness_counters_render_everywhere() {
+        let m = Metrics::new();
+        m.jobs_rejected.fetch_add(2, Ordering::Relaxed);
+        m.jobs_timeout.fetch_add(1, Ordering::Relaxed);
+        m.jobs_panicked.fetch_add(3, Ordering::Relaxed);
+        m.jobs_retried.fetch_add(4, Ordering::Relaxed);
+        let j = m.metrics_json();
+        assert_eq!(j.get("jobs_rejected").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("jobs_timeout").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("jobs_panicked").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("jobs_retried").and_then(Json::as_f64), Some(4.0));
+        let text = m.prometheus_text();
+        assert!(text.contains("# TYPE nfft_jobs_rejected_total counter"));
+        assert!(text.contains("nfft_jobs_rejected_total 2\n"));
+        assert!(text.contains("nfft_jobs_timeout_total 1\n"));
+        assert!(text.contains("nfft_jobs_panicked_total 3\n"));
+        assert!(text.contains("nfft_jobs_retried_total 4\n"));
+        let r = m.report();
+        assert!(r.contains("2 rejected"));
+        assert!(r.contains("1 timeout"));
+        assert!(r.contains("3 panicked"));
+        assert!(r.contains("4 retried"));
     }
 
     #[test]

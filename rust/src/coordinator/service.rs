@@ -6,27 +6,43 @@
 //! ([`Job::BlockMatvec`], Nyström, block Lanczos) execute as single
 //! `apply_block` calls that parallelise across columns inside the
 //! engine.
+//!
+//! Execution is fault-tolerant (see `docs/ROBUSTNESS.md`):
+//!
+//! * malformed jobs are rejected at admission with a typed
+//!   [`EngineError::InvalidInput`] before touching a worker;
+//! * worker panics are caught per job — the pool keeps serving and the
+//!   submitter gets [`JobResult::Failed`] instead of a hang;
+//! * retryable failures (panic, numerical breakdown) are retried once
+//!   with the SIMD dispatch pinned to the scalar oracle;
+//! * [`Coordinator::submit_with_deadline`] threads a [`CancelToken`]
+//!   through the solver loops, turning budget overruns into typed
+//!   [`EngineError::Timeout`] results.
 
 use crate::coordinator::engine::{build_sharded_normalized, OperatorSpec};
 use crate::coordinator::jobs::{Job, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::graph::laplacian::ShiftedOperator;
 use crate::graph::operator::LinearOperator;
-use crate::krylov::cg::cg_solve;
-use crate::krylov::lanczos::{block_lanczos_eigs, lanczos_eigs};
+use crate::krylov::cg::cg_solve_cancellable;
+use crate::krylov::lanczos::{block_lanczos_eigs_cancellable, lanczos_eigs_cancellable};
 use crate::nystrom::hybrid::hybrid_nystrom;
 use crate::obs::{self, FlightRecord, FlightRecorder};
+use crate::robust::{fault, health, CancelToken, EngineError};
 use crate::util::json::Json;
+use crate::util::lock_recover;
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Jobs retained by the flight recorder for post-mortem snapshots.
 const FLIGHT_CAPACITY: usize = 256;
 
 enum Envelope {
-    Work { id: u64, job: Job, reply: Sender<(u64, JobResult)> },
+    Work { id: u64, job: Job, token: CancelToken, reply: Sender<(u64, JobResult)> },
     Shutdown,
 }
 
@@ -46,10 +62,24 @@ pub struct JobHandle {
 }
 
 impl JobHandle {
-    /// Block until the result arrives.
+    /// Block until the result arrives. A reply channel dropped without
+    /// an answer (coordinator torn down mid-flight) surfaces as a typed
+    /// [`JobResult::Failed`] rather than a panic.
     pub fn wait(self) -> JobResult {
-        let (_, result) = self.rx.recv().expect("coordinator dropped reply channel");
-        result
+        match self.rx.recv() {
+            Ok((_, result)) => result,
+            Err(_) => JobResult::Failed(EngineError::Cancelled {
+                reason: "coordinator dropped the reply channel".into(),
+            }),
+        }
+    }
+
+    /// A handle whose result is already decided (admission rejection,
+    /// dead worker pool) — `wait` returns the failure immediately.
+    fn failed(id: u64, err: EngineError) -> JobHandle {
+        let (reply, rx) = channel();
+        let _ = reply.send((id, JobResult::Failed(err)));
+        JobHandle { id, rx }
     }
 }
 
@@ -71,28 +101,36 @@ impl Coordinator {
             let metrics = metrics.clone();
             let flight = flight.clone();
             handles.push(std::thread::spawn(move || loop {
+                // A worker that panicked mid-job leaves the receiver
+                // mutex poisoned; surviving workers recover the guard
+                // and keep draining the queue.
                 let msg = {
-                    let guard = rx.lock().unwrap();
+                    let guard = lock_recover(&rx);
                     guard.recv()
                 };
                 match msg {
-                    Ok(Envelope::Work { id, job, reply }) => {
+                    Ok(Envelope::Work { id, job, token, reply }) => {
                         let t = std::time::Instant::now();
                         let result = {
                             let _span = obs::span_id("job.execute", job.kind(), id);
-                            run_job(op.as_ref(), &op, &job)
+                            execute_with_recovery(op.as_ref(), &op, &job, &token, &metrics)
                         };
                         let micros = t.elapsed().as_micros() as u64;
                         metrics.record_latency(micros);
-                        metrics
-                            .jobs_completed
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                        match result.error() {
+                            Some(EngineError::Timeout { .. }) => {
+                                metrics.jobs_timeout.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Some(EngineError::WorkerPanic { .. }) => {
+                                metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+                            }
+                            _ => {}
+                        }
                         let rec =
                             flight_record(id, &job, &result, micros as f64 / 1e6, op.dim());
                         if !rec.ok {
-                            metrics
-                                .jobs_failed
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                         }
                         flight.record(&rec);
                         let _ = reply.send((id, result));
@@ -146,14 +184,50 @@ impl Coordinator {
 
     /// Submit a job; returns a handle to wait on.
     pub fn submit(&mut self, job: Job) -> JobHandle {
+        self.submit_with_token(job, CancelToken::never())
+    }
+
+    /// Submit a job with a wall-clock budget: if the deadline passes
+    /// before the job finishes, its solver loop stops at the next
+    /// iteration boundary and the handle yields
+    /// `JobResult::Failed(EngineError::Timeout)`.
+    pub fn submit_with_deadline(&mut self, job: Job, budget: Duration) -> JobHandle {
+        self.submit_with_token(job, CancelToken::with_deadline(budget))
+    }
+
+    /// Submit a job carrying a caller-owned [`CancelToken`]; keep a
+    /// clone to cancel the job from outside.
+    pub fn submit_with_token(&mut self, job: Job, token: CancelToken) -> JobHandle {
         let id = self.next_id;
         self.next_id += 1;
         let _span = obs::span_id("job.submit", job.kind(), id);
-        self.metrics.jobs_submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        // Admission health guard: malformed payloads never reach a
+        // worker. The rejection is a normal typed result — counted,
+        // flight-recorded, delivered through the same handle.
+        if let Err(e) = validate_job(&job, self.op.dim()) {
+            self.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            self.flight.record(&FlightRecord {
+                id,
+                kind: job.kind(),
+                columns: job_columns(&job, self.op.dim()),
+                total_secs: 0.0,
+                matvec_secs: 0.0,
+                ortho_secs: 0.0,
+                bytes: 0,
+                ok: false,
+                err: Some(e.class()),
+            });
+            return JobHandle::failed(id, e);
+        }
         let (reply, rx) = channel();
-        self.tx
-            .send(Envelope::Work { id, job, reply })
-            .expect("worker pool is gone");
+        if self.tx.send(Envelope::Work { id, job, token, reply }).is_err() {
+            return JobHandle::failed(
+                id,
+                EngineError::Cancelled { reason: "worker pool is gone".into() },
+            );
+        }
         JobHandle { id, rx }
     }
 
@@ -203,11 +277,12 @@ fn flight_record(
     dim: usize,
 ) -> FlightRecord {
     let columns = job_columns(job, dim);
-    let (matvec_secs, ortho_secs, ok) = match result {
-        JobResult::Eig(r) => (r.matvec_secs, r.ortho_secs, true),
-        JobResult::Solve(r) => (0.0, 0.0, r.converged),
-        JobResult::HybridNystrom(r) => (0.0, 0.0, r.is_ok()),
-        JobResult::Matvec(_) | JobResult::BlockMatvec(_) => (0.0, 0.0, true),
+    let (matvec_secs, ortho_secs, ok, err) = match result {
+        JobResult::Eig(r) => (r.matvec_secs, r.ortho_secs, true, None),
+        JobResult::Solve(r) => (0.0, 0.0, r.converged, None),
+        JobResult::HybridNystrom(r) => (0.0, 0.0, r.is_ok(), None),
+        JobResult::Matvec(_) | JobResult::BlockMatvec(_) => (0.0, 0.0, true, None),
+        JobResult::Failed(e) => (0.0, 0.0, false, Some(e.class())),
     };
     FlightRecord {
         id,
@@ -218,30 +293,155 @@ fn flight_record(
         ortho_secs,
         bytes: 2 * columns * dim as u64 * 8,
         ok,
+        err,
     }
 }
 
-fn run_job(op: &dyn LinearOperator, op_arc: &Arc<dyn LinearOperator>, job: &Job) -> JobResult {
+/// Admission health guard (see [`crate::robust::health`]): payload
+/// vectors must match the operator dimension and be finite, and solver
+/// parameters must be sane, before a job is allowed onto the queue.
+fn validate_job(job: &Job, dim: usize) -> Result<(), EngineError> {
     match job {
-        Job::Eig(opts) => JobResult::Eig(lanczos_eigs(op, *opts)),
-        Job::BlockEig(opts) => JobResult::Eig(block_lanczos_eigs(op, *opts)),
+        Job::Matvec { x } => health::validate_vector("matvec input x", x, dim),
+        Job::BlockMatvec { xs } => health::validate_block("block matvec input xs", xs, dim),
+        Job::SslSolve { beta, rhs, opts } => {
+            health::validate_positive("SSL coupling beta", *beta)?;
+            health::validate_positive("CG tolerance", opts.tol)?;
+            health::validate_vector("SSL right-hand side", rhs, dim)
+        }
+        Job::Eig(opts) => {
+            if opts.k == 0 {
+                return Err(EngineError::invalid("eig job asks for k = 0 eigenpairs"));
+            }
+            health::validate_positive("Lanczos tolerance", opts.tol)
+        }
+        Job::BlockEig(opts) => {
+            if opts.k == 0 || opts.block == 0 {
+                return Err(EngineError::invalid(format!(
+                    "block eig job needs k >= 1 and block >= 1, got k = {}, block = {}",
+                    opts.k, opts.block
+                )));
+            }
+            health::validate_positive("block Lanczos tolerance", opts.tol)
+        }
+        Job::HybridNystrom(opts) => {
+            if opts.k == 0 || opts.m < opts.k || opts.l < opts.m {
+                return Err(EngineError::invalid(format!(
+                    "hybrid Nystrom needs 1 <= k <= m <= l, got k = {}, m = {}, l = {}",
+                    opts.k, opts.m, opts.l
+                )));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Run a job with the full recovery ladder: catch panics, convert
+/// solver-embedded errors to [`JobResult::Failed`], and retry a
+/// retryable failure ONCE with SIMD dispatch pinned to the scalar
+/// oracle (the retry is process-global while it runs; see
+/// `docs/ROBUSTNESS.md`).
+fn execute_with_recovery(
+    op: &dyn LinearOperator,
+    op_arc: &Arc<dyn LinearOperator>,
+    job: &Job,
+    token: &CancelToken,
+    metrics: &Metrics,
+) -> JobResult {
+    let first = run_job_caught(op, op_arc, job, token);
+    match first.error() {
+        Some(e) if e.retryable() && !token.is_stopped() => {
+            metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
+            crate::util::simd::with_override(Some(crate::util::simd::Level::Scalar), || {
+                run_job_caught(op, op_arc, job, token)
+            })
+        }
+        _ => first,
+    }
+}
+
+/// One attempt at a job with panic isolation: a panic anywhere in the
+/// solver/operator stack is caught and surfaced as a typed
+/// [`EngineError::WorkerPanic`]; the worker thread survives.
+fn run_job_caught(
+    op: &dyn LinearOperator,
+    op_arc: &Arc<dyn LinearOperator>,
+    job: &Job,
+    token: &CancelToken,
+) -> JobResult {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_job(op, op_arc, job, token)
+    })) {
+        Ok(result) => result,
+        Err(payload) => JobResult::Failed(EngineError::WorkerPanic {
+            job: job.kind(),
+            message: panic_message(payload.as_ref()),
+        }),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn run_job(
+    op: &dyn LinearOperator,
+    op_arc: &Arc<dyn LinearOperator>,
+    job: &Job,
+    token: &CancelToken,
+) -> JobResult {
+    fault::fire("job.execute");
+    if let Err(e) = token.check() {
+        return JobResult::Failed(e);
+    }
+    match job {
+        Job::Eig(opts) => match lanczos_eigs_cancellable(op, *opts, token) {
+            r if r.error.is_some() => JobResult::Failed(r.error.unwrap()),
+            r => JobResult::Eig(r),
+        },
+        Job::BlockEig(opts) => match block_lanczos_eigs_cancellable(op, *opts, token) {
+            r if r.error.is_some() => JobResult::Failed(r.error.unwrap()),
+            r => JobResult::Eig(r),
+        },
         Job::SslSolve { beta, rhs, opts } => {
             let system = ShiftedOperator::ssl_system(op_arc.clone(), *beta);
-            JobResult::Solve(cg_solve(&system, rhs, opts))
+            match cg_solve_cancellable(&system, rhs, opts, token) {
+                r if r.error.is_some() => JobResult::Failed(r.error.unwrap()),
+                r => JobResult::Solve(r),
+            }
         }
         Job::HybridNystrom(opts) => JobResult::HybridNystrom(hybrid_nystrom(op, *opts)),
         Job::Matvec { x } => {
             let mut y = vec![0.0; op.dim()];
-            op.apply(x, &mut y);
+            if let Err(e) = op.apply_cancellable(x, &mut y, token) {
+                return JobResult::Failed(e);
+            }
+            if let Err(e) = health::check_output_finite("matvec", &y) {
+                return JobResult::Failed(e);
+            }
             JobResult::Matvec(y)
         }
         Job::BlockMatvec { xs } => {
-            assert!(
-                !xs.is_empty() && xs.len() % op.dim() == 0,
-                "block matvec payload not a multiple of dim()"
-            );
+            // Admission already validated the shape; keep a typed
+            // defensive check instead of the old assert.
+            if xs.is_empty() || xs.len() % op.dim() != 0 {
+                return JobResult::Failed(EngineError::invalid(
+                    "block matvec payload is not a positive multiple of dim()",
+                ));
+            }
             let mut ys = vec![0.0; xs.len()];
-            op.apply_block(xs, &mut ys);
+            if let Err(e) = op.apply_block_cancellable(xs, &mut ys, token) {
+                return JobResult::Failed(e);
+            }
+            if let Err(e) = health::check_output_finite("block-matvec", &ys) {
+                return JobResult::Failed(e);
+            }
             JobResult::BlockMatvec(ys)
         }
     }
@@ -446,6 +646,88 @@ mod tests {
             Some(2.0 * 8.0 * n as f64)
         );
         c.shutdown();
+    }
+
+    #[test]
+    fn rejected_jobs_fail_typed_and_pool_keeps_serving() {
+        let op = spiral_operator(50);
+        let n = op.dim();
+        let mut c = Coordinator::new(op, 1);
+        // NaN payload and dimension mismatch are both turned away at
+        // admission with a typed error.
+        let mut bad = vec![1.0; n];
+        bad[3] = f64::NAN;
+        let h = c.submit(Job::Matvec { x: bad });
+        match h.wait() {
+            JobResult::Failed(e) => assert_eq!(e.class(), "invalid-input"),
+            _ => panic!("NaN payload must be rejected"),
+        }
+        let h = c.submit(Job::Matvec { x: vec![1.0; n + 1] });
+        assert_eq!(h.wait().error().map(|e| e.class()), Some("invalid-input"));
+        let h = c.submit(Job::Eig(LanczosOptions { k: 0, ..Default::default() }));
+        assert_eq!(h.wait().error().map(|e| e.class()), Some("invalid-input"));
+        let m = c.metrics();
+        assert_eq!(m.jobs_rejected.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(m.jobs_completed.load(std::sync::atomic::Ordering::Relaxed), 0);
+        // Rejections are flight-recorded with the error class.
+        let snap = c.flight().snapshot();
+        assert_eq!(snap.len(), 3);
+        assert!(snap.iter().all(|r| !r.ok && r.err == Some("invalid-input")));
+        // The pool is untouched and serves the next well-formed job.
+        let h = c.submit(Job::Matvec { x: vec![1.0; n] });
+        assert!(matches!(h.wait(), JobResult::Matvec(_)));
+        c.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_times_out_typed() {
+        let op = spiral_operator(50);
+        let mut c = Coordinator::new(op, 1);
+        let h = c.submit_with_deadline(
+            Job::Eig(LanczosOptions { k: 3, ..Default::default() }),
+            std::time::Duration::ZERO,
+        );
+        match h.wait() {
+            JobResult::Failed(EngineError::Timeout { budget_ms }) => assert_eq!(budget_ms, 0),
+            other => panic!("expected Timeout, got {:?}", other.error()),
+        }
+        let m = c.metrics();
+        assert_eq!(m.jobs_timeout.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(m.jobs_retried.load(std::sync::atomic::Ordering::Relaxed), 0);
+        let snap = c.flight().snapshot();
+        assert_eq!(snap.last().map(|r| r.err), Some(Some("timeout")));
+        c.shutdown();
+    }
+
+    #[test]
+    fn cancelled_token_stops_submitted_job() {
+        let op = spiral_operator(50);
+        let mut c = Coordinator::new(op, 1);
+        let token = CancelToken::never();
+        token.cancel(); // cancelled before the worker picks it up
+        let h = c.submit_with_token(
+            Job::Eig(LanczosOptions { k: 3, ..Default::default() }),
+            token,
+        );
+        assert_eq!(h.wait().error().map(|e| e.class()), Some("cancelled"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn wait_on_dead_coordinator_is_typed_not_a_panic() {
+        let op = spiral_operator(50);
+        let n = op.dim();
+        let mut c = Coordinator::new(op, 1);
+        let rx = {
+            let h = c.submit(Job::Matvec { x: vec![1.0; n] });
+            let _ = h.wait(); // drain so shutdown is clean
+            c.shutdown();
+            // A handle constructed against a dropped channel.
+            let (_tx, rx) = channel::<(u64, JobResult)>();
+            rx
+        };
+        let orphan = JobHandle { id: 99, rx };
+        assert_eq!(orphan.wait().error().map(|e| e.class()), Some("cancelled"));
     }
 
     #[test]

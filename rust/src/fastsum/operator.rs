@@ -16,6 +16,8 @@ use crate::fft::Complex;
 use crate::graph::operator::LinearOperator;
 use crate::nfft::{NfftGeometry, NfftPlan, SpreadLayout, WindowKind};
 use crate::obs;
+use crate::robust::fault;
+use crate::util::lock_recover;
 use crate::util::pool::BufferPool;
 use crate::util::timer::{PhaseTimings, Timer};
 use rayon::prelude::*;
@@ -327,7 +329,7 @@ impl FastsumOperator {
         drop(span);
         self.rgrids.put(rgrid);
         self.specs.put(spec);
-        let mut timings = self.timings.lock().unwrap();
+        let mut timings = lock_recover(&self.timings);
         timings.add("adjoint", t_adj);
         timings.add("multiply", t_mul);
         timings.add("forward", t_fwd);
@@ -379,9 +381,9 @@ impl FastsumOperator {
         // The slabs are recycled across calls (steady state allocates
         // nothing); every element is overwritten before being read, so
         // stale contents are harmless.
-        let mut grids = std::mem::take(&mut *self.block_rgrid_slab.lock().unwrap());
+        let mut grids = std::mem::take(&mut *lock_recover(&self.block_rgrid_slab));
         grids.resize(k * ng, 0.0);
-        let mut specs = std::mem::take(&mut *self.block_spec_slab.lock().unwrap());
+        let mut specs = std::mem::take(&mut *lock_recover(&self.block_spec_slab));
         specs.resize(k * nh, Complex::ZERO);
         // Step 1: spread all columns, then one batched r2c pass.
         let span = obs::span_cat("fastsum.adjoint", "fastsum");
@@ -417,12 +419,12 @@ impl FastsumOperator {
         // than a bounded amount of idle memory once a burst is over.
         const MAX_RETAINED_SLAB_BYTES: usize = 256 << 20;
         if grids.capacity() * std::mem::size_of::<f64>() <= MAX_RETAINED_SLAB_BYTES {
-            *self.block_rgrid_slab.lock().unwrap() = grids;
+            *lock_recover(&self.block_rgrid_slab) = grids;
         }
         if specs.capacity() * std::mem::size_of::<Complex>() <= MAX_RETAINED_SLAB_BYTES {
-            *self.block_spec_slab.lock().unwrap() = specs;
+            *lock_recover(&self.block_spec_slab) = specs;
         }
-        let mut timings = self.timings.lock().unwrap();
+        let mut timings = lock_recover(&self.timings);
         timings.add("adjoint", t_adj);
         timings.add("multiply", t_mul);
         timings.add("forward", t_fwd);
@@ -436,6 +438,10 @@ impl FastsumOperator {
         for (yi, xi) in y.iter_mut().zip(x) {
             *yi -= k0 * xi;
         }
+        // Chaos-suite data-fault site: disarmed it is one relaxed
+        // load; armed it poisons y[0] with NaN to exercise the
+        // coordinator's output health scan.
+        fault::corrupt("fastsum.apply", y);
     }
 
     /// `y = W x` over the fully-complex oracle pipeline.
@@ -457,6 +463,7 @@ impl FastsumOperator {
         for (yi, xi) in ys.iter_mut().zip(xs) {
             *yi -= k0 * xi;
         }
+        fault::corrupt("fastsum.apply", ys);
     }
 
     /// Degree vector `d = W·1` computed with one fastsum product (§3).
@@ -469,7 +476,7 @@ impl FastsumOperator {
 
     /// Snapshot of the accumulated phase timings.
     pub fn timings(&self) -> PhaseTimings {
-        self.timings.lock().unwrap().clone()
+        lock_recover(&self.timings).clone()
     }
 }
 

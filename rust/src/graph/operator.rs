@@ -1,5 +1,7 @@
 //! The abstract symmetric linear operator all engines implement.
 
+use crate::robust::{health, CancelToken, EngineError};
+
 /// A real linear operator `y = A x` of fixed dimension.
 ///
 /// `apply_block` is the block execution path every batch call site
@@ -33,6 +35,67 @@ pub trait LinearOperator: Send + Sync {
         let mut y = vec![0.0; self.dim()];
         self.apply(x, &mut y);
         y
+    }
+
+    /// Validating apply: rejects dimension mismatches and NaN/Inf
+    /// inputs as [`EngineError::InvalidInput`] instead of asserting
+    /// or producing garbage. The success path is `apply` plus two
+    /// O(n) scans — the arithmetic (and its bits) is unchanged.
+    fn try_apply(&self, x: &[f64], y: &mut [f64]) -> Result<(), EngineError> {
+        let n = self.dim();
+        health::validate_vector("x", x, n)?;
+        if y.len() != n {
+            return Err(EngineError::invalid(format!(
+                "output buffer has length {}, operator dimension is {n}",
+                y.len()
+            )));
+        }
+        self.apply(x, y);
+        Ok(())
+    }
+
+    /// Validating block apply; see [`LinearOperator::try_apply`].
+    fn try_apply_block(&self, xs: &[f64], ys: &mut [f64]) -> Result<(), EngineError> {
+        let n = self.dim();
+        health::validate_block("xs", xs, n)?;
+        if ys.len() != xs.len() {
+            return Err(EngineError::invalid(format!(
+                "output block has length {}, input block has {}",
+                ys.len(),
+                xs.len()
+            )));
+        }
+        self.apply_block(xs, ys);
+        Ok(())
+    }
+
+    /// Cancellable apply: checks `token` before running. Engines with
+    /// internal phase structure (the sharded operator) override this
+    /// to re-check between phases, bounding how long a cancelled or
+    /// expired job keeps computing. A `never` token costs one relaxed
+    /// load and leaves the output bitwise identical to `apply`.
+    fn apply_cancellable(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        token: &CancelToken,
+    ) -> Result<(), EngineError> {
+        token.check()?;
+        self.apply(x, y);
+        Ok(())
+    }
+
+    /// Cancellable block apply; see
+    /// [`LinearOperator::apply_cancellable`].
+    fn apply_block_cancellable(
+        &self,
+        xs: &[f64],
+        ys: &mut [f64],
+        token: &CancelToken,
+    ) -> Result<(), EngineError> {
+        token.check()?;
+        self.apply_block(xs, ys);
+        Ok(())
     }
 
     /// A human-readable engine name for metrics/logs.
@@ -100,6 +163,41 @@ impl<F: Fn(&[f64], &mut [f64]) + Send + Sync> LinearOperator for FnOperator<F> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn try_apply_rejects_bad_inputs_and_matches_apply() {
+        let op = FnOperator {
+            n: 2,
+            f: |x: &[f64], y: &mut [f64]| {
+                y[0] = x[0] + x[1];
+                y[1] = x[0] - x[1];
+            },
+        };
+        let mut y = [0.0; 2];
+        assert!(op.try_apply(&[1.0], &mut y).is_err(), "short input");
+        assert!(op.try_apply(&[1.0, f64::NAN], &mut y).is_err(), "NaN input");
+        assert!(op.try_apply_block(&[1.0, 2.0, 3.0], &mut [0.0; 3]).is_err(), "ragged block");
+        op.try_apply(&[3.0, 1.0], &mut y).unwrap();
+        assert_eq!(y, [4.0, 2.0]);
+    }
+
+    #[test]
+    fn cancellable_apply_honours_token() {
+        let op = FnOperator {
+            n: 1,
+            f: |x: &[f64], y: &mut [f64]| {
+                y[0] = 2.0 * x[0];
+            },
+        };
+        let token = CancelToken::never();
+        let mut y = [0.0];
+        op.apply_cancellable(&[5.0], &mut y, &token).unwrap();
+        assert_eq!(y[0], 10.0);
+        token.cancel();
+        y[0] = 0.0;
+        assert!(op.apply_cancellable(&[5.0], &mut y, &token).is_err());
+        assert_eq!(y[0], 0.0, "cancelled apply must not touch the output");
+    }
 
     #[test]
     fn fn_operator_and_block_default() {

@@ -12,6 +12,7 @@
 use crate::graph::operator::LinearOperator;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::panel::{paxpy, pnorm2, Panel};
+use crate::robust::{CancelToken, EngineError};
 
 /// One Arnoldi factorisation `A V_k = V_{k+1} H̄_k`.
 ///
@@ -91,31 +92,70 @@ pub struct GmresResult {
     pub iterations: usize,
     pub converged: bool,
     pub rel_residual: f64,
+    /// Typed failure (cancellation, deadline, non-finite residual).
+    /// `Some` means the solve stopped early; `x` holds the last iterate.
+    pub error: Option<EngineError>,
 }
 
 /// Restarted GMRES(m) for general (nonsymmetric) `A x = b`.
 pub fn gmres_solve(op: &dyn LinearOperator, b: &[f64], opts: &GmresOptions) -> GmresResult {
+    gmres_solve_cancellable(op, b, opts, &CancelToken::never())
+}
+
+/// [`gmres_solve`] with cooperative cancellation: the token is checked
+/// once per restart cycle (one relaxed atomic load with a never-token),
+/// and a stop surfaces as `error: Some(Cancelled | Timeout)`.
+pub fn gmres_solve_cancellable(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &GmresOptions,
+    token: &CancelToken,
+) -> GmresResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
     let bnorm = pnorm2(b);
     if bnorm == 0.0 {
-        return GmresResult { x: vec![0.0; n], iterations: 0, converged: true, rel_residual: 0.0 };
+        return GmresResult {
+            x: vec![0.0; n],
+            iterations: 0,
+            converged: true,
+            rel_residual: 0.0,
+            error: None,
+        };
     }
     let mut x = vec![0.0; n];
     let mut total_iters = 0usize;
     let mut rel;
+    let mut error: Option<EngineError> = None;
     let mut ax = vec![0.0; n];
     let mut r0 = vec![0.0; n];
     let mut vcol = vec![0.0; n];
     for _restart in 0..opts.max_restarts {
+        if let Err(e) = token.check() {
+            error = Some(e);
+            break;
+        }
         op.apply(&x, &mut ax);
         for ((r, &bi), &ai) in r0.iter_mut().zip(b).zip(&ax) {
             *r = bi - ai;
         }
         let beta = pnorm2(&r0);
         rel = beta / bnorm;
+        if !rel.is_finite() {
+            error = Some(EngineError::NumericalBreakdown {
+                solver: "gmres",
+                reason: format!("non-finite residual norm after {total_iters} iterations"),
+            });
+            break;
+        }
         if rel <= opts.tol {
-            return GmresResult { x, iterations: total_iters, converged: true, rel_residual: rel };
+            return GmresResult {
+                x,
+                iterations: total_iters,
+                converged: true,
+                rel_residual: rel,
+                error: None,
+            };
         }
         let m = opts.restart.min(n);
         let (v, h) = arnoldi(op, &r0, m);
@@ -133,12 +173,22 @@ pub fn gmres_solve(op: &dyn LinearOperator, b: &[f64], opts: &GmresOptions) -> G
             paxpy(yj, &vcol, &mut x);
         }
     }
+    if let Some(e) = error {
+        return GmresResult {
+            x,
+            iterations: total_iters,
+            converged: false,
+            rel_residual: f64::NAN,
+            error: Some(e),
+        };
+    }
     op.apply(&x, &mut ax);
     for ((r, &bi), &ai) in r0.iter_mut().zip(b).zip(&ax) {
         *r = bi - ai;
     }
     rel = pnorm2(&r0) / bnorm;
-    GmresResult { x, iterations: total_iters, converged: rel <= opts.tol, rel_residual: rel }
+    let converged = rel <= opts.tol;
+    GmresResult { x, iterations: total_iters, converged, rel_residual: rel, error: None }
 }
 
 /// Least squares for a small (k+1)×k Hessenberg system via Givens
@@ -263,6 +313,57 @@ mod tests {
         assert!(r.converged);
         for i in 0..n {
             assert!((r.x[i] * (1.0 + i as f64 * 0.5) - 1.0).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn cancelled_token_stops_with_typed_error() {
+        let n = 10;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + i as f64) * x[i];
+                }
+            },
+        };
+        let token = CancelToken::never();
+        token.cancel();
+        let r = gmres_solve_cancellable(&op, &[1.0; 10], &GmresOptions::default(), &token);
+        assert!(!r.converged);
+        assert_eq!(r.iterations, 0);
+        assert!(matches!(r.error, Some(EngineError::Cancelled { .. })), "{:?}", r.error);
+    }
+
+    #[test]
+    fn never_token_is_bitwise_identical_to_plain() {
+        let n = 20;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.5 + (i as f64).sin() * 0.4) * x[i];
+                }
+            },
+        };
+        let b: Vec<f64> = (0..n).map(|i| ((i * 7 % 5) as f64) - 2.0).collect();
+        let opts = GmresOptions { restart: 6, max_restarts: 20, tol: 1e-11 };
+        let plain = gmres_solve(&op, &b, &opts);
+        let tok = gmres_solve_cancellable(&op, &b, &opts, &CancelToken::never());
+        assert_eq!(plain.iterations, tok.iterations);
+        for (a, c) in plain.x.iter().zip(&tok.x) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn nan_operator_reports_breakdown_instead_of_panicking() {
+        let op = FnOperator { n: 6, f: |_: &[f64], y: &mut [f64]| y.fill(f64::NAN) };
+        let r = gmres_solve(&op, &[1.0; 6], &GmresOptions::default());
+        assert!(!r.converged);
+        match r.error {
+            Some(EngineError::NumericalBreakdown { solver, .. }) => assert_eq!(solver, "gmres"),
+            other => panic!("expected breakdown, got {other:?}"),
         }
     }
 }

@@ -14,6 +14,7 @@
 
 use crate::graph::operator::LinearOperator;
 use crate::linalg::panel::{dots_packed_into, paxpy, pdot, pnorm2, xpby};
+use crate::robust::{fault, CancelToken, EngineError};
 
 #[derive(Debug, Clone)]
 pub struct CgOptions {
@@ -37,6 +38,11 @@ pub struct CgResult {
     pub converged: bool,
     /// Final relative residual.
     pub rel_residual: f64,
+    /// Why the solve stopped early, if it did: `NumericalBreakdown`
+    /// when pᵀAp ≤ 0 exposed an indefinite operator (or NaN poisoned
+    /// the recurrence), `Cancelled`/`Timeout` from the token. `None`
+    /// for a normal converged or max-iter exit.
+    pub error: Option<EngineError>,
 }
 
 /// `z ← M⁻¹ r` into a preallocated buffer (identity when no
@@ -57,6 +63,19 @@ fn apply_prec_into(precond: &Option<Vec<f64>>, r: &[f64], z: &mut [f64]) {
 
 /// Solve `A x = b` for symmetric positive definite `A`.
 pub fn cg_solve(op: &dyn LinearOperator, b: &[f64], opts: &CgOptions) -> CgResult {
+    cg_solve_cancellable(op, b, opts, &CancelToken::never())
+}
+
+/// [`cg_solve`] with a cooperative [`CancelToken`] probed once per
+/// iteration (one relaxed load for a deadline-free token). With a
+/// `never` token the arithmetic — and every output bit — is identical
+/// to [`cg_solve`].
+pub fn cg_solve_cancellable(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &CgOptions,
+    token: &CancelToken,
+) -> CgResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
     let bnorm = pnorm2(b).max(1e-300);
@@ -68,12 +87,26 @@ pub fn cg_solve(op: &dyn LinearOperator, b: &[f64], opts: &CgOptions) -> CgResul
     let mut rz = pdot(&r, &z);
     let mut ap = vec![0.0; n];
     let mut iterations = 0;
+    let mut error = None;
     let mut converged = pnorm2(&r) / bnorm <= opts.tol;
     while !converged && iterations < opts.max_iter {
+        if let Err(e) = token.check() {
+            error = Some(e);
+            break;
+        }
+        fault::fire("cg.iter");
         op.apply(&p, &mut ap);
         let pap = pdot(&p, &ap);
-        if pap <= 0.0 {
+        // `!(pap > 0.0)` rather than `pap <= 0.0`: also trips on NaN
+        // (a poisoned recurrence would otherwise loop on garbage).
+        // Control flow is unchanged for normal numbers, so converged
+        // runs keep their bits.
+        if !(pap > 0.0) {
             // Not SPD (or breakdown) — stop with the best iterate.
+            error = Some(EngineError::NumericalBreakdown {
+                solver: "cg",
+                reason: format!("operator is indefinite (p'Ap = {pap} at iter {iterations})"),
+            });
             break;
         }
         let alpha = rz / pap;
@@ -91,7 +124,7 @@ pub fn cg_solve(op: &dyn LinearOperator, b: &[f64], opts: &CgOptions) -> CgResul
         xpby(&z, beta, &mut p);
     }
     let rel_residual = pnorm2(&r) / bnorm;
-    CgResult { x, iterations, converged, rel_residual }
+    CgResult { x, iterations, converged, rel_residual, error }
 }
 
 /// Lockstep CG over k independent right-hand sides sharing one SPD
@@ -130,6 +163,7 @@ where
         iterations: usize,
         converged: bool,
         active: bool,
+        error: Option<EngineError>,
     }
     let mut cols: Vec<Col> = (0..k)
         .map(|j| {
@@ -150,6 +184,7 @@ where
                 iterations: 0,
                 converged,
                 active: !converged && opts.max_iter > 0,
+                error: None,
             }
         })
         .collect();
@@ -177,8 +212,17 @@ where
             let ap = &aps[slot * n..(slot + 1) * n];
             let col = &mut cols[j];
             let pap = paps[slot];
-            if pap <= 0.0 {
+            if !(pap > 0.0) {
                 // Not SPD (or breakdown) — stop with the best iterate.
+                // Same NaN-catching predicate as cg_solve, preserving
+                // the lockstep ≡ single-column bitwise pin.
+                col.error = Some(EngineError::NumericalBreakdown {
+                    solver: "cg",
+                    reason: format!(
+                        "operator is indefinite (p'Ap = {pap} at iter {})",
+                        col.iterations
+                    ),
+                });
                 col.active = false;
                 continue;
             }
@@ -205,7 +249,13 @@ where
     cols.into_iter()
         .map(|c| {
             let rel_residual = pnorm2(&c.r) / c.bnorm;
-            CgResult { x: c.x, iterations: c.iterations, converged: c.converged, rel_residual }
+            CgResult {
+                x: c.x,
+                iterations: c.iterations,
+                converged: c.converged,
+                rel_residual,
+                error: c.error,
+            }
         })
         .collect()
 }
@@ -409,6 +459,69 @@ mod tests {
         assert!(r.converged);
         assert_eq!(r.iterations, 0);
         assert_eq!(r.x, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn indefinite_operator_reports_breakdown() {
+        // diag(-1, …): p'Ap = -‖p‖² < 0 on the first iteration.
+        let n = 8;
+        let op = FnOperator {
+            n,
+            f: |x: &[f64], y: &mut [f64]| {
+                for (yi, xi) in y.iter_mut().zip(x) {
+                    *yi = -*xi;
+                }
+            },
+        };
+        let b = vec![1.0; n];
+        let r = cg_solve(&op, &b, &CgOptions::default());
+        assert!(!r.converged);
+        let e = r.error.expect("indefinite system must report breakdown");
+        assert_eq!(e.class(), "breakdown");
+        assert!(e.to_string().contains("indefinite"), "{e}");
+        // The lockstep path reports the same breakdown per column.
+        let multi = cg_solve_multi(n, &b, &CgOptions::default(), |xs| {
+            let mut ys = vec![0.0; xs.len()];
+            op.apply_block(xs, &mut ys);
+            ys
+        });
+        assert_eq!(multi[0].error.as_ref().map(|e| e.class()), Some("breakdown"));
+    }
+
+    #[test]
+    fn cancelled_token_stops_before_first_iteration() {
+        let op = FnOperator {
+            n: 4,
+            f: |x: &[f64], y: &mut [f64]| y.copy_from_slice(x),
+        };
+        let token = CancelToken::never();
+        token.cancel();
+        let r = cg_solve_cancellable(&op, &[1.0; 4], &CgOptions::default(), &token);
+        assert_eq!(r.iterations, 0);
+        assert!(!r.converged);
+        assert_eq!(r.error.as_ref().map(|e| e.class()), Some("cancelled"));
+    }
+
+    #[test]
+    fn never_token_is_bitwise_identical() {
+        let n = 30;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + (i % 5) as f64) * x[i];
+                }
+            },
+        };
+        let mut rng = crate::data::rng::Rng::seed_from(31);
+        let b = rng.normal_vec(n);
+        let opts = CgOptions::default();
+        let plain = cg_solve(&op, &b, &opts);
+        let tokened = cg_solve_cancellable(&op, &b, &opts, &CancelToken::never());
+        assert_eq!(plain.iterations, tokened.iterations);
+        for (a, c) in plain.x.iter().zip(&tokened.x) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::linalg::dense::DenseMatrix;
 use crate::linalg::panel::{paxpy, pdot, pnorm2, Panel};
 use crate::linalg::tridiag::tridiag_eig;
 use crate::obs;
+use crate::robust::{fault, CancelToken, EngineError};
 use crate::util::timer::Timer;
 
 #[derive(Debug, Clone, Copy)]
@@ -65,10 +66,48 @@ pub struct EigResult {
     /// Seconds spent in the basis algebra (reorthogonalisation, Gram
     /// products, Ritz assembly) — the panel-engine phase.
     pub ortho_secs: f64,
+    /// Why the solve stopped early, if it did: `Cancelled`/`Timeout`
+    /// from a token (the partial subspace computed so far is still
+    /// returned), or `NumericalBreakdown` when the recurrence norm
+    /// went non-finite. `None` for a normal exit, including a lucky
+    /// breakdown (invariant subspace — that is a *successful* early
+    /// return with the converged subspace).
+    pub error: Option<EngineError>,
+}
+
+/// The result of a solve that could not start (cancelled before the
+/// first iteration): empty spectrum, typed error attached.
+fn failed_eig(err: EngineError) -> EigResult {
+    EigResult {
+        eigenvalues: Vec::new(),
+        eigenvectors: DenseMatrix::zeros(0, 0),
+        iterations: 0,
+        residual_bounds: Vec::new(),
+        matvecs: 0,
+        matvec_secs: 0.0,
+        ortho_secs: 0.0,
+        error: Some(err),
+    }
 }
 
 /// Compute the k largest eigenpairs of the symmetric `op`.
 pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult {
+    lanczos_eigs_cancellable(op, opts, &CancelToken::never())
+}
+
+/// [`lanczos_eigs`] with a cooperative [`CancelToken`] probed once
+/// per iteration. On cancellation/expiry the Ritz pairs of the
+/// subspace built so far are still assembled and returned with the
+/// error attached. A `never` token reproduces [`lanczos_eigs`]
+/// bit for bit.
+pub fn lanczos_eigs_cancellable(
+    op: &dyn LinearOperator,
+    opts: LanczosOptions,
+    token: &CancelToken,
+) -> EigResult {
+    if let Err(e) = token.check() {
+        return failed_eig(e);
+    }
     let n = op.dim();
     let k = opts.k.min(n);
     assert!(k >= 1, "need at least one eigenpair");
@@ -94,8 +133,18 @@ pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult 
     let mut matvec_secs = 0.0f64;
     let mut ortho_secs = 0.0f64;
     let mut converged_info: Option<(Vec<f64>, DenseMatrix, Vec<f64>)> = None;
+    let mut error: Option<EngineError> = None;
 
     for j in 0..max_iter {
+        // Probe after the first iteration so a mid-run stop still has
+        // a (partial) tridiagonal to assemble Ritz pairs from.
+        if j > 0 {
+            if let Err(e) = token.check() {
+                error = Some(e);
+                break;
+            }
+        }
+        fault::fire("lanczos.iter");
         let span = obs::span_id("lanczos.matvec", "krylov", j as u64);
         let t = Timer::start();
         op.apply(basis.col(j), &mut w);
@@ -125,6 +174,25 @@ pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult 
         let b_next = pnorm2(&w);
         ortho_secs += t.elapsed_secs();
         drop(span);
+        if !b_next.is_finite() {
+            // NaN/Inf leaked into the recurrence (bad operator
+            // output). Drop the poisoned coefficient pair so the
+            // fallback Ritz assembly works on the last finite
+            // tridiagonal, and surface a typed breakdown.
+            let e = EngineError::NumericalBreakdown {
+                solver: "lanczos",
+                reason: format!("non-finite recurrence norm beta = {b_next} at iter {j}"),
+            };
+            if alpha.last().is_some_and(|a| !a.is_finite()) {
+                alpha.pop();
+                beta.pop();
+            }
+            if alpha.is_empty() {
+                return failed_eig(e);
+            }
+            error = Some(e);
+            break;
+        }
         // Convergence test on the current tridiagonal. The QL solve with
         // vector accumulation is O(j³), so test every 5th iteration
         // (and on the final one) once j ≥ k.
@@ -195,6 +263,7 @@ pub fn lanczos_eigs(op: &dyn LinearOperator, opts: LanczosOptions) -> EigResult 
         matvecs,
         matvec_secs,
         ortho_secs,
+        error,
     }
 }
 
@@ -243,9 +312,24 @@ impl Default for BlockLanczosOptions {
 /// rank-deficient directions are replaced by fresh random vectors
 /// orthogonal to the basis so the block never shrinks.
 pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) -> EigResult {
+    block_lanczos_eigs_cancellable(op, opts, &CancelToken::never())
+}
+
+/// [`block_lanczos_eigs`] with a cooperative [`CancelToken`] probed
+/// once per block iteration; the Ritz pairs of the basis built so far
+/// are returned with the error attached. A `never` token reproduces
+/// [`block_lanczos_eigs`] bit for bit.
+pub fn block_lanczos_eigs_cancellable(
+    op: &dyn LinearOperator,
+    opts: BlockLanczosOptions,
+    token: &CancelToken,
+) -> EigResult {
     use crate::linalg::jacobi::sym_eig;
     use crate::linalg::qr::{orth, thin_qr};
 
+    if let Err(e) = token.check() {
+        return failed_eig(e);
+    }
     let n = op.dim();
     let b = opts.block.clamp(1, n);
     // A constant-width block basis can span at most ⌊n/b⌋·b directions,
@@ -285,6 +369,7 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
     let mut matvec_secs = 0.0f64;
     let mut ortho_secs = 0.0f64;
     let mut last: Option<(Vec<f64>, DenseMatrix, Vec<f64>)> = None;
+    let mut error: Option<EngineError> = None;
     // Reused iteration scratch — the steady-state loop allocates
     // nothing beyond panel growth.
     let mut tcol: Vec<f64> = Vec::new();
@@ -379,6 +464,12 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
         ortho_secs += t.elapsed_secs();
         last = Some((evals, z, resids));
         if (all_ok && dim >= k) || s + 1 == max_blocks || dim + b > n {
+            break;
+        }
+        // Probe only after `last` holds a usable Rayleigh–Ritz state,
+        // so a stop mid-run still returns the subspace built so far.
+        if let Err(e) = token.check() {
+            error = Some(e);
             break;
         }
 
@@ -478,6 +569,7 @@ pub fn block_lanczos_eigs(op: &dyn LinearOperator, opts: BlockLanczosOptions) ->
         matvecs,
         matvec_secs,
         ortho_secs,
+        error,
     }
 }
 
@@ -756,6 +848,64 @@ mod tests {
         );
         assert!((r.eigenvalues[0] - 3.0).abs() < 1e-8, "λ₁ = {}", r.eigenvalues[0]);
         assert!((r.eigenvalues[1] - 2.0).abs() < 1e-8, "λ₂ = {}", r.eigenvalues[1]);
+    }
+
+    #[test]
+    fn cancelled_token_yields_typed_error_and_empty_or_partial_result() {
+        let n = 20;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (i + 1) as f64 * x[i];
+                }
+            },
+        };
+        let token = CancelToken::never();
+        token.cancel();
+        let r = lanczos_eigs_cancellable(&op, LanczosOptions::default(), &token);
+        assert_eq!(r.iterations, 0);
+        assert!(r.eigenvalues.is_empty());
+        assert_eq!(r.error.as_ref().map(|e| e.class()), Some("cancelled"));
+        let rb =
+            block_lanczos_eigs_cancellable(&op, BlockLanczosOptions::default(), &token);
+        assert_eq!(rb.error.as_ref().map(|e| e.class()), Some("cancelled"));
+    }
+
+    #[test]
+    fn never_token_is_bitwise_identical_to_plain() {
+        let mut rng = crate::data::rng::Rng::seed_from(15);
+        let points = rng.normal_vec(40 * 2);
+        let op = DenseKernelOperator::new(
+            &points,
+            2,
+            crate::fastsum::Kernel::Gaussian { sigma: 1.5 },
+            DenseMode::Normalized,
+        );
+        let opts = LanczosOptions { k: 4, ..Default::default() };
+        let plain = lanczos_eigs(&op, opts);
+        let tokened = lanczos_eigs_cancellable(&op, opts, &CancelToken::never());
+        assert_eq!(plain.eigenvalues, tokened.eigenvalues);
+        assert_eq!(plain.eigenvectors.data, tokened.eigenvectors.data);
+        assert!(tokened.error.is_none());
+    }
+
+    #[test]
+    fn nan_operator_output_reports_breakdown() {
+        // The operator poisons its output from the first apply: the
+        // recurrence norm goes NaN and the solver must stop with a
+        // typed breakdown instead of looping on garbage.
+        let n = 16;
+        let op = FnOperator {
+            n,
+            f: |_: &[f64], y: &mut [f64]| {
+                y.fill(f64::NAN);
+            },
+        };
+        let r = lanczos_eigs(&op, LanczosOptions { k: 2, ..Default::default() });
+        let e = r.error.expect("NaN recurrence must be reported");
+        assert_eq!(e.class(), "breakdown");
+        assert!(e.to_string().contains("lanczos"), "{e}");
     }
 
     #[test]

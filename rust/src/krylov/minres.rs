@@ -10,6 +10,7 @@
 
 use crate::graph::operator::LinearOperator;
 use crate::linalg::panel::{paxpy, pdot, pnorm2, PAR_THRESHOLD};
+use crate::robust::{CancelToken, EngineError};
 use rayon::prelude::*;
 
 #[derive(Debug, Clone, Copy)]
@@ -30,15 +31,36 @@ pub struct MinresResult {
     pub iterations: usize,
     pub converged: bool,
     pub rel_residual: f64,
+    /// Typed failure (cancellation, deadline, non-finite recurrence).
+    /// `Some` means the solve stopped early; `x` holds the last iterate.
+    pub error: Option<EngineError>,
 }
 
 /// Solve `A x = b` for symmetric `A` by MINRES.
 pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) -> MinresResult {
+    minres_solve_cancellable(op, b, opts, &CancelToken::never())
+}
+
+/// [`minres_solve`] with cooperative cancellation: the token is checked
+/// once per iteration (one relaxed atomic load with a never-token), and
+/// a stop surfaces as `error: Some(Cancelled | Timeout)` on the result.
+pub fn minres_solve_cancellable(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &MinresOptions,
+    token: &CancelToken,
+) -> MinresResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
     let bnorm = pnorm2(b);
     if bnorm == 0.0 {
-        return MinresResult { x: vec![0.0; n], iterations: 0, converged: true, rel_residual: 0.0 };
+        return MinresResult {
+            x: vec![0.0; n],
+            iterations: 0,
+            converged: true,
+            rel_residual: 0.0,
+            error: None,
+        };
     }
     // Lanczos vectors (rotated by swap each iteration — no cloning).
     let mut v_prev = vec![0.0; n];
@@ -56,7 +78,13 @@ pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) ->
     let mut eta = beta;
     let mut w = vec![0.0; n];
     let mut rel = 1.0;
+    let mut error: Option<EngineError> = None;
+    let mut iters_done = 0usize;
     for iter in 1..=opts.max_iter {
+        if let Err(e) = token.check() {
+            error = Some(e);
+            break;
+        }
         // Lanczos step.
         op.apply(&v, &mut w);
         let alpha = pdot(&v, &w);
@@ -72,6 +100,14 @@ pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) ->
                 .for_each(|(wi, (&vi, &vpi))| *wi -= alpha * vi + beta * vpi);
         }
         let beta_next = pnorm2(&w);
+        if !beta_next.is_finite() {
+            error = Some(EngineError::NumericalBreakdown {
+                solver: "minres",
+                reason: format!("non-finite recurrence norm beta = {beta_next} at iter {iter}"),
+            });
+            rel = f64::NAN;
+            break;
+        }
         // Apply previous rotations to the new tridiagonal column.
         let delta = c * alpha - c_prev * s * beta;
         let gamma1 = (delta * delta + beta_next * beta_next).sqrt();
@@ -114,7 +150,7 @@ pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) ->
         s = s_new;
         if beta_next < 1e-300 || rel <= opts.tol {
             let converged = rel <= opts.tol;
-            return MinresResult { x, iterations: iter, converged, rel_residual: rel };
+            return MinresResult { x, iterations: iter, converged, rel_residual: rel, error: None };
         }
         // v_prev ← v, v ← w/β (old v_prev is overwritten by the next
         // apply's output buffer).
@@ -129,8 +165,9 @@ pub fn minres_solve(op: &dyn LinearOperator, b: &[f64], opts: &MinresOptions) ->
             v.par_iter_mut().for_each(|vi| *vi *= inv);
         }
         beta = beta_next;
+        iters_done = iter;
     }
-    MinresResult { x, iterations: opts.max_iter, converged: false, rel_residual: rel }
+    MinresResult { x, iterations: iters_done, converged: false, rel_residual: rel, error }
 }
 
 #[cfg(test)]
@@ -207,5 +244,57 @@ mod tests {
         let r = minres_solve(&op, &[0.0; 4], &MinresOptions::default());
         assert!(r.converged);
         assert_eq!(r.iterations, 0);
+    }
+
+    #[test]
+    fn cancelled_token_stops_with_typed_error() {
+        let n = 16;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + i as f64) * x[i];
+                }
+            },
+        };
+        let b = vec![1.0; n];
+        let token = CancelToken::never();
+        token.cancel();
+        let r = minres_solve_cancellable(&op, &b, &MinresOptions::default(), &token);
+        assert!(!r.converged);
+        assert_eq!(r.iterations, 0);
+        assert!(matches!(r.error, Some(EngineError::Cancelled { .. })), "{:?}", r.error);
+    }
+
+    #[test]
+    fn never_token_is_bitwise_identical_to_plain() {
+        let n = 24;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (2.0 + (i as f64).cos()) * x[i];
+                }
+            },
+        };
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let opts = MinresOptions { tol: 1e-11, max_iter: 100 };
+        let plain = minres_solve(&op, &b, &opts);
+        let tok = minres_solve_cancellable(&op, &b, &opts, &CancelToken::never());
+        assert_eq!(plain.iterations, tok.iterations);
+        for (a, c) in plain.x.iter().zip(&tok.x) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn nan_operator_reports_breakdown() {
+        let op = FnOperator { n: 8, f: |_: &[f64], y: &mut [f64]| y.fill(f64::NAN) };
+        let r = minres_solve(&op, &[1.0; 8], &MinresOptions::default());
+        assert!(!r.converged);
+        match r.error {
+            Some(EngineError::NumericalBreakdown { solver, .. }) => assert_eq!(solver, "minres"),
+            other => panic!("expected breakdown, got {other:?}"),
+        }
     }
 }

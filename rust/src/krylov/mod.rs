@@ -19,7 +19,10 @@ pub mod cg;
 pub mod lanczos;
 pub mod minres;
 
-pub use cg::{cg_solve, CgOptions, CgResult};
+pub use arnoldi::{gmres_solve, gmres_solve_cancellable, GmresOptions, GmresResult};
+pub use cg::{cg_solve, cg_solve_cancellable, CgOptions, CgResult};
 pub use lanczos::{
-    block_lanczos_eigs, lanczos_eigs, BlockLanczosOptions, EigResult, LanczosOptions,
+    block_lanczos_eigs, block_lanczos_eigs_cancellable, lanczos_eigs, lanczos_eigs_cancellable,
+    BlockLanczosOptions, EigResult, LanczosOptions,
 };
+pub use minres::{minres_solve, minres_solve_cancellable, MinresOptions, MinresResult};

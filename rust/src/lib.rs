@@ -60,6 +60,10 @@
 //!   default, `NFFT_TRACE=1` to record), Chrome trace-event +
 //!   Prometheus exporters, the coordinator's flight recorder, and
 //!   shard straggler analytics. See `docs/OBSERVABILITY.md`.
+//! * [`robust`] — the fault-tolerance layer: typed [`robust::EngineError`]s,
+//!   cooperative [`robust::CancelToken`] deadlines, admission-time
+//!   numerical health guards, and the deterministic fault-injection
+//!   harness behind the chaos suite. See `docs/ROBUSTNESS.md`.
 //! * [`bench_harness`] — drivers regenerating every table/figure of the
 //!   paper's evaluation section.
 //!
@@ -85,6 +89,7 @@ pub mod linalg;
 pub mod nfft;
 pub mod nystrom;
 pub mod obs;
+pub mod robust;
 pub mod runtime;
 pub mod shard;
 pub mod util;

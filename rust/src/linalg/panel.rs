@@ -219,14 +219,14 @@ impl Panel {
     }
 
     fn take_partials(&self, len: usize) -> Vec<f64> {
-        let mut buf = self.partials.lock().unwrap().pop().unwrap_or_default();
+        let mut buf = crate::util::lock_recover(&self.partials).pop().unwrap_or_default();
         buf.clear();
         buf.resize(len, 0.0);
         buf
     }
 
     fn put_partials(&self, buf: Vec<f64>) {
-        let mut cache = self.partials.lock().unwrap();
+        let mut cache = crate::util::lock_recover(&self.partials);
         if cache.len() < 8 {
             cache.push(buf);
         }

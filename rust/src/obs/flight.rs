@@ -33,6 +33,23 @@ fn kind_code(kind: &str) -> u64 {
     KINDS.iter().position(|k| *k == kind).unwrap_or(KINDS.len() - 1) as u64
 }
 
+/// Error classes with a stable slot encoding; index 0 is "no error".
+/// Kept a superset of `robust::error::CLASSES` plus an `"other"`
+/// catch-all for forward compatibility.
+const ERR_CLASSES: [&str; 7] =
+    ["", "invalid-input", "breakdown", "timeout", "panic", "cancelled", "other"];
+
+fn err_code(err: Option<&str>) -> u64 {
+    match err {
+        None => 0,
+        Some(class) => ERR_CLASSES[1..]
+            .iter()
+            .position(|c| *c == class)
+            .map(|i| i + 1)
+            .unwrap_or(ERR_CLASSES.len() - 1) as u64,
+    }
+}
+
 /// One completed job as seen by the flight recorder.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlightRecord {
@@ -52,6 +69,10 @@ pub struct FlightRecord {
     pub bytes: u64,
     /// Did the job succeed (converge / return Ok)?
     pub ok: bool,
+    /// Error class for failed jobs (`EngineError::class()`:
+    /// `"invalid-input"`, `"breakdown"`, `"timeout"`, `"panic"`,
+    /// `"cancelled"`); `None` when the job did not fail typedly.
+    pub err: Option<&'static str>,
 }
 
 impl FlightRecord {
@@ -65,6 +86,11 @@ impl FlightRecord {
         o.insert("ortho_secs".to_string(), Json::Num(self.ortho_secs));
         o.insert("bytes".to_string(), Json::Num(self.bytes as f64));
         o.insert("ok".to_string(), Json::Bool(self.ok));
+        let err = match self.err {
+            Some(class) => Json::Str(class.to_string()),
+            None => Json::Null,
+        };
+        o.insert("err".to_string(), err);
         Json::Obj(o)
     }
 }
@@ -80,6 +106,7 @@ struct Slot {
     ortho_bits: AtomicU64,
     bytes: AtomicU64,
     ok: AtomicU64,
+    err: AtomicU64,
 }
 
 /// Lock-free ring buffer of the last `capacity` [`FlightRecord`]s.
@@ -121,6 +148,7 @@ impl FlightRecorder {
         slot.ortho_bits.store(rec.ortho_secs.to_bits(), Ordering::Relaxed);
         slot.bytes.store(rec.bytes, Ordering::Relaxed);
         slot.ok.store(rec.ok as u64, Ordering::Relaxed);
+        slot.err.store(err_code(rec.err), Ordering::Relaxed);
         slot.seq.store(2 * ticket + 2, Ordering::Release);
     }
 
@@ -139,6 +167,10 @@ impl FlightRecorder {
             ortho_secs: f64::from_bits(slot.ortho_bits.load(Ordering::Relaxed)),
             bytes: slot.bytes.load(Ordering::Relaxed),
             ok: slot.ok.load(Ordering::Relaxed) != 0,
+            err: match slot.err.load(Ordering::Relaxed) as usize {
+                0 => None,
+                c => Some(ERR_CLASSES[c.min(ERR_CLASSES.len() - 1)]),
+            },
         };
         fence(Ordering::Acquire);
         if slot.seq.load(Ordering::Relaxed) != want {
@@ -176,6 +208,7 @@ mod tests {
             ortho_secs: 0.05,
             bytes: 4096,
             ok,
+            err: None,
         }
     }
 
@@ -214,6 +247,24 @@ mod tests {
         let ring = FlightRecorder::new(2);
         ring.record(&rec(0, "mystery", true));
         assert_eq!(ring.snapshot()[0].kind, "other");
+    }
+
+    #[test]
+    fn err_class_roundtrips() {
+        let ring = FlightRecorder::new(4);
+        ring.record(&FlightRecord { err: Some("timeout"), ok: false, ..rec(0, "eig", false) });
+        ring.record(&rec(1, "eig", true));
+        ring.record(&FlightRecord { err: Some("mystery"), ok: false, ..rec(2, "eig", false) });
+        let snap = ring.snapshot();
+        assert_eq!(snap[0].err, Some("timeout"));
+        assert!(!snap[0].ok);
+        assert_eq!(snap[1].err, None);
+        // Unknown classes degrade to the catch-all, never a panic.
+        assert_eq!(snap[2].err, Some("other"));
+        let j = ring.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr[0].get("err").unwrap().as_str(), Some("timeout"));
+        assert_eq!(arr[1].get("err"), Some(&Json::Null));
     }
 
     #[test]

@@ -74,7 +74,7 @@ thread_local! {
     static LOCAL: (u64, Buffer) = {
         let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
         let buf: Buffer = Arc::new(Mutex::new(Vec::new()));
-        registry().lock().unwrap().push(Arc::clone(&buf));
+        crate::util::lock_recover(registry()).push(Arc::clone(&buf));
         (tid, buf)
     };
 }
@@ -174,7 +174,7 @@ fn record(mut ev: SpanEvent) {
     }
     LOCAL.with(|(tid, buf)| {
         ev.tid = *tid;
-        buf.lock().unwrap().push(ev);
+        crate::util::lock_recover(buf).push(ev);
     });
 }
 
@@ -185,8 +185,8 @@ fn record(mut ev: SpanEvent) {
 /// which rayon worker flushed last.
 pub fn drain_events() -> Vec<SpanEvent> {
     let mut out = Vec::new();
-    for buf in registry().lock().unwrap().iter() {
-        out.append(&mut buf.lock().unwrap());
+    for buf in crate::util::lock_recover(registry()).iter() {
+        out.append(&mut crate::util::lock_recover(buf));
     }
     BUFFERED.store(0, Ordering::Relaxed);
     out.sort_by(|a, b| {

@@ -1,0 +1,156 @@
+//! Cooperative cancellation and deadlines.
+//!
+//! A [`CancelToken`] is shared between the submitter (who may call
+//! [`CancelToken::cancel`]) and the solver loops (which call
+//! [`CancelToken::check`] once per iteration). The cost discipline
+//! mirrors `obs::span`: with no deadline armed, a check is **one
+//! relaxed atomic load** and never touches the clock; only tokens
+//! built with [`CancelToken::with_deadline`] read `Instant::now()`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::error::EngineError;
+
+const RUN: u8 = 0;
+const CANCELLED: u8 = 1;
+const EXPIRED: u8 = 2;
+
+/// Shared run/cancel/deadline-expired flag. Cloning shares state.
+#[derive(Clone, Debug)]
+pub struct CancelToken {
+    state: Arc<AtomicU8>,
+    /// Absolute expiry and the original budget (for the error
+    /// message). `None` ⇒ the fast path never reads the clock.
+    deadline: Option<(Instant, Duration)>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::never()
+    }
+}
+
+impl CancelToken {
+    /// A token that never expires on its own. [`check`] is a single
+    /// relaxed load.
+    ///
+    /// [`check`]: CancelToken::check
+    pub fn never() -> Self {
+        CancelToken { state: Arc::new(AtomicU8::new(RUN)), deadline: None }
+    }
+
+    /// A token that expires `budget` from now. Each [`check`] while
+    /// still running reads the monotonic clock once.
+    ///
+    /// [`check`]: CancelToken::check
+    pub fn with_deadline(budget: Duration) -> Self {
+        CancelToken {
+            state: Arc::new(AtomicU8::new(RUN)),
+            deadline: Some((Instant::now() + budget, budget)),
+        }
+    }
+
+    /// Request cancellation. Idempotent; an already-expired token
+    /// stays expired (the first terminal state wins).
+    pub fn cancel(&self) {
+        let _ = self.state.compare_exchange(RUN, CANCELLED, Ordering::Relaxed, Ordering::Relaxed);
+    }
+
+    /// Has a terminal state (cancel or expiry) been observed?
+    pub fn is_stopped(&self) -> bool {
+        self.state.load(Ordering::Relaxed) != RUN
+    }
+
+    /// The per-iteration probe. `Ok(())` while running; a typed error
+    /// once cancelled or past the deadline. Expiry is latched via
+    /// compare-exchange so every subsequent check agrees.
+    #[inline]
+    pub fn check(&self) -> Result<(), EngineError> {
+        match self.state.load(Ordering::Relaxed) {
+            RUN => match self.deadline {
+                None => Ok(()),
+                Some((at, _)) => {
+                    if Instant::now() < at {
+                        Ok(())
+                    } else {
+                        let _ = self.state.compare_exchange(
+                            RUN,
+                            EXPIRED,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        );
+                        Err(self.stop_error())
+                    }
+                }
+            },
+            _ => Err(self.stop_error()),
+        }
+    }
+
+    /// The error for the current terminal state. Falls back to a
+    /// generic `Cancelled` if called while still running.
+    fn stop_error(&self) -> EngineError {
+        match self.state.load(Ordering::Relaxed) {
+            CANCELLED => EngineError::Cancelled { reason: "cancel requested".into() },
+            EXPIRED => {
+                let budget_ms = self.deadline.map(|(_, b)| b.as_millis() as u64).unwrap_or(0);
+                EngineError::Timeout { budget_ms }
+            }
+            _ => EngineError::Cancelled { reason: "token stopped".into() },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_token_always_passes() {
+        let t = CancelToken::never();
+        for _ in 0..1000 {
+            assert!(t.check().is_ok());
+        }
+        assert!(!t.is_stopped());
+    }
+
+    #[test]
+    fn cancel_is_shared_across_clones() {
+        let t = CancelToken::never();
+        let t2 = t.clone();
+        t2.cancel();
+        match t.check() {
+            Err(EngineError::Cancelled { .. }) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        assert!(t.is_stopped());
+    }
+
+    #[test]
+    fn zero_deadline_expires_immediately_and_latches() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        match t.check() {
+            Err(EngineError::Timeout { budget_ms }) => assert_eq!(budget_ms, 0),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // Latched: every later check agrees.
+        assert!(matches!(t.check(), Err(EngineError::Timeout { .. })));
+        assert!(t.is_stopped());
+    }
+
+    #[test]
+    fn generous_deadline_passes() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(t.check().is_ok());
+    }
+
+    #[test]
+    fn expiry_wins_over_late_cancel() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        let _ = t.check(); // latch EXPIRED
+        t.cancel(); // no-op: first terminal state wins
+        assert!(matches!(t.check(), Err(EngineError::Timeout { .. })));
+    }
+}

@@ -1,0 +1,109 @@
+//! The engine-wide error taxonomy.
+//!
+//! Every failure the coordinator can hand back is one of these five
+//! variants; `class()` gives the stable short string that lands in
+//! flight-recorder entries and Prometheus labels, and `retryable()`
+//! drives the one-step degradation ladder (see `docs/ROBUSTNESS.md`).
+
+/// A typed job failure. Mirrors the taxonomy in `docs/ROBUSTNESS.md`.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum EngineError {
+    /// The request failed admission checks (wrong dimension,
+    /// non-finite entries, invalid solver or kernel parameters). Never
+    /// reaches a worker; never retried.
+    #[error("invalid input: {reason}")]
+    InvalidInput { reason: String },
+
+    /// A solver detected a numerically meaningless state: an
+    /// indefinite operator under CG, a non-finite recurrence norm in
+    /// Lanczos, or NaN/Inf in an operator output.
+    #[error("numerical breakdown in {solver}: {reason}")]
+    NumericalBreakdown { solver: &'static str, reason: String },
+
+    /// The job's deadline expired before it finished.
+    #[error("deadline of {budget_ms} ms exceeded")]
+    Timeout { budget_ms: u64 },
+
+    /// A worker thread panicked while executing the job. The panic is
+    /// caught; the worker survives and keeps serving.
+    #[error("worker panicked during {job}: {message}")]
+    WorkerPanic { job: &'static str, message: String },
+
+    /// The job was cancelled, or its reply channel is gone.
+    #[error("cancelled: {reason}")]
+    Cancelled { reason: String },
+}
+
+/// Stable short names, in the order of [`EngineError`]'s variants.
+/// `flight::ERR_CLASSES` must stay a superset of these strings.
+pub const CLASSES: [&str; 5] =
+    ["invalid-input", "breakdown", "timeout", "panic", "cancelled"];
+
+impl EngineError {
+    /// Shorthand constructor for admission failures.
+    pub fn invalid(reason: impl Into<String>) -> Self {
+        EngineError::InvalidInput { reason: reason.into() }
+    }
+
+    /// Stable short class name for telemetry (flight ring `err`
+    /// field, metrics). One of [`CLASSES`].
+    pub fn class(&self) -> &'static str {
+        match self {
+            EngineError::InvalidInput { .. } => "invalid-input",
+            EngineError::NumericalBreakdown { .. } => "breakdown",
+            EngineError::Timeout { .. } => "timeout",
+            EngineError::WorkerPanic { .. } => "panic",
+            EngineError::Cancelled { .. } => "cancelled",
+        }
+    }
+
+    /// Should the coordinator retry the job once on the degraded
+    /// (scalar-SIMD) path? Panics and breakdowns may be environmental
+    /// — bad SIMD dispatch, a transient poisoned buffer — and are
+    /// worth one retry; invalid input and expired deadlines are not.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            EngineError::WorkerPanic { .. } | EngineError::NumericalBreakdown { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_are_stable_and_exhaustive() {
+        let all = [
+            EngineError::invalid("x"),
+            EngineError::NumericalBreakdown { solver: "cg", reason: "p'Ap <= 0".into() },
+            EngineError::Timeout { budget_ms: 5 },
+            EngineError::WorkerPanic { job: "eig", message: "boom".into() },
+            EngineError::Cancelled { reason: "caller".into() },
+        ];
+        let classes: Vec<&str> = all.iter().map(|e| e.class()).collect();
+        assert_eq!(classes, CLASSES);
+    }
+
+    #[test]
+    fn retry_policy_matches_taxonomy() {
+        assert!(EngineError::WorkerPanic { job: "m", message: String::new() }.retryable());
+        assert!(EngineError::NumericalBreakdown { solver: "cg", reason: String::new() }
+            .retryable());
+        assert!(!EngineError::invalid("x").retryable());
+        assert!(!EngineError::Timeout { budget_ms: 1 }.retryable());
+        assert!(!EngineError::Cancelled { reason: String::new() }.retryable());
+    }
+
+    #[test]
+    fn display_carries_context() {
+        let e = EngineError::NumericalBreakdown {
+            solver: "cg",
+            reason: "operator is indefinite (p'Ap = -1.0)".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("cg"));
+        assert!(s.contains("indefinite"));
+    }
+}

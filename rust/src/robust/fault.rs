@@ -1,0 +1,315 @@
+//! Deterministic fault injection.
+//!
+//! Instrumented code names its failure points with string **sites**
+//! (`"job.execute"`, `"fastsum.apply"`, `"lanczos.iter"`, ...) and
+//! calls [`fire`] (control-flow faults: panic, delay) or [`corrupt`]
+//! (data faults: NaN) at them. Disarmed — the production state — both
+//! are **one relaxed atomic load** and return immediately, so outputs
+//! stay bitwise identical to an uninstrumented build.
+//!
+//! A test arms a [`FaultPlan`]: a list of `(site, hit, action)` arms,
+//! each firing exactly once on its `hit`-th trip through the site
+//! (0-based, counted process-wide while the plan is armed). Trip
+//! counting is deterministic for a deterministic execution, and
+//! [`FaultPlan::seeded`] derives hit indices from the crate RNG so
+//! randomized chaos schedules are reproducible from a seed.
+//!
+//! The global plan is process state, so tests serialise through one
+//! gate: [`with_plan`] (arm, run, disarm, report) and
+//! [`with_disarmed`] (hold the gate with injection off — for bitwise
+//! baselines) share a mutex, mirroring `obs::with_recording` and
+//! `simd::with_override`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::data::rng::Rng;
+use crate::util::lock_recover;
+
+/// What an armed site does when its trip count is reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// `panic!` at the site (exercises `catch_unwind` isolation).
+    Panic,
+    /// Overwrite the first element of the site's buffer with NaN
+    /// (only [`corrupt`] sites honour this).
+    Nan,
+    /// Sleep this many milliseconds (exercises deadlines).
+    DelayMs(u64),
+}
+
+/// One armed fault: fire `action` on the `hit`-th trip of `site`.
+#[derive(Debug, Clone)]
+pub struct FaultArm {
+    pub site: String,
+    pub hit: u64,
+    pub action: FaultAction,
+}
+
+/// A reproducible set of [`FaultArm`]s.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    arms: Vec<FaultArm>,
+    rng: Option<Rng>,
+}
+
+impl FaultPlan {
+    /// An empty plan; add arms with [`FaultPlan::arm`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A plan whose [`FaultPlan::arm_within`] hit indices derive from
+    /// `seed` — the same seed always yields the same chaos schedule.
+    pub fn seeded(seed: u64) -> Self {
+        FaultPlan { arms: Vec::new(), rng: Some(Rng::seed_from(seed)) }
+    }
+
+    /// Arm `action` on exactly the `hit`-th trip of `site`.
+    pub fn arm(mut self, site: &str, hit: u64, action: FaultAction) -> Self {
+        self.arms.push(FaultArm { site: site.to_string(), hit, action });
+        self
+    }
+
+    /// Arm `action` on a seed-chosen trip in `0..window`. Requires a
+    /// plan built with [`FaultPlan::seeded`].
+    pub fn arm_within(mut self, site: &str, window: u64, action: FaultAction) -> Self {
+        let rng = self.rng.as_mut().expect("arm_within requires FaultPlan::seeded");
+        let hit = rng.next_u64() % window.max(1);
+        self.arms.push(FaultArm { site: site.to_string(), hit, action });
+        self
+    }
+}
+
+/// What actually fired while a plan was armed, in firing order.
+#[derive(Debug, Clone, Default)]
+pub struct FaultReport {
+    /// `(site, action)` pairs, one per arm that fired.
+    pub fired: Vec<(String, FaultAction)>,
+}
+
+struct ArmState {
+    arm: FaultArm,
+    fired: bool,
+}
+
+struct ActivePlan {
+    arms: Vec<ArmState>,
+    /// Trips per site while armed (sites share one counter namespace).
+    trips: Vec<(String, u64)>,
+    fired: Vec<(String, FaultAction)>,
+}
+
+impl ActivePlan {
+    /// Count one trip through `site`; return the action to perform
+    /// now, if any arm just reached its hit index.
+    fn trip(&mut self, site: &str, data_fault: bool) -> Option<FaultAction> {
+        let count = match self.trips.iter_mut().find(|(s, _)| s == site) {
+            Some((_, c)) => {
+                let now = *c;
+                *c += 1;
+                now
+            }
+            None => {
+                self.trips.push((site.to_string(), 1));
+                0
+            }
+        };
+        for st in &mut self.arms {
+            if st.fired || st.arm.site != site || st.arm.hit != count {
+                continue;
+            }
+            // fire() sites perform Panic/Delay; corrupt() sites Nan.
+            let matches_kind = match st.arm.action {
+                FaultAction::Nan => data_fault,
+                FaultAction::Panic | FaultAction::DelayMs(_) => !data_fault,
+            };
+            if !matches_kind {
+                continue;
+            }
+            st.fired = true;
+            self.fired.push((site.to_string(), st.arm.action));
+            return Some(st.arm.action);
+        }
+        None
+    }
+}
+
+static ARMED: AtomicU8 = AtomicU8::new(0);
+static PLAN: Mutex<Option<ActivePlan>> = Mutex::new(None);
+/// Serialises `with_plan` / `with_disarmed` callers (process-global
+/// plan state), like `obs::with_recording`'s gate.
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Is any plan armed? One relaxed load — the entire production cost.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed) != 0
+}
+
+/// A control-flow fault point. Disarmed: one relaxed load. Armed: may
+/// panic or sleep according to the active plan.
+#[inline]
+pub fn fire(site: &'static str) {
+    if !armed() {
+        return;
+    }
+    fire_slow(site);
+}
+
+#[cold]
+fn fire_slow(site: &'static str) {
+    let action = {
+        let mut guard = lock_recover(&PLAN);
+        guard.as_mut().and_then(|p| p.trip(site, false))
+    };
+    // Act *after* releasing the plan lock: a panic must not poison it
+    // and a delay must not serialise unrelated sites.
+    match action {
+        Some(FaultAction::Panic) => panic!("fault injected at {site}"),
+        Some(FaultAction::DelayMs(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+        Some(FaultAction::Nan) | None => {}
+    }
+}
+
+/// A data fault point: an armed `Nan` arm overwrites `data[0]` with
+/// NaN on its hit. Disarmed: one relaxed load, `data` untouched.
+#[inline]
+pub fn corrupt(site: &'static str, data: &mut [f64]) {
+    if !armed() {
+        return;
+    }
+    corrupt_slow(site, data);
+}
+
+#[cold]
+fn corrupt_slow(site: &'static str, data: &mut [f64]) {
+    let action = {
+        let mut guard = lock_recover(&PLAN);
+        guard.as_mut().and_then(|p| p.trip(site, true))
+    };
+    if let Some(FaultAction::Nan) = action {
+        if let Some(first) = data.first_mut() {
+            *first = f64::NAN;
+        }
+    }
+}
+
+/// Restores the disarmed state even if `f` panics.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        ARMED.store(0, Ordering::Relaxed);
+        *lock_recover(&PLAN) = None;
+    }
+}
+
+fn gate() -> MutexGuard<'static, ()> {
+    lock_recover(&GATE)
+}
+
+/// Arm `plan`, run `f`, disarm, and report what fired. Callers are
+/// serialised process-wide; the disarmed state is restored even if
+/// `f` panics.
+pub fn with_plan<T>(plan: FaultPlan, f: impl FnOnce() -> T) -> (T, FaultReport) {
+    let _gate = gate();
+    let _disarm = Disarm;
+    *lock_recover(&PLAN) = Some(ActivePlan {
+        arms: plan.arms.into_iter().map(|arm| ArmState { arm, fired: false }).collect(),
+        trips: Vec::new(),
+        fired: Vec::new(),
+    });
+    ARMED.store(1, Ordering::Relaxed);
+    let out = f();
+    ARMED.store(0, Ordering::Relaxed);
+    let fired = lock_recover(&PLAN).take().map(|p| p.fired).unwrap_or_default();
+    (out, FaultReport { fired })
+}
+
+/// Hold the injection gate with every fault disarmed while `f` runs.
+/// Bitwise-determinism tests use this so no concurrent `with_plan`
+/// (or its scalar-retry SIMD override) can perturb their bits.
+pub fn with_disarmed<T>(f: impl FnOnce() -> T) -> T {
+    let _gate = gate();
+    let _disarm = Disarm;
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_sites_do_nothing() {
+        with_disarmed(|| {
+            fire("test.noop");
+            let mut v = vec![1.0, 2.0];
+            corrupt("test.noop", &mut v);
+            assert_eq!(v, vec![1.0, 2.0]);
+        });
+    }
+
+    #[test]
+    fn arm_fires_on_exact_hit_and_only_once() {
+        let plan = FaultPlan::new().arm("test.nan", 2, FaultAction::Nan);
+        let (hits, report) = with_plan(plan, || {
+            let mut nan_hits = Vec::new();
+            for i in 0..5 {
+                let mut v = vec![1.0];
+                corrupt("test.nan", &mut v);
+                if v[0].is_nan() {
+                    nan_hits.push(i);
+                }
+            }
+            nan_hits
+        });
+        assert_eq!(hits, vec![2]);
+        assert_eq!(report.fired.len(), 1);
+        assert_eq!(report.fired[0].0, "test.nan");
+    }
+
+    #[test]
+    fn injected_panic_is_catchable_and_plan_recovers() {
+        let plan = FaultPlan::new().arm("test.panic", 0, FaultAction::Panic);
+        let (caught, report) = with_plan(plan, || {
+            std::panic::catch_unwind(|| fire("test.panic")).is_err()
+        });
+        assert!(caught);
+        assert_eq!(report.fired.len(), 1);
+        // The gate is reusable afterwards.
+        with_disarmed(|| fire("test.panic"));
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let hits = |seed: u64| {
+            let plan = FaultPlan::seeded(seed).arm_within("test.seeded", 8, FaultAction::Nan);
+            let (idx, _) = with_plan(plan, || {
+                for i in 0..8u64 {
+                    let mut v = vec![0.0];
+                    corrupt("test.seeded", &mut v);
+                    if v[0].is_nan() {
+                        return Some(i);
+                    }
+                }
+                None
+            });
+            idx
+        };
+        let a = hits(42);
+        assert!(a.is_some());
+        assert_eq!(a, hits(42));
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let plan = FaultPlan::new().arm("test.site-a", 0, FaultAction::Nan);
+        let ((), report) = with_plan(plan, || {
+            let mut v = vec![1.0];
+            corrupt("test.site-b", &mut v);
+            assert!(!v[0].is_nan(), "unrelated site must not fire");
+        });
+        assert!(report.fired.is_empty());
+    }
+}

@@ -1,0 +1,127 @@
+//! Admission-time numerical health checks.
+//!
+//! Everything here runs **before** a job reaches a worker: a request
+//! with the wrong dimension, NaN/Inf entries, or nonsense solver /
+//! kernel parameters is rejected as [`EngineError::InvalidInput`]
+//! instead of producing garbage eigenpairs deep inside a Krylov loop.
+//! The checks are O(input) scans with no allocation on success.
+
+use super::error::EngineError;
+use crate::fastsum::Kernel;
+
+/// Reject `v` unless it has length `n` and every entry is finite.
+pub fn validate_vector(what: &str, v: &[f64], n: usize) -> Result<(), EngineError> {
+    if v.len() != n {
+        return Err(EngineError::invalid(format!(
+            "{what} has length {}, operator dimension is {n}",
+            v.len()
+        )));
+    }
+    validate_finite(what, v)
+}
+
+/// Reject `xs` unless it is a non-empty column-major block whose
+/// total length is a multiple of `n`, with every entry finite.
+pub fn validate_block(what: &str, xs: &[f64], n: usize) -> Result<(), EngineError> {
+    if xs.is_empty() {
+        return Err(EngineError::invalid(format!("{what} is empty")));
+    }
+    if n == 0 || xs.len() % n != 0 {
+        return Err(EngineError::invalid(format!(
+            "{what} has length {} which is not a positive multiple of dimension {n}",
+            xs.len()
+        )));
+    }
+    validate_finite(what, xs)
+}
+
+/// Reject `v` if any entry is NaN or infinite, naming the first
+/// offender's index.
+pub fn validate_finite(what: &str, v: &[f64]) -> Result<(), EngineError> {
+    match v.iter().position(|x| !x.is_finite()) {
+        None => Ok(()),
+        Some(i) => Err(EngineError::invalid(format!(
+            "{what} has non-finite entry {} at index {i}",
+            v[i]
+        ))),
+    }
+}
+
+/// Reject a scalar solver/kernel parameter unless it is finite and
+/// strictly positive.
+pub fn validate_positive(what: &str, x: f64) -> Result<(), EngineError> {
+    if x.is_finite() && x > 0.0 {
+        Ok(())
+    } else {
+        Err(EngineError::invalid(format!("{what} must be finite and > 0, got {x}")))
+    }
+}
+
+/// Kernel-parameter admission: every kernel family in the paper's
+/// experiments needs a finite, strictly positive shape parameter
+/// (σ for Gaussian/Laplacian-RBF, c for the multiquadrics).
+pub fn validate_kernel(kernel: &Kernel) -> Result<(), EngineError> {
+    match *kernel {
+        Kernel::Gaussian { sigma } => validate_positive("Gaussian sigma", sigma),
+        Kernel::LaplacianRbf { sigma } => validate_positive("Laplacian-RBF sigma", sigma),
+        Kernel::Multiquadric { c } => validate_positive("multiquadric c", c),
+        Kernel::InverseMultiquadric { c } => validate_positive("inverse-multiquadric c", c),
+    }
+}
+
+/// Post-hoc output scan: a non-finite entry in a solver/operator
+/// output is a numerical breakdown attributed to `solver`.
+pub fn check_output_finite(solver: &'static str, v: &[f64]) -> Result<(), EngineError> {
+    match v.iter().position(|x| !x.is_finite()) {
+        None => Ok(()),
+        Some(i) => Err(EngineError::NumericalBreakdown {
+            solver,
+            reason: format!("output has non-finite entry {} at index {i}", v[i]),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finite_vectors_pass() {
+        assert!(validate_vector("x", &[1.0, -2.0, 0.0], 3).is_ok());
+        assert!(validate_block("xs", &[1.0; 6], 3).is_ok());
+    }
+
+    #[test]
+    fn nan_and_inf_are_named() {
+        let e = validate_vector("x", &[1.0, f64::NAN, 3.0], 3).unwrap_err();
+        assert_eq!(e.class(), "invalid-input");
+        assert!(e.to_string().contains("index 1"), "{e}");
+        let e = validate_finite("rhs", &[f64::INFINITY]).unwrap_err();
+        assert!(e.to_string().contains("inf"), "{e}");
+    }
+
+    #[test]
+    fn dimension_mismatch_is_named() {
+        let e = validate_vector("x", &[1.0, 2.0], 3).unwrap_err();
+        assert!(e.to_string().contains("length 2"), "{e}");
+        assert!(validate_block("xs", &[1.0; 5], 3).is_err());
+        assert!(validate_block("xs", &[], 3).is_err());
+    }
+
+    #[test]
+    fn kernel_parameters_gated() {
+        assert!(validate_kernel(&Kernel::Gaussian { sigma: 2.0 }).is_ok());
+        assert!(validate_kernel(&Kernel::Gaussian { sigma: 0.0 }).is_err());
+        assert!(validate_kernel(&Kernel::Gaussian { sigma: f64::NAN }).is_err());
+        assert!(validate_kernel(&Kernel::Multiquadric { c: -1.0 }).is_err());
+        assert!(validate_kernel(&Kernel::InverseMultiquadric { c: 1.5 }).is_ok());
+        assert!(validate_kernel(&Kernel::LaplacianRbf { sigma: f64::INFINITY }).is_err());
+    }
+
+    #[test]
+    fn output_scan_is_breakdown_not_invalid_input() {
+        let e = check_output_finite("matvec", &[0.0, f64::NAN]).unwrap_err();
+        assert_eq!(e.class(), "breakdown");
+        assert!(check_output_finite("matvec", &[0.0, 1.0]).is_ok());
+    }
+}

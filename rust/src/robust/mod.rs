@@ -1,0 +1,29 @@
+//! Fault-tolerant execution layer: typed errors, cooperative
+//! cancellation, numerical health guards, and deterministic fault
+//! injection.
+//!
+//! The engine's robustness contract (see `docs/ROBUSTNESS.md`):
+//!
+//! * **Typed failures, never crashes.** Every way a job can go wrong
+//!   maps to one [`EngineError`] variant; the coordinator catches
+//!   worker panics, recovers poisoned locks, and keeps serving.
+//! * **Cooperative deadlines.** A [`CancelToken`] is one relaxed
+//!   atomic load per solver iteration when no deadline is armed —
+//!   the same zero-cost-when-off discipline as `obs::span`.
+//! * **Admission-time health checks.** [`health`] validates
+//!   dimensions, finiteness, and kernel parameters *before* a job
+//!   touches a worker, so garbage inputs yield
+//!   [`EngineError::InvalidInput`], not garbage eigenpairs.
+//! * **Deterministic chaos.** [`fault`] compiles to a single disarmed
+//!   atomic load in production; armed plans fire at exact,
+//!   seed-reproducible trip counts. Outputs with injection disarmed
+//!   are bitwise identical to a build without the layer.
+
+pub mod cancel;
+pub mod error;
+pub mod fault;
+pub mod health;
+
+pub use cancel::CancelToken;
+pub use error::EngineError;
+pub use fault::{FaultAction, FaultPlan};

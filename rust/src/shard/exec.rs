@@ -17,6 +17,7 @@
 
 use crate::shard::partition::ShardSpec;
 use crate::util::json::Json;
+use crate::util::lock_recover;
 use crate::util::timer::PhaseTimings;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -61,12 +62,12 @@ impl ShardExecutor {
 
     /// Record a shard-local phase (spread / forward).
     pub fn record(&self, shard: usize, phase: &str, secs: f64) {
-        self.per_shard[shard].lock().unwrap().add(phase, secs);
+        lock_recover(&self.per_shard[shard]).add(phase, secs);
     }
 
     /// Record a shared-stage phase (reduce / multiply / total / ...).
     pub fn record_global(&self, phase: &str, secs: f64) {
-        self.shared.lock().unwrap().add(phase, secs);
+        lock_recover(&self.shared).add(phase, secs);
     }
 
     /// Count columns pushed through the operator.
@@ -80,20 +81,20 @@ impl ShardExecutor {
 
     /// Snapshot of one shard's timings.
     pub fn shard_timings(&self, shard: usize) -> PhaseTimings {
-        self.per_shard[shard].lock().unwrap().clone()
+        lock_recover(&self.per_shard[shard]).clone()
     }
 
     /// Shared-stage timings snapshot.
     pub fn shared_timings(&self) -> PhaseTimings {
-        self.shared.lock().unwrap().clone()
+        lock_recover(&self.shared).clone()
     }
 
     /// Aggregate: shared stages merged with every shard's local phases
     /// (same phase names accumulate across shards).
     pub fn aggregate(&self) -> PhaseTimings {
-        let mut out = self.shared.lock().unwrap().clone();
+        let mut out = lock_recover(&self.shared).clone();
         for sh in &self.per_shard {
-            out.merge(&sh.lock().unwrap());
+            out.merge(&lock_recover(sh));
         }
         out
     }
@@ -102,7 +103,7 @@ impl ShardExecutor {
     pub fn skew_report(&self) -> String {
         let mut out = String::new();
         for (s, sh) in self.per_shard.iter().enumerate() {
-            let t = sh.lock().unwrap();
+            let t = lock_recover(sh);
             out.push_str(&format!("shard {s}: {:.6}s\n", t.total()));
         }
         out

@@ -43,6 +43,7 @@ use crate::fft::Complex;
 use crate::graph::operator::LinearOperator;
 use crate::nfft::NfftPlan;
 use crate::obs;
+use crate::robust::{fault, CancelToken, EngineError};
 use crate::shard::exec::{timings_json, ShardExecutor};
 use crate::shard::partition::ShardSpec;
 use crate::shard::plan::{build_shard_plans_with, ShardPlan, SubgridPolicy};
@@ -294,6 +295,24 @@ impl ShardedOperator {
     /// with one shard each phase reduces to the [`FastsumOperator`] /
     /// [`crate::fastsum::NormalizedAdjacency`] operation sequence.
     fn apply_one(&self, x: &[f64], y: &mut [f64]) {
+        // Infallible path: a never-token cannot stop, and the fault
+        // site is a single disarmed load outside the chaos suite.
+        let _ = self.apply_one_guarded(x, y, &CancelToken::never());
+    }
+
+    /// [`Self::apply_one`] with cooperative cancellation. The token is
+    /// probed at the three phase boundaries; an early exit returns
+    /// every pooled buffer (shard subgrids, real grid, half spectrum)
+    /// before surfacing the typed error, so a cancelled apply leaks
+    /// nothing and the next apply finds its pools intact.
+    fn apply_one_guarded(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        token: &CancelToken,
+    ) -> Result<(), EngineError> {
+        fault::fire("shard.apply");
+        token.check()?;
         let normalized = self.mode == ShardedMode::Normalized;
         let _span_all = obs::span_cat("shard.apply", "shard");
         let t_all = Timer::start();
@@ -319,6 +338,12 @@ impl ShardedOperator {
                 (s, sub)
             })
             .collect();
+        if let Err(e) = token.check() {
+            for (s, sub) in subs {
+                self.shards[s].grids().put(sub);
+            }
+            return Err(e);
+        }
         // Phase 2 (shared): merge the boxed subgrids into the global
         // real grid in fixed shard order (each box's wrap applied
         // once; deterministic), ONE r2c FFT, then the fused
@@ -360,6 +385,11 @@ impl ShardedOperator {
         self.plan.backward_half_spectrum(&mut spec, &mut fgrid);
         self.exec.record_global("forward-prepare", t.elapsed_secs());
         drop(span);
+        if let Err(e) = token.check() {
+            self.rgrids.put(fgrid);
+            self.specs.put(spec);
+            return Err(e);
+        }
         let fgrid_ref: &[f64] = &fgrid;
         let outs: Vec<Vec<f64>> = self
             .shards
@@ -395,6 +425,7 @@ impl ShardedOperator {
             }
         }
         self.exec.record_global("total", t_all.elapsed_secs());
+        Ok(())
     }
 
     /// Apply to k packed columns, columns in parallel.
@@ -427,6 +458,41 @@ impl LinearOperator for ShardedOperator {
 
     fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
         self.apply_columns(xs, ys);
+    }
+
+    /// Cancellable apply that probes the token at the shard phase
+    /// boundaries (spread → FFT → gather), not just at entry, so a
+    /// deadline can stop a large sharded matvec mid-flight with every
+    /// pooled buffer returned.
+    fn apply_cancellable(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        token: &CancelToken,
+    ) -> Result<(), EngineError> {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        self.exec.note_columns(1);
+        self.apply_one_guarded(x, y, token)
+    }
+
+    fn apply_block_cancellable(
+        &self,
+        xs: &[f64],
+        ys: &mut [f64],
+        token: &CancelToken,
+    ) -> Result<(), EngineError> {
+        let n = self.n;
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty() && xs.len() % n == 0, "block not a multiple of n");
+        let k = xs.len() / n;
+        self.exec.note_columns(k as u64);
+        let results: Vec<Result<(), EngineError>> = ys
+            .par_chunks_mut(n)
+            .zip(xs.par_chunks(n))
+            .map(|(y, x)| self.apply_one_guarded(x, y, token))
+            .collect();
+        results.into_iter().collect()
     }
 
     fn name(&self) -> &str {

@@ -15,6 +15,15 @@ pub mod timer;
 
 pub use pool::BufferPool;
 
+/// Poison-recovering mutex lock: a panicked holder (e.g. an injected
+/// worker fault caught by `catch_unwind`) must never wedge telemetry,
+/// buffer pools, or the coordinator queue. All state guarded this way
+/// is valid-if-torn (counters, caches, free-lists), so continuing
+/// with the poisoned guard's inner value is sound.
+pub fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Near-equal contiguous ranges covering `0..n`: the first `n % parts`
 /// ranges get one extra element. The single balance policy behind the
 /// contiguous/Morton shard splits and the NFFT spread tiling (sharing
@@ -91,6 +100,19 @@ mod tests {
         let a = [2.0, 0.0];
         let b = [1.0, 0.0];
         assert!((rel_l2_error(&a, &b) - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = std::sync::Mutex::new(7u64);
+        let _ = std::panic::catch_unwind(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the mutex");
+        });
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
     }
 
     #[test]

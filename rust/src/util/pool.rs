@@ -13,6 +13,8 @@
 
 use std::sync::Mutex;
 
+use super::lock_recover;
+
 /// A pool of equally-sized `Vec<T>` scratch buffers.
 pub struct BufferPool<T: Clone + Send> {
     len: usize,
@@ -45,13 +47,15 @@ impl<T: Clone + Send> BufferPool<T> {
 
     /// Number of idle buffers currently parked in the pool.
     pub fn idle(&self) -> usize {
-        self.free.lock().unwrap().len()
+        lock_recover(&self.free).len()
     }
 
     /// Check a buffer out, allocating only when the pool is empty.
     /// Contents are unspecified (recycled buffers are not cleared).
+    /// The free-list lock is poison-recovering: a panicked holder
+    /// (worker fault) degrades to an allocation, never a wedge.
     pub fn take(&self) -> Vec<T> {
-        if let Some(buf) = self.free.lock().unwrap().pop() {
+        if let Some(buf) = lock_recover(&self.free).pop() {
             return buf;
         }
         vec![self.fill.clone(); self.len]
@@ -62,7 +66,7 @@ impl<T: Clone + Send> BufferPool<T> {
     /// as are buffers beyond the retention cap.
     pub fn put(&self, buf: Vec<T>) {
         if buf.len() == self.len {
-            let mut free = self.free.lock().unwrap();
+            let mut free = lock_recover(&self.free);
             if free.len() < self.max_idle {
                 free.push(buf);
             }

@@ -1,0 +1,385 @@
+//! Chaos suite for the fault-tolerant execution layer: injected
+//! panics, NaN corruption, and expired deadlines must surface as typed
+//! [`JobResult::Failed`] results while the worker pool keeps serving —
+//! and with every fault disarmed the instrumentation must be bitwise
+//! invisible (pinned via `to_bits`, like `tests/telemetry.rs` pins the
+//! span recorder).
+//!
+//! Fault plans share process-global state (the injection registry's
+//! per-site trip counters and, via the retry ladder, the SIMD
+//! override), and the test harness runs these tests concurrently — so
+//! EVERY operator/coordinator action that trips a fault site runs
+//! under the injection gate, through `fault::with_plan` or
+//! `fault::with_disarmed`. An ungated apply in one test could consume
+//! another test's armed trip counts.
+
+use nfft_krylov::coordinator::{Coordinator, Job, JobResult};
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel, NormalizedAdjacency};
+use nfft_krylov::graph::dense::{DenseKernelOperator, DenseMode};
+use nfft_krylov::graph::LinearOperator;
+use nfft_krylov::krylov::{cg_solve, lanczos_eigs, CgOptions, LanczosOptions};
+use nfft_krylov::robust::fault::{self, FaultAction, FaultPlan};
+use nfft_krylov::robust::{CancelToken, EngineError};
+use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn spiral_points(n: usize, seed: u64) -> (Vec<f64>, usize) {
+    let mut rng = Rng::seed_from(seed);
+    let ds = nfft_krylov::data::spiral::generate(
+        nfft_krylov::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+        &mut rng,
+    );
+    (ds.points, ds.n)
+}
+
+fn fastsum_op(points: &[f64]) -> FastsumOperator {
+    FastsumOperator::new(points, 3, Kernel::Gaussian { sigma: 3.5 }, FastsumParams::setup1())
+}
+
+/// Every operator family rejects NaN/Inf payloads and dimension
+/// mismatches with a typed `InvalidInput` — none of them panics or
+/// silently produces garbage.
+#[test]
+fn invalid_inputs_rejected_across_all_operator_families() {
+    let (points, n) = spiral_points(200, 3);
+    fault::with_disarmed(|| {
+        let fastsum = fastsum_op(&points);
+        let dense = DenseKernelOperator::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            DenseMode::Normalized,
+        );
+        let normalized = NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup1(),
+        )
+        .unwrap();
+        let spec = ShardSpec::build(PartitionStrategy::Morton, &points, 3, 4);
+        let sharded = ShardedOperator::from_fastsum(&fastsum, spec);
+        let ops: [(&str, &dyn LinearOperator); 4] = [
+            ("dense", &dense),
+            ("fastsum", &fastsum),
+            ("normalized", &normalized),
+            ("sharded", &sharded),
+        ];
+        for (name, op) in ops {
+            let mut y = vec![0.0; n];
+            // NaN entry.
+            let mut x = vec![1.0; n];
+            x[n / 2] = f64::NAN;
+            let e = op.try_apply(&x, &mut y).unwrap_err();
+            assert_eq!(e.class(), "invalid-input", "{name}: NaN must be rejected");
+            // Inf entry.
+            let mut x = vec![1.0; n];
+            x[0] = f64::INFINITY;
+            let e = op.try_apply(&x, &mut y).unwrap_err();
+            assert_eq!(e.class(), "invalid-input", "{name}: Inf must be rejected");
+            // Dimension mismatch.
+            let x = vec![1.0; n + 1];
+            let e = op.try_apply(&x, &mut y).unwrap_err();
+            assert_eq!(e.class(), "invalid-input", "{name}: wrong length must be rejected");
+            // Malformed block (not a multiple of the dimension).
+            let xs = vec![1.0; n + 1];
+            let mut ys = vec![0.0; n + 1];
+            let e = op.try_apply_block(&xs, &mut ys).unwrap_err();
+            assert_eq!(e.class(), "invalid-input", "{name}: ragged block must be rejected");
+            // And a well-formed payload still works, matching plain
+            // apply bit for bit.
+            let mut rng = Rng::seed_from(11);
+            let x = rng.normal_vec(n);
+            let mut y_ok = vec![0.0; n];
+            op.try_apply(&x, &mut y_ok).unwrap();
+            let mut y_plain = vec![0.0; n];
+            op.apply(&x, &mut y_plain);
+            for (a, b) in y_ok.iter().zip(&y_plain) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}: try_apply changed bits");
+            }
+        }
+    });
+}
+
+/// An injected panic on both execution attempts is caught: the
+/// submitter gets a typed `WorkerPanic`, the counters record one panic
+/// and one retry, and the surviving pool serves subsequent jobs.
+#[test]
+fn injected_panic_is_isolated_and_pool_survives() {
+    let (points, n) = spiral_points(200, 5);
+    let op: Arc<dyn LinearOperator> = Arc::new(fastsum_op(&points));
+    let mut c = Coordinator::new(op, 2);
+    let plan = FaultPlan::new()
+        .arm("job.execute", 0, FaultAction::Panic)
+        .arm("job.execute", 1, FaultAction::Panic);
+    let (result, report) =
+        fault::with_plan(plan, || c.submit(Job::Matvec { x: vec![1.0; n] }).wait());
+    assert_eq!(report.fired.len(), 2, "both attempts must hit the armed site");
+    match result {
+        JobResult::Failed(EngineError::WorkerPanic { job, message }) => {
+            assert_eq!(job, "matvec");
+            assert!(message.contains("fault injected"), "{message}");
+        }
+        other => panic!("expected WorkerPanic, got {:?}", other.error()),
+    }
+    let m = c.metrics();
+    assert_eq!(m.jobs_panicked.load(Ordering::Relaxed), 1);
+    assert_eq!(m.jobs_retried.load(Ordering::Relaxed), 1);
+    assert_eq!(m.jobs_failed.load(Ordering::Relaxed), 1);
+    let snap = c.flight().snapshot();
+    assert_eq!(snap.last().map(|r| r.err), Some(Some("panic")));
+    // The pool survived the panic: every worker still serves.
+    fault::with_disarmed(|| {
+        for _ in 0..4 {
+            let h = c.submit(Job::Matvec { x: vec![1.0; n] });
+            assert!(matches!(h.wait(), JobResult::Matvec(_)), "pool must keep serving");
+        }
+    });
+    assert_eq!(c.metrics().jobs_completed.load(Ordering::Relaxed), 5);
+    c.shutdown();
+}
+
+/// A single-attempt panic is absorbed by the degradation ladder: the
+/// scalar-pinned retry succeeds and the submitter never sees an error.
+#[test]
+fn retry_ladder_recovers_from_one_panic() {
+    let (points, n) = spiral_points(200, 7);
+    let op: Arc<dyn LinearOperator> = Arc::new(fastsum_op(&points));
+    let mut c = Coordinator::new(op, 1);
+    let plan = FaultPlan::new().arm("job.execute", 0, FaultAction::Panic);
+    let (result, report) =
+        fault::with_plan(plan, || c.submit(Job::Matvec { x: vec![1.0; n] }).wait());
+    assert_eq!(report.fired.len(), 1);
+    assert!(matches!(result, JobResult::Matvec(_)), "retry must recover the job");
+    let m = c.metrics();
+    assert_eq!(m.jobs_retried.load(Ordering::Relaxed), 1);
+    assert_eq!(m.jobs_panicked.load(Ordering::Relaxed), 0);
+    assert_eq!(m.jobs_failed.load(Ordering::Relaxed), 0);
+    c.shutdown();
+}
+
+/// NaN corruption injected into the fastsum output is caught by the
+/// coordinator's output health scan and typed as a numerical
+/// breakdown; a single-hit corruption is absorbed by the retry.
+#[test]
+fn nan_injection_surfaces_as_breakdown_and_retry_absorbs_single_hit() {
+    let (points, n) = spiral_points(200, 9);
+    let op: Arc<dyn LinearOperator> = Arc::new(fastsum_op(&points));
+    let mut c = Coordinator::new(op, 1);
+    // Corrupt both attempts → typed breakdown.
+    let plan = FaultPlan::new()
+        .arm("fastsum.apply", 0, FaultAction::Nan)
+        .arm("fastsum.apply", 1, FaultAction::Nan);
+    let (result, report) =
+        fault::with_plan(plan, || c.submit(Job::Matvec { x: vec![1.0; n] }).wait());
+    assert_eq!(report.fired.len(), 2);
+    match result {
+        JobResult::Failed(EngineError::NumericalBreakdown { solver, reason }) => {
+            assert_eq!(solver, "matvec");
+            assert!(reason.contains("non-finite"), "{reason}");
+        }
+        other => panic!("expected NumericalBreakdown, got {:?}", other.error()),
+    }
+    assert_eq!(c.flight().snapshot().last().map(|r| r.err), Some(Some("breakdown")));
+    // Corrupt only the first attempt → the retry delivers a clean
+    // result (computed on the scalar SIMD oracle, so only finiteness
+    // is asserted, not bits).
+    let plan = FaultPlan::new().arm("fastsum.apply", 0, FaultAction::Nan);
+    let (result, report) =
+        fault::with_plan(plan, || c.submit(Job::Matvec { x: vec![1.0; n] }).wait());
+    assert_eq!(report.fired.len(), 1);
+    match result {
+        JobResult::Matvec(y) => assert!(y.iter().all(|v| v.is_finite())),
+        other => panic!("retry must recover, got {:?}", other.error()),
+    }
+    assert_eq!(c.metrics().jobs_retried.load(Ordering::Relaxed), 2);
+    c.shutdown();
+}
+
+/// An injected delay pushes the job past its deadline: the submitter
+/// gets a typed `Timeout`, recorded in metrics and the flight ring.
+#[test]
+fn injected_delay_trips_the_deadline() {
+    let (points, n) = spiral_points(200, 13);
+    let op: Arc<dyn LinearOperator> = Arc::new(fastsum_op(&points));
+    let mut c = Coordinator::new(op, 1);
+    // The injected 50 ms delay sits between the job.execute site and
+    // the first token check, so a 5 ms budget expires deterministically.
+    let plan = FaultPlan::new().arm("job.execute", 0, FaultAction::DelayMs(50));
+    let (result, report) = fault::with_plan(plan, || {
+        c.submit_with_deadline(Job::Matvec { x: vec![1.0; n] }, Duration::from_millis(5)).wait()
+    });
+    assert_eq!(report.fired.len(), 1);
+    match result {
+        JobResult::Failed(EngineError::Timeout { budget_ms }) => assert_eq!(budget_ms, 5),
+        other => panic!("expected Timeout, got {:?}", other.error()),
+    }
+    let m = c.metrics();
+    assert_eq!(m.jobs_timeout.load(Ordering::Relaxed), 1);
+    // Timeouts are terminal, not retryable.
+    assert_eq!(m.jobs_retried.load(Ordering::Relaxed), 0);
+    assert_eq!(c.flight().snapshot().last().map(|r| r.err), Some(Some("timeout")));
+    c.shutdown();
+}
+
+/// Malformed jobs are rejected at admission; the counters and the
+/// Prometheus export carry the full robustness counter set.
+#[test]
+fn admission_rejections_and_prometheus_counters() {
+    let (points, n) = spiral_points(200, 17);
+    let op: Arc<dyn LinearOperator> = Arc::new(fastsum_op(&points));
+    let mut c = Coordinator::new(op, 1);
+    // Rejections never reach a worker, so they trip no fault site and
+    // need no gate.
+    let mut bad = vec![1.0; n];
+    bad[0] = f64::NAN;
+    assert_eq!(
+        c.submit(Job::Matvec { x: bad }).wait().error().map(|e| e.class()),
+        Some("invalid-input")
+    );
+    assert_eq!(
+        c.submit(Job::BlockMatvec { xs: vec![1.0; n + 3] }).wait().error().map(|e| e.class()),
+        Some("invalid-input")
+    );
+    assert_eq!(c.metrics().jobs_rejected.load(Ordering::Relaxed), 2);
+    assert_eq!(c.metrics().jobs_completed.load(Ordering::Relaxed), 0);
+    // A good job still goes through.
+    fault::with_disarmed(|| {
+        let h = c.submit(Job::Matvec { x: vec![1.0; n] });
+        assert!(matches!(h.wait(), JobResult::Matvec(_)));
+    });
+    // The export names every robustness counter.
+    let text = c.metrics().prometheus_text();
+    for counter in [
+        "nfft_jobs_rejected_total",
+        "nfft_jobs_timeout_total",
+        "nfft_jobs_panicked_total",
+        "nfft_jobs_retried_total",
+    ] {
+        assert!(text.contains(counter), "prometheus export missing {counter}");
+    }
+    assert!(text.contains("nfft_jobs_rejected_total 2\n"), "rejected count must render");
+    c.shutdown();
+}
+
+/// The eigensolver path: a cancelled token submitted with the job
+/// yields a typed error from inside the solver loop, and the
+/// coordinator converts it to `Failed` rather than a bogus `Eig`.
+#[test]
+fn cancelled_eig_job_fails_typed() {
+    let (points, _) = spiral_points(200, 19);
+    fault::with_disarmed(|| {
+        let op: Arc<dyn LinearOperator> = Arc::new(
+            NormalizedAdjacency::new(
+                &points,
+                3,
+                Kernel::Gaussian { sigma: 3.5 },
+                FastsumParams::setup1(),
+            )
+            .unwrap(),
+        );
+        let mut c = Coordinator::new(op, 1);
+        let token = CancelToken::never();
+        token.cancel();
+        let h = c.submit_with_token(
+            Job::Eig(LanczosOptions { k: 3, tol: 1e-8, ..Default::default() }),
+            token,
+        );
+        assert_eq!(h.wait().error().map(|e| e.class()), Some("cancelled"));
+        c.shutdown();
+    });
+}
+
+/// The determinism contract of the whole robustness layer: with every
+/// fault disarmed — or armed at an unrelated site — the instrumented
+/// paths (fault sites, never-token probes, try_apply validation) are
+/// bitwise invisible on fastsum, sharded, CG and Lanczos outputs.
+#[test]
+fn disarmed_and_unrelated_faults_are_bitwise_invisible() {
+    let (points, n) = spiral_points(300, 23);
+    let fastsum = fastsum_op(&points);
+    let spec = ShardSpec::build(PartitionStrategy::Morton, &points, 3, 3);
+    let sharded = ShardedOperator::from_fastsum(&fastsum, spec);
+    // Construction applies the operator (degree computation), so it
+    // holds the gate like every other site-tripping action here.
+    let normalized = fault::with_disarmed(|| {
+        NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup1(),
+        )
+        .unwrap()
+    });
+    let mut rng = Rng::seed_from(29);
+    let x = rng.normal_vec(n);
+    // Baseline bits with the gate held and everything disarmed.
+    let (base_fast, base_shard, base_cg, base_eig) = fault::with_disarmed(|| {
+        let mut yf = vec![0.0; n];
+        fastsum.apply(&x, &mut yf);
+        let mut ys = vec![0.0; n];
+        sharded.apply(&x, &mut ys);
+        let cg = cg_solve(&normalized, &x, &CgOptions { tol: 1e-8, ..Default::default() });
+        let eig = lanczos_eigs(&normalized, LanczosOptions { k: 4, ..Default::default() });
+        (yf, ys, cg.x, eig.eigenvalues)
+    });
+    // A plan armed at a site none of these paths visit: every visited
+    // site takes only its relaxed-load fast path plus the plan probe,
+    // which must not change a single output bit.
+    let plan = FaultPlan::new().arm("test.unvisited-site", 0, FaultAction::Panic);
+    let ((got_fast, got_shard, got_cg, got_eig), report) = fault::with_plan(plan, || {
+        let mut yf = vec![0.0; n];
+        fastsum.try_apply(&x, &mut yf).unwrap();
+        let mut ys = vec![0.0; n];
+        sharded.apply_cancellable(&x, &mut ys, &CancelToken::never()).unwrap();
+        let cg = cg_solve(&normalized, &x, &CgOptions { tol: 1e-8, ..Default::default() });
+        let eig = lanczos_eigs(&normalized, LanczosOptions { k: 4, ..Default::default() });
+        (yf, ys, cg.x, eig.eigenvalues)
+    });
+    assert!(report.fired.is_empty(), "the unvisited site must never fire");
+    for (a, b) in base_fast.iter().zip(&got_fast) {
+        assert_eq!(a.to_bits(), b.to_bits(), "fastsum bits changed under armed plan");
+    }
+    for (a, b) in base_shard.iter().zip(&got_shard) {
+        assert_eq!(a.to_bits(), b.to_bits(), "sharded bits changed under armed plan");
+    }
+    for (a, b) in base_cg.iter().zip(&got_cg) {
+        assert_eq!(a.to_bits(), b.to_bits(), "CG bits changed under armed plan");
+    }
+    assert_eq!(base_eig.len(), got_eig.len());
+    for (a, b) in base_eig.iter().zip(&got_eig) {
+        assert_eq!(a.to_bits(), b.to_bits(), "Lanczos bits changed under armed plan");
+    }
+}
+
+/// Seeded chaos schedule end-to-end: the same seed produces the same
+/// injected-fault outcome through a live coordinator.
+#[test]
+fn seeded_chaos_schedule_is_reproducible() {
+    let (points, n) = spiral_points(200, 31);
+    let run = |seed: u64| {
+        let op: Arc<dyn LinearOperator> = Arc::new(fastsum_op(&points));
+        let mut c = Coordinator::new(op, 1);
+        // Four jobs; the seed picks which one eats a NaN (its retry,
+        // hitting the site again, may also be corrupted by the second
+        // seed-chosen arm — either way the outcome is seed-determined).
+        let plan = FaultPlan::seeded(seed)
+            .arm_within("fastsum.apply", 4, FaultAction::Nan)
+            .arm_within("fastsum.apply", 4, FaultAction::Nan);
+        let (classes, _) = fault::with_plan(plan, || {
+            (0..4)
+                .map(|_| {
+                    let r = c.submit(Job::Matvec { x: vec![1.0; n] }).wait();
+                    r.error().map(|e| e.class())
+                })
+                .collect::<Vec<_>>()
+        });
+        c.shutdown();
+        classes
+    };
+    let a = run(1234);
+    assert_eq!(a, run(1234), "same seed must give the same chaos outcome");
+}

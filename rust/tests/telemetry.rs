@@ -92,6 +92,7 @@ fn flight_recorder_wraps_and_tolerates_concurrent_writers() {
             ortho_secs: 0.0,
             bytes: 8,
             ok: true,
+            err: None,
         });
     });
     assert_eq!(ring.pushed(), 1000);
@@ -118,6 +119,7 @@ fn flight_recorder_wraps_and_tolerates_concurrent_writers() {
             ortho_secs: 0.0,
             bytes: 0,
             ok: true,
+            err: None,
         });
     }
     let snap = ring.snapshot();

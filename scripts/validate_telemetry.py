@@ -16,7 +16,11 @@ Two formats (see docs/OBSERVABILITY.md):
   to a metric announced by ``# HELP`` + ``# TYPE``, values parse as
   numbers, histogram bucket counts are cumulative (monotone
   non-decreasing in ``le`` order), the ``+Inf`` bucket is present and
-  equals ``<name>_count``, and ``_sum`` is non-negative.
+  equals ``<name>_count``, and ``_sum`` is non-negative. Also requires
+  the robustness counter set (rejected/timeout/panicked/retried; see
+  docs/ROBUSTNESS.md) to be announced and sampled — a regression that
+  drops one of them from the export must fail CI even when its value
+  is zero.
 
 Usage:
     python3 scripts/validate_telemetry.py --trace TRACE_matvec.json \
@@ -30,6 +34,15 @@ import json
 import sys
 
 TRACE_EVENT_KEYS = ("name", "cat", "ph", "ts", "dur", "pid", "tid")
+
+# Robustness counters every coordinator export must carry (announced
+# AND sampled), even at value 0 — see docs/ROBUSTNESS.md.
+REQUIRED_COUNTERS = (
+    "nfft_jobs_rejected_total",
+    "nfft_jobs_timeout_total",
+    "nfft_jobs_panicked_total",
+    "nfft_jobs_retried_total",
+)
 
 
 def fail(errors, msg):
@@ -149,6 +162,12 @@ def validate_prom(path):
                 h["count"] = value
         elif value < 0 and announced[base] == "counter":
             fail(errors, f"{path}:{lineno}: counter '{name}' is negative")
+    sampled = {base_name(name) for _, name, _, _ in samples}
+    for required in REQUIRED_COUNTERS:
+        if required not in announced:
+            fail(errors, f"{path}: required counter '{required}' not announced by # TYPE")
+        elif required not in sampled:
+            fail(errors, f"{path}: required counter '{required}' announced but never sampled")
     for base, h in sorted(hist.items()):
         if not h["buckets"]:
             fail(errors, f"{path}: histogram '{base}' has no buckets")
