@@ -30,6 +30,15 @@ pub struct Metrics {
     /// Degraded-path retries taken after a retryable failure (see
     /// `docs/ROBUSTNESS.md`, degradation ladder).
     pub jobs_retried: AtomicU64,
+    /// ABFT checksum trips: applies whose output failed an invariant
+    /// check and were surfaced as `silent-corruption` failures.
+    pub checksum_failures: AtomicU64,
+    /// Jobs whose recovery resumed from a mid-solve checkpoint rather
+    /// than restarting from scratch.
+    pub jobs_resumed: AtomicU64,
+    /// Total recovery-ladder rungs taken across all jobs (each retry
+    /// attempt beyond the first counts one rung).
+    pub ladder_rungs: AtomicU64,
     pub matvecs: AtomicU64,
     pub matvec_batches: AtomicU64,
     /// Total vectors flushed through the batcher.
@@ -122,6 +131,12 @@ impl Metrics {
         o.insert("jobs_timeout".to_string(), num(self.jobs_timeout.load(Ordering::Relaxed)));
         o.insert("jobs_panicked".to_string(), num(self.jobs_panicked.load(Ordering::Relaxed)));
         o.insert("jobs_retried".to_string(), num(self.jobs_retried.load(Ordering::Relaxed)));
+        o.insert(
+            "checksum_failures".to_string(),
+            num(self.checksum_failures.load(Ordering::Relaxed)),
+        );
+        o.insert("jobs_resumed".to_string(), num(self.jobs_resumed.load(Ordering::Relaxed)));
+        o.insert("ladder_rungs".to_string(), num(self.ladder_rungs.load(Ordering::Relaxed)));
         o.insert("matvecs".to_string(), num(self.matvecs.load(Ordering::Relaxed)));
         o.insert("matvec_batches".to_string(), num(self.matvec_batches.load(Ordering::Relaxed)));
         o.insert("batched_vectors".to_string(), num(self.batched_vectors.load(Ordering::Relaxed)));
@@ -201,6 +216,21 @@ impl Metrics {
             self.jobs_retried.load(Ordering::Relaxed),
         )
         .counter(
+            "nfft_checksum_failures_total",
+            "ABFT checksum trips surfaced as silent-corruption failures.",
+            self.checksum_failures.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_jobs_resumed_total",
+            "Jobs resumed from a mid-solve checkpoint during recovery.",
+            self.jobs_resumed.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_ladder_rung_total",
+            "Recovery-ladder rungs taken (attempts beyond the first).",
+            self.ladder_rungs.load(Ordering::Relaxed),
+        )
+        .counter(
             "nfft_matvecs_total",
             "Matrix-vector products executed.",
             self.matvecs.load(Ordering::Relaxed),
@@ -240,7 +270,7 @@ impl Metrics {
             }
         };
         format!(
-            "jobs: {} submitted, {} completed, {} failed, {} rejected, {} timeout, {} panicked, {} retried | matvecs: {} ({} batches, {} vectors) | op state: {} B | latency: mean {:.0}us p50 <={} p99 <={}",
+            "jobs: {} submitted, {} completed, {} failed, {} rejected, {} timeout, {} panicked, {} retried, {} resumed | {} checksum trips, {} ladder rungs | matvecs: {} ({} batches, {} vectors) | op state: {} B | latency: mean {:.0}us p50 <={} p99 <={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
@@ -248,6 +278,9 @@ impl Metrics {
             self.jobs_timeout.load(Ordering::Relaxed),
             self.jobs_panicked.load(Ordering::Relaxed),
             self.jobs_retried.load(Ordering::Relaxed),
+            self.jobs_resumed.load(Ordering::Relaxed),
+            self.checksum_failures.load(Ordering::Relaxed),
+            self.ladder_rungs.load(Ordering::Relaxed),
             self.matvecs.load(Ordering::Relaxed),
             self.matvec_batches.load(Ordering::Relaxed),
             self.batched_vectors.load(Ordering::Relaxed),
@@ -323,22 +356,35 @@ mod tests {
         m.jobs_timeout.fetch_add(1, Ordering::Relaxed);
         m.jobs_panicked.fetch_add(3, Ordering::Relaxed);
         m.jobs_retried.fetch_add(4, Ordering::Relaxed);
+        m.checksum_failures.fetch_add(5, Ordering::Relaxed);
+        m.jobs_resumed.fetch_add(6, Ordering::Relaxed);
+        m.ladder_rungs.fetch_add(7, Ordering::Relaxed);
         let j = m.metrics_json();
         assert_eq!(j.get("jobs_rejected").and_then(Json::as_f64), Some(2.0));
         assert_eq!(j.get("jobs_timeout").and_then(Json::as_f64), Some(1.0));
         assert_eq!(j.get("jobs_panicked").and_then(Json::as_f64), Some(3.0));
         assert_eq!(j.get("jobs_retried").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(j.get("checksum_failures").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(j.get("jobs_resumed").and_then(Json::as_f64), Some(6.0));
+        assert_eq!(j.get("ladder_rungs").and_then(Json::as_f64), Some(7.0));
         let text = m.prometheus_text();
         assert!(text.contains("# TYPE nfft_jobs_rejected_total counter"));
         assert!(text.contains("nfft_jobs_rejected_total 2\n"));
         assert!(text.contains("nfft_jobs_timeout_total 1\n"));
         assert!(text.contains("nfft_jobs_panicked_total 3\n"));
         assert!(text.contains("nfft_jobs_retried_total 4\n"));
+        assert!(text.contains("# TYPE nfft_checksum_failures_total counter"));
+        assert!(text.contains("nfft_checksum_failures_total 5\n"));
+        assert!(text.contains("nfft_jobs_resumed_total 6\n"));
+        assert!(text.contains("nfft_ladder_rung_total 7\n"));
         let r = m.report();
         assert!(r.contains("2 rejected"));
         assert!(r.contains("1 timeout"));
         assert!(r.contains("3 panicked"));
         assert!(r.contains("4 retried"));
+        assert!(r.contains("6 resumed"));
+        assert!(r.contains("5 checksum trips"));
+        assert!(r.contains("7 ladder rungs"));
     }
 
     #[test]

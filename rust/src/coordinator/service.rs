@@ -13,8 +13,15 @@
 //!   [`EngineError::InvalidInput`] before touching a worker;
 //! * worker panics are caught per job — the pool keeps serving and the
 //!   submitter gets [`JobResult::Failed`] instead of a hang;
-//! * retryable failures (panic, numerical breakdown) are retried once
-//!   with the SIMD dispatch pinned to the scalar oracle;
+//! * retryable failures (panic, numerical breakdown, checksum trips)
+//!   climb a multi-rung recovery ladder: checkpointable jobs (eig,
+//!   block eig, SSL solve) resume from their latest mid-solve snapshot
+//!   at the same SIMD level, then resume at scalar, then restart at
+//!   scalar, and finally — for small operators — fall back to a dense
+//!   Jacobi oracle; checkpoint-less jobs keep the single scalar retry.
+//!   Every rung is counted (`nfft_ladder_rung_total`,
+//!   `nfft_jobs_resumed_total`, `nfft_checksum_failures_total`) and the
+//!   final attempt index is flight-recorded;
 //! * [`Coordinator::submit_with_deadline`] threads a [`CancelToken`]
 //!   through the solver loops, turning budget overruns into typed
 //!   [`EngineError::Timeout`] results.
@@ -24,11 +31,18 @@ use crate::coordinator::jobs::{Job, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::graph::laplacian::ShiftedOperator;
 use crate::graph::operator::LinearOperator;
-use crate::krylov::cg::cg_solve_cancellable;
-use crate::krylov::lanczos::{block_lanczos_eigs_cancellable, lanczos_eigs_cancellable};
-use crate::nystrom::hybrid::hybrid_nystrom;
+use crate::krylov::cg::{cg_resume, cg_solve_cancellable, cg_solve_checkpointed, CgResult};
+use crate::krylov::lanczos::{
+    block_lanczos_eigs_cancellable, block_lanczos_eigs_checkpointed, block_lanczos_eigs_resume,
+    lanczos_eigs_cancellable, lanczos_eigs_checkpointed, lanczos_eigs_resume, EigResult,
+};
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::jacobi::sym_eig_cancellable;
+use crate::nystrom::hybrid::hybrid_nystrom_cancellable;
+use crate::nystrom::NystromError;
 use crate::obs::{self, FlightRecord, FlightRecorder};
-use crate::robust::{fault, health, CancelToken, EngineError};
+use crate::robust::checkpoint::{Checkpoint, CheckpointSink};
+use crate::robust::{fault, health, verify, CancelToken, EngineError};
 use crate::util::json::Json;
 use crate::util::lock_recover;
 use std::collections::BTreeMap;
@@ -40,6 +54,15 @@ use std::time::Duration;
 
 /// Jobs retained by the flight recorder for post-mortem snapshots.
 const FLIGHT_CAPACITY: usize = 256;
+
+/// Snapshot cadence (solver iterations / restarts / block steps) of
+/// the checkpoint sink the recovery ladder arms for checkpointable
+/// jobs.
+const CHECKPOINT_EVERY: usize = 8;
+
+/// Largest operator dimension the dense-oracle rung will materialise
+/// (n applies + an O(n³) Jacobi sweep — only sensible for small n).
+const DENSE_ORACLE_MAX_DIM: usize = 512;
 
 enum Envelope {
     Work { id: u64, job: Job, token: CancelToken, reply: Sender<(u64, JobResult)> },
@@ -111,7 +134,7 @@ impl Coordinator {
                 match msg {
                     Ok(Envelope::Work { id, job, token, reply }) => {
                         let t = std::time::Instant::now();
-                        let result = {
+                        let (result, attempt) = {
                             let _span = obs::span_id("job.execute", job.kind(), id);
                             execute_with_recovery(op.as_ref(), &op, &job, &token, &metrics)
                         };
@@ -127,8 +150,14 @@ impl Coordinator {
                             }
                             _ => {}
                         }
-                        let rec =
-                            flight_record(id, &job, &result, micros as f64 / 1e6, op.dim());
+                        let rec = flight_record(
+                            id,
+                            &job,
+                            &result,
+                            micros as f64 / 1e6,
+                            op.dim(),
+                            attempt,
+                        );
                         if !rec.ok {
                             metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                         }
@@ -217,6 +246,7 @@ impl Coordinator {
                 ortho_secs: 0.0,
                 bytes: 0,
                 ok: false,
+                attempt: 0,
                 err: Some(e.class()),
             });
             return JobHandle::failed(id, e);
@@ -275,6 +305,7 @@ fn flight_record(
     result: &JobResult,
     total_secs: f64,
     dim: usize,
+    attempt: u64,
 ) -> FlightRecord {
     let columns = job_columns(job, dim);
     let (matvec_secs, ortho_secs, ok, err) = match result {
@@ -293,6 +324,7 @@ fn flight_record(
         ortho_secs,
         bytes: 2 * columns * dim as u64 * 8,
         ok,
+        attempt,
         err,
     }
 }
@@ -336,28 +368,102 @@ fn validate_job(job: &Job, dim: usize) -> Result<(), EngineError> {
     }
 }
 
-/// Run a job with the full recovery ladder: catch panics, convert
-/// solver-embedded errors to [`JobResult::Failed`], and retry a
-/// retryable failure ONCE with SIMD dispatch pinned to the scalar
-/// oracle (the retry is process-global while it runs; see
-/// `docs/ROBUSTNESS.md`).
+/// Jobs whose solvers offer mid-solve snapshots the ladder can resume
+/// from. Matvecs finish in one apply and hybrid Nyström has no
+/// iteration boundary to checkpoint — those keep the single scalar
+/// retry.
+fn checkpointable(job: &Job) -> bool {
+    matches!(job, Job::Eig(_) | Job::BlockEig(_) | Job::SslSolve { .. })
+}
+
+/// Count an attempt that failed on an ABFT checksum trip.
+fn note_checksum_trip(result: &JobResult, metrics: &Metrics) {
+    if matches!(result.error(), Some(EngineError::SilentCorruption { .. })) {
+        metrics.checksum_failures.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Run a job with the full recovery ladder and return the result plus
+/// the attempt index that produced it (0 = first try).
+///
+/// Checkpointable jobs run with a [`CheckpointSink`] armed (cadence
+/// [`CHECKPOINT_EVERY`]) and climb four rungs on retryable failures
+/// (panic, numerical breakdown, checksum trip):
+///
+/// 1. resume from the latest snapshot at the same SIMD level;
+/// 2. resume from the latest snapshot with SIMD pinned to the scalar
+///    reference kernels;
+/// 3. fresh restart at scalar;
+/// 4. dense Jacobi oracle (small operators only — the operator is
+///    materialised column by column at scalar and solved directly).
+///
+/// Rungs 1–2 are skipped when no snapshot exists yet. Checkpoint-less
+/// jobs keep PR 8's single scalar retry. Every rung taken increments
+/// `ladder_rungs` (and `jobs_retried`); resumes increment
+/// `jobs_resumed`; each attempt that fails on a checksum trip
+/// increments `checksum_failures`. The scalar override is
+/// process-global while it runs; see `docs/ROBUSTNESS.md`.
 fn execute_with_recovery(
     op: &dyn LinearOperator,
     op_arc: &Arc<dyn LinearOperator>,
     job: &Job,
     token: &CancelToken,
     metrics: &Metrics,
-) -> JobResult {
-    let first = run_job_caught(op, op_arc, job, token);
-    match first.error() {
-        Some(e) if e.retryable() && !token.is_stopped() => {
-            metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
-            crate::util::simd::with_override(Some(crate::util::simd::Level::Scalar), || {
-                run_job_caught(op, op_arc, job, token)
-            })
-        }
-        _ => first,
+) -> (JobResult, u64) {
+    use crate::util::simd::{with_override, Level};
+    if !checkpointable(job) {
+        let first = run_job_caught(op, op_arc, job, token, None, None);
+        note_checksum_trip(&first, metrics);
+        return match first.error() {
+            Some(e) if e.retryable() && !token.is_stopped() => {
+                metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
+                metrics.ladder_rungs.fetch_add(1, Ordering::Relaxed);
+                let second = with_override(Some(Level::Scalar), || {
+                    run_job_caught(op, op_arc, job, token, None, None)
+                });
+                note_checksum_trip(&second, metrics);
+                (second, 1)
+            }
+            _ => (first, 0),
+        };
     }
+    let sink = CheckpointSink::new(CHECKPOINT_EVERY);
+    let mut result = run_job_caught(op, op_arc, job, token, Some(&sink), None);
+    note_checksum_trip(&result, metrics);
+    let mut attempt = 0u64;
+    for rung in 1..=4u64 {
+        match result.error() {
+            Some(e) if e.retryable() && !token.is_stopped() => {}
+            _ => break,
+        }
+        // Rungs 1–2 resume from the latest snapshot; with nothing in
+        // the slot they have no work of their own and the ladder falls
+        // through to the fresh-restart rungs.
+        let resume = if rung <= 2 { sink.slot.take() } else { None };
+        if rung <= 2 && resume.is_none() {
+            continue;
+        }
+        if rung == 4 && op.dim() > DENSE_ORACLE_MAX_DIM {
+            break;
+        }
+        metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
+        metrics.ladder_rungs.fetch_add(1, Ordering::Relaxed);
+        if resume.is_some() {
+            metrics.jobs_resumed.fetch_add(1, Ordering::Relaxed);
+        }
+        attempt = rung;
+        result = match rung {
+            1 => run_job_caught(op, op_arc, job, token, Some(&sink), resume),
+            2 | 3 => with_override(Some(Level::Scalar), || {
+                run_job_caught(op, op_arc, job, token, Some(&sink), resume)
+            }),
+            _ => with_override(Some(Level::Scalar), || {
+                dense_oracle_caught(op, op_arc, job, token)
+            }),
+        };
+        note_checksum_trip(&result, metrics);
+    }
+    (result, attempt)
 }
 
 /// One attempt at a job with panic isolation: a panic anywhere in the
@@ -368,9 +474,29 @@ fn run_job_caught(
     op_arc: &Arc<dyn LinearOperator>,
     job: &Job,
     token: &CancelToken,
+    sink: Option<&CheckpointSink>,
+    resume: Option<Checkpoint>,
 ) -> JobResult {
     match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_job(op, op_arc, job, token)
+        run_job(op, op_arc, job, token, sink, resume)
+    })) {
+        Ok(result) => result,
+        Err(payload) => JobResult::Failed(EngineError::WorkerPanic {
+            job: job.kind(),
+            message: panic_message(payload.as_ref()),
+        }),
+    }
+}
+
+/// [`dense_oracle`] with the same panic isolation as [`run_job_caught`].
+fn dense_oracle_caught(
+    op: &dyn LinearOperator,
+    op_arc: &Arc<dyn LinearOperator>,
+    job: &Job,
+    token: &CancelToken,
+) -> JobResult {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        dense_oracle(op, op_arc, job, token)
     })) {
         Ok(result) => result,
         Err(payload) => JobResult::Failed(EngineError::WorkerPanic {
@@ -395,31 +521,66 @@ fn run_job(
     op_arc: &Arc<dyn LinearOperator>,
     job: &Job,
     token: &CancelToken,
+    sink: Option<&CheckpointSink>,
+    resume: Option<Checkpoint>,
 ) -> JobResult {
     fault::fire("job.execute");
     if let Err(e) = token.check() {
         return JobResult::Failed(e);
     }
     match job {
-        Job::Eig(opts) => match lanczos_eigs_cancellable(op, *opts, token) {
-            r if r.error.is_some() => JobResult::Failed(r.error.unwrap()),
-            r => JobResult::Eig(r),
-        },
-        Job::BlockEig(opts) => match block_lanczos_eigs_cancellable(op, *opts, token) {
-            r if r.error.is_some() => JobResult::Failed(r.error.unwrap()),
-            r => JobResult::Eig(r),
-        },
+        Job::Eig(opts) => {
+            let r = match resume {
+                Some(Checkpoint::Lanczos(ck)) => lanczos_eigs_resume(op, *opts, token, ck, sink),
+                _ => match sink {
+                    Some(s) => lanczos_eigs_checkpointed(op, *opts, token, s),
+                    None => lanczos_eigs_cancellable(op, *opts, token),
+                },
+            };
+            match r {
+                r if r.error.is_some() => JobResult::Failed(r.error.unwrap()),
+                r => JobResult::Eig(r),
+            }
+        }
+        Job::BlockEig(opts) => {
+            let r = match resume {
+                Some(Checkpoint::BlockLanczos(ck)) => {
+                    block_lanczos_eigs_resume(op, *opts, token, ck, sink)
+                }
+                _ => match sink {
+                    Some(s) => block_lanczos_eigs_checkpointed(op, *opts, token, s),
+                    None => block_lanczos_eigs_cancellable(op, *opts, token),
+                },
+            };
+            match r {
+                r if r.error.is_some() => JobResult::Failed(r.error.unwrap()),
+                r => JobResult::Eig(r),
+            }
+        }
         Job::SslSolve { beta, rhs, opts } => {
             let system = ShiftedOperator::ssl_system(op_arc.clone(), *beta);
-            match cg_solve_cancellable(&system, rhs, opts, token) {
+            let r = match resume {
+                Some(Checkpoint::Cg(ck)) => cg_resume(&system, rhs, opts, token, ck, sink),
+                _ => match sink {
+                    Some(s) => cg_solve_checkpointed(&system, rhs, opts, token, s),
+                    None => cg_solve_cancellable(&system, rhs, opts, token),
+                },
+            };
+            match r {
                 r if r.error.is_some() => JobResult::Failed(r.error.unwrap()),
                 r => JobResult::Solve(r),
             }
         }
-        Job::HybridNystrom(opts) => JobResult::HybridNystrom(hybrid_nystrom(op, *opts)),
+        Job::HybridNystrom(opts) => match hybrid_nystrom_cancellable(op, *opts, token) {
+            Err(NystromError::Engine(e)) => JobResult::Failed(e),
+            r => JobResult::HybridNystrom(r),
+        },
         Job::Matvec { x } => {
             let mut y = vec![0.0; op.dim()];
             if let Err(e) = op.apply_cancellable(x, &mut y, token) {
+                return JobResult::Failed(e);
+            }
+            if let Err(e) = verify::check_apply("coordinator.matvec", x, &y) {
                 return JobResult::Failed(e);
             }
             if let Err(e) = health::check_output_finite("matvec", &y) {
@@ -439,12 +600,140 @@ fn run_job(
             if let Err(e) = op.apply_block_cancellable(xs, &mut ys, token) {
                 return JobResult::Failed(e);
             }
+            if let Err(e) = verify::check_block("coordinator.block-matvec", xs, &ys) {
+                return JobResult::Failed(e);
+            }
             if let Err(e) = health::check_output_finite("block-matvec", &ys) {
                 return JobResult::Failed(e);
             }
             JobResult::BlockMatvec(ys)
         }
     }
+}
+
+/// The ladder's last rung: materialise the operator column by column
+/// (scalar applies), and answer eig/solve jobs with the dense Jacobi
+/// oracle — no Krylov recurrence left to corrupt. O(n) applies plus an
+/// O(n³) eigendecomposition, so [`execute_with_recovery`] only takes
+/// this rung for `dim() <= DENSE_ORACLE_MAX_DIM`.
+fn dense_oracle(
+    op: &dyn LinearOperator,
+    op_arc: &Arc<dyn LinearOperator>,
+    job: &Job,
+    token: &CancelToken,
+) -> JobResult {
+    fault::fire("job.execute");
+    match job {
+        Job::Eig(_) | Job::BlockEig(_) => {
+            let k = match job {
+                Job::Eig(o) => o.k,
+                Job::BlockEig(o) => o.k,
+                _ => unreachable!(),
+            };
+            let a = match materialize_dense(op, token) {
+                Ok(a) => a,
+                Err(e) => return JobResult::Failed(e),
+            };
+            let n = a.rows;
+            let (evals, evecs) = match sym_eig_cancellable(&a, token) {
+                Ok(r) => r,
+                Err(e) => return JobResult::Failed(e),
+            };
+            let kk = k.min(n);
+            let mut eigenvalues = Vec::with_capacity(kk);
+            let mut vectors = DenseMatrix::zeros(n, kk);
+            let mut bounds = Vec::with_capacity(kk);
+            for t in 0..kk {
+                let idx = n - 1 - t; // sym_eig sorts ascending
+                eigenvalues.push(evals[idx]);
+                let col: Vec<f64> = (0..n).map(|i| evecs[(i, idx)]).collect();
+                let av = a.matvec(&col);
+                let mut r2 = 0.0;
+                for i in 0..n {
+                    r2 += (av[i] - evals[idx] * col[i]).powi(2);
+                }
+                bounds.push(r2.sqrt());
+                vectors.set_col(t, &col);
+            }
+            JobResult::Eig(EigResult {
+                eigenvalues,
+                eigenvectors: vectors,
+                iterations: n,
+                residual_bounds: bounds,
+                matvecs: n,
+                matvec_secs: 0.0,
+                ortho_secs: 0.0,
+                error: None,
+            })
+        }
+        Job::SslSolve { beta, rhs, opts } => {
+            let system = ShiftedOperator::ssl_system(op_arc.clone(), *beta);
+            let a = match materialize_dense(&system, token) {
+                Ok(a) => a,
+                Err(e) => return JobResult::Failed(e),
+            };
+            let n = a.rows;
+            let (evals, evecs) = match sym_eig_cancellable(&a, token) {
+                Ok(r) => r,
+                Err(e) => return JobResult::Failed(e),
+            };
+            // x = V Λ⁻¹ Vᵀ b — the SSL system I + βL_s is SPD with every
+            // eigenvalue ≥ 1, so the inversion is well-conditioned.
+            let mut coeffs = vec![0.0; n];
+            for (j, c) in coeffs.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for i in 0..n {
+                    acc += evecs[(i, j)] * rhs[i];
+                }
+                *c = acc / evals[j];
+            }
+            let mut x = vec![0.0; n];
+            for (j, c) in coeffs.iter().enumerate() {
+                for (i, xi) in x.iter_mut().enumerate() {
+                    *xi += evecs[(i, j)] * c;
+                }
+            }
+            let ax = a.matvec(&x);
+            let bnorm = rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let rnorm =
+                ax.iter().zip(rhs).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            let rel = if bnorm > 0.0 { rnorm / bnorm } else { 0.0 };
+            JobResult::Solve(CgResult {
+                x,
+                iterations: n,
+                converged: rel <= opts.tol,
+                rel_residual: rel,
+                error: None,
+            })
+        }
+        _ => JobResult::Failed(EngineError::invalid(
+            "dense oracle serves eig and solve jobs only",
+        )),
+    }
+}
+
+/// Materialise `op` as a dense matrix, one unit-vector apply per
+/// column, with a cancellation probe per column and a finiteness guard
+/// on the result.
+fn materialize_dense(
+    op: &dyn LinearOperator,
+    token: &CancelToken,
+) -> Result<DenseMatrix, EngineError> {
+    let n = op.dim();
+    let mut a = DenseMatrix::zeros(n, n);
+    let mut e = vec![0.0; n];
+    let mut col = vec![0.0; n];
+    for j in 0..n {
+        token.check()?;
+        e[j] = 1.0;
+        op.apply(&e, &mut col);
+        e[j] = 0.0;
+        for i in 0..n {
+            a[(i, j)] = col[i];
+        }
+    }
+    health::check_output_finite("dense-oracle materialisation", &a.data)?;
+    Ok(a)
 }
 
 #[cfg(test)]
@@ -641,10 +930,75 @@ mod tests {
         assert_eq!(flight[0].get("kind").unwrap().as_str(), Some("matvec"));
         assert_eq!(flight[0].get("columns").and_then(Json::as_f64), Some(1.0));
         assert_eq!(flight[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(flight[0].get("attempt").and_then(Json::as_f64), Some(0.0));
         assert_eq!(
             flight[0].get("bytes").and_then(Json::as_f64),
             Some(2.0 * 8.0 * n as f64)
         );
+        c.shutdown();
+    }
+
+    #[test]
+    fn panic_mid_lanczos_resumes_from_checkpoint_bitwise() {
+        use crate::robust::fault::{FaultAction, FaultPlan};
+        use std::sync::atomic::Ordering;
+        let op = spiral_operator(100);
+        let mut c = Coordinator::new(op, 1);
+        // Tight tolerance so the solve runs well past the first
+        // checkpoint (every CHECKPOINT_EVERY = 8 iterations).
+        let opts = LanczosOptions { k: 3, tol: 1e-14, max_iter: 40, ..Default::default() };
+        let clean = match c.submit(Job::Eig(opts)).wait() {
+            JobResult::Eig(r) => r,
+            other => panic!("clean run failed: {:?}", other.error()),
+        };
+        // Kill iteration 12 of the retry run: the worker catches the
+        // panic, rung 1 resumes from the iteration-8 snapshot on the
+        // same SIMD level, and the result must be bitwise identical to
+        // the uninterrupted run.
+        let plan = FaultPlan::new().arm("lanczos.iter", 12, FaultAction::Panic);
+        let (recovered, report) = fault::with_plan(plan, || {
+            match c.submit(Job::Eig(opts)).wait() {
+                JobResult::Eig(r) => r,
+                other => panic!("ladder did not recover: {:?}", other.error()),
+            }
+        });
+        assert!(report.fired.iter().any(|(s, _)| s == "lanczos.iter"));
+        assert_eq!(clean.eigenvalues.len(), recovered.eigenvalues.len());
+        for (a, b) in clean.eigenvalues.iter().zip(&recovered.eigenvalues) {
+            assert_eq!(a.to_bits(), b.to_bits(), "resume must be bitwise: {a} vs {b}");
+        }
+        let m = c.metrics();
+        assert_eq!(m.jobs_resumed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.ladder_rungs.load(Ordering::Relaxed), 1);
+        assert_eq!(m.jobs_retried.load(Ordering::Relaxed), 1);
+        let snap = c.flight().snapshot();
+        let last = snap.last().unwrap();
+        assert!(last.ok, "recovered job must record ok");
+        assert_eq!(last.attempt, 1, "rung 1 = resume on same SIMD level");
+        c.shutdown();
+    }
+
+    #[test]
+    fn checkpointless_failure_falls_through_to_scalar_restart() {
+        use crate::robust::fault::{FaultAction, FaultPlan};
+        use std::sync::atomic::Ordering;
+        let op = spiral_operator(50);
+        let mut c = Coordinator::new(op, 1);
+        // A panic before the first iteration leaves no snapshot:
+        // rungs 1-2 are skipped (nothing to resume) and rung 3
+        // restarts fresh on scalar kernels.
+        let plan = FaultPlan::new().arm("job.execute", 0, FaultAction::Panic);
+        let (result, report) = fault::with_plan(plan, || {
+            c.submit(Job::Eig(LanczosOptions { k: 3, tol: 1e-8, ..Default::default() }))
+                .wait()
+        });
+        assert!(report.fired.iter().any(|(s, _)| s == "job.execute"));
+        assert!(matches!(result, JobResult::Eig(_)), "{:?}", result.error());
+        let m = c.metrics();
+        assert_eq!(m.jobs_resumed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.ladder_rungs.load(Ordering::Relaxed), 1);
+        let snap = c.flight().snapshot();
+        assert_eq!(snap.last().map(|r| r.attempt), Some(3));
         c.shutdown();
     }
 

@@ -5,6 +5,7 @@
 use super::operator::{FastsumOperator, FastsumParams};
 use super::kernels::Kernel;
 use crate::graph::operator::LinearOperator;
+use crate::robust::verify::{Checksum, Probe, Verifier, GENERIC_REL_TOL, SAFETY};
 
 pub struct NormalizedAdjacency {
     pub(crate) fast: FastsumOperator,
@@ -63,6 +64,59 @@ impl NormalizedAdjacency {
             return None;
         }
         Some(eps * (1.0 + eta) / (eta * (eta - eps)))
+    }
+
+    /// ABFT [`Verifier`] for `A`-applies: the structural Perron
+    /// checksum `⟨D^{1/2}1, Ax⟩ = ⟨D^{1/2}1, x⟩` (since
+    /// `A D^{1/2}1 = D^{1/2}1` exactly for the true normalised
+    /// adjacency), the generic random-weight checksum, and a resident
+    /// Perron [`Probe`] for [`Verifier::run_probes`]. The trip
+    /// threshold is seeded from the Lemma 3.1 propagation of the
+    /// parameter-derived [`FastsumParams::accuracy_estimate`] through
+    /// the normalisation — the tightest bound the engine itself can
+    /// justify — and widened by the measured residual on a random
+    /// apply so an honest engine can never trip. Valid for `A`
+    /// applies only; solves against the shifted SSL system
+    /// `I + βL_s` need a [`Verifier::for_operator`] built on that
+    /// system (or an affine checksum).
+    pub fn verifier(&self, seed: u64) -> Verifier {
+        let eps = self.fast.params().accuracy_estimate();
+        // Lemma 3.1 hint; when ε ≥ η the bound is void and only the
+        // measured widening below protects honest applies.
+        let hint = self.lemma31_bound(eps).unwrap_or(GENERIC_REL_TOL).max(eps);
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        let x = rng.normal_vec(self.dim());
+        let y = self.apply_vec(&x);
+
+        let pw: Vec<f64> = self.degrees.iter().map(|d| d.sqrt()).collect();
+        let mut perron =
+            Checksum::new("perron D^{1/2}·1", pw.clone(), pw.clone(), GENERIC_REL_TOL);
+        perron.widen(SAFETY * perron.residual(&x, &y).max(hint).max(GENERIC_REL_TOL));
+
+        let w = rng.normal_vec(self.dim());
+        let aw = self.apply_vec(&w);
+        let mut random = Checksum::new("random-weight", w, aw, GENERIC_REL_TOL);
+        random.widen(SAFETY * random.residual(&x, &y).max(hint).max(GENERIC_REL_TOL));
+
+        // Resident probe: re-applies the Perron identity end to end
+        // (one extra apply when run), with a tolerance widened by the
+        // deviation measured now.
+        let av = self.apply_vec(&pw);
+        let mut worst = 0.0f64;
+        let mut scale2 = 0.0f64;
+        for (g, e) in av.iter().zip(&pw) {
+            worst = worst.max((g - e).abs());
+            scale2 += e * e;
+        }
+        let measured = worst / scale2.sqrt().max(f64::MIN_POSITIVE);
+        let probe = Probe {
+            what: "perron identity",
+            x: pw.clone(),
+            expect: pw,
+            rel_tol: SAFETY * measured.max(hint).max(GENERIC_REL_TOL),
+        };
+
+        Verifier::new().with_checksum(perron).with_checksum(random).with_probe(probe)
     }
 }
 
@@ -206,6 +260,57 @@ mod tests {
         let b1 = a.lemma31_bound(eta * 0.1).unwrap();
         let b2 = a.lemma31_bound(eta * 0.5).unwrap();
         assert!(b2 > b1);
+    }
+
+    #[test]
+    fn verifier_accepts_clean_applies_blocks_and_probe() {
+        let points = spiral_points(100, 8);
+        let a = NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let v = a.verifier(9);
+        assert_eq!(v.checksums().len(), 2);
+        let mut rng = crate::data::rng::Rng::seed_from(10);
+        for _ in 0..4 {
+            let x = rng.normal_vec(100);
+            let y = a.apply_vec(&x);
+            v.check_apply("test.apply", &x, &y).unwrap();
+        }
+        let xs = rng.normal_vec(100 * 3);
+        let mut ys = vec![0.0; 100 * 3];
+        a.apply_block(&xs, &mut ys);
+        v.check_block("test.block", &xs, &ys).unwrap();
+        v.run_probes(&a).unwrap();
+    }
+
+    #[test]
+    fn verifier_trips_on_biased_apply() {
+        let points = spiral_points(100, 8);
+        let a = NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let v = a.verifier(9);
+        let mut e0 = vec![0.0; 100];
+        e0[0] = 1.0;
+        let mut y = a.apply_vec(&e0);
+        y[3] += 1.0;
+        let err = v.check_apply("test.apply", &e0, &y).unwrap_err();
+        assert_eq!(err.class(), "silent-corruption");
+        // The same bias planted in one block column trips check_block.
+        let mut rng = crate::data::rng::Rng::seed_from(11);
+        let xs = rng.normal_vec(100 * 2);
+        let mut ys = vec![0.0; 100 * 2];
+        a.apply_block(&xs, &mut ys);
+        ys[100..].fill(f64::NAN);
+        assert!(v.check_block("test.block", &xs, &ys).is_err());
     }
 
     #[test]

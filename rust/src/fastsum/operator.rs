@@ -17,6 +17,7 @@ use crate::graph::operator::LinearOperator;
 use crate::nfft::{NfftGeometry, NfftPlan, SpreadLayout, WindowKind};
 use crate::obs;
 use crate::robust::fault;
+use crate::robust::verify::{Checksum, Verifier, GENERIC_REL_TOL, SAFETY};
 use crate::util::lock_recover;
 use crate::util::pool::BufferPool;
 use crate::util::timer::{PhaseTimings, Timer};
@@ -68,6 +69,19 @@ impl FastsumParams {
         self.eps_b = eps_b;
         self.p = p;
         self
+    }
+
+    /// Crude relative-accuracy estimate for these parameters: one
+    /// decade per window tap beyond the first, `10^{-(m+1)}` — setup1
+    /// (m = 2) ≈ 1e-3, setup2 (m = 4) ≈ 1e-5, setup3 (m = 7) ≈ 1e-8.
+    /// Deliberately pessimistic against the measured floors (the
+    /// window error decays faster than a decade per tap on benign
+    /// clouds): it seeds ABFT checksum tolerances in
+    /// [`crate::robust::verify`], where over-estimating merely widens
+    /// the trip threshold while under-estimating would false-trip
+    /// honest applies.
+    pub fn accuracy_estimate(&self) -> f64 {
+        10f64.powi(-(self.m as i32 + 1))
     }
 }
 
@@ -478,6 +492,37 @@ impl FastsumOperator {
     pub fn timings(&self) -> PhaseTimings {
         lock_recover(&self.timings).clone()
     }
+
+    /// ABFT [`Verifier`] for `W`-applies: the structural degree
+    /// checksum `⟨1, Wx⟩ = ⟨d, x⟩` (W is symmetric, so `Wᵀ1 = W·1 = d`)
+    /// plus the generic random-weight checksum. Both tolerances are
+    /// `SAFETY ×` the larger of the parameter-derived
+    /// [`FastsumParams::accuracy_estimate`] and the residual measured
+    /// on an independent random apply, so an honest engine can never
+    /// trip. Build cost: three fastsum applies; per checked apply
+    /// afterwards: four dot products. Valid for `W` applies only —
+    /// the normalised adjacency satisfies different invariants and
+    /// has its own builder
+    /// ([`super::normalized::NormalizedAdjacency::verifier`]).
+    pub fn verifier(&self, seed: u64) -> Verifier {
+        let eps = self.params.accuracy_estimate();
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        // One independent probe apply measures the engine's intrinsic
+        // checksum residual for both checksums.
+        let x = rng.normal_vec(self.n);
+        let y = self.apply_vec(&x);
+
+        let mut degree =
+            Checksum::new("degree row-sum", vec![1.0; self.n], self.degrees(), GENERIC_REL_TOL);
+        degree.widen(SAFETY * degree.residual(&x, &y).max(eps).max(GENERIC_REL_TOL));
+
+        let w = rng.normal_vec(self.n);
+        let aw = self.apply_vec(&w);
+        let mut random = Checksum::new("random-weight", w, aw, GENERIC_REL_TOL);
+        random.widen(SAFETY * random.residual(&x, &y).max(eps).max(GENERIC_REL_TOL));
+
+        Verifier::new().with_checksum(degree).with_checksum(random)
+    }
 }
 
 impl LinearOperator for FastsumOperator {
@@ -538,6 +583,41 @@ mod tests {
         let xnorm1: f64 = x.iter().map(|v| v.abs()).sum();
         let err = max_abs_diff(&got, &want) / xnorm1;
         assert!(err < tol, "relative error {err} exceeds {tol}");
+    }
+
+    #[test]
+    fn accuracy_estimate_tracks_setup_tier() {
+        let e1 = FastsumParams::setup1().accuracy_estimate();
+        let e2 = FastsumParams::setup2().accuracy_estimate();
+        let e3 = FastsumParams::setup3().accuracy_estimate();
+        assert!(e1 > e2 && e2 > e3, "estimate must tighten with m: {e1} {e2} {e3}");
+        assert!((e1 - 1e-3).abs() < 1e-18);
+    }
+
+    #[test]
+    fn verifier_passes_clean_applies_and_trips_on_bias() {
+        let points = spiral_like_points(100, 11);
+        let op = FastsumOperator::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        );
+        let v = op.verifier(42);
+        assert_eq!(v.checksums().len(), 2);
+        let mut rng = crate::data::rng::Rng::seed_from(5);
+        for _ in 0..4 {
+            let x = rng.normal_vec(100);
+            let y = op.apply_vec(&x);
+            v.check_apply("test.apply", &x, &y).unwrap();
+        }
+        // An O(1) bias on one entry of a unit vector's image must trip.
+        let mut e0 = vec![0.0; 100];
+        e0[0] = 1.0;
+        let mut y = op.apply_vec(&e0);
+        y[1] += 1.0;
+        let err = v.check_apply("test.apply", &e0, &y).unwrap_err();
+        assert_eq!(err.class(), "silent-corruption");
     }
 
     #[test]

@@ -12,7 +12,8 @@
 use crate::graph::operator::LinearOperator;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::panel::{paxpy, pnorm2, Panel};
-use crate::robust::{CancelToken, EngineError};
+use crate::robust::checkpoint::{Checkpoint, CheckpointSink, GmresCheckpoint};
+use crate::robust::{verify, CancelToken, EngineError};
 
 /// One Arnoldi factorisation `A V_k = V_{k+1} H̄_k`.
 ///
@@ -111,6 +112,44 @@ pub fn gmres_solve_cancellable(
     opts: &GmresOptions,
     token: &CancelToken,
 ) -> GmresResult {
+    gmres_run(op, b, opts, token, None, None)
+}
+
+/// [`gmres_solve_cancellable`] that offers a [`GmresCheckpoint`] into
+/// `sink` at its cadence (counted in restart cycles — the iterate is
+/// the entire inter-cycle state, so restarts are the natural snapshot
+/// boundary). Outputs stay bitwise identical to [`gmres_solve`].
+pub fn gmres_solve_checkpointed(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &GmresOptions,
+    token: &CancelToken,
+    sink: &CheckpointSink,
+) -> GmresResult {
+    gmres_run(op, b, opts, token, None, Some(sink))
+}
+
+/// Continue an interrupted solve from a [`GmresCheckpoint`]; the
+/// remaining restart cycles replay the uninterrupted run bit for bit.
+pub fn gmres_resume(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &GmresOptions,
+    token: &CancelToken,
+    ck: GmresCheckpoint,
+    sink: Option<&CheckpointSink>,
+) -> GmresResult {
+    gmres_run(op, b, opts, token, Some(ck), sink)
+}
+
+fn gmres_run(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &GmresOptions,
+    token: &CancelToken,
+    start: Option<GmresCheckpoint>,
+    sink: Option<&CheckpointSink>,
+) -> GmresResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
     let bnorm = pnorm2(b);
@@ -123,19 +162,40 @@ pub fn gmres_solve_cancellable(
             error: None,
         };
     }
-    let mut x = vec![0.0; n];
-    let mut total_iters = 0usize;
+    // Restart boundaries carry only {x, total_iters}: each cycle
+    // rebuilds its Krylov basis from the current residual, so the
+    // iterate IS the state.
+    let (mut x, mut total_iters, first_restart) = match start {
+        Some(ck) => {
+            assert_eq!(ck.x.len(), n, "checkpoint sized for a different system");
+            (ck.x, ck.total_iters, ck.restarts_done)
+        }
+        None => (vec![0.0; n], 0, 0),
+    };
     let mut rel;
     let mut error: Option<EngineError> = None;
     let mut ax = vec![0.0; n];
     let mut r0 = vec![0.0; n];
     let mut vcol = vec![0.0; n];
-    for _restart in 0..opts.max_restarts {
+    for restart in first_restart..opts.max_restarts {
         if let Err(e) = token.check() {
             error = Some(e);
             break;
         }
+        if let Some(sink) = sink {
+            sink.offer(restart, || {
+                Checkpoint::Gmres(GmresCheckpoint {
+                    x: x.clone(),
+                    total_iters,
+                    restarts_done: restart,
+                })
+            });
+        }
         op.apply(&x, &mut ax);
+        if let Err(e) = verify::check_apply("gmres.apply", &x, &ax) {
+            error = Some(e);
+            break;
+        }
         for ((r, &bi), &ai) in r0.iter_mut().zip(b).zip(&ax) {
             *r = bi - ai;
         }
@@ -354,6 +414,76 @@ mod tests {
         for (a, c) in plain.x.iter().zip(&tok.x) {
             assert_eq!(a.to_bits(), c.to_bits());
         }
+    }
+
+    #[test]
+    fn resume_from_checkpoint_is_bitwise_identical() {
+        // Tiny restart length forces many cycles; resume from a
+        // mid-solve restart boundary and pin every output bit.
+        let n = 40;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + (i as f64) * 0.5) * x[i];
+                }
+            },
+        };
+        let b = vec![1.0; n];
+        let opts = GmresOptions { restart: 5, max_restarts: 50, tol: 1e-10 };
+        let token = CancelToken::never();
+        let sink = crate::robust::checkpoint::CheckpointSink::new(2);
+        let full = gmres_solve_checkpointed(&op, &b, &opts, &token, &sink);
+        assert!(full.converged);
+        let ck = match sink.slot.take().expect("cadence must have stored a snapshot") {
+            crate::robust::checkpoint::Checkpoint::Gmres(c) => c,
+            other => panic!("wrong kind {}", other.kind()),
+        };
+        assert!(ck.total_iters < full.iterations);
+        let resumed = gmres_resume(&op, &b, &opts, &token, ck, None);
+        assert_eq!(resumed.iterations, full.iterations);
+        assert_eq!(resumed.converged, full.converged);
+        assert_eq!(resumed.rel_residual.to_bits(), full.rel_residual.to_bits());
+        for (a, c) in full.x.iter().zip(&resumed.x) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn checksum_trip_surfaces_as_silent_corruption() {
+        let n = 18;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + (i as f64) * 0.25) * x[i];
+                }
+            },
+        };
+        let verifier = crate::robust::verify::Verifier::for_operator(&op, 5, 1e-12);
+        let applies = std::sync::atomic::AtomicUsize::new(0);
+        let wrapped = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + (i as f64) * 0.25) * x[i];
+                }
+                // The restart-boundary apply on the second cycle is
+                // biased (applies inside arnoldi() are unchecked, so
+                // target the checked site).
+                if applies.fetch_add(1, std::sync::atomic::Ordering::Relaxed) == 6 {
+                    y[0] += 0.3;
+                }
+            },
+        };
+        let b = vec![1.0; n];
+        let opts = GmresOptions { restart: 5, max_restarts: 30, tol: 1e-11 };
+        let r = crate::robust::verify::with_verifier(verifier, || {
+            gmres_solve(&wrapped, &b, &opts)
+        });
+        let e = r.error.expect("biased restart apply must trip the checksum");
+        assert_eq!(e.class(), "silent-corruption");
+        assert!(e.to_string().contains("gmres.apply"), "{e}");
     }
 
     #[test]

@@ -14,7 +14,8 @@
 
 use crate::graph::operator::LinearOperator;
 use crate::linalg::panel::{dots_packed_into, paxpy, pdot, pnorm2, xpby};
-use crate::robust::{fault, CancelToken, EngineError};
+use crate::robust::checkpoint::{CgCheckpoint, Checkpoint, CheckpointSink};
+use crate::robust::{fault, verify, CancelToken, EngineError};
 
 #[derive(Debug, Clone)]
 pub struct CgOptions {
@@ -76,17 +77,69 @@ pub fn cg_solve_cancellable(
     opts: &CgOptions,
     token: &CancelToken,
 ) -> CgResult {
+    cg_run(op, b, opts, token, None, None)
+}
+
+/// [`cg_solve_cancellable`] that offers a [`CgCheckpoint`] into
+/// `sink` at its cadence. The iteration arithmetic is untouched —
+/// snapshots are clones taken at iteration boundaries — so outputs
+/// stay bitwise identical to [`cg_solve`].
+pub fn cg_solve_checkpointed(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &CgOptions,
+    token: &CancelToken,
+    sink: &CheckpointSink,
+) -> CgResult {
+    cg_run(op, b, opts, token, None, Some(sink))
+}
+
+/// Continue an interrupted solve from a [`CgCheckpoint`]. The resumed
+/// run replays the exact remaining iterations of the uninterrupted
+/// run — final `x`, `iterations`, `converged`, and `rel_residual` are
+/// bitwise identical.
+pub fn cg_resume(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &CgOptions,
+    token: &CancelToken,
+    ck: CgCheckpoint,
+    sink: Option<&CheckpointSink>,
+) -> CgResult {
+    cg_run(op, b, opts, token, Some(ck), sink)
+}
+
+fn cg_run(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &CgOptions,
+    token: &CancelToken,
+    start: Option<CgCheckpoint>,
+    sink: Option<&CheckpointSink>,
+) -> CgResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
     let bnorm = pnorm2(b).max(1e-300);
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
     let mut z = vec![0.0; n];
-    apply_prec_into(&opts.precond_inv_diag, &r, &mut z);
-    let mut p = z.clone();
-    let mut rz = pdot(&r, &z);
+    // A checkpoint captures the complete loop-carried state {x, r, p,
+    // rz, iterations} at an end-of-iteration boundary; everything
+    // else (z, ap) is overwritten before its first read, and bnorm /
+    // the convergence flag recompute to the same bits from b and r.
+    let (mut x, mut r, mut p, mut rz, mut iterations) = match start {
+        Some(ck) => {
+            assert_eq!(ck.x.len(), n, "checkpoint sized for a different system");
+            assert_eq!(ck.r.len(), n);
+            assert_eq!(ck.p.len(), n);
+            (ck.x, ck.r, ck.p, ck.rz, ck.iterations)
+        }
+        None => {
+            let r = b.to_vec();
+            apply_prec_into(&opts.precond_inv_diag, &r, &mut z);
+            let rz = pdot(&r, &z);
+            (vec![0.0; n], r, z.clone(), rz, 0)
+        }
+    };
     let mut ap = vec![0.0; n];
-    let mut iterations = 0;
     let mut error = None;
     let mut converged = pnorm2(&r) / bnorm <= opts.tol;
     while !converged && iterations < opts.max_iter {
@@ -96,6 +149,10 @@ pub fn cg_solve_cancellable(
         }
         fault::fire("cg.iter");
         op.apply(&p, &mut ap);
+        if let Err(e) = verify::check_apply("cg.apply", &p, &ap) {
+            error = Some(e);
+            break;
+        }
         let pap = pdot(&p, &ap);
         // `!(pap > 0.0)` rather than `pap <= 0.0`: also trips on NaN
         // (a poisoned recurrence would otherwise loop on garbage).
@@ -122,6 +179,17 @@ pub fn cg_solve_cancellable(
         let beta = rz_new / rz;
         rz = rz_new;
         xpby(&z, beta, &mut p);
+        if let Some(sink) = sink {
+            sink.offer(iterations, || {
+                Checkpoint::Cg(CgCheckpoint {
+                    x: x.clone(),
+                    r: r.clone(),
+                    p: p.clone(),
+                    rz,
+                    iterations,
+                })
+            });
+        }
     }
     let rel_residual = pnorm2(&r) / bnorm;
     CgResult { x, iterations, converged, rel_residual, error }
@@ -522,6 +590,90 @@ mod tests {
         for (a, c) in plain.x.iter().zip(&tokened.x) {
             assert_eq!(a.to_bits(), c.to_bits());
         }
+    }
+
+    #[test]
+    fn resume_from_checkpoint_is_bitwise_identical() {
+        // Run once with a checkpoint sink, grab a mid-solve snapshot,
+        // resume from it, and pin every output bit against the
+        // uninterrupted run.
+        let n = 120;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (1.0 + (i % 9) as f64 * 0.7) * x[i];
+                }
+            },
+        };
+        let mut rng = crate::data::rng::Rng::seed_from(41);
+        let b = rng.normal_vec(n);
+        let opts = CgOptions { tol: 1e-12, ..Default::default() };
+        let token = CancelToken::never();
+        let sink = crate::robust::checkpoint::CheckpointSink::new(3);
+        let full = cg_solve_checkpointed(&op, &b, &opts, &token, &sink);
+        assert!(full.converged);
+        assert!(full.iterations > 3, "need a mid-run snapshot, got {}", full.iterations);
+        let stored = sink.slot.latest().expect("cadence must have stored a snapshot");
+        // The snapshot survives the JSON wire without losing a bit —
+        // resume below goes through the serialised form.
+        let text = stored.to_json().to_string();
+        let wired =
+            crate::robust::checkpoint::Checkpoint::from_json(&crate::util::json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(stored, wired);
+        let ck = match wired {
+            crate::robust::checkpoint::Checkpoint::Cg(c) => c,
+            other => panic!("wrong kind {}", other.kind()),
+        };
+        assert!(ck.iterations < full.iterations);
+        let resumed = cg_resume(&op, &b, &opts, &token, ck, None);
+        assert_eq!(resumed.iterations, full.iterations);
+        assert_eq!(resumed.converged, full.converged);
+        assert_eq!(resumed.rel_residual.to_bits(), full.rel_residual.to_bits());
+        for (a, c) in full.x.iter().zip(&resumed.x) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn checksum_trip_surfaces_as_silent_corruption() {
+        // Arm a verifier for the operator, bias one apply mid-solve,
+        // and require a typed SilentCorruption from the cg.apply site.
+        let n = 16;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (2.0 + (i % 3) as f64) * x[i];
+                }
+            },
+        };
+        let mut rng = crate::data::rng::Rng::seed_from(42);
+        let b = rng.normal_vec(n);
+        let verifier = crate::robust::verify::Verifier::for_operator(&op, 7, 1e-12);
+        // Corrupt by wrapping the operator so its third apply is
+        // biased — silent, finite, wrong.
+        let applies = std::sync::atomic::AtomicUsize::new(0);
+        let wrapped = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (2.0 + (i % 3) as f64) * x[i];
+                }
+                if applies.fetch_add(1, std::sync::atomic::Ordering::Relaxed) == 2 {
+                    y[0] += 0.5;
+                }
+            },
+        };
+        let (r, checks) = crate::robust::verify::with_verifier(verifier, || {
+            let r = cg_solve(&wrapped, &b, &CgOptions { tol: 1e-12, ..Default::default() });
+            (r, crate::robust::verify::checks_run())
+        });
+        assert!(checks > 0, "verifier must have been consulted");
+        let e = r.error.expect("biased apply must trip the checksum");
+        assert_eq!(e.class(), "silent-corruption");
+        assert!(e.to_string().contains("cg.apply"), "{e}");
     }
 
     #[test]

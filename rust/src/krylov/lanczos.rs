@@ -25,8 +25,21 @@ use crate::linalg::dense::DenseMatrix;
 use crate::linalg::panel::{paxpy, pdot, pnorm2, Panel};
 use crate::linalg::tridiag::tridiag_eig;
 use crate::obs;
-use crate::robust::{fault, CancelToken, EngineError};
+use crate::robust::checkpoint::{
+    BlockLanczosCheckpoint, Checkpoint, CheckpointSink, LanczosCheckpoint,
+};
+use crate::robust::{fault, verify, CancelToken, EngineError};
 use crate::util::timer::Timer;
+
+/// Flatten the first `cols` columns of a panel (column-major) for a
+/// checkpoint snapshot.
+fn flatten_cols(p: &Panel, cols: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(cols * p.dim());
+    for c in 0..cols {
+        out.extend_from_slice(p.col(c));
+    }
+    out
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct LanczosOptions {
@@ -105,6 +118,44 @@ pub fn lanczos_eigs_cancellable(
     opts: LanczosOptions,
     token: &CancelToken,
 ) -> EigResult {
+    lanczos_run(op, opts, token, None, None)
+}
+
+/// [`lanczos_eigs_cancellable`] that offers a [`LanczosCheckpoint`]
+/// into `sink` at its cadence. Snapshots clone the basis and
+/// tridiagonal at iteration boundaries without touching the
+/// recurrence, so outputs are bitwise identical to [`lanczos_eigs`].
+pub fn lanczos_eigs_checkpointed(
+    op: &dyn LinearOperator,
+    opts: LanczosOptions,
+    token: &CancelToken,
+    sink: &CheckpointSink,
+) -> EigResult {
+    lanczos_run(op, opts, token, None, Some(sink))
+}
+
+/// Continue an interrupted eigensolve from a [`LanczosCheckpoint`].
+/// The spectral outputs (eigenvalues, eigenvectors, iterations,
+/// residual bounds) replay the uninterrupted run bit for bit; only
+/// the work counters (`matvecs`, phase timers) reflect the shorter
+/// resumed run.
+pub fn lanczos_eigs_resume(
+    op: &dyn LinearOperator,
+    opts: LanczosOptions,
+    token: &CancelToken,
+    ck: LanczosCheckpoint,
+    sink: Option<&CheckpointSink>,
+) -> EigResult {
+    lanczos_run(op, opts, token, Some(ck), sink)
+}
+
+fn lanczos_run(
+    op: &dyn LinearOperator,
+    opts: LanczosOptions,
+    token: &CancelToken,
+    start: Option<LanczosCheckpoint>,
+    sink: Option<&CheckpointSink>,
+) -> EigResult {
     if let Err(e) = token.check() {
         return failed_eig(e);
     }
@@ -113,17 +164,37 @@ pub fn lanczos_eigs_cancellable(
     assert!(k >= 1, "need at least one eigenpair");
     let max_iter = opts.max_iter.min(n).max(k + 2);
 
-    let mut rng = Rng::seed_from(opts.seed);
     // Basis vectors as panel columns — contiguous, chunk-pooled; the
     // reorthogonalisation sweeps run on the fused panel kernels.
     let mut basis = Panel::new(n, 8.min(max_iter.max(1)));
     let mut alpha: Vec<f64> = Vec::new();
     let mut beta: Vec<f64> = Vec::new(); // β_2..: beta[j] couples q_j, q_{j+1}
-
-    let q = rng.normal_vec(n);
-    let q_norm = pnorm2(&q);
-    assert!(q_norm > 0.0, "zero start vector");
-    basis.push_col_scaled(&q, 1.0 / q_norm);
+    let first_j;
+    match &start {
+        Some(ck) => {
+            // A checkpoint captures the complete recurrence state at
+            // an iteration boundary: the orthonormal basis columns
+            // (re-pushed with scale 1.0 — a bitwise identity) and the
+            // tridiagonal coefficients. The start-vector RNG is fully
+            // consumed before iteration 0, so no RNG state is needed.
+            assert_eq!(ck.n, n, "checkpoint sized for a different operator");
+            assert!(ck.next_iter > 0 && ck.basis.len() == (ck.next_iter + 1) * n);
+            for col in ck.basis.chunks_exact(n) {
+                basis.push_col_scaled(col, 1.0);
+            }
+            alpha = ck.alpha.clone();
+            beta = ck.beta.clone();
+            first_j = ck.next_iter;
+        }
+        None => {
+            let mut rng = Rng::seed_from(opts.seed);
+            let q = rng.normal_vec(n);
+            let q_norm = pnorm2(&q);
+            assert!(q_norm > 0.0, "zero start vector");
+            basis.push_col_scaled(&q, 1.0 / q_norm);
+            first_j = 0;
+        }
+    }
 
     let mut w = vec![0.0; n];
     // Reorthogonalisation coefficients, resized to the basis each
@@ -135,7 +206,7 @@ pub fn lanczos_eigs_cancellable(
     let mut converged_info: Option<(Vec<f64>, DenseMatrix, Vec<f64>)> = None;
     let mut error: Option<EngineError> = None;
 
-    for j in 0..max_iter {
+    for j in first_j..max_iter {
         // Probe after the first iteration so a mid-run stop still has
         // a (partial) tridiagonal to assemble Ritz pairs from.
         if j > 0 {
@@ -151,6 +222,13 @@ pub fn lanczos_eigs_cancellable(
         matvec_secs += t.elapsed_secs();
         drop(span);
         matvecs += 1;
+        if let Err(e) = verify::check_apply("lanczos.apply", basis.col(j), &w) {
+            if alpha.is_empty() {
+                return failed_eig(e);
+            }
+            error = Some(e);
+            break;
+        }
         let span = obs::span_id("lanczos.ortho", "krylov", j as u64);
         let t = Timer::start();
         let a_j = pdot(basis.col(j), &w);
@@ -230,6 +308,17 @@ pub fn lanczos_eigs_cancellable(
             let t = Timer::start();
             basis.push_col_scaled(&w, 1.0 / b_next);
             ortho_secs += t.elapsed_secs();
+            if let Some(sink) = sink {
+                sink.offer(j + 1, || {
+                    Checkpoint::Lanczos(LanczosCheckpoint {
+                        n,
+                        basis: flatten_cols(&basis, j + 2),
+                        alpha: alpha.clone(),
+                        beta: beta.clone(),
+                        next_iter: j + 1,
+                    })
+                });
+            }
         }
     }
 
@@ -324,6 +413,45 @@ pub fn block_lanczos_eigs_cancellable(
     opts: BlockLanczosOptions,
     token: &CancelToken,
 ) -> EigResult {
+    block_lanczos_run(op, opts, token, None, None)
+}
+
+/// [`block_lanczos_eigs_cancellable`] that offers a
+/// [`BlockLanczosCheckpoint`] into `sink` at its cadence (block
+/// iterations). Snapshots clone both panels, the projected wedge, and
+/// the RNG state at block boundaries; outputs stay bitwise identical
+/// to [`block_lanczos_eigs`].
+pub fn block_lanczos_eigs_checkpointed(
+    op: &dyn LinearOperator,
+    opts: BlockLanczosOptions,
+    token: &CancelToken,
+    sink: &CheckpointSink,
+) -> EigResult {
+    block_lanczos_run(op, opts, token, None, Some(sink))
+}
+
+/// Continue an interrupted block eigensolve from a
+/// [`BlockLanczosCheckpoint`]. The spectral outputs replay the
+/// uninterrupted run bit for bit (the restored RNG continues the
+/// exact rank-recovery variate sequence); only the work counters
+/// reflect the shorter resumed run.
+pub fn block_lanczos_eigs_resume(
+    op: &dyn LinearOperator,
+    opts: BlockLanczosOptions,
+    token: &CancelToken,
+    ck: BlockLanczosCheckpoint,
+    sink: Option<&CheckpointSink>,
+) -> EigResult {
+    block_lanczos_run(op, opts, token, Some(ck), sink)
+}
+
+fn block_lanczos_run(
+    op: &dyn LinearOperator,
+    opts: BlockLanczosOptions,
+    token: &CancelToken,
+    start: Option<BlockLanczosCheckpoint>,
+    sink: Option<&CheckpointSink>,
+) -> EigResult {
     use crate::linalg::jacobi::sym_eig;
     use crate::linalg::qr::{orth, thin_qr};
 
@@ -341,30 +469,61 @@ pub fn block_lanczos_eigs_cancellable(
     // than the space holds.
     let max_blocks = opts.max_blocks.max(k.div_ceil(b)).min(n.div_ceil(b));
 
-    let mut rng = Rng::seed_from(opts.seed);
-    let mut g = DenseMatrix::zeros(n, b);
-    for j in 0..b {
-        for i in 0..n {
-            g[(i, j)] = rng.normal();
-        }
-    }
-    let q0 = orth(&g);
     // Basis blocks Q_s and their images Y_s = A Q_s as two panels:
     // every chunk is a contiguous n×b column-major block (the
-    // apply_block layout).
+    // apply_block layout). On resume both panels, the projected wedge
+    // and the RNG (consumed mid-run by rank recovery) are restored
+    // from the snapshot; all other iteration buffers are scratch.
     let mut basis = Panel::new(n, b);
     let mut images = Panel::new(n, b);
-    basis.push_chunk_with(|buf| {
-        for (q, col) in buf.chunks_exact_mut(n).enumerate() {
-            for (i, v) in col.iter_mut().enumerate() {
-                *v = q0[(i, q)];
+    let mut t_raw = DenseMatrix::zeros(0, 0);
+    let mut rng;
+    let first_s;
+    match &start {
+        Some(ck) => {
+            assert_eq!(ck.n, n, "checkpoint sized for a different operator");
+            assert_eq!(ck.block, b, "checkpoint taken with a different block width");
+            assert!(ck.next_block > 0 && ck.basis.len() == (ck.next_block + 1) * b * n);
+            assert!(ck.images.len() == ck.next_block * b * n);
+            for chunk in ck.basis.chunks_exact(n * b) {
+                basis.push_chunk_with(|buf| buf.copy_from_slice(chunk));
             }
+            for chunk in ck.images.chunks_exact(n * b) {
+                images.push_chunk_with(|buf| buf.copy_from_slice(chunk));
+            }
+            let dim = ck.t_dim;
+            assert_eq!(ck.t_raw.len(), dim * dim);
+            t_raw = DenseMatrix::zeros(dim, dim);
+            for i in 0..dim {
+                for j in 0..dim {
+                    t_raw[(i, j)] = ck.t_raw[i * dim + j];
+                }
+            }
+            rng = Rng::from_state(ck.rng_state, ck.rng_spare);
+            first_s = ck.next_block;
         }
-    });
+        None => {
+            rng = Rng::seed_from(opts.seed);
+            let mut g = DenseMatrix::zeros(n, b);
+            for j in 0..b {
+                for i in 0..n {
+                    g[(i, j)] = rng.normal();
+                }
+            }
+            let q0 = orth(&g);
+            basis.push_chunk_with(|buf| {
+                for (q, col) in buf.chunks_exact_mut(n).enumerate() {
+                    for (i, v) in col.iter_mut().enumerate() {
+                        *v = q0[(i, q)];
+                    }
+                }
+            });
+            first_s = 0;
+        }
+    }
     // Persistent upper block wedge of Vᵀ A V products; grows by one
     // column block per iteration (append-only basis ⇒ old products
     // stay valid, no O(dim²·n) recompute).
-    let mut t_raw = DenseMatrix::zeros(0, 0);
     let mut matvecs = 0usize;
     let mut matvec_secs = 0.0f64;
     let mut ortho_secs = 0.0f64;
@@ -380,7 +539,7 @@ pub fn block_lanczos_eigs_cancellable(
     let mut yz = vec![0.0; n];
     let mut qcol = vec![0.0; n];
 
-    for s in 0..max_blocks {
+    for s in first_s..max_blocks {
         // One block application per iteration, written straight into
         // the image panel's next chunk.
         let span = obs::span_id("block_lanczos.matvec", "krylov", s as u64);
@@ -392,6 +551,16 @@ pub fn block_lanczos_eigs_cancellable(
         matvec_secs += t.elapsed_secs();
         drop(span);
         matvecs += b;
+        if let Err(e) = verify::check_block("lanczos.block-apply", basis.chunk(s), images.chunk(s))
+        {
+            match last {
+                None => return failed_eig(e),
+                Some(_) => {
+                    error = Some(e);
+                    break;
+                }
+            }
+        }
         let nb = s + 1;
         let dim = nb * b;
 
@@ -544,6 +713,29 @@ pub fn block_lanczos_eigs_cancellable(
             }
         });
         ortho_secs += t.elapsed_secs();
+        if let Some(sink) = sink {
+            sink.offer(s + 1, || {
+                let t_dim = (s + 1) * b;
+                let mut t_flat = Vec::with_capacity(t_dim * t_dim);
+                for i in 0..t_dim {
+                    for j in 0..t_dim {
+                        t_flat.push(t_raw[(i, j)]);
+                    }
+                }
+                let (rng_state, rng_spare) = rng.state();
+                Checkpoint::BlockLanczos(BlockLanczosCheckpoint {
+                    n,
+                    block: b,
+                    basis: flatten_cols(&basis, (s + 2) * b),
+                    images: flatten_cols(&images, (s + 1) * b),
+                    t_raw: t_flat,
+                    t_dim,
+                    rng_state,
+                    rng_spare,
+                    next_block: s + 1,
+                })
+            });
+        }
     }
 
     let (evals, z, resids) = last.expect("at least one block iteration runs");
@@ -906,6 +1098,113 @@ mod tests {
         let e = r.error.expect("NaN recurrence must be reported");
         assert_eq!(e.class(), "breakdown");
         assert!(e.to_string().contains("lanczos"), "{e}");
+    }
+
+    #[test]
+    fn lanczos_resume_from_checkpoint_is_bitwise_identical() {
+        let mut rng = crate::data::rng::Rng::seed_from(61);
+        let points = rng.normal_vec(40 * 2);
+        let op = DenseKernelOperator::new(
+            &points,
+            2,
+            crate::fastsum::Kernel::Gaussian { sigma: 1.5 },
+            DenseMode::Normalized,
+        );
+        let opts = LanczosOptions { k: 5, tol: 1e-12, ..Default::default() };
+        let token = CancelToken::never();
+        let sink = crate::robust::checkpoint::CheckpointSink::new(3);
+        let full = lanczos_eigs_checkpointed(&op, opts, &token, &sink);
+        assert!(full.iterations > 3, "need a mid-run snapshot, got {}", full.iterations);
+        let ck = match sink.slot.take().expect("cadence must have stored a snapshot") {
+            crate::robust::checkpoint::Checkpoint::Lanczos(c) => c,
+            other => panic!("wrong kind {}", other.kind()),
+        };
+        assert!(ck.next_iter < full.iterations);
+        let resumed = lanczos_eigs_resume(&op, opts, &token, ck, None);
+        assert_eq!(resumed.iterations, full.iterations);
+        assert_eq!(resumed.eigenvalues.len(), full.eigenvalues.len());
+        for (a, c) in full.eigenvalues.iter().zip(&resumed.eigenvalues) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+        assert_eq!(full.eigenvectors.data, resumed.eigenvectors.data);
+        for (a, c) in full.residual_bounds.iter().zip(&resumed.residual_bounds) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+        // The resumed run did strictly less matvec work.
+        assert!(resumed.matvecs < full.matvecs);
+    }
+
+    #[test]
+    fn block_lanczos_resume_from_checkpoint_is_bitwise_identical() {
+        let mut rng = crate::data::rng::Rng::seed_from(62);
+        let points = rng.normal_vec(48 * 2);
+        let op = DenseKernelOperator::new(
+            &points,
+            2,
+            crate::fastsum::Kernel::Gaussian { sigma: 1.5 },
+            DenseMode::Normalized,
+        );
+        let opts = BlockLanczosOptions { k: 6, block: 3, tol: 1e-11, ..Default::default() };
+        let token = CancelToken::never();
+        // Cadence 1: the slot holds the last *non-final* block
+        // boundary no matter how quickly the solve converges.
+        let sink = crate::robust::checkpoint::CheckpointSink::new(1);
+        let full = block_lanczos_eigs_checkpointed(&op, opts, &token, &sink);
+        let stored = sink.slot.take().expect("cadence must have stored a snapshot");
+        // Resume through the JSON wire to prove serialisation keeps
+        // every bit (basis, wedge, and RNG state included).
+        let text = stored.to_json().to_string();
+        let ck = match crate::robust::checkpoint::Checkpoint::from_json(
+            &crate::util::json::parse(&text).unwrap(),
+        )
+        .unwrap()
+        {
+            crate::robust::checkpoint::Checkpoint::BlockLanczos(c) => c,
+            other => panic!("wrong kind {}", other.kind()),
+        };
+        assert!(ck.next_block * ck.block < full.iterations);
+        let resumed = block_lanczos_eigs_resume(&op, opts, &token, ck, None);
+        assert_eq!(resumed.iterations, full.iterations);
+        for (a, c) in full.eigenvalues.iter().zip(&resumed.eigenvalues) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+        assert_eq!(full.eigenvectors.data, resumed.eigenvectors.data);
+        assert!(resumed.matvecs < full.matvecs);
+    }
+
+    #[test]
+    fn checksum_trip_mid_lanczos_surfaces_as_silent_corruption() {
+        // A finite bias injected into one apply output — invisible to
+        // the NaN health scans — must trip the armed verifier.
+        let n = 24;
+        let scale = |i: usize| 1.0 + (i % 5) as f64 * 0.5;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = scale(i) * x[i];
+                }
+            },
+        };
+        let verifier = crate::robust::verify::Verifier::for_operator(&op, 9, 1e-12);
+        let applies = std::sync::atomic::AtomicUsize::new(0);
+        let wrapped = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = scale(i) * x[i];
+                }
+                if applies.fetch_add(1, std::sync::atomic::Ordering::Relaxed) == 3 {
+                    y[0] += 1e-2;
+                }
+            },
+        };
+        let r = crate::robust::verify::with_verifier(verifier, || {
+            lanczos_eigs(&wrapped, LanczosOptions { k: 3, ..Default::default() })
+        });
+        let e = r.error.expect("biased apply must trip the checksum");
+        assert_eq!(e.class(), "silent-corruption");
+        assert!(e.to_string().contains("lanczos.apply"), "{e}");
     }
 
     #[test]

@@ -10,7 +10,8 @@
 
 use crate::graph::operator::LinearOperator;
 use crate::linalg::panel::{paxpy, pdot, pnorm2, PAR_THRESHOLD};
-use crate::robust::{CancelToken, EngineError};
+use crate::robust::checkpoint::{Checkpoint, CheckpointSink, MinresCheckpoint};
+use crate::robust::{verify, CancelToken, EngineError};
 use rayon::prelude::*;
 
 #[derive(Debug, Clone, Copy)]
@@ -50,6 +51,43 @@ pub fn minres_solve_cancellable(
     opts: &MinresOptions,
     token: &CancelToken,
 ) -> MinresResult {
+    minres_run(op, b, opts, token, None, None)
+}
+
+/// [`minres_solve_cancellable`] that offers a [`MinresCheckpoint`]
+/// into `sink` at its cadence; snapshot clones are taken at iteration
+/// boundaries, so outputs are bitwise identical to [`minres_solve`].
+pub fn minres_solve_checkpointed(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &MinresOptions,
+    token: &CancelToken,
+    sink: &CheckpointSink,
+) -> MinresResult {
+    minres_run(op, b, opts, token, None, Some(sink))
+}
+
+/// Continue an interrupted solve from a [`MinresCheckpoint`]; the
+/// remaining iterations replay the uninterrupted run bit for bit.
+pub fn minres_resume(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &MinresOptions,
+    token: &CancelToken,
+    ck: MinresCheckpoint,
+    sink: Option<&CheckpointSink>,
+) -> MinresResult {
+    minres_run(op, b, opts, token, Some(ck), sink)
+}
+
+fn minres_run(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    opts: &MinresOptions,
+    token: &CancelToken,
+    start: Option<MinresCheckpoint>,
+    sink: Option<&CheckpointSink>,
+) -> MinresResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
     let bnorm = pnorm2(b);
@@ -62,31 +100,64 @@ pub fn minres_solve_cancellable(
             error: None,
         };
     }
-    // Lanczos vectors (rotated by swap each iteration — no cloning).
-    let mut v_prev = vec![0.0; n];
-    let inv0 = 1.0 / bnorm;
-    let mut v: Vec<f64> = b.iter().map(|&bi| bi * inv0).collect();
-    let mut beta = bnorm;
-    // Solution update directions, likewise rotated by swap.
+    // A checkpoint captures every loop-carried vector and rotation
+    // scalar at an end-of-iteration boundary (after the swaps); the
+    // `w` and `d_cur` buffers are pure scratch — fully overwritten
+    // before their first read each iteration — so zeros on resume
+    // leave the remaining iterations bit-identical.
+    let (mut x, mut v, mut v_prev, mut d_prev, mut d_prev2);
+    let (mut beta, mut c, mut s, mut c_prev, mut s_prev, mut eta, mut rel);
+    let first_iter;
+    match start {
+        Some(ck) => {
+            assert_eq!(ck.x.len(), n, "checkpoint sized for a different system");
+            assert_eq!(ck.v.len(), n);
+            x = ck.x;
+            v = ck.v;
+            v_prev = ck.v_prev;
+            d_prev = ck.d_prev;
+            d_prev2 = ck.d_prev2;
+            beta = ck.beta;
+            c = ck.c;
+            s = ck.s;
+            c_prev = ck.c_prev;
+            s_prev = ck.s_prev;
+            eta = ck.eta;
+            rel = ck.rel;
+            first_iter = ck.iterations + 1;
+        }
+        None => {
+            let inv0 = 1.0 / bnorm;
+            x = vec![0.0; n];
+            v = b.iter().map(|&bi| bi * inv0).collect();
+            v_prev = vec![0.0; n];
+            d_prev = vec![0.0; n];
+            d_prev2 = vec![0.0; n];
+            beta = bnorm;
+            c = 1.0;
+            s = 0.0;
+            c_prev = 1.0;
+            s_prev = 0.0;
+            eta = beta;
+            rel = 1.0;
+            first_iter = 1;
+        }
+    }
     let mut d_cur = vec![0.0; n];
-    let mut d_prev = vec![0.0; n];
-    let mut d_prev2 = vec![0.0; n];
-    let mut x = vec![0.0; n];
-    // Givens rotation state.
-    let (mut c, mut s) = (1.0f64, 0.0f64);
-    let (mut c_prev, mut s_prev) = (1.0f64, 0.0f64);
-    let mut eta = beta;
     let mut w = vec![0.0; n];
-    let mut rel = 1.0;
     let mut error: Option<EngineError> = None;
-    let mut iters_done = 0usize;
-    for iter in 1..=opts.max_iter {
+    let mut iters_done = first_iter - 1;
+    for iter in first_iter..=opts.max_iter {
         if let Err(e) = token.check() {
             error = Some(e);
             break;
         }
         // Lanczos step.
         op.apply(&v, &mut w);
+        if let Err(e) = verify::check_apply("minres.apply", &v, &w) {
+            error = Some(e);
+            break;
+        }
         let alpha = pdot(&v, &w);
         // Element-wise, so serial and parallel are bit-identical; gate
         // the fork-join on the same threshold as the panel kernels.
@@ -166,6 +237,25 @@ pub fn minres_solve_cancellable(
         }
         beta = beta_next;
         iters_done = iter;
+        if let Some(sink) = sink {
+            sink.offer(iter, || {
+                Checkpoint::Minres(MinresCheckpoint {
+                    x: x.clone(),
+                    v: v.clone(),
+                    v_prev: v_prev.clone(),
+                    d_prev: d_prev.clone(),
+                    d_prev2: d_prev2.clone(),
+                    beta,
+                    c,
+                    s,
+                    c_prev,
+                    s_prev,
+                    eta,
+                    rel,
+                    iterations: iter,
+                })
+            });
+        }
     }
     MinresResult { x, iterations: iters_done, converged: false, rel_residual: rel, error }
 }
@@ -285,6 +375,78 @@ mod tests {
         for (a, c) in plain.x.iter().zip(&tok.x) {
             assert_eq!(a.to_bits(), c.to_bits());
         }
+    }
+
+    #[test]
+    fn resume_from_checkpoint_is_bitwise_identical() {
+        // Indefinite system so several iterations are needed; resume
+        // from a mid-solve snapshot and pin every output bit.
+        let n = 48;
+        let diag: Vec<f64> = (0..n)
+            .map(|i| if i % 2 == 0 { 1.0 + (i as f64) * 0.25 } else { -1.0 - (i as f64) * 0.1 })
+            .collect();
+        let d2 = diag.clone();
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = d2[i] * x[i];
+                }
+            },
+        };
+        let mut rng = crate::data::rng::Rng::seed_from(51);
+        let b = rng.normal_vec(n);
+        let opts = MinresOptions { tol: 1e-12, max_iter: 400 };
+        let token = CancelToken::never();
+        let sink = crate::robust::checkpoint::CheckpointSink::new(4);
+        let full = minres_solve_checkpointed(&op, &b, &opts, &token, &sink);
+        assert!(full.converged, "rel {}", full.rel_residual);
+        assert!(full.iterations > 4, "need a mid-run snapshot");
+        let ck = match sink.slot.take().expect("cadence must have stored a snapshot") {
+            crate::robust::checkpoint::Checkpoint::Minres(c) => c,
+            other => panic!("wrong kind {}", other.kind()),
+        };
+        assert!(ck.iterations < full.iterations);
+        let resumed = minres_resume(&op, &b, &opts, &token, ck, None);
+        assert_eq!(resumed.iterations, full.iterations);
+        assert_eq!(resumed.converged, full.converged);
+        assert_eq!(resumed.rel_residual.to_bits(), full.rel_residual.to_bits());
+        for (a, c) in full.x.iter().zip(&resumed.x) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn checksum_trip_surfaces_as_silent_corruption() {
+        let n = 12;
+        let op = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (if i % 2 == 0 { 2.0 } else { -1.5 }) * x[i];
+                }
+            },
+        };
+        let verifier = crate::robust::verify::Verifier::for_operator(&op, 7, 1e-12);
+        let applies = std::sync::atomic::AtomicUsize::new(0);
+        let wrapped = FnOperator {
+            n,
+            f: move |x: &[f64], y: &mut [f64]| {
+                for i in 0..n {
+                    y[i] = (if i % 2 == 0 { 2.0 } else { -1.5 }) * x[i];
+                }
+                if applies.fetch_add(1, std::sync::atomic::Ordering::Relaxed) == 1 {
+                    y[0] += 0.25;
+                }
+            },
+        };
+        let b = vec![1.0; n];
+        let r = crate::robust::verify::with_verifier(verifier, || {
+            minres_solve(&wrapped, &b, &MinresOptions { tol: 1e-12, max_iter: 200 })
+        });
+        let e = r.error.expect("biased apply must trip the checksum");
+        assert_eq!(e.class(), "silent-corruption");
+        assert!(e.to_string().contains("minres.apply"), "{e}");
     }
 
     #[test]

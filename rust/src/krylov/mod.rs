@@ -19,10 +19,17 @@ pub mod cg;
 pub mod lanczos;
 pub mod minres;
 
-pub use arnoldi::{gmres_solve, gmres_solve_cancellable, GmresOptions, GmresResult};
-pub use cg::{cg_solve, cg_solve_cancellable, CgOptions, CgResult};
-pub use lanczos::{
-    block_lanczos_eigs, block_lanczos_eigs_cancellable, lanczos_eigs, lanczos_eigs_cancellable,
-    BlockLanczosOptions, EigResult, LanczosOptions,
+pub use arnoldi::{
+    gmres_resume, gmres_solve, gmres_solve_cancellable, gmres_solve_checkpointed, GmresOptions,
+    GmresResult,
 };
-pub use minres::{minres_solve, minres_solve_cancellable, MinresOptions, MinresResult};
+pub use cg::{cg_resume, cg_solve, cg_solve_cancellable, cg_solve_checkpointed, CgOptions, CgResult};
+pub use lanczos::{
+    block_lanczos_eigs, block_lanczos_eigs_cancellable, block_lanczos_eigs_checkpointed,
+    block_lanczos_eigs_resume, lanczos_eigs, lanczos_eigs_cancellable, lanczos_eigs_checkpointed,
+    lanczos_eigs_resume, BlockLanczosOptions, EigResult, LanczosOptions,
+};
+pub use minres::{
+    minres_resume, minres_solve, minres_solve_cancellable, minres_solve_checkpointed,
+    MinresOptions, MinresResult,
+};

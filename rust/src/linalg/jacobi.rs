@@ -4,11 +4,30 @@
 //! in §5.1).
 
 use super::dense::DenseMatrix;
+use crate::robust::{health, CancelToken, EngineError};
 
 /// Eigen-decomposition of a symmetric matrix. Returns
 /// `(eigenvalues ascending, eigenvector matrix V)` with `A v_j = λ_j v_j`
 /// where `v_j` is column `j` of `V`.
 pub fn sym_eig(a: &DenseMatrix) -> (Vec<f64>, DenseMatrix) {
+    sym_eig_run(a, None).expect("sym_eig without a token cannot fail")
+}
+
+/// [`sym_eig`] with a cooperative [`CancelToken`] probed once per
+/// sweep, plus a finiteness guard on the returned spectrum. Without a
+/// stop the rotations — and every output bit — are identical to
+/// [`sym_eig`].
+pub fn sym_eig_cancellable(
+    a: &DenseMatrix,
+    token: &CancelToken,
+) -> Result<(Vec<f64>, DenseMatrix), EngineError> {
+    sym_eig_run(a, Some(token))
+}
+
+fn sym_eig_run(
+    a: &DenseMatrix,
+    token: Option<&CancelToken>,
+) -> Result<(Vec<f64>, DenseMatrix), EngineError> {
     let n = a.rows;
     assert_eq!(a.cols, n, "sym_eig expects a square matrix");
     // Verify symmetry within roundoff; symmetrise to be safe.
@@ -23,6 +42,9 @@ pub fn sym_eig(a: &DenseMatrix) -> (Vec<f64>, DenseMatrix) {
     let mut v = DenseMatrix::identity(n);
     let max_sweeps = 60;
     for _sweep in 0..max_sweeps {
+        if let Some(t) = token {
+            t.check()?;
+        }
         // Off-diagonal Frobenius norm.
         let mut off = 0.0;
         for i in 0..n {
@@ -83,7 +105,11 @@ pub fn sym_eig(a: &DenseMatrix) -> (Vec<f64>, DenseMatrix) {
             vs[(row, newj)] = v[(row, oldj)];
         }
     }
-    (d, vs)
+    if token.is_some() {
+        health::check_output_finite("sym-eig spectrum", &d)?;
+        health::check_output_finite("sym-eig eigenvectors", &vs.data)?;
+    }
+    Ok((d, vs))
 }
 
 #[cfg(test)]
@@ -164,6 +190,24 @@ mod tests {
         for &x in &d {
             assert!(x > -1e-10, "negative eigenvalue {x} in Gram matrix");
         }
+    }
+
+    #[test]
+    fn cancellable_matches_plain_bitwise_and_stops_typed() {
+        use crate::robust::CancelToken;
+        let a = random_symmetric(10, 9);
+        let (d0, v0) = sym_eig(&a);
+        let (d1, v1) = sym_eig_cancellable(&a, &CancelToken::never()).unwrap();
+        for (x, y) in d0.iter().zip(&d1) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in v0.data.iter().zip(&v1.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let token = CancelToken::never();
+        token.cancel();
+        let err = sym_eig_cancellable(&a, &token).unwrap_err();
+        assert_eq!(err.class(), "cancelled");
     }
 
     #[test]

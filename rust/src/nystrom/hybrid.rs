@@ -16,6 +16,7 @@ use crate::linalg::dense::DenseMatrix;
 use crate::linalg::jacobi::sym_eig;
 use crate::linalg::panel::Panel;
 use crate::linalg::qr::{orth, thin_qr};
+use crate::robust::{fault, health, verify, CancelToken};
 
 #[derive(Debug, Clone, Copy)]
 pub struct HybridNystromOptions {
@@ -37,6 +38,20 @@ pub fn hybrid_nystrom(
     a: &dyn LinearOperator,
     opts: HybridNystromOptions,
 ) -> Result<NystromResult, NystromError> {
+    hybrid_nystrom_cancellable(a, opts, &CancelToken::never())
+}
+
+/// [`hybrid_nystrom`] with a cooperative [`CancelToken`] probed before
+/// each phase (the two block applies, the inner eigensolve, and each
+/// panel-mul iteration), ABFT checksum checks on both block applies,
+/// and a finiteness guard on the sampled images. Stops surface as
+/// [`NystromError::Engine`]. With a never-token the arithmetic — and
+/// every output bit — is identical to [`hybrid_nystrom`].
+pub fn hybrid_nystrom_cancellable(
+    a: &dyn LinearOperator,
+    opts: HybridNystromOptions,
+    token: &CancelToken,
+) -> Result<NystromResult, NystromError> {
     let n = a.dim();
     let l = opts.l.min(n);
     let m = opts.m.min(l);
@@ -45,19 +60,25 @@ pub fn hybrid_nystrom(
     let mut rng = Rng::seed_from(opts.seed);
 
     // Step 3: Y = A G column-wise (column-major blocks), Q = orth(Y).
+    token.check()?;
     let g: Vec<f64> = rng.normal_vec(n * l);
     let mut y = vec![0.0; n * l];
     a.apply_block(&g, &mut y);
+    verify::check_block("hybrid.apply", &g, &y)?;
+    health::check_output_finite("hybrid sample images", &y)?;
     let q = orth(&DenseMatrix::from_col_major(n, &y));
 
     // Step 4: B₁ = A Q, B₂ = Qᵀ B₁ — the Gram of the Q sample panel
     // against the image panel, one fused parallel sweep.
+    token.check()?;
     let mut qcols = vec![0.0; n * l];
     for (j, col) in qcols.chunks_exact_mut(n).enumerate() {
         q.col_into(j, col);
     }
     let mut b1cols = vec![0.0; n * l];
     a.apply_block(&qcols, &mut b1cols);
+    verify::check_block("hybrid.apply", &qcols, &b1cols)?;
+    health::check_output_finite("hybrid projected images", &b1cols)?;
     let q_panel = Panel::from_owned_col_major(n, qcols);
     let mut b2cols = vec![0.0; l * l];
     q_panel.gram_block(&b1cols, &mut b2cols);
@@ -68,6 +89,7 @@ pub fn hybrid_nystrom(
     // trailing eigenvalues of B₂ are roundoff noise, and Σ_M⁻¹ in step 7
     // would amplify it catastrophically (Martinsson's randomized
     // Nyström stabilisation).
+    token.check()?;
     let (evals, evecs) = sym_eig(&b2); // ascending
     let lam_max = evals.iter().cloned().fold(0.0f64, f64::max);
     let floor = lam_max * 1e-10;
@@ -93,6 +115,8 @@ pub fn hybrid_nystrom(
     let mut ucol = vec![0.0; l];
     let mut pcol = vec![0.0; n];
     for j in 0..m_eff {
+        fault::fire("hybrid.iter");
+        token.check()?;
         u_m.col_into(j, &mut ucol);
         b1_panel.mul(&ucol, &mut pcol);
         b1u.set_col(j, &pcol);
@@ -130,10 +154,14 @@ pub fn hybrid_nystrom(
     let mut v = DenseMatrix::zeros(n, kk);
     let mut hcol = vec![0.0; m_eff];
     for t in 0..kk {
+        fault::fire("hybrid.iter");
+        token.check()?;
         u_hat.col_into(t, &mut hcol);
         qhat_panel.mul(&hcol, &mut pcol);
         v.set_col(t, &pcol);
     }
+    health::check_output_finite("hybrid eigenvalues", &eigenvalues)?;
+    health::check_output_finite("hybrid eigenvectors", &v.data)?;
     Ok(NystromResult { eigenvalues, eigenvectors: v })
 }
 
@@ -194,6 +222,60 @@ mod tests {
                 r2.eigenvalues[t]
             );
         }
+    }
+
+    #[test]
+    fn cancellable_with_never_token_is_bitwise_identical() {
+        let points = spiral_points(80, 11);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let dense = DenseKernelOperator::new(&points, 3, kernel, DenseMode::Normalized);
+        let opts = HybridNystromOptions { l: 20, m: 8, k: 4, seed: 12 };
+        let plain = hybrid_nystrom(&dense, opts).unwrap();
+        let gated = hybrid_nystrom_cancellable(&dense, opts, &CancelToken::never()).unwrap();
+        for (a, b) in plain.eigenvalues.iter().zip(&gated.eigenvalues) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in plain.eigenvectors.data.iter().zip(&gated.eigenvectors.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn cancelled_token_surfaces_as_typed_engine_error() {
+        let points = spiral_points(60, 13);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let dense = DenseKernelOperator::new(&points, 3, kernel, DenseMode::Normalized);
+        let token = CancelToken::never();
+        token.cancel();
+        let err = hybrid_nystrom_cancellable(
+            &dense,
+            HybridNystromOptions { l: 10, m: 5, k: 3, seed: 14 },
+            &token,
+        )
+        .unwrap_err();
+        match err {
+            NystromError::Engine(e) => assert_eq!(e.class(), "cancelled"),
+            other => panic!("expected Engine(Cancelled), got {other}"),
+        }
+    }
+
+    #[test]
+    fn hybrid_iter_fault_site_fires() {
+        use crate::robust::{FaultAction, FaultPlan};
+        let points = spiral_points(60, 15);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let dense = DenseKernelOperator::new(&points, 3, kernel, DenseMode::Normalized);
+        let plan = FaultPlan::new().arm("hybrid.iter", 0, FaultAction::Panic);
+        let (result, report) = fault::with_plan(plan, || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                hybrid_nystrom(
+                    &dense,
+                    HybridNystromOptions { l: 10, m: 5, k: 3, seed: 16 },
+                )
+            }))
+        });
+        assert!(result.is_err(), "armed hybrid.iter fault must panic the run");
+        assert!(report.fired.iter().any(|(s, _)| s == "hybrid.iter"));
     }
 
     #[test]

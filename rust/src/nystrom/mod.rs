@@ -5,7 +5,7 @@
 pub mod hybrid;
 pub mod traditional;
 
-pub use hybrid::{hybrid_nystrom, HybridNystromOptions};
+pub use hybrid::{hybrid_nystrom, hybrid_nystrom_cancellable, HybridNystromOptions};
 pub use traditional::{traditional_nystrom, TraditionalNystromOptions};
 
 use crate::linalg::dense::DenseMatrix;
@@ -30,4 +30,8 @@ pub enum NystromError {
     SingularSampleBlock,
     #[error("inner eigendecomposition produced no positive eigenvalues")]
     NoPositiveEigenvalues,
+    /// A typed engine failure surfaced mid-run: cancellation, deadline
+    /// expiry, a checksum trip, or a non-finite block-apply output.
+    #[error(transparent)]
+    Engine(#[from] crate::robust::EngineError),
 }

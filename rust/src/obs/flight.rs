@@ -36,8 +36,8 @@ fn kind_code(kind: &str) -> u64 {
 /// Error classes with a stable slot encoding; index 0 is "no error".
 /// Kept a superset of `robust::error::CLASSES` plus an `"other"`
 /// catch-all for forward compatibility.
-const ERR_CLASSES: [&str; 7] =
-    ["", "invalid-input", "breakdown", "timeout", "panic", "cancelled", "other"];
+const ERR_CLASSES: [&str; 8] =
+    ["", "invalid-input", "breakdown", "timeout", "panic", "cancelled", "silent-corruption", "other"];
 
 fn err_code(err: Option<&str>) -> u64 {
     match err {
@@ -69,6 +69,10 @@ pub struct FlightRecord {
     pub bytes: u64,
     /// Did the job succeed (converge / return Ok)?
     pub ok: bool,
+    /// Recovery-ladder attempt index that produced this record:
+    /// 0 = first try, 1 = resume on the same SIMD level, 2 = resume at
+    /// scalar, 3 = fresh scalar restart, 4 = dense oracle.
+    pub attempt: u64,
     /// Error class for failed jobs (`EngineError::class()`:
     /// `"invalid-input"`, `"breakdown"`, `"timeout"`, `"panic"`,
     /// `"cancelled"`); `None` when the job did not fail typedly.
@@ -86,6 +90,7 @@ impl FlightRecord {
         o.insert("ortho_secs".to_string(), Json::Num(self.ortho_secs));
         o.insert("bytes".to_string(), Json::Num(self.bytes as f64));
         o.insert("ok".to_string(), Json::Bool(self.ok));
+        o.insert("attempt".to_string(), Json::Num(self.attempt as f64));
         let err = match self.err {
             Some(class) => Json::Str(class.to_string()),
             None => Json::Null,
@@ -106,6 +111,7 @@ struct Slot {
     ortho_bits: AtomicU64,
     bytes: AtomicU64,
     ok: AtomicU64,
+    attempt: AtomicU64,
     err: AtomicU64,
 }
 
@@ -148,6 +154,7 @@ impl FlightRecorder {
         slot.ortho_bits.store(rec.ortho_secs.to_bits(), Ordering::Relaxed);
         slot.bytes.store(rec.bytes, Ordering::Relaxed);
         slot.ok.store(rec.ok as u64, Ordering::Relaxed);
+        slot.attempt.store(rec.attempt, Ordering::Relaxed);
         slot.err.store(err_code(rec.err), Ordering::Relaxed);
         slot.seq.store(2 * ticket + 2, Ordering::Release);
     }
@@ -167,6 +174,7 @@ impl FlightRecorder {
             ortho_secs: f64::from_bits(slot.ortho_bits.load(Ordering::Relaxed)),
             bytes: slot.bytes.load(Ordering::Relaxed),
             ok: slot.ok.load(Ordering::Relaxed) != 0,
+            attempt: slot.attempt.load(Ordering::Relaxed),
             err: match slot.err.load(Ordering::Relaxed) as usize {
                 0 => None,
                 c => Some(ERR_CLASSES[c.min(ERR_CLASSES.len() - 1)]),
@@ -208,6 +216,7 @@ mod tests {
             ortho_secs: 0.05,
             bytes: 4096,
             ok,
+            attempt: 0,
             err: None,
         }
     }
@@ -265,6 +274,24 @@ mod tests {
         let arr = j.as_arr().unwrap();
         assert_eq!(arr[0].get("err").unwrap().as_str(), Some("timeout"));
         assert_eq!(arr[1].get("err"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn attempt_and_silent_corruption_roundtrip() {
+        let ring = FlightRecorder::new(4);
+        ring.record(&FlightRecord {
+            err: Some("silent-corruption"),
+            ok: false,
+            attempt: 2,
+            ..rec(7, "eig", false)
+        });
+        let snap = ring.snapshot();
+        assert_eq!(snap[0].err, Some("silent-corruption"));
+        assert_eq!(snap[0].attempt, 2);
+        let j = ring.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr[0].get("err").unwrap().as_str(), Some("silent-corruption"));
+        assert_eq!(arr[0].get("attempt"), Some(&Json::Num(2.0)));
     }
 
     #[test]

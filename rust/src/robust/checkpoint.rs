@@ -1,0 +1,509 @@
+//! Serializable mid-solve snapshots for the five Krylov solvers.
+//!
+//! A long Lanczos/CG run that dies hundreds of iterations in — worker
+//! panic, deadline, or a checksum trip from `robust::verify` — should
+//! not have to start over. Each solver exposes a `*_checkpointed`
+//! entry that offers a [`Checkpoint`] into a [`CheckpointSink`] every
+//! K iterations, and a `*_resume` entry that continues from one.
+//!
+//! **Determinism pin** (see `docs/DETERMINISM.md`): a resumed run is
+//! bitwise identical to the uninterrupted run, because each snapshot
+//! captures the *complete* loop-carried state at an iteration
+//! boundary — including the consumed RNG state where the solver draws
+//! randomness mid-run (block Lanczos rank recovery) — and everything
+//! else (scratch buffers, derived quantities like `‖b‖`) is
+//! recomputed from inputs with the same fixed-order kernels.
+//!
+//! Snapshots serialise to the crate's plain JSON. Every `f64` is
+//! encoded as its 16-hex-digit IEEE-754 bit pattern (`Json::Num` is
+//! f64-backed and a decimal round-trip is lossy), so a checkpoint
+//! survives the wire without perturbing the resume-≡-uninterrupted
+//! pin.
+
+use std::sync::{Arc, Mutex};
+
+use super::error::EngineError;
+use crate::util::json::Json;
+use crate::util::lock_recover;
+
+/// CG state at an end-of-iteration boundary (after the direction
+/// update). `z` is recomputed from `r` on resume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CgCheckpoint {
+    pub x: Vec<f64>,
+    pub r: Vec<f64>,
+    pub p: Vec<f64>,
+    pub rz: f64,
+    pub iterations: usize,
+}
+
+/// MINRES state after the end-of-iteration rotations and swaps. The
+/// `w`/`d_cur` buffers are pure scratch (fully overwritten next
+/// iteration) and are not captured.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MinresCheckpoint {
+    pub x: Vec<f64>,
+    pub v: Vec<f64>,
+    pub v_prev: Vec<f64>,
+    pub d_prev: Vec<f64>,
+    pub d_prev2: Vec<f64>,
+    pub beta: f64,
+    pub c: f64,
+    pub s: f64,
+    pub c_prev: f64,
+    pub s_prev: f64,
+    pub eta: f64,
+    pub rel: f64,
+    pub iterations: usize,
+}
+
+/// Lanczos state after the basis grew by one column: the orthonormal
+/// basis (flat column-major), the tridiagonal coefficients, and the
+/// index of the next iteration to run. The start-vector RNG is fully
+/// consumed before iteration 0, so no RNG state is needed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LanczosCheckpoint {
+    pub n: usize,
+    pub basis: Vec<f64>,
+    pub alpha: Vec<f64>,
+    pub beta: Vec<f64>,
+    pub next_iter: usize,
+}
+
+/// Block Lanczos state after the basis grew by one block: both panels
+/// (flat column-major), the raw projected wedge `Vᵀ A V` (row-major
+/// `t_dim × t_dim`), and the RNG state (rank recovery draws normals
+/// mid-run, so resuming must continue the exact variate sequence).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockLanczosCheckpoint {
+    pub n: usize,
+    pub block: usize,
+    pub basis: Vec<f64>,
+    pub images: Vec<f64>,
+    pub t_raw: Vec<f64>,
+    pub t_dim: usize,
+    pub rng_state: [u64; 4],
+    pub rng_spare: Option<f64>,
+    pub next_block: usize,
+}
+
+/// GMRES state at a restart boundary — the iterate is the whole
+/// state; the Krylov basis is rebuilt from scratch each cycle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GmresCheckpoint {
+    pub x: Vec<f64>,
+    pub total_iters: usize,
+    pub restarts_done: usize,
+}
+
+/// A snapshot from any of the five solvers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Checkpoint {
+    Cg(CgCheckpoint),
+    Minres(MinresCheckpoint),
+    Lanczos(LanczosCheckpoint),
+    BlockLanczos(BlockLanczosCheckpoint),
+    Gmres(GmresCheckpoint),
+}
+
+impl Checkpoint {
+    /// Stable solver name, for logs and the flight recorder.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Checkpoint::Cg(_) => "cg",
+            Checkpoint::Minres(_) => "minres",
+            Checkpoint::Lanczos(_) => "lanczos",
+            Checkpoint::BlockLanczos(_) => "block-lanczos",
+            Checkpoint::Gmres(_) => "gmres",
+        }
+    }
+
+    /// Iteration count the snapshot represents (restart cycles for
+    /// GMRES, block steps for block Lanczos).
+    pub fn iteration(&self) -> usize {
+        match self {
+            Checkpoint::Cg(c) => c.iterations,
+            Checkpoint::Minres(c) => c.iterations,
+            Checkpoint::Lanczos(c) => c.next_iter,
+            Checkpoint::BlockLanczos(c) => c.next_block,
+            Checkpoint::Gmres(c) => c.restarts_done,
+        }
+    }
+
+    /// Serialise to JSON with bit-exact float encoding.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut o = BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str(self.kind().to_string()));
+        match self {
+            Checkpoint::Cg(c) => {
+                o.insert("x".into(), vec_hex(&c.x));
+                o.insert("r".into(), vec_hex(&c.r));
+                o.insert("p".into(), vec_hex(&c.p));
+                o.insert("rz".into(), f64_hex(c.rz));
+                o.insert("iterations".into(), Json::Num(c.iterations as f64));
+            }
+            Checkpoint::Minres(c) => {
+                o.insert("x".into(), vec_hex(&c.x));
+                o.insert("v".into(), vec_hex(&c.v));
+                o.insert("v_prev".into(), vec_hex(&c.v_prev));
+                o.insert("d_prev".into(), vec_hex(&c.d_prev));
+                o.insert("d_prev2".into(), vec_hex(&c.d_prev2));
+                for (k, v) in [
+                    ("beta", c.beta),
+                    ("c", c.c),
+                    ("s", c.s),
+                    ("c_prev", c.c_prev),
+                    ("s_prev", c.s_prev),
+                    ("eta", c.eta),
+                    ("rel", c.rel),
+                ] {
+                    o.insert(k.into(), f64_hex(v));
+                }
+                o.insert("iterations".into(), Json::Num(c.iterations as f64));
+            }
+            Checkpoint::Lanczos(c) => {
+                o.insert("n".into(), Json::Num(c.n as f64));
+                o.insert("basis".into(), vec_hex(&c.basis));
+                o.insert("alpha".into(), vec_hex(&c.alpha));
+                o.insert("beta".into(), vec_hex(&c.beta));
+                o.insert("next_iter".into(), Json::Num(c.next_iter as f64));
+            }
+            Checkpoint::BlockLanczos(c) => {
+                o.insert("n".into(), Json::Num(c.n as f64));
+                o.insert("block".into(), Json::Num(c.block as f64));
+                o.insert("basis".into(), vec_hex(&c.basis));
+                o.insert("images".into(), vec_hex(&c.images));
+                o.insert("t_raw".into(), vec_hex(&c.t_raw));
+                o.insert("t_dim".into(), Json::Num(c.t_dim as f64));
+                o.insert(
+                    "rng_state".into(),
+                    Json::Arr(c.rng_state.iter().map(|&w| u64_hex(w)).collect()),
+                );
+                o.insert(
+                    "rng_spare".into(),
+                    c.rng_spare.map(f64_hex).unwrap_or(Json::Null),
+                );
+                o.insert("next_block".into(), Json::Num(c.next_block as f64));
+            }
+            Checkpoint::Gmres(c) => {
+                o.insert("x".into(), vec_hex(&c.x));
+                o.insert("total_iters".into(), Json::Num(c.total_iters as f64));
+                o.insert("restarts_done".into(), Json::Num(c.restarts_done as f64));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    /// Parse a [`Checkpoint::to_json`] document; malformed input is a
+    /// typed [`EngineError::InvalidInput`].
+    pub fn from_json(j: &Json) -> Result<Checkpoint, EngineError> {
+        let kind = j
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| EngineError::invalid("checkpoint missing 'kind'"))?;
+        let ck = match kind {
+            "cg" => Checkpoint::Cg(CgCheckpoint {
+                x: get_vec(j, "x")?,
+                r: get_vec(j, "r")?,
+                p: get_vec(j, "p")?,
+                rz: get_f64(j, "rz")?,
+                iterations: get_usize(j, "iterations")?,
+            }),
+            "minres" => Checkpoint::Minres(MinresCheckpoint {
+                x: get_vec(j, "x")?,
+                v: get_vec(j, "v")?,
+                v_prev: get_vec(j, "v_prev")?,
+                d_prev: get_vec(j, "d_prev")?,
+                d_prev2: get_vec(j, "d_prev2")?,
+                beta: get_f64(j, "beta")?,
+                c: get_f64(j, "c")?,
+                s: get_f64(j, "s")?,
+                c_prev: get_f64(j, "c_prev")?,
+                s_prev: get_f64(j, "s_prev")?,
+                eta: get_f64(j, "eta")?,
+                rel: get_f64(j, "rel")?,
+                iterations: get_usize(j, "iterations")?,
+            }),
+            "lanczos" => Checkpoint::Lanczos(LanczosCheckpoint {
+                n: get_usize(j, "n")?,
+                basis: get_vec(j, "basis")?,
+                alpha: get_vec(j, "alpha")?,
+                beta: get_vec(j, "beta")?,
+                next_iter: get_usize(j, "next_iter")?,
+            }),
+            "block-lanczos" => {
+                let state_arr = j
+                    .get("rng_state")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| EngineError::invalid("checkpoint missing 'rng_state'"))?;
+                if state_arr.len() != 4 {
+                    return Err(EngineError::invalid("rng_state must have 4 words"));
+                }
+                let mut rng_state = [0u64; 4];
+                for (dst, src) in rng_state.iter_mut().zip(state_arr) {
+                    *dst = parse_u64_hex(src)?;
+                }
+                let rng_spare = match j.get("rng_spare") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(parse_f64_hex(v)?),
+                };
+                Checkpoint::BlockLanczos(BlockLanczosCheckpoint {
+                    n: get_usize(j, "n")?,
+                    block: get_usize(j, "block")?,
+                    basis: get_vec(j, "basis")?,
+                    images: get_vec(j, "images")?,
+                    t_raw: get_vec(j, "t_raw")?,
+                    t_dim: get_usize(j, "t_dim")?,
+                    rng_state,
+                    rng_spare,
+                    next_block: get_usize(j, "next_block")?,
+                })
+            }
+            "gmres" => Checkpoint::Gmres(GmresCheckpoint {
+                x: get_vec(j, "x")?,
+                total_iters: get_usize(j, "total_iters")?,
+                restarts_done: get_usize(j, "restarts_done")?,
+            }),
+            other => {
+                return Err(EngineError::invalid(format!("unknown checkpoint kind '{other}'")))
+            }
+        };
+        Ok(ck)
+    }
+}
+
+fn f64_hex(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn vec_hex(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| f64_hex(x)).collect())
+}
+
+fn parse_u64_hex(j: &Json) -> Result<u64, EngineError> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| EngineError::invalid("expected hex-bit string"))?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| EngineError::invalid(format!("bad hex-bit string '{s}'")))
+}
+
+fn parse_f64_hex(j: &Json) -> Result<f64, EngineError> {
+    parse_u64_hex(j).map(f64::from_bits)
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64, EngineError> {
+    j.get(key)
+        .ok_or_else(|| EngineError::invalid(format!("checkpoint missing '{key}'")))
+        .and_then(parse_f64_hex)
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize, EngineError> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| EngineError::invalid(format!("checkpoint missing '{key}'")))
+}
+
+fn get_vec(j: &Json, key: &str) -> Result<Vec<f64>, EngineError> {
+    let arr = j
+        .get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| EngineError::invalid(format!("checkpoint missing '{key}'")))?;
+    arr.iter().map(parse_f64_hex).collect()
+}
+
+/// Shared slot the coordinator and a running solver exchange
+/// snapshots through: the solver stores, the recovery ladder takes.
+/// Cloning shares the slot.
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointSlot(Arc<Mutex<Option<Checkpoint>>>);
+
+impl CheckpointSlot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Replace the stored snapshot (last write wins).
+    pub fn store(&self, ck: Checkpoint) {
+        *lock_recover(&self.0) = Some(ck);
+    }
+
+    /// Take the snapshot out, leaving the slot empty.
+    pub fn take(&self) -> Option<Checkpoint> {
+        lock_recover(&self.0).take()
+    }
+
+    /// Clone the stored snapshot without consuming it — the ladder
+    /// may resume from the same checkpoint more than once.
+    pub fn latest(&self) -> Option<Checkpoint> {
+        lock_recover(&self.0).clone()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        lock_recover(&self.0).is_none()
+    }
+}
+
+/// Cadence-gated checkpoint destination a solver writes into:
+/// [`CheckpointSink::offer`] stores every `every`-th iteration (and
+/// never iteration 0 — an empty snapshot is worthless). The closure
+/// only runs when the cadence matches, so skipped iterations pay one
+/// modulo, no clones.
+#[derive(Debug, Clone)]
+pub struct CheckpointSink {
+    pub slot: CheckpointSlot,
+    pub every: usize,
+}
+
+impl CheckpointSink {
+    pub fn new(every: usize) -> Self {
+        CheckpointSink { slot: CheckpointSlot::new(), every: every.max(1) }
+    }
+
+    /// Offer a snapshot for end-of-iteration `iter` (1-based count of
+    /// completed iterations); stored when `iter` is a multiple of the
+    /// cadence.
+    pub fn offer(&self, iter: usize, f: impl FnOnce() -> Checkpoint) {
+        if iter > 0 && iter % self.every == 0 {
+            self.slot.store(f());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn weird_floats() -> Vec<f64> {
+        vec![0.0, -0.0, 1.5, -1.0 / 3.0, f64::MIN_POSITIVE / 8.0, 1e300, -2.5e-308]
+    }
+
+    #[test]
+    fn cg_json_roundtrip_is_bit_exact() {
+        let ck = Checkpoint::Cg(CgCheckpoint {
+            x: weird_floats(),
+            r: vec![1.0 / 7.0; 3],
+            p: vec![-0.0, 2.0, 3.0e-200],
+            rz: 0.1 + 0.2,
+            iterations: 17,
+        });
+        let text = ck.to_json().to_string();
+        let back = Checkpoint::from_json(&json::parse(&text).unwrap()).unwrap();
+        match (&ck, &back) {
+            (Checkpoint::Cg(a), Checkpoint::Cg(b)) => {
+                assert_eq!(a.iterations, b.iterations);
+                assert_eq!(a.rz.to_bits(), b.rz.to_bits());
+                for (x, y) in a.x.iter().zip(&b.x) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+                for (x, y) in a.p.iter().zip(&b.p) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            _ => panic!("kind changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn block_lanczos_roundtrip_keeps_rng_state() {
+        let ck = Checkpoint::BlockLanczos(BlockLanczosCheckpoint {
+            n: 4,
+            block: 2,
+            basis: weird_floats(),
+            images: vec![9.25; 2],
+            t_raw: vec![1.0, 2.0, 2.0, 3.0],
+            t_dim: 2,
+            rng_state: [u64::MAX, 1, 0xdead_beef, 42],
+            rng_spare: Some(-0.75),
+            next_block: 3,
+        });
+        let text = ck.to_json().to_string();
+        let back = Checkpoint::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(ck, back);
+        assert_eq!(back.kind(), "block-lanczos");
+        assert_eq!(back.iteration(), 3);
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        let cks = [
+            Checkpoint::Cg(CgCheckpoint {
+                x: vec![1.0],
+                r: vec![2.0],
+                p: vec![3.0],
+                rz: 4.0,
+                iterations: 1,
+            }),
+            Checkpoint::Minres(MinresCheckpoint {
+                x: vec![1.0],
+                v: vec![2.0],
+                v_prev: vec![3.0],
+                d_prev: vec![4.0],
+                d_prev2: vec![5.0],
+                beta: 0.5,
+                c: 1.0,
+                s: 0.0,
+                c_prev: 1.0,
+                s_prev: 0.0,
+                eta: 0.25,
+                rel: 0.125,
+                iterations: 2,
+            }),
+            Checkpoint::Lanczos(LanczosCheckpoint {
+                n: 2,
+                basis: vec![1.0, 0.0, 0.0, 1.0],
+                alpha: vec![2.0],
+                beta: vec![0.5],
+                next_iter: 1,
+            }),
+            Checkpoint::Gmres(GmresCheckpoint {
+                x: vec![1.0, 2.0],
+                total_iters: 12,
+                restarts_done: 2,
+            }),
+        ];
+        for ck in cks {
+            let text = ck.to_json().to_string();
+            let back = Checkpoint::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(ck, back);
+        }
+    }
+
+    #[test]
+    fn malformed_json_is_typed_invalid_input() {
+        let e = Checkpoint::from_json(&json::parse("{}").unwrap()).unwrap_err();
+        assert_eq!(e.class(), "invalid-input");
+        let e = Checkpoint::from_json(&json::parse(r#"{"kind":"warp"}"#).unwrap()).unwrap_err();
+        assert!(e.to_string().contains("warp"), "{e}");
+        let e = Checkpoint::from_json(&json::parse(r#"{"kind":"cg"}"#).unwrap()).unwrap_err();
+        assert_eq!(e.class(), "invalid-input");
+    }
+
+    #[test]
+    fn sink_cadence_and_slot_semantics() {
+        let sink = CheckpointSink::new(5);
+        let mk = |i: usize| {
+            Checkpoint::Gmres(GmresCheckpoint { x: vec![i as f64], total_iters: i, restarts_done: i })
+        };
+        for i in 0..=12 {
+            sink.offer(i, || mk(i));
+        }
+        // Iterations 5 and 10 stored; last write wins.
+        let latest = sink.slot.latest().expect("cadence hit");
+        assert_eq!(latest.iteration(), 10);
+        // latest() does not consume; take() does.
+        assert!(!sink.slot.is_empty());
+        assert_eq!(sink.slot.take().unwrap().iteration(), 10);
+        assert!(sink.slot.is_empty());
+        // Iteration 0 is never stored.
+        let sink = CheckpointSink::new(1);
+        sink.offer(0, || mk(0));
+        assert!(sink.slot.is_empty());
+    }
+}

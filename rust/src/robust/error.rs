@@ -1,9 +1,9 @@
 //! The engine-wide error taxonomy.
 //!
-//! Every failure the coordinator can hand back is one of these five
+//! Every failure the coordinator can hand back is one of these six
 //! variants; `class()` gives the stable short string that lands in
 //! flight-recorder entries and Prometheus labels, and `retryable()`
-//! drives the one-step degradation ladder (see `docs/ROBUSTNESS.md`).
+//! drives the multi-rung recovery ladder (see `docs/ROBUSTNESS.md`).
 
 /// A typed job failure. Mirrors the taxonomy in `docs/ROBUSTNESS.md`.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
@@ -32,12 +32,18 @@ pub enum EngineError {
     /// The job was cancelled, or its reply channel is gone.
     #[error("cancelled: {reason}")]
     Cancelled { reason: String },
+
+    /// An ABFT checksum or probe caught a wrong-but-finite apply
+    /// result (`robust::verify`): the output is numerically plausible
+    /// but violates an algebraic invariant of the operator.
+    #[error("silent corruption detected at {site}: {what}")]
+    SilentCorruption { site: &'static str, what: String },
 }
 
 /// Stable short names, in the order of [`EngineError`]'s variants.
 /// `flight::ERR_CLASSES` must stay a superset of these strings.
-pub const CLASSES: [&str; 5] =
-    ["invalid-input", "breakdown", "timeout", "panic", "cancelled"];
+pub const CLASSES: [&str; 6] =
+    ["invalid-input", "breakdown", "timeout", "panic", "cancelled", "silent-corruption"];
 
 impl EngineError {
     /// Shorthand constructor for admission failures.
@@ -54,17 +60,21 @@ impl EngineError {
             EngineError::Timeout { .. } => "timeout",
             EngineError::WorkerPanic { .. } => "panic",
             EngineError::Cancelled { .. } => "cancelled",
+            EngineError::SilentCorruption { .. } => "silent-corruption",
         }
     }
 
-    /// Should the coordinator retry the job once on the degraded
-    /// (scalar-SIMD) path? Panics and breakdowns may be environmental
-    /// — bad SIMD dispatch, a transient poisoned buffer — and are
-    /// worth one retry; invalid input and expired deadlines are not.
+    /// Should the coordinator climb the recovery ladder for this job?
+    /// Panics, breakdowns, and checksum trips may be environmental —
+    /// bad SIMD dispatch, a transient poisoned buffer, a bit flip —
+    /// and are worth recovery attempts; invalid input and expired
+    /// deadlines are not.
     pub fn retryable(&self) -> bool {
         matches!(
             self,
-            EngineError::WorkerPanic { .. } | EngineError::NumericalBreakdown { .. }
+            EngineError::WorkerPanic { .. }
+                | EngineError::NumericalBreakdown { .. }
+                | EngineError::SilentCorruption { .. }
         )
     }
 }
@@ -81,6 +91,7 @@ mod tests {
             EngineError::Timeout { budget_ms: 5 },
             EngineError::WorkerPanic { job: "eig", message: "boom".into() },
             EngineError::Cancelled { reason: "caller".into() },
+            EngineError::SilentCorruption { site: "cg.apply", what: "checksum".into() },
         ];
         let classes: Vec<&str> = all.iter().map(|e| e.class()).collect();
         assert_eq!(classes, CLASSES);
@@ -90,6 +101,8 @@ mod tests {
     fn retry_policy_matches_taxonomy() {
         assert!(EngineError::WorkerPanic { job: "m", message: String::new() }.retryable());
         assert!(EngineError::NumericalBreakdown { solver: "cg", reason: String::new() }
+            .retryable());
+        assert!(EngineError::SilentCorruption { site: "cg.apply", what: String::new() }
             .retryable());
         assert!(!EngineError::invalid("x").retryable());
         assert!(!EngineError::Timeout { budget_ms: 1 }.retryable());

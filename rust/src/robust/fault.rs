@@ -28,7 +28,7 @@ use crate::data::rng::Rng;
 use crate::util::lock_recover;
 
 /// What an armed site does when its trip count is reached.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultAction {
     /// `panic!` at the site (exercises `catch_unwind` isolation).
     Panic,
@@ -37,6 +37,11 @@ pub enum FaultAction {
     Nan,
     /// Sleep this many milliseconds (exercises deadlines).
     DelayMs(u64),
+    /// Add a finite bias to the first element of the site's buffer —
+    /// silent value corruption, invisible to NaN/Inf health scans and
+    /// detectable only by the ABFT checksums of `robust::verify`
+    /// (only [`corrupt`] sites honour this).
+    Bias(f64),
 }
 
 /// One armed fault: fire `action` on the `hit`-th trip of `site`.
@@ -120,9 +125,9 @@ impl ActivePlan {
             if st.fired || st.arm.site != site || st.arm.hit != count {
                 continue;
             }
-            // fire() sites perform Panic/Delay; corrupt() sites Nan.
+            // fire() sites perform Panic/Delay; corrupt() sites Nan/Bias.
             let matches_kind = match st.arm.action {
-                FaultAction::Nan => data_fault,
+                FaultAction::Nan | FaultAction::Bias(_) => data_fault,
                 FaultAction::Panic | FaultAction::DelayMs(_) => !data_fault,
             };
             if !matches_kind {
@@ -169,12 +174,13 @@ fn fire_slow(site: &'static str) {
     match action {
         Some(FaultAction::Panic) => panic!("fault injected at {site}"),
         Some(FaultAction::DelayMs(ms)) => std::thread::sleep(Duration::from_millis(ms)),
-        Some(FaultAction::Nan) | None => {}
+        Some(FaultAction::Nan) | Some(FaultAction::Bias(_)) | None => {}
     }
 }
 
 /// A data fault point: an armed `Nan` arm overwrites `data[0]` with
-/// NaN on its hit. Disarmed: one relaxed load, `data` untouched.
+/// NaN on its hit, a `Bias` arm adds its finite delta to `data[0]`.
+/// Disarmed: one relaxed load, `data` untouched.
 #[inline]
 pub fn corrupt(site: &'static str, data: &mut [f64]) {
     if !armed() {
@@ -189,10 +195,18 @@ fn corrupt_slow(site: &'static str, data: &mut [f64]) {
         let mut guard = lock_recover(&PLAN);
         guard.as_mut().and_then(|p| p.trip(site, true))
     };
-    if let Some(FaultAction::Nan) = action {
-        if let Some(first) = data.first_mut() {
-            *first = f64::NAN;
+    match action {
+        Some(FaultAction::Nan) => {
+            if let Some(first) = data.first_mut() {
+                *first = f64::NAN;
+            }
         }
+        Some(FaultAction::Bias(delta)) => {
+            if let Some(first) = data.first_mut() {
+                *first += delta;
+            }
+        }
+        _ => {}
     }
 }
 
@@ -207,6 +221,13 @@ impl Drop for Disarm {
 
 fn gate() -> MutexGuard<'static, ()> {
     lock_recover(&GATE)
+}
+
+/// Hand the injection gate to a sibling module (`robust::verify`) so
+/// everything that mutates process-global instrumentation state —
+/// fault plans *and* verifiers — serialises on the one mutex.
+pub(crate) fn hold_gate() -> MutexGuard<'static, ()> {
+    gate()
 }
 
 /// Arm `plan`, run `f`, disarm, and report what fired. Callers are
@@ -300,6 +321,23 @@ mod tests {
         let a = hits(42);
         assert!(a.is_some());
         assert_eq!(a, hits(42));
+    }
+
+    #[test]
+    fn bias_adds_finite_delta_once() {
+        let plan = FaultPlan::new().arm("test.bias", 1, FaultAction::Bias(1e-3));
+        let (vals, report) = with_plan(plan, || {
+            let mut out = Vec::new();
+            for _ in 0..3 {
+                let mut v = vec![2.0, 3.0];
+                corrupt("test.bias", &mut v);
+                out.push(v[0]);
+            }
+            out
+        });
+        assert_eq!(vals, vec![2.0, 2.0 + 1e-3, 2.0]);
+        assert_eq!(report.fired.len(), 1);
+        assert!(matches!(report.fired[0].1, FaultAction::Bias(_)));
     }
 
     #[test]

@@ -18,12 +18,25 @@
 //!   atomic load in production; armed plans fire at exact,
 //!   seed-reproducible trip counts. Outputs with injection disarmed
 //!   are bitwise identical to a build without the layer.
+//! * **Silent-corruption defense.** [`verify`] checks algebraic
+//!   invariants (ABFT checksums, resident probes) on operator applies
+//!   behind the same observer-only gate — off, one relaxed load and
+//!   bitwise-identical outputs; on, a wrong-but-finite apply becomes
+//!   a typed [`EngineError::SilentCorruption`].
+//! * **Checkpoint/resume.** [`checkpoint`] snapshots mid-solve Krylov
+//!   state every K iterations so the recovery ladder resumes instead
+//!   of restarting; a resumed run is bitwise identical to an
+//!   uninterrupted one.
 
 pub mod cancel;
+pub mod checkpoint;
 pub mod error;
 pub mod fault;
 pub mod health;
+pub mod verify;
 
 pub use cancel::CancelToken;
+pub use checkpoint::{Checkpoint, CheckpointSink, CheckpointSlot};
 pub use error::EngineError;
 pub use fault::{FaultAction, FaultPlan};
+pub use verify::Verifier;

@@ -1,0 +1,510 @@
+//! Algorithm-based fault tolerance (ABFT) for operator applies.
+//!
+//! The NFFT engine replaces exact dense matvecs with *approximate*
+//! ones, so a wrong-but-finite apply result is the one failure the
+//! NaN/Inf health scans cannot see. The graph structure hands us free
+//! algebraic invariants to check every apply against:
+//!
+//! * **weighted checksums** — for symmetric `A`, any resident pair
+//!   `(w, Aw)` satisfies `⟨w, Ax⟩ = ⟨Aw, x⟩` for every `x`; checking
+//!   it costs two fixed-order O(n) dots per apply. The affine form
+//!   `y = αx + βAx` (the shifted Laplacian wrappers) checks
+//!   `⟨w, y⟩ = α⟨w, x⟩ + β⟨Aw, x⟩`.
+//! * **resident probes** — known eigen/fixed-point identities checked
+//!   by one extra apply: `W·1 = d` (degree identity) and
+//!   `A (D^{1/2}1) = D^{1/2}1` (Perron vector of the normalised
+//!   adjacency).
+//! * **sampled symmetry** — `⟨u, Av⟩ = ⟨v, Au⟩` on random `u, v`.
+//!
+//! Tolerances derive from the engine's own accuracy estimate: the
+//! fastsum approximation `W̃` is only symmetric up to its NFFT error,
+//! so each [`Checksum`] carries a relative tolerance seeded from
+//! `FastsumParams::accuracy_estimate()` (and, for the normalised
+//! adjacency, the Lemma 3.1 propagation bound), widened by a safety
+//! factor and by the checksum residual actually measured at build
+//! time. A trip raises [`EngineError::SilentCorruption`], which the
+//! coordinator's recovery ladder treats as retryable.
+//!
+//! Cost discipline matches `obs::span` and `robust::fault`: with no
+//! verifier armed — the default — every check site is **one relaxed
+//! atomic load** and engine outputs are bitwise identical to a build
+//! without the layer. Checks never modify data, so arming a verifier
+//! is also bitwise invisible on outputs; it only adds read-only dots.
+//! Arming shares `robust::fault`'s process-global gate so chaos plans
+//! and verifiers serialise on one mutex.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::error::EngineError;
+use super::fault;
+use crate::graph::operator::LinearOperator;
+use crate::linalg::panel::{pdot, pnorm2};
+use crate::util::lock_recover;
+
+/// Safety factor between an engine's accuracy estimate and the trip
+/// threshold. Wide enough that roundoff re-association across SIMD
+/// levels, shard counts, and block widths never false-positives;
+/// narrow enough that an O(1) bias on one entry of a unit vector's
+/// image still trips for every supported setup.
+pub const SAFETY: f64 = 64.0;
+
+/// Fallback relative tolerance for operators with no accuracy
+/// estimate of their own (dense oracles, test operators): exact
+/// symmetric arithmetic disagrees only by reduction roundoff.
+pub const GENERIC_REL_TOL: f64 = 1e-9;
+
+/// A resident checksum pair for the invariant
+/// `⟨w, y⟩ = α⟨w, x⟩ + β⟨aw, x⟩` on every apply `y = αx + βAx`
+/// (plain operators are `α = 0, β = 1` with `aw = Aw`).
+#[derive(Debug, Clone)]
+pub struct Checksum {
+    /// Human-readable invariant name for the error message.
+    pub what: &'static str,
+    w: Vec<f64>,
+    aw: Vec<f64>,
+    alpha: f64,
+    beta: f64,
+    rel_tol: f64,
+    w_norm: f64,
+}
+
+impl Checksum {
+    /// Checksum for a plain operator: `⟨w, Ax⟩ = ⟨aw, x⟩`.
+    pub fn new(what: &'static str, w: Vec<f64>, aw: Vec<f64>, rel_tol: f64) -> Self {
+        Self::affine(what, w, aw, 0.0, 1.0, rel_tol)
+    }
+
+    /// Checksum for the affine wrapper `y = αx + βAx`.
+    pub fn affine(
+        what: &'static str,
+        w: Vec<f64>,
+        aw: Vec<f64>,
+        alpha: f64,
+        beta: f64,
+        rel_tol: f64,
+    ) -> Self {
+        assert_eq!(w.len(), aw.len());
+        assert!(rel_tol > 0.0, "checksum tolerance must be positive");
+        let w_norm = pnorm2(&w);
+        Checksum { what, w, aw, alpha, beta, rel_tol, w_norm }
+    }
+
+    /// Dimension this checksum applies to.
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Residual of the invariant on one `(x, y)` pair, relative to
+    /// `‖w‖‖x‖` — the natural scale of both sides. Exposed so
+    /// builders can measure the engine's intrinsic residual.
+    pub fn residual(&self, x: &[f64], y: &[f64]) -> f64 {
+        let lhs = pdot(&self.w, y);
+        let rhs = self.alpha * pdot(&self.w, x) + self.beta * pdot(&self.aw, x);
+        let scale = self.w_norm * pnorm2(x);
+        if scale > 0.0 {
+            (lhs - rhs).abs() / scale
+        } else {
+            (lhs - rhs).abs()
+        }
+    }
+
+    /// Widen the tolerance to at least `rel_tol`.
+    pub fn widen(&mut self, rel_tol: f64) {
+        if rel_tol > self.rel_tol {
+            self.rel_tol = rel_tol;
+        }
+    }
+
+    /// Check one apply; `None` on pass, a failure description on trip.
+    /// Uses `!(residual <= tol)` so NaN residuals (a NaN that slipped
+    /// past the health scans into `y`) also trip.
+    fn check(&self, x: &[f64], y: &[f64]) -> Option<String> {
+        let r = self.residual(x, y);
+        if !(r <= self.rel_tol) {
+            Some(format!(
+                "checksum '{}' residual {r:.3e} exceeds tolerance {:.3e}",
+                self.what, self.rel_tol
+            ))
+        } else {
+            None
+        }
+    }
+}
+
+/// A resident probe: a known input/output identity `A·x ≈ expect`,
+/// verified with one extra apply by [`Verifier::run_probes`].
+#[derive(Debug, Clone)]
+pub struct Probe {
+    /// Human-readable identity name for the error message.
+    pub what: &'static str,
+    pub x: Vec<f64>,
+    pub expect: Vec<f64>,
+    pub rel_tol: f64,
+}
+
+impl Probe {
+    /// Check the identity against `op`; returns the failure
+    /// description on trip.
+    fn check(&self, op: &dyn LinearOperator) -> Option<String> {
+        if self.x.len() != op.dim() {
+            return None;
+        }
+        let got = op.apply_vec(&self.x);
+        let scale = pnorm2(&self.expect).max(pnorm2(&self.x));
+        let mut worst = 0.0f64;
+        for (g, e) in got.iter().zip(&self.expect) {
+            let d = (g - e).abs();
+            if !(d <= worst) {
+                worst = d;
+            }
+        }
+        let rel = if scale > 0.0 { worst / scale } else { worst };
+        if !(rel <= self.rel_tol) {
+            Some(format!(
+                "probe '{}' deviation {rel:.3e} exceeds tolerance {:.3e}",
+                self.what, self.rel_tol
+            ))
+        } else {
+            None
+        }
+    }
+}
+
+/// A set of checksums and probes for one operator family. Checks
+/// whose dimension does not match the vectors at a site are skipped
+/// silently, so one armed verifier can watch an operator and its
+/// shifted wrappers at once.
+#[derive(Debug, Clone, Default)]
+pub struct Verifier {
+    checksums: Vec<Checksum>,
+    probes: Vec<Probe>,
+}
+
+impl Verifier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_checksum(mut self, c: Checksum) -> Self {
+        self.checksums.push(c);
+        self
+    }
+
+    pub fn with_probe(mut self, p: Probe) -> Self {
+        self.probes.push(p);
+        self
+    }
+
+    /// Generic builder for any symmetric operator: one random-weight
+    /// checksum pair `(w, Aw)` built with a single apply, tolerance
+    /// `SAFETY × max(rel_tol_hint, measured residual)`. Engines with
+    /// structure to exploit (fastsum, normalised adjacency) provide
+    /// richer `verifier()` builders of their own.
+    pub fn for_operator(op: &dyn LinearOperator, seed: u64, rel_tol_hint: f64) -> Self {
+        let n = op.dim();
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        let w = rng.normal_vec(n);
+        let aw = op.apply_vec(&w);
+        let mut c = Checksum::new("random-weight", w, aw, GENERIC_REL_TOL.max(rel_tol_hint));
+        // Measure the engine's intrinsic residual on an independent
+        // vector and widen so an honest engine can never trip.
+        let x = rng.normal_vec(n);
+        let y = op.apply_vec(&x);
+        c.widen(SAFETY * c.residual(&x, &y).max(rel_tol_hint).max(GENERIC_REL_TOL));
+        Verifier::new().with_checksum(c)
+    }
+
+    pub fn checksums(&self) -> &[Checksum] {
+        &self.checksums
+    }
+
+    /// Check one apply `y ≈ f(x)` at `site` against every
+    /// dimension-matching checksum.
+    pub fn check_apply(
+        &self,
+        site: &'static str,
+        x: &[f64],
+        y: &[f64],
+    ) -> Result<(), EngineError> {
+        for c in &self.checksums {
+            if c.dim() != x.len() || x.len() != y.len() {
+                continue;
+            }
+            if let Some(what) = c.check(x, y) {
+                return Err(EngineError::SilentCorruption { site, what });
+            }
+        }
+        Ok(())
+    }
+
+    /// Check a column-major block apply at `site`; each column is
+    /// checked independently.
+    pub fn check_block(
+        &self,
+        site: &'static str,
+        xs: &[f64],
+        ys: &[f64],
+    ) -> Result<(), EngineError> {
+        for c in &self.checksums {
+            let n = c.dim();
+            if n == 0 || xs.len() % n != 0 || xs.len() != ys.len() {
+                continue;
+            }
+            for (x, y) in xs.chunks_exact(n).zip(ys.chunks_exact(n)) {
+                if let Some(what) = c.check(x, y) {
+                    return Err(EngineError::SilentCorruption { site, what });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run every resident probe against `op` (one apply each).
+    pub fn run_probes(&self, op: &dyn LinearOperator) -> Result<(), EngineError> {
+        for p in &self.probes {
+            if let Some(what) = p.check(op) {
+                return Err(EngineError::SilentCorruption { site: "probe", what });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Sampled symmetry probe: draw random `u, v` from `seed` and check
+/// `⟨u, Av⟩ = ⟨v, Au⟩` within `rel_tol` of `‖u‖‖v‖`-scaled size.
+/// Two applies; used at verifier build time and by tests, not per
+/// apply.
+pub fn symmetry_probe(
+    op: &dyn LinearOperator,
+    seed: u64,
+    rel_tol: f64,
+) -> Result<(), EngineError> {
+    let n = op.dim();
+    let mut rng = crate::data::rng::Rng::seed_from(seed);
+    let u = rng.normal_vec(n);
+    let v = rng.normal_vec(n);
+    let au = op.apply_vec(&u);
+    let av = op.apply_vec(&v);
+    let lhs = pdot(&u, &av);
+    let rhs = pdot(&v, &au);
+    let scale = pnorm2(&u) * pnorm2(&v);
+    let rel = if scale > 0.0 { (lhs - rhs).abs() / scale } else { (lhs - rhs).abs() };
+    if !(rel <= rel_tol) {
+        return Err(EngineError::SilentCorruption {
+            site: "symmetry-probe",
+            what: format!("asymmetry {rel:.3e} exceeds tolerance {rel_tol:.3e}"),
+        });
+    }
+    Ok(())
+}
+
+static ENABLED: AtomicU8 = AtomicU8::new(0);
+static VERIFIER: Mutex<Option<Arc<Verifier>>> = Mutex::new(None);
+/// Checks actually evaluated while armed — lets tests assert the
+/// machinery engaged (a verifier that silently skipped everything
+/// would vacuously "pass").
+static CHECKS_RUN: AtomicU64 = AtomicU64::new(0);
+
+/// Is a verifier armed? One relaxed load — the entire production
+/// cost of every check site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed) != 0
+}
+
+/// Checks evaluated since the current verifier was armed.
+pub fn checks_run() -> u64 {
+    CHECKS_RUN.load(Ordering::Relaxed)
+}
+
+/// Per-apply check site: verify `y ≈ f(x)` against the armed
+/// verifier. Disarmed: one relaxed load, `Ok`.
+#[inline]
+pub fn check_apply(site: &'static str, x: &[f64], y: &[f64]) -> Result<(), EngineError> {
+    if !enabled() {
+        return Ok(());
+    }
+    check_apply_slow(site, x, y)
+}
+
+#[cold]
+fn check_apply_slow(site: &'static str, x: &[f64], y: &[f64]) -> Result<(), EngineError> {
+    let v = match lock_recover(&VERIFIER).clone() {
+        Some(v) => v,
+        None => return Ok(()),
+    };
+    CHECKS_RUN.fetch_add(1, Ordering::Relaxed);
+    v.check_apply(site, x, y)
+}
+
+/// Block check site; see [`check_apply`].
+#[inline]
+pub fn check_block(site: &'static str, xs: &[f64], ys: &[f64]) -> Result<(), EngineError> {
+    if !enabled() {
+        return Ok(());
+    }
+    check_block_slow(site, xs, ys)
+}
+
+#[cold]
+fn check_block_slow(site: &'static str, xs: &[f64], ys: &[f64]) -> Result<(), EngineError> {
+    let v = match lock_recover(&VERIFIER).clone() {
+        Some(v) => v,
+        None => return Ok(()),
+    };
+    CHECKS_RUN.fetch_add(1, Ordering::Relaxed);
+    v.check_block(site, xs, ys)
+}
+
+/// Disarms on drop, even across panics.
+pub struct VerifyGuard {
+    _priv: (),
+}
+
+impl Drop for VerifyGuard {
+    fn drop(&mut self) {
+        ENABLED.store(0, Ordering::Relaxed);
+        *lock_recover(&VERIFIER) = None;
+    }
+}
+
+/// Arm `verifier` process-wide WITHOUT taking the instrumentation
+/// gate — for nesting inside `fault::with_plan` / `with_disarmed`
+/// closures (the gate mutex is not reentrant). Callers outside a
+/// gated closure should use [`with_verifier`].
+pub fn scoped(verifier: Verifier) -> VerifyGuard {
+    *lock_recover(&VERIFIER) = Some(Arc::new(verifier));
+    CHECKS_RUN.store(0, Ordering::Relaxed);
+    ENABLED.store(1, Ordering::Relaxed);
+    VerifyGuard { _priv: () }
+}
+
+/// Arm `verifier`, run `f`, disarm. Holds the shared instrumentation
+/// gate (the same mutex as `fault::with_plan`) so concurrent chaos
+/// plans and verifiers serialise.
+pub fn with_verifier<T>(verifier: Verifier, f: impl FnOnce() -> T) -> T {
+    let _gate = fault::hold_gate();
+    let _guard = scoped(verifier);
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::operator::FnOperator;
+
+    fn diag2() -> FnOperator<impl Fn(&[f64], &mut [f64]) + Send + Sync> {
+        FnOperator {
+            n: 2,
+            f: |x: &[f64], y: &mut [f64]| {
+                y[0] = 2.0 * x[0];
+                y[1] = 3.0 * x[1];
+            },
+        }
+    }
+
+    #[test]
+    fn clean_applies_pass_and_corrupt_ones_trip() {
+        let op = diag2();
+        let v = Verifier::for_operator(&op, 7, GENERIC_REL_TOL);
+        let x = vec![1.0, -2.0];
+        let y = op.apply_vec(&x);
+        v.check_apply("t.apply", &x, &y).unwrap();
+        let mut bad = y.clone();
+        bad[0] += 0.5;
+        let e = v.check_apply("t.apply", &x, &bad).unwrap_err();
+        assert_eq!(e.class(), "silent-corruption");
+        assert!(e.to_string().contains("t.apply"), "{e}");
+    }
+
+    #[test]
+    fn nan_in_output_trips_not_passes() {
+        let op = diag2();
+        let v = Verifier::for_operator(&op, 8, GENERIC_REL_TOL);
+        let x = vec![1.0, 1.0];
+        let bad = vec![f64::NAN, 3.0];
+        assert!(v.check_apply("t.apply", &x, &bad).is_err());
+    }
+
+    #[test]
+    fn dimension_mismatch_is_skipped() {
+        let op = diag2();
+        let v = Verifier::for_operator(&op, 9, GENERIC_REL_TOL);
+        // 3-vectors: no checksum matches, silently passes.
+        v.check_apply("t.apply", &[1.0; 3], &[9.0; 3]).unwrap();
+    }
+
+    #[test]
+    fn affine_checksum_covers_shifted_operators() {
+        let op = diag2();
+        let mut rng = crate::data::rng::Rng::seed_from(11);
+        let w = rng.normal_vec(2);
+        let aw = op.apply_vec(&w);
+        // y = 1.5 x - 0.5 A x.
+        let c = Checksum::affine("shifted", w, aw, 1.5, -0.5, 1e-9);
+        let v = Verifier::new().with_checksum(c);
+        let x = vec![0.3, -0.7];
+        let ax = op.apply_vec(&x);
+        let y: Vec<f64> = x.iter().zip(&ax).map(|(xi, axi)| 1.5 * xi - 0.5 * axi).collect();
+        v.check_apply("t.shifted", &x, &y).unwrap();
+        let mut bad = y.clone();
+        bad[1] -= 0.25;
+        assert!(v.check_apply("t.shifted", &x, &bad).is_err());
+    }
+
+    #[test]
+    fn block_checks_every_column() {
+        let op = diag2();
+        let v = Verifier::for_operator(&op, 13, GENERIC_REL_TOL);
+        let xs = vec![1.0, 2.0, -1.0, 0.5];
+        let mut ys = vec![0.0; 4];
+        op.apply_block(&xs, &mut ys);
+        v.check_block("t.block", &xs, &ys).unwrap();
+        ys[2] += 1.0; // corrupt column 1
+        assert!(v.check_block("t.block", &xs, &ys).is_err());
+    }
+
+    #[test]
+    fn probes_and_symmetry() {
+        let op = diag2();
+        // Diagonal operators are symmetric.
+        symmetry_probe(&op, 21, 1e-12).unwrap();
+        let p = Probe {
+            what: "e0-image",
+            x: vec![1.0, 0.0],
+            expect: vec![2.0, 0.0],
+            rel_tol: 1e-12,
+        };
+        let v = Verifier::new().with_probe(p);
+        v.run_probes(&op).unwrap();
+        let bad = Probe {
+            what: "wrong-image",
+            x: vec![1.0, 0.0],
+            expect: vec![2.5, 0.0],
+            rel_tol: 1e-12,
+        };
+        assert!(Verifier::new().with_probe(bad).run_probes(&op).is_err());
+    }
+
+    #[test]
+    fn global_gate_is_observer_only_and_disarms_on_drop() {
+        assert!(!enabled());
+        check_apply("t.site", &[1.0], &[999.0]).unwrap();
+        let op = diag2();
+        let x = vec![1.0, 1.0];
+        let y = op.apply_vec(&x);
+        let trip = with_verifier(Verifier::for_operator(&op, 17, GENERIC_REL_TOL), || {
+            assert!(enabled());
+            check_apply("t.site", &x, &y).unwrap();
+            let mut bad = y.clone();
+            bad[0] = 0.0;
+            let trip = check_apply("t.site", &x, &bad);
+            assert!(checks_run() >= 2);
+            trip
+        });
+        assert!(trip.is_err());
+        assert!(!enabled());
+        check_apply("t.site", &x, &[0.0, 0.0]).unwrap();
+    }
+}

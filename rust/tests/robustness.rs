@@ -19,9 +19,11 @@ use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel, NormalizedAdj
 use nfft_krylov::graph::dense::{DenseKernelOperator, DenseMode};
 use nfft_krylov::graph::LinearOperator;
 use nfft_krylov::krylov::{cg_solve, lanczos_eigs, CgOptions, LanczosOptions};
+use nfft_krylov::prop_assert;
 use nfft_krylov::robust::fault::{self, FaultAction, FaultPlan};
-use nfft_krylov::robust::{CancelToken, EngineError};
+use nfft_krylov::robust::{verify, CancelToken, EngineError};
 use nfft_krylov::shard::{PartitionStrategy, ShardSpec, ShardedOperator};
+use nfft_krylov::util::simd;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
@@ -258,6 +260,9 @@ fn admission_rejections_and_prometheus_counters() {
         "nfft_jobs_timeout_total",
         "nfft_jobs_panicked_total",
         "nfft_jobs_retried_total",
+        "nfft_checksum_failures_total",
+        "nfft_jobs_resumed_total",
+        "nfft_ladder_rung_total",
     ] {
         assert!(text.contains(counter), "prometheus export missing {counter}");
     }
@@ -352,6 +357,148 @@ fn disarmed_and_unrelated_faults_are_bitwise_invisible() {
     assert_eq!(base_eig.len(), got_eig.len());
     for (a, b) in base_eig.iter().zip(&got_eig) {
         assert_eq!(a.to_bits(), b.to_bits(), "Lanczos bits changed under armed plan");
+    }
+}
+
+/// ABFT clean-pass guarantee (proptest): honest applies never trip
+/// the fastsum verifier, across SIMD levels × shard counts × block
+/// widths. Roundoff re-association between configurations must stay
+/// inside the `SAFETY` margin of the parameter-derived tolerance —
+/// a false positive here would turn every recovery rung into noise.
+#[test]
+fn clean_applies_never_trip_across_levels_shards_and_widths() {
+    let (points, n) = spiral_points(200, 37);
+    let fastsum = fastsum_op(&points);
+    let verifier = fault::with_disarmed(|| fastsum.verifier(41));
+    nfft_krylov::util::proptest::check(
+        nfft_krylov::util::proptest::Config { cases: 12, seed: 43 },
+        "clean applies never trip the verifier",
+        |rng| {
+            let levels = simd::testable_levels();
+            let lvl = levels[rng.below(levels.len())];
+            let shards = 1 + rng.below(4);
+            let width = 1 + rng.below(4);
+            let xs = rng.normal_vec(n * width);
+            let (ys_shard, y_single) = fault::with_disarmed(|| {
+                let spec = ShardSpec::build(PartitionStrategy::Morton, &points, 3, shards);
+                let sharded = ShardedOperator::from_fastsum(&fastsum, spec);
+                simd::with_override(Some(lvl), || {
+                    let mut ys = vec![0.0; n * width];
+                    sharded.apply_block(&xs, &mut ys);
+                    let mut y = vec![0.0; n];
+                    fastsum.apply(&xs[..n], &mut y);
+                    (ys, y)
+                })
+            });
+            let block = verifier.check_block("clean.block", &xs, &ys_shard);
+            prop_assert!(
+                block.is_ok(),
+                "false trip at {lvl:?}/{shards} shards/{width} cols: {:?}",
+                block.err()
+            );
+            let single = verifier.check_apply("clean.apply", &xs[..n], &y_single);
+            prop_assert!(single.is_ok(), "false trip on single apply: {:?}", single.err());
+            Ok(())
+        },
+    );
+}
+
+/// The full silent-corruption loop, end to end: an armed verifier
+/// catches an injected bias in the middle of a Lanczos solve as
+/// `SilentCorruption`, the recovery ladder resumes from the last
+/// mid-solve checkpoint, and the recovered eigenvalues match an
+/// uninterrupted clean run.
+#[test]
+fn bias_mid_lanczos_is_detected_and_ladder_resumes() {
+    let (points, _) = spiral_points(150, 41);
+    let (op, verifier) = fault::with_disarmed(|| {
+        let a = NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup2(),
+        )
+        .unwrap();
+        let v = a.verifier(47);
+        (a, v)
+    });
+    let op: Arc<dyn LinearOperator> = Arc::new(op);
+    let mut c = Coordinator::new(op, 1);
+    // Tight tolerance keeps the solve running well past the first
+    // checkpoint (taken every 8 iterations).
+    let opts = LanczosOptions { k: 3, tol: 1e-14, max_iter: 40, ..Default::default() };
+    let clean = fault::with_disarmed(|| match c.submit(Job::Eig(opts)).wait() {
+        JobResult::Eig(r) => r,
+        other => panic!("clean run failed: {:?}", other.error()),
+    });
+    // Bias the 13th W-apply — past the iteration-8 snapshot, well
+    // before completion. The magnitude is far above the checksum
+    // tolerance but would bend the spectrum only quietly: without the
+    // verifier this run would "succeed" with wrong eigenvalues.
+    let plan = FaultPlan::new().arm("fastsum.apply", 12, FaultAction::Bias(25.0));
+    let ((result, nchecks), report) = fault::with_plan(plan, || {
+        let _armed = verify::scoped(verifier);
+        let r = c.submit(Job::Eig(opts)).wait();
+        (r, verify::checks_run())
+    });
+    assert!(report.fired.iter().any(|(s, _)| s == "fastsum.apply"), "bias must fire");
+    assert!(nchecks > 0, "armed verifier must actually run checks");
+    let recovered = match result {
+        JobResult::Eig(r) => r,
+        other => panic!("ladder did not recover: {:?}", other.error()),
+    };
+    assert_eq!(clean.eigenvalues.len(), recovered.eigenvalues.len());
+    for (a, b) in clean.eigenvalues.iter().zip(&recovered.eigenvalues) {
+        assert!((a - b).abs() <= 1e-10, "recovered spectrum diverged: {a} vs {b}");
+    }
+    let m = c.metrics();
+    assert!(m.checksum_failures.load(Ordering::Relaxed) >= 1, "trip must be counted");
+    assert_eq!(m.jobs_resumed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.ladder_rungs.load(Ordering::Relaxed), 1);
+    let snap = c.flight().snapshot();
+    let last = snap.last().unwrap();
+    assert!(last.ok, "recovered job must record ok");
+    assert_eq!(last.attempt, 1, "rung 1 = resume on the same SIMD level");
+    c.shutdown();
+}
+
+/// Verification is observer-only: arming a verifier over clean CG and
+/// Lanczos solves changes not a single output bit relative to the
+/// verification-off runs (which take the one-relaxed-load fast path,
+/// exactly as before this layer existed) — while provably running
+/// checks.
+#[test]
+fn armed_verification_is_observer_only_bitwise() {
+    let (points, n) = spiral_points(150, 53);
+    let a = fault::with_disarmed(|| {
+        NormalizedAdjacency::new(
+            &points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup1(),
+        )
+        .unwrap()
+    });
+    let verifier = fault::with_disarmed(|| a.verifier(59));
+    let mut rng = Rng::seed_from(61);
+    let b = rng.normal_vec(n);
+    let (base_cg, base_eig) = fault::with_disarmed(|| {
+        let cg = cg_solve(&a, &b, &CgOptions { tol: 1e-8, ..Default::default() });
+        let eig = lanczos_eigs(&a, LanczosOptions { k: 4, ..Default::default() });
+        (cg.x, eig.eigenvalues)
+    });
+    let (got_cg, got_eig, nchecks) = verify::with_verifier(verifier, || {
+        let cg = cg_solve(&a, &b, &CgOptions { tol: 1e-8, ..Default::default() });
+        let eig = lanczos_eigs(&a, LanczosOptions { k: 4, ..Default::default() });
+        (cg.x, eig.eigenvalues, verify::checks_run())
+    });
+    assert!(nchecks > 0, "armed verifier must actually run checks");
+    for (x, y) in base_cg.iter().zip(&got_cg) {
+        assert_eq!(x.to_bits(), y.to_bits(), "CG bits changed under verification");
+    }
+    assert_eq!(base_eig.len(), got_eig.len());
+    for (x, y) in base_eig.iter().zip(&got_eig) {
+        assert_eq!(x.to_bits(), y.to_bits(), "Lanczos bits changed under verification");
     }
 }
 

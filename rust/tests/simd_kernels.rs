@@ -11,11 +11,12 @@
 //!   reproducible per level (including across rayon thread counts
 //!   {1, 4}) and agree with the scalar oracle to ≤ 1e-12 relative.
 //!
-//! This is the ONLY test binary that calls [`simd::with_override`]:
-//! the override is process-global, so every level-sensitive test here
-//! routes through it and the internal lock serialises them. Sizes
-//! straddle the lane widths (4/8), [`ROW_BLOCK`] (2048) and the
-//! parallel threshold (1 << 14).
+//! The override is process-global, so every level-sensitive test here
+//! routes through [`simd::with_override`] and the internal lock
+//! serialises them (the only other direct caller is the ABFT
+//! clean-pass sweep in `tests/robustness.rs`). Sizes straddle the
+//! lane widths (4/8), [`ROW_BLOCK`] (2048) and the parallel threshold
+//! (1 << 14).
 
 use nfft_krylov::data::rng::Rng;
 use nfft_krylov::fft::{Complex, FftPlan, RealFftPlan};

@@ -92,6 +92,7 @@ fn flight_recorder_wraps_and_tolerates_concurrent_writers() {
             ortho_secs: 0.0,
             bytes: 8,
             ok: true,
+            attempt: 0,
             err: None,
         });
     });
@@ -119,6 +120,7 @@ fn flight_recorder_wraps_and_tolerates_concurrent_writers() {
             ortho_secs: 0.0,
             bytes: 0,
             ok: true,
+            attempt: 0,
             err: None,
         });
     }

@@ -17,10 +17,11 @@ Two formats (see docs/OBSERVABILITY.md):
   numbers, histogram bucket counts are cumulative (monotone
   non-decreasing in ``le`` order), the ``+Inf`` bucket is present and
   equals ``<name>_count``, and ``_sum`` is non-negative. Also requires
-  the robustness counter set (rejected/timeout/panicked/retried; see
-  docs/ROBUSTNESS.md) to be announced and sampled — a regression that
-  drops one of them from the export must fail CI even when its value
-  is zero.
+  the robustness counter set (rejected/timeout/panicked/retried plus
+  the silent-corruption defence counters checksum-failures/resumed/
+  ladder-rung; see docs/ROBUSTNESS.md) to be announced and sampled —
+  a regression that drops one of them from the export must fail CI
+  even when its value is zero.
 
 Usage:
     python3 scripts/validate_telemetry.py --trace TRACE_matvec.json \
@@ -42,6 +43,9 @@ REQUIRED_COUNTERS = (
     "nfft_jobs_timeout_total",
     "nfft_jobs_panicked_total",
     "nfft_jobs_retried_total",
+    "nfft_checksum_failures_total",
+    "nfft_jobs_resumed_total",
+    "nfft_ladder_rung_total",
 )
 
 
