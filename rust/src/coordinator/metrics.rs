@@ -39,6 +39,12 @@ pub struct Metrics {
     /// Total recovery-ladder rungs taken across all jobs (each retry
     /// attempt beyond the first counts one rung).
     pub ladder_rungs: AtomicU64,
+    /// Dispatcher worker processes declared lost (crash, hang past
+    /// deadline, or broken framing — see `crate::dispatch`).
+    pub workers_lost: AtomicU64,
+    /// Dispatcher worker processes respawned after a loss (each
+    /// respawn follows the seeded-jitter exponential backoff).
+    pub workers_respawned: AtomicU64,
     pub matvecs: AtomicU64,
     pub matvec_batches: AtomicU64,
     /// Total vectors flushed through the batcher.
@@ -137,6 +143,11 @@ impl Metrics {
         );
         o.insert("jobs_resumed".to_string(), num(self.jobs_resumed.load(Ordering::Relaxed)));
         o.insert("ladder_rungs".to_string(), num(self.ladder_rungs.load(Ordering::Relaxed)));
+        o.insert("workers_lost".to_string(), num(self.workers_lost.load(Ordering::Relaxed)));
+        o.insert(
+            "workers_respawned".to_string(),
+            num(self.workers_respawned.load(Ordering::Relaxed)),
+        );
         o.insert("matvecs".to_string(), num(self.matvecs.load(Ordering::Relaxed)));
         o.insert("matvec_batches".to_string(), num(self.matvec_batches.load(Ordering::Relaxed)));
         o.insert("batched_vectors".to_string(), num(self.batched_vectors.load(Ordering::Relaxed)));
@@ -231,6 +242,16 @@ impl Metrics {
             self.ladder_rungs.load(Ordering::Relaxed),
         )
         .counter(
+            "nfft_workers_lost_total",
+            "Dispatcher worker processes declared lost (crash/hang/framing).",
+            self.workers_lost.load(Ordering::Relaxed),
+        )
+        .counter(
+            "nfft_workers_respawned_total",
+            "Dispatcher worker processes respawned after a loss.",
+            self.workers_respawned.load(Ordering::Relaxed),
+        )
+        .counter(
             "nfft_matvecs_total",
             "Matrix-vector products executed.",
             self.matvecs.load(Ordering::Relaxed),
@@ -270,7 +291,7 @@ impl Metrics {
             }
         };
         format!(
-            "jobs: {} submitted, {} completed, {} failed, {} rejected, {} timeout, {} panicked, {} retried, {} resumed | {} checksum trips, {} ladder rungs | matvecs: {} ({} batches, {} vectors) | op state: {} B | latency: mean {:.0}us p50 <={} p99 <={}",
+            "jobs: {} submitted, {} completed, {} failed, {} rejected, {} timeout, {} panicked, {} retried, {} resumed | {} checksum trips, {} ladder rungs | workers: {} lost, {} respawned | matvecs: {} ({} batches, {} vectors) | op state: {} B | latency: mean {:.0}us p50 <={} p99 <={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
@@ -281,6 +302,8 @@ impl Metrics {
             self.jobs_resumed.load(Ordering::Relaxed),
             self.checksum_failures.load(Ordering::Relaxed),
             self.ladder_rungs.load(Ordering::Relaxed),
+            self.workers_lost.load(Ordering::Relaxed),
+            self.workers_respawned.load(Ordering::Relaxed),
             self.matvecs.load(Ordering::Relaxed),
             self.matvec_batches.load(Ordering::Relaxed),
             self.batched_vectors.load(Ordering::Relaxed),
@@ -359,6 +382,8 @@ mod tests {
         m.checksum_failures.fetch_add(5, Ordering::Relaxed);
         m.jobs_resumed.fetch_add(6, Ordering::Relaxed);
         m.ladder_rungs.fetch_add(7, Ordering::Relaxed);
+        m.workers_lost.fetch_add(8, Ordering::Relaxed);
+        m.workers_respawned.fetch_add(9, Ordering::Relaxed);
         let j = m.metrics_json();
         assert_eq!(j.get("jobs_rejected").and_then(Json::as_f64), Some(2.0));
         assert_eq!(j.get("jobs_timeout").and_then(Json::as_f64), Some(1.0));
@@ -367,6 +392,8 @@ mod tests {
         assert_eq!(j.get("checksum_failures").and_then(Json::as_f64), Some(5.0));
         assert_eq!(j.get("jobs_resumed").and_then(Json::as_f64), Some(6.0));
         assert_eq!(j.get("ladder_rungs").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get("workers_lost").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(j.get("workers_respawned").and_then(Json::as_f64), Some(9.0));
         let text = m.prometheus_text();
         assert!(text.contains("# TYPE nfft_jobs_rejected_total counter"));
         assert!(text.contains("nfft_jobs_rejected_total 2\n"));
@@ -377,6 +404,10 @@ mod tests {
         assert!(text.contains("nfft_checksum_failures_total 5\n"));
         assert!(text.contains("nfft_jobs_resumed_total 6\n"));
         assert!(text.contains("nfft_ladder_rung_total 7\n"));
+        assert!(text.contains("# TYPE nfft_workers_lost_total counter"));
+        assert!(text.contains("nfft_workers_lost_total 8\n"));
+        assert!(text.contains("# TYPE nfft_workers_respawned_total counter"));
+        assert!(text.contains("nfft_workers_respawned_total 9\n"));
         let r = m.report();
         assert!(r.contains("2 rejected"));
         assert!(r.contains("1 timeout"));
@@ -385,6 +416,8 @@ mod tests {
         assert!(r.contains("6 resumed"));
         assert!(r.contains("5 checksum trips"));
         assert!(r.contains("7 ladder rungs"));
+        assert!(r.contains("8 lost"));
+        assert!(r.contains("9 respawned"));
     }
 
     #[test]

@@ -19,4 +19,4 @@ pub mod service;
 pub use engine::{build_sharded_normalized, EngineKind, EngineRegistry, OperatorSpec};
 pub use jobs::{Job, JobResult};
 pub use metrics::{Metrics, BUCKETS_US};
-pub use service::{Coordinator, JobHandle};
+pub use service::{Backend, Coordinator, JobHandle};

@@ -24,11 +24,17 @@
 //!   final attempt index is flight-recorded;
 //! * [`Coordinator::submit_with_deadline`] threads a [`CancelToken`]
 //!   through the solver loops, turning budget overruns into typed
-//!   [`EngineError::Timeout`] results.
+//!   [`EngineError::Timeout`] results;
+//! * an attached [`crate::dispatch::DispatchedOperator`] serves jobs
+//!   submitted with [`Backend::Dispatched`]: applies fan out over its
+//!   worker pool, bitwise identical to the in-process path (see
+//!   `docs/DISTRIBUTED.md`), and its counters and pool stats join this
+//!   coordinator's metrics registry and [`Coordinator::report`].
 
 use crate::coordinator::engine::{build_sharded_normalized, OperatorSpec};
 use crate::coordinator::jobs::{Job, JobResult};
 use crate::coordinator::metrics::Metrics;
+use crate::dispatch::DispatchedOperator;
 use crate::graph::laplacian::ShiftedOperator;
 use crate::graph::operator::LinearOperator;
 use crate::krylov::cg::{cg_resume, cg_solve_cancellable, cg_solve_checkpointed, CgResult};
@@ -64,8 +70,33 @@ const CHECKPOINT_EVERY: usize = 8;
 /// (n applies + an O(n³) Jacobi sweep — only sensible for small n).
 const DENSE_ORACLE_MAX_DIM: usize = 512;
 
+/// Which operator a job executes against.
+///
+/// `submit` / `submit_with_deadline` / `submit_with_token` default to
+/// [`Backend::InProcess`]. The dispatched backend routes the job's
+/// applies through an attached [`DispatchedOperator`] — same math,
+/// same bits (the dispatcher's contract), with the adjoint spread
+/// fanned out over worker replicas. See
+/// [`Coordinator::submit_with_backend`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The coordinator's resident operator.
+    InProcess,
+    /// The multi-process shard dispatcher attached via
+    /// [`Coordinator::attach_dispatcher`].
+    Dispatched,
+}
+
 enum Envelope {
-    Work { id: u64, job: Job, token: CancelToken, reply: Sender<(u64, JobResult)> },
+    Work {
+        id: u64,
+        job: Job,
+        token: CancelToken,
+        reply: Sender<(u64, JobResult)>,
+        /// Per-job operator override (the dispatched backend); `None`
+        /// runs against the coordinator's resident operator.
+        over: Option<Arc<dyn LinearOperator>>,
+    },
     Shutdown,
 }
 
@@ -75,6 +106,7 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     flight: Arc<FlightRecorder>,
+    dispatched: Option<Arc<DispatchedOperator>>,
     next_id: u64,
 }
 
@@ -132,7 +164,11 @@ impl Coordinator {
                     guard.recv()
                 };
                 match msg {
-                    Ok(Envelope::Work { id, job, token, reply }) => {
+                    Ok(Envelope::Work { id, job, token, reply, over }) => {
+                        // The dispatched backend swaps the operator per
+                        // job; ladder, metrics and flight recorder are
+                        // shared across backends.
+                        let op = over.unwrap_or_else(|| op.clone());
                         let t = std::time::Instant::now();
                         let (result, attempt) = {
                             let _span = obs::span_id("job.execute", job.kind(), id);
@@ -168,7 +204,7 @@ impl Coordinator {
                 }
             }));
         }
-        Coordinator { op, tx, workers: handles, metrics, flight, next_id: 0 }
+        Coordinator { op, tx, workers: handles, metrics, flight, dispatched: None, next_id: 0 }
     }
 
     /// Coordinator whose operator executes sharded: the point domain
@@ -204,6 +240,9 @@ impl Coordinator {
         o.insert("workers".to_string(), Json::Num(self.workers.len() as f64));
         o.insert("metrics".to_string(), self.metrics.metrics_json());
         o.insert("flight".to_string(), self.flight.to_json());
+        if let Some(d) = &self.dispatched {
+            o.insert("dispatch".to_string(), d.stats_json());
+        }
         Json::Obj(o)
     }
 
@@ -216,9 +255,12 @@ impl Coordinator {
         self.submit_with_token(job, CancelToken::never())
     }
 
-    /// Submit a job with a wall-clock budget: if the deadline passes
-    /// before the job finishes, its solver loop stops at the next
-    /// iteration boundary and the handle yields
+    /// Submit a job with an execution budget measured on the
+    /// **monotonic clock** ([`std::time::Instant`] inside the
+    /// [`CancelToken`] — wall-clock jumps from NTP steps or
+    /// suspend/resume can neither fire the deadline early nor stall
+    /// it): if the budget elapses before the job finishes, its solver
+    /// loop stops at the next iteration boundary and the handle yields
     /// `JobResult::Failed(EngineError::Timeout)`.
     pub fn submit_with_deadline(&mut self, job: Job, budget: Duration) -> JobHandle {
         self.submit_with_token(job, CancelToken::with_deadline(budget))
@@ -227,6 +269,69 @@ impl Coordinator {
     /// Submit a job carrying a caller-owned [`CancelToken`]; keep a
     /// clone to cancel the job from outside.
     pub fn submit_with_token(&mut self, job: Job, token: CancelToken) -> JobHandle {
+        self.submit_inner(job, token, None)
+    }
+
+    /// Attach a multi-process shard dispatcher so jobs submitted with
+    /// [`Backend::Dispatched`] fan their applies out over its worker
+    /// pool. The dispatcher's failure counters
+    /// (`nfft_workers_lost_total`, `nfft_workers_respawned_total`,
+    /// checksum trips) are bound into this coordinator's metrics
+    /// registry, and its pool stats join [`Coordinator::report`] under
+    /// `"dispatch"`. The dispatcher must match the resident operator's
+    /// dimension; a mismatch is a typed rejection.
+    pub fn attach_dispatcher(
+        &mut self,
+        d: Arc<DispatchedOperator>,
+    ) -> Result<(), EngineError> {
+        if d.dim() != self.op.dim() {
+            return Err(EngineError::invalid(format!(
+                "dispatcher dimension {} != coordinator operator dimension {}",
+                d.dim(),
+                self.op.dim()
+            )));
+        }
+        d.bind_metrics(self.metrics.clone());
+        self.dispatched = Some(d);
+        Ok(())
+    }
+
+    /// Submit a job against an explicit [`Backend`]. Requesting
+    /// [`Backend::Dispatched`] without [`Coordinator::attach_dispatcher`]
+    /// having been called is an admission rejection (typed
+    /// [`EngineError::InvalidInput`]), not a panic.
+    pub fn submit_with_backend(&mut self, job: Job, backend: Backend) -> JobHandle {
+        let over: Option<Arc<dyn LinearOperator>> = match backend {
+            Backend::InProcess => None,
+            Backend::Dispatched => match &self.dispatched {
+                Some(d) => {
+                    let op: Arc<dyn LinearOperator> = d.clone();
+                    Some(op)
+                }
+                None => {
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                    return self.reject(
+                        id,
+                        &job,
+                        EngineError::invalid(
+                            "dispatched backend requested but no dispatcher is \
+                             attached (call attach_dispatcher first)",
+                        ),
+                    );
+                }
+            },
+        };
+        self.submit_inner(job, CancelToken::never(), over)
+    }
+
+    fn submit_inner(
+        &mut self,
+        job: Job,
+        token: CancelToken,
+        over: Option<Arc<dyn LinearOperator>>,
+    ) -> JobHandle {
         let id = self.next_id;
         self.next_id += 1;
         let _span = obs::span_id("job.submit", job.kind(), id);
@@ -235,30 +340,36 @@ impl Coordinator {
         // worker. The rejection is a normal typed result — counted,
         // flight-recorded, delivered through the same handle.
         if let Err(e) = validate_job(&job, self.op.dim()) {
-            self.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
-            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-            self.flight.record(&FlightRecord {
-                id,
-                kind: job.kind(),
-                columns: job_columns(&job, self.op.dim()),
-                total_secs: 0.0,
-                matvec_secs: 0.0,
-                ortho_secs: 0.0,
-                bytes: 0,
-                ok: false,
-                attempt: 0,
-                err: Some(e.class()),
-            });
-            return JobHandle::failed(id, e);
+            return self.reject(id, &job, e);
         }
         let (reply, rx) = channel();
-        if self.tx.send(Envelope::Work { id, job, token, reply }).is_err() {
+        if self.tx.send(Envelope::Work { id, job, token, reply, over }).is_err() {
             return JobHandle::failed(
                 id,
                 EngineError::Cancelled { reason: "worker pool is gone".into() },
             );
         }
         JobHandle { id, rx }
+    }
+
+    /// Typed admission rejection: counted, flight-recorded, and
+    /// delivered through a normal handle.
+    fn reject(&self, id: u64, job: &Job, e: EngineError) -> JobHandle {
+        self.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+        self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        self.flight.record(&FlightRecord {
+            id,
+            kind: job.kind(),
+            columns: job_columns(job, self.op.dim()),
+            total_secs: 0.0,
+            matvec_secs: 0.0,
+            ortho_secs: 0.0,
+            bytes: 0,
+            ok: false,
+            attempt: 0,
+            err: Some(e.class()),
+        });
+        JobHandle::failed(id, e)
     }
 
     /// Graceful shutdown: drains queued work before stopping (workers
@@ -1114,6 +1225,96 @@ mod tests {
             c.report().get("flight").unwrap().as_arr().map(|a| a.len()),
             Some(1)
         );
+        c.shutdown();
+    }
+
+    /// A dispatcher over `per_class * 5` spiral points with a thread
+    /// worker pool, for the backend tests.
+    fn spiral_dispatcher(per_class: usize, workers: usize) -> Arc<DispatchedOperator> {
+        use crate::dispatch::{DispatchConfig, DispatchedOperator};
+        use crate::fastsum::FastsumOperator;
+        let mut rng = crate::data::rng::Rng::seed_from(11);
+        let ds = crate::data::spiral::generate(
+            crate::data::spiral::SpiralParams { per_class, ..Default::default() },
+            &mut rng,
+        );
+        let n = ds.points.len() / 3;
+        let parent = FastsumOperator::new(
+            &ds.points,
+            3,
+            Kernel::Gaussian { sigma: 3.5 },
+            FastsumParams::setup1(),
+        );
+        Arc::new(
+            DispatchedOperator::from_fastsum_normalized(
+                &parent,
+                crate::shard::ShardSpec::strided(n, 3),
+                DispatchConfig::threads(workers),
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn dispatched_backend_matches_in_process_bitwise_through_the_coordinator() {
+        use crate::util::json::Json;
+        let d = spiral_dispatcher(17, 2);
+        // The coordinator's resident operator IS the dispatcher's
+        // in-process inner — the two backends share plan and shard
+        // state, so their results must agree to the bit.
+        let op: Arc<dyn LinearOperator> = d.inner().clone();
+        let n = op.dim();
+        let mut c = Coordinator::new(op, 1);
+        c.attach_dispatcher(d.clone()).unwrap();
+        let mut rng = crate::data::rng::Rng::seed_from(12);
+        let x = rng.normal_vec(n);
+        let local = match c
+            .submit_with_backend(Job::Matvec { x: x.clone() }, Backend::InProcess)
+            .wait()
+        {
+            JobResult::Matvec(y) => y,
+            other => panic!("in-process backend failed: {:?}", other.error()),
+        };
+        let dispatched = match c
+            .submit_with_backend(Job::Matvec { x: x.clone() }, Backend::Dispatched)
+            .wait()
+        {
+            JobResult::Matvec(y) => y,
+            other => panic!("dispatched backend failed: {:?}", other.error()),
+        };
+        for (i, (a, b)) in local.iter().zip(&dispatched).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "entry {i}: {a} vs {b}");
+        }
+        // The attached pool's stats join the service report.
+        let rep = c.report();
+        let dispatch = rep.get("dispatch").expect("report must carry dispatch stats");
+        assert_eq!(dispatch.get("workers").and_then(Json::as_usize), Some(2));
+        assert_eq!(dispatch.get("applies").and_then(Json::as_usize), Some(1));
+        assert_eq!(c.metrics().workers_lost.load(std::sync::atomic::Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn dispatched_backend_without_dispatcher_is_rejected_typed() {
+        let op = spiral_operator(50);
+        let n = op.dim();
+        let mut c = Coordinator::new(op, 1);
+        let h = c.submit_with_backend(Job::Matvec { x: vec![1.0; n] }, Backend::Dispatched);
+        assert_eq!(h.wait().error().map(|e| e.class()), Some("invalid-input"));
+        let m = c.metrics();
+        assert_eq!(m.jobs_rejected.load(std::sync::atomic::Ordering::Relaxed), 1);
+        let snap = c.flight().snapshot();
+        assert_eq!(snap.last().map(|r| r.err), Some(Some("invalid-input")));
+        // Attaching a dimension-mismatched dispatcher is equally typed.
+        let small = spiral_dispatcher(7, 1);
+        assert_ne!(small.inner().dim(), n);
+        let err = c.attach_dispatcher(small).unwrap_err();
+        assert_eq!(err.class(), "invalid-input");
+        // No dispatch key without a successful attach.
+        assert!(c.report().get("dispatch").is_none());
+        // The pool still serves the in-process path.
+        let h = c.submit_with_backend(Job::Matvec { x: vec![1.0; n] }, Backend::InProcess);
+        assert!(matches!(h.wait(), JobResult::Matvec(_)));
         c.shutdown();
     }
 }

@@ -1,0 +1,361 @@
+//! Length-prefixed JSON frame transport for the shard dispatcher.
+//!
+//! Every message between the parent and a worker is one *frame*: a
+//! 12-byte header (4-byte magic + 8-byte big-endian payload length)
+//! followed by a UTF-8 JSON payload built on [`crate::util::json`].
+//! The header makes the stream self-delimiting over any byte pipe
+//! (child stdin/stdout, in-process channels); the magic and the
+//! [`MAX_FRAME_BYTES`] cap turn a desynchronised or hostile stream
+//! into a typed [`FrameError`] instead of an unbounded allocation or
+//! a garbage parse.
+//!
+//! # Bit-exact float payloads
+//!
+//! The dispatcher's determinism contract requires the f64 payloads
+//! (shard-local inputs, boxed subgrids) to cross the wire *bitwise*,
+//! including negative zero, subnormals, and any NaN payload a chaos
+//! plan injects. JSON number formatting cannot guarantee that, so
+//! float arrays travel as packed hex: 16 lowercase hex characters per
+//! value, the `{:016x}` rendering of [`f64::to_bits`]
+//! ([`pack_f64s`] / [`unpack_f64s`]). `u64` checksums use the same
+//! 16-char scalar encoding ([`pack_u64`] / [`unpack_u64`]) because
+//! [`crate::util::json::Json::Num`] is an f64 and would round 64-bit
+//! values.
+//!
+//! # Corruption defense
+//!
+//! [`checksum`] is FNV-1a over the bit patterns of an f64 slice.
+//! Senders stamp every data-bearing frame; receivers recompute after
+//! decode, so a flipped bit anywhere between the two (`fault::corrupt`
+//! sites `dispatch.send` / `dispatch.recv` simulate exactly this) is
+//! detected before the value can reach the merge.
+
+use crate::robust::EngineError;
+use crate::util::json::{self, Json};
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+
+/// Frame header magic: "NFKF" (NFft Krylov Frame).
+pub const MAGIC: [u8; 4] = *b"NFKF";
+
+/// Hard cap on one frame's JSON payload. Generous for real subgrids
+/// (a 256³ grid is ~1 GiB of hex, sent boxed and per shard, so real
+/// frames sit far below this), tight enough that a corrupted length
+/// header cannot drive an unbounded allocation.
+pub const MAX_FRAME_BYTES: u64 = 1 << 30;
+
+/// Typed defect observed at the frame layer. Transport-agnostic; the
+/// pool maps it onto [`EngineError`] with the worker id and stage via
+/// [`FrameError::into_engine`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameError {
+    /// The stream ended or the io layer failed — the peer is gone.
+    Closed(String),
+    /// The 4 header bytes were not [`MAGIC`]: the stream lost frame
+    /// alignment (or the peer speaks something else entirely).
+    BadMagic([u8; 4]),
+    /// Declared or actual payload length exceeds [`MAX_FRAME_BYTES`].
+    Oversized(u64),
+    /// The payload was not valid UTF-8 JSON.
+    BadJson(String),
+    /// The JSON parsed but a field was missing, mistyped, or a hex
+    /// blob was malformed.
+    BadPayload(String),
+    /// The frame announced a protocol version this build does not
+    /// speak (see [`crate::dispatch::proto::PROTOCOL_VERSION`]).
+    Version(u64),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed(why) => write!(f, "stream closed: {why}"),
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::Oversized(n) => {
+                write!(f, "frame of {n} bytes exceeds the {MAX_FRAME_BYTES}-byte cap")
+            }
+            FrameError::BadJson(why) => write!(f, "frame payload is not JSON: {why}"),
+            FrameError::BadPayload(why) => write!(f, "malformed frame payload: {why}"),
+            FrameError::Version(v) => write!(f, "unknown frame protocol version {v}"),
+        }
+    }
+}
+
+impl FrameError {
+    /// Lift a frame defect into the engine's error taxonomy for a
+    /// conversation with worker `worker` during `stage`: a closed
+    /// stream is a lost worker; an unknown protocol version is an
+    /// input error (a newer peer must be rejected, not guessed at);
+    /// everything else is data that arrived but cannot be trusted —
+    /// silent corruption at the receiving site.
+    pub fn into_engine(self, worker: usize, stage: &'static str) -> EngineError {
+        match self {
+            FrameError::Closed(reason) => EngineError::WorkerLost { worker, stage, reason },
+            FrameError::Version(v) => EngineError::invalid(format!(
+                "dispatch frame from worker {worker} speaks unknown protocol version {v}"
+            )),
+            other => {
+                EngineError::SilentCorruption { site: stage, what: other.to_string() }
+            }
+        }
+    }
+}
+
+fn io_err(e: std::io::Error) -> FrameError {
+    FrameError::Closed(e.to_string())
+}
+
+/// Write one frame: header + compact JSON payload, flushed so the
+/// peer never waits on a buffered half-frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &Json) -> Result<(), FrameError> {
+    let text = payload.to_string();
+    let bytes = text.as_bytes();
+    if bytes.len() as u64 > MAX_FRAME_BYTES {
+        return Err(FrameError::Oversized(bytes.len() as u64));
+    }
+    let mut header = [0u8; 12];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4..].copy_from_slice(&(bytes.len() as u64).to_be_bytes());
+    w.write_all(&header).map_err(io_err)?;
+    w.write_all(bytes).map_err(io_err)?;
+    w.flush().map_err(io_err)?;
+    Ok(())
+}
+
+/// Read one frame. Blocks until a full frame arrives, the stream
+/// closes ([`FrameError::Closed`]), or the header is rejected.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Json, FrameError> {
+    let mut header = [0u8; 12];
+    r.read_exact(&mut header).map_err(io_err)?;
+    if header[..4] != MAGIC {
+        return Err(FrameError::BadMagic([header[0], header[1], header[2], header[3]]));
+    }
+    let len = u64::from_be_bytes(header[4..12].try_into().expect("8-byte slice"));
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf).map_err(io_err)?;
+    let text =
+        String::from_utf8(buf).map_err(|e| FrameError::BadJson(e.to_string()))?;
+    json::parse(&text).map_err(|e| FrameError::BadJson(e.to_string()))
+}
+
+/// Pack an f64 slice as lowercase hex, 16 characters per value — the
+/// bit-exact wire form of every float payload.
+pub fn pack_f64s(v: &[f64]) -> String {
+    let mut s = String::with_capacity(v.len() * 16);
+    for x in v {
+        let _ = write!(s, "{:016x}", x.to_bits());
+    }
+    s
+}
+
+/// Inverse of [`pack_f64s`]; every bit pattern round-trips, including
+/// NaNs with payloads.
+pub fn unpack_f64s(s: &str) -> Result<Vec<f64>, FrameError> {
+    let b = s.as_bytes();
+    if b.len() % 16 != 0 {
+        return Err(FrameError::BadPayload(format!(
+            "f64 hex blob of {} chars is not a multiple of 16",
+            b.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(b.len() / 16);
+    for chunk in b.chunks_exact(16) {
+        let txt = std::str::from_utf8(chunk)
+            .map_err(|e| FrameError::BadPayload(e.to_string()))?;
+        let bits = u64::from_str_radix(txt, 16).map_err(|e| {
+            FrameError::BadPayload(format!("bad f64 hex chunk {txt:?}: {e}"))
+        })?;
+        out.push(f64::from_bits(bits));
+    }
+    Ok(out)
+}
+
+/// 16-char hex encoding of a `u64` (checksums must not ride the lossy
+/// f64-backed JSON number).
+pub fn pack_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Inverse of [`pack_u64`].
+pub fn unpack_u64(s: &str) -> Result<u64, FrameError> {
+    if s.len() != 16 {
+        return Err(FrameError::BadPayload(format!(
+            "u64 hex value has {} chars, want 16",
+            s.len()
+        )));
+    }
+    u64::from_str_radix(s, 16)
+        .map_err(|e| FrameError::BadPayload(format!("bad u64 hex {s:?}: {e}")))
+}
+
+/// FNV-1a over the bit patterns of an f64 slice — the per-frame
+/// payload checksum. Deterministic and bit-sensitive: two slices hash
+/// equal iff they are bitwise equal (up to hash collision), so `-0.0`
+/// vs `0.0` and distinct NaNs all count as different payloads.
+pub fn checksum(v: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in v {
+        for b in x.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    fn obj(kvs: &[(&str, Json)]) -> Json {
+        let mut o = BTreeMap::new();
+        for (k, v) in kvs {
+            o.insert(k.to_string(), v.clone());
+        }
+        Json::Obj(o)
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = obj(&[("type", Json::Str("ping".into())), ("seq", Json::Num(7.0))]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        let mut rd = &buf[..];
+        let back = read_frame(&mut rd).unwrap();
+        assert_eq!(back, payload);
+        // Stream exhausted: the next read reports Closed, not garbage.
+        assert!(matches!(read_frame(&mut rd), Err(FrameError::Closed(_))));
+    }
+
+    #[test]
+    fn multiple_frames_stay_aligned() {
+        let a = obj(&[("seq", Json::Num(1.0))]);
+        let b = obj(&[("seq", Json::Num(2.0))]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut rd = &buf[..];
+        assert_eq!(read_frame(&mut rd).unwrap(), a);
+        assert_eq!(read_frame(&mut rd).unwrap(), b);
+    }
+
+    #[test]
+    fn truncated_frame_is_typed_not_a_panic() {
+        let payload = obj(&[("type", Json::Str("apply".into()))]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        for cut in [0, 3, 11, 12, buf.len() - 1] {
+            let mut rd = &buf[..cut];
+            assert!(
+                matches!(read_frame(&mut rd), Err(FrameError::Closed(_))),
+                "cut at {cut} must read as a closed stream"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_oversized_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &obj(&[("a", Json::Num(1.0))])).unwrap();
+        let mut evil = buf.clone();
+        evil[0] = b'X';
+        assert!(matches!(read_frame(&mut &evil[..]), Err(FrameError::BadMagic(_))));
+        // A length header past the cap must be refused before any
+        // allocation of that size.
+        let mut evil = buf.clone();
+        evil[4..12].copy_from_slice(&(MAX_FRAME_BYTES + 1).to_be_bytes());
+        assert_eq!(
+            read_frame(&mut &evil[..]),
+            Err(FrameError::Oversized(MAX_FRAME_BYTES + 1))
+        );
+        // Corrupt payload bytes: parses as neither UTF-8 JSON nor silence.
+        let mut evil = buf;
+        let n = evil.len();
+        evil[n - 2] = 0xff;
+        assert!(matches!(read_frame(&mut &evil[..]), Err(FrameError::BadJson(_))));
+    }
+
+    #[test]
+    fn f64_hex_roundtrips_every_bit_pattern() {
+        let weird = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 4.0, // subnormal
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::from_bits(0x7ff8_dead_beef_0001), // NaN with payload
+            std::f64::consts::PI,
+        ];
+        let hex = pack_f64s(&weird);
+        assert_eq!(hex.len(), weird.len() * 16);
+        let back = unpack_f64s(&hex).unwrap();
+        assert_eq!(back.len(), weird.len());
+        for (a, b) in weird.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} must round-trip bitwise");
+        }
+    }
+
+    #[test]
+    fn f64_hex_property_roundtrip() {
+        crate::util::proptest::check(
+            crate::util::proptest::Config { cases: 64, seed: 41 },
+            "packed f64 hex is a bitwise bijection",
+            |rng| {
+                let n = rng.below(40);
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    // Uniform bit patterns cover NaNs/infs/subnormals.
+                    v.push(f64::from_bits(rng.next_u64()));
+                }
+                let back = unpack_f64s(&pack_f64s(&v)).map_err(|e| e.to_string())?;
+                crate::prop_assert!(
+                    v.iter().map(|x| x.to_bits()).eq(back.iter().map(|x| x.to_bits())),
+                    "bit patterns must survive the wire"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn malformed_hex_is_typed() {
+        assert!(matches!(unpack_f64s("abc"), Err(FrameError::BadPayload(_))));
+        assert!(matches!(unpack_f64s("zzzzzzzzzzzzzzzz"), Err(FrameError::BadPayload(_))));
+        assert!(matches!(unpack_u64("12"), Err(FrameError::BadPayload(_))));
+        assert!(matches!(unpack_u64("zzzzzzzzzzzzzzzz"), Err(FrameError::BadPayload(_))));
+        assert_eq!(unpack_u64(&pack_u64(u64::MAX)).unwrap(), u64::MAX);
+        assert_eq!(unpack_u64(&pack_u64(0)).unwrap(), 0);
+    }
+
+    #[test]
+    fn checksum_is_bit_sensitive() {
+        let a = vec![1.0, 2.0, 3.0];
+        assert_eq!(checksum(&a), checksum(&a.clone()));
+        let mut b = a.clone();
+        b[1] = 2.0 + f64::EPSILON;
+        assert_ne!(checksum(&a), checksum(&b));
+        assert_ne!(checksum(&[0.0]), checksum(&[-0.0]), "sign bit must count");
+        assert_ne!(checksum(&a), checksum(&a[..2]), "length must count");
+    }
+
+    #[test]
+    fn frame_errors_lift_into_engine_taxonomy() {
+        let e = FrameError::Closed("eof".into()).into_engine(3, "dispatch.recv");
+        assert_eq!(e.class(), "worker-lost");
+        assert!(e.to_string().contains("worker 3"), "{e}");
+        let e = FrameError::BadMagic(*b"XXXX").into_engine(0, "dispatch.recv");
+        assert_eq!(e.class(), "silent-corruption");
+        let e = FrameError::Version(9).into_engine(0, "dispatch.recv");
+        assert_eq!(e.class(), "invalid-input");
+        assert!(e.to_string().contains("version 9"), "{e}");
+    }
+}

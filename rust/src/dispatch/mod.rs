@@ -1,0 +1,49 @@
+//! Multi-process shard dispatcher: fault-tolerant fan-out of the
+//! sharded fastsum apply over worker replicas.
+//!
+//! # Shape
+//!
+//! The parent owns a resident [`crate::shard::ShardedOperator`] and a
+//! pool of workers (real child processes running the same binary in
+//! `worker` mode, or in-process threads for tests and cheap local
+//! use). At startup each worker receives one init frame — plan
+//! scalars, ρ-scaled points, the versioned
+//! [`crate::shard::ShardSpec`] — and deterministically rebuilds the
+//! parent's per-shard spread plans. Per apply and shard, the parent
+//! ships the shard-local scaled input and gets the boxed real subgrid
+//! back; `finish_apply` merges the subgrids in fixed shard order, so
+//! the distributed result is **bitwise identical** to the in-process
+//! one regardless of routing, arrival order, or mid-apply failures.
+//!
+//! # Layers
+//!
+//! * [`frame`] — length-prefixed JSON framing, packed-hex f64 codec
+//!   (exact bit patterns on the wire), FNV checksums, typed
+//!   [`frame::FrameError`] taxonomy.
+//! * [`proto`] — the versioned message set ([`proto::Frame`]); unknown
+//!   protocol versions are rejected typed, mirroring the
+//!   [`crate::shard::SPEC_WIRE_VERSION`] policy.
+//! * [`worker`] — the serve loop ([`worker::run_worker`]) and the
+//!   `worker` subcommand entry ([`worker_main`]).
+//! * [`pool`] — the parent: routing, per-apply deadlines, heartbeats,
+//!   seeded-jitter respawn backoff, checksum verification, straggler
+//!   rebalancing, and the in-process fallback that makes the pool
+//!   impossible to wedge ([`DispatchedOperator`]).
+//!
+//! In the recovery ladder's terms (`docs/ROBUSTNESS.md`), the
+//! dispatcher sits *below* the coordinator rungs: worker loss is
+//! healed inside one apply (reassign or spread locally, bitwise
+//! unchanged), so jobs above only ever see a failure if the parent
+//! process itself is sick — which the existing rungs already cover.
+//! See `docs/DISTRIBUTED.md` for the full protocol and failure
+//! taxonomy.
+
+pub mod frame;
+pub mod pool;
+pub mod proto;
+pub mod worker;
+
+pub use frame::FrameError;
+pub use pool::{DispatchConfig, DispatchedOperator, Transport};
+pub use proto::{Frame, InitMsg, PROTOCOL_VERSION};
+pub use worker::{run_worker, worker_main};

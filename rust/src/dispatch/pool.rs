@@ -1,0 +1,1312 @@
+//! Parent side of the dispatcher: the worker pool, request routing,
+//! retry/backoff, heartbeats, and the always-available in-process
+//! fallback.
+//!
+//! # Where the determinism lives
+//!
+//! [`DispatchedOperator`] farms out only **phase 1** of the sharded
+//! apply (the per-shard adjoint spread); phases 2+3 (fixed-order merge
+//! → one FFT → multiply → gather) run in the resident
+//! [`ShardedOperator`] via `finish_apply`, which sorts subgrids by
+//! shard id before merging. Workers compute bit-identical subgrids
+//! (same plan, same ρ-scaled points, same boxed spread), so *any*
+//! routing — two workers, one survivor after a crash, or the parent
+//! spreading a shard itself — produces the bitwise-identical result.
+//! That is the recovery story in one line: the parent is a permanent,
+//! always-live member of the pool, so losing every worker degrades to
+//! exactly the in-process [`ShardedOperator`] apply.
+//!
+//! # Failure handling
+//!
+//! * **Crash** (process death, broken pipe, torn frame): the reader
+//!   thread surfaces a typed [`FrameError`]; the slot is *lost* —
+//!   killed, generation-bumped so stale frames can never be mistaken
+//!   for fresh ones, counted in `nfft_workers_lost_total` — and its
+//!   in-flight shards are re-sent to survivors or spread locally.
+//! * **Hang** (no reply before the per-apply deadline): same as a
+//!   crash; the deadline is monotonic ([`Instant`]), never wall-clock.
+//! * **Corruption**: every data frame carries an FNV checksum over the
+//!   f64 bit patterns. A reply that fails the check loses the worker
+//!   (its memory is suspect); a *request* the worker detects as
+//!   mangled comes back as an error frame and is simply re-sent — the
+//!   worker proved it is healthy by catching it. Corruption of the
+//!   worker's *compute* is invisible to checksums by design and is
+//!   caught by the end-to-end ABFT check
+//!   ([`crate::robust::verify::check_apply`] at site
+//!   `"dispatch.apply"`).
+//! * **Respawn**: lost slots are respawned under seeded-jitter
+//!   exponential backoff (deterministic given
+//!   [`DispatchConfig::backoff_seed`]), at most
+//!   [`DispatchConfig::max_respawns`] times per slot.
+//!
+//! Fault-injection sites: `"dispatch.send"` (fire + corrupt, trips
+//! counted fire-then-corrupt per send), `"dispatch.recv"` (corrupt
+//! only), `"worker.apply"` (in the worker; fire then corrupt per
+//! request). The in-process [`Transport::Threads`] workers share this
+//! process's fault gate, so tests arm chaos with
+//! [`crate::robust::fault::with_plan`] around an apply; real child
+//! processes get their arms shipped in the init frame instead.
+
+use crate::coordinator::Metrics;
+use crate::dispatch::frame::{self, FrameError};
+use crate::dispatch::proto::{self, Frame, InitMsg};
+use crate::dispatch::worker;
+use crate::fastsum::FastsumOperator;
+use crate::graph::operator::LinearOperator;
+use crate::obs::{analyze_skew, FlightRecord, FlightRecorder};
+use crate::robust::fault::{self, FaultArm};
+use crate::robust::verify;
+use crate::robust::{CancelToken, EngineError};
+use crate::shard::{ShardExecutor, ShardSpec, ShardedOperator, SubgridPolicy};
+use crate::util::json::Json;
+use crate::util::lock_recover;
+use crate::util::timer::Timer;
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How worker replicas are hosted.
+#[derive(Debug, Clone)]
+pub enum Transport {
+    /// Real child processes (`<program> [args…] worker` speaking the
+    /// frame protocol on stdin/stdout). The production shape; also
+    /// what the SIGKILL integration tests exercise.
+    Process { program: PathBuf, args: Vec<String> },
+    /// In-process worker threads over channel-backed pipes: the same
+    /// `run_worker` byte loop, minus process isolation. Used by unit
+    /// tests and useful as a cheap local mode.
+    Threads,
+}
+
+/// Pool tuning knobs. All durations are monotonic-clock budgets.
+#[derive(Debug, Clone)]
+pub struct DispatchConfig {
+    /// Worker slots (≥ 1).
+    pub workers: usize,
+    pub transport: Transport,
+    /// Budget for one full remote exchange (all shards out and back).
+    /// On expiry, unresponsive workers are lost and the remaining
+    /// shards are spread in-process.
+    pub apply_deadline: Duration,
+    /// Budget for the initial ready handshake per construction.
+    pub ready_timeout: Duration,
+    /// Budget for [`DispatchedOperator::heartbeat`] pongs.
+    pub heartbeat_timeout: Duration,
+    /// Exponential-backoff base delay before respawning a lost slot.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Seed of the deterministic backoff jitter (xorshift).
+    pub backoff_seed: u64,
+    /// Respawn attempts per slot before giving up on it for good.
+    pub max_respawns: u32,
+    /// Skew ratio (slowest worker total / mean) above which
+    /// [`DispatchedOperator::rebalance`] moves a shard off the
+    /// straggler.
+    pub rebalance_threshold: f64,
+    /// Chaos arms shipped to specific worker slots at first spawn
+    /// (`(slot, arm)`); respawned workers start clean so recovery can
+    /// succeed. Ignored by [`Transport::Threads`] — in-process workers
+    /// would contend for this process's fault gate.
+    pub worker_faults: Vec<(usize, FaultArm)>,
+}
+
+impl DispatchConfig {
+    fn defaults(workers: usize, transport: Transport) -> DispatchConfig {
+        DispatchConfig {
+            workers: workers.max(1),
+            transport,
+            apply_deadline: Duration::from_secs(30),
+            ready_timeout: Duration::from_secs(10),
+            heartbeat_timeout: Duration::from_secs(5),
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(5),
+            backoff_seed: 0x6e66_6674_6b72_796c, // "nfftkryl"
+            max_respawns: 3,
+            rebalance_threshold: 1.25,
+            worker_faults: Vec::new(),
+        }
+    }
+
+    /// In-process thread transport with default budgets.
+    pub fn threads(workers: usize) -> DispatchConfig {
+        Self::defaults(workers, Transport::Threads)
+    }
+
+    /// Child-process transport running `program worker`.
+    pub fn process(workers: usize, program: impl Into<PathBuf>) -> DispatchConfig {
+        Self::defaults(
+            workers,
+            Transport::Process { program: program.into(), args: Vec::new() },
+        )
+    }
+}
+
+/// Write half of an in-process pipe (channel of byte chunks).
+struct PipeWriter {
+    tx: Sender<Vec<u8>>,
+}
+
+impl Write for PipeWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        self.tx
+            .send(buf.to_vec())
+            .map_err(|_| std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe closed"))?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Read half of an in-process pipe. A disconnected sender reads as
+/// EOF, exactly like a dead child's stdout.
+struct PipeReader {
+    rx: Receiver<Vec<u8>>,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl PipeReader {
+    fn new(rx: Receiver<Vec<u8>>) -> PipeReader {
+        PipeReader { rx, buf: Vec::new(), pos: 0 }
+    }
+}
+
+impl Read for PipeReader {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        while self.pos >= self.buf.len() {
+            match self.rx.recv() {
+                Ok(chunk) => {
+                    self.buf = chunk;
+                    self.pos = 0;
+                }
+                Err(_) => return Ok(0),
+            }
+        }
+        let n = out.len().min(self.buf.len() - self.pos);
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// `(slot, generation, frame-or-error)` from a reader thread. The
+/// generation is the staleness filter: it bumps on every spawn *and*
+/// every loss, so frames from a worker that was already declared dead
+/// (or from a previous incarnation of the slot) are discarded instead
+/// of being mistaken for fresh replies.
+type Event = (usize, u64, Result<Json, FrameError>);
+
+struct Slot {
+    gen: u64,
+    alive: bool,
+    writer: Option<Box<dyn Write + Send>>,
+    child: Option<Child>,
+    pid: Option<u32>,
+    /// Respawn attempts consumed.
+    respawns: u32,
+    /// When the next respawn attempt is due (backoff), if any.
+    retry_at: Option<Instant>,
+    last_contact: Instant,
+}
+
+impl Slot {
+    fn fresh() -> Slot {
+        Slot {
+            gen: 0,
+            alive: false,
+            writer: None,
+            child: None,
+            pid: None,
+            respawns: 0,
+            retry_at: None,
+            last_contact: Instant::now(),
+        }
+    }
+}
+
+struct Pending {
+    shard: usize,
+    slot: usize,
+    attempts: u32,
+    sent: Instant,
+}
+
+/// Remote send attempts per shard per apply before the parent stops
+/// asking and spreads the shard itself.
+const MAX_SEND_ATTEMPTS: u32 = 3;
+
+struct Pool {
+    cfg: DispatchConfig,
+    /// Init template; `worker`/`faults` are overwritten per slot.
+    init: InitMsg,
+    slots: Vec<Slot>,
+    /// Preferred worker slot per shard (round-robin at start, nudged
+    /// by [`Pool::rebalance`]). Stable across respawns.
+    assignment: Vec<usize>,
+    tx: Sender<Event>,
+    rx: Receiver<Event>,
+    seq: u64,
+    /// xorshift state for the deterministic backoff jitter.
+    jitter: u64,
+    lost: u64,
+    respawned: u64,
+    fallback_shards: u64,
+    corrupt_frames: u64,
+    applies: u64,
+    /// Per-*worker* exchange timings (slot-indexed), feeding the same
+    /// skew analysis the shard executor uses.
+    exec: ShardExecutor,
+    metrics: Option<Arc<Metrics>>,
+    flight: FlightRecorder,
+}
+
+impl Pool {
+    fn new(cfg: DispatchConfig, init: InitMsg, num_shards: usize) -> Pool {
+        let (tx, rx) = mpsc::channel();
+        let workers = cfg.workers.max(1);
+        let jitter = cfg.backoff_seed | 1;
+        let mut pool = Pool {
+            cfg,
+            init,
+            slots: (0..workers).map(|_| Slot::fresh()).collect(),
+            assignment: (0..num_shards).map(|s| s % workers).collect(),
+            tx,
+            rx,
+            seq: 0,
+            jitter,
+            lost: 0,
+            respawned: 0,
+            fallback_shards: 0,
+            corrupt_frames: 0,
+            applies: 0,
+            exec: ShardExecutor::new(workers),
+            metrics: None,
+            flight: FlightRecorder::new(64),
+        };
+        for i in 0..workers {
+            pool.spawn_slot(i, true);
+        }
+        pool.await_ready();
+        pool
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    fn next_jitter(&mut self) -> u64 {
+        let mut x = self.jitter;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.jitter = x;
+        x
+    }
+
+    fn backoff_delay(&mut self, respawns: u32) -> Duration {
+        let base = self.cfg.backoff_base.max(Duration::from_millis(1));
+        let exp = base.saturating_mul(1u32 << respawns.min(16));
+        let jitter_ms = self.next_jitter() % (base.as_millis().max(1) as u64);
+        (exp + Duration::from_millis(jitter_ms)).min(self.cfg.backoff_max)
+    }
+
+    /// Spawn (or respawn) slot `i` and ship its init frame. First
+    /// spawns carry the configured chaos arms; respawns start clean.
+    fn spawn_slot(&mut self, i: usize, with_faults: bool) -> bool {
+        self.slots[i].gen += 1;
+        let gen = self.slots[i].gen;
+        let mut init = self.init.clone();
+        init.worker = i;
+        init.faults = Vec::new();
+        let (mut writer, reader): (Box<dyn Write + Send>, Box<dyn Read + Send>) =
+            match &self.cfg.transport {
+                Transport::Threads => {
+                    // Faults are deliberately NOT shipped: a worker
+                    // thread arming a plan would fight the parent (and
+                    // the test) for the process-global fault gate.
+                    let (to_worker, worker_rx) = mpsc::channel::<Vec<u8>>();
+                    let (worker_tx, from_worker) = mpsc::channel::<Vec<u8>>();
+                    std::thread::spawn(move || {
+                        let _ = worker::run_worker(
+                            PipeReader::new(worker_rx),
+                            PipeWriter { tx: worker_tx },
+                        );
+                    });
+                    self.slots[i].child = None;
+                    self.slots[i].pid = None;
+                    (
+                        Box::new(PipeWriter { tx: to_worker }),
+                        Box::new(PipeReader::new(from_worker)),
+                    )
+                }
+                Transport::Process { program, args } => {
+                    if with_faults {
+                        init.faults = self
+                            .cfg
+                            .worker_faults
+                            .iter()
+                            .filter(|(w, _)| *w == i)
+                            .map(|(_, a)| a.clone())
+                            .collect();
+                    }
+                    match Command::new(program)
+                        .args(args)
+                        .arg("worker")
+                        .stdin(Stdio::piped())
+                        .stdout(Stdio::piped())
+                        .spawn()
+                    {
+                        Err(e) => {
+                            self.slot_spawn_failed(i, &format!("spawn failed: {e}"));
+                            return false;
+                        }
+                        Ok(mut child) => {
+                            let stdin = child.stdin.take().expect("piped stdin");
+                            let stdout = child.stdout.take().expect("piped stdout");
+                            self.slots[i].pid = Some(child.id());
+                            self.slots[i].child = Some(child);
+                            (Box::new(stdin), Box::new(stdout))
+                        }
+                    }
+                }
+            };
+        if frame::write_frame(&mut writer, &Frame::Init(init).encode()).is_err() {
+            self.slot_spawn_failed(i, "init write failed");
+            return false;
+        }
+        let tx = self.tx.clone();
+        std::thread::spawn(move || {
+            let mut r = reader;
+            loop {
+                match frame::read_frame(&mut r) {
+                    Ok(j) => {
+                        if tx.send((i, gen, Ok(j))).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send((i, gen, Err(e)));
+                        return;
+                    }
+                }
+            }
+        });
+        let s = &mut self.slots[i];
+        s.writer = Some(writer);
+        s.alive = true;
+        s.retry_at = None;
+        s.last_contact = Instant::now();
+        true
+    }
+
+    fn slot_spawn_failed(&mut self, i: usize, _reason: &str) {
+        let respawns = self.slots[i].respawns;
+        let retry = if respawns < self.cfg.max_respawns {
+            let d = self.backoff_delay(respawns);
+            Some(Instant::now() + d)
+        } else {
+            None
+        };
+        let s = &mut self.slots[i];
+        s.alive = false;
+        s.writer = None;
+        s.child = None;
+        s.pid = None;
+        s.respawns = respawns.saturating_add(1);
+        s.retry_at = retry;
+    }
+
+    /// Wait for every spawned slot's ready frame (bounded by
+    /// `ready_timeout`). A slot that never reports is lost — the pool
+    /// still constructs; the in-process fallback covers everything.
+    fn await_ready(&mut self) {
+        let deadline = Instant::now() + self.cfg.ready_timeout;
+        let mut ready = vec![false; self.slots.len()];
+        while ready.iter().zip(&self.slots).any(|(r, s)| s.alive && !*r) {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (slot, gen, msg) = match self.rx.recv_timeout(deadline - now) {
+                Ok(ev) => ev,
+                Err(_) => break,
+            };
+            if !self.event_is_fresh(slot, gen) {
+                continue;
+            }
+            match msg {
+                Ok(j) => {
+                    if matches!(proto::decode(&j), Ok(Frame::Ready { .. })) {
+                        ready[slot] = true;
+                        self.slots[slot].last_contact = Instant::now();
+                    }
+                }
+                Err(e) => self.lose(slot, "dispatch.ready", &e.to_string()),
+            }
+        }
+        for i in 0..self.slots.len() {
+            if self.slots[i].alive && !ready[i] {
+                self.lose(i, "dispatch.ready", "no ready frame before the startup timeout");
+            }
+        }
+    }
+
+    fn event_is_fresh(&self, slot: usize, gen: u64) -> bool {
+        slot < self.slots.len() && self.slots[slot].alive && self.slots[slot].gen == gen
+    }
+
+    /// Declare a worker dead: bump its generation (staleness fence),
+    /// kill the child if any, count the loss, schedule the respawn.
+    /// Idempotent per incarnation.
+    fn lose(&mut self, slot: usize, stage: &'static str, reason: &str) {
+        if !self.slots[slot].alive {
+            return;
+        }
+        let respawns = self.slots[slot].respawns;
+        {
+            let s = &mut self.slots[slot];
+            s.alive = false;
+            s.gen += 1;
+            s.writer = None;
+            s.pid = None;
+            if let Some(mut child) = s.child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+        self.lost += 1;
+        if let Some(m) = &self.metrics {
+            m.workers_lost.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        self.flight.record(&FlightRecord {
+            id: slot as u64,
+            kind: "dispatch",
+            columns: 0,
+            total_secs: 0.0,
+            matvec_secs: 0.0,
+            ortho_secs: 0.0,
+            bytes: 0,
+            ok: false,
+            attempt: respawns as u64,
+            err: Some("worker-lost"),
+        });
+        let _ = (stage, reason); // carried by the EngineError when one is surfaced
+        if respawns < self.cfg.max_respawns {
+            let d = self.backoff_delay(respawns);
+            self.slots[slot].retry_at = Some(Instant::now() + d);
+        } else {
+            self.slots[slot].retry_at = None;
+        }
+    }
+
+    /// Respawn every lost slot whose backoff expired. Optimistic: the
+    /// ready frame is collected (and ignored) by later event loops.
+    fn respawn_due(&mut self) {
+        let now = Instant::now();
+        for i in 0..self.slots.len() {
+            let due = !self.slots[i].alive
+                && self.slots[i].retry_at.map(|t| now >= t).unwrap_or(false);
+            if !due {
+                continue;
+            }
+            self.slots[i].respawns += 1;
+            if self.spawn_slot(i, false) {
+                self.respawned += 1;
+                if let Some(m) = &self.metrics {
+                    m.workers_respawned.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Preferred-then-scan routing. `None` when no worker is live.
+    fn pick_live(&self, shard: usize) -> Option<usize> {
+        let w = self.slots.len();
+        let preferred = self.assignment.get(shard).copied().unwrap_or(shard % w);
+        (0..w).map(|k| (preferred + k) % w).find(|&i| self.slots[i].alive)
+    }
+
+    fn spread_local(
+        &mut self,
+        inner: &ShardedOperator,
+        x: &[f64],
+        shard: usize,
+        subs: &mut Vec<(usize, Vec<f64>)>,
+    ) {
+        let local = inner.shard_local_input(shard, x);
+        subs.push((shard, inner.spread_shard(shard, &local)));
+        self.fallback_shards += 1;
+    }
+
+    fn send_apply(
+        &mut self,
+        slot: usize,
+        shard: usize,
+        inner: &ShardedOperator,
+        x: &[f64],
+    ) -> Result<u64, FrameError> {
+        fault::fire("dispatch.send");
+        let mut local = inner.shard_local_input(shard, x);
+        // Checksum over the clean payload, chaos hook after: models
+        // in-flight corruption — the worker's check trips and it
+        // answers with an error frame instead of computing garbage.
+        let crc = frame::checksum(&local);
+        fault::corrupt("dispatch.send", &mut local);
+        let seq = self.next_seq();
+        let f = Frame::Apply { seq, shard, data: local, crc };
+        let w = self.slots[slot]
+            .writer
+            .as_mut()
+            .ok_or_else(|| FrameError::Closed("worker writer gone".into()))?;
+        frame::write_frame(w, &f.encode())?;
+        Ok(seq)
+    }
+
+    /// Phase 1 over the pool: ship every non-empty shard's local input
+    /// out, collect the boxed subgrids back, spreading in-process
+    /// whatever the workers cannot deliver inside the deadline.
+    fn gather(
+        &mut self,
+        inner: &ShardedOperator,
+        x: &[f64],
+        token: &CancelToken,
+    ) -> Result<Vec<(usize, Vec<f64>)>, EngineError> {
+        self.applies += 1;
+        let deadline = Instant::now() + self.cfg.apply_deadline;
+        let mut queue: Vec<(usize, u32)> = (0..inner.num_shards())
+            .filter(|&s| inner.shard_plans()[s].num_points() > 0)
+            .map(|s| (s, 0))
+            .collect();
+        let mut pending: HashMap<u64, Pending> = HashMap::new();
+        let mut subs: Vec<(usize, Vec<f64>)> = Vec::with_capacity(queue.len());
+        loop {
+            token.check()?;
+            self.respawn_due();
+            while let Some((shard, attempts)) = queue.pop() {
+                if attempts >= MAX_SEND_ATTEMPTS {
+                    self.spread_local(inner, x, shard, &mut subs);
+                    continue;
+                }
+                match self.pick_live(shard) {
+                    None => self.spread_local(inner, x, shard, &mut subs),
+                    Some(slot) => match self.send_apply(slot, shard, inner, x) {
+                        Ok(seq) => {
+                            pending.insert(
+                                seq,
+                                Pending { shard, slot, attempts, sent: Instant::now() },
+                            );
+                        }
+                        Err(e) => {
+                            self.lose(slot, "dispatch.send", &e.to_string());
+                            queue.push((shard, attempts + 1));
+                        }
+                    },
+                }
+            }
+            if pending.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let stragglers: Vec<Pending> = pending.drain().map(|(_, p)| p).collect();
+                for p in &stragglers {
+                    self.lose(p.slot, "dispatch.recv", "no reply before the apply deadline");
+                }
+                for p in stragglers {
+                    self.spread_local(inner, x, p.shard, &mut subs);
+                }
+                break;
+            }
+            let (slot, gen, msg) = match self.rx.recv_timeout(deadline - now) {
+                Ok(ev) => ev,
+                Err(_) => continue, // deadline re-checked at loop top
+            };
+            if !self.event_is_fresh(slot, gen) {
+                continue;
+            }
+            let decoded = match msg {
+                Ok(json) => proto::decode(&json),
+                Err(e) => Err(e),
+            };
+            match decoded {
+                Ok(Frame::Subgrid { seq, shard, mut data, crc }) => {
+                    self.slots[slot].last_contact = Instant::now();
+                    let p = match pending.remove(&seq) {
+                        Some(p) => p,
+                        None => continue, // reply to a request we already gave up on
+                    };
+                    fault::corrupt("dispatch.recv", &mut data);
+                    let want_len = inner.shard_plans()[p.shard].bbox().num_cells();
+                    let clean = shard == p.shard
+                        && data.len() == want_len
+                        && frame::checksum(&data) == crc;
+                    if clean {
+                        self.exec.record(slot, "exchange", p.sent.elapsed().as_secs_f64());
+                        subs.push((p.shard, data));
+                    } else {
+                        self.corrupt_frames += 1;
+                        if let Some(m) = &self.metrics {
+                            m.checksum_failures
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        self.lose(slot, "dispatch.recv", "checksum trip on a subgrid reply");
+                        queue.push((p.shard, p.attempts + 1));
+                        requeue_slot(&mut pending, &mut queue, slot);
+                    }
+                }
+                Ok(Frame::Error { seq, .. }) => {
+                    // The worker caught a mangled or impossible request
+                    // and stayed up: count the corruption, re-send.
+                    self.slots[slot].last_contact = Instant::now();
+                    if let Some(p) = pending.remove(&seq) {
+                        self.corrupt_frames += 1;
+                        queue.push((p.shard, p.attempts + 1));
+                    }
+                }
+                Ok(Frame::Pong { .. }) | Ok(Frame::Ready { .. }) => {
+                    self.slots[slot].last_contact = Instant::now();
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    self.lose(slot, "dispatch.recv", &e.to_string());
+                    requeue_slot(&mut pending, &mut queue, slot);
+                }
+            }
+        }
+        Ok(subs)
+    }
+
+    /// Ping every live worker and lose the ones that miss the pong
+    /// deadline. Returns the number of live workers afterwards.
+    fn heartbeat(&mut self) -> usize {
+        self.respawn_due();
+        let mut waiting: HashMap<u64, usize> = HashMap::new();
+        for i in 0..self.slots.len() {
+            if !self.slots[i].alive {
+                continue;
+            }
+            let seq = self.next_seq();
+            let sent = match self.slots[i].writer.as_mut() {
+                Some(w) => frame::write_frame(w, &Frame::Ping { seq }.encode()).is_ok(),
+                None => false,
+            };
+            if sent {
+                waiting.insert(seq, i);
+            } else {
+                self.lose(i, "worker.heartbeat", "ping write failed");
+            }
+        }
+        let deadline = Instant::now() + self.cfg.heartbeat_timeout;
+        while !waiting.is_empty() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (slot, gen, msg) = match self.rx.recv_timeout(deadline - now) {
+                Ok(ev) => ev,
+                Err(_) => break,
+            };
+            if !self.event_is_fresh(slot, gen) {
+                continue;
+            }
+            match msg {
+                Ok(j) => match proto::decode(&j) {
+                    Ok(Frame::Pong { seq }) => {
+                        if waiting.remove(&seq) == Some(slot) {
+                            self.slots[slot].last_contact = Instant::now();
+                        }
+                    }
+                    Ok(_) => self.slots[slot].last_contact = Instant::now(),
+                    Err(e) => {
+                        self.lose(slot, "worker.heartbeat", &e.to_string());
+                        waiting.retain(|_, s| *s != slot);
+                    }
+                },
+                Err(e) => {
+                    self.lose(slot, "worker.heartbeat", &e.to_string());
+                    waiting.retain(|_, s| *s != slot);
+                }
+            }
+        }
+        let late: Vec<usize> = waiting.values().copied().collect();
+        for slot in late {
+            self.lose(slot, "worker.heartbeat", "no pong before the heartbeat timeout");
+        }
+        self.slots.iter().filter(|s| s.alive).count()
+    }
+
+    /// Straggler-driven repartition: when the per-worker exchange-time
+    /// skew exceeds the threshold, move one shard from the slowest
+    /// worker to the least-loaded live one. Routing only — workers
+    /// hold plans for every shard, so no state migrates.
+    fn rebalance(&mut self) -> Json {
+        let report = analyze_skew(&self.exec);
+        let mut o = BTreeMap::new();
+        o.insert("imbalance".to_string(), Json::Num(report.imbalance));
+        o.insert(
+            "threshold".to_string(),
+            Json::Num(self.cfg.rebalance_threshold),
+        );
+        let mut moved = Json::Null;
+        if report.imbalance > self.cfg.rebalance_threshold && self.slots.len() > 1 {
+            let slow = report.slowest_shard; // "shard" = worker slot here
+            let fast = (0..self.slots.len())
+                .filter(|&i| self.slots[i].alive && i != slow)
+                .min_by(|&a, &b| {
+                    report.per_shard_total_secs[a].total_cmp(&report.per_shard_total_secs[b])
+                });
+            if let Some(fast) = fast {
+                if let Some(sh) = self.assignment.iter().position(|&w| w == slow) {
+                    self.assignment[sh] = fast;
+                    let mut m = BTreeMap::new();
+                    m.insert("shard".to_string(), Json::Num(sh as f64));
+                    m.insert("from".to_string(), Json::Num(slow as f64));
+                    m.insert("to".to_string(), Json::Num(fast as f64));
+                    moved = Json::Obj(m);
+                }
+            }
+        }
+        o.insert("moved".to_string(), moved);
+        Json::Obj(o)
+    }
+
+    fn stats_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("workers".to_string(), Json::Num(self.slots.len() as f64));
+        o.insert(
+            "live".to_string(),
+            Json::Num(self.slots.iter().filter(|s| s.alive).count() as f64),
+        );
+        o.insert("lost".to_string(), Json::Num(self.lost as f64));
+        o.insert("respawned".to_string(), Json::Num(self.respawned as f64));
+        o.insert(
+            "fallback_shards".to_string(),
+            Json::Num(self.fallback_shards as f64),
+        );
+        o.insert(
+            "corrupt_frames".to_string(),
+            Json::Num(self.corrupt_frames as f64),
+        );
+        o.insert("applies".to_string(), Json::Num(self.applies as f64));
+        o.insert(
+            "assignment".to_string(),
+            Json::Arr(self.assignment.iter().map(|&w| Json::Num(w as f64)).collect()),
+        );
+        o.insert(
+            "per_worker".to_string(),
+            Json::Arr(
+                self.slots
+                    .iter()
+                    .map(|s| {
+                        let mut w = BTreeMap::new();
+                        w.insert("alive".to_string(), Json::Bool(s.alive));
+                        w.insert("respawns".to_string(), Json::Num(s.respawns as f64));
+                        w.insert(
+                            "pid".to_string(),
+                            s.pid.map(|p| Json::Num(p as f64)).unwrap_or(Json::Null),
+                        );
+                        Json::Obj(w)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert("skew".to_string(), analyze_skew(&self.exec).to_json());
+        o.insert("flight".to_string(), self.flight.to_json());
+        Json::Obj(o)
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for s in &mut self.slots {
+            if let Some(w) = s.writer.as_mut() {
+                let _ = frame::write_frame(w, &Frame::Shutdown.encode());
+            }
+            s.writer = None;
+            if let Some(mut child) = s.child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+fn requeue_slot(pending: &mut HashMap<u64, Pending>, queue: &mut Vec<(usize, u32)>, slot: usize) {
+    let seqs: Vec<u64> = pending
+        .iter()
+        .filter(|(_, p)| p.slot == slot)
+        .map(|(s, _)| *s)
+        .collect();
+    for s in seqs {
+        if let Some(p) = pending.remove(&s) {
+            queue.push((p.shard, p.attempts + 1));
+        }
+    }
+}
+
+/// A [`LinearOperator`] whose phase-1 spread runs on a pool of worker
+/// replicas, bitwise identical to the wrapped in-process
+/// [`ShardedOperator`] under every failure the pool can survive (which
+/// is all of them — the parent is the last rung).
+pub struct DispatchedOperator {
+    inner: Arc<ShardedOperator>,
+    pool: Mutex<Pool>,
+    name: String,
+}
+
+impl DispatchedOperator {
+    /// Dispatch the zero-diagonal adjacency view of `parent` over a
+    /// worker pool. Subgrid policy is pinned to bounding boxes on both
+    /// sides of the wire.
+    pub fn from_fastsum(
+        parent: &FastsumOperator,
+        spec: ShardSpec,
+        cfg: DispatchConfig,
+    ) -> DispatchedOperator {
+        let inner = Arc::new(ShardedOperator::from_fastsum_with(
+            parent,
+            spec,
+            SubgridPolicy::BoundingBox,
+        ));
+        Self::wrap(parent, inner, cfg)
+    }
+
+    /// Dispatch the normalised adjacency `D^{−1/2} W D^{−1/2}`. The
+    /// degree pass runs in-process; workers never see degrees — they
+    /// receive pre-scaled shard inputs.
+    pub fn from_fastsum_normalized(
+        parent: &FastsumOperator,
+        spec: ShardSpec,
+        cfg: DispatchConfig,
+    ) -> Result<DispatchedOperator, EngineError> {
+        let sharded =
+            ShardedOperator::from_fastsum_with(parent, spec, SubgridPolicy::BoundingBox)
+                .into_normalized()
+                .map_err(|e| EngineError::invalid(format!("normalized dispatch: {e}")))?;
+        Ok(Self::wrap(parent, Arc::new(sharded), cfg))
+    }
+
+    fn wrap(
+        parent: &FastsumOperator,
+        inner: Arc<ShardedOperator>,
+        cfg: DispatchConfig,
+    ) -> DispatchedOperator {
+        let plan = parent.plan();
+        let init = InitMsg {
+            worker: 0,
+            band: plan.bandwidth().to_vec(),
+            m: plan.window_m(),
+            window: plan.window_kind(),
+            d: parent.ambient_dim(),
+            scaled_points: parent.scaled_points().to_vec(),
+            spec: inner.spec().clone(),
+            faults: Vec::new(),
+        };
+        let workers = cfg.workers.max(1);
+        let num_shards = inner.spec().num_shards();
+        let pool = Pool::new(cfg, init, num_shards);
+        let name = format!("dispatch{}x{}", workers, num_shards);
+        DispatchedOperator { inner, pool: Mutex::new(pool), name }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The wrapped in-process operator (shared plan and shard state).
+    pub fn inner(&self) -> &Arc<ShardedOperator> {
+        &self.inner
+    }
+
+    /// Cancellable apply through the pool; the bitwise contract and
+    /// the ABFT check (`"dispatch.apply"`) both live here.
+    pub fn apply_cancellable(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        token: &CancelToken,
+    ) -> Result<(), EngineError> {
+        let t = Timer::start();
+        let subs = lock_recover(&self.pool).gather(&self.inner, x, token)?;
+        self.inner.finish_apply(x, subs, y, token)?;
+        verify::check_apply("dispatch.apply", x, y)?;
+        let pool = lock_recover(&self.pool);
+        pool.exec.record_global("total", t.elapsed_secs());
+        pool.flight.record(&FlightRecord {
+            id: pool.applies,
+            kind: "dispatch",
+            columns: 1,
+            total_secs: t.elapsed_secs(),
+            matvec_secs: 0.0,
+            ortho_secs: 0.0,
+            bytes: 0,
+            ok: true,
+            attempt: 0,
+            err: None,
+        });
+        Ok(())
+    }
+
+    /// Ping all live workers (bounded by the heartbeat timeout),
+    /// losing non-responders; returns the live count. Liveness also
+    /// rides every apply, so calling this is only needed across idle
+    /// stretches.
+    pub fn heartbeat(&self) -> usize {
+        lock_recover(&self.pool).heartbeat()
+    }
+
+    /// Straggler check + at most one shard move; returns the report.
+    pub fn rebalance(&self) -> Json {
+        lock_recover(&self.pool).rebalance()
+    }
+
+    /// Export pool counters into the coordinator's metrics registry
+    /// (`nfft_workers_lost_total` / `nfft_workers_respawned_total`).
+    pub fn bind_metrics(&self, metrics: Arc<Metrics>) {
+        lock_recover(&self.pool).metrics = Some(metrics);
+    }
+
+    /// OS pids of live process-transport workers (`None` for thread
+    /// workers or dead slots). The SIGKILL chaos tests aim here.
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        lock_recover(&self.pool)
+            .slots
+            .iter()
+            .map(|s| if s.alive { s.pid } else { None })
+            .collect()
+    }
+
+    /// Pool-level counters, per-worker state, skew and flight ring.
+    pub fn stats_json(&self) -> Json {
+        lock_recover(&self.pool).stats_json()
+    }
+
+    /// Per-worker exchange-time skew (the dispatcher's analogue of
+    /// [`ShardedOperator::skew_json`]).
+    pub fn skew_json(&self) -> Json {
+        let pool = lock_recover(&self.pool);
+        analyze_skew(&pool.exec).to_json()
+    }
+}
+
+impl LinearOperator for DispatchedOperator {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        // Infallible path: with a never-token the gather cannot fail
+        // (the in-process fallback absorbs every worker failure) and
+        // the ABFT check is a no-op unless an observer is armed.
+        let _ = DispatchedOperator::apply_cancellable(self, x, y, &CancelToken::never());
+    }
+
+    fn apply_cancellable(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        token: &CancelToken,
+    ) -> Result<(), EngineError> {
+        // Route the caller's token into the pool so coordinator
+        // deadlines compose with the dispatcher's own per-apply one
+        // (both monotonic; whichever expires first wins).
+        DispatchedOperator::apply_cancellable(self, x, y, token)
+    }
+
+    fn apply_block(&self, xs: &[f64], ys: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(xs.len() % n, 0);
+        assert_eq!(xs.len(), ys.len());
+        // Columns go through sequentially: the pool serialises on its
+        // mutex anyway, and keeping the loop here preserves the
+        // one-apply-one-deadline failure semantics.
+        for (x, y) in xs.chunks_exact(n).zip(ys.chunks_exact_mut(n)) {
+            self.apply(x, y);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastsum::{FastsumParams, Kernel};
+    use crate::robust::fault::{FaultAction, FaultPlan};
+    use crate::util::json::Json;
+
+    fn spiral_points(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::data::rng::Rng::seed_from(seed);
+        crate::data::spiral::generate(
+            crate::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+            &mut rng,
+        )
+        .points
+    }
+
+    fn quick_cfg(workers: usize) -> DispatchConfig {
+        let mut cfg = DispatchConfig::threads(workers);
+        cfg.apply_deadline = Duration::from_secs(10);
+        cfg.ready_timeout = Duration::from_secs(10);
+        cfg.backoff_base = Duration::from_millis(1);
+        cfg.backoff_max = Duration::from_millis(20);
+        cfg
+    }
+
+    fn stat(d: &DispatchedOperator, key: &str) -> f64 {
+        d.stats_json().get(key).and_then(Json::as_f64).unwrap()
+    }
+
+    fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dispatched_matches_in_process_bitwise_for_all_kernels() {
+        let n = 85;
+        let points = spiral_points(n, 11);
+        let kernels = [
+            Kernel::Gaussian { sigma: 3.5 },
+            Kernel::LaplacianRbf { sigma: 3.5 },
+            Kernel::Multiquadric { c: 1.0 },
+            Kernel::InverseMultiquadric { c: 1.0 },
+        ];
+        let mut rng = crate::data::rng::Rng::seed_from(12);
+        let x = rng.normal_vec(n);
+        for kernel in kernels {
+            let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+            let spec = ShardSpec::strided(n, 3);
+            let sharded = ShardedOperator::from_fastsum_with(
+                &parent,
+                spec.clone(),
+                SubgridPolicy::BoundingBox,
+            );
+            let dispatched = DispatchedOperator::from_fastsum(&parent, spec, quick_cfg(2));
+            assert_bits_eq(
+                &sharded.apply_vec(&x),
+                &dispatched.apply_vec(&x),
+                &format!("{kernel:?}"),
+            );
+            assert_eq!(
+                stat(&dispatched, "fallback_shards"),
+                0.0,
+                "{kernel:?}: healthy pool must not fall back locally"
+            );
+            assert_eq!(stat(&dispatched, "lost"), 0.0);
+        }
+    }
+
+    #[test]
+    fn normalized_dispatch_is_bitwise_too() {
+        let n = 80;
+        let points = spiral_points(n, 13);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let spec = ShardSpec::strided(n, 3);
+        let sharded =
+            ShardedOperator::from_fastsum_with(&parent, spec.clone(), SubgridPolicy::BoundingBox)
+                .into_normalized()
+                .unwrap();
+        let dispatched =
+            DispatchedOperator::from_fastsum_normalized(&parent, spec, quick_cfg(2)).unwrap();
+        let mut rng = crate::data::rng::Rng::seed_from(14);
+        let x = rng.normal_vec(n);
+        assert_bits_eq(&sharded.apply_vec(&x), &dispatched.apply_vec(&x), "normalized");
+        // Block path rides the same pool.
+        let xs = rng.normal_vec(n * 2);
+        let mut a = vec![0.0; n * 2];
+        let mut b = vec![0.0; n * 2];
+        sharded.apply_block(&xs, &mut a);
+        dispatched.apply_block(&xs, &mut b);
+        assert_bits_eq(&a, &b, "normalized block");
+    }
+
+    #[test]
+    fn worker_panic_recovers_bitwise_and_respawns() {
+        let n = 85;
+        let points = spiral_points(n, 15);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let spec = ShardSpec::strided(n, 4);
+        let sharded = ShardedOperator::from_fastsum_with(
+            &parent,
+            spec.clone(),
+            SubgridPolicy::BoundingBox,
+        );
+        let dispatched = DispatchedOperator::from_fastsum(&parent, spec, quick_cfg(2));
+        let metrics = Arc::new(Metrics::default());
+        dispatched.bind_metrics(metrics.clone());
+        let mut rng = crate::data::rng::Rng::seed_from(16);
+        let x = rng.normal_vec(n);
+        let want = sharded.apply_vec(&x);
+
+        // Thread-transport chaos goes through the process-global gate:
+        // the first worker thread to reach "worker.apply" panics,
+        // killing its pipe; the parent reroutes its shards.
+        let (got, report) = fault::with_plan(
+            FaultPlan::new().arm("worker.apply", 0, FaultAction::Panic),
+            || dispatched.apply_vec(&x),
+        );
+        assert_eq!(report.fired.len(), 1, "the panic arm must have fired");
+        assert_bits_eq(&want, &got, "apply through a worker panic");
+        assert!(stat(&dispatched, "lost") >= 1.0);
+        assert!(
+            metrics.workers_lost.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+            "loss must reach the metrics registry"
+        );
+
+        // Backoff is a millisecond here; the next apply respawns the
+        // slot and serves remotely again, still bitwise.
+        std::thread::sleep(Duration::from_millis(30));
+        let again = dispatched.apply_vec(&x);
+        assert_bits_eq(&want, &again, "apply after the respawn");
+        assert!(stat(&dispatched, "respawned") >= 1.0);
+        assert!(metrics.workers_respawned.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        assert_eq!(stat(&dispatched, "live"), 2.0, "both slots live again");
+    }
+
+    #[test]
+    fn worker_hang_hits_deadline_and_falls_back_bitwise() {
+        let n = 85;
+        let points = spiral_points(n, 17);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let spec = ShardSpec::strided(n, 3);
+        let sharded = ShardedOperator::from_fastsum_with(
+            &parent,
+            spec.clone(),
+            SubgridPolicy::BoundingBox,
+        );
+        let mut cfg = quick_cfg(2);
+        cfg.apply_deadline = Duration::from_millis(250);
+        let dispatched = DispatchedOperator::from_fastsum(&parent, spec, cfg);
+        let mut rng = crate::data::rng::Rng::seed_from(18);
+        let x = rng.normal_vec(n);
+        let want = sharded.apply_vec(&x);
+
+        let delay_ms = 900u64;
+        let (got, report) = fault::with_plan(
+            FaultPlan::new().arm("worker.apply", 0, FaultAction::DelayMs(delay_ms)),
+            || {
+                let got = dispatched.apply_vec(&x);
+                // Keep the gate held until the sleeper drains, so its
+                // late trips land on THIS plan, not a later test's.
+                std::thread::sleep(Duration::from_millis(delay_ms + 100));
+                got
+            },
+        );
+        assert_eq!(report.fired.len(), 1, "the delay arm must have fired");
+        assert_bits_eq(&want, &got, "apply through a hung worker");
+        assert!(stat(&dispatched, "lost") >= 1.0, "the sleeper must be declared lost");
+        assert!(
+            stat(&dispatched, "fallback_shards") >= 1.0,
+            "its shards must have been spread in-process"
+        );
+    }
+
+    #[test]
+    fn reply_corruption_is_detected_and_recovered_bitwise() {
+        let n = 85;
+        let points = spiral_points(n, 19);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let spec = ShardSpec::strided(n, 3);
+        let sharded = ShardedOperator::from_fastsum_with(
+            &parent,
+            spec.clone(),
+            SubgridPolicy::BoundingBox,
+        );
+        let dispatched = DispatchedOperator::from_fastsum(&parent, spec, quick_cfg(2));
+        let mut rng = crate::data::rng::Rng::seed_from(20);
+        let x = rng.normal_vec(n);
+        let want = sharded.apply_vec(&x);
+
+        // "dispatch.recv" trips once per received subgrid: hit 0 poisons
+        // the first reply in the parent, tripping the checksum.
+        let (got, report) = fault::with_plan(
+            FaultPlan::new().arm("dispatch.recv", 0, FaultAction::Nan),
+            || dispatched.apply_vec(&x),
+        );
+        assert_eq!(report.fired.len(), 1);
+        assert_bits_eq(&want, &got, "apply through a corrupted reply");
+        assert!(stat(&dispatched, "corrupt_frames") >= 1.0);
+        assert!(stat(&dispatched, "lost") >= 1.0, "a corrupting worker is not trusted again");
+    }
+
+    #[test]
+    fn request_corruption_is_caught_by_the_worker_and_resent() {
+        let n = 85;
+        let points = spiral_points(n, 23);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let spec = ShardSpec::strided(n, 3);
+        let sharded = ShardedOperator::from_fastsum_with(
+            &parent,
+            spec.clone(),
+            SubgridPolicy::BoundingBox,
+        );
+        let dispatched = DispatchedOperator::from_fastsum(&parent, spec, quick_cfg(2));
+        let mut rng = crate::data::rng::Rng::seed_from(24);
+        let x = rng.normal_vec(n);
+        let want = sharded.apply_vec(&x);
+
+        // Per send, "dispatch.send" trips fire (count 0) then corrupt
+        // (count 1): hit 1 with a data action mangles the first
+        // payload after its checksum was taken — in-flight corruption.
+        let (got, report) = fault::with_plan(
+            FaultPlan::new().arm("dispatch.send", 1, FaultAction::Bias(0.5)),
+            || dispatched.apply_vec(&x),
+        );
+        assert_eq!(report.fired.len(), 1);
+        assert_bits_eq(&want, &got, "apply through a corrupted request");
+        assert!(stat(&dispatched, "corrupt_frames") >= 1.0);
+        assert_eq!(
+            stat(&dispatched, "lost"),
+            0.0,
+            "the worker caught the trip; it must not be lost"
+        );
+    }
+
+    #[test]
+    fn heartbeat_reports_live_workers_and_cancel_is_typed() {
+        let n = 80;
+        let points = spiral_points(n, 25);
+        let kernel = Kernel::Gaussian { sigma: 3.5 };
+        let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+        let dispatched =
+            DispatchedOperator::from_fastsum(&parent, ShardSpec::strided(n, 3), quick_cfg(2));
+        assert_eq!(dispatched.heartbeat(), 2, "both thread workers must pong");
+
+        // An already-expired token aborts the gather with the typed
+        // timeout, before any remote work is attempted.
+        let token = CancelToken::with_deadline(Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(5));
+        let mut y = vec![0.0; n];
+        let mut x = vec![0.0; n];
+        x[0] = 1.0;
+        let err = dispatched.apply_cancellable(&x, &mut y, &token).unwrap_err();
+        assert_eq!(err.class(), "timeout");
+
+        // Rebalance with a healthy, barely-used pool: report present,
+        // nothing moved.
+        let report = dispatched.rebalance();
+        assert!(report.get("imbalance").and_then(Json::as_f64).is_some());
+        assert!(matches!(report.get("moved"), Some(Json::Null)));
+        // Stats surface the per-worker table.
+        let per_worker = dispatched.stats_json();
+        let arr = per_worker.get("per_worker").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 2);
+    }
+}

@@ -1,0 +1,497 @@
+//! Typed messages of the dispatcher wire protocol.
+//!
+//! Every frame is a JSON object `{"v": PROTOCOL_VERSION, "type": …}`;
+//! decoding rejects unknown versions with a typed
+//! [`FrameError::Version`] before looking at anything else, so a
+//! newer peer is refused rather than misread (the same policy as the
+//! versioned [`crate::shard::ShardSpec`] encoding, whose version
+//! constant this protocol shares).
+//!
+//! The conversation (see `docs/DISTRIBUTED.md`):
+//!
+//! * parent → worker, once: [`Frame::Init`] — the full recipe for a
+//!   bitwise-identical replica of the parent's shard plans (plan
+//!   scalars, ρ-scaled points, the versioned [`ShardSpec`], optional
+//!   chaos arms for fault-injection tests);
+//! * worker → parent, once: [`Frame::Ready`];
+//! * per apply and shard: [`Frame::Apply`] (shard-local scaled input)
+//!   answered by [`Frame::Subgrid`] (the boxed real subgrid) — both
+//!   carry an FNV checksum over the f64 bit patterns;
+//! * liveness: [`Frame::Ping`] / [`Frame::Pong`];
+//! * a worker that detects a bad request (checksum trip, unknown
+//!   shard) answers [`Frame::Error`] instead of dying, so the parent
+//!   can re-send;
+//! * teardown: [`Frame::Shutdown`].
+
+use crate::dispatch::frame::{self, FrameError};
+use crate::nfft::WindowKind;
+use crate::robust::fault::{FaultAction, FaultArm};
+use crate::shard::{ShardSpec, SPEC_WIRE_VERSION};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Version of the dispatcher frame protocol. Anchored to the
+/// [`ShardSpec`] wire version — the spec rides inside [`Frame::Init`],
+/// so the two encodings version together.
+pub const PROTOCOL_VERSION: u64 = SPEC_WIRE_VERSION;
+
+/// One-time worker bootstrap: everything needed to rebuild the
+/// parent's [`crate::nfft::NfftPlan`] and shard plans bit-for-bit.
+/// `NfftPlan::new` and `build_shard_plans_with` are deterministic
+/// functions of these fields, which is what makes the remote spread
+/// bitwise-identical to the in-process one.
+#[derive(Debug, Clone)]
+pub struct InitMsg {
+    /// Worker slot id (echoed in [`Frame::Ready`]).
+    pub worker: usize,
+    /// Per-axis bandwidth `N` of the parent plan.
+    pub band: Vec<usize>,
+    /// Window cutoff `m`.
+    pub m: usize,
+    /// Window family.
+    pub window: WindowKind,
+    /// Ambient dimension of the point cloud.
+    pub d: usize,
+    /// The parent's ρ-scaled points (`n·d` interleaved), shipped as
+    /// packed hex so the worker's geometry is built from bit-identical
+    /// coordinates.
+    pub scaled_points: Vec<f64>,
+    /// The placement spec (versioned encoding of its own).
+    pub spec: ShardSpec,
+    /// Chaos arms the worker arms around its serve loop
+    /// (fault-injection tests on real child processes; empty in
+    /// production and for in-process thread workers, which share the
+    /// parent's process-global fault gate instead).
+    pub faults: Vec<FaultArm>,
+}
+
+/// A decoded dispatcher frame.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    Init(InitMsg),
+    /// Worker built its plans and is ready to serve.
+    Ready { worker: usize, shards: usize },
+    /// Parent → worker: spread this shard-local input (apply `seq`).
+    Apply { seq: u64, shard: usize, data: Vec<f64>, crc: u64 },
+    /// Worker → parent: the boxed real subgrid for `shard`.
+    Subgrid { seq: u64, shard: usize, data: Vec<f64>, crc: u64 },
+    Ping { seq: u64 },
+    Pong { seq: u64 },
+    /// Worker-side typed failure for one request; the worker lives on.
+    Error { seq: u64, shard: Option<usize>, what: String },
+    Shutdown,
+}
+
+impl Frame {
+    /// Frame type tag (also the JSON `type` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Init(_) => "init",
+            Frame::Ready { .. } => "ready",
+            Frame::Apply { .. } => "apply",
+            Frame::Subgrid { .. } => "subgrid",
+            Frame::Ping { .. } => "ping",
+            Frame::Pong { .. } => "pong",
+            Frame::Error { .. } => "error",
+            Frame::Shutdown => "shutdown",
+        }
+    }
+
+    /// Encode as the versioned JSON wire object.
+    pub fn encode(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+        o.insert("type".to_string(), Json::Str(self.kind().to_string()));
+        match self {
+            Frame::Init(init) => {
+                o.insert("worker".to_string(), Json::Num(init.worker as f64));
+                o.insert(
+                    "band".to_string(),
+                    Json::Arr(init.band.iter().map(|&n| Json::Num(n as f64)).collect()),
+                );
+                o.insert("m".to_string(), Json::Num(init.m as f64));
+                o.insert(
+                    "window".to_string(),
+                    Json::Str(window_name(init.window).to_string()),
+                );
+                o.insert("d".to_string(), Json::Num(init.d as f64));
+                o.insert(
+                    "points".to_string(),
+                    Json::Str(frame::pack_f64s(&init.scaled_points)),
+                );
+                o.insert("spec".to_string(), init.spec.to_json());
+                o.insert(
+                    "faults".to_string(),
+                    Json::Arr(init.faults.iter().map(fault_arm_json).collect()),
+                );
+            }
+            Frame::Ready { worker, shards } => {
+                o.insert("worker".to_string(), Json::Num(*worker as f64));
+                o.insert("shards".to_string(), Json::Num(*shards as f64));
+            }
+            Frame::Apply { seq, shard, data, crc }
+            | Frame::Subgrid { seq, shard, data, crc } => {
+                o.insert("seq".to_string(), Json::Num(*seq as f64));
+                o.insert("shard".to_string(), Json::Num(*shard as f64));
+                o.insert("data".to_string(), Json::Str(frame::pack_f64s(data)));
+                o.insert("crc".to_string(), Json::Str(frame::pack_u64(*crc)));
+            }
+            Frame::Ping { seq } | Frame::Pong { seq } => {
+                o.insert("seq".to_string(), Json::Num(*seq as f64));
+            }
+            Frame::Error { seq, shard, what } => {
+                o.insert("seq".to_string(), Json::Num(*seq as f64));
+                if let Some(s) = shard {
+                    o.insert("shard".to_string(), Json::Num(*s as f64));
+                }
+                o.insert("what".to_string(), Json::Str(what.clone()));
+            }
+            Frame::Shutdown => {}
+        }
+        Json::Obj(o)
+    }
+}
+
+/// Decode a wire object. Version-gates first; every missing or
+/// mistyped field is a typed [`FrameError`], never a panic.
+pub fn decode(v: &Json) -> Result<Frame, FrameError> {
+    let ver = v
+        .get("v")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| FrameError::BadPayload("frame missing numeric 'v'".into()))?
+        as u64;
+    if ver != PROTOCOL_VERSION {
+        return Err(FrameError::Version(ver));
+    }
+    let kind = v
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| FrameError::BadPayload("frame missing string 'type'".into()))?;
+    match kind {
+        "init" => decode_init(v).map(Frame::Init),
+        "ready" => Ok(Frame::Ready {
+            worker: get_usize(v, "worker")?,
+            shards: get_usize(v, "shards")?,
+        }),
+        "apply" | "subgrid" => {
+            let seq = get_u64(v, "seq")?;
+            let shard = get_usize(v, "shard")?;
+            let data = frame::unpack_f64s(get_str(v, "data")?)?;
+            let crc = frame::unpack_u64(get_str(v, "crc")?)?;
+            Ok(if kind == "apply" {
+                Frame::Apply { seq, shard, data, crc }
+            } else {
+                Frame::Subgrid { seq, shard, data, crc }
+            })
+        }
+        "ping" => Ok(Frame::Ping { seq: get_u64(v, "seq")? }),
+        "pong" => Ok(Frame::Pong { seq: get_u64(v, "seq")? }),
+        "error" => Ok(Frame::Error {
+            seq: get_u64(v, "seq")?,
+            shard: v.get("shard").and_then(Json::as_usize),
+            what: get_str(v, "what")?.to_string(),
+        }),
+        "shutdown" => Ok(Frame::Shutdown),
+        other => Err(FrameError::BadPayload(format!("unknown frame type {other:?}"))),
+    }
+}
+
+fn decode_init(v: &Json) -> Result<InitMsg, FrameError> {
+    let band_json = v
+        .get("band")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| FrameError::BadPayload("init missing array 'band'".into()))?;
+    let mut band = Vec::with_capacity(band_json.len());
+    for b in band_json {
+        band.push(b.as_usize().ok_or_else(|| {
+            FrameError::BadPayload("init 'band' holds a non-numeric entry".into())
+        })?);
+    }
+    let window = window_from_name(get_str(v, "window")?)?;
+    let scaled_points = frame::unpack_f64s(get_str(v, "points")?)?;
+    let spec_json = v
+        .get("spec")
+        .ok_or_else(|| FrameError::BadPayload("init missing 'spec'".into()))?;
+    let spec = ShardSpec::from_json(spec_json)
+        .map_err(|e| FrameError::BadPayload(format!("init spec: {e}")))?;
+    let mut faults = Vec::new();
+    if let Some(arr) = v.get("faults").and_then(Json::as_arr) {
+        for a in arr {
+            faults.push(fault_arm_from_json(a)?);
+        }
+    }
+    let d = get_usize(v, "d")?;
+    if d == 0 || scaled_points.len() != spec.num_points() * d {
+        return Err(FrameError::BadPayload(format!(
+            "init geometry mismatch: {} coords for {} points in {d}-space",
+            scaled_points.len(),
+            spec.num_points()
+        )));
+    }
+    Ok(InitMsg {
+        worker: get_usize(v, "worker")?,
+        band,
+        m: get_usize(v, "m")?,
+        window,
+        d,
+        scaled_points,
+        spec,
+        faults,
+    })
+}
+
+fn window_name(w: WindowKind) -> &'static str {
+    match w {
+        WindowKind::KaiserBessel => "kaiser-bessel",
+        WindowKind::Gaussian => "gaussian",
+    }
+}
+
+fn window_from_name(s: &str) -> Result<WindowKind, FrameError> {
+    match s {
+        "kaiser-bessel" => Ok(WindowKind::KaiserBessel),
+        "gaussian" => Ok(WindowKind::Gaussian),
+        other => Err(FrameError::BadPayload(format!("unknown window kind {other:?}"))),
+    }
+}
+
+fn fault_arm_json(a: &FaultArm) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("site".to_string(), Json::Str(a.site.clone()));
+    o.insert("hit".to_string(), Json::Num(a.hit as f64));
+    let (name, value) = match a.action {
+        FaultAction::Panic => ("panic", None),
+        FaultAction::Nan => ("nan", None),
+        FaultAction::DelayMs(ms) => ("delay-ms", Some(Json::Num(ms as f64))),
+        FaultAction::Bias(b) => ("bias", Some(Json::Str(frame::pack_f64s(&[b])))),
+    };
+    o.insert("action".to_string(), Json::Str(name.to_string()));
+    if let Some(v) = value {
+        o.insert("value".to_string(), v);
+    }
+    Json::Obj(o)
+}
+
+fn fault_arm_from_json(v: &Json) -> Result<FaultArm, FrameError> {
+    let site = get_str(v, "site")?.to_string();
+    let hit = get_u64(v, "hit")?;
+    let action = match get_str(v, "action")? {
+        "panic" => FaultAction::Panic,
+        "nan" => FaultAction::Nan,
+        "delay-ms" => FaultAction::DelayMs(get_u64(v, "value")?),
+        "bias" => {
+            let b = frame::unpack_f64s(get_str(v, "value")?)?;
+            match b.as_slice() {
+                [one] => FaultAction::Bias(*one),
+                _ => {
+                    return Err(FrameError::BadPayload(
+                        "bias fault arm needs exactly one f64".into(),
+                    ))
+                }
+            }
+        }
+        other => {
+            return Err(FrameError::BadPayload(format!(
+                "unknown fault action {other:?}"
+            )))
+        }
+    };
+    Ok(FaultArm { site, hit, action })
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, FrameError> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| FrameError::BadPayload(format!("frame missing string '{key}'")))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, FrameError> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| FrameError::BadPayload(format!("frame missing numeric '{key}'")))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, FrameError> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .map(|f| f as u64)
+        .ok_or_else(|| FrameError::BadPayload(format!("frame missing numeric '{key}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    /// Serialize → parse → decode → re-encode; the two wire texts must
+    /// agree, which proves the decode lost nothing (Frame fields feed
+    /// encode() directly).
+    fn wire_roundtrip(f: &Frame) -> Frame {
+        let text = f.encode().to_string();
+        let parsed = json::parse(&text).unwrap();
+        let back = decode(&parsed).unwrap();
+        assert_eq!(back.encode().to_string(), text, "re-encode must be stable");
+        back
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        for f in [
+            Frame::Ready { worker: 3, shards: 8 },
+            Frame::Ping { seq: 42 },
+            Frame::Pong { seq: 42 },
+            Frame::Error { seq: 7, shard: Some(2), what: "checksum trip".into() },
+            Frame::Error { seq: 0, shard: None, what: "oops".into() },
+            Frame::Shutdown,
+        ] {
+            let back = wire_roundtrip(&f);
+            assert_eq!(back.kind(), f.kind());
+        }
+    }
+
+    #[test]
+    fn data_frames_roundtrip_bitwise() {
+        let data = vec![1.5, -0.0, f64::NAN, f64::MIN_POSITIVE / 8.0];
+        let crc = frame::checksum(&data);
+        let f = Frame::Apply { seq: 9, shard: 4, data: data.clone(), crc };
+        match wire_roundtrip(&f) {
+            Frame::Apply { seq, shard, data: got, crc: c } => {
+                assert_eq!((seq, shard, c), (9, 4, crc));
+                assert!(got.iter().map(|x| x.to_bits()).eq(data.iter().map(|x| x.to_bits())));
+                assert_eq!(frame::checksum(&got), crc, "checksum must survive the wire");
+            }
+            other => panic!("decoded as {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn init_roundtrips_with_spec_and_faults() {
+        let init = InitMsg {
+            worker: 1,
+            band: vec![16, 16, 16],
+            m: 2,
+            window: WindowKind::KaiserBessel,
+            d: 3,
+            scaled_points: (0..18).map(|i| (i as f64) * 0.01 - 0.05).collect(),
+            spec: ShardSpec::strided(6, 2),
+            faults: vec![
+                FaultArm { site: "worker.apply".into(), hit: 0, action: FaultAction::Panic },
+                FaultArm { site: "worker.apply".into(), hit: 1, action: FaultAction::DelayMs(250) },
+                FaultArm { site: "worker.apply".into(), hit: 2, action: FaultAction::Bias(-3.25) },
+                FaultArm { site: "worker.apply".into(), hit: 3, action: FaultAction::Nan },
+            ],
+        };
+        match wire_roundtrip(&Frame::Init(init.clone())) {
+            Frame::Init(back) => {
+                assert_eq!(back.worker, init.worker);
+                assert_eq!(back.band, init.band);
+                assert_eq!(back.m, init.m);
+                assert_eq!(back.window, init.window);
+                assert_eq!(back.d, init.d);
+                assert_eq!(back.spec, init.spec);
+                assert!(back
+                    .scaled_points
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .eq(init.scaled_points.iter().map(|x| x.to_bits())));
+                assert_eq!(back.faults.len(), 4);
+                assert_eq!(back.faults[0].action, FaultAction::Panic);
+                assert_eq!(back.faults[1].action, FaultAction::DelayMs(250));
+                assert_eq!(back.faults[2].action, FaultAction::Bias(-3.25));
+                assert_eq!(back.faults[3].action, FaultAction::Nan);
+            }
+            other => panic!("decoded as {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_rejected_typed() {
+        let mut o = match Frame::Ping { seq: 1 }.encode() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("v".to_string(), Json::Num(99.0));
+        let got = decode(&Json::Obj(o));
+        assert!(matches!(got, Err(FrameError::Version(99))), "{got:?}");
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_never_panics() {
+        let bad = [
+            r#"{}"#,
+            r#"{"v": 1}"#,
+            r#"{"v": 1, "type": "no-such-type"}"#,
+            r#"{"v": 1, "type": "apply", "seq": 1}"#,
+            r#"{"v": 1, "type": "apply", "seq": 1, "shard": 0, "data": "xyz", "crc": "0000000000000000"}"#,
+            r#"{"v": 1, "type": "apply", "seq": 1, "shard": 0, "data": "", "crc": 12}"#,
+            r#"{"v": 1, "type": "ready", "worker": "x", "shards": 1}"#,
+            r#"{"v": 1, "type": "init", "worker": 0}"#,
+            r#"{"v": "1", "type": "ping", "seq": 0}"#,
+        ];
+        for text in bad {
+            let parsed = json::parse(text).unwrap();
+            let got = decode(&parsed);
+            assert!(got.is_err(), "{text} must be rejected, got {got:?}");
+        }
+        // Init whose embedded spec speaks a future version: rejected
+        // through the spec's own gate.
+        let init = InitMsg {
+            worker: 0,
+            band: vec![8],
+            m: 2,
+            window: WindowKind::Gaussian,
+            d: 1,
+            scaled_points: vec![0.1, 0.2],
+            spec: ShardSpec::contiguous(2, 1),
+            faults: Vec::new(),
+        };
+        let text = Frame::Init(init).encode().to_string();
+        let evil = text.replace(r#""version":1"#, r#""version":7"#);
+        assert_ne!(evil, text, "spec version field must be present to rewrite");
+        let got = decode(&json::parse(&evil).unwrap());
+        assert!(
+            matches!(&got, Err(FrameError::BadPayload(w)) if w.contains("unknown wire version 7")),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn wire_property_roundtrip() {
+        crate::util::proptest::check(
+            crate::util::proptest::Config { cases: 32, seed: 43 },
+            "random data frames survive the full wire stack",
+            |rng| {
+                let n = rng.below(30);
+                let mut data = Vec::with_capacity(n);
+                for _ in 0..n {
+                    data.push(f64::from_bits(rng.next_u64()));
+                }
+                let crc = frame::checksum(&data);
+                let f = if rng.below(2) == 0 {
+                    Frame::Apply { seq: rng.next_u64() % (1 << 50), shard: rng.below(64), data, crc }
+                } else {
+                    Frame::Subgrid { seq: rng.next_u64() % (1 << 50), shard: rng.below(64), data, crc }
+                };
+                // Through real bytes: frame layer + codec together.
+                let mut buf = Vec::new();
+                frame::write_frame(&mut buf, &f.encode()).map_err(|e| e.to_string())?;
+                let json = frame::read_frame(&mut &buf[..]).map_err(|e| e.to_string())?;
+                let back = decode(&json).map_err(|e| e.to_string())?;
+                crate::prop_assert!(
+                    back.encode().to_string() == f.encode().to_string(),
+                    "wire text must be reproduced exactly"
+                );
+                match back {
+                    Frame::Apply { data, crc, .. } | Frame::Subgrid { data, crc, .. } => {
+                        crate::prop_assert!(
+                            frame::checksum(&data) == crc,
+                            "checksum must still match after the round trip"
+                        );
+                    }
+                    _ => unreachable!(),
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,333 @@
+//! The worker side of the dispatcher: a serve loop that answers
+//! [`Frame::Apply`] requests with spread subgrids.
+//!
+//! A worker is *stateless between applies* and holds no kernel or
+//! degree information at all — it owns exactly one
+//! [`crate::nfft::NfftPlan`] plus the per-shard geometry/spread plans,
+//! all rebuilt deterministically from the [`InitMsg`]. The parent
+//! ships shard-local *scaled* inputs (`D^{−1/2}` already applied), the
+//! worker runs phase 1 (adjoint spread into the shard's bounding-box
+//! subgrid) and ships the box back; phases 2+3 (merge → FFT →
+//! multiply → gather) stay in the parent. Because `NfftPlan::new` and
+//! `build_shard_plans_with` are pure functions of the init fields and
+//! the spread consumes bit-identical operands, the returned subgrid is
+//! bitwise equal to what [`crate::shard::ShardedOperator`] would have
+//! produced in-process.
+//!
+//! Every worker builds plans for *all* shards, not just the ones it
+//! is preferred for — reassignment after a peer dies is then a pure
+//! parent-side routing change, with no worker state to migrate.
+//!
+//! Defensive posture: bad requests (checksum trip, unknown shard,
+//! wrong length) are answered with [`Frame::Error`] and the worker
+//! lives on; a closed pipe is a clean exit (the parent is gone, or is
+//! done with us); everything else is a typed [`EngineError`].
+
+use crate::dispatch::frame::{self, FrameError};
+use crate::dispatch::proto::{self, Frame, InitMsg};
+use crate::nfft::NfftPlan;
+use crate::robust::error::EngineError;
+use crate::robust::fault::{self, FaultPlan};
+use crate::shard::{build_shard_plans_with, ShardPlan, SubgridPolicy};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::sync::Arc;
+
+/// Run the worker protocol over an arbitrary byte pipe. The process
+/// transport hands this stdin/stdout; the in-process thread transport
+/// hands it channel-backed pipes. Returns `Ok(())` on orderly
+/// shutdown *or* when the parent simply goes away (closed pipe —
+/// routine during parent teardown and not the worker's error to
+/// report).
+pub fn run_worker<R: Read, W: Write>(reader: R, writer: W) -> Result<(), EngineError> {
+    let mut reader = BufReader::new(reader);
+    let mut writer = BufWriter::new(writer);
+    let init = match read_one(&mut reader) {
+        Ok(Frame::Init(init)) => init,
+        Ok(other) => {
+            return Err(EngineError::invalid(format!(
+                "worker expected an init frame first, got {:?}",
+                other.kind()
+            )))
+        }
+        Err(FrameError::Closed(_)) => return Ok(()),
+        Err(e) => return Err(e.into_engine(usize::MAX, "worker.init")),
+    };
+    let worker = init.worker;
+    if init.faults.is_empty() {
+        return serve(init, &mut reader, &mut writer);
+    }
+    // Chaos arms shipped by a fault-injection test: arm this process's
+    // fault gate around the whole serve loop. Only ever non-empty for
+    // real child processes — the thread transport strips faults so
+    // in-process workers never contend for the parent's global gate.
+    let mut plan = FaultPlan::new();
+    for a in &init.faults {
+        plan = plan.arm(&a.site, a.hit, a.action);
+    }
+    let (out, report) = fault::with_plan(plan, || serve(init, &mut reader, &mut writer));
+    for (site, action) in &report.fired {
+        eprintln!("worker {worker}: injected fault fired at {site}: {action:?}");
+    }
+    out
+}
+
+fn read_one<R: Read>(reader: &mut R) -> Result<Frame, FrameError> {
+    proto::decode(&frame::read_frame(reader)?)
+}
+
+fn serve<R: Read, W: Write>(
+    init: InitMsg,
+    reader: &mut R,
+    writer: &mut W,
+) -> Result<(), EngineError> {
+    let worker = init.worker;
+    let plan = Arc::new(NfftPlan::new(&init.band, init.m, init.window));
+    // Same policy as the parent's ShardedOperator: bounding boxes, so
+    // the exchange object is the compact one and the merge math agrees.
+    let shards = build_shard_plans_with(
+        &plan,
+        &init.scaled_points,
+        init.d,
+        &init.spec,
+        SubgridPolicy::BoundingBox,
+    );
+    send(writer, worker, &Frame::Ready { worker, shards: shards.len() })?;
+    loop {
+        match read_one(reader) {
+            Ok(Frame::Apply { seq, shard, data, crc }) => {
+                let reply = apply_one(&plan, &shards, seq, shard, data, crc);
+                send(writer, worker, &reply)?;
+            }
+            Ok(Frame::Ping { seq }) => send(writer, worker, &Frame::Pong { seq })?,
+            Ok(Frame::Shutdown) => return Ok(()),
+            Ok(other) => send(
+                writer,
+                worker,
+                &Frame::Error {
+                    seq: 0,
+                    shard: None,
+                    what: format!("unexpected {:?} frame mid-serve", other.kind()),
+                },
+            )?,
+            Err(FrameError::Closed(_)) => return Ok(()),
+            Err(e) => return Err(e.into_engine(worker, "worker.recv")),
+        }
+    }
+}
+
+fn send<W: Write>(writer: &mut W, worker: usize, f: &Frame) -> Result<(), EngineError> {
+    frame::write_frame(writer, &f.encode()).map_err(|e| e.into_engine(worker, "worker.send"))
+}
+
+/// Phase 1 for one request. Validation failures come back as
+/// [`Frame::Error`] — the request is poisoned, not the worker.
+fn apply_one(
+    plan: &Arc<NfftPlan>,
+    shards: &[ShardPlan],
+    seq: u64,
+    shard: usize,
+    data: Vec<f64>,
+    crc: u64,
+) -> Frame {
+    let fail = |what: String| Frame::Error { seq, shard: Some(shard), what };
+    let sh = match shards.get(shard) {
+        Some(sh) => sh,
+        None => return fail(format!("unknown shard {shard} (worker has {})", shards.len())),
+    };
+    if frame::checksum(&data) != crc {
+        return fail(format!("checksum trip on apply input for shard {shard}"));
+    }
+    if data.len() != sh.num_points() {
+        return fail(format!(
+            "shard {shard} expects {} points, request carries {}",
+            sh.num_points(),
+            data.len()
+        ));
+    }
+    fault::fire("worker.apply");
+    let mut sub = sh.grids().take();
+    plan.spread_real_boxed(sh.geometry(), &data, sh.bbox(), &mut sub, sh.grids());
+    // Chaos hook AFTER the spread, checksum AFTER the hook: a corrupted
+    // compute result rides out in a checksum-consistent frame, exactly
+    // like a real silent miscomputation — only the parent's end-to-end
+    // ABFT check (`verify::check_apply`) can catch it.
+    fault::corrupt("worker.apply", &mut sub);
+    let crc = frame::checksum(&sub);
+    Frame::Subgrid { seq, shard, data: sub, crc }
+}
+
+/// Entry point for `nfft_krylov worker`: serve stdin/stdout until the
+/// parent shuts us down or disappears. Returns the process exit code;
+/// stdout stays protocol-clean, diagnostics go to stderr.
+pub fn worker_main() -> i32 {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    match run_worker(stdin.lock(), stdout.lock()) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("worker failed: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nfft::WindowKind;
+    use crate::shard::ShardSpec;
+
+    fn test_init(faults: Vec<crate::robust::fault::FaultArm>) -> InitMsg {
+        let n = 10;
+        let d = 2;
+        let mut pts = Vec::with_capacity(n * d);
+        let mut rng = crate::data::rng::Rng::seed_from(7);
+        for _ in 0..n * d {
+            // ρ-scaled coordinates live in the window-safe band.
+            pts.push(rng.uniform_in(-0.2, 0.2));
+        }
+        InitMsg {
+            worker: 0,
+            band: vec![8, 8],
+            m: 2,
+            window: WindowKind::KaiserBessel,
+            d,
+            scaled_points: pts,
+            spec: ShardSpec::strided(n, 3),
+            faults,
+        }
+    }
+
+    /// Drive a full conversation through in-memory byte pipes and
+    /// check the worker's subgrid is bitwise what the same plan
+    /// computes locally.
+    #[test]
+    fn worker_serves_bitwise_identical_subgrids() {
+        let init = test_init(Vec::new());
+        let plan = Arc::new(NfftPlan::new(&init.band, init.m, init.window));
+        let shards = build_shard_plans_with(
+            &plan,
+            &init.scaled_points,
+            init.d,
+            &init.spec,
+            SubgridPolicy::BoundingBox,
+        );
+        let mut request = Vec::new();
+        frame::write_frame(&mut request, &Frame::Init(init.clone()).encode()).unwrap();
+        let mut locals = Vec::new();
+        for s in 0..shards.len() {
+            let local: Vec<f64> = (0..shards[s].num_points())
+                .map(|i| 0.25 * (i as f64) - 0.6)
+                .collect();
+            let crc = frame::checksum(&local);
+            frame::write_frame(
+                &mut request,
+                &Frame::Apply { seq: 1, shard: s, data: local.clone(), crc }.encode(),
+            )
+            .unwrap();
+            locals.push(local);
+        }
+        frame::write_frame(&mut request, &Frame::Ping { seq: 9 }.encode()).unwrap();
+        frame::write_frame(&mut request, &Frame::Shutdown.encode()).unwrap();
+
+        let mut replies = Vec::new();
+        run_worker(&request[..], &mut replies).unwrap();
+
+        let mut r = &replies[..];
+        match read_one(&mut r).unwrap() {
+            Frame::Ready { worker, shards: k } => assert_eq!((worker, k), (0, 3)),
+            other => panic!("expected ready, got {}", other.kind()),
+        }
+        for s in 0..shards.len() {
+            match read_one(&mut r).unwrap() {
+                Frame::Subgrid { seq, shard, data, crc } => {
+                    assert_eq!((seq, shard), (1, s));
+                    assert_eq!(frame::checksum(&data), crc);
+                    let mut want = shards[s].grids().take();
+                    plan.spread_real_boxed(
+                        shards[s].geometry(),
+                        &locals[s],
+                        shards[s].bbox(),
+                        &mut want,
+                        shards[s].grids(),
+                    );
+                    assert_eq!(data.len(), want.len());
+                    assert!(
+                        data.iter().map(|x| x.to_bits()).eq(want.iter().map(|x| x.to_bits())),
+                        "remote spread must be bitwise identical for shard {s}"
+                    );
+                }
+                other => panic!("expected subgrid, got {}", other.kind()),
+            }
+        }
+        match read_one(&mut r).unwrap() {
+            Frame::Pong { seq } => assert_eq!(seq, 9),
+            other => panic!("expected pong, got {}", other.kind()),
+        }
+        assert!(matches!(read_one(&mut r), Err(FrameError::Closed(_))), "stream must end");
+    }
+
+    #[test]
+    fn bad_requests_get_error_frames_not_death() {
+        let init = test_init(Vec::new());
+        let good: Vec<f64> = vec![1.0; 4]; // strided(10,3): shard 0 has 4 points
+        let good_crc = frame::checksum(&good);
+        let mut request = Vec::new();
+        frame::write_frame(&mut request, &Frame::Init(init).encode()).unwrap();
+        // Wrong checksum, unknown shard, wrong length — then a valid
+        // apply proving the worker survived all three.
+        frame::write_frame(
+            &mut request,
+            &Frame::Apply { seq: 1, shard: 0, data: good.clone(), crc: good_crc ^ 1 }.encode(),
+        )
+        .unwrap();
+        frame::write_frame(
+            &mut request,
+            &Frame::Apply { seq: 2, shard: 40, data: good.clone(), crc: good_crc }.encode(),
+        )
+        .unwrap();
+        frame::write_frame(
+            &mut request,
+            &Frame::Apply { seq: 3, shard: 0, data: vec![1.0; 9], crc: frame::checksum(&[1.0; 9]) }
+                .encode(),
+        )
+        .unwrap();
+        frame::write_frame(
+            &mut request,
+            &Frame::Apply { seq: 4, shard: 0, data: good, crc: good_crc }.encode(),
+        )
+        .unwrap();
+        frame::write_frame(&mut request, &Frame::Shutdown.encode()).unwrap();
+
+        let mut replies = Vec::new();
+        run_worker(&request[..], &mut replies).unwrap();
+        let mut r = &replies[..];
+        assert!(matches!(read_one(&mut r).unwrap(), Frame::Ready { .. }));
+        for want_seq in [1u64, 2, 3] {
+            match read_one(&mut r).unwrap() {
+                Frame::Error { seq, shard: Some(0) | Some(40), .. } => assert_eq!(seq, want_seq),
+                other => panic!("request {want_seq}: expected error, got {}", other.kind()),
+            }
+        }
+        assert!(
+            matches!(read_one(&mut r).unwrap(), Frame::Subgrid { seq: 4, .. }),
+            "worker must still serve after rejecting three bad requests"
+        );
+    }
+
+    #[test]
+    fn non_init_first_frame_is_invalid_input() {
+        let mut request = Vec::new();
+        frame::write_frame(&mut request, &Frame::Ping { seq: 0 }.encode()).unwrap();
+        let mut replies = Vec::new();
+        let err = run_worker(&request[..], &mut replies).unwrap_err();
+        assert_eq!(err.class(), "invalid-input");
+    }
+
+    #[test]
+    fn closed_pipe_before_init_is_a_clean_exit() {
+        let mut replies = Vec::new();
+        assert!(run_worker(&[][..], &mut replies).is_ok());
+        assert!(replies.is_empty());
+    }
+}

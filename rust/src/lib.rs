@@ -45,6 +45,13 @@
 //!   into the shared frequency stage, and fans the forward transform
 //!   back out per shard. See its module docs for the execution-layer
 //!   map (plan → geometry → shards → coordinator).
+//! * [`dispatch`] — the multi-process shard dispatcher: worker replicas
+//!   (child processes in `worker` mode, or in-process threads) serve
+//!   the per-shard adjoint spread over a checksummed, versioned frame
+//!   protocol; the parent handles deadlines, heartbeats, seeded-jitter
+//!   respawn backoff and straggler rebalancing, and falls back to the
+//!   in-process spread so every failure recovers **bitwise identical**.
+//!   See `docs/DISTRIBUTED.md`.
 //! * [`data`] — dataset generators (spiral, crescent-fullmoon, synthetic
 //!   image, blobs) and a deterministic PRNG substrate.
 //! * [`apps`] — the paper's applications: spectral clustering (§6.2.1),
@@ -81,6 +88,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dispatch;
 pub mod fastsum;
 pub mod fft;
 pub mod graph;

@@ -9,6 +9,9 @@
 //!   krr             kernel ridge regression (§6.3)
 //!   artifacts-check cross-check PJRT artifacts vs the native engine
 //!   serve           run a coordinator worker pool over a job script
+//!   worker          dispatcher worker mode: speak the frame protocol
+//!                   on stdin/stdout (spawned by the shard dispatcher,
+//!                   not meant for interactive use)
 
 use nfft_krylov::cli::Args;
 use nfft_krylov::config::RunConfig;
@@ -20,11 +23,17 @@ use nfft_krylov::data::spiral::{generate, SpiralParams};
 use nfft_krylov::krylov::cg::CgOptions;
 use nfft_krylov::krylov::lanczos::LanczosOptions;
 
-const USAGE: &str = "usage: nfft-krylov <eig|solve|cluster|ssl-phasefield|ssl-kernel|krr|artifacts-check|serve> \
+const USAGE: &str = "usage: nfft-krylov <eig|solve|cluster|ssl-phasefield|ssl-kernel|krr|artifacts-check|serve|worker> \
 [--n N] [--k K] [--sigma S] [--setup 1|2|3] [--engine native|hlo|dense] [--seed S] [--tol T] \
 [--trace-out FILE]";
 
 fn main() {
+    // Dispatcher worker mode bypasses normal argument parsing: stdout
+    // belongs to the frame protocol, so nothing may print before the
+    // serve loop owns it.
+    if std::env::args().nth(1).as_deref() == Some("worker") {
+        std::process::exit(nfft_krylov::dispatch::worker_main());
+    }
     let args = match Args::parse_env() {
         Ok(a) => a,
         Err(e) => {

@@ -187,6 +187,19 @@ impl NfftPlan {
         &self.n_band
     }
 
+    /// Window cut-off parameter `m` (shared by every axis).
+    pub fn window_m(&self) -> usize {
+        self.windows[0].m
+    }
+
+    /// Window family the plan was built with. Together with
+    /// [`Self::bandwidth`] and [`Self::window_m`] this is everything a
+    /// remote worker needs to rebuild a bitwise-identical plan
+    /// (`NfftPlan::new` is deterministic in its arguments).
+    pub fn window_kind(&self) -> WindowKind {
+        self.windows[0].kind
+    }
+
     pub fn num_freq(&self) -> usize {
         self.total_freq
     }

@@ -25,9 +25,18 @@ use std::sync::atomic::{fence, AtomicU64, Ordering};
 use crate::util::json::Json;
 
 /// Job kinds with a stable slot encoding; anything unrecognised maps
-/// to `"other"`. Kept in sync with `Job::kind`.
-const KINDS: [&str; 7] =
-    ["matvec", "block-matvec", "eig", "block-eig", "ssl-solve", "hybrid-nystrom", "other"];
+/// to `"other"`. Kept in sync with `Job::kind`, plus `"dispatch"` for
+/// the per-worker exchange records of `crate::dispatch`.
+const KINDS: [&str; 8] = [
+    "matvec",
+    "block-matvec",
+    "eig",
+    "block-eig",
+    "ssl-solve",
+    "hybrid-nystrom",
+    "dispatch",
+    "other",
+];
 
 fn kind_code(kind: &str) -> u64 {
     KINDS.iter().position(|k| *k == kind).unwrap_or(KINDS.len() - 1) as u64
@@ -36,8 +45,17 @@ fn kind_code(kind: &str) -> u64 {
 /// Error classes with a stable slot encoding; index 0 is "no error".
 /// Kept a superset of `robust::error::CLASSES` plus an `"other"`
 /// catch-all for forward compatibility.
-const ERR_CLASSES: [&str; 8] =
-    ["", "invalid-input", "breakdown", "timeout", "panic", "cancelled", "silent-corruption", "other"];
+const ERR_CLASSES: [&str; 9] = [
+    "",
+    "invalid-input",
+    "breakdown",
+    "timeout",
+    "panic",
+    "cancelled",
+    "silent-corruption",
+    "worker-lost",
+    "other",
+];
 
 fn err_code(err: Option<&str>) -> u64 {
     match err {
@@ -292,6 +310,28 @@ mod tests {
         let arr = j.as_arr().unwrap();
         assert_eq!(arr[0].get("err").unwrap().as_str(), Some("silent-corruption"));
         assert_eq!(arr[0].get("attempt"), Some(&Json::Num(2.0)));
+    }
+
+    #[test]
+    fn worker_lost_and_dispatch_kind_roundtrip() {
+        // The dispatcher's per-worker records: the "dispatch" kind and
+        // the "worker-lost" error class both have stable slots.
+        let ring = FlightRecorder::new(4);
+        ring.record(&FlightRecord {
+            err: Some("worker-lost"),
+            ok: false,
+            ..rec(11, "dispatch", false)
+        });
+        let snap = ring.snapshot();
+        assert_eq!(snap[0].kind, "dispatch");
+        assert_eq!(snap[0].err, Some("worker-lost"));
+        // Every robust error class has its own slot (superset pin).
+        for class in crate::robust::error::CLASSES {
+            assert!(
+                ERR_CLASSES.contains(&class),
+                "flight ERR_CLASSES must cover robust class '{class}'"
+            );
+        }
     }
 
     #[test]

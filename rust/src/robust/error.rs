@@ -1,6 +1,6 @@
 //! The engine-wide error taxonomy.
 //!
-//! Every failure the coordinator can hand back is one of these six
+//! Every failure the coordinator can hand back is one of these seven
 //! variants; `class()` gives the stable short string that lands in
 //! flight-recorder entries and Prometheus labels, and `retryable()`
 //! drives the multi-rung recovery ladder (see `docs/ROBUSTNESS.md`).
@@ -38,12 +38,27 @@ pub enum EngineError {
     /// but violates an algebraic invariant of the operator.
     #[error("silent corruption detected at {site}: {what}")]
     SilentCorruption { site: &'static str, what: String },
+
+    /// A dispatcher worker *process* died, hung past its deadline, or
+    /// broke its framing mid-exchange (`crate::dispatch`). Unlike
+    /// [`EngineError::WorkerPanic`] (an in-process worker thread whose
+    /// panic was caught), the process and its pipes are gone; the
+    /// dispatcher reassigns its shards and respawns it with backoff.
+    #[error("worker {worker} lost during {stage}: {reason}")]
+    WorkerLost { worker: usize, stage: &'static str, reason: String },
 }
 
 /// Stable short names, in the order of [`EngineError`]'s variants.
 /// `flight::ERR_CLASSES` must stay a superset of these strings.
-pub const CLASSES: [&str; 6] =
-    ["invalid-input", "breakdown", "timeout", "panic", "cancelled", "silent-corruption"];
+pub const CLASSES: [&str; 7] = [
+    "invalid-input",
+    "breakdown",
+    "timeout",
+    "panic",
+    "cancelled",
+    "silent-corruption",
+    "worker-lost",
+];
 
 impl EngineError {
     /// Shorthand constructor for admission failures.
@@ -61,20 +76,22 @@ impl EngineError {
             EngineError::WorkerPanic { .. } => "panic",
             EngineError::Cancelled { .. } => "cancelled",
             EngineError::SilentCorruption { .. } => "silent-corruption",
+            EngineError::WorkerLost { .. } => "worker-lost",
         }
     }
 
     /// Should the coordinator climb the recovery ladder for this job?
-    /// Panics, breakdowns, and checksum trips may be environmental —
-    /// bad SIMD dispatch, a transient poisoned buffer, a bit flip —
-    /// and are worth recovery attempts; invalid input and expired
-    /// deadlines are not.
+    /// Panics, breakdowns, checksum trips, and lost worker processes
+    /// may be environmental — bad SIMD dispatch, a transient poisoned
+    /// buffer, a bit flip, an OOM-killed child — and are worth
+    /// recovery attempts; invalid input and expired deadlines are not.
     pub fn retryable(&self) -> bool {
         matches!(
             self,
             EngineError::WorkerPanic { .. }
                 | EngineError::NumericalBreakdown { .. }
                 | EngineError::SilentCorruption { .. }
+                | EngineError::WorkerLost { .. }
         )
     }
 }
@@ -92,6 +109,7 @@ mod tests {
             EngineError::WorkerPanic { job: "eig", message: "boom".into() },
             EngineError::Cancelled { reason: "caller".into() },
             EngineError::SilentCorruption { site: "cg.apply", what: "checksum".into() },
+            EngineError::WorkerLost { worker: 1, stage: "recv", reason: "eof".into() },
         ];
         let classes: Vec<&str> = all.iter().map(|e| e.class()).collect();
         assert_eq!(classes, CLASSES);
@@ -103,6 +121,8 @@ mod tests {
         assert!(EngineError::NumericalBreakdown { solver: "cg", reason: String::new() }
             .retryable());
         assert!(EngineError::SilentCorruption { site: "cg.apply", what: String::new() }
+            .retryable());
+        assert!(EngineError::WorkerLost { worker: 0, stage: "send", reason: String::new() }
             .retryable());
         assert!(!EngineError::invalid("x").retryable());
         assert!(!EngineError::Timeout { budget_ms: 1 }.retryable());

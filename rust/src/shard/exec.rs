@@ -110,10 +110,18 @@ impl ShardExecutor {
     }
 }
 
+/// Version of the [`ShardSpec`] JSON wire encoding (and of the frame
+/// protocol of `crate::dispatch`, which embeds specs). Bump on any
+/// incompatible shape change; decoders reject unknown versions with a
+/// typed error instead of misreading the payload.
+pub const SPEC_WIRE_VERSION: u64 = 1;
+
 impl ShardSpec {
-    /// Plain-JSON encoding: `{"n": …, "shards": [[…], …]}`.
+    /// Plain-JSON encoding:
+    /// `{"version": 1, "n": …, "shards": [[…], …]}`.
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
+        obj.insert("version".to_string(), Json::Num(SPEC_WIRE_VERSION as f64));
         obj.insert("n".to_string(), Json::Num(self.num_points() as f64));
         obj.insert(
             "shards".to_string(),
@@ -129,7 +137,23 @@ impl ShardSpec {
 
     /// Decode and validate a spec produced by [`ShardSpec::to_json`]
     /// (or by an external placement policy emitting the same shape).
+    /// A missing `version` decodes as version 1 (the pre-versioned
+    /// encoding had the same shape); any other version is rejected —
+    /// a newer producer must not be silently misread.
     pub fn from_json(v: &Json) -> anyhow::Result<ShardSpec> {
+        match v.get("version") {
+            None => {}
+            Some(ver) => {
+                let ver = ver
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("shard spec: non-numeric 'version'"))?;
+                if ver as u64 != SPEC_WIRE_VERSION {
+                    anyhow::bail!(
+                        "shard spec: unknown wire version {ver} (this build speaks {SPEC_WIRE_VERSION})"
+                    );
+                }
+            }
+        }
         let n = v
             .get("n")
             .and_then(Json::as_usize)
@@ -203,8 +227,10 @@ mod tests {
     fn spec_json_roundtrip() {
         let spec = ShardSpec::strided(11, 3);
         let text = spec.to_json().to_string();
-        // Survives a genuine serialize → parse → decode round trip.
+        // Survives a genuine serialize → parse → decode round trip,
+        // and announces its wire version.
         let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed.get("version").and_then(Json::as_usize), Some(1));
         let back = ShardSpec::from_json(&parsed).unwrap();
         assert_eq!(back, spec);
         // Empty shards survive too.
@@ -212,6 +238,19 @@ mod tests {
             ShardSpec::from_assignments(3, vec![vec![0, 1, 2], Vec::new()]).unwrap();
         let back = ShardSpec::from_json(&json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn version_field_gates_decoding() {
+        let bad = |s: &str| ShardSpec::from_json(&json::parse(s).unwrap());
+        // Missing version == the pre-versioned v1 encoding.
+        assert!(bad(r#"{"n": 1, "shards": [[0]]}"#).is_ok());
+        // The current version decodes.
+        assert!(bad(r#"{"version": 1, "n": 1, "shards": [[0]]}"#).is_ok());
+        // Unknown or malformed versions are typed rejections.
+        let err = bad(r#"{"version": 2, "n": 1, "shards": [[0]]}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown wire version 2"), "{err}");
+        assert!(bad(r#"{"version": "x", "n": 1, "shards": [[0]]}"#).is_err());
     }
 
     #[test]

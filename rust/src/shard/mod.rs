@@ -48,15 +48,16 @@
 //!
 //! [`partition`] supplies the placement policies (contiguous, strided,
 //! Morton space-filling tiles) as explicit, validated, JSON-encodable
-//! [`ShardSpec`]s; [`exec`] carries the per-shard metrics and the wire
-//! encoding that a future multi-process dispatcher would broadcast.
+//! [`ShardSpec`]s; [`exec`] carries the per-shard metrics and the
+//! versioned wire encoding that the multi-process dispatcher
+//! ([`crate::dispatch`]) broadcasts to its workers.
 
 pub mod exec;
 pub mod operator;
 pub mod partition;
 pub mod plan;
 
-pub use exec::{timings_json, ShardExecutor};
+pub use exec::{timings_json, ShardExecutor, SPEC_WIRE_VERSION};
 pub use operator::{ShardedMode, ShardedOperator};
 pub use partition::{PartitionError, PartitionStrategy, ShardSpec};
 pub use plan::{build_shard_plans, build_shard_plans_with, ShardPlan, SubgridPolicy};

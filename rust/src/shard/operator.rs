@@ -291,53 +291,58 @@ impl ShardedOperator {
         }
     }
 
-    /// Apply to one column. Mirrors the unsharded arithmetic exactly:
-    /// with one shard each phase reduces to the [`FastsumOperator`] /
-    /// [`crate::fastsum::NormalizedAdjacency`] operation sequence.
-    fn apply_one(&self, x: &[f64], y: &mut [f64]) {
-        // Infallible path: a never-token cannot stop, and the fault
-        // site is a single disarmed load outside the chaos suite.
-        let _ = self.apply_one_guarded(x, y, &CancelToken::never());
+    /// Shard-local input for shard `s`: `x` gathered at the shard's
+    /// indices with the `D^{−1/2}` input scaling applied — exactly the
+    /// vector phase 1 spreads. The dispatcher ([`crate::dispatch`])
+    /// ships this to the worker owning shard `s`, so the remote spread
+    /// consumes bit-identical operands.
+    pub(crate) fn shard_local_input(&self, s: usize, x: &[f64]) -> Vec<f64> {
+        let sh = &self.shards[s];
+        let mut local = Vec::with_capacity(sh.num_points());
+        for &i in sh.indices() {
+            local.push(x[i] * self.in_scale(i));
+        }
+        local
     }
 
-    /// [`Self::apply_one`] with cooperative cancellation. The token is
-    /// probed at the three phase boundaries; an early exit returns
-    /// every pooled buffer (shard subgrids, real grid, half spectrum)
-    /// before surfacing the typed error, so a cancelled apply leaks
-    /// nothing and the next apply finds its pools intact.
-    fn apply_one_guarded(
+    /// Phase 1 for one shard: adjoint-spread `local` (the output of
+    /// [`Self::shard_local_input`]) into the shard's boxed real
+    /// subgrid — the identical call a dispatcher worker runs remotely.
+    /// The returned buffer comes from the shard's pool; hand it back
+    /// via [`Self::return_subgrid`] or feed it to
+    /// [`Self::finish_apply`], which pools it after the merge.
+    pub(crate) fn spread_shard(&self, s: usize, local: &[f64]) -> Vec<f64> {
+        let sh = &self.shards[s];
+        let mut sub = sh.grids().take();
+        self.plan.spread_real_boxed(sh.geometry(), local, sh.bbox(), &mut sub, sh.grids());
+        sub
+    }
+
+    /// Return a subgrid obtained from [`Self::spread_shard`] (or an
+    /// owned buffer of the same length) to shard `s`'s pool.
+    pub(crate) fn return_subgrid(&self, s: usize, sub: Vec<f64>) {
+        self.shards[s].grids().put(sub);
+    }
+
+    /// Phases 2 + 3 given the collected phase-1 subgrids: fixed-order
+    /// merge → ONE r2c FFT → fused half-spectrum multiply → ONE c2r →
+    /// per-shard gather with diagonal/normalization corrections.
+    ///
+    /// `subs` holds `(shard, boxed subgrid)` pairs for every non-empty
+    /// shard; arrival order does not matter — the merge sorts by shard
+    /// id, so a dispatcher feeding remotely-computed subgrids (which
+    /// complete in whatever order the workers reply) produces the
+    /// bitwise-identical result to the in-process path. Buffers are
+    /// returned to the shard pools in every exit path.
+    pub(crate) fn finish_apply(
         &self,
         x: &[f64],
+        mut subs: Vec<(usize, Vec<f64>)>,
         y: &mut [f64],
         token: &CancelToken,
     ) -> Result<(), EngineError> {
-        fault::fire("shard.apply");
-        token.check()?;
         let normalized = self.mode == ShardedMode::Normalized;
-        let _span_all = obs::span_cat("shard.apply", "shard");
-        let t_all = Timer::start();
-        // Phase 1: shard-local gather + adjoint spread into REAL
-        // bounding-box subgrids (the exchange object). Empty shards
-        // (legal in hand-written/random specs) contribute nothing and
-        // are skipped — no subgrid to zero, no merge operand.
-        let subs: Vec<(usize, Vec<f64>)> = self
-            .shards
-            .par_iter()
-            .enumerate()
-            .filter(|(_, sh)| sh.num_points() > 0)
-            .map(|(s, sh)| {
-                let _span = obs::span_id("shard.spread", "shard", s as u64);
-                let t = Timer::start();
-                let mut local = Vec::with_capacity(sh.num_points());
-                for &i in sh.indices() {
-                    local.push(x[i] * self.in_scale(i));
-                }
-                let mut sub = sh.grids().take();
-                self.plan.spread_real_boxed(sh.geometry(), &local, sh.bbox(), &mut sub, sh.grids());
-                self.exec.record(s, "spread", t.elapsed_secs());
-                (s, sub)
-            })
-            .collect();
+        subs.sort_unstable_by_key(|&(s, _)| s);
         if let Err(e) = token.check() {
             for (s, sub) in subs {
                 self.shards[s].grids().put(sub);
@@ -424,6 +429,54 @@ impl ShardedOperator {
                 y[i] = v;
             }
         }
+        Ok(())
+    }
+
+    /// Apply to one column. Mirrors the unsharded arithmetic exactly:
+    /// with one shard each phase reduces to the [`FastsumOperator`] /
+    /// [`crate::fastsum::NormalizedAdjacency`] operation sequence.
+    fn apply_one(&self, x: &[f64], y: &mut [f64]) {
+        // Infallible path: a never-token cannot stop, and the fault
+        // site is a single disarmed load outside the chaos suite.
+        let _ = self.apply_one_guarded(x, y, &CancelToken::never());
+    }
+
+    /// [`Self::apply_one`] with cooperative cancellation. The token is
+    /// probed at the three phase boundaries; an early exit returns
+    /// every pooled buffer (shard subgrids, real grid, half spectrum)
+    /// before surfacing the typed error, so a cancelled apply leaks
+    /// nothing and the next apply finds its pools intact.
+    fn apply_one_guarded(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        token: &CancelToken,
+    ) -> Result<(), EngineError> {
+        fault::fire("shard.apply");
+        token.check()?;
+        let _span_all = obs::span_cat("shard.apply", "shard");
+        let t_all = Timer::start();
+        // Phase 1: shard-local gather + adjoint spread into REAL
+        // bounding-box subgrids (the exchange object). Empty shards
+        // (legal in hand-written/random specs) contribute nothing and
+        // are skipped — no subgrid to zero, no merge operand. The
+        // dispatcher replaces exactly this loop with remote workers;
+        // phases 2 + 3 are shared via [`Self::finish_apply`].
+        let subs: Vec<(usize, Vec<f64>)> = self
+            .shards
+            .par_iter()
+            .enumerate()
+            .filter(|(_, sh)| sh.num_points() > 0)
+            .map(|(s, _)| {
+                let _span = obs::span_id("shard.spread", "shard", s as u64);
+                let t = Timer::start();
+                let local = self.shard_local_input(s, x);
+                let sub = self.spread_shard(s, &local);
+                self.exec.record(s, "spread", t.elapsed_secs());
+                (s, sub)
+            })
+            .collect();
+        self.finish_apply(x, subs, y, token)?;
         self.exec.record_global("total", t_all.elapsed_secs());
         Ok(())
     }

@@ -1,0 +1,223 @@
+//! Dispatcher chaos suite over **real worker processes**: the test
+//! binary spawns the crate's own CLI in `worker` mode (via
+//! `CARGO_BIN_EXE_nfft_krylov`) and drives the frame protocol through
+//! genuine pipes, SIGKILLs and process deaths — the failure modes the
+//! in-process thread transport cannot produce.
+//!
+//! Every test holds the same acceptance bar: whatever the pool
+//! survives, the dispatched apply must stay **bitwise identical**
+//! (`to_bits`) to the in-process [`ShardedOperator`], and the failure
+//! must be visible in the counters (`nfft_workers_lost_total`,
+//! `nfft_workers_respawned_total`) and the stats/report JSON.
+//!
+//! Chaos is deterministic: arms ship to a chosen worker slot inside
+//! its init frame (`DispatchConfig::worker_faults`), so "worker 0
+//! panics on its first apply" is a reproducible event, not a race.
+//! Respawned workers start clean, which is what lets recovery succeed.
+
+use nfft_krylov::coordinator::{Backend, Coordinator, Job, JobResult, Metrics};
+use nfft_krylov::data::rng::Rng;
+use nfft_krylov::dispatch::{DispatchConfig, DispatchedOperator};
+use nfft_krylov::fastsum::{FastsumOperator, FastsumParams, Kernel};
+use nfft_krylov::graph::operator::LinearOperator;
+use nfft_krylov::robust::fault::{FaultAction, FaultArm};
+use nfft_krylov::shard::{ShardSpec, ShardedOperator, SubgridPolicy};
+use nfft_krylov::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The crate's own binary; `<bin> worker` speaks the frame protocol.
+fn worker_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_nfft_krylov")
+}
+
+fn spiral_points(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed_from(seed);
+    nfft_krylov::data::spiral::generate(
+        nfft_krylov::data::spiral::SpiralParams { per_class: n / 5, ..Default::default() },
+        &mut rng,
+    )
+    .points
+}
+
+fn process_cfg(workers: usize) -> DispatchConfig {
+    let mut cfg = DispatchConfig::process(workers, worker_bin());
+    cfg.backoff_base = Duration::from_millis(5);
+    cfg.backoff_max = Duration::from_millis(100);
+    cfg
+}
+
+fn stat(d: &DispatchedOperator, key: &str) -> f64 {
+    d.stats_json().get(key).and_then(Json::as_f64).unwrap()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+/// One parent-side sharded operator and its dispatched twin over
+/// `workers` real child processes, sharing plan and shard state.
+fn pair(
+    n: usize,
+    kernel: Kernel,
+    cfg: DispatchConfig,
+) -> (ShardedOperator, DispatchedOperator) {
+    let points = spiral_points(n, 21);
+    let parent = FastsumOperator::new(&points, 3, kernel, FastsumParams::setup2());
+    let spec = ShardSpec::strided(n, 3);
+    let sharded =
+        ShardedOperator::from_fastsum_with(&parent, spec.clone(), SubgridPolicy::BoundingBox);
+    let dispatched = DispatchedOperator::from_fastsum(&parent, spec, cfg);
+    (sharded, dispatched)
+}
+
+#[test]
+fn process_workers_serve_all_kernels_bitwise() {
+    let n = 85;
+    let kernels = [
+        Kernel::Gaussian { sigma: 3.5 },
+        Kernel::LaplacianRbf { sigma: 3.5 },
+        Kernel::Multiquadric { c: 1.0 },
+        Kernel::InverseMultiquadric { c: 1.0 },
+    ];
+    let mut rng = Rng::seed_from(22);
+    let x = rng.normal_vec(n);
+    for kernel in kernels {
+        let (sharded, dispatched) = pair(n, kernel, process_cfg(2));
+        let live_pids = dispatched.worker_pids().iter().filter(|p| p.is_some()).count();
+        assert!(live_pids >= 2, "{kernel:?}: expected 2 live child processes, got {live_pids}");
+        assert_bits_eq(&sharded.apply_vec(&x), &dispatched.apply_vec(&x), &format!("{kernel:?}"));
+        assert_eq!(stat(&dispatched, "fallback_shards"), 0.0, "{kernel:?}: no local fallback");
+        assert_eq!(stat(&dispatched, "lost"), 0.0, "{kernel:?}: no worker loss");
+    }
+}
+
+#[test]
+fn worker_process_panic_recovers_bitwise_and_counts() {
+    let n = 85;
+    let mut cfg = process_cfg(2);
+    // Worker 0's process panics on its first apply — the child dies for
+    // real (stdout EOF mid-protocol), the parent requeues its shards.
+    cfg.worker_faults = vec![(
+        0,
+        FaultArm { site: "worker.apply".into(), hit: 0, action: FaultAction::Panic },
+    )];
+    let (sharded, dispatched) = pair(n, Kernel::Gaussian { sigma: 3.5 }, cfg);
+    let metrics = Arc::new(Metrics::new());
+    dispatched.bind_metrics(metrics.clone());
+    let mut rng = Rng::seed_from(23);
+    let x = rng.normal_vec(n);
+    assert_bits_eq(&sharded.apply_vec(&x), &dispatched.apply_vec(&x), "panic recovery");
+    assert!(stat(&dispatched, "lost") >= 1.0, "the dead child must be counted");
+    let lost = metrics.workers_lost.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(lost >= 1, "bound metrics must see the loss, got {lost}");
+    let text = metrics.prometheus_text();
+    assert!(text.contains("nfft_workers_lost_total"), "{text}");
+    assert!(text.contains("nfft_workers_respawned_total"), "{text}");
+    // Respawns start clean: after the backoff the pool heals and the
+    // next apply is served remotely, still bitwise.
+    std::thread::sleep(Duration::from_millis(150));
+    assert_bits_eq(&sharded.apply_vec(&x), &dispatched.apply_vec(&x), "after respawn");
+    assert!(stat(&dispatched, "respawned") >= 1.0);
+}
+
+#[test]
+fn sigkill_mid_apply_recovers_bitwise() {
+    let n = 85;
+    let mut cfg = process_cfg(2);
+    // Hold worker 0 mid-apply (after it received the shard, before it
+    // replies) so the SIGKILL lands mid-flight, not between applies.
+    cfg.worker_faults = vec![(
+        0,
+        FaultArm { site: "worker.apply".into(), hit: 0, action: FaultAction::DelayMs(4000) },
+    )];
+    let (sharded, dispatched) = pair(n, Kernel::Gaussian { sigma: 3.5 }, cfg);
+    let pid = dispatched.worker_pids()[0].expect("worker 0 must be a live child process");
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(300));
+        let status = std::process::Command::new("kill")
+            .args(["-9", &pid.to_string()])
+            .status()
+            .expect("spawn kill");
+        assert!(status.success(), "kill -9 {pid} failed");
+    });
+    let mut rng = Rng::seed_from(24);
+    let x = rng.normal_vec(n);
+    // The apply starts while worker 0 is stalled in its delay; the kill
+    // turns the stall into an EOF and the parent reroutes the shards.
+    assert_bits_eq(&sharded.apply_vec(&x), &dispatched.apply_vec(&x), "SIGKILL mid-apply");
+    killer.join().unwrap();
+    assert!(stat(&dispatched, "lost") >= 1.0, "SIGKILLed worker must be counted lost");
+}
+
+#[test]
+fn hung_worker_hits_deadline_and_falls_back_locally() {
+    let n = 85;
+    let mut cfg = process_cfg(2);
+    cfg.apply_deadline = Duration::from_millis(300);
+    // Worker 0 sleeps far past the deadline; no external kill this
+    // time — expiry itself must lose the straggler and finish the
+    // apply with the in-process spread.
+    cfg.worker_faults = vec![(
+        0,
+        FaultArm { site: "worker.apply".into(), hit: 0, action: FaultAction::DelayMs(5000) },
+    )];
+    let (sharded, dispatched) = pair(n, Kernel::Gaussian { sigma: 3.5 }, cfg);
+    let mut rng = Rng::seed_from(25);
+    let x = rng.normal_vec(n);
+    assert_bits_eq(&sharded.apply_vec(&x), &dispatched.apply_vec(&x), "deadline fallback");
+    assert!(stat(&dispatched, "lost") >= 1.0);
+    assert!(stat(&dispatched, "fallback_shards") >= 1.0, "stragglers must spread locally");
+}
+
+#[test]
+fn coordinator_dispatched_backend_over_processes_reports_counters() {
+    let n = 85;
+    let mut cfg = process_cfg(2);
+    cfg.worker_faults = vec![(
+        0,
+        FaultArm { site: "worker.apply".into(), hit: 0, action: FaultAction::Panic },
+    )];
+    let points = spiral_points(n, 26);
+    let parent = FastsumOperator::new(
+        &points,
+        3,
+        Kernel::Gaussian { sigma: 3.5 },
+        FastsumParams::setup2(),
+    );
+    let spec = ShardSpec::strided(n, 3);
+    let dispatched =
+        Arc::new(DispatchedOperator::from_fastsum(&parent, spec, cfg));
+    let op: Arc<dyn LinearOperator> = dispatched.inner().clone();
+    let mut c = Coordinator::new(op, 1);
+    c.attach_dispatcher(dispatched).unwrap();
+    let mut rng = Rng::seed_from(27);
+    let x = rng.normal_vec(n);
+    let local = match c.submit_with_backend(Job::Matvec { x: x.clone() }, Backend::InProcess).wait()
+    {
+        JobResult::Matvec(y) => y,
+        other => panic!("in-process backend failed: {:?}", other.error()),
+    };
+    let remote = match c.submit_with_backend(Job::Matvec { x }, Backend::Dispatched).wait() {
+        JobResult::Matvec(y) => y,
+        other => panic!("dispatched backend failed: {:?}", other.error()),
+    };
+    assert_bits_eq(&local, &remote, "coordinator backends");
+    // The worker death shows up in the coordinator's own registry: the
+    // report JSON and the Prometheus surface, next to the ladder-rung
+    // counters the recovery rungs use.
+    let rep = c.report();
+    let dispatch = rep.get("dispatch").expect("report must carry dispatch stats");
+    assert_eq!(dispatch.get("workers").and_then(Json::as_usize), Some(2));
+    assert!(dispatch.get("lost").and_then(Json::as_f64).unwrap() >= 1.0);
+    let metrics = rep.get("metrics").unwrap();
+    assert!(metrics.get("workers_lost").and_then(Json::as_f64).unwrap() >= 1.0);
+    let text = c.metrics().prometheus_text();
+    assert!(text.contains("nfft_workers_lost_total"), "{text}");
+    assert!(text.contains("nfft_workers_respawned_total"), "{text}");
+    assert!(text.contains("nfft_ladder_rung_total"), "{text}");
+    c.shutdown();
+}

@@ -19,9 +19,10 @@ Two formats (see docs/OBSERVABILITY.md):
   equals ``<name>_count``, and ``_sum`` is non-negative. Also requires
   the robustness counter set (rejected/timeout/panicked/retried plus
   the silent-corruption defence counters checksum-failures/resumed/
-  ladder-rung; see docs/ROBUSTNESS.md) to be announced and sampled —
-  a regression that drops one of them from the export must fail CI
-  even when its value is zero.
+  ladder-rung and the dispatcher worker counters workers-lost/
+  workers-respawned; see docs/ROBUSTNESS.md and docs/DISTRIBUTED.md)
+  to be announced and sampled — a regression that drops one of them
+  from the export must fail CI even when its value is zero.
 
 Usage:
     python3 scripts/validate_telemetry.py --trace TRACE_matvec.json \
@@ -46,6 +47,8 @@ REQUIRED_COUNTERS = (
     "nfft_checksum_failures_total",
     "nfft_jobs_resumed_total",
     "nfft_ladder_rung_total",
+    "nfft_workers_lost_total",
+    "nfft_workers_respawned_total",
 )
 
 
